@@ -1,0 +1,37 @@
+//! Figure 4/5 ablation: the effect of the tuning factor β in AQUILA's
+//! skip rule (eq. 8) on convergence, final metric, and total bits.
+//!
+//! ```bash
+//! cargo run --release --example ablation_beta
+//! ```
+//!
+//! Expected shape (paper Section V-D): moderate β barely affects the
+//! final metric while sharply cutting bits; overly large β skips
+//! essential uploads and degrades the model.
+
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::metrics::bits_display;
+use aquila::repro::{ablation_beta, metric_display};
+
+fn main() {
+    let betas = [0.0f32, 0.1, 0.25, 0.5, 1.25, 2.5, 5.0, 25.0];
+    for ds in [DatasetKind::Cf10, DatasetKind::Wt2] {
+        let spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.3, 120);
+        println!("\n=== {} (α = {}) ===", spec.row_label(), spec.alpha);
+        println!(
+            "{:>7} {:>12} {:>12} {:>8} {:>10}",
+            "beta", "final", "bits(Gb)", "skip%", "loss"
+        );
+        for (beta, trace) in ablation_beta(&spec, &betas) {
+            let total = trace.total_uploads() + trace.total_skips();
+            println!(
+                "{beta:>7.2} {:>12} {:>12} {:>7.1}% {:>10.4}",
+                metric_display(&trace),
+                bits_display(trace.total_bits()),
+                100.0 * trace.total_skips() as f64 / total.max(1) as f64,
+                trace.final_train_loss(),
+            );
+        }
+    }
+    println!("\n(paper's selections: β = 0.1 for CF-10, 0.25 for CF-100, 1.25 for WT-2)");
+}

@@ -1,0 +1,74 @@
+//! One full Table-II-style row: all seven algorithms on the same
+//! federated task, at reduced scale so it finishes in under a minute.
+//!
+//! ```bash
+//! cargo run --release --example compare_algorithms [dataset] [split]
+//! # e.g.  cargo run --release --example compare_algorithms wt2 iid
+//! ```
+
+use aquila::algorithms::table_suite;
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::metrics::bits_display;
+use aquila::repro::{metric_display, run_cell};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ds = args
+        .get(1)
+        .and_then(|s| DatasetKind::parse(s))
+        .unwrap_or(DatasetKind::Cf10);
+    let split = args
+        .get(2)
+        .and_then(|s| SplitKind::parse(s))
+        .unwrap_or(SplitKind::NonIid);
+    let spec = ExperimentSpec::new(ds, split, false).scaled(0.3, 150);
+    println!(
+        "row: {} — M = {}, {} rounds, α = {}, β = {}\n",
+        spec.row_label(),
+        spec.devices,
+        spec.rounds,
+        spec.alpha,
+        spec.beta
+    );
+    println!(
+        "{:<12} {:>10} {:>12} {:>9} {:>8} {:>8}",
+        "algorithm", "acc/ppl", "uplink(Gb)", "uploads", "skip%", "mean_b"
+    );
+    let mut aquila_bits = 0u64;
+    let mut rows = Vec::new();
+    for algo in table_suite(spec.beta) {
+        let trace = run_cell(&spec, algo.as_ref());
+        let total = trace.total_uploads() + trace.total_skips();
+        let mean_b: f64 = {
+            let levels: Vec<f64> = trace
+                .rounds
+                .iter()
+                .filter(|r| r.mean_level > 0.0)
+                .map(|r| r.mean_level)
+                .collect();
+            levels.iter().sum::<f64>() / levels.len().max(1) as f64
+        };
+        println!(
+            "{:<12} {:>10} {:>12} {:>9} {:>7.1}% {:>8.2}",
+            algo.name(),
+            metric_display(&trace),
+            bits_display(trace.total_bits()),
+            trace.total_uploads(),
+            100.0 * trace.total_skips() as f64 / total.max(1) as f64,
+            mean_b,
+        );
+        if algo.name() == "AQUILA" {
+            aquila_bits = trace.total_bits();
+        }
+        rows.push((algo.name().to_string(), trace.total_bits()));
+    }
+    println!();
+    for (name, bits) in rows {
+        if name != "AQUILA" && bits > 0 {
+            println!(
+                "AQUILA saves {:>5.1}% vs {name}",
+                100.0 * (1.0 - aquila_bits as f64 / bits as f64)
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! End-to-end driver: federated training of the JAX transformer LM
+//! through the full three-layer stack.
+//!
+//! * L1 — the Pallas quantization kernel (inside the AOT artifacts),
+//! * L2 — the transformer fwd/bwd lowered to HLO by `make artifacts`,
+//! * L3 — this Rust coordinator: AQUILA's level rule + skip rule,
+//!   byte-counted transport, aggregation.
+//!
+//! Trains `txf_small` (~1M params; set `MODEL=txf_tiny` for the smoke
+//! config or `ROUNDS=...` to change the horizon) on the synthetic
+//! Markov corpus with M = 8 devices, logging the loss curve and
+//! comparing AQUILA's uplink bits against uncompressed FedAvg. The run
+//! is recorded in EXPERIMENTS.md §E2E.
+//!
+//! Default β = 0.25: on this workload the paper's WT-2 choice (1.25)
+//! violates the Corollary-1 feasibility condition and the skip rule
+//! free-runs the server into divergence — see EXPERIMENTS.md
+//! §Deviations D4.
+//!
+//! Usage: `make artifacts && cargo run --release --example train_transformer`
+
+use aquila::algorithms::{aquila::Aquila, fedavg::FedAvg, Algorithm};
+use aquila::coordinator::{Coordinator, RunConfig};
+use aquila::data::text::{markov_corpus, shard_corpus, CorpusSpec};
+use aquila::metrics::{bits_display, RunTrace};
+use aquila::runtime::{HloGradientSource, Manifest, PjrtRuntime};
+use std::path::{Path, PathBuf};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&artifacts)?;
+    let model_name: String = env_or("MODEL", "txf_small".to_string());
+    let rounds: usize = env_or("ROUNDS", 300);
+    let devices: usize = env_or("DEVICES", 8);
+    let alpha: f32 = env_or("ALPHA", 1.0);
+    let beta: f32 = env_or("BETA", 0.25);
+
+    let model = manifest.model(&model_name)?;
+    println!(
+        "model {}: d = {} params, batch {} × seq {}, vocab {}",
+        model.name, model.dim, model.batch, model.seq, model.vocab
+    );
+
+    // Synthetic Markov corpus (WikiText-2 stand-in; DESIGN.md §3).
+    let corpus = markov_corpus(&CorpusSpec::wikitext2_like(400_000, 2026));
+    let n_test = corpus.len() / 10;
+    let heldout = corpus.slice(0, n_test);
+    let train = corpus.slice(n_test, corpus.len());
+    let shards = shard_corpus(&train, devices);
+
+    let runtime = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", runtime.platform());
+    let src = HloGradientSource::new(&runtime, model, &shards, &heldout)?;
+
+    let cfg = RunConfig {
+        alpha,
+        beta,
+        rounds,
+        eval_every: (rounds / 20).max(1),
+        seed: 2026,
+        threads: env_or("AQUILA_THREADS", 0),
+        ..RunConfig::default()
+    };
+
+    println!("\n--- AQUILA (β = {beta}) ---");
+    let aquila_algo = Aquila::new(beta);
+    let t_aq = run_logged(&src, &aquila_algo, cfg.clone(), "aquila");
+
+    println!("\n--- FedAvg (uncompressed reference) ---");
+    let fed = FedAvg;
+    let t_fed = run_logged(&src, &fed, cfg, "fedavg");
+
+    println!("\n=== summary ===");
+    summarize("AQUILA", &t_aq);
+    summarize("FedAvg", &t_fed);
+    let saving = 100.0 * (1.0 - t_aq.total_bits() as f64 / t_fed.total_bits() as f64);
+    println!("AQUILA uplink saving vs FedAvg: {saving:.1}%");
+
+    std::fs::create_dir_all("results/e2e")?;
+    t_aq.write_csv(Path::new("results/e2e/transformer_aquila.csv"))?;
+    t_fed.write_csv(Path::new("results/e2e/transformer_fedavg.csv"))?;
+    println!("loss curves written to results/e2e/");
+    Ok(())
+}
+
+fn run_logged(
+    src: &HloGradientSource,
+    algo: &dyn Algorithm,
+    cfg: RunConfig,
+    tag: &str,
+) -> RunTrace {
+    let rounds = cfg.rounds;
+    let mut coord = Coordinator::new(src, algo, cfg);
+    let mut trace = RunTrace {
+        algorithm: algo.name().to_string(),
+        dataset: "markov-wt2".to_string(),
+        split: format!("iid-{tag}"),
+        rounds: Vec::with_capacity(rounds),
+    };
+    let t0 = std::time::Instant::now();
+    for k in 0..rounds {
+        let rec = coord.run_round(k);
+        if rec.eval_loss.is_some() || k < 3 {
+            println!(
+                "round {k:>4}  train_loss {:>7.4}  ppl {:>8}  bits {:>12}  uploads {:>2}/{}  mean_b {:>4.1}",
+                rec.train_loss,
+                rec.perplexity
+                    .map(|p| format!("{p:.2}"))
+                    .unwrap_or_else(|| "-".to_string()),
+                rec.cum_bits,
+                rec.uploads,
+                rec.uploads + rec.skips,
+                rec.mean_level,
+            );
+        }
+        trace.rounds.push(rec);
+    }
+    println!(
+        "[{}] {} rounds in {:.1}s",
+        algo.name(),
+        rounds,
+        t0.elapsed().as_secs_f64()
+    );
+    trace
+}
+
+fn summarize(name: &str, t: &RunTrace) {
+    println!(
+        "{name:<8} final loss {:.4}  final ppl {}  total bits {} Gb  uploads {}  skips {}",
+        t.final_train_loss(),
+        t.final_perplexity()
+            .map(|p| format!("{p:.2}"))
+            .unwrap_or_else(|| "-".into()),
+        bits_display(t.total_bits()),
+        t.total_uploads(),
+        t.total_skips(),
+    );
+}

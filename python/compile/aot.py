@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the L2 model (+ L1 kernel) to HLO **text**
+artifacts and write `manifest.json` for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python is never on the
+request path. Interchange is HLO text, not `.serialize()`: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--variants txf_tiny,txf_small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import aquila_quant
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def export_variant(cfg: model.TxfConfig, out_dir: str) -> dict:
+    """Lower grad/eval/step for one variant; returns its manifest
+    entry."""
+    d = model.dim(cfg)
+    theta_spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    files = {}
+    for entry_name, fn, args in [
+        ("grad", model.grad_entry(cfg), (theta_spec, tok_spec, tok_spec)),
+        ("eval", model.eval_entry(cfg), (theta_spec, tok_spec, tok_spec)),
+        ("step", model.step_entry(cfg), (theta_spec, theta_spec, tok_spec, tok_spec)),
+    ]:
+        fname = f"{entry_name}_{cfg.name}.hlo.txt"
+        text = lower_entry(fn, *args)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[entry_name] = fname
+        print(f"  {fname}: {len(text) / 1024:.0f} KiB")
+
+    layout_json = []
+    off = 0
+    for name, shape in model.layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        layout_json.append({"name": name, "shape": list(shape), "offset": off})
+        off += n
+    assert off == d
+    return {
+        "name": cfg.name,
+        "dim": d,
+        "grad": files["grad"],
+        "eval": files["eval"],
+        "step": files["step"],
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "vocab": cfg.vocab,
+        "layout": layout_json,
+    }
+
+
+def export_kernel(d: int, out_dir: str) -> dict:
+    """Lower the standalone fused AQUILA quantizer at dimension `d`."""
+    spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    fname = f"aquila_quant_{d}.hlo.txt"
+    text = lower_entry(aquila_quant.device_step, spec, spec)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text) / 1024:.0f} KiB")
+    return {"name": f"aquila_quant_{d}", "dim": d, "file": fname}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="txf_tiny,txf_small",
+        help="comma-separated subset of: " + ",".join(model.VARIANTS),
+    )
+    ap.add_argument(
+        "--kernel-dims",
+        default="",
+        help="extra standalone quantizer dims (model dims are always exported)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": [], "kernels": []}
+    kernel_dims = set()
+    for vname in [v for v in args.variants.split(",") if v]:
+        cfg = model.VARIANTS[vname]
+        print(f"lowering variant {vname} (d = {model.dim(cfg)}):")
+        manifest["models"].append(export_variant(cfg, args.out))
+        kernel_dims.add(model.dim(cfg))
+    for extra in [int(x) for x in args.kernel_dims.split(",") if x]:
+        kernel_dims.add(extra)
+    for d in sorted(kernel_dims):
+        manifest["kernels"].append(export_kernel(d, args.out))
+
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

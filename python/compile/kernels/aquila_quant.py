@@ -1,0 +1,165 @@
+"""L1: the fused AQUILA quantization step as Pallas kernels.
+
+Two block-tiled streaming kernels over the (implicit) gradient
+innovation ``v = g - q_prev``:
+
+* **pass 1** (`_norms_kernel`) — per-block partial reductions of
+  ``sum(v^2)`` and ``max|v|``; finalized by a tiny jnp reduction over the
+  grid outputs. This is where the eq.-19 level decision's inputs come
+  from.
+* **pass 2** (`_quant_kernel`) — elementwise mid-tread quantize +
+  dequantize at the chosen level, emitting the reconstructed ``dq``
+  block plus per-block partials of ``||dq||^2`` and ``||eps||^2`` (the
+  two sides of the eq.-8 skip rule).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks are
+``BLOCK = 2048`` f32 lanes (8 KiB per operand — comfortably double-
+bufferable in ~16 MiB VMEM at 3 live operands/block); both passes are
+memory-bound streaming kernels, one HBM read of ``g``/``q_prev`` per
+pass and one write of ``dq``.  ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so the kernels lower to
+plain HLO (numerically identical; see /opt/xla-example/README.md).
+
+The scalar epilogue (level selection, step sizes) is plain jnp glue in
+:func:`device_step` so the whole client computation lowers into a single
+HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 2048
+
+
+def _pad_to_block(x: jnp.ndarray) -> jnp.ndarray:
+    d = x.shape[0]
+    rem = (-d) % BLOCK
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x
+
+
+def _norms_kernel(g_ref, q_ref, l2_ref, linf_ref):
+    """Per-block partials: l2_ref[i] = sum(v^2), linf_ref[i] = max|v|."""
+    v = g_ref[...] - q_ref[...]
+    l2_ref[0] = jnp.sum(v * v)
+    linf_ref[0] = jnp.max(jnp.abs(v))
+
+
+def innovation_norms(g: jnp.ndarray, q_prev: jnp.ndarray):
+    """Pass 1: (sum(v^2), max|v|) of the innovation via Pallas."""
+    assert g.shape == q_prev.shape and g.ndim == 1
+    gp = _pad_to_block(g.astype(jnp.float32))
+    qp = _pad_to_block(q_prev.astype(jnp.float32))
+    grid = gp.shape[0] // BLOCK
+    l2_parts, linf_parts = pl.pallas_call(
+        _norms_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(gp, qp)
+    return jnp.sum(l2_parts), jnp.max(linf_parts)
+
+
+def _quant_kernel(d: int, g_ref, q_ref, scale_ref, dq_ref, dqsq_ref, errsq_ref):
+    """Per-block mid-tread quantize/dequantize + error partials.
+
+    ``scale_ref`` broadcasts 4 scalars to every block:
+      [0] inv_step = 1/(2 tau R)   (0 when R = 0)
+      [1] step     = 2 tau R
+      [2] R
+      [3] max_code = 2^b - 1
+
+    ``d`` (static) masks the padded tail lanes out of the partial sums:
+    a padded zero would otherwise mid-tread to a grid point (e.g. +R at
+    b = 1) and pollute ``||dq||^2`` / ``||eps||^2``.
+    """
+    v = g_ref[...] - q_ref[...]
+    inv_step = scale_ref[0]
+    step = scale_ref[1]
+    r = scale_ref[2]
+    max_code = scale_ref[3]
+    psi = jnp.floor((v + r) * inv_step + 0.5)
+    psi = jnp.clip(psi, 0.0, max_code)
+    dq = step * psi - jnp.where(max_code > 0.0, r, 0.0)
+    # R = 0 ⇒ inv_step = step = 0 ⇒ dq = -r = 0 (r is 0 too).
+    err = v - dq
+    idx = pl.program_id(0) * BLOCK + jax.lax.iota(jnp.int32, BLOCK)
+    valid = idx < d
+    dq = jnp.where(valid, dq, 0.0)
+    err = jnp.where(valid, err, 0.0)
+    dq_ref[...] = dq
+    dqsq_ref[0] = jnp.sum(dq * dq)
+    errsq_ref[0] = jnp.sum(err * err)
+
+
+def quantize_innovation(g: jnp.ndarray, q_prev: jnp.ndarray, bits: jnp.ndarray, linf):
+    """Pass 2 at (traced) level ``bits`` and range ``linf``.
+
+    Returns ``(dq, dq_norm_sq, err_norm_sq)``.
+    """
+    d = g.shape[0]
+    gp = _pad_to_block(g.astype(jnp.float32))
+    qp = _pad_to_block(q_prev.astype(jnp.float32))
+    grid = gp.shape[0] // BLOCK
+    r = jnp.asarray(linf, jnp.float32)
+    nlevels = (jnp.power(2.0, bits.astype(jnp.float32)) - 1.0).astype(jnp.float32)
+    tau = 1.0 / nlevels
+    step = 2.0 * tau * r
+    inv_step = jnp.where(step > 0.0, 1.0 / step, 0.0)
+    scales = jnp.stack([inv_step, step, jnp.where(r > 0, r, 0.0), nlevels])
+    dq, dqsq, errsq = pl.pallas_call(
+        functools.partial(_quant_kernel, d),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gp.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(gp, qp, scales)
+    return dq[:d], jnp.sum(dqsq), jnp.sum(errsq)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def device_step(g: jnp.ndarray, q_prev: jnp.ndarray):
+    """The fused AQUILA client computation, Pallas edition.
+
+    ``(dq, range, bits, dq_norm_sq, err_norm_sq)`` — same contract as
+    ``ref.device_step`` and the Rust hot path; the artifact
+    ``aquila_quant_<d>.hlo.txt`` is this function lowered at a fixed
+    ``d``.
+    """
+    d = g.shape[0]
+    l2sq, linf = innovation_norms(g, q_prev)
+    bits = ref.aquila_level(jnp.sqrt(l2sq.astype(jnp.float64)), linf, d)
+    dq, dq_norm_sq, err_norm_sq = quantize_innovation(g, q_prev, bits, linf)
+    return dq, linf, bits, dq_norm_sq, err_norm_sq

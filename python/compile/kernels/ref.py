@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the AQUILA quantization step.
+
+This is the correctness reference for the L1 Pallas kernel
+(`aquila_quant.py`) and mirrors (bit-for-bit, up to f32 rounding) the
+Rust hot path in `rust/src/quant/midtread.rs`:
+
+* deterministic mid-tread quantizer (paper Definition 2):
+  ``psi_i = floor((v_i + R) / (2 tau R) + 1/2)``, ``tau = 1/(2^b - 1)``,
+  ``R = ||v||_inf``;
+* reconstruction (Lemma 4): ``dq = 2 tau R psi - R``;
+* AQUILA's optimal level (Theorem 1, eq. 19):
+  ``b* = ceil(log2(R sqrt(d) / ||v||_2 + 1))``;
+* the fused device step returning everything the skip rule (eq. 8)
+  needs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MAX_BITS = 32
+
+
+def innovation_norms(g: jnp.ndarray, q_prev: jnp.ndarray):
+    """(||g - q||_2^2, ||g - q||_inf) without materializing twice."""
+    v = g - q_prev
+    return jnp.sum(v * v), jnp.max(jnp.abs(v)) if v.size else (0.0, 0.0)
+
+
+def aquila_level(l2: jnp.ndarray, linf: jnp.ndarray, d: int) -> jnp.ndarray:
+    """eq. 19; returns an int32 scalar in [1, 32].
+
+    Degenerate zero innovation maps to level 1 (matching the Rust
+    implementation).
+    """
+    ratio = jnp.where(l2 > 0.0, linf * jnp.sqrt(float(d)) / jnp.maximum(l2, 1e-38), 0.0)
+    b = jnp.ceil(jnp.log2(ratio + 1.0))
+    return jnp.clip(b, 1, MAX_BITS).astype(jnp.int32)
+
+
+def quantize(v: jnp.ndarray, bits: jnp.ndarray, range_: jnp.ndarray | None = None):
+    """Mid-tread quantization of ``v`` at (possibly traced) level
+    ``bits``. Returns ``(psi, dq, range)`` with psi float32 (codes are
+    exact integers below 2^24 in f32; the exported HLO kernel uses f64
+    internally like the Rust path for larger levels).
+    """
+    v = v.astype(jnp.float32)
+    r = jnp.max(jnp.abs(v)) if range_ is None else range_
+    nlevels = jnp.power(2.0, bits.astype(jnp.float64)) - 1.0  # 2^b - 1
+    tau = 1.0 / nlevels
+    step = 2.0 * tau * r.astype(jnp.float64)
+    inv_step = jnp.where(step > 0.0, 1.0 / step, 0.0)
+    v64 = v.astype(jnp.float64)
+    psi = jnp.floor((v64 + r.astype(jnp.float64)) * inv_step + 0.5)
+    psi = jnp.clip(psi, 0.0, nlevels)
+    dq = jnp.where(r > 0.0, step * psi - r.astype(jnp.float64), 0.0)
+    return psi, dq.astype(jnp.float32), r
+
+
+def device_step(g: jnp.ndarray, q_prev: jnp.ndarray):
+    """The fused AQUILA client computation (reference semantics).
+
+    Returns ``(dq, range, bits, dq_norm_sq, err_norm_sq)`` — exactly the
+    outputs of the Pallas kernel artifact and of
+    ``rust/src/quant/midtread.rs::quantize_innovation_fused`` +
+    ``levels::aquila_level``.
+    """
+    g = g.astype(jnp.float32)
+    q_prev = q_prev.astype(jnp.float32)
+    v = g - q_prev
+    l2sq = jnp.sum(v.astype(jnp.float64) * v.astype(jnp.float64))
+    linf = jnp.max(jnp.abs(v)) if v.size else jnp.float32(0.0)
+    bits = aquila_level(jnp.sqrt(l2sq), linf, v.size)
+    _, dq, r = quantize(v, bits, linf)
+    err = v - dq
+    dq_norm_sq = jnp.sum(dq.astype(jnp.float64) * dq.astype(jnp.float64))
+    err_norm_sq = jnp.sum(err.astype(jnp.float64) * err.astype(jnp.float64))
+    return (
+        dq,
+        r.astype(jnp.float32),
+        bits,
+        dq_norm_sq.astype(jnp.float32),
+        err_norm_sq.astype(jnp.float32),
+    )
+
+
+def skip_rule(dq_norm_sq, err_norm_sq, beta, alpha, model_diff_sq):
+    """eq. 8: True = the device skips this round's upload."""
+    return dq_norm_sq + err_norm_sq <= (beta / (alpha * alpha)) * model_diff_sq

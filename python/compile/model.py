@@ -1,0 +1,196 @@
+"""L2: flat-parameter transformer language model in JAX.
+
+The neural workload of the reproduction (the paper's WikiText-2
+Transformer row, per DESIGN.md §3 trained on the synthetic Markov
+corpus). Parameters live in a single flat f32 vector ``theta`` whose
+layout is exported to ``manifest.json`` so the Rust coordinator can
+compute HeteroFL capacity masks over named tensors.
+
+Exported entry points (all AOT-lowered to HLO text by ``aot.py``):
+
+* ``grad``  : (theta, x, y) -> (loss, grad)
+* ``eval``  : (theta, x, y) -> (loss,)
+* ``step``  : (theta, q_prev, x, y)
+              -> (loss, dq, range, bits, dq_norm_sq, err_norm_sq)
+  — the fully fused AQUILA client computation: model fwd/bwd **and**
+  the L1 Pallas quantization kernel in one HLO module, so Rust can run
+  the entire device round with a single PJRT execute.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aquila_quant
+
+
+@dataclass(frozen=True)
+class TxfConfig:
+    """Transformer-LM hyperparameters (one `variant` = one artifact set)."""
+
+    name: str = "txf_tiny"
+    vocab: int = 64
+    embed: int = 32
+    layers: int = 2
+    heads: int = 2
+    mlp: int = 64
+    seq: int = 32
+    batch: int = 8
+
+    def head_dim(self) -> int:
+        assert self.embed % self.heads == 0
+        return self.embed // self.heads
+
+
+#: Variants available to `aot.py --variants`.
+VARIANTS = {
+    "txf_tiny": TxfConfig(),
+    "txf_small": TxfConfig(
+        name="txf_small", vocab=64, embed=128, layers=4, heads=4, mlp=512, seq=64, batch=8
+    ),
+    # Paper-scale config (compile-only on this CPU budget; see DESIGN.md).
+    "txf_base": TxfConfig(
+        name="txf_base", vocab=256, embed=512, layers=8, heads=8, mlp=2048, seq=128, batch=8
+    ),
+}
+
+
+def layout(cfg: TxfConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Named tensors in flat order (mirrors `ParamLayout` on the Rust
+    side)."""
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.embed)),
+        ("pos", (cfg.seq, cfg.embed)),
+    ]
+    for l in range(cfg.layers):
+        spec += [
+            (f"l{l}.ln1_scale", (cfg.embed,)),
+            (f"l{l}.ln1_bias", (cfg.embed,)),
+            (f"l{l}.wq", (cfg.embed, cfg.embed)),
+            (f"l{l}.wk", (cfg.embed, cfg.embed)),
+            (f"l{l}.wv", (cfg.embed, cfg.embed)),
+            (f"l{l}.wo", (cfg.embed, cfg.embed)),
+            (f"l{l}.ln2_scale", (cfg.embed,)),
+            (f"l{l}.ln2_bias", (cfg.embed,)),
+            (f"l{l}.mlp_w1", (cfg.embed, cfg.mlp)),
+            (f"l{l}.mlp_b1", (cfg.mlp,)),
+            (f"l{l}.mlp_w2", (cfg.mlp, cfg.embed)),
+            (f"l{l}.mlp_b2", (cfg.embed,)),
+        ]
+    spec += [
+        ("lnf_scale", (cfg.embed,)),
+        ("lnf_bias", (cfg.embed,)),
+        ("unembed", (cfg.embed, cfg.vocab)),
+    ]
+    return spec
+
+
+def dim(cfg: TxfConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in layout(cfg))
+
+
+def unflatten(cfg: TxfConfig, theta: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    params = {}
+    off = 0
+    for name, shape in layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = theta[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_theta(cfg: TxfConfig, key: jax.Array) -> jnp.ndarray:
+    """Scaled-gaussian init, flat."""
+    chunks = []
+    for name, shape in layout(cfg):
+        key, sub = jax.random.split(key)
+        n = 1
+        for s in shape:
+            n *= s
+        if name.endswith(("_scale",)) or name.endswith("ln1_scale"):
+            chunks.append(jnp.ones(n, jnp.float32))
+        elif name.endswith(("_bias", "_b1", "_b2")):
+            chunks.append(jnp.zeros(n, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else n
+            std = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            chunks.append(jax.random.normal(sub, (n,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: TxfConfig, p, l: int, h: jnp.ndarray) -> jnp.ndarray:
+    b, s, e = h.shape
+    hd = cfg.head_dim()
+    q = (h @ p[f"l{l}.wq"]).reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ p[f"l{l}.wk"]).reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ p[f"l{l}.wv"]).reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+    scores = q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ v).transpose(0, 2, 1, 3).reshape(b, s, e)
+    return out @ p[f"l{l}.wo"]
+
+
+def forward(cfg: TxfConfig, theta: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits ``(B, S, V)`` for token ids ``x (B, S)``. Pre-LN GPT."""
+    p = unflatten(cfg, theta)
+    h = p["embed"][x] + p["pos"][None, : x.shape[1], :]
+    for l in range(cfg.layers):
+        a = _attention(cfg, p, l, _layer_norm(h, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"]))
+        h = h + a
+        z = _layer_norm(h, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        z = jax.nn.gelu(z @ p[f"l{l}.mlp_w1"] + p[f"l{l}.mlp_b1"])
+        h = h + z @ p[f"l{l}.mlp_w2"] + p[f"l{l}.mlp_b2"]
+    h = _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+    return h @ p["unembed"]
+
+
+def loss_fn(cfg: TxfConfig, theta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, theta, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def grad_entry(cfg: TxfConfig):
+    """(theta, x, y) -> (loss, grad) — the per-round device compute."""
+
+    def f(theta, x, y):
+        loss, grad = jax.value_and_grad(lambda t: loss_fn(cfg, t, x, y))(theta)
+        return loss, grad
+
+    return f
+
+
+def eval_entry(cfg: TxfConfig):
+    """(theta, x, y) -> (loss,) — held-out evaluation."""
+
+    def f(theta, x, y):
+        return (loss_fn(cfg, theta, x, y),)
+
+    return f
+
+
+def step_entry(cfg: TxfConfig):
+    """The fused AQUILA device step: model grad + L1 Pallas quantizer in
+    one HLO module."""
+
+    def f(theta, q_prev, x, y):
+        loss, grad = jax.value_and_grad(lambda t: loss_fn(cfg, t, x, y))(theta)
+        dq, rng, bits, dq_norm_sq, err_norm_sq = aquila_quant.device_step(grad, q_prev)
+        return loss, dq, rng, bits, dq_norm_sq, err_norm_sq
+
+    return f

@@ -1,0 +1,122 @@
+"""L1 correctness: the Pallas fused quantizer vs the pure-jnp oracle,
+plus the quantizer/level-rule properties the paper's theory relies on.
+
+Hypothesis sweeps dimensions (crossing the BLOCK=2048 tiling boundary),
+value scales, and degenerate inputs.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aquila_quant as aq
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=6000)
+
+
+def _vec(rng, d, scale):
+    return (rng.normal(size=d) * scale).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=DIMS,
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_pallas_matches_ref(d, seed, scale):
+    rng = np.random.default_rng(seed)
+    g = _vec(rng, d, scale)
+    q = _vec(rng, d, scale)
+    dq_r, r_r, b_r, dqn_r, en_r = [np.asarray(x) for x in ref.device_step(jnp.array(g), jnp.array(q))]
+    dq_p, r_p, b_p, dqn_p, en_p = [np.asarray(x) for x in aq.device_step(jnp.array(g), jnp.array(q))]
+    assert b_r == b_p
+    assert r_r == pytest.approx(r_p, rel=1e-6)
+    np.testing.assert_allclose(dq_p, dq_r, rtol=1e-5, atol=1e-6 * scale)
+    np.testing.assert_allclose(dqn_p, dqn_r, rtol=1e-3, atol=1e-9)
+    np.testing.assert_allclose(en_p, en_r, rtol=2e-2, atol=1e-9 * scale * scale)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=DIMS, seed=st.integers(min_value=0, max_value=2**31))
+def test_level_rule_bounds(d, seed):
+    """Theorem 1 self-consistency: 1 <= b* <= ceil(log2(sqrt(d)+1))."""
+    rng = np.random.default_rng(seed)
+    v = _vec(rng, d, 1.0)
+    l2 = float(np.linalg.norm(v.astype(np.float64)))
+    linf = float(np.max(np.abs(v)))
+    b = int(ref.aquila_level(jnp.float32(l2), jnp.float32(linf), d))
+    assert 1 <= b <= max(1, math.ceil(math.log2(math.sqrt(d) + 1)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=3000),
+    bits=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_midtread_error_bound(d, bits, seed):
+    """|v_i - dq_i| <= tau * R per element (Definition 2 mid-tread)."""
+    rng = np.random.default_rng(seed)
+    v = jnp.array(_vec(rng, d, 2.0))
+    psi, dq, r = ref.quantize(v, jnp.int32(bits))
+    tau = 1.0 / (2.0**bits - 1.0)
+    bound = tau * float(r) + 1e-6 * float(r)
+    assert np.all(np.abs(np.asarray(v) - np.asarray(dq)) <= bound + 1e-12)
+    # codes representable in `bits` bits
+    assert np.all(np.asarray(psi) >= 0)
+    assert np.all(np.asarray(psi) <= 2.0**bits - 1.0)
+
+
+def test_zero_innovation():
+    z = jnp.zeros(257, jnp.float32)
+    dq, r, b, dqn, en = aq.device_step(z, z)
+    assert float(r) == 0.0
+    assert int(b) == 1
+    assert float(dqn) == 0.0 and float(en) == 0.0
+    assert np.all(np.asarray(dq) == 0.0)
+
+
+def test_extreme_values_map_to_end_codes():
+    v = jnp.array([5.0, -5.0, 0.0], jnp.float32)
+    psi, dq, r = ref.quantize(v, jnp.int32(4))
+    assert float(r) == 5.0
+    np.testing.assert_allclose(np.asarray(dq)[[0, 1]], [5.0, -5.0], rtol=1e-6)
+    assert int(np.asarray(psi)[0]) == 15
+    assert int(np.asarray(psi)[1]) == 0
+
+
+def test_skip_rule_matches_eq8():
+    assert bool(ref.skip_rule(1.0, 1.0, beta=0.5, alpha=0.1, model_diff_sq=1.0))
+    assert not bool(ref.skip_rule(1.0, 1.0, beta=0.5, alpha=0.1, model_diff_sq=0.01))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_block_boundary_consistency(seed):
+    """d exactly at / around the Pallas BLOCK boundary must agree with
+    the oracle (padding masks correct)."""
+    rng = np.random.default_rng(seed)
+    for d in [aq.BLOCK - 1, aq.BLOCK, aq.BLOCK + 1, 2 * aq.BLOCK]:
+        g = jnp.array(_vec(rng, d, 1.0))
+        q = jnp.array(_vec(rng, d, 1.0))
+        out_p = aq.device_step(g, q)
+        out_r = ref.device_step(g, q)
+        assert int(out_p[2]) == int(out_r[2])
+        np.testing.assert_allclose(np.asarray(out_p[0]), np.asarray(out_r[0]), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(out_p[4]), float(out_r[4]), rtol=2e-2, atol=1e-9)
+
+
+def test_level_increases_for_spiky_innovation():
+    d = 1024
+    flat = jnp.ones(d, jnp.float32)
+    spiky = jnp.zeros(d, jnp.float32).at[3].set(10.0)
+    zero = jnp.zeros(d, jnp.float32)
+    b_flat = int(aq.device_step(flat, zero)[2])
+    b_spiky = int(aq.device_step(spiky, zero)[2])
+    assert b_flat == 1
+    assert b_spiky == math.ceil(math.log2(math.sqrt(d) + 1))

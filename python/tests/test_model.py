@@ -1,0 +1,110 @@
+"""L2 correctness: transformer shapes, gradient sanity, trainability,
+and the fused device-step entry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.TxfConfig(
+    name="test", vocab=16, embed=16, layers=1, heads=2, mlp=32, seq=8, batch=4
+)
+
+
+def _batch(key, cfg=CFG):
+    kx, ky = jax.random.split(key)
+    x = jax.random.randint(kx, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    y = jax.random.randint(ky, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    return x, y
+
+
+def test_layout_covers_dim():
+    d = model.dim(CFG)
+    off = 0
+    for name, shape in model.layout(CFG):
+        n = int(np.prod(shape))
+        off += n
+    assert off == d
+    theta = model.init_theta(CFG, jax.random.PRNGKey(0))
+    assert theta.shape == (d,)
+    params = model.unflatten(CFG, theta)
+    assert params["embed"].shape == (16, 16)
+    assert params["l0.mlp_w1"].shape == (16, 32)
+
+
+def test_forward_shapes_and_finite():
+    theta = model.init_theta(CFG, jax.random.PRNGKey(1))
+    x, _ = _batch(jax.random.PRNGKey(2))
+    logits = model.forward(CFG, theta, x)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    theta = model.init_theta(CFG, jax.random.PRNGKey(3))
+    x, y = _batch(jax.random.PRNGKey(4))
+    loss = model.loss_fn(CFG, theta, x, y)
+    assert float(loss) == pytest.approx(np.log(CFG.vocab), rel=0.3)
+
+
+def test_grad_matches_finite_differences():
+    theta = model.init_theta(CFG, jax.random.PRNGKey(5))
+    x, y = _batch(jax.random.PRNGKey(6))
+    loss, grad = model.grad_entry(CFG)(theta, x, y)
+    eps = 1e-2
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, model.dim(CFG), size=5):
+        tp = theta.at[i].add(eps)
+        tm = theta.at[i].add(-eps)
+        fd = (model.loss_fn(CFG, tp, x, y) - model.loss_fn(CFG, tm, x, y)) / (2 * eps)
+        denom = max(abs(float(fd)), abs(float(grad[i])), 1e-3)
+        assert abs(float(fd) - float(grad[i])) / denom < 0.15, i
+
+
+def test_causality():
+    """Changing a future token must not affect earlier logits."""
+    theta = model.init_theta(CFG, jax.random.PRNGKey(7))
+    x, _ = _batch(jax.random.PRNGKey(8))
+    l1 = model.forward(CFG, theta, x)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % CFG.vocab)
+    l2 = model.forward(CFG, theta, x2)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_sgd_reduces_loss():
+    theta = model.init_theta(CFG, jax.random.PRNGKey(9))
+    x, y = _batch(jax.random.PRNGKey(10))
+    grad_fn = jax.jit(model.grad_entry(CFG))
+    loss0, _ = grad_fn(theta, x, y)
+    for _ in range(20):
+        _, g = grad_fn(theta, x, y)
+        theta = theta - 0.5 * g
+    loss1, _ = grad_fn(theta, x, y)
+    assert float(loss1) < 0.7 * float(loss0)
+
+
+def test_step_entry_fuses_grad_and_kernel():
+    theta = model.init_theta(CFG, jax.random.PRNGKey(11))
+    q_prev = jnp.zeros_like(theta)
+    x, y = _batch(jax.random.PRNGKey(12))
+    loss, dq, rng_, bits, dqn, en = jax.jit(model.step_entry(CFG))(theta, q_prev, x, y)
+    # Cross-check against grad entry + reference quantizer.
+    loss2, grad = model.grad_entry(CFG)(theta, x, y)
+    assert float(loss) == pytest.approx(float(loss2), rel=1e-5)
+    dq_r, r_r, b_r, dqn_r, en_r = ref.device_step(grad, q_prev)
+    assert int(bits) == int(b_r)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq_r), rtol=1e-4, atol=1e-7)
+    assert float(dqn) == pytest.approx(float(dqn_r), rel=1e-3)
+
+
+def test_variant_dims_increase():
+    d_tiny = model.dim(model.VARIANTS["txf_tiny"])
+    d_small = model.dim(model.VARIANTS["txf_small"])
+    d_base = model.dim(model.VARIANTS["txf_base"])
+    assert d_tiny < d_small < d_base
+    assert d_base > 20_000_000  # paper-scale config exists

@@ -1,0 +1,56 @@
+//! Server-side benchmarks: payload folding (dequantize + scatter-add)
+//! and the model update — the L3 aggregation path.
+
+use aquila::algorithms::ServerAgg;
+use aquila::benchkit::{black_box, Bench};
+use aquila::hetero::CapacityMask;
+use aquila::problems::ParamLayout;
+use aquila::quant::midtread::quantize;
+use aquila::transport::wire::Payload;
+use aquila::util::rng::Xoshiro256pp;
+use aquila::util::vecmath::{axpy, diff_norm2_sq};
+use std::sync::Arc;
+
+fn main() {
+    let mut bench = Bench::new();
+    let d = 1_048_576usize;
+    let m = 16usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+
+    let full = Arc::new(CapacityMask::full(d));
+    let masks: Vec<_> = (0..m).map(|_| full.clone()).collect();
+    let mut srv = ServerAgg::new(d, masks);
+    let payload = Payload::MidtreadDelta(quantize(&v, 4));
+
+    bench.bench_throughput("fold_one_payload d=1M b=4", d as u64, || {
+        srv.add_scaled_payload(0, black_box(&payload), 1.0 / m as f32);
+        black_box(&srv.direction);
+    });
+
+    // Masked (hetero) fold: 50% support.
+    let layout = ParamLayout::contiguous(&[("w", vec![1024, 1024])]);
+    let half = Arc::new(CapacityMask::from_layout(&layout, 0.5));
+    let hsupport = half.support();
+    let mut srv_h = ServerAgg::new(layout.dim(), vec![half.clone()]);
+    let vh: Vec<f32> = v[..hsupport].to_vec();
+    let payload_h = Payload::MidtreadDelta(quantize(&vh, 4));
+    bench.bench_throughput(
+        &format!("fold_masked_payload support={hsupport}"),
+        hsupport as u64,
+        || {
+            srv_h.add_scaled_payload(0, black_box(&payload_h), 0.25);
+            black_box(&srv_h.direction);
+        },
+    );
+
+    // θ update + model-diff (once per round).
+    let mut theta = v.clone();
+    let prev = v.clone();
+    let dir: Vec<f32> = (0..d).map(|i| (i % 7) as f32 * 1e-4).collect();
+    bench.bench_throughput("theta_update+diff d=1M", d as u64, || {
+        axpy(-0.1, black_box(&dir), &mut theta);
+        black_box(diff_norm2_sq(&theta, &prev));
+    });
+    bench.finish();
+}

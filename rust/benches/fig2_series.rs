@@ -1,0 +1,29 @@
+//! Figure 2 series benchmark: generates the per-round series (training
+//! loss vs cumulative bits; bits per epoch vs epoch) at reduced scale
+//! and times the full multi-algorithm sweep — the cost of regenerating
+//! one subplot of Figure 2. `repro fig2` produces the full-scale CSVs.
+
+use aquila::algorithms::table_suite;
+use aquila::benchkit::{black_box, Bench};
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::repro::run_cell;
+
+fn main() {
+    let mut bench = Bench::new();
+    let spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false).scaled(0.1, 25);
+    bench.bench("fig2 subplot sweep (7 algos × 25 rounds)", || {
+        for algo in table_suite(spec.beta) {
+            let trace = run_cell(&spec, algo.as_ref());
+            // The two series of the figure:
+            let loss_vs_bits: Vec<(u64, f64)> = trace
+                .rounds
+                .iter()
+                .map(|r| (r.cum_bits, r.train_loss))
+                .collect();
+            let bits_per_epoch: Vec<(usize, u64)> =
+                trace.rounds.iter().map(|r| (r.round, r.bits_up)).collect();
+            black_box((loss_vs_bits, bits_per_epoch));
+        }
+    });
+    bench.finish();
+}

@@ -1,0 +1,37 @@
+//! Wire-format benchmarks: bit-packing/unpacking of ψ codes and full
+//! payload encode/decode — the transport cost of every upload.
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::quant::midtread::quantize;
+use aquila::quant::packing::{pack, unpack};
+use aquila::transport::wire::{decode, encode, Payload};
+use aquila::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut bench = Bench::new();
+    let d = 1_048_576usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+
+    for bits in [1u8, 4, 8, 13] {
+        let q = quantize(&v, bits);
+        bench.bench_throughput(&format!("pack d=1M b={bits}"), d as u64, || {
+            black_box(pack(black_box(&q.psi), bits));
+        });
+        let packed = pack(&q.psi, bits);
+        bench.bench_throughput(&format!("unpack d=1M b={bits}"), d as u64, || {
+            black_box(unpack(black_box(&packed), bits, d));
+        });
+    }
+
+    let q4 = quantize(&v, 4);
+    let payload = Payload::MidtreadDelta(q4);
+    bench.bench_throughput("wire_encode d=1M b=4", d as u64, || {
+        black_box(encode(black_box(&payload)));
+    });
+    let bytes = encode(&payload);
+    bench.bench_throughput("wire_decode d=1M b=4", d as u64, || {
+        black_box(decode(black_box(&bytes)).unwrap());
+    });
+    bench.finish();
+}

@@ -1,0 +1,52 @@
+//! L3 hot-path micro-benchmarks: the fused AQUILA quantization step at
+//! the model dimensions the experiments use. This is the per-device
+//! per-round inner loop; EXPERIMENTS.md §Perf records its evolution.
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::quant::levels::aquila_level;
+use aquila::quant::midtread::{dequantize_into, quantize, quantize_innovation_fused};
+use aquila::util::rng::Xoshiro256pp;
+use aquila::util::vecmath::innovation_norms;
+
+fn random_vec(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    for &d in &[22_016usize, 1_048_576] {
+        let g = random_vec(d, 1);
+        let q = random_vec(d, 2);
+        let mut dq = vec![0.0f32; d];
+
+        bench.bench_throughput(&format!("innovation_norms d={d}"), d as u64, || {
+            black_box(innovation_norms(black_box(&g), black_box(&q)));
+        });
+
+        let (l2sq, linf) = innovation_norms(&g, &q);
+        let bits = aquila_level(l2sq.sqrt(), linf, d);
+        bench.bench_throughput(&format!("fused_quantize d={d} b={bits}"), d as u64, || {
+            black_box(quantize_innovation_fused(
+                black_box(&g),
+                black_box(&q),
+                bits,
+                linf,
+                &mut dq,
+            ));
+        });
+
+        bench.bench_throughput(&format!("full_device_step d={d}"), d as u64, || {
+            let (l2sq, linf) = innovation_norms(black_box(&g), black_box(&q));
+            let b = aquila_level(l2sq.sqrt(), linf, d);
+            black_box(quantize_innovation_fused(&g, &q, b, linf, &mut dq));
+        });
+
+        let qv = quantize(&g, 4);
+        bench.bench_throughput(&format!("dequantize d={d} b=4"), d as u64, || {
+            dequantize_into(black_box(&qv), &mut dq);
+            black_box(&dq);
+        });
+    }
+    bench.finish();
+}

@@ -1,0 +1,32 @@
+//! Table II end-to-end round benchmark: wall-clock of one full
+//! communication round (M devices × full-batch gradient + client step +
+//! transport + fold + update) for each homogeneous dataset, per
+//! algorithm. This is the latency counterpart of the bit counts the
+//! table reports; `repro table2` regenerates the table itself.
+
+use aquila::algorithms::table_suite;
+use aquila::benchkit::{black_box, Bench};
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::Coordinator;
+
+fn main() {
+    let mut bench = Bench::new();
+    for ds in [DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2] {
+        let spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.2, 8);
+        let problem = spec.build_problem();
+        for algo in table_suite(spec.beta) {
+            let mut coord = Coordinator::new(problem.as_ref(), algo.as_ref(), spec.run_config());
+            // Bootstrap round outside the timed region.
+            coord.run_round(0);
+            let mut k = 1usize;
+            bench.bench(
+                &format!("{} round [{}]", spec.row_label(), algo.name()),
+                || {
+                    black_box(coord.run_round(k));
+                    k += 1;
+                },
+            );
+        }
+    }
+    bench.finish();
+}

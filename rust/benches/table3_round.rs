@@ -1,0 +1,36 @@
+//! Table III end-to-end round benchmark: as `table2_round` but with the
+//! heterogeneous 100%–50% capacity split (gather/scatter masking on the
+//! round path). `repro table3` regenerates the table itself.
+
+use aquila::algorithms::table_suite;
+use aquila::benchkit::{black_box, Bench};
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::Coordinator;
+use aquila::hetero::half_half_masks;
+
+fn main() {
+    let mut bench = Bench::new();
+    for ds in [DatasetKind::Cf10, DatasetKind::Wt2] {
+        let spec = ExperimentSpec::new(ds, SplitKind::Iid, true).scaled(0.2, 8);
+        let problem = spec.build_problem();
+        let masks = half_half_masks(&problem.layout(), problem.num_devices(), 0.5);
+        for algo in table_suite(spec.beta) {
+            let mut coord = Coordinator::with_masks(
+                problem.as_ref(),
+                algo.as_ref(),
+                masks.clone(),
+                spec.run_config(),
+            );
+            coord.run_round(0);
+            let mut k = 1usize;
+            bench.bench(
+                &format!("{} hetero round [{}]", spec.row_label(), algo.name()),
+                || {
+                    black_box(coord.run_round(k));
+                    k += 1;
+                },
+            );
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,109 @@
+//! AdaQuantFL baseline (Jhunjhunwala et al., 2021 [7]): all devices
+//! transmit a quantized gradient **every** round, at the global level
+//!
+//! ```text
+//! b_k = floor( sqrt( f(θ⁰) / f(θᵏ) ) · b₀ )
+//! ```
+//!
+//! — identical for all devices, growing as the loss decays (the
+//! pathology the paper's Section II analyzes: levels can exceed 32 bits
+//! near convergence, at which point quantization is pointless; we cap at
+//! 32 as the paper assumes for floats).
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::levels::adaquantfl_level;
+use crate::quant::midtread::quantize;
+use crate::transport::wire::Payload;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct AdaQuantFl {
+    /// Initial level `b₀`.
+    pub b0: u8,
+    /// Level cap (32 = float width).
+    pub cap: u8,
+}
+
+impl AdaQuantFl {
+    pub fn new(b0: u8, cap: u8) -> Self {
+        assert!(b0 >= 1 && cap >= b0);
+        Self { b0, cap }
+    }
+
+    fn level(&self, ctx: &RoundCtx) -> u8 {
+        if ctx.round == 0 {
+            self.b0
+        } else {
+            adaquantfl_level(ctx.init_loss, ctx.prev_loss, self.b0, self.cap)
+        }
+    }
+}
+
+impl Algorithm for AdaQuantFl {
+    fn name(&self) -> &'static str {
+        "AdaQuantFL"
+    }
+
+    fn incremental(&self) -> bool {
+        false
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        let bits = self.level(ctx);
+        let q = quantize(grad, bits);
+        dev.uploads += 1;
+        ClientUpload {
+            payload: Some(Payload::MidtreadFull(q)),
+            level: Some(bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_average(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use std::sync::Arc;
+
+    #[test]
+    fn level_grows_as_loss_decays() {
+        let algo = AdaQuantFl::new(2, 32);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(8)), 1);
+        let grad = vec![1.0f32; 8];
+        let mut ctx = RoundCtx::bare(1, 0.1, 0.0, 1.0);
+        ctx.init_loss = 2.0;
+        ctx.prev_loss = 2.0;
+        let b_early = algo.client_step(&mut dev, &grad, &ctx).level.unwrap();
+        ctx.prev_loss = 0.02;
+        let b_late = algo.client_step(&mut dev, &grad, &ctx).level.unwrap();
+        assert_eq!(b_early, 2);
+        assert_eq!(b_late, 20);
+        ctx.prev_loss = 1e-9;
+        let b_cap = algo.client_step(&mut dev, &grad, &ctx).level.unwrap();
+        assert_eq!(b_cap, 32, "cap at float width");
+    }
+
+    #[test]
+    fn round_zero_uses_b0() {
+        let algo = AdaQuantFl::new(3, 32);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(4)), 2);
+        let up = algo.client_step(&mut dev, &[1.0; 4], &RoundCtx::bare(0, 0.1, 0.0, 0.0));
+        assert_eq!(up.level, Some(3));
+        assert!(up.payload.is_some());
+    }
+
+    #[test]
+    fn never_skips() {
+        let algo = AdaQuantFl::new(2, 32);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(4)), 3);
+        for k in 0..20 {
+            let up = algo.client_step(&mut dev, &[0.5; 4], &RoundCtx::bare(k, 0.1, 0.0, 1e9));
+            assert!(up.payload.is_some());
+        }
+        assert_eq!(dev.skips, 0);
+    }
+}

@@ -1,0 +1,235 @@
+//! AQUILA (this paper, Algorithm 1): adaptive quantization level
+//! (eq. 19) + precise device-selection skip rule (eq. 8).
+//!
+//! Per round, each device:
+//!
+//! 1. computes the gradient innovation `v = ∇f_m(θᵏ) − q_m^{k−1}` and
+//!    its norms `(‖v‖₂, R = ‖v‖_∞)`;
+//! 2. selects the optimal level
+//!    `b* = ceil(log₂(R√d/‖v‖₂ + 1))` (eq. 19);
+//! 3. quantizes: `Δq = Q_{b*}(v)` with error `ε = v − Δq`;
+//! 4. **skips** the upload iff
+//!    `‖Δq‖² + ‖ε‖² ≤ (β/α²)·‖θᵏ − θ^{k−1}‖²` (eq. 8);
+//! 5. on upload, updates its stored `q_m ← q_m + Δq`.
+//!
+//! The server reuses `q_m^{k−1}` for skipping devices — i.e. the
+//! incremental fold `q̄ += Δq/M` (Algorithm 1 lines 14–15).
+//!
+//! Round `k = 0` bootstraps with `q_m^{−1} = 0` and always uploads
+//! (Algorithm 1 lines 2–5).
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::levels::aquila_level;
+use crate::quant::midtread::quantize_innovation_fused;
+use crate::transport::wire::Payload;
+use crate::util::vecmath::innovation_norms;
+
+/// See module docs. `β` is carried in [`RoundCtx`] so sweeps (Figure
+/// 4/5 ablation) don't need to rebuild the algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct Aquila {
+    /// Optional fixed level override (`None` = adaptive eq. 19; used by
+    /// the ablation benches isolating the level rule from the skip
+    /// rule).
+    pub fixed_level: Option<u8>,
+    /// Constructor-time β recorded for display; the effective β comes
+    /// from the round context.
+    pub beta: f32,
+}
+
+impl Aquila {
+    pub fn new(beta: f32) -> Self {
+        Self {
+            fixed_level: None,
+            beta,
+        }
+    }
+
+    /// Ablation variant: AQUILA's skip rule with a fixed level.
+    pub fn with_fixed_level(beta: f32, level: u8) -> Self {
+        Self {
+            fixed_level: Some(level),
+            beta,
+        }
+    }
+}
+
+impl Algorithm for Aquila {
+    fn name(&self) -> &'static str {
+        "AQUILA"
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        debug_assert_eq!(grad.len(), dev.support());
+        let d = grad.len();
+        // Step 1–2: innovation norms and optimal level (eq. 19).
+        let (l2sq, linf) = innovation_norms(grad, &dev.q_prev);
+        let bits = self
+            .fixed_level
+            .unwrap_or_else(|| aquila_level(l2sq.sqrt(), linf, d));
+        // Step 3: fused quantize (Δq into scratch, plus both norms).
+        let mut dq = std::mem::take(&mut dev.scratch);
+        dq.resize(d, 0.0);
+        let outcome = quantize_innovation_fused(grad, &dev.q_prev, bits, linf, &mut dq);
+        // Step 4: the skip criterion (eq. 8). Round 0 always uploads.
+        let threshold = ctx.beta as f64 / (ctx.alpha as f64 * ctx.alpha as f64)
+            * ctx.model_diff_sq;
+        let skip =
+            ctx.round > 0 && outcome.dq_norm_sq + outcome.err_norm_sq <= threshold;
+        if skip {
+            dev.skips += 1;
+            dev.prev_err_sq = outcome.err_norm_sq;
+            dev.scratch = dq;
+            return ClientUpload::skip_at_level(bits);
+        }
+        // Step 5: upload; device stores its new quantized gradient.
+        for (q, &delta) in dev.q_prev.iter_mut().zip(dq.iter()) {
+            *q += delta;
+        }
+        dev.uploads += 1;
+        dev.prev_err_sq = outcome.err_norm_sq;
+        dev.scratch = dq;
+        ClientUpload {
+            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            level: Some(bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_incremental(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use crate::quant::levels::aquila_level_upper_bound;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::Arc;
+
+    fn device(d: usize) -> DeviceState {
+        DeviceState::new(0, Arc::new(CapacityMask::full(d)), 7)
+    }
+
+    fn random_grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn round_zero_always_uploads() {
+        let algo = Aquila::new(10.0);
+        let mut dev = device(64);
+        let grad = random_grad(64, 1);
+        // Huge β and zero model diff: the rule would skip, but round 0
+        // must bootstrap.
+        let ctx = RoundCtx::bare(0, 0.1, 10.0, 0.0);
+        let up = algo.client_step(&mut dev, &grad, &ctx);
+        assert!(up.payload.is_some());
+        assert_eq!(dev.uploads, 1);
+    }
+
+    #[test]
+    fn beta_zero_never_skips() {
+        let algo = Aquila::new(0.0);
+        let mut dev = device(32);
+        for k in 0..5 {
+            let grad = random_grad(32, k + 10);
+            let ctx = RoundCtx::bare(k as usize, 0.1, 0.0, 100.0);
+            let up = algo.client_step(&mut dev, &grad, &ctx);
+            assert!(up.payload.is_some(), "round {k} skipped with β=0");
+        }
+        assert_eq!(dev.uploads, 5);
+        assert_eq!(dev.skips, 0);
+    }
+
+    #[test]
+    fn large_beta_skips_after_bootstrap() {
+        let algo = Aquila::new(1e9);
+        let mut dev = device(32);
+        let grad = random_grad(32, 3);
+        let c0 = RoundCtx::bare(0, 0.1, 1e9, 1.0);
+        assert!(algo.client_step(&mut dev, &grad, &c0).payload.is_some());
+        let c1 = RoundCtx::bare(1, 0.1, 1e9, 1.0);
+        let up = algo.client_step(&mut dev, &grad, &c1);
+        assert!(up.payload.is_none());
+        assert_eq!(dev.skips, 1);
+        // Level still reported on skip (for the level-trace figure).
+        assert!(up.level.is_some());
+    }
+
+    #[test]
+    fn skip_rule_matches_eq8_exactly() {
+        // Craft a case near the threshold and verify the inequality
+        // decides it.
+        let algo = Aquila::new(0.5);
+        let alpha = 0.2f32;
+        for seed in 0..20u64 {
+            let mut dev = device(48);
+            let g0 = random_grad(48, seed);
+            let ctx0 = RoundCtx::bare(0, alpha, 0.5, 0.0);
+            algo.client_step(&mut dev, &g0, &ctx0);
+            let g1 = random_grad(48, seed + 100);
+            // Recompute the LHS the way the client will see it.
+            let (l2sq, linf) = innovation_norms(&g1, &dev.q_prev);
+            let bits = aquila_level(l2sq.sqrt(), linf, 48);
+            let mut dq = vec![0.0f32; 48];
+            let o = quantize_innovation_fused(&g1, &dev.q_prev, bits, linf, &mut dq);
+            let lhs = o.dq_norm_sq + o.err_norm_sq;
+            let model_diff = 0.9 * lhs * (alpha as f64 * alpha as f64) / 0.5;
+            let ctx1 = RoundCtx::bare(1, alpha, 0.5, model_diff);
+            let up = algo.client_step(&mut dev, &g1, &ctx1);
+            // lhs > (β/α²)·0.9·lhs·α²/β = 0.9 lhs ⇒ upload.
+            assert!(up.payload.is_some(), "seed {seed} should upload");
+
+            let mut dev2 = device(48);
+            algo.client_step(&mut dev2, &g0, &ctx0);
+            let model_diff2 = 1.1 * lhs * (alpha as f64 * alpha as f64) / 0.5;
+            let ctx2 = RoundCtx::bare(1, alpha, 0.5, model_diff2);
+            let up2 = algo.client_step(&mut dev2, &g1, &ctx2);
+            assert!(up2.payload.is_none(), "seed {seed} should skip");
+        }
+    }
+
+    #[test]
+    fn q_prev_tracks_uploads_only() {
+        let algo = Aquila::new(1e9);
+        let mut dev = device(16);
+        let g0 = random_grad(16, 5);
+        algo.client_step(&mut dev, &g0, &RoundCtx::bare(0, 0.1, 1e9, 0.0));
+        let q_after_upload = dev.q_prev.clone();
+        // Skipped round must not mutate q_prev.
+        let g1 = random_grad(16, 6);
+        let up = algo.client_step(&mut dev, &g1, &RoundCtx::bare(1, 0.1, 1e9, 1.0));
+        assert!(up.payload.is_none());
+        assert_eq!(dev.q_prev, q_after_upload);
+    }
+
+    #[test]
+    fn adaptive_level_within_theorem1_bound() {
+        let algo = Aquila::new(0.0);
+        let d = 4096;
+        let mut dev = device(d);
+        for k in 0..6u64 {
+            let grad = random_grad(d, 40 + k);
+            let ctx = RoundCtx::bare(k as usize, 0.1, 0.0, 1.0);
+            let up = algo.client_step(&mut dev, &grad, &ctx);
+            let b = up.level.unwrap();
+            assert!(b >= 1 && b <= aquila_level_upper_bound(d), "b={b}");
+        }
+    }
+
+    #[test]
+    fn fixed_level_override() {
+        let algo = Aquila::with_fixed_level(0.0, 9);
+        let mut dev = device(64);
+        let grad = random_grad(64, 8);
+        let up = algo.client_step(&mut dev, &grad, &RoundCtx::bare(0, 0.1, 0.0, 0.0));
+        assert_eq!(up.level, Some(9));
+    }
+}

@@ -1,0 +1,119 @@
+//! DAdaQuant baseline (Hönig, Zhao & Mullins, 2022 [8]):
+//! doubly-adaptive quantization with **random K-device sampling** — the
+//! selection strategy whose lack of theoretical grounding motivates
+//! AQUILA's precise criterion (paper Sections I–II).
+//!
+//! * Time adaptation: the shared level doubles when the running-best
+//!   global loss stagnates (`quant::levels::DadaquantSchedule`,
+//!   maintained by the coordinator, broadcast via
+//!   `RoundCtx::dadaquant_level`).
+//! * Client adaptation: device `m` quantizes at
+//!   `b_m = max(1, round(b_t · w_m^{1/3}))` where `w_m` is its sample
+//!   fraction relative to the average (larger shards ⇒ finer
+//!   quantization), following the paper's client-adaptive weighting.
+//! * Selection: the coordinator samples `K` devices uniformly per round
+//!   (`RoundCtx::selected`); unselected devices neither compute nor
+//!   transmit.
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::midtread::quantize;
+use crate::transport::wire::Payload;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct DAdaQuant {
+    /// Relative shard weights `w_m` (sample count / mean sample count);
+    /// empty = uniform.
+    pub weights: Vec<f64>,
+    /// Level cap.
+    pub cap: u8,
+}
+
+impl DAdaQuant {
+    pub fn new(weights: Vec<f64>, cap: u8) -> Self {
+        Self { weights, cap }
+    }
+
+    pub fn uniform(cap: u8) -> Self {
+        Self {
+            weights: Vec::new(),
+            cap,
+        }
+    }
+
+    fn client_level(&self, device: usize, time_level: u8) -> u8 {
+        let w = self.weights.get(device).copied().unwrap_or(1.0);
+        let b = (time_level as f64 * w.cbrt()).round();
+        (b.max(1.0) as u64).min(self.cap as u64) as u8
+    }
+}
+
+impl Algorithm for DAdaQuant {
+    fn name(&self) -> &'static str {
+        "DAdaQuant"
+    }
+
+    fn incremental(&self) -> bool {
+        false
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        if !ctx.is_selected(dev.id) {
+            dev.skips += 1;
+            return ClientUpload::skip();
+        }
+        let bits = self.client_level(dev.id, ctx.dadaquant_level);
+        let q = quantize(grad, bits);
+        dev.uploads += 1;
+        ClientUpload {
+            payload: Some(Payload::MidtreadFull(q)),
+            level: Some(bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        // FedAvg over the sampled cohort.
+        super::fold_average(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use std::sync::Arc;
+
+    #[test]
+    fn unselected_devices_stay_silent() {
+        let algo = DAdaQuant::uniform(16);
+        let mut dev = DeviceState::new(3, Arc::new(CapacityMask::full(8)), 1);
+        let mut ctx = RoundCtx::bare(1, 0.1, 0.0, 1.0);
+        ctx.selected = Some(vec![0, 1]);
+        let up = algo.client_step(&mut dev, &[1.0; 8], &ctx);
+        assert!(up.payload.is_none());
+        ctx.selected = Some(vec![0, 3]);
+        let up2 = algo.client_step(&mut dev, &[1.0; 8], &ctx);
+        assert!(up2.payload.is_some());
+    }
+
+    #[test]
+    fn client_level_scales_with_weight() {
+        let algo = DAdaQuant::new(vec![1.0, 8.0, 0.125], 32);
+        assert_eq!(algo.client_level(0, 4), 4);
+        assert_eq!(algo.client_level(1, 4), 8); // 8^(1/3) = 2
+        assert_eq!(algo.client_level(2, 4), 2); // 0.125^(1/3) = 0.5
+        // max(1, ·) clamp (the operation AQUILA's Theorem-1 remark
+        // contrasts against).
+        assert_eq!(algo.client_level(2, 1), 1);
+    }
+
+    #[test]
+    fn uses_broadcast_time_level() {
+        let algo = DAdaQuant::uniform(32);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(8)), 2);
+        let mut ctx = RoundCtx::bare(1, 0.1, 0.0, 1.0);
+        ctx.dadaquant_level = 6;
+        let up = algo.client_step(&mut dev, &[0.5; 8], &ctx);
+        assert_eq!(up.level, Some(6));
+    }
+}

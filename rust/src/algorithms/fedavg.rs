@@ -1,0 +1,58 @@
+//! Uncompressed FedSGD/FedAvg-style reference: every device uploads its
+//! raw 32-bit gradient every round. Not a column of the paper's tables
+//! but the natural "no compression" anchor every ratio is computed
+//! against.
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::transport::wire::Payload;
+
+/// See module docs.
+#[derive(Clone, Debug, Default)]
+pub struct FedAvg;
+
+impl Algorithm for FedAvg {
+    fn name(&self) -> &'static str {
+        "FedAvg"
+    }
+
+    fn incremental(&self) -> bool {
+        false
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], _ctx: &RoundCtx) -> ClientUpload {
+        dev.uploads += 1;
+        ClientUpload {
+            payload: Some(Payload::RawFull(grad.to_vec())),
+            level: None,
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_average(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use std::sync::Arc;
+
+    #[test]
+    fn direction_is_exact_average() {
+        let algo = FedAvg;
+        let full = Arc::new(CapacityMask::full(3));
+        let mut d0 = DeviceState::new(0, full.clone(), 1);
+        let mut d1 = DeviceState::new(1, full.clone(), 2);
+        let ctx = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        let u0 = algo.client_step(&mut d0, &[1.0, 2.0, 3.0], &ctx);
+        let u1 = algo.client_step(&mut d1, &[3.0, 2.0, 1.0], &ctx);
+        let mut srv = ServerAgg::new(3, vec![full.clone(), full]);
+        algo.server_fold(
+            &mut srv,
+            &[(0, u0.payload.unwrap()), (1, u1.payload.unwrap())],
+            &ctx,
+        );
+        assert_eq!(srv.direction, vec![2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,122 @@
+//! LAdaQ: the naive combination of AdaQuantFL's level rule with LAQ's
+//! lazy-aggregation skip rule — the strawman the paper's Section II
+//! dissects ("a naive approach is to quantize lazily aggregated
+//! gradients with AdaQuantFL ... it fails to achieve efficient
+//! communication").
+//!
+//! Both pathologies the paper predicts are reproduced by the benches:
+//! the level keeps growing as the loss decays (driving per-upload bits
+//! up), and the shrinking quantization error lowers the LAQ threshold,
+//! raising upload frequency.
+
+use super::laq::Laq;
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::levels::adaquantfl_level;
+use crate::quant::midtread::quantize_innovation_fused;
+use crate::transport::wire::Payload;
+use crate::util::vecmath::innovation_norms;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct LAdaQ {
+    /// AdaQuantFL initial level `b₀` and cap.
+    pub b0: u8,
+    pub cap: u8,
+    /// Inner LAQ (provides the skip threshold).
+    laq: Laq,
+}
+
+impl LAdaQ {
+    pub fn new(b0: u8, cap: u8, xi: f64, memory: usize) -> Self {
+        Self {
+            b0,
+            cap,
+            laq: Laq::new(8, xi, memory),
+        }
+    }
+
+    fn level(&self, ctx: &RoundCtx) -> u8 {
+        if ctx.round == 0 {
+            self.b0
+        } else {
+            adaquantfl_level(ctx.init_loss, ctx.prev_loss, self.b0, self.cap)
+        }
+    }
+}
+
+impl Algorithm for LAdaQ {
+    fn name(&self) -> &'static str {
+        "LAdaQ"
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        let d = grad.len();
+        let bits = self.level(ctx);
+        let (_l2sq, linf) = innovation_norms(grad, &dev.q_prev);
+        let mut dq = std::mem::take(&mut dev.scratch);
+        dq.resize(d, 0.0);
+        let outcome = quantize_innovation_fused(grad, &dev.q_prev, bits, linf, &mut dq);
+        let skip = ctx.round > 0
+            && outcome.dq_norm_sq <= self.laq.threshold(dev, outcome.err_norm_sq, ctx);
+        if skip {
+            dev.skips += 1;
+            dev.scratch = dq;
+            return ClientUpload::skip_at_level(bits);
+        }
+        for (q, &delta) in dev.q_prev.iter_mut().zip(dq.iter()) {
+            *q += delta;
+        }
+        dev.uploads += 1;
+        dev.prev_err_sq = outcome.err_norm_sq;
+        dev.scratch = dq;
+        ClientUpload {
+            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            level: Some(bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_incremental(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::Arc;
+
+    #[test]
+    fn level_follows_adaquantfl_rule() {
+        let algo = LAdaQ::new(2, 32, 1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(16)), 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let grad: Vec<f32> = (0..16).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let mut ctx = RoundCtx::bare(1, 0.1, 0.0, 1.0);
+        ctx.num_devices = 4;
+        ctx.init_loss = 4.0;
+        ctx.prev_loss = 0.04; // sqrt(100)·2 = 20
+        let up = algo.client_step(&mut dev, &grad, &ctx);
+        assert_eq!(up.level, Some(20));
+    }
+
+    #[test]
+    fn skips_like_laq() {
+        let algo = LAdaQ::new(2, 32, 1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(32)), 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let grad: Vec<f32> = (0..32).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let mut c0 = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        c0.num_devices = 4;
+        algo.client_step(&mut dev, &grad, &c0);
+        let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 1e-12);
+        c1.num_devices = 4;
+        let up = algo.client_step(&mut dev, &grad, &c1);
+        assert!(up.payload.is_none());
+    }
+}

@@ -1,0 +1,171 @@
+//! LAQ baseline (Sun et al., 2020 [5]): lazily-aggregated quantization
+//! at a **fixed** level.
+//!
+//! The device skips its upload at round `k` when the quantized
+//! innovation is small relative to a Lyapunov-style memory of recent
+//! global model movement plus recent quantization errors:
+//!
+//! ```text
+//! ‖Δq_m^k‖² ≤ (1/(α²M²)) Σ_{d'=1}^{D} ξ_{d'} ‖θ^{k+1−d'} − θ^{k−d'}‖²
+//!             + 3 ( ‖ε_m^k‖² + ‖ε_m^{k̂}‖² )
+//! ```
+//!
+//! with `ξ_{d'} = ξ/D` and `k̂` the device's last upload round. This is
+//! the criterion AQUILA's eq. 8 replaces: it needs `D` stored model
+//! differences and a global-gradient surrogate, and its analysis drags a
+//! Lyapunov function through every theorem (paper Section III-A and the
+//! LAG-comparison remarks after Corollary 1 / Theorem 3).
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::midtread::quantize_innovation_fused;
+use crate::transport::wire::Payload;
+use crate::util::vecmath::innovation_norms;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct Laq {
+    /// Fixed quantization level.
+    pub bits: u8,
+    /// Total trigger weight `ξ` (split evenly over the `D` memory
+    /// slots).
+    pub xi: f64,
+    /// Memory depth `D`.
+    pub memory: usize,
+}
+
+impl Laq {
+    pub fn new(bits: u8, xi: f64, memory: usize) -> Self {
+        assert!((1..=32).contains(&bits));
+        assert!(memory >= 1);
+        Self { bits, xi, memory }
+    }
+
+    /// The LAQ threshold RHS for this round.
+    pub(crate) fn threshold(&self, dev: &DeviceState, err_now_sq: f64, ctx: &RoundCtx) -> f64 {
+        let d_slots = self.memory.min(ctx.model_diff_history.len());
+        let mut acc = 0.0;
+        for i in 0..d_slots {
+            acc += ctx.model_diff_history[i];
+        }
+        let alpha2 = ctx.alpha as f64 * ctx.alpha as f64;
+        let m = ctx.num_devices.max(1) as f64;
+        let lyapunov = self.xi / self.memory as f64 * acc / (alpha2 * m * m);
+        lyapunov + 3.0 * (err_now_sq + dev.prev_err_sq)
+    }
+}
+
+impl Algorithm for Laq {
+    fn name(&self) -> &'static str {
+        "LAQ"
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        let d = grad.len();
+        let (_l2sq, linf) = innovation_norms(grad, &dev.q_prev);
+        let mut dq = std::mem::take(&mut dev.scratch);
+        dq.resize(d, 0.0);
+        let outcome = quantize_innovation_fused(grad, &dev.q_prev, self.bits, linf, &mut dq);
+        let skip = ctx.round > 0
+            && outcome.dq_norm_sq <= self.threshold(dev, outcome.err_norm_sq, ctx);
+        if skip {
+            dev.skips += 1;
+            dev.scratch = dq;
+            return ClientUpload::skip_at_level(self.bits);
+        }
+        for (q, &delta) in dev.q_prev.iter_mut().zip(dq.iter()) {
+            *q += delta;
+        }
+        dev.uploads += 1;
+        dev.prev_err_sq = outcome.err_norm_sq;
+        dev.scratch = dq;
+        ClientUpload {
+            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            level: Some(self.bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_incremental(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::Arc;
+
+    fn grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    fn ctx_with_m(round: usize, m: usize, diff: f64) -> RoundCtx {
+        let mut c = RoundCtx::bare(round, 0.1, 0.0, diff);
+        c.num_devices = m;
+        c
+    }
+
+    #[test]
+    fn round_zero_uploads() {
+        let algo = Laq::new(8, 1e12, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(32)), 1);
+        let up = algo.client_step(&mut dev, &grad(32, 1), &ctx_with_m(0, 4, 0.0));
+        assert!(up.payload.is_some());
+    }
+
+    #[test]
+    fn identical_gradient_skips() {
+        // If the gradient hasn't changed since the last upload, the
+        // innovation is just the old quantization error — tiny — and the
+        // error terms (3·(ε_now + ε_prev)) dominate, so LAQ skips.
+        let algo = Laq::new(8, 1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(64)), 2);
+        let g = grad(64, 3);
+        algo.client_step(&mut dev, &g, &ctx_with_m(0, 4, 0.0));
+        let up = algo.client_step(&mut dev, &g, &ctx_with_m(1, 4, 1e-12));
+        assert!(up.payload.is_none(), "unchanged gradient should skip");
+        assert_eq!(dev.skips, 1);
+    }
+
+    #[test]
+    fn changed_gradient_uploads() {
+        let algo = Laq::new(8, 1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(64)), 4);
+        algo.client_step(&mut dev, &grad(64, 5), &ctx_with_m(0, 100, 0.0));
+        // A very different gradient ⇒ big innovation ⇒ upload.
+        let g2: Vec<f32> = grad(64, 99).iter().map(|x| x * 10.0).collect();
+        let up = algo.client_step(&mut dev, &g2, &ctx_with_m(1, 100, 1e-9));
+        assert!(up.payload.is_some());
+    }
+
+    #[test]
+    fn memory_depth_limits_history_use() {
+        let algo = Laq::new(4, 10.0, 2);
+        let dev = DeviceState::new(0, Arc::new(CapacityMask::full(8)), 6);
+        let mut ctx = ctx_with_m(5, 2, 1.0);
+        ctx.model_diff_history = vec![1.0, 1.0, 1000.0, 1000.0]; // old spikes ignored
+        let thr = algo.threshold(&dev, 0.0, &ctx);
+        // Only the first `memory = 2` slots count: (ξ/D)·(1+1)/(α²M²).
+        let expect = 10.0 / 2.0 * 2.0 / (0.01 * 4.0);
+        // α is f32 in the context, so compare with relative tolerance.
+        assert!((thr - expect).abs() / expect < 1e-6, "{thr} vs {expect}");
+    }
+
+    #[test]
+    fn skip_does_not_mutate_q_prev() {
+        let algo = Laq::new(8, 1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(16)), 7);
+        let g = grad(16, 8);
+        algo.client_step(&mut dev, &g, &ctx_with_m(0, 4, 0.0));
+        let snapshot = dev.q_prev.clone();
+        let up = algo.client_step(&mut dev, &g, &ctx_with_m(1, 4, 0.0));
+        assert!(up.payload.is_none());
+        assert_eq!(dev.q_prev, snapshot);
+    }
+}

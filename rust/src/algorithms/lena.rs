@@ -1,0 +1,139 @@
+//! LENA baseline (Ghadikolaei, Stich & Jaggi, 2021 [25]):
+//! communication-efficient distributed learning with **self-triggered**
+//! gradient uploads — lazy aggregation of *unquantized* gradients.
+//!
+//! The device uploads the raw innovation `g_m^k − ĝ_m` (where `ĝ_m` is
+//! its last uploaded gradient) only when the innovation is large
+//! relative to recent global movement:
+//!
+//! ```text
+//! ‖g_m^k − ĝ_m‖² > (ξ/(α²M²)) · (1/D) Σ_{d'=1}^{D} ‖θ^{k+1−d'} − θ^{k−d'}‖²
+//! ```
+//!
+//! No quantization: each upload costs `32·d` payload bits, so LENA's
+//! savings come purely from round skipping (visible in Tables II/III
+//! where LENA's totals sit close to the unquantized scale of QSGD×4).
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::transport::wire::Payload;
+use crate::util::vecmath::innovation_norms;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct Lena {
+    /// Trigger weight `ξ`.
+    pub xi: f64,
+    /// Memory depth `D`.
+    pub memory: usize,
+}
+
+impl Lena {
+    pub fn new(xi: f64, memory: usize) -> Self {
+        assert!(memory >= 1);
+        Self { xi, memory }
+    }
+
+    fn threshold(&self, ctx: &RoundCtx) -> f64 {
+        let d_slots = self.memory.min(ctx.model_diff_history.len());
+        if d_slots == 0 {
+            return 0.0;
+        }
+        let acc: f64 = ctx.model_diff_history[..d_slots].iter().sum();
+        let alpha2 = ctx.alpha as f64 * ctx.alpha as f64;
+        let m = ctx.num_devices.max(1) as f64;
+        self.xi * acc / (self.memory as f64 * alpha2 * m * m)
+    }
+}
+
+impl Algorithm for Lena {
+    fn name(&self) -> &'static str {
+        "LENA"
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        let (innov_sq, _linf) = innovation_norms(grad, &dev.q_prev);
+        let skip = ctx.round > 0 && innov_sq <= self.threshold(ctx);
+        if skip {
+            dev.skips += 1;
+            return ClientUpload::skip();
+        }
+        // Raw innovation; device reference becomes the exact gradient.
+        let delta: Vec<f32> = grad
+            .iter()
+            .zip(&dev.q_prev)
+            .map(|(g, q)| g - q)
+            .collect();
+        dev.q_prev.copy_from_slice(grad);
+        dev.uploads += 1;
+        ClientUpload {
+            payload: Some(Payload::RawDelta(delta)),
+            level: None,
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_incremental(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::Arc;
+
+    fn grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn uploads_exact_innovation() {
+        let algo = Lena::new(1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(8)), 1);
+        let g0 = grad(8, 1);
+        let mut ctx = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        ctx.num_devices = 4;
+        let up = algo.client_step(&mut dev, &g0, &ctx);
+        match up.payload.unwrap() {
+            Payload::RawDelta(d) => assert_eq!(d, g0),
+            p => panic!("wrong payload {p:?}"),
+        }
+        // Reference now equals the gradient exactly (no quantization).
+        assert_eq!(dev.q_prev, g0);
+    }
+
+    #[test]
+    fn identical_gradient_skips_when_model_still() {
+        let algo = Lena::new(1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(32)), 2);
+        let g = grad(32, 3);
+        let mut c0 = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        c0.num_devices = 2;
+        algo.client_step(&mut dev, &g, &c0);
+        let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 0.0);
+        c1.num_devices = 2;
+        c1.model_diff_history = vec![0.0];
+        // Innovation is exactly zero ⇒ 0 ≤ 0 ⇒ skip.
+        let up = algo.client_step(&mut dev, &g, &c1);
+        assert!(up.payload.is_none());
+    }
+
+    #[test]
+    fn big_innovation_uploads() {
+        let algo = Lena::new(1.0, 10);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(32)), 4);
+        let mut c = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        c.num_devices = 100;
+        algo.client_step(&mut dev, &grad(32, 5), &c);
+        let big: Vec<f32> = grad(32, 6).iter().map(|x| x * 100.0).collect();
+        let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 1e-6);
+        c1.num_devices = 100;
+        assert!(algo.client_step(&mut dev, &big, &c1).payload.is_some());
+    }
+}

@@ -1,0 +1,179 @@
+//! MARINA baseline (Gorbunov et al., 2021 [26]): compressed gradient
+//! *differences* with periodic full synchronization.
+//!
+//! Every device transmits every round. With probability `p` the round is
+//! a synchronization round (the coordinator flips one shared coin,
+//! `RoundCtx::marina_sync`) and devices send their raw gradient; the
+//! server resets its estimate to the average. Otherwise devices send the
+//! quantized difference `Q(g^k − g^{k−1})` and the server updates
+//! `g_est ← g_est + avg(Q(·))`.
+//!
+//! The original uses RandK; we use the paper's deterministic mid-tread
+//! quantizer for comparability (same wire format as the lazy family).
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::midtread::quantize_innovation_fused;
+use crate::transport::wire::Payload;
+use crate::util::vecmath::innovation_norms;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct Marina {
+    /// Fixed level for compressed difference rounds.
+    pub bits: u8,
+    /// Sync probability `p` (coordinator flips the shared coin).
+    pub p_sync: f64,
+}
+
+impl Marina {
+    pub fn new(bits: u8, p_sync: f64) -> Self {
+        assert!((1..=32).contains(&bits));
+        assert!((0.0..=1.0).contains(&p_sync));
+        Self { bits, p_sync }
+    }
+}
+
+impl Algorithm for Marina {
+    fn name(&self) -> &'static str {
+        "MARINA"
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        let sync = ctx.marina_sync || ctx.round == 0;
+        dev.uploads += 1;
+        if sync {
+            dev.q_prev.copy_from_slice(grad);
+            return ClientUpload {
+                payload: Some(Payload::RawFull(grad.to_vec())),
+                level: None,
+            };
+        }
+        let d = grad.len();
+        let (_l2, linf) = innovation_norms(grad, &dev.q_prev);
+        let mut dq = std::mem::take(&mut dev.scratch);
+        dq.resize(d, 0.0);
+        let outcome = quantize_innovation_fused(grad, &dev.q_prev, self.bits, linf, &mut dq);
+        // MARINA's reference is the *previous local gradient*, not the
+        // quantized estimate.
+        dev.q_prev.copy_from_slice(grad);
+        dev.prev_err_sq = outcome.err_norm_sq;
+        dev.scratch = dq;
+        ClientUpload {
+            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            level: Some(self.bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], ctx: &RoundCtx) {
+        if ctx.marina_sync || ctx.round == 0 {
+            super::fold_average(srv, uploads);
+        } else {
+            // g_est += average of compressed differences.
+            if uploads.is_empty() {
+                return;
+            }
+            let scale = 1.0 / uploads.len() as f32;
+            for (dev, p) in uploads {
+                srv.add_scaled_payload(*dev, p, scale);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::Arc;
+
+    fn grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn sync_round_sends_raw() {
+        let algo = Marina::new(8, 0.1);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(16)), 1);
+        let g = grad(16, 2);
+        let mut ctx = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        ctx.marina_sync = true;
+        let up = algo.client_step(&mut dev, &g, &ctx);
+        assert!(matches!(up.payload, Some(Payload::RawFull(_))));
+        assert_eq!(dev.q_prev, g);
+    }
+
+    #[test]
+    fn diff_round_sends_quantized_delta() {
+        let algo = Marina::new(8, 0.1);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(16)), 3);
+        let g0 = grad(16, 4);
+        let mut c0 = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        c0.marina_sync = true;
+        algo.client_step(&mut dev, &g0, &c0);
+        let g1 = grad(16, 5);
+        let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 1.0);
+        c1.marina_sync = false;
+        let up = algo.client_step(&mut dev, &g1, &c1);
+        assert!(matches!(up.payload, Some(Payload::MidtreadDelta(_))));
+        assert_eq!(up.level, Some(8));
+        // Reference tracks the raw gradient.
+        assert_eq!(dev.q_prev, g1);
+    }
+
+    #[test]
+    fn server_estimate_tracks_average_gradient() {
+        // With exact (32-bit-ish) quantization, g_est after a diff round
+        // ≈ avg of current gradients.
+        let algo = Marina::new(16, 0.0);
+        let full = Arc::new(CapacityMask::full(8));
+        let mut d0 = DeviceState::new(0, full.clone(), 6);
+        let mut d1 = DeviceState::new(1, full.clone(), 7);
+        let mut srv = ServerAgg::new(8, vec![full.clone(), full]);
+        let (a0, a1) = (grad(8, 10), grad(8, 11));
+        let mut c0 = RoundCtx::bare(0, 0.1, 0.0, 0.0);
+        c0.marina_sync = true;
+        let ups0 = vec![
+            (0, algo.client_step(&mut d0, &a0, &c0).payload.unwrap()),
+            (1, algo.client_step(&mut d1, &a1, &c0).payload.unwrap()),
+        ];
+        algo.server_fold(&mut srv, &ups0, &c0);
+        let (b0, b1) = (grad(8, 12), grad(8, 13));
+        let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 1.0);
+        c1.marina_sync = false;
+        let ups1 = vec![
+            (0, algo.client_step(&mut d0, &b0, &c1).payload.unwrap()),
+            (1, algo.client_step(&mut d1, &b1, &c1).payload.unwrap()),
+        ];
+        algo.server_fold(&mut srv, &ups1, &c1);
+        for i in 0..8 {
+            let want = 0.5 * (b0[i] + b1[i]);
+            assert!(
+                (srv.direction[i] - want).abs() < 1e-3,
+                "{} vs {}",
+                srv.direction[i],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn never_skips() {
+        let algo = Marina::new(4, 0.5);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(8)), 9);
+        for k in 0..10 {
+            let mut c = RoundCtx::bare(k, 0.1, 0.0, 1.0);
+            c.marina_sync = k % 3 == 0;
+            assert!(algo
+                .client_step(&mut dev, &grad(8, 20 + k as u64), &c)
+                .payload
+                .is_some());
+        }
+        assert_eq!(dev.skips, 0);
+    }
+}

@@ -1,0 +1,350 @@
+//! The algorithm suite: AQUILA plus every baseline in Tables II/III.
+//!
+//! | Column in the tables | Implementation |
+//! |---|---|
+//! | QSGD   | [`qsgd::QsgdAlgo`] — fixed-level stochastic quantization, transmit every round |
+//! | AdaQ   | [`adaquantfl::AdaQuantFl`] — AdaQuantFL global-loss level rule, transmit every round |
+//! | LAQ    | [`laq::Laq`] — fixed-level lazily-aggregated quantization |
+//! | LAdaQ  | [`ladaq::LAdaQ`] — the naive AdaQuantFL + LAQ combination |
+//! | LENA   | [`lena::Lena`] — self-triggered raw-gradient uploads |
+//! | MARINA | [`marina::Marina`] — periodic sync + compressed gradient differences |
+//! | AQUILA | [`aquila::Aquila`] — this paper (eq. 8 skip rule + eq. 19 level rule) |
+//!
+//! Additional: [`fedavg::FedAvg`] (uncompressed reference) and
+//! [`dadaquant::DAdaQuant`] (random-K doubly-adaptive baseline, paper
+//! Section II).
+//!
+//! ## Split of responsibilities
+//!
+//! An [`Algorithm`] has a *client half* — given the device's local
+//! gradient (in the device's HeteroFL-gathered coordinate space), update
+//! device state and decide what to upload — and a *server half* — fold
+//! the round's decoded payloads into the server's step direction. The
+//! coordinator (`crate::coordinator`) owns everything else: gradient
+//! computation, masking, the wire round-trip and byte accounting, the
+//! model update `θ^{k+1} = θ^k − α·direction`, and metrics.
+
+pub mod adaquantfl;
+pub mod aquila;
+pub mod dadaquant;
+pub mod fedavg;
+pub mod ladaq;
+pub mod laq;
+pub mod lena;
+pub mod marina;
+pub mod qsgd;
+
+use crate::hetero::CapacityMask;
+use crate::quant::midtread;
+use crate::quant::qsgd as qsgd_quant;
+use crate::transport::wire::Payload;
+use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Everything the server broadcasts that clients may consult. The paper
+/// stresses (Section III-A) that AQUILA's criterion only needs the two
+/// adjacent global models — i.e. `model_diff_sq` — while LAQ-style rules
+/// need a `D`-deep history, reproduced here as `model_diff_history`.
+#[derive(Clone, Debug)]
+pub struct RoundCtx {
+    /// Communication round `k` (0-based; round 0 is the bootstrap round
+    /// of Algorithm 1 where every device uploads).
+    pub round: usize,
+    /// Total device count `M` (the LAQ/LENA thresholds divide by `M²`).
+    pub num_devices: usize,
+    /// Server learning rate `α`.
+    pub alpha: f32,
+    /// AQUILA tuning factor `β ≥ 0` (eq. 8).
+    pub beta: f32,
+    /// `‖θᵏ − θ^{k−1}‖₂²` — the exact model difference AQUILA uses.
+    pub model_diff_sq: f64,
+    /// Last `D` squared model differences, most recent first (LAQ/LENA).
+    pub model_diff_history: Vec<f64>,
+    /// `f(θ⁰)` estimate (AdaQuantFL numerator).
+    pub init_loss: f64,
+    /// `f(θ^{k−1})` estimate — average of last round's local losses.
+    pub prev_loss: f64,
+    /// Whether this is a MARINA synchronization round (coordinator flips
+    /// a shared coin with probability `p_sync`).
+    pub marina_sync: bool,
+    /// Devices selected this round (`None` = all devices participate);
+    /// used by DAdaQuant's random-K sampling.
+    pub selected: Option<Vec<usize>>,
+    /// DAdaQuant time-adaptive level (maintained server-side).
+    pub dadaquant_level: u8,
+}
+
+impl RoundCtx {
+    /// A minimal context for tests.
+    pub fn bare(round: usize, alpha: f32, beta: f32, model_diff_sq: f64) -> Self {
+        Self {
+            round,
+            num_devices: 1,
+            alpha,
+            beta,
+            model_diff_sq,
+            model_diff_history: vec![model_diff_sq],
+            init_loss: 1.0,
+            prev_loss: 1.0,
+            marina_sync: round == 0,
+            selected: None,
+            dadaquant_level: 4,
+        }
+    }
+
+    /// Is `device` participating this round?
+    pub fn is_selected(&self, device: usize) -> bool {
+        match &self.selected {
+            None => true,
+            Some(s) => s.contains(&device),
+        }
+    }
+}
+
+/// Per-device persistent state. Vectors live in the device's *gathered*
+/// (mask-support) coordinate space of size `mask.support()`.
+#[derive(Clone, Debug)]
+pub struct DeviceState {
+    pub id: usize,
+    /// The algorithm's reference vector: the stored quantized gradient
+    /// `q_m^{k−1}` (mid-tread lazy family), the last *uploaded* gradient
+    /// (LENA), or the previous local gradient (MARINA).
+    pub q_prev: Vec<f32>,
+    /// `‖ε_m‖²` of the last upload (LAQ's threshold term).
+    pub prev_err_sq: f64,
+    /// Scratch for dequantized innovations (avoids per-round allocation).
+    pub scratch: Vec<f32>,
+    /// Device-local RNG stream (stochastic quantizers).
+    pub rng: Xoshiro256pp,
+    pub uploads: u64,
+    pub skips: u64,
+    /// HeteroFL capacity mask.
+    pub mask: Arc<CapacityMask>,
+}
+
+impl DeviceState {
+    pub fn new(id: usize, mask: Arc<CapacityMask>, seed: u64) -> Self {
+        let support = mask.support();
+        Self {
+            id,
+            q_prev: vec![0.0; support],
+            prev_err_sq: 0.0,
+            scratch: vec![0.0; support],
+            rng: Xoshiro256pp::stream(seed, 0xDE_u64 << 32 | id as u64),
+            uploads: 0,
+            skips: 0,
+            mask,
+        }
+    }
+
+    /// Gathered dimension.
+    pub fn support(&self) -> usize {
+        self.mask.support()
+    }
+}
+
+/// What the client half returns.
+#[derive(Clone, Debug)]
+pub struct ClientUpload {
+    /// `None` = the device skips this round (zero uplink bytes).
+    pub payload: Option<Payload>,
+    /// Quantization level used/computed this round (metrics; present
+    /// even on skip rounds for the level-trace figures).
+    pub level: Option<u8>,
+}
+
+impl ClientUpload {
+    pub fn skip() -> Self {
+        Self {
+            payload: None,
+            level: None,
+        }
+    }
+
+    pub fn skip_at_level(level: u8) -> Self {
+        Self {
+            payload: None,
+            level: Some(level),
+        }
+    }
+}
+
+/// Server-side aggregation state shared by all algorithms.
+pub struct ServerAgg {
+    /// The step direction: `θ^{k+1} = θᵏ − α · direction`. For the lazy
+    /// family this is the running `q̄ = (1/M) Σ_m q_m` of Algorithm 1
+    /// line 14–15 and persists across rounds; reset-style algorithms
+    /// clear it each round.
+    pub direction: Vec<f32>,
+    /// Per-device capacity masks (scatter targets).
+    pub masks: Vec<Arc<CapacityMask>>,
+    /// Total device count `M`.
+    pub m: usize,
+    scratch: Vec<f32>,
+}
+
+impl ServerAgg {
+    pub fn new(full_dim: usize, masks: Vec<Arc<CapacityMask>>) -> Self {
+        let m = masks.len();
+        Self {
+            direction: vec![0.0; full_dim],
+            masks,
+            m,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Clear the direction (reset-style algorithms).
+    pub fn reset(&mut self) {
+        self.direction.fill(0.0);
+    }
+
+    /// Decode `payload` to a dense gathered vector and scatter-add
+    /// `scale ×` it into the direction through the device's mask.
+    pub fn add_scaled_payload(&mut self, device: usize, payload: &Payload, scale: f32) {
+        let mask = &self.masks[device];
+        let n = payload.len();
+        assert_eq!(
+            n,
+            mask.support(),
+            "payload length {n} != device {device} support {}",
+            mask.support()
+        );
+        self.scratch.resize(n, 0.0);
+        match payload {
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+                midtread::dequantize_into(q, &mut self.scratch);
+            }
+            Payload::Qsgd(q) => {
+                qsgd_quant::dequantize_into(q, &mut self.scratch);
+            }
+            Payload::RawDelta(v) | Payload::RawFull(v) => {
+                self.scratch.copy_from_slice(v);
+            }
+        }
+        mask.scatter_add(&self.scratch, scale, &mut self.direction);
+    }
+}
+
+/// A communication-efficient FL algorithm: client decision rule +
+/// server fold rule. See module docs.
+pub trait Algorithm: Send + Sync {
+    /// Name as it appears in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Whether the server direction persists across rounds (lazy
+    /// aggregation family) or is recomputed from scratch each round.
+    fn incremental(&self) -> bool;
+
+    /// Client half. `grad` is the device's local gradient in gathered
+    /// space (`dev.support()` long).
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload;
+
+    /// Server half: fold the round's decoded uploads into
+    /// `srv.direction`.
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], ctx: &RoundCtx);
+}
+
+/// Standard reset-style fold: `direction = (1/|uploads|) Σ decode(p)`.
+pub(crate) fn fold_average(srv: &mut ServerAgg, uploads: &[(usize, Payload)]) {
+    srv.reset();
+    if uploads.is_empty() {
+        return;
+    }
+    let scale = 1.0 / uploads.len() as f32;
+    for (dev, p) in uploads {
+        srv.add_scaled_payload(*dev, p, scale);
+    }
+}
+
+/// Standard lazy fold: `q̄ += (1/M) Σ decode(Δq)`.
+pub(crate) fn fold_incremental(srv: &mut ServerAgg, uploads: &[(usize, Payload)]) {
+    let scale = 1.0 / srv.m as f32;
+    for (dev, p) in uploads {
+        srv.add_scaled_payload(*dev, p, scale);
+    }
+}
+
+/// Construct every algorithm of Tables II/III with the hyperparameters
+/// used by the reproduction presets.
+pub fn table_suite(beta: f32) -> Vec<Box<dyn Algorithm>> {
+    vec![
+        Box::new(qsgd::QsgdAlgo::new(8)),
+        Box::new(adaquantfl::AdaQuantFl::new(4, 32)),
+        Box::new(laq::Laq::new(8, 0.8, 10)),
+        Box::new(ladaq::LAdaQ::new(4, 32, 0.8, 10)),
+        Box::new(lena::Lena::new(0.8, 10)),
+        Box::new(marina::Marina::new(8, 0.1)),
+        Box::new(aquila::Aquila::new(beta)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::midtread::quantize;
+
+    #[test]
+    fn server_agg_scatter_respects_masks() {
+        use crate::problems::ParamLayout;
+        let layout = ParamLayout::contiguous(&[("w", vec![4, 4])]);
+        let full = Arc::new(CapacityMask::full(16));
+        let half = Arc::new(CapacityMask::from_layout(&layout, 0.5));
+        let mut srv = ServerAgg::new(16, vec![full, half.clone()]);
+        // Device 1 (masked) sends a 4-element payload.
+        let p = Payload::RawFull(vec![1.0; half.support()]);
+        srv.add_scaled_payload(1, &p, 2.0);
+        let on: f32 = srv.direction.iter().sum();
+        assert_eq!(on, 2.0 * half.support() as f32);
+        for (i, &x) in srv.direction.iter().enumerate() {
+            let in_mask = half.indices.contains(&(i as u32));
+            assert_eq!(x != 0.0, in_mask, "index {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn server_agg_rejects_wrong_length() {
+        let full = Arc::new(CapacityMask::full(8));
+        let mut srv = ServerAgg::new(8, vec![full]);
+        let p = Payload::MidtreadFull(quantize(&[1.0, 2.0], 4));
+        srv.add_scaled_payload(0, &p, 1.0);
+    }
+
+    #[test]
+    fn fold_average_of_two() {
+        let full = Arc::new(CapacityMask::full(2));
+        let mut srv = ServerAgg::new(2, vec![full.clone(), full]);
+        let ups = vec![
+            (0usize, Payload::RawFull(vec![2.0, 0.0])),
+            (1usize, Payload::RawFull(vec![0.0, 4.0])),
+        ];
+        fold_average(&mut srv, &ups);
+        assert_eq!(srv.direction, vec![1.0, 2.0]);
+        // Re-fold resets rather than accumulates.
+        fold_average(&mut srv, &ups);
+        assert_eq!(srv.direction, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn fold_incremental_accumulates_over_m() {
+        let full = Arc::new(CapacityMask::full(1));
+        let masks = vec![full.clone(), full.clone(), full.clone(), full];
+        let mut srv = ServerAgg::new(1, masks);
+        let ups = vec![(0usize, Payload::RawDelta(vec![4.0]))];
+        fold_incremental(&mut srv, &ups);
+        assert_eq!(srv.direction, vec![1.0]); // 4.0 / M=4
+        fold_incremental(&mut srv, &ups);
+        assert_eq!(srv.direction, vec![2.0]); // persists
+    }
+
+    #[test]
+    fn table_suite_has_paper_columns() {
+        let suite = table_suite(0.25);
+        let names: Vec<&str> = suite.iter().map(|a| a.name()).collect();
+        assert_eq!(
+            names,
+            vec!["QSGD", "AdaQuantFL", "LAQ", "LAdaQ", "LENA", "MARINA", "AQUILA"]
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! QSGD baseline: fixed-level stochastic quantization of the full local
+//! gradient, transmitted every round (no device selection).
+
+use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::quant::qsgd;
+use crate::transport::wire::Payload;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct QsgdAlgo {
+    /// Magnitude bits per element.
+    pub bits: u8,
+}
+
+impl QsgdAlgo {
+    pub fn new(bits: u8) -> Self {
+        assert!((1..=31).contains(&bits));
+        Self { bits }
+    }
+}
+
+impl Algorithm for QsgdAlgo {
+    fn name(&self) -> &'static str {
+        "QSGD"
+    }
+
+    fn incremental(&self) -> bool {
+        false
+    }
+
+    fn client_step(&self, dev: &mut DeviceState, grad: &[f32], _ctx: &RoundCtx) -> ClientUpload {
+        let q = qsgd::quantize(grad, self.bits, &mut dev.rng);
+        dev.uploads += 1;
+        ClientUpload {
+            payload: Some(Payload::Qsgd(q)),
+            level: Some(self.bits),
+        }
+    }
+
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+        super::fold_average(srv, uploads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::CapacityMask;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::Arc;
+
+    #[test]
+    fn always_uploads_at_fixed_level() {
+        let algo = QsgdAlgo::new(4);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(32)), 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        for k in 0..10 {
+            let grad: Vec<f32> = (0..32).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            let up = algo.client_step(&mut dev, &grad, &RoundCtx::bare(k, 0.1, 0.25, 1.0));
+            assert!(up.payload.is_some());
+            assert_eq!(up.level, Some(4));
+        }
+        assert_eq!(dev.uploads, 10);
+        assert_eq!(dev.skips, 0);
+    }
+
+    #[test]
+    fn dequantized_payload_approximates_gradient() {
+        let algo = QsgdAlgo::new(8);
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(256)), 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let grad: Vec<f32> = (0..256).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let up = algo.client_step(&mut dev, &grad, &RoundCtx::bare(0, 0.1, 0.25, 0.0));
+        let mut srv = ServerAgg::new(256, vec![Arc::new(CapacityMask::full(256))]);
+        algo.server_fold(
+            &mut srv,
+            &[(0, up.payload.unwrap())],
+            &RoundCtx::bare(0, 0.1, 0.25, 0.0),
+        );
+        let err: f64 = grad
+            .iter()
+            .zip(&srv.direction)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let norm: f64 = grad.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(err / norm < 0.01, "relative err {}", err / norm);
+    }
+}

@@ -1,0 +1,204 @@
+//! Criterion-style micro-benchmark harness (the offline registry has no
+//! `criterion`; see DESIGN.md S18).
+//!
+//! Provides warmup + timed sampling, robust statistics (mean / median /
+//! std / min), throughput reporting, and a black-box sink. All
+//! `rust/benches/*.rs` binaries are built on this.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-exported opaque sink preventing the optimizer from deleting the
+/// benchmarked computation.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    /// Optional elements-per-iteration for throughput displays.
+    pub elements: Option<u64>,
+}
+
+impl Stats {
+    /// Throughput in elements/second (when `elements` is set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:>8.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:>8.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {:>8.0} elem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>12?}  median {:>12?}  σ {:>10?}  min {:>12?}{tp}",
+            self.name, self.mean, self.median, self.std_dev, self.min
+        )
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bench {
+    /// Warmup duration before sampling.
+    pub warmup: Duration,
+    /// Sampling budget.
+    pub budget: Duration,
+    /// Max samples.
+    pub max_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // AQUILA_BENCH_FAST=1 shrinks budgets (CI smoke).
+        let fast = std::env::var("AQUILA_BENCH_FAST").is_ok();
+        Self {
+            warmup: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(200)
+            },
+            budget: if fast {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(1)
+            },
+            max_samples: 1000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; one sample = one call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Stats {
+        self.bench_elements(name, None, &mut f)
+    }
+
+    /// Time `f`, reporting throughput as `elements` per call.
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, elements: u64, mut f: F) -> &Stats {
+        self.bench_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_elements(&mut self, name: &str, elements: Option<u64>, f: &mut dyn FnMut()) -> &Stats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Sample.
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && times.len() < self.max_samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        if times.is_empty() {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let n = times.len();
+        let total: Duration = times.iter().sum();
+        let mean = total / n as u32;
+        let median = times[n / 2];
+        let min = times[0];
+        let mean_s = mean.as_secs_f64();
+        let var = times
+            .iter()
+            .map(|t| {
+                let d = t.as_secs_f64() - mean_s;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            samples: n,
+            mean,
+            median,
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min,
+            elements,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All collected stats.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print a closing summary (and return it for tests).
+    pub fn finish(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} benchmark cases ===\n", self.results.len()));
+        print!("{out}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_bench() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = fast_bench();
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let s = &b.results()[0];
+        assert!(s.samples >= 1);
+        assert!(s.min <= s.median && s.median <= s.mean * 10);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = fast_bench();
+        let data = vec![1.0f32; 4096];
+        b.bench_throughput("sum4096", 4096, || {
+            black_box(data.iter().sum::<f32>());
+        });
+        let tp = b.results()[0].throughput().unwrap();
+        assert!(tp > 1e6, "suspiciously slow: {tp}");
+    }
+
+    #[test]
+    fn multiple_cases_accumulate() {
+        let mut b = fast_bench();
+        b.bench("a", || {});
+        b.bench("b", || {});
+        assert_eq!(b.results().len(), 2);
+        assert!(b.finish().contains("2 benchmark cases"));
+    }
+}

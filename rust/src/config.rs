@@ -1,0 +1,364 @@
+//! Experiment configuration: dataset/split/algorithm presets mirroring
+//! the paper's evaluation matrix, TOML-file overrides, and problem
+//! construction.
+//!
+//! Section V setup reproduced:
+//! * three datasets — CIFAR-10 / CIFAR-100 / WikiText-2, substituted per
+//!   DESIGN.md §3 by `synth-cf10` / `synth-cf100` / `synth-wt2`;
+//! * splits — `IID-100` (the M = 100-device — 80 for WT-2 — large
+//!   system), `IID` and `Non-IID` (M = 10; two classes per device for
+//!   CF-10, ten for CF-100);
+//! * β per dataset as selected in Section V-D: 0.1 (CF-10), 0.25
+//!   (CF-100), 1.25 (WT-2).
+
+use crate::coordinator::RunConfig;
+use crate::data::partition::{iid_partition, label_limited_partition};
+use crate::data::synth::{gaussian_mixture, MixtureSpec};
+use crate::data::text::{markov_corpus, shard_corpus, CorpusSpec};
+use crate::problems::logistic::LogisticProblem;
+use crate::problems::mlp::MlpProblem;
+use crate::problems::softmax_lm::SoftmaxLmProblem;
+use crate::problems::GradientSource;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::toml;
+use std::path::Path;
+
+/// Which synthetic stand-in dataset to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Gaussian mixture, 10 classes (CIFAR-10 stand-in; MLP model).
+    Cf10,
+    /// Gaussian mixture, 100 classes (CIFAR-100 stand-in; logistic
+    /// model).
+    Cf100,
+    /// Markov character corpus (WikiText-2 stand-in; bigram softmax
+    /// LM).
+    Wt2,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cf10" | "cifar10" | "cf-10" => Some(Self::Cf10),
+            "cf100" | "cifar100" | "cf-100" => Some(Self::Cf100),
+            "wt2" | "wikitext2" | "wt-2" => Some(Self::Wt2),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Cf10 => "CF-10",
+            Self::Cf100 => "CF-100",
+            Self::Wt2 => "WT-2",
+        }
+    }
+
+    /// β selected for this dataset in the paper's Section V-D.
+    pub fn paper_beta(&self) -> f32 {
+        match self {
+            Self::Cf10 => 0.1,
+            Self::Cf100 => 0.25,
+            Self::Wt2 => 1.25,
+        }
+    }
+}
+
+/// Data split / system size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitKind {
+    /// Large system: M = 100 devices (80 for WT-2), IID shards.
+    IidLarge,
+    /// M = 10, IID shards.
+    Iid,
+    /// M = 10, label-limited Non-IID shards (2 classes/device CF-10,
+    /// 10 classes/device CF-100; WT-2 has no Non-IID row in the paper).
+    NonIid,
+}
+
+impl SplitKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid-100" | "iid-80" | "iid-large" | "iidlarge" => Some(Self::IidLarge),
+            "iid" => Some(Self::Iid),
+            "non-iid" | "noniid" | "non_iid" => Some(Self::NonIid),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self, ds: DatasetKind) -> &'static str {
+        match (self, ds) {
+            (Self::IidLarge, DatasetKind::Wt2) => "IID-80",
+            (Self::IidLarge, _) => "IID-100",
+            (Self::Iid, _) => "IID",
+            (Self::NonIid, _) => "Non-IID",
+        }
+    }
+}
+
+/// One experiment cell: dataset × split (× hetero) with its
+/// hyperparameters.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub dataset: DatasetKind,
+    pub split: SplitKind,
+    /// Half the devices at 50% capacity (Table III / Figure 3).
+    pub hetero: bool,
+    pub devices: usize,
+    pub rounds: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    pub seed: u64,
+    /// Scale factor on default dataset sizes (CI/smoke runs use < 1).
+    pub data_scale: f64,
+}
+
+impl ExperimentSpec {
+    /// Device count per the paper's setup.
+    fn default_devices(ds: DatasetKind, split: SplitKind) -> usize {
+        match (split, ds) {
+            (SplitKind::IidLarge, DatasetKind::Wt2) => 80,
+            (SplitKind::IidLarge, _) => 100,
+            _ => 10,
+        }
+    }
+
+    pub fn new(dataset: DatasetKind, split: SplitKind, hetero: bool) -> Self {
+        let devices = Self::default_devices(dataset, split);
+        Self {
+            dataset,
+            split,
+            hetero,
+            devices,
+            rounds: if devices >= 80 { 150 } else { 300 },
+            alpha: match dataset {
+                DatasetKind::Wt2 => 2.0,
+                _ => 0.5,
+            },
+            beta: dataset.paper_beta(),
+            seed: 2023,
+            data_scale: 1.0,
+        }
+    }
+
+    /// Row label as printed in the tables.
+    pub fn row_label(&self) -> String {
+        format!("{} {}", self.dataset.name(), self.split.name(self.dataset))
+    }
+
+    /// Reduce dataset sizes and rounds (smoke tests / quick benches).
+    pub fn scaled(mut self, data_scale: f64, rounds: usize) -> Self {
+        self.data_scale = data_scale;
+        self.rounds = rounds;
+        self
+    }
+
+    /// The coordinator run-config for this experiment.
+    pub fn run_config(&self) -> RunConfig {
+        RunConfig {
+            alpha: self.alpha,
+            beta: self.beta,
+            rounds: self.rounds,
+            eval_every: (self.rounds / 10).max(1),
+            seed: self.seed,
+            threads: 0,
+            ..RunConfig::default()
+        }
+    }
+
+    /// Construct the federated problem (datasets, shards, model).
+    pub fn build_problem(&self) -> Box<dyn GradientSource> {
+        let scale = |n: usize| ((n as f64 * self.data_scale) as usize).max(self.devices * 4);
+        let mut rng = Xoshiro256pp::stream(self.seed, 0x5917);
+        match self.dataset {
+            DatasetKind::Cf10 => {
+                let spec = MixtureSpec::cifar10_like(scale(6000), self.seed);
+                let full = gaussian_mixture(&spec);
+                let n_test = full.len() / 6;
+                let test = full.subset(&(0..n_test).collect::<Vec<_>>());
+                let train = full.subset(&(n_test..full.len()).collect::<Vec<_>>());
+                let parts = match self.split {
+                    SplitKind::NonIid => label_limited_partition(
+                        &train.labels,
+                        train.num_classes,
+                        self.devices,
+                        2,
+                        &mut rng,
+                    ),
+                    _ => iid_partition(train.len(), self.devices, &mut rng),
+                };
+                let shards = parts.iter().map(|p| train.subset(p)).collect();
+                Box::new(MlpProblem::new(shards, test, 32, 1e-4))
+            }
+            DatasetKind::Cf100 => {
+                let spec = MixtureSpec::cifar100_like(scale(10_000), self.seed);
+                let full = gaussian_mixture(&spec);
+                let n_test = full.len() / 6;
+                let test = full.subset(&(0..n_test).collect::<Vec<_>>());
+                let train = full.subset(&(n_test..full.len()).collect::<Vec<_>>());
+                let parts = match self.split {
+                    SplitKind::NonIid => label_limited_partition(
+                        &train.labels,
+                        train.num_classes,
+                        self.devices,
+                        10,
+                        &mut rng,
+                    ),
+                    _ => iid_partition(train.len(), self.devices, &mut rng),
+                };
+                let shards = parts.iter().map(|p| train.subset(p)).collect();
+                Box::new(LogisticProblem::new(shards, test, 1e-4))
+            }
+            DatasetKind::Wt2 => {
+                let spec = CorpusSpec::wikitext2_like(scale(120_000), self.seed);
+                let full = markov_corpus(&spec);
+                let n_test = full.len() / 6;
+                let test = full.slice(0, n_test);
+                let train = full.slice(n_test, full.len());
+                let shards = shard_corpus(&train, self.devices);
+                Box::new(SoftmaxLmProblem::new(shards, test, 1e-5))
+            }
+        }
+    }
+
+    /// Apply overrides from a parsed TOML map (`experiment` table).
+    pub fn apply_toml(&mut self, map: &std::collections::BTreeMap<String, toml::Value>) {
+        let get = |k: &str| map.get(&format!("experiment.{k}")).or_else(|| map.get(k));
+        if let Some(v) = get("dataset").and_then(|v| v.as_str()) {
+            self.dataset = DatasetKind::parse(v).unwrap_or(self.dataset);
+        }
+        if let Some(v) = get("split").and_then(|v| v.as_str()) {
+            self.split = SplitKind::parse(v).unwrap_or(self.split);
+        }
+        if let Some(v) = get("hetero").and_then(|v| v.as_bool()) {
+            self.hetero = v;
+        }
+        if let Some(v) = get("devices").and_then(|v| v.as_i64()) {
+            self.devices = v.max(1) as usize;
+        }
+        if let Some(v) = get("rounds").and_then(|v| v.as_i64()) {
+            self.rounds = v.max(1) as usize;
+        }
+        if let Some(v) = get("alpha").and_then(|v| v.as_f64()) {
+            self.alpha = v as f32;
+        }
+        if let Some(v) = get("beta").and_then(|v| v.as_f64()) {
+            self.beta = v as f32;
+        }
+        if let Some(v) = get("seed").and_then(|v| v.as_i64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = get("data_scale").and_then(|v| v.as_f64()) {
+            self.data_scale = v;
+        }
+    }
+
+    /// Load a spec from a TOML file (starting from the cf10/iid
+    /// default).
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let map = toml::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        spec.apply_toml(&map);
+        Ok(spec)
+    }
+}
+
+/// The eight rows of Table II (homogeneous).
+pub fn table2_rows() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec::new(DatasetKind::Cf10, SplitKind::IidLarge, false),
+        ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false),
+        ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false),
+        ExperimentSpec::new(DatasetKind::Cf100, SplitKind::IidLarge, false),
+        ExperimentSpec::new(DatasetKind::Cf100, SplitKind::Iid, false),
+        ExperimentSpec::new(DatasetKind::Cf100, SplitKind::NonIid, false),
+        ExperimentSpec::new(DatasetKind::Wt2, SplitKind::IidLarge, false),
+        ExperimentSpec::new(DatasetKind::Wt2, SplitKind::Iid, false),
+    ]
+}
+
+/// The five rows of Table III (heterogeneous 100%–50%).
+pub fn table3_rows() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, true),
+        ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, true),
+        ExperimentSpec::new(DatasetKind::Cf100, SplitKind::Iid, true),
+        ExperimentSpec::new(DatasetKind::Cf100, SplitKind::NonIid, true),
+        ExperimentSpec::new(DatasetKind::Wt2, SplitKind::Iid, true),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(DatasetKind::parse("CF10"), Some(DatasetKind::Cf10));
+        assert_eq!(DatasetKind::parse("wikitext2"), Some(DatasetKind::Wt2));
+        assert_eq!(DatasetKind::parse("mnist"), None);
+        assert_eq!(SplitKind::parse("Non-IID"), Some(SplitKind::NonIid));
+        assert_eq!(SplitKind::parse("iid-100"), Some(SplitKind::IidLarge));
+    }
+
+    #[test]
+    fn paper_betas() {
+        assert_eq!(DatasetKind::Cf10.paper_beta(), 0.1);
+        assert_eq!(DatasetKind::Cf100.paper_beta(), 0.25);
+        assert_eq!(DatasetKind::Wt2.paper_beta(), 1.25);
+    }
+
+    #[test]
+    fn default_system_sizes_match_paper() {
+        assert_eq!(
+            ExperimentSpec::new(DatasetKind::Cf10, SplitKind::IidLarge, false).devices,
+            100
+        );
+        assert_eq!(
+            ExperimentSpec::new(DatasetKind::Wt2, SplitKind::IidLarge, false).devices,
+            80
+        );
+        assert_eq!(
+            ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false).devices,
+            10
+        );
+    }
+
+    #[test]
+    fn table_shapes() {
+        assert_eq!(table2_rows().len(), 8);
+        assert_eq!(table3_rows().len(), 5);
+        assert!(table3_rows().iter().all(|s| s.hetero));
+    }
+
+    #[test]
+    fn build_problem_smoke() {
+        let spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false)
+            .scaled(0.05, 5);
+        let p = spec.build_problem();
+        assert_eq!(p.num_devices(), 10);
+        assert!(p.dim() > 0);
+        let theta = p.init_theta(1);
+        let mut g = vec![0.0; p.dim()];
+        let loss = p.local_grad(0, &theta, &mut g);
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let text = "[experiment]\ndataset = \"wt2\"\nrounds = 42\nbeta = 0.5\n";
+        let map = toml::parse(text).unwrap();
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        spec.apply_toml(&map);
+        assert_eq!(spec.dataset, DatasetKind::Wt2);
+        assert_eq!(spec.rounds, 42);
+        assert_eq!(spec.beta, 0.5);
+    }
+
+    #[test]
+    fn row_labels() {
+        let s = ExperimentSpec::new(DatasetKind::Wt2, SplitKind::IidLarge, false);
+        assert_eq!(s.row_label(), "WT-2 IID-80");
+    }
+}

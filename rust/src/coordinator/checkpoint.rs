@@ -1,0 +1,254 @@
+//! Run checkpointing: persist and restore the full coordinator state
+//! (global model, per-device lazy-aggregation state, counters) so long
+//! table sweeps and the e2e training run survive interruption.
+//!
+//! Format: a JSON header line (versioned, with dims for validation)
+//! followed by raw little-endian `f32` sections. Written atomically
+//! (temp file + rename).
+
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Serializable snapshot of a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Format version.
+    pub version: u32,
+    /// Next round index to execute.
+    pub round: usize,
+    /// Global model `θ`.
+    pub theta: Vec<f32>,
+    /// Previous-round model (for `‖θᵏ − θ^{k−1}‖²`).
+    pub prev_theta: Vec<f32>,
+    /// Server direction / running `q̄`.
+    pub direction: Vec<f32>,
+    /// Per-device stored reference vectors `q_m` (gathered space).
+    pub device_q: Vec<Vec<f32>>,
+    /// Per-device `(uploads, skips, prev_err_sq)`.
+    pub device_stats: Vec<(u64, u64, f64)>,
+    /// Model-difference history, most recent first.
+    pub diff_history: Vec<f64>,
+    /// Cumulative uplink bits.
+    pub cum_bits: u64,
+    /// Loss estimates.
+    pub init_loss: f64,
+    pub prev_loss: f64,
+}
+
+const VERSION: u32 = 1;
+
+impl Checkpoint {
+    /// Write atomically to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = obj(vec![
+            ("version", Json::Num(VERSION as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("dim", Json::Num(self.theta.len() as f64)),
+            ("devices", Json::Num(self.device_q.len() as f64)),
+            (
+                "supports",
+                Json::Arr(
+                    self.device_q
+                        .iter()
+                        .map(|q| Json::Num(q.len() as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "stats",
+                Json::Arr(
+                    self.device_stats
+                        .iter()
+                        .map(|&(u, s, e)| {
+                            Json::Arr(vec![
+                                Json::Num(u as f64),
+                                Json::Num(s as f64),
+                                Json::Num(e),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "diff_history",
+                Json::Arr(self.diff_history.iter().map(|&d| Json::Num(d)).collect()),
+            ),
+            ("cum_bits", Json::Num(self.cum_bits as f64)),
+            ("init_loss", Json::Num(self.init_loss)),
+            ("prev_loss", Json::Num(self.prev_loss)),
+        ]);
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            writeln!(f, "{header}")?;
+            write_f32s(&mut f, &self.theta)?;
+            write_f32s(&mut f, &self.prev_theta)?;
+            write_f32s(&mut f, &self.direction)?;
+            for q in &self.device_q {
+                write_f32s(&mut f, q)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and validate from `path`.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut all = Vec::new();
+        f.read_to_end(&mut all)?;
+        let nl = all
+            .iter()
+            .position(|&b| b == b'\n')
+            .context("checkpoint missing header line")?;
+        let header = Json::parse(std::str::from_utf8(&all[..nl])?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let version = header.get("version").as_usize().unwrap_or(0) as u32;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let dim = header.get("dim").as_usize().context("dim")?;
+        let devices = header.get("devices").as_usize().context("devices")?;
+        let supports: Vec<usize> = header
+            .get("supports")
+            .as_arr()
+            .context("supports")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        if supports.len() != devices {
+            bail!("supports/devices mismatch");
+        }
+        let mut body = &all[nl + 1..];
+        let mut take = |n: usize| -> Result<Vec<f32>> {
+            let bytes = n * 4;
+            if body.len() < bytes {
+                bail!("checkpoint body truncated");
+            }
+            let (head, rest) = body.split_at(bytes);
+            body = rest;
+            Ok(head
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        };
+        let theta = take(dim)?;
+        let prev_theta = take(dim)?;
+        let direction = take(dim)?;
+        let mut device_q = Vec::with_capacity(devices);
+        for &s in &supports {
+            device_q.push(take(s)?);
+        }
+        if !body.is_empty() {
+            bail!("trailing bytes in checkpoint");
+        }
+        let device_stats = header
+            .get("stats")
+            .as_arr()
+            .context("stats")?
+            .iter()
+            .map(|v| {
+                (
+                    v.at(0).as_f64().unwrap_or(0.0) as u64,
+                    v.at(1).as_f64().unwrap_or(0.0) as u64,
+                    v.at(2).as_f64().unwrap_or(0.0),
+                )
+            })
+            .collect();
+        Ok(Checkpoint {
+            version,
+            round: header.get("round").as_usize().context("round")?,
+            theta,
+            prev_theta,
+            direction,
+            device_q,
+            device_stats,
+            diff_history: header
+                .get("diff_history")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect(),
+            cum_bits: header.get("cum_bits").as_f64().unwrap_or(0.0) as u64,
+            init_loss: header.get("init_loss").as_f64().unwrap_or(f64::NAN),
+            prev_loss: header.get("prev_loss").as_f64().unwrap_or(f64::NAN),
+        })
+    }
+}
+
+fn write_f32s(f: &mut std::fs::File, xs: &[f32]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            version: VERSION,
+            round: 42,
+            theta: vec![1.0, -2.5, 3.25],
+            prev_theta: vec![0.5, -2.0, 3.0],
+            direction: vec![0.1, 0.2, 0.3],
+            device_q: vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0]],
+            device_stats: vec![(10, 2, 0.125), (8, 4, 0.5)],
+            diff_history: vec![0.5, 0.25],
+            cum_bits: 123_456,
+            init_loss: 2.5,
+            prev_loss: 0.75,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("aquila_ckpt_test");
+        let path = dir.join("run.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("aquila_ckpt_trunc");
+        let path = dir.join("run.ckpt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 4);
+        std::fs::write(&path, bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let dir = std::env::temp_dir().join("aquila_ckpt_ver");
+        let path = dir.join("run.ckpt");
+        sample().save(&path).unwrap();
+        let text = std::fs::read(&path).unwrap();
+        let s = String::from_utf8_lossy(&text).replace("\"version\":1", "\"version\":9");
+        std::fs::write(&path, s).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/x.ckpt")).is_err());
+    }
+}

@@ -1,0 +1,577 @@
+//! The federated coordinator: Algorithm 1's outer loop.
+//!
+//! Owns the global model `θ`, the per-device states, the simulated
+//! uplink channel, and the round protocol:
+//!
+//! 1. broadcast `θᵏ` (plus `‖θᵏ − θ^{k−1}‖²` and the loss estimates the
+//!    baselines' rules need);
+//! 2. every device computes its full-batch local gradient
+//!    `∇f_m(θᵏ)` (in parallel across a thread pool), gathers it through
+//!    its HeteroFL capacity mask, and runs the algorithm's client step;
+//! 3. uploads cross the byte-counting channel (with optional fault
+//!    injection) and are decoded server-side;
+//! 4. the algorithm's server fold produces the step direction and the
+//!    server updates `θ^{k+1} = θᵏ − α·direction` (eq. 5 / Algorithm 1
+//!    line 14);
+//! 5. metrics are recorded (bits, uploads, levels, losses, periodic
+//!    held-out evaluation).
+
+pub mod checkpoint;
+
+use crate::algorithms::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use checkpoint::Checkpoint;
+use crate::hetero::CapacityMask;
+use crate::metrics::{RoundRecord, RunTrace};
+use crate::problems::GradientSource;
+use crate::quant::levels::DadaquantSchedule;
+use crate::transport::wire::Payload;
+use crate::transport::{Channel, FaultSpec};
+use crate::util::pool::parallel_for_each_mut;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::vecmath::{axpy, diff_norm2_sq};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Runtime configuration of one FL run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Server learning rate `α`.
+    pub alpha: f32,
+    /// AQUILA tuning factor `β` (eq. 8).
+    pub beta: f32,
+    /// Number of communication rounds `K`.
+    pub rounds: usize,
+    /// Evaluate held-out metrics every this many rounds (0 = only at
+    /// the end).
+    pub eval_every: usize,
+    /// Base seed (device RNG streams, θ⁰, MARINA coin, sampling).
+    pub seed: u64,
+    /// Worker threads for device gradient computation (0 = auto).
+    pub threads: usize,
+    /// MARINA synchronization probability.
+    pub marina_p_sync: f64,
+    /// DAdaQuant cohort size (None = all devices participate — the
+    /// setting of every non-DAdaQuant algorithm).
+    pub sample_k: Option<usize>,
+    /// Depth of the model-difference history broadcast (LAQ/LENA `D`).
+    pub history_depth: usize,
+    /// Uplink fault injection.
+    pub faults: FaultSpec,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.1,
+            beta: 0.25,
+            rounds: 100,
+            eval_every: 10,
+            seed: 17,
+            threads: 0,
+            marina_p_sync: 0.1,
+            sample_k: None,
+            history_depth: 10,
+            faults: FaultSpec::none(),
+        }
+    }
+}
+
+/// Per-device slot: algorithm state + reusable buffers + per-round
+/// staging, kept together so one thread owns the whole cache line set.
+struct DeviceSlot {
+    state: DeviceState,
+    grad_full: Vec<f32>,
+    grad_gathered: Vec<f32>,
+    staged: Option<Payload>,
+    staged_level: Option<u8>,
+    loss: f64,
+    participated: bool,
+}
+
+/// The coordinator. See module docs.
+pub struct Coordinator<'a> {
+    problem: &'a dyn GradientSource,
+    algo: &'a dyn Algorithm,
+    cfg: RunConfig,
+    slots: Vec<DeviceSlot>,
+    server: ServerAgg,
+    theta: Vec<f32>,
+    prev_theta: Vec<f32>,
+    channel: Channel,
+    diff_history: VecDeque<f64>,
+    init_loss: f64,
+    prev_loss: f64,
+    coin_rng: Xoshiro256pp,
+    dadaquant: DadaquantSchedule,
+    threads: usize,
+    cum_bits: u64,
+}
+
+impl<'a> Coordinator<'a> {
+    /// Homogeneous setup: every device holds the full model.
+    pub fn new(problem: &'a dyn GradientSource, algo: &'a dyn Algorithm, cfg: RunConfig) -> Self {
+        let d = problem.dim();
+        let m = problem.num_devices();
+        let full = Arc::new(CapacityMask::full(d));
+        let masks = vec![full; m];
+        Self::with_masks(problem, algo, masks, cfg)
+    }
+
+    /// Heterogeneous setup with explicit per-device capacity masks
+    /// (Table III / Figure 3; see `crate::hetero::half_half_masks`).
+    pub fn with_masks(
+        problem: &'a dyn GradientSource,
+        algo: &'a dyn Algorithm,
+        masks: Vec<Arc<CapacityMask>>,
+        cfg: RunConfig,
+    ) -> Self {
+        let d = problem.dim();
+        let m = problem.num_devices();
+        assert_eq!(masks.len(), m, "need one mask per device");
+        for mask in &masks {
+            assert_eq!(mask.full_dim, d);
+        }
+        let theta = problem.init_theta(cfg.seed);
+        let slots = masks
+            .iter()
+            .enumerate()
+            .map(|(i, mask)| DeviceSlot {
+                state: DeviceState::new(i, mask.clone(), cfg.seed),
+                grad_full: vec![0.0; d],
+                grad_gathered: Vec::with_capacity(mask.support()),
+                staged: None,
+                staged_level: None,
+                loss: 0.0,
+                participated: false,
+            })
+            .collect();
+        let threads = if cfg.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            cfg.threads
+        };
+        Self {
+            problem,
+            algo,
+            server: ServerAgg::new(d, masks),
+            slots,
+            prev_theta: theta.clone(),
+            theta,
+            channel: Channel::new(cfg.faults.clone()),
+            diff_history: VecDeque::with_capacity(cfg.history_depth + 1),
+            init_loss: f64::NAN,
+            prev_loss: f64::NAN,
+            coin_rng: Xoshiro256pp::stream(cfg.seed, 0xC011),
+            dadaquant: DadaquantSchedule::new(2, 3, 16),
+            threads,
+            cfg,
+            cum_bits: 0,
+        }
+    }
+
+    /// Current global model.
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Cumulative uplink bits so far.
+    pub fn total_bits(&self) -> u64 {
+        self.channel.total_bits
+    }
+
+    /// Per-device upload/skip counters.
+    pub fn device_stats(&self) -> Vec<(u64, u64)> {
+        self.slots
+            .iter()
+            .map(|s| (s.state.uploads, s.state.skips))
+            .collect()
+    }
+
+    /// Snapshot the run state (resume with [`Coordinator::restore`]).
+    /// `next_round` is the index of the first round not yet executed.
+    pub fn snapshot(&self, next_round: usize) -> Checkpoint {
+        Checkpoint {
+            version: 1,
+            round: next_round,
+            theta: self.theta.clone(),
+            prev_theta: self.prev_theta.clone(),
+            direction: self.server.direction.clone(),
+            device_q: self.slots.iter().map(|s| s.state.q_prev.clone()).collect(),
+            device_stats: self
+                .slots
+                .iter()
+                .map(|s| (s.state.uploads, s.state.skips, s.state.prev_err_sq))
+                .collect(),
+            diff_history: self.diff_history.iter().copied().collect(),
+            cum_bits: self.cum_bits,
+            init_loss: self.init_loss,
+            prev_loss: self.prev_loss,
+        }
+    }
+
+    /// Restore a snapshot produced by [`Coordinator::snapshot`] on a
+    /// coordinator built with the same problem/masks/config. Returns the
+    /// next round index to execute.
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            ckpt.theta.len() == self.theta.len(),
+            "checkpoint dim {} != model dim {}",
+            ckpt.theta.len(),
+            self.theta.len()
+        );
+        anyhow::ensure!(
+            ckpt.device_q.len() == self.slots.len(),
+            "checkpoint device count mismatch"
+        );
+        for (slot, q) in self.slots.iter().zip(&ckpt.device_q) {
+            anyhow::ensure!(
+                slot.state.q_prev.len() == q.len(),
+                "device {} support mismatch",
+                slot.state.id
+            );
+        }
+        self.theta.copy_from_slice(&ckpt.theta);
+        self.prev_theta.copy_from_slice(&ckpt.prev_theta);
+        self.server.direction.copy_from_slice(&ckpt.direction);
+        for (slot, (q, &(u, s, e))) in self
+            .slots
+            .iter_mut()
+            .zip(ckpt.device_q.iter().zip(&ckpt.device_stats))
+        {
+            slot.state.q_prev.copy_from_slice(q);
+            slot.state.uploads = u;
+            slot.state.skips = s;
+            slot.state.prev_err_sq = e;
+        }
+        self.diff_history = ckpt.diff_history.iter().copied().collect();
+        self.cum_bits = ckpt.cum_bits;
+        self.init_loss = ckpt.init_loss;
+        self.prev_loss = ckpt.prev_loss;
+        Ok(ckpt.round)
+    }
+
+    fn build_ctx(&mut self, round: usize) -> RoundCtx {
+        let m = self.slots.len();
+        let model_diff_sq = self.diff_history.front().copied().unwrap_or(0.0);
+        let selected = self.cfg.sample_k.map(|k| {
+            let k = k.min(m);
+            self.coin_rng.sample_indices(m, k)
+        });
+        let dadaquant_level = if round == 0 || self.prev_loss.is_nan() {
+            self.dadaquant.level()
+        } else {
+            self.dadaquant.observe(self.prev_loss)
+        };
+        RoundCtx {
+            round,
+            num_devices: m,
+            alpha: self.cfg.alpha,
+            beta: self.cfg.beta,
+            model_diff_sq,
+            model_diff_history: self.diff_history.iter().copied().collect(),
+            init_loss: if self.init_loss.is_nan() { 1.0 } else { self.init_loss },
+            prev_loss: if self.prev_loss.is_nan() { 1.0 } else { self.prev_loss },
+            marina_sync: round == 0 || self.coin_rng.bernoulli(self.cfg.marina_p_sync),
+            selected,
+            dadaquant_level,
+        }
+    }
+
+    /// Execute one communication round; returns its record.
+    pub fn run_round(&mut self, round: usize) -> RoundRecord {
+        let ctx = self.build_ctx(round);
+        let theta = &self.theta;
+        let problem = self.problem;
+        let algo = self.algo;
+
+        // ---- device phase (parallel) ---------------------------------
+        parallel_for_each_mut(&mut self.slots, self.threads, |i, slot| {
+            slot.staged = None;
+            slot.staged_level = None;
+            slot.participated = ctx.is_selected(i);
+            if !slot.participated {
+                // Unselected devices (DAdaQuant sampling) do not even
+                // compute this round.
+                let up = algo.client_step(&mut slot.state, &[], &ctx);
+                debug_assert!(up.payload.is_none());
+                return;
+            }
+            slot.loss = problem.local_grad(i, theta, &mut slot.grad_full);
+            slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
+            let ClientUpload { payload, level } =
+                algo.client_step(&mut slot.state, &slot.grad_gathered, &ctx);
+            slot.staged = payload;
+            slot.staged_level = level;
+        });
+
+        // ---- transport phase ------------------------------------------
+        let uploads: Vec<(usize, Payload)> = self
+            .slots
+            .iter_mut()
+            .filter_map(|s| s.staged.take().map(|p| (s.state.id, p)))
+            .collect();
+        let upload_count = uploads.len();
+        let (delivered, stats) = self.channel.transmit(uploads);
+
+        // ---- server phase ---------------------------------------------
+        self.algo.server_fold(&mut self.server, &delivered, &ctx);
+        self.prev_theta.copy_from_slice(&self.theta);
+        axpy(-self.cfg.alpha, &self.server.direction, &mut self.theta);
+        let diff = diff_norm2_sq(&self.theta, &self.prev_theta);
+        self.diff_history.push_front(diff);
+        while self.diff_history.len() > self.cfg.history_depth {
+            self.diff_history.pop_back();
+        }
+
+        // ---- metrics ----------------------------------------------------
+        let participants: Vec<&DeviceSlot> =
+            self.slots.iter().filter(|s| s.participated).collect();
+        let train_loss = if participants.is_empty() {
+            self.prev_loss
+        } else {
+            participants.iter().map(|s| s.loss).sum::<f64>() / participants.len() as f64
+        };
+        if round == 0 {
+            self.init_loss = train_loss;
+        }
+        self.prev_loss = train_loss;
+        let levels: Vec<u8> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.staged_level)
+            .collect();
+        let mean_level = if levels.is_empty() {
+            0.0
+        } else {
+            levels.iter().map(|&b| b as f64).sum::<f64>() / levels.len() as f64
+        };
+        self.cum_bits += stats.uplink_bits;
+        let do_eval = (self.cfg.eval_every > 0 && round.is_multiple_of(self.cfg.eval_every))
+            || round + 1 == self.cfg.rounds;
+        let (eval_loss, accuracy, perplexity) = if do_eval {
+            let ev = self.problem.eval(&self.theta);
+            (Some(ev.loss), ev.accuracy, ev.perplexity)
+        } else {
+            (None, None, None)
+        };
+        RoundRecord {
+            round,
+            bits_up: stats.uplink_bits,
+            cum_bits: self.cum_bits,
+            uploads: upload_count,
+            skips: participants.len().saturating_sub(upload_count),
+            mean_level,
+            train_loss,
+            eval_loss,
+            accuracy,
+            perplexity,
+        }
+    }
+
+    /// Run the full configured horizon, producing a trace.
+    pub fn run(&mut self, dataset: &str, split: &str) -> RunTrace {
+        let mut trace = RunTrace {
+            algorithm: self.algo.name().to_string(),
+            dataset: dataset.to_string(),
+            split: split.to_string(),
+            rounds: Vec::with_capacity(self.cfg.rounds),
+        };
+        for k in 0..self.cfg.rounds {
+            trace.rounds.push(self.run_round(k));
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{aquila::Aquila, fedavg::FedAvg, qsgd::QsgdAlgo};
+    use crate::problems::quadratic::QuadraticProblem;
+    use crate::problems::GradientSource;
+
+    fn quick_cfg(rounds: usize) -> RunConfig {
+        RunConfig {
+            alpha: 0.2,
+            beta: 0.1,
+            rounds,
+            eval_every: 0,
+            seed: 3,
+            threads: 2,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn fedavg_converges_on_quadratic() {
+        let p = QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 1);
+        let algo = FedAvg;
+        let mut c = Coordinator::new(&p, &algo, quick_cfg(60));
+        let trace = c.run("quad", "iid");
+        let gap0 = trace.rounds[0].train_loss - p.optimum_value();
+        let gap = trace.final_train_loss() - p.optimum_value();
+        assert!(gap < gap0 * 1e-3, "no convergence: {gap0} -> {gap}");
+    }
+
+    #[test]
+    fn aquila_converges_and_skips() {
+        let p = QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 2);
+        let algo = Aquila::new(0.25);
+        let mut c = Coordinator::new(&p, &algo, quick_cfg(80));
+        let trace = c.run("quad", "iid");
+        let gap = trace.final_train_loss() - p.optimum_value();
+        assert!(gap < 1e-2, "gap {gap}");
+        assert!(trace.total_skips() > 0, "β=0.25 should skip sometimes");
+    }
+
+    #[test]
+    fn aquila_beats_fedavg_bits_on_quadratic() {
+        let p = QuadraticProblem::new(64, 10, 0.5, 2.0, 0.5, 3);
+        let fed = FedAvg;
+        let aq = Aquila::new(0.25);
+        let t_fed = Coordinator::new(&p, &fed, quick_cfg(60)).run("q", "iid");
+        let t_aq = Coordinator::new(&p, &aq, quick_cfg(60)).run("q", "iid");
+        // Both converge...
+        assert!(t_fed.final_train_loss() - p.optimum_value() < 1e-2);
+        assert!(t_aq.final_train_loss() - p.optimum_value() < 1e-2);
+        // ...but AQUILA spends far fewer bits.
+        assert!(
+            (t_aq.total_bits() as f64) < 0.5 * t_fed.total_bits() as f64,
+            "{} vs {}",
+            t_aq.total_bits(),
+            t_fed.total_bits()
+        );
+    }
+
+    #[test]
+    fn bits_accounting_is_consistent() {
+        let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 4);
+        let algo = QsgdAlgo::new(8);
+        let mut c = Coordinator::new(&p, &algo, quick_cfg(10));
+        let trace = c.run("q", "iid");
+        let sum: u64 = trace.rounds.iter().map(|r| r.bits_up).sum();
+        assert_eq!(sum, trace.total_bits());
+        assert_eq!(sum, c.total_bits());
+        // QSGD transmits every device every round.
+        assert!(trace.rounds.iter().all(|r| r.uploads == 4 && r.skips == 0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5);
+        let algo = Aquila::new(0.25);
+        let t1 = Coordinator::new(&p, &algo, quick_cfg(20)).run("q", "iid");
+        let t2 = Coordinator::new(&p, &algo, quick_cfg(20)).run("q", "iid");
+        assert_eq!(t1.total_bits(), t2.total_bits());
+        assert_eq!(t1.final_train_loss(), t2.final_train_loss());
+        // Thread count must not affect results.
+        let mut cfg1 = quick_cfg(20);
+        cfg1.threads = 1;
+        let t3 = Coordinator::new(&p, &algo, cfg1).run("q", "iid");
+        assert_eq!(t1.final_train_loss(), t3.final_train_loss());
+        assert_eq!(t1.total_bits(), t3.total_bits());
+    }
+
+    #[test]
+    fn eval_cadence() {
+        let p = QuadraticProblem::new(8, 3, 0.5, 2.0, 0.5, 6);
+        let algo = FedAvg;
+        let mut cfg = quick_cfg(10);
+        cfg.eval_every = 3;
+        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        for r in &trace.rounds {
+            let expect = r.round % 3 == 0 || r.round == 9;
+            assert_eq!(r.eval_loss.is_some(), expect, "round {}", r.round);
+        }
+    }
+
+    #[test]
+    fn fault_injection_still_converges() {
+        let p = QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 7);
+        let algo = FedAvg;
+        let mut cfg = quick_cfg(120);
+        cfg.faults = FaultSpec {
+            drop_prob: 0.2,
+            seed: 9,
+        };
+        cfg.alpha = 0.1;
+        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        let gap = trace.final_train_loss() - p.optimum_value();
+        assert!(gap < 0.05, "gap {gap} under 20% drop rate");
+    }
+
+    #[test]
+    fn sampled_cohort_limits_uploads() {
+        use crate::algorithms::dadaquant::DAdaQuant;
+        let p = QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 8);
+        let algo = DAdaQuant::uniform(16);
+        let mut cfg = quick_cfg(10);
+        cfg.sample_k = Some(3);
+        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        assert!(trace.rounds.iter().all(|r| r.uploads <= 3));
+        assert!(trace.rounds.iter().all(|r| r.uploads >= 1));
+    }
+
+    #[test]
+    fn checkpoint_resume_is_exact() {
+        // Run 20 rounds straight vs 10 + snapshot/restore + 10: the
+        // deterministic parts of the trace must match exactly.
+        // (Algorithms with client RNG — QSGD — would also need the RNG
+        // stream persisted; AQUILA's client is deterministic.)
+        let p = QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 77);
+        let algo = Aquila::new(0.25);
+        let mut full = Coordinator::new(&p, &algo, quick_cfg(20));
+        let mut full_trace = Vec::new();
+        for k in 0..20 {
+            full_trace.push(full.run_round(k));
+        }
+
+        let mut first = Coordinator::new(&p, &algo, quick_cfg(20));
+        for k in 0..10 {
+            first.run_round(k);
+        }
+        let ckpt = first.snapshot(10);
+        // Round-trip through disk too.
+        let dir = std::env::temp_dir().join("aquila_coord_ckpt");
+        let path = dir.join("t.ckpt");
+        ckpt.save(&path).unwrap();
+        let loaded = crate::coordinator::checkpoint::Checkpoint::load(&path).unwrap();
+        let mut second = Coordinator::new(&p, &algo, quick_cfg(20));
+        let next = second.restore(&loaded).unwrap();
+        assert_eq!(next, 10);
+        for k in next..20 {
+            let rec = second.run_round(k);
+            assert_eq!(rec.train_loss, full_trace[k].train_loss, "round {k}");
+            assert_eq!(rec.bits_up, full_trace[k].bits_up, "round {k}");
+            assert_eq!(rec.cum_bits, full_trace[k].cum_bits, "round {k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes() {
+        let p = QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 78);
+        let p2 = QuadraticProblem::new(16, 5, 0.5, 2.0, 0.5, 78);
+        let algo = Aquila::new(0.25);
+        let c1 = Coordinator::new(&p, &algo, quick_cfg(5));
+        let ckpt = c1.snapshot(0);
+        let mut c2 = Coordinator::new(&p2, &algo, quick_cfg(5));
+        assert!(c2.restore(&ckpt).is_err());
+    }
+
+    #[test]
+    fn hetero_masks_reduce_bits() {
+        use crate::hetero::half_half_masks;
+        let p = QuadraticProblem::new(64, 8, 0.5, 2.0, 0.5, 9);
+        let algo = QsgdAlgo::new(8);
+        let full_trace = Coordinator::new(&p, &algo, quick_cfg(5)).run("q", "iid");
+        let masks = half_half_masks(&p.layout(), 8, 0.5);
+        let hetero_trace = Coordinator::with_masks(&p, &algo, masks, quick_cfg(5)).run("q", "het");
+        assert!(
+            hetero_trace.total_bits() < full_trace.total_bits(),
+            "{} vs {}",
+            hetero_trace.total_bits(),
+            full_trace.total_bits()
+        );
+    }
+}

@@ -1,0 +1,223 @@
+//! HeteroFL-style heterogeneous model capacities (paper Section V-C).
+//!
+//! In HeteroFL [27] a device with capacity ratio `r_m` trains the
+//! submodel `θ[: r_m·w, : r_m·h]` of every weight matrix (so about
+//! `r_m²·d` parameters move on the wire). The paper's heterogeneous
+//! experiments use a 100%–50% split: half the devices hold the full
+//! model, half hold `r = 0.5`.
+//!
+//! We realize capacities as **index masks over the flat parameter
+//! vector** computed from the model's [`ParamLayout`]: for each 2-D
+//! tensor the leading `ceil(r·rows) × ceil(r·cols)` block, for each 1-D
+//! tensor the leading `ceil(r·n)` prefix. Devices gather their support
+//! before quantization and the server scatter-adds after decoding — so
+//! the transmitted byte counts shrink by exactly the submodel ratio, as
+//! in the paper. (Deviation from true HeteroFL — the full-model forward
+//! still uses all coordinates; the gradient is masked — is documented in
+//! DESIGN.md §3.)
+
+use crate::problems::ParamLayout;
+use std::sync::Arc;
+
+/// A device's trainable-parameter support set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapacityMask {
+    /// Capacity ratio `r_m ∈ (0, 1]` this mask was built from.
+    pub ratio: f32,
+    /// Sorted flat indices the device trains/transmits.
+    pub indices: Vec<u32>,
+    /// Full model dimension.
+    pub full_dim: usize,
+}
+
+impl CapacityMask {
+    /// Identity mask (full-capacity device).
+    pub fn full(d: usize) -> Self {
+        Self {
+            ratio: 1.0,
+            indices: (0..d as u32).collect(),
+            full_dim: d,
+        }
+    }
+
+    /// Whether this mask is the identity.
+    pub fn is_full(&self) -> bool {
+        self.indices.len() == self.full_dim
+    }
+
+    /// Support size `|S_m|`.
+    pub fn support(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Build the HeteroFL mask at `ratio` from a layout.
+    pub fn from_layout(layout: &ParamLayout, ratio: f32) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0, "ratio must be in (0, 1]");
+        let full_dim = layout.dim();
+        if ratio >= 1.0 {
+            return Self::full(full_dim);
+        }
+        let mut indices = Vec::new();
+        for e in &layout.entries {
+            match e.shape.as_slice() {
+                [n] => {
+                    let take = ((*n as f32 * ratio).ceil() as usize).clamp(1, *n);
+                    indices.extend((0..take as u32).map(|i| e.offset as u32 + i));
+                }
+                [rows, cols] => {
+                    let tr = ((*rows as f32 * ratio).ceil() as usize).clamp(1, *rows);
+                    let tc = ((*cols as f32 * ratio).ceil() as usize).clamp(1, *cols);
+                    for r in 0..tr {
+                        let base = e.offset + r * cols;
+                        indices.extend((0..tc as u32).map(|c| base as u32 + c));
+                    }
+                }
+                shape => {
+                    // Higher-rank tensors: scale the leading dim only
+                    // (matches HeteroFL's conv-channel slicing).
+                    let lead = shape[0];
+                    let rest: usize = shape[1..].iter().product();
+                    let take = ((lead as f32 * ratio).ceil() as usize).clamp(1, lead);
+                    let start = e.offset as u32;
+                    indices.extend((0..(take * rest) as u32).map(|i| start + i));
+                }
+            }
+        }
+        indices.sort_unstable();
+        indices.dedup();
+        Self {
+            ratio,
+            indices,
+            full_dim,
+        }
+    }
+
+    /// Gather `src[full_dim] -> out[support]`.
+    pub fn gather(&self, src: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(src.len(), self.full_dim);
+        out.clear();
+        out.extend(self.indices.iter().map(|&i| src[i as usize]));
+    }
+
+    /// Scatter-add `src[support] * scale` into `dst[full_dim]`.
+    pub fn scatter_add(&self, src: &[f32], scale: f32, dst: &mut [f32]) {
+        assert_eq!(src.len(), self.indices.len());
+        assert_eq!(dst.len(), self.full_dim);
+        for (k, &i) in self.indices.iter().enumerate() {
+            dst[i as usize] += scale * src[k];
+        }
+    }
+}
+
+/// Build the paper's 100%–50% split: the first half of devices get the
+/// full model, the second half capacity `ratio` (default 0.5).
+pub fn half_half_masks(layout: &ParamLayout, m: usize, ratio: f32) -> Vec<Arc<CapacityMask>> {
+    let full = Arc::new(CapacityMask::full(layout.dim()));
+    let reduced = Arc::new(CapacityMask::from_layout(layout, ratio));
+    (0..m)
+        .map(|i| {
+            if i < m / 2 {
+                full.clone()
+            } else {
+                reduced.clone()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp_layout() -> ParamLayout {
+        ParamLayout::contiguous(&[
+            ("w1", vec![8, 6]),
+            ("b1", vec![8]),
+            ("w2", vec![4, 8]),
+            ("b2", vec![4]),
+        ])
+    }
+
+    #[test]
+    fn full_mask_is_identity() {
+        let m = CapacityMask::full(10);
+        assert!(m.is_full());
+        assert_eq!(m.support(), 10);
+        let src: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut g = Vec::new();
+        m.gather(&src, &mut g);
+        assert_eq!(g, src);
+    }
+
+    #[test]
+    fn half_ratio_takes_leading_blocks() {
+        let layout = mlp_layout();
+        let m = CapacityMask::from_layout(&layout, 0.5);
+        // w1: 4×3 block of 8×6 = 12; b1: 4 of 8; w2: 2×4 of 4×8 = 8;
+        // b2: 2 of 4. total 26.
+        assert_eq!(m.support(), 12 + 4 + 8 + 2);
+        // w1 row 0 cols 0..3 = indices 0,1,2; row 1 starts at 6.
+        assert!(m.indices.starts_with(&[0, 1, 2, 6, 7, 8]));
+        // b1 leading 4: offset 48.
+        assert!(m.indices.contains(&48) && m.indices.contains(&51));
+        assert!(!m.indices.contains(&52));
+    }
+
+    #[test]
+    fn support_close_to_r_squared_for_matrices() {
+        let layout = ParamLayout::contiguous(&[("w", vec![100, 100])]);
+        let m = CapacityMask::from_layout(&layout, 0.5);
+        assert_eq!(m.support(), 2500); // (0.5·100)² exactly
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let layout = mlp_layout();
+        let mask = CapacityMask::from_layout(&layout, 0.5);
+        let src: Vec<f32> = (0..layout.dim()).map(|i| (i as f32) * 0.5).collect();
+        let mut gathered = Vec::new();
+        mask.gather(&src, &mut gathered);
+        assert_eq!(gathered.len(), mask.support());
+        let mut dst = vec![0.0f32; layout.dim()];
+        mask.scatter_add(&gathered, 2.0, &mut dst);
+        for (i, &x) in dst.iter().enumerate() {
+            if mask.indices.contains(&(i as u32)) {
+                assert_eq!(x, src[i] * 2.0);
+            } else {
+                assert_eq!(x, 0.0, "leak outside mask at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn masks_sorted_unique_in_range() {
+        let layout = mlp_layout();
+        for ratio in [0.25f32, 0.5, 0.75, 1.0] {
+            let m = CapacityMask::from_layout(&layout, ratio);
+            assert!(m.indices.windows(2).all(|w| w[0] < w[1]));
+            assert!(m.indices.iter().all(|&i| (i as usize) < layout.dim()));
+        }
+    }
+
+    #[test]
+    fn half_half_split() {
+        let layout = mlp_layout();
+        let masks = half_half_masks(&layout, 10, 0.5);
+        assert_eq!(masks.len(), 10);
+        assert!(masks[..5].iter().all(|m| m.is_full()));
+        assert!(masks[5..].iter().all(|m| !m.is_full() && m.ratio == 0.5));
+    }
+
+    #[test]
+    fn rank3_mask_scales_leading_dim() {
+        let layout = ParamLayout::contiguous(&[("conv", vec![8, 3, 3])]);
+        let m = CapacityMask::from_layout(&layout, 0.5);
+        assert_eq!(m.support(), 4 * 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_ratio() {
+        CapacityMask::from_layout(&mlp_layout(), 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! # AQUILA — communication-efficient federated learning
+//!
+//! Reproduction of *"AQUILA: Communication Efficient Federated Learning
+//! with Adaptive Quantization in Device Selection Strategy"* (Zhao, Mao,
+//! Shi, Liu, Lan, Ding, Zhang; 2023) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L3 (this crate)** — the federated coordinator: server/device
+//!   state, the AQUILA round protocol (adaptive level selection, eq. 19;
+//!   lazy device selection, eq. 8), seven baseline algorithms, honest
+//!   byte-accounted transport, datasets, partitioners, metrics, theory
+//!   calculators and the table/figure reproduction harness.
+//! * **L2** — JAX neural models (`python/compile/model.py`) lowered AOT
+//!   to HLO text artifacts executed through PJRT (`runtime`).
+//! * **L1** — the fused Pallas quantization kernel
+//!   (`python/compile/kernels/aquila_quant.py`), mirrored bit-exactly by
+//!   [`quant::midtread`] on the Rust hot path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod algorithms;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hetero;
+pub mod metrics;
+pub mod problems;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod theory;
+pub mod transport;
+pub mod util;

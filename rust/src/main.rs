@@ -1,0 +1,271 @@
+//! `repro` — the AQUILA reproduction CLI (leader entrypoint).
+//!
+//! ```text
+//! repro table2 [--scale S] [--rounds N] [--out DIR]   Table II (homogeneous)
+//! repro table3 [--scale S] [--rounds N] [--out DIR]   Table III (heterogeneous)
+//! repro fig2   [--out DIR]                            Figure 2 series (CSV)
+//! repro fig3   [--out DIR]                            Figure 3 series (CSV)
+//! repro ablation-beta [--dataset D]                   Figures 4–5 β sweep
+//! repro run --config FILE [--algo NAME]               single configured run
+//! repro theory                                        Corollary-1/Theorem-3 numbers
+//! repro list                                          presets + algorithms
+//! ```
+
+use aquila::algorithms::{self, Algorithm};
+use aquila::config::{table2_rows, table3_rows, DatasetKind, ExperimentSpec, SplitKind};
+use aquila::metrics::bits_display;
+use aquila::repro;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = std::collections::BTreeMap::new();
+    let mut key: Option<String> = None;
+    for a in it {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".to_string());
+            }
+            key = Some(stripped.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".to_string());
+    }
+    Args { cmd, flags }
+}
+
+fn apply_common_flags(rows: &mut [ExperimentSpec], args: &Args) {
+    if let Some(s) = args.flags.get("scale").and_then(|v| v.parse::<f64>().ok()) {
+        for r in rows.iter_mut() {
+            r.data_scale = s;
+        }
+    }
+    if let Some(n) = args.flags.get("rounds").and_then(|v| v.parse::<usize>().ok()) {
+        for r in rows.iter_mut() {
+            r.rounds = n;
+        }
+    }
+    if let Some(seed) = args.flags.get("seed").and_then(|v| v.parse::<u64>().ok()) {
+        for r in rows.iter_mut() {
+            r.seed = seed;
+        }
+    }
+}
+
+fn out_dir(args: &Args, default: &str) -> PathBuf {
+    PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| default.to_string()),
+    )
+}
+
+fn algo_by_name(name: &str, beta: f32) -> Option<Box<dyn Algorithm>> {
+    match name.to_ascii_lowercase().as_str() {
+        "aquila" => Some(Box::new(algorithms::aquila::Aquila::new(beta))),
+        "qsgd" => Some(Box::new(algorithms::qsgd::QsgdAlgo::new(8))),
+        "adaquantfl" | "adaq" => Some(Box::new(algorithms::adaquantfl::AdaQuantFl::new(4, 32))),
+        "laq" => Some(Box::new(algorithms::laq::Laq::new(8, 0.8, 10))),
+        "ladaq" => Some(Box::new(algorithms::ladaq::LAdaQ::new(4, 32, 0.8, 10))),
+        "lena" => Some(Box::new(algorithms::lena::Lena::new(0.8, 10))),
+        "marina" => Some(Box::new(algorithms::marina::Marina::new(8, 0.1))),
+        "fedavg" => Some(Box::new(algorithms::fedavg::FedAvg)),
+        "dadaquant" => Some(Box::new(algorithms::dadaquant::DAdaQuant::uniform(16))),
+        _ => None,
+    }
+}
+
+fn cmd_table(which: u8, args: &Args) {
+    let mut rows = if which == 2 { table2_rows() } else { table3_rows() };
+    apply_common_flags(&mut rows, args);
+    let dir = out_dir(args, if which == 2 { "results/table2" } else { "results/table3" });
+    let title = if which == 2 {
+        "Table II — total communication bits, homogeneous"
+    } else {
+        "Table III — total communication bits, heterogeneous (100%-50%)"
+    };
+    repro::run_table(title, &rows, Some(&dir));
+    println!("\ntraces written to {}", dir.display());
+}
+
+fn cmd_fig(which: u8, args: &Args) {
+    // Figures 2/3 plot the M = 10 rows; the CSV traces (loss vs
+    // cumulative bits; bits per epoch vs epoch) are the series.
+    let mut rows: Vec<ExperimentSpec> = if which == 2 {
+        table2_rows()
+            .into_iter()
+            .filter(|r| r.split != SplitKind::IidLarge)
+            .collect()
+    } else {
+        table3_rows()
+    };
+    apply_common_flags(&mut rows, args);
+    let dir = out_dir(args, if which == 2 { "results/fig2" } else { "results/fig3" });
+    let title = if which == 2 {
+        "Figure 2 series — homogeneous"
+    } else {
+        "Figure 3 series — heterogeneous"
+    };
+    repro::run_table(title, &rows, Some(&dir));
+    println!(
+        "\nper-round series (loss vs bits, bits vs epoch) in {}",
+        dir.display()
+    );
+}
+
+fn cmd_ablation(args: &Args) {
+    let betas: Vec<f32> = args
+        .flags
+        .get("betas")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![0.0, 0.1, 0.25, 0.5, 1.25, 2.5, 5.0]);
+    let datasets: Vec<DatasetKind> = match args.flags.get("dataset").map(|s| s.as_str()) {
+        Some(d) => vec![DatasetKind::parse(d).expect("unknown dataset")],
+        None => vec![DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2],
+    };
+    let dir = out_dir(args, "results/ablation");
+    for ds in datasets {
+        let mut spec = ExperimentSpec::new(ds, SplitKind::Iid, false);
+        if let Some(s) = args.flags.get("scale").and_then(|v| v.parse().ok()) {
+            spec.data_scale = s;
+        }
+        if let Some(n) = args.flags.get("rounds").and_then(|v| v.parse().ok()) {
+            spec.rounds = n;
+        }
+        println!("\n=== Figure 4/5 — β ablation on {} ===", ds.name());
+        println!(
+            "{:>8} {:>12} {:>12} {:>10} {:>8}",
+            "beta", "final", "bits(Gb)", "uploads", "skip%"
+        );
+        for (beta, trace) in repro::ablation_beta(&spec, &betas) {
+            let total = trace.total_uploads() + trace.total_skips();
+            let skip_pct = 100.0 * trace.total_skips() as f64 / total.max(1) as f64;
+            println!(
+                "{beta:>8.2} {:>12} {:>12} {:>10} {skip_pct:>7.1}%",
+                repro::metric_display(&trace),
+                bits_display(trace.total_bits()),
+                trace.total_uploads(),
+            );
+            let fname = format!(
+                "{}_beta{beta}.csv",
+                ds.name().to_lowercase().replace('-', "")
+            );
+            trace.write_csv(&dir.join(fname)).expect("write csv");
+        }
+    }
+    println!("\nseries written to {}", dir.display());
+}
+
+fn cmd_run(args: &Args) -> ExitCode {
+    let Some(cfg_path) = args.flags.get("config") else {
+        eprintln!("repro run requires --config FILE");
+        return ExitCode::FAILURE;
+    };
+    let spec = match ExperimentSpec::from_file(std::path::Path::new(cfg_path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let algo_name = args
+        .flags
+        .get("algo")
+        .map(|s| s.as_str())
+        .unwrap_or("aquila");
+    let Some(algo) = algo_by_name(algo_name, spec.beta) else {
+        eprintln!("unknown algorithm '{algo_name}'");
+        return ExitCode::FAILURE;
+    };
+    println!(
+        "running {} on {} ({} devices, {} rounds, α={}, β={})",
+        algo.name(),
+        spec.row_label(),
+        spec.devices,
+        spec.rounds,
+        spec.alpha,
+        spec.beta
+    );
+    let trace = repro::run_cell(&spec, algo.as_ref());
+    println!("{}", trace.summary_json());
+    if let Some(out) = args.flags.get("out") {
+        trace
+            .write_csv(std::path::Path::new(out))
+            .expect("write csv");
+        println!("trace written to {out}");
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_theory() {
+    use aquila::theory;
+    // The paper's worked hyperparameter example (after Corollary 2).
+    let (l, alpha, beta, gamma, mu) = (2.5, 0.1, 0.25, 2.0, 0.5);
+    println!(
+        "Corollary 1 condition L/2 - 1/(2α) + βγ/α ≤ 0 with (L={l}, α={alpha}, β={beta}, γ={gamma}):"
+    );
+    println!(
+        "  satisfied = {}",
+        theory::corollary1_condition(l, alpha, beta, gamma)
+    );
+    println!(
+        "  max feasible β = {:.4}",
+        theory::max_feasible_beta(l, alpha, gamma)
+    );
+    let k_nc = theory::corollary1_rounds(1.0, 0.0, 0.01, alpha, beta, gamma, 1e-3);
+    println!("Corollary 1 rounds to ‖∇f‖² ≤ 1e-3 (f(θ¹)−f* = 1): K = {k_nc:.0}");
+    let k_pl = theory::theorem3_rounds(1.0, 0.0, 0.01, alpha, l, mu, 1e-6);
+    let omega1 = 1.0 + (1.0 / (2.0 * alpha) - l / 2.0) * 0.01;
+    let k_lag = theory::lag_rounds(omega1, alpha, mu, 10.0, 0.05, 1e-6);
+    println!("Theorem 3 (PL μ={mu}) rounds to ε=1e-6: K_AQUILA = {k_pl:.0}, K_LAG = {k_lag:.0}");
+}
+
+fn cmd_list() {
+    println!("Table II rows:");
+    for r in table2_rows() {
+        println!(
+            "  {:<18} M={:<4} rounds={:<5} α={:<5} β={}",
+            r.row_label(),
+            r.devices,
+            r.rounds,
+            r.alpha,
+            r.beta
+        );
+    }
+    println!("Table III rows (heterogeneous):");
+    for r in table3_rows() {
+        println!("  {:<18} M={:<4}", r.row_label(), r.devices);
+    }
+    println!("algorithms: qsgd adaquantfl laq ladaq lena marina aquila fedavg dadaquant");
+}
+
+fn main() -> ExitCode {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "table2" => cmd_table(2, &args),
+        "table3" => cmd_table(3, &args),
+        "fig2" => cmd_fig(2, &args),
+        "fig3" => cmd_fig(3, &args),
+        "ablation-beta" => cmd_ablation(&args),
+        "run" => return cmd_run(&args),
+        "theory" => cmd_theory(),
+        "list" => cmd_list(),
+        _ => {
+            println!("AQUILA reproduction CLI — commands:");
+            println!("  table2 | table3 | fig2 | fig3 | ablation-beta | run | theory | list");
+            println!("  common flags: --scale S --rounds N --seed K --out DIR");
+        }
+    }
+    ExitCode::SUCCESS
+}

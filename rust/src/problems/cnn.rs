@@ -1,0 +1,382 @@
+//! Small convolutional network with manual backprop — the closest
+//! native-Rust analogue of the paper's ResNet-18 / MobileNet-v2
+//! workloads (the conv-net gradient structure — shared weights, spatial
+//! pooling — produces different innovation statistics than the MLP,
+//! exercised by the Table II/III CF-10 rows when configured with
+//! `cnn = true`).
+//!
+//! Architecture over `H×W` single-channel images:
+//!
+//! ```text
+//! x (H×W) → conv C filters k×k (same pad) → ReLU → 2×2 avg-pool
+//!         → flatten → dense K → softmax
+//! ```
+//!
+//! Layout: `conv_w [C×k×k] | conv_b [C] | fc_w [K×(C·H/2·W/2)] | fc_b [K]`.
+
+use super::{EvalMetrics, GradientSource, ParamLayout};
+use crate::data::ClassificationDataset;
+use crate::util::rng::Xoshiro256pp;
+
+/// See module docs.
+pub struct CnnProblem {
+    shards: Vec<ClassificationDataset>,
+    test: ClassificationDataset,
+    /// Image side (input dim must be `side²`).
+    side: usize,
+    /// Conv filters.
+    channels: usize,
+    /// Kernel size (odd).
+    ksize: usize,
+    classes: usize,
+    l2: f32,
+}
+
+impl CnnProblem {
+    pub fn new(
+        shards: Vec<ClassificationDataset>,
+        test: ClassificationDataset,
+        channels: usize,
+        ksize: usize,
+        l2: f32,
+    ) -> Self {
+        assert!(!shards.is_empty());
+        let dim_in = shards[0].dim;
+        let side = (dim_in as f64).sqrt() as usize;
+        assert_eq!(side * side, dim_in, "input dim must be a square");
+        assert!(side % 2 == 0, "side must be even for 2×2 pooling");
+        assert!(ksize % 2 == 1, "kernel must be odd");
+        let classes = shards[0].num_classes;
+        for s in &shards {
+            assert_eq!(s.dim, dim_in);
+            assert!(!s.is_empty());
+        }
+        Self {
+            shards,
+            test,
+            side,
+            channels,
+            ksize,
+            classes,
+            l2,
+        }
+    }
+
+    fn pooled(&self) -> usize {
+        (self.side / 2) * (self.side / 2)
+    }
+
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let (c, k2, k) = (self.channels, self.ksize * self.ksize, self.classes);
+        let conv_w = 0;
+        let conv_b = conv_w + c * k2;
+        let fc_w = conv_b + c;
+        let fc_b = fc_w + k * c * self.pooled();
+        (conv_w, conv_b, fc_w, fc_b)
+    }
+
+    /// Forward + optional backward for one dataset.
+    fn loss_grad_on(
+        &self,
+        data: &ClassificationDataset,
+        theta: &[f32],
+        mut grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let (s, c, kk) = (self.side, self.channels, self.ksize);
+        let half = kk / 2;
+        let ps = s / 2;
+        let pooled = ps * ps;
+        let k_out = self.classes;
+        let (o_cw, o_cb, o_fw, o_fb) = self.offsets();
+        let n = data.len();
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        let inv_n = 1.0 / n as f64;
+        let mut conv = vec![0.0f32; c * s * s]; // pre-ReLU activations
+        let mut pool = vec![0.0f32; c * pooled];
+        let mut probs = vec![0.0f64; k_out];
+        let mut dpool = vec![0.0f32; c * pooled];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for i in 0..n {
+            let x = data.row(i);
+            let y = data.labels[i];
+            // ---- conv + ReLU ------------------------------------------
+            for ch in 0..c {
+                let w = &theta[o_cw + ch * kk * kk..o_cw + (ch + 1) * kk * kk];
+                let b = theta[o_cb + ch];
+                for r in 0..s {
+                    for q in 0..s {
+                        let mut acc = b;
+                        for dr in 0..kk {
+                            let rr = r as isize + dr as isize - half as isize;
+                            if rr < 0 || rr >= s as isize {
+                                continue;
+                            }
+                            for dq in 0..kk {
+                                let qq = q as isize + dq as isize - half as isize;
+                                if qq < 0 || qq >= s as isize {
+                                    continue;
+                                }
+                                acc += w[dr * kk + dq] * x[rr as usize * s + qq as usize];
+                            }
+                        }
+                        conv[ch * s * s + r * s + q] = acc;
+                    }
+                }
+            }
+            // ---- 2×2 average pool on ReLU(conv) ------------------------
+            for ch in 0..c {
+                for r in 0..ps {
+                    for q in 0..ps {
+                        let mut acc = 0.0f32;
+                        for dr in 0..2 {
+                            for dq in 0..2 {
+                                acc += conv[ch * s * s + (2 * r + dr) * s + (2 * q + dq)]
+                                    .max(0.0);
+                            }
+                        }
+                        pool[ch * pooled + r * ps + q] = acc * 0.25;
+                    }
+                }
+            }
+            // ---- dense + softmax ---------------------------------------
+            for o in 0..k_out {
+                let row = &theta[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
+                let mut acc = theta[o_fb + o] as f64;
+                for j in 0..c * pooled {
+                    acc += row[j] as f64 * pool[j] as f64;
+                }
+                probs[o] = acc;
+            }
+            let maxl = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0;
+            for p in probs.iter_mut() {
+                *p = (*p - maxl).exp();
+                z += *p;
+            }
+            for p in probs.iter_mut() {
+                *p /= z;
+            }
+            loss += -(probs[y].max(1e-300).ln());
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                correct += 1;
+            }
+            // ---- backward ----------------------------------------------
+            if let Some(g) = grad.as_deref_mut() {
+                dpool.fill(0.0);
+                for o in 0..k_out {
+                    let coef = ((probs[o] - if o == y { 1.0 } else { 0.0 }) * inv_n) as f32;
+                    let row_w = &theta[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
+                    let grow = &mut g[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
+                    for j in 0..c * pooled {
+                        grow[j] += coef * pool[j];
+                        dpool[j] += coef * row_w[j];
+                    }
+                    g[o_fb + o] += coef;
+                }
+                // Through avg-pool and ReLU into conv weights.
+                for ch in 0..c {
+                    let gw = &mut g[o_cw + ch * kk * kk..o_cw + (ch + 1) * kk * kk];
+                    let mut gb = 0.0f32;
+                    for r in 0..ps {
+                        for q in 0..ps {
+                            let dp = dpool[ch * pooled + r * ps + q] * 0.25;
+                            if dp == 0.0 {
+                                continue;
+                            }
+                            for dr in 0..2 {
+                                for dq in 0..2 {
+                                    let rr = 2 * r + dr;
+                                    let qq = 2 * q + dq;
+                                    // ReLU gate.
+                                    if conv[ch * s * s + rr * s + qq] <= 0.0 {
+                                        continue;
+                                    }
+                                    gb += dp;
+                                    for kr in 0..kk {
+                                        let ir = rr as isize + kr as isize - half as isize;
+                                        if ir < 0 || ir >= s as isize {
+                                            continue;
+                                        }
+                                        for kq in 0..kk {
+                                            let iq =
+                                                qq as isize + kq as isize - half as isize;
+                                            if iq < 0 || iq >= s as isize {
+                                                continue;
+                                            }
+                                            gw[kr * kk + kq] +=
+                                                dp * x[ir as usize * s + iq as usize];
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    g[o_cb + ch] += gb;
+                }
+            }
+        }
+        loss *= inv_n;
+        if self.l2 > 0.0 {
+            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+            loss += 0.5 * self.l2 as f64 * reg;
+            if let Some(g) = grad.as_deref_mut() {
+                for (gi, &ti) in g.iter_mut().zip(theta) {
+                    *gi += self.l2 * ti;
+                }
+            }
+        }
+        (loss, correct)
+    }
+}
+
+impl GradientSource for CnnProblem {
+    fn dim(&self) -> usize {
+        let (c, k2, k) = (self.channels, self.ksize * self.ksize, self.classes);
+        c * k2 + c + k * c * self.pooled() + k
+    }
+
+    fn num_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        self.loss_grad_on(&self.shards[device], theta, Some(grad)).0
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        let (loss, correct) = self.loss_grad_on(&self.test, theta, None);
+        EvalMetrics {
+            loss,
+            accuracy: Some(correct as f64 / self.test.len() as f64),
+            perplexity: None,
+        }
+    }
+
+    fn init_theta(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::stream(seed, 0xC33);
+        let (o_cw, _o_cb, o_fw, o_fb) = self.offsets();
+        let mut theta = vec![0.0f32; self.dim()];
+        let s_conv = 1.0 / (self.ksize as f32);
+        for t in theta[o_cw..o_cw + self.channels * self.ksize * self.ksize].iter_mut() {
+            *t = rng.gaussian_f32(0.0, s_conv);
+        }
+        let fan_in = (self.channels * self.pooled()) as f32;
+        let s_fc = 1.0 / fan_in.sqrt();
+        for t in theta[o_fw..o_fb].iter_mut() {
+            *t = rng.gaussian_f32(0.0, s_fc);
+        }
+        theta
+    }
+
+    fn layout(&self) -> ParamLayout {
+        ParamLayout::contiguous(&[
+            ("conv_w", vec![self.channels, self.ksize, self.ksize]),
+            ("conv_b", vec![self.channels]),
+            ("fc_w", vec![self.classes, self.channels * self.pooled()]),
+            ("fc_b", vec![self.classes]),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::iid_partition;
+    use crate::data::synth::{train_test_split, MixtureSpec};
+    use crate::problems::check_gradient;
+    use crate::util::vecmath::axpy;
+
+    fn small_problem() -> CnnProblem {
+        let spec = MixtureSpec {
+            num_classes: 3,
+            dim: 36, // 6×6 images
+            num_samples: 240,
+            separation: 1.0,
+            noise: 0.8,
+            seed: 99,
+        };
+        let (train, test) = train_test_split(&spec, 0.2);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let parts = iid_partition(train.len(), 3, &mut rng);
+        let shards = parts.iter().map(|p| train.subset(p)).collect();
+        CnnProblem::new(shards, test, 4, 3, 1e-4)
+    }
+
+    #[test]
+    fn dims_and_layout() {
+        let p = small_problem();
+        // conv: 4·9 + 4 = 40; fc: 3·(4·9) + 3 = 111. total 151.
+        assert_eq!(p.dim(), 151);
+        assert_eq!(p.layout().dim(), 151);
+        assert_eq!(p.layout().entries.len(), 4);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = small_problem();
+        let theta = p.init_theta(5);
+        // Coordinates across all four blocks.
+        check_gradient(&p, 0, &theta, &[0, 17, 39, 41, 70, 150], 5e-2);
+    }
+
+    #[test]
+    fn training_improves_accuracy() {
+        let p = small_problem();
+        let mut theta = p.init_theta(6);
+        let acc0 = p.eval(&theta).accuracy.unwrap();
+        let m = p.num_devices();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut total = vec![0.0f32; p.dim()];
+        for _ in 0..150 {
+            total.fill(0.0);
+            for dev in 0..m {
+                p.local_grad(dev, &theta, &mut g);
+                axpy(1.0 / m as f32, &g, &mut total);
+            }
+            let step = total.clone();
+            axpy(-0.5, &step, &mut theta);
+        }
+        let acc = p.eval(&theta).accuracy.unwrap();
+        assert!(acc > acc0.max(0.5), "CNN failed to train: {acc0} -> {acc}");
+    }
+
+    #[test]
+    fn relu_gate_blocks_gradient() {
+        // A conv channel whose bias is very negative never activates,
+        // so its weight gradient is exactly the L2 term.
+        let p = small_problem();
+        let mut theta = p.init_theta(7);
+        let (_o_cw, o_cb, _, _) = p.offsets();
+        theta[o_cb] = -1e6; // channel 0 dead
+        let mut g = vec![0.0f32; p.dim()];
+        p.local_grad(0, &theta, &mut g);
+        for j in 0..p.ksize * p.ksize {
+            let expect = p.l2 * theta[j];
+            assert!(
+                (g[j] - expect).abs() < 1e-9,
+                "dead channel leaked gradient at {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_mask_on_cnn_layout() {
+        use crate::hetero::CapacityMask;
+        let p = small_problem();
+        let mask = CapacityMask::from_layout(&p.layout(), 0.5);
+        // conv_w leading 2 of 4 channels (rank-3 → leading dim), conv_b
+        // 2 of 4, fc rows 2 of 3 × cols 18 of 36, fc_b 2 of 3.
+        assert_eq!(mask.support(), 2 * 9 + 2 + 2 * 18 + 2);
+    }
+}

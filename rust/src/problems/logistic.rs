@@ -1,0 +1,273 @@
+//! Federated multinomial logistic regression on a partitioned
+//! classification dataset (the CIFAR-stand-in convex workload).
+//!
+//! Parameters: `W ∈ ℝ^{K×D}` then `b ∈ ℝ^K`, flattened row-major;
+//! `d = K(D+1)`. Loss: mean softmax cross-entropy over the device shard
+//! plus `λ/2 ‖θ‖²` L2 regularization (making the problem strongly convex
+//! — useful for convergence tests).
+
+use super::{EvalMetrics, GradientSource, ParamLayout};
+use crate::data::ClassificationDataset;
+use crate::util::rng::Xoshiro256pp;
+
+/// See module docs.
+pub struct LogisticProblem {
+    /// Per-device training shards.
+    shards: Vec<ClassificationDataset>,
+    /// Held-out evaluation data.
+    test: ClassificationDataset,
+    dim_in: usize,
+    classes: usize,
+    l2: f32,
+}
+
+impl LogisticProblem {
+    pub fn new(
+        shards: Vec<ClassificationDataset>,
+        test: ClassificationDataset,
+        l2: f32,
+    ) -> Self {
+        assert!(!shards.is_empty());
+        let dim_in = shards[0].dim;
+        let classes = shards[0].num_classes;
+        for s in &shards {
+            assert_eq!(s.dim, dim_in);
+            assert_eq!(s.num_classes, classes);
+            assert!(!s.is_empty(), "empty device shard");
+        }
+        assert_eq!(test.dim, dim_in);
+        Self {
+            shards,
+            test,
+            dim_in,
+            classes,
+            l2,
+        }
+    }
+
+    #[inline]
+    fn w_len(&self) -> usize {
+        self.classes * self.dim_in
+    }
+
+    /// Forward pass logits for one sample.
+    #[inline]
+    fn logits(&self, theta: &[f32], x: &[f32], out: &mut [f64]) {
+        let (k, dm) = (self.classes, self.dim_in);
+        let w = &theta[..k * dm];
+        let b = &theta[k * dm..];
+        for c in 0..k {
+            let row = &w[c * dm..(c + 1) * dm];
+            let mut acc = b[c] as f64;
+            for j in 0..dm {
+                acc += row[j] as f64 * x[j] as f64;
+            }
+            out[c] = acc;
+        }
+    }
+
+    /// Softmax in place; returns logsumexp.
+    fn softmax(logits: &mut [f64]) -> f64 {
+        let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for l in logits.iter_mut() {
+            *l = (*l - maxl).exp();
+            z += *l;
+        }
+        for l in logits.iter_mut() {
+            *l /= z;
+        }
+        maxl + z.ln()
+    }
+
+    fn loss_grad_on(
+        &self,
+        data: &ClassificationDataset,
+        theta: &[f32],
+        grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let (k, dm) = (self.classes, self.dim_in);
+        let n = data.len();
+        let mut probs = vec![0.0f64; k];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut grad = grad;
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        for i in 0..n {
+            let x = data.row(i);
+            let y = data.labels[i];
+            self.logits(theta, x, &mut probs);
+            let lse = Self::softmax(&mut probs);
+            // loss_i = lse − logit_y; probs now holds softmax.
+            // Recover logit_y from prob: log p_y = logit_y − lse.
+            let py = probs[y].max(1e-300);
+            loss += -(py.ln());
+            let _ = lse;
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                correct += 1;
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                let scale = 1.0 / n as f64;
+                for c in 0..k {
+                    let coef = (probs[c] - if c == y { 1.0 } else { 0.0 }) * scale;
+                    let row = &mut g[c * dm..(c + 1) * dm];
+                    let cf = coef as f32;
+                    for j in 0..dm {
+                        row[j] += cf * x[j];
+                    }
+                    g[k * dm + c] += cf;
+                }
+            }
+        }
+        loss /= n as f64;
+        // L2 regularization.
+        if self.l2 > 0.0 {
+            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+            loss += 0.5 * self.l2 as f64 * reg;
+            if let Some(g) = grad {
+                for (gi, &ti) in g.iter_mut().zip(theta) {
+                    *gi += self.l2 * ti;
+                }
+            }
+        }
+        (loss, correct)
+    }
+}
+
+impl GradientSource for LogisticProblem {
+    fn dim(&self) -> usize {
+        self.classes * (self.dim_in + 1)
+    }
+
+    fn num_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        self.loss_grad_on(&self.shards[device], theta, Some(grad)).0
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        let (loss, correct) = self.loss_grad_on(&self.test, theta, None);
+        EvalMetrics {
+            loss,
+            accuracy: Some(correct as f64 / self.test.len() as f64),
+            perplexity: None,
+        }
+    }
+
+    fn init_theta(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::stream(seed, 0x1091);
+        let scale = 1.0 / (self.dim_in as f32).sqrt();
+        let mut theta = vec![0.0f32; self.dim()];
+        for t in theta[..self.w_len()].iter_mut() {
+            *t = rng.gaussian_f32(0.0, scale);
+        }
+        theta
+    }
+
+    fn layout(&self) -> ParamLayout {
+        ParamLayout::contiguous(&[
+            ("w", vec![self.classes, self.dim_in]),
+            ("b", vec![self.classes]),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::iid_partition;
+    use crate::data::synth::{train_test_split, MixtureSpec};
+    use crate::problems::check_gradient;
+    use crate::util::vecmath::axpy;
+
+    fn small_problem() -> LogisticProblem {
+        let spec = MixtureSpec {
+            num_classes: 4,
+            dim: 8,
+            num_samples: 400,
+            separation: 1.5,
+            noise: 1.0,
+            seed: 77,
+        };
+        let (train, test) = train_test_split(&spec, 0.2);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let parts = iid_partition(train.len(), 4, &mut rng);
+        let shards = parts.iter().map(|p| train.subset(p)).collect();
+        LogisticProblem::new(shards, test, 1e-3)
+    }
+
+    #[test]
+    fn dims() {
+        let p = small_problem();
+        assert_eq!(p.dim(), 4 * 9);
+        assert_eq!(p.num_devices(), 4);
+        assert_eq!(p.layout().dim(), p.dim());
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = small_problem();
+        let theta = p.init_theta(3);
+        check_gradient(&p, 0, &theta, &[0, 7, 17, 35], 2e-2);
+    }
+
+    #[test]
+    fn gradient_descent_learns() {
+        let p = small_problem();
+        let mut theta = p.init_theta(5);
+        let acc0 = p.eval(&theta).accuracy.unwrap();
+        let m = p.num_devices();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut total = vec![0.0f32; p.dim()];
+        for _ in 0..150 {
+            total.fill(0.0);
+            for dev in 0..m {
+                p.local_grad(dev, &theta, &mut g);
+                axpy(1.0 / m as f32, &g, &mut total);
+            }
+            let step = total.clone();
+            axpy(-0.5, &step, &mut theta);
+        }
+        let acc = p.eval(&theta).accuracy.unwrap();
+        assert!(
+            acc > acc0 + 0.2 && acc > 0.6,
+            "training failed: {acc0} -> {acc}"
+        );
+    }
+
+    #[test]
+    fn loss_decreases_with_descent_step() {
+        let p = small_problem();
+        let theta = p.init_theta(7);
+        let mut g = vec![0.0f32; p.dim()];
+        let l0 = p.local_grad(1, &theta, &mut g);
+        let mut theta2 = theta.clone();
+        axpy(-0.1, &g, &mut theta2);
+        let mut g2 = vec![0.0f32; p.dim()];
+        let l1 = p.local_grad(1, &theta2, &mut g2);
+        assert!(l1 < l0);
+    }
+
+    #[test]
+    fn eval_reports_accuracy() {
+        let p = small_problem();
+        let theta = p.init_theta(9);
+        let ev = p.eval(&theta);
+        let acc = ev.accuracy.unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        assert!(ev.perplexity.is_none());
+        assert!(ev.loss > 0.0);
+    }
+}

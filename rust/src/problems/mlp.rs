@@ -1,0 +1,270 @@
+//! One-hidden-layer MLP with manual backprop — the non-convex
+//! classification workload (deeper stand-in for the paper's
+//! ResNet-18 / MobileNet-v2 rows; the full conv/transformer models run
+//! through the JAX/HLO path, see `crate::runtime`).
+//!
+//! Architecture: `x → W1 x + b1 → tanh → W2 h + b2 → softmax`.
+//! Layout: `W1 [H×D] | b1 [H] | W2 [K×H] | b2 [K]`, `d = H(D+1) + K(H+1)`.
+
+use super::{EvalMetrics, GradientSource, ParamLayout};
+use crate::data::ClassificationDataset;
+use crate::util::rng::Xoshiro256pp;
+
+/// See module docs.
+pub struct MlpProblem {
+    shards: Vec<ClassificationDataset>,
+    test: ClassificationDataset,
+    dim_in: usize,
+    hidden: usize,
+    classes: usize,
+    l2: f32,
+}
+
+impl MlpProblem {
+    pub fn new(
+        shards: Vec<ClassificationDataset>,
+        test: ClassificationDataset,
+        hidden: usize,
+        l2: f32,
+    ) -> Self {
+        assert!(!shards.is_empty());
+        assert!(hidden >= 1);
+        let dim_in = shards[0].dim;
+        let classes = shards[0].num_classes;
+        for s in &shards {
+            assert_eq!(s.dim, dim_in);
+            assert!(!s.is_empty());
+        }
+        Self {
+            shards,
+            test,
+            dim_in,
+            hidden,
+            classes,
+            l2,
+        }
+    }
+
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
+        let w1 = 0;
+        let b1 = w1 + h * dm;
+        let w2 = b1 + h;
+        let b2 = w2 + k * h;
+        (w1, b1, w2, b2)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn loss_grad_on(
+        &self,
+        data: &ClassificationDataset,
+        theta: &[f32],
+        mut grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        let n = data.len();
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        let mut hid = vec![0.0f64; h];
+        let mut probs = vec![0.0f64; k];
+        let mut dhid = vec![0.0f64; h];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let inv_n = 1.0 / n as f64;
+        for i in 0..n {
+            let x = data.row(i);
+            let y = data.labels[i];
+            // Forward: hidden = tanh(W1 x + b1).
+            for a in 0..h {
+                let row = &theta[o_w1 + a * dm..o_w1 + (a + 1) * dm];
+                let mut acc = theta[o_b1 + a] as f64;
+                for j in 0..dm {
+                    acc += row[j] as f64 * x[j] as f64;
+                }
+                hid[a] = acc.tanh();
+            }
+            // logits = W2 hid + b2.
+            for c in 0..k {
+                let row = &theta[o_w2 + c * h..o_w2 + (c + 1) * h];
+                let mut acc = theta[o_b2 + c] as f64;
+                for a in 0..h {
+                    acc += row[a] as f64 * hid[a];
+                }
+                probs[c] = acc;
+            }
+            // Softmax + CE.
+            let maxl = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0;
+            for p in probs.iter_mut() {
+                *p = (*p - maxl).exp();
+                z += *p;
+            }
+            for p in probs.iter_mut() {
+                *p /= z;
+            }
+            loss += -(probs[y].max(1e-300).ln());
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                correct += 1;
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                // dlogits = probs − onehot(y).
+                // Backprop into W2/b2 and hidden.
+                dhid.fill(0.0);
+                for c in 0..k {
+                    let coef = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
+                    let row_w2 = &theta[o_w2 + c * h..o_w2 + (c + 1) * h];
+                    let grow = &mut g[o_w2 + c * h..o_w2 + (c + 1) * h];
+                    for a in 0..h {
+                        grow[a] += (coef * hid[a]) as f32;
+                        dhid[a] += coef * row_w2[a] as f64;
+                    }
+                    g[o_b2 + c] += coef as f32;
+                }
+                // Through tanh: dpre = dhid * (1 − hid²).
+                for a in 0..h {
+                    let dpre = dhid[a] * (1.0 - hid[a] * hid[a]);
+                    let grow = &mut g[o_w1 + a * dm..o_w1 + (a + 1) * dm];
+                    let dp = dpre as f32;
+                    for j in 0..dm {
+                        grow[j] += dp * x[j];
+                    }
+                    g[o_b1 + a] += dp;
+                }
+            }
+        }
+        loss *= inv_n;
+        if self.l2 > 0.0 {
+            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+            loss += 0.5 * self.l2 as f64 * reg;
+            if let Some(g) = grad {
+                for (gi, &ti) in g.iter_mut().zip(theta) {
+                    *gi += self.l2 * ti;
+                }
+            }
+        }
+        (loss, correct)
+    }
+}
+
+impl GradientSource for MlpProblem {
+    fn dim(&self) -> usize {
+        let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
+        h * (dm + 1) + k * (h + 1)
+    }
+
+    fn num_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        self.loss_grad_on(&self.shards[device], theta, Some(grad)).0
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        let (loss, correct) = self.loss_grad_on(&self.test, theta, None);
+        EvalMetrics {
+            loss,
+            accuracy: Some(correct as f64 / self.test.len() as f64),
+            perplexity: None,
+        }
+    }
+
+    fn init_theta(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::stream(seed, 0x391B);
+        let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
+        let (o_w1, _o_b1, o_w2, _o_b2) = self.offsets();
+        let mut theta = vec![0.0f32; self.dim()];
+        let s1 = 1.0 / (dm as f32).sqrt();
+        for t in theta[o_w1..o_w1 + h * dm].iter_mut() {
+            *t = rng.gaussian_f32(0.0, s1);
+        }
+        let s2 = 1.0 / (h as f32).sqrt();
+        for t in theta[o_w2..o_w2 + k * h].iter_mut() {
+            *t = rng.gaussian_f32(0.0, s2);
+        }
+        theta
+    }
+
+    fn layout(&self) -> ParamLayout {
+        let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
+        ParamLayout::contiguous(&[
+            ("w1", vec![h, dm]),
+            ("b1", vec![h]),
+            ("w2", vec![k, h]),
+            ("b2", vec![k]),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::iid_partition;
+    use crate::data::synth::{train_test_split, MixtureSpec};
+    use crate::problems::check_gradient;
+    use crate::util::vecmath::axpy;
+
+    fn small_problem() -> MlpProblem {
+        let spec = MixtureSpec {
+            num_classes: 3,
+            dim: 6,
+            num_samples: 300,
+            separation: 1.5,
+            noise: 0.8,
+            seed: 88,
+        };
+        let (train, test) = train_test_split(&spec, 0.2);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let parts = iid_partition(train.len(), 3, &mut rng);
+        let shards = parts.iter().map(|p| train.subset(p)).collect();
+        MlpProblem::new(shards, test, 8, 1e-4)
+    }
+
+    #[test]
+    fn dims_and_layout() {
+        let p = small_problem();
+        // h(d+1) + k(h+1) = 8*7 + 3*9 = 83.
+        assert_eq!(p.dim(), 83);
+        assert_eq!(p.layout().dim(), 83);
+        assert_eq!(p.layout().entries.len(), 4);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = small_problem();
+        let theta = p.init_theta(3);
+        // Check coords in each parameter block.
+        check_gradient(&p, 1, &theta, &[0, 30, 48, 55, 70, 82], 3e-2);
+    }
+
+    #[test]
+    fn training_improves_accuracy() {
+        let p = small_problem();
+        let mut theta = p.init_theta(4);
+        let acc0 = p.eval(&theta).accuracy.unwrap();
+        let m = p.num_devices();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut total = vec![0.0f32; p.dim()];
+        for _ in 0..200 {
+            total.fill(0.0);
+            for dev in 0..m {
+                p.local_grad(dev, &theta, &mut g);
+                axpy(1.0 / m as f32, &g, &mut total);
+            }
+            let step = total.clone();
+            axpy(-0.5, &step, &mut theta);
+        }
+        let acc = p.eval(&theta).accuracy.unwrap();
+        assert!(acc > acc0.max(0.55), "training failed: {acc0} -> {acc}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Local objectives `f_m` computed natively in Rust.
+//!
+//! The coordinator is generic over a [`GradientSource`]: anything that
+//! can produce per-device full-batch gradients of a flat parameter
+//! vector. Two families implement it:
+//!
+//! * the pure-Rust problems in this module (quadratic with known
+//!   PL/L constants, multinomial logistic regression, a one-hidden-layer
+//!   MLP, and a bigram softmax language model) — fast enough to run the
+//!   M = 100-device, many-round sweeps behind every table and figure;
+//! * [`crate::runtime::HloGradientSource`] — neural models (MLP / CNN /
+//!   transformer) authored in JAX (L2), AOT-lowered to HLO and executed
+//!   through PJRT from the Rust hot path.
+//!
+//! The paper's FL setting (Section II) uses *full local gradients* per
+//! round — `∇f_m(θᵏ)` over the device's whole shard — which all of these
+//! implement (deterministic, so runs are bit-reproducible).
+
+pub mod cnn;
+pub mod logistic;
+pub mod mlp;
+pub mod quadratic;
+pub mod softmax_lm;
+
+/// Flat-parameter layout metadata: where each named tensor lives inside
+/// the flat `θ` vector. The HeteroFL capacity masks (`crate::hetero`) are
+/// computed from this.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamLayout {
+    pub entries: Vec<LayerSpec>,
+}
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    /// Tensor shape; `[rows, cols]` for matrices, `[n]` for vectors.
+    pub shape: Vec<usize>,
+    /// Offset into the flat vector.
+    pub offset: usize,
+}
+
+impl LayerSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl ParamLayout {
+    /// Total parameter count; equals `GradientSource::dim()`.
+    pub fn dim(&self) -> usize {
+        self.entries
+            .last()
+            .map(|e| e.offset + e.numel())
+            .unwrap_or(0)
+    }
+
+    /// Build a layout from `(name, shape)` pairs laid out contiguously.
+    pub fn contiguous(specs: &[(&str, Vec<usize>)]) -> Self {
+        let mut entries = Vec::with_capacity(specs.len());
+        let mut offset = 0;
+        for (name, shape) in specs {
+            let numel: usize = shape.iter().product();
+            entries.push(LayerSpec {
+                name: name.to_string(),
+                shape: shape.clone(),
+                offset,
+            });
+            offset += numel;
+        }
+        ParamLayout { entries }
+    }
+}
+
+/// Evaluation metrics on held-out data.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalMetrics {
+    /// Held-out mean loss.
+    pub loss: f64,
+    /// Classification accuracy in `[0, 1]` (classification tasks).
+    pub accuracy: Option<f64>,
+    /// `exp(loss)` (language-modelling tasks).
+    pub perplexity: Option<f64>,
+}
+
+/// A federated optimization problem: per-device local objectives over a
+/// shared flat parameter vector.
+pub trait GradientSource: Send + Sync {
+    /// Model dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Number of devices `M`.
+    fn num_devices(&self) -> usize;
+
+    /// Full-batch local gradient `∇f_m(θ)` written into `grad`
+    /// (len `d`); returns the local loss `f_m(θ)`.
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64;
+
+    /// Global objective `f(θ) = (1/M) Σ_m f_m(θ)`.
+    ///
+    /// Default: averages `local_grad` losses (O(M·d); problems with a
+    /// cheaper closed form override this).
+    fn global_loss(&self, theta: &[f32]) -> f64 {
+        let mut grad = vec![0.0f32; self.dim()];
+        let m = self.num_devices();
+        let mut acc = 0.0;
+        for dev in 0..m {
+            acc += self.local_grad(dev, theta, &mut grad);
+        }
+        acc / m as f64
+    }
+
+    /// Held-out evaluation.
+    fn eval(&self, theta: &[f32]) -> EvalMetrics;
+
+    /// Initial parameter vector.
+    fn init_theta(&self, seed: u64) -> Vec<f32>;
+
+    /// Flat layout (for HeteroFL masks). Default: one anonymous blob.
+    fn layout(&self) -> ParamLayout {
+        ParamLayout::contiguous(&[("theta", vec![self.dim()])])
+    }
+}
+
+/// Numerical gradient check helper used by the problems' own tests:
+/// central differences on a few random coordinates.
+#[cfg(test)]
+pub(crate) fn check_gradient<S: GradientSource>(
+    src: &S,
+    device: usize,
+    theta: &[f32],
+    coords: &[usize],
+    tol: f64,
+) {
+    let d = src.dim();
+    let mut grad = vec![0.0f32; d];
+    src.local_grad(device, theta, &mut grad);
+    let eps = 1e-3f32;
+    let mut th = theta.to_vec();
+    let mut scratch = vec![0.0f32; d];
+    for &i in coords {
+        let orig = th[i];
+        th[i] = orig + eps;
+        let fp = src.local_grad(device, &th, &mut scratch);
+        th[i] = orig - eps;
+        let fm = src.local_grad(device, &th, &mut scratch);
+        th[i] = orig;
+        let fd = (fp - fm) / (2.0 * eps as f64);
+        let g = grad[i] as f64;
+        let denom = fd.abs().max(g.abs()).max(1e-4);
+        assert!(
+            (fd - g).abs() / denom < tol,
+            "coord {i}: analytic {g} vs numeric {fd}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_contiguous_offsets() {
+        let l = ParamLayout::contiguous(&[
+            ("w1", vec![4, 3]),
+            ("b1", vec![4]),
+            ("w2", vec![2, 4]),
+        ]);
+        assert_eq!(l.entries[0].offset, 0);
+        assert_eq!(l.entries[1].offset, 12);
+        assert_eq!(l.entries[2].offset, 16);
+        assert_eq!(l.dim(), 24);
+    }
+
+    #[test]
+    fn empty_layout() {
+        let l = ParamLayout { entries: vec![] };
+        assert_eq!(l.dim(), 0);
+    }
+}

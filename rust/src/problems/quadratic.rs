@@ -1,0 +1,256 @@
+//! Quadratic federated problem with known smoothness and PL constants.
+//!
+//! Device `m` holds `f_m(θ) = ½ (θ − c_m)ᵀ diag(a_m) (θ − c_m)` with
+//! `a_m > 0`. The global objective is a strongly-convex quadratic whose
+//! exact minimizer, optimum value, smoothness constant `L` and PL
+//! constant `μ` are all available in closed form — this is the substrate
+//! for the theory tests validating Corollary 1, Theorem 3 and the
+//! hyperparameter condition `L/2 − 1/(2α) + βγ/α ≤ 0`.
+
+use super::{EvalMetrics, GradientSource, ParamLayout};
+use crate::util::rng::Xoshiro256pp;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct QuadraticProblem {
+    dim: usize,
+    m: usize,
+    /// `m × d` diagonal curvatures.
+    a: Vec<f32>,
+    /// `m × d` per-device centers.
+    c: Vec<f32>,
+}
+
+impl QuadraticProblem {
+    /// Random instance: curvatures log-uniform in `[a_min, a_max]`,
+    /// centers Gaussian with per-device offsets (heterogeneity ~ Non-IID
+    /// spread of local optima).
+    pub fn new(dim: usize, m: usize, a_min: f32, a_max: f32, spread: f32, seed: u64) -> Self {
+        assert!(a_min > 0.0 && a_max >= a_min);
+        let mut rng = Xoshiro256pp::stream(seed, 0x9AAD);
+        let mut a = Vec::with_capacity(m * dim);
+        let mut c = Vec::with_capacity(m * dim);
+        let log_lo = (a_min as f64).ln();
+        let log_hi = (a_max as f64).ln();
+        for _ in 0..m {
+            let dev_offset: f32 = rng.gaussian_f32(0.0, spread);
+            for _ in 0..dim {
+                a.push(rng.uniform(log_lo, log_hi).exp() as f32);
+                c.push(rng.gaussian_f32(dev_offset, 1.0));
+            }
+        }
+        Self { dim, m, a, c }
+    }
+
+    /// Variant where every device shares one center: `θ* = c` exactly
+    /// and `f* = 0` (used by tests that need the loss to vanish, e.g.
+    /// the AdaQuantFL level-growth pathology).
+    pub fn shared_center(dim: usize, m: usize, a_min: f32, a_max: f32, seed: u64) -> Self {
+        let mut p = Self::new(dim, m, a_min, a_max, 0.0, seed);
+        let first = p.c[..dim].to_vec();
+        for dev in 1..m {
+            p.c[dev * dim..(dev + 1) * dim].copy_from_slice(&first);
+        }
+        p
+    }
+
+    fn a_row(&self, dev: usize) -> &[f32] {
+        &self.a[dev * self.dim..(dev + 1) * self.dim]
+    }
+
+    fn c_row(&self, dev: usize) -> &[f32] {
+        &self.c[dev * self.dim..(dev + 1) * self.dim]
+    }
+
+    /// Average curvature per coordinate: `ā_i = (1/M) Σ_m a_m[i]`.
+    fn avg_curvature(&self) -> Vec<f64> {
+        let mut avg = vec![0.0f64; self.dim];
+        for dev in 0..self.m {
+            for (i, &x) in self.a_row(dev).iter().enumerate() {
+                avg[i] += x as f64;
+            }
+        }
+        for x in &mut avg {
+            *x /= self.m as f64;
+        }
+        avg
+    }
+
+    /// Global smoothness constant `L = max_i ā_i`.
+    pub fn smoothness(&self) -> f64 {
+        self.avg_curvature().into_iter().fold(0.0, f64::max)
+    }
+
+    /// PL constant `μ = min_i ā_i` (for quadratics PL = strong
+    /// convexity).
+    pub fn pl_constant(&self) -> f64 {
+        self.avg_curvature().into_iter().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Exact global minimizer: `θ*_i = Σ_m a_m[i] c_m[i] / Σ_m a_m[i]`.
+    pub fn optimum(&self) -> Vec<f32> {
+        let mut num = vec![0.0f64; self.dim];
+        let mut den = vec![0.0f64; self.dim];
+        for dev in 0..self.m {
+            let a = self.a_row(dev);
+            let c = self.c_row(dev);
+            for i in 0..self.dim {
+                num[i] += a[i] as f64 * c[i] as f64;
+                den[i] += a[i] as f64;
+            }
+        }
+        (0..self.dim).map(|i| (num[i] / den[i]) as f32).collect()
+    }
+
+    /// Optimal objective value `f(θ*)`.
+    pub fn optimum_value(&self) -> f64 {
+        let theta = self.optimum();
+        self.global_loss(&theta)
+    }
+}
+
+impl GradientSource for QuadraticProblem {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_devices(&self) -> usize {
+        self.m
+    }
+
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim);
+        assert_eq!(grad.len(), self.dim);
+        let a = self.a_row(device);
+        let c = self.c_row(device);
+        let mut loss = 0.0f64;
+        for i in 0..self.dim {
+            let diff = theta[i] - c[i];
+            grad[i] = a[i] * diff;
+            loss += 0.5 * a[i] as f64 * diff as f64 * diff as f64;
+        }
+        loss
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        EvalMetrics {
+            loss: self.global_loss(theta),
+            accuracy: None,
+            perplexity: None,
+        }
+    }
+
+    fn init_theta(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::stream(seed, 0x717A);
+        (0..self.dim).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    fn layout(&self) -> ParamLayout {
+        ParamLayout::contiguous(&[("theta", vec![self.dim])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_gradient;
+    use crate::util::vecmath::axpy;
+
+    fn problem() -> QuadraticProblem {
+        QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 42)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = problem();
+        let theta = p.init_theta(1);
+        check_gradient(&p, 3, &theta, &[0, 5, 31], 1e-3);
+    }
+
+    #[test]
+    fn optimum_has_zero_gradient() {
+        let p = problem();
+        let theta = p.optimum();
+        let mut total = vec![0.0f32; p.dim()];
+        let mut g = vec![0.0f32; p.dim()];
+        for dev in 0..p.num_devices() {
+            p.local_grad(dev, &theta, &mut g);
+            axpy(1.0 / p.num_devices() as f32, &g, &mut total);
+        }
+        let n = crate::util::vecmath::norm2(&total);
+        assert!(n < 1e-4, "grad norm at optimum: {n}");
+    }
+
+    #[test]
+    fn constants_bracket_curvature() {
+        let p = problem();
+        let (l, mu) = (p.smoothness(), p.pl_constant());
+        assert!(l >= mu);
+        assert!(mu > 0.0);
+        assert!(l <= 2.0 + 1e-6);
+        assert!(mu >= 0.5 - 1e-6);
+    }
+
+    #[test]
+    fn gradient_descent_converges_at_pl_rate() {
+        // f(θ_{k+1}) − f* ≤ (1 − αμ)(f(θ_k) − f*) for gradient descent
+        // with α ≤ 1/L — the PL inequality our Theorem-3 test relies on.
+        let p = problem();
+        let alpha = (1.0 / p.smoothness()) as f32;
+        let fstar = p.optimum_value();
+        let mut theta = p.init_theta(2);
+        let mut g = vec![0.0f32; p.dim()];
+        let mut total = vec![0.0f32; p.dim()];
+        let mut prev_gap = p.global_loss(&theta) - fstar;
+        let rate = 1.0 - alpha as f64 * p.pl_constant();
+        for _ in 0..25 {
+            total.fill(0.0);
+            for dev in 0..p.num_devices() {
+                p.local_grad(dev, &theta, &mut g);
+                axpy(1.0 / p.num_devices() as f32, &g, &mut total);
+            }
+            axpy(-alpha, &total.clone(), &mut theta);
+            let gap = p.global_loss(&theta) - fstar;
+            // Stop asserting once the gap is inside f32 arithmetic noise
+            // (θ, gradients and f* are all computed in f32).
+            if prev_gap < 1e-6 {
+                break;
+            }
+            assert!(
+                gap <= prev_gap * rate + 1e-9,
+                "PL contraction violated: {gap} > {prev_gap} * {rate}"
+            );
+            prev_gap = gap;
+        }
+        assert!(prev_gap < 1e-3);
+    }
+
+    #[test]
+    fn pl_inequality_holds_at_random_points() {
+        // ‖∇f(θ)‖² ≥ 2μ (f(θ) − f*) — Assumption 4 exactly.
+        let p = problem();
+        let mu = p.pl_constant();
+        let fstar = p.optimum_value();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut total = vec![0.0f32; p.dim()];
+        for seed in 0..5u64 {
+            let theta = p.init_theta(seed);
+            total.fill(0.0);
+            for dev in 0..p.num_devices() {
+                p.local_grad(dev, &theta, &mut g);
+                axpy(1.0 / p.num_devices() as f32, &g, &mut total);
+            }
+            let gsq = crate::util::vecmath::norm2_sq(&total);
+            let gap = p.global_loss(&theta) - fstar;
+            assert!(gsq + 1e-6 >= 2.0 * mu * gap, "PL violated: {gsq} < {}", 2.0 * mu * gap);
+        }
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let a = QuadraticProblem::new(8, 3, 0.5, 2.0, 0.1, 9);
+        let b = QuadraticProblem::new(8, 3, 0.5, 2.0, 0.1, 9);
+        assert_eq!(a.a, b.a);
+        assert_eq!(a.c, b.c);
+    }
+}

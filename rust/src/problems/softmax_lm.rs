@@ -1,0 +1,249 @@
+//! Bigram softmax language model — the native-Rust WikiText-2 stand-in
+//! workload (perplexity rows of Tables II/III).
+//!
+//! `P(next = c | prev = r) = softmax(W[r])_c` with `W ∈ ℝ^{V×V}` (a
+//! learned transition logit table). This is exactly the model family the
+//! Markov corpus (`crate::data::text`) is drawn from, so training can in
+//! principle reach the corpus' entropy-rate perplexity floor. The
+//! transformer LM lives in the JAX/HLO path (`crate::runtime`).
+
+use super::{EvalMetrics, GradientSource, ParamLayout};
+use crate::data::TokenDataset;
+
+/// See module docs.
+pub struct SoftmaxLmProblem {
+    shards: Vec<TokenDataset>,
+    test: TokenDataset,
+    vocab: usize,
+    l2: f32,
+}
+
+impl SoftmaxLmProblem {
+    pub fn new(shards: Vec<TokenDataset>, test: TokenDataset, l2: f32) -> Self {
+        assert!(!shards.is_empty());
+        let vocab = shards[0].vocab;
+        for s in &shards {
+            assert_eq!(s.vocab, vocab);
+            assert!(s.len() >= 2, "shard too short for bigrams");
+        }
+        assert_eq!(test.vocab, vocab);
+        assert!(test.len() >= 2);
+        Self {
+            shards,
+            test,
+            vocab,
+            l2,
+        }
+    }
+
+    /// Mean NLL (and optional gradient) over a token stream's bigrams.
+    fn loss_grad_on(
+        &self,
+        data: &TokenDataset,
+        theta: &[f32],
+        mut grad: Option<&mut [f32]>,
+    ) -> f64 {
+        let v = self.vocab;
+        let n = data.len() - 1;
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        // Count bigrams first: gradient rows only depend on (prev ->
+        // distribution of next), so aggregate counts make the pass
+        // O(V² + n) instead of O(n·V).
+        let mut counts = vec![0u32; v * v];
+        let mut row_totals = vec![0u32; v];
+        for w in data.tokens.windows(2) {
+            counts[w[0] as usize * v + w[1] as usize] += 1;
+            row_totals[w[0] as usize] += 1;
+        }
+        let mut probs = vec![0.0f64; v];
+        let mut loss = 0.0f64;
+        let inv_n = 1.0 / n as f64;
+        for r in 0..v {
+            let total = row_totals[r];
+            if total == 0 {
+                continue;
+            }
+            let logits = &theta[r * v..(r + 1) * v];
+            let mut maxl = f64::NEG_INFINITY;
+            for &x in logits {
+                maxl = maxl.max(x as f64);
+            }
+            let mut z = 0.0;
+            for (c, &x) in logits.iter().enumerate() {
+                probs[c] = ((x as f64) - maxl).exp();
+                z += probs[c];
+            }
+            let logz = maxl + z.ln();
+            for p in probs.iter_mut() {
+                *p /= z;
+            }
+            let crow = &counts[r * v..(r + 1) * v];
+            for c in 0..v {
+                if crow[c] > 0 {
+                    loss += crow[c] as f64 * (logz - theta[r * v + c] as f64);
+                }
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                let grow = &mut g[r * v..(r + 1) * v];
+                let tf = total as f64;
+                for c in 0..v {
+                    grow[c] = ((tf * probs[c] - crow[c] as f64) * inv_n) as f32;
+                }
+            }
+        }
+        loss *= inv_n;
+        if self.l2 > 0.0 {
+            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+            loss += 0.5 * self.l2 as f64 * reg;
+            if let Some(g) = grad {
+                for (gi, &ti) in g.iter_mut().zip(theta) {
+                    *gi += self.l2 * ti;
+                }
+            }
+        }
+        loss
+    }
+}
+
+impl GradientSource for SoftmaxLmProblem {
+    fn dim(&self) -> usize {
+        self.vocab * self.vocab
+    }
+
+    fn num_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        self.loss_grad_on(&self.shards[device], theta, Some(grad))
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        let loss = self.loss_grad_on(&self.test, theta, None);
+        EvalMetrics {
+            loss,
+            accuracy: None,
+            perplexity: Some(loss.exp()),
+        }
+    }
+
+    fn init_theta(&self, _seed: u64) -> Vec<f32> {
+        // Zero logits = uniform predictions: perplexity starts at V.
+        vec![0.0f32; self.dim()]
+    }
+
+    fn layout(&self) -> ParamLayout {
+        ParamLayout::contiguous(&[("w", vec![self.vocab, self.vocab])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use crate::data::text::{markov_corpus, shard_corpus, CorpusSpec, MarkovChain};
+    use crate::problems::check_gradient;
+    use crate::util::vecmath::axpy;
+
+    fn small_problem() -> (SoftmaxLmProblem, CorpusSpec) {
+        let spec = CorpusSpec {
+            vocab: 16,
+            length: 20_000,
+            peakedness: 2.0,
+            seed: 55,
+        };
+        let full = markov_corpus(&spec);
+        let test = full.slice(0, 4000);
+        let train = full.slice(4000, full.len());
+        let shards = shard_corpus(&train, 4);
+        (SoftmaxLmProblem::new(shards, test, 1e-4), spec)
+    }
+
+    #[test]
+    fn initial_perplexity_is_vocab() {
+        let (p, spec) = small_problem();
+        let theta = p.init_theta(0);
+        let ev = p.eval(&theta);
+        let ppl = ev.perplexity.unwrap();
+        assert!((ppl - spec.vocab as f64).abs() < 0.5, "ppl={ppl}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (p, _) = small_problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let theta: Vec<f32> = (0..p.dim()).map(|_| rng.gaussian_f32(0.0, 0.3)).collect();
+        check_gradient(&p, 2, &theta, &[0, 17, 100, 255], 2e-2);
+    }
+
+    #[test]
+    fn training_approaches_entropy_floor() {
+        let (p, spec) = small_problem();
+        let chain = MarkovChain::from_spec(&spec);
+        let floor = chain.mean_row_entropy().exp();
+        let mut theta = p.init_theta(0);
+        let m = p.num_devices();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut total = vec![0.0f32; p.dim()];
+        for _ in 0..300 {
+            total.fill(0.0);
+            for dev in 0..m {
+                p.local_grad(dev, &theta, &mut g);
+                axpy(1.0 / m as f32, &g, &mut total);
+            }
+            let step = total.clone();
+            axpy(-4.0, &step, &mut theta);
+        }
+        let ppl = p.eval(&theta).perplexity.unwrap();
+        assert!(
+            ppl < spec.vocab as f64 * 0.6,
+            "no learning: ppl={ppl}, vocab={}",
+            spec.vocab
+        );
+        assert!(ppl > floor * 0.8, "below the information floor?!");
+        assert!(ppl < floor * 2.0, "far from floor: {ppl} vs {floor}");
+    }
+
+    #[test]
+    fn aggregated_count_gradient_matches_naive() {
+        // The O(V²+n) count-based gradient must equal the naive per-
+        // sample gradient.
+        let (p, _) = small_problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let theta: Vec<f32> = (0..p.dim()).map(|_| rng.gaussian_f32(0.0, 0.2)).collect();
+        let mut g = vec![0.0f32; p.dim()];
+        let loss = p.local_grad(0, &theta, &mut g);
+
+        // Naive recomputation.
+        let data = &p.shards[0];
+        let v = p.vocab;
+        let n = data.len() - 1;
+        let mut g_naive = vec![0.0f64; p.dim()];
+        let mut loss_naive = 0.0f64;
+        for w in data.tokens.windows(2) {
+            let (r, y) = (w[0] as usize, w[1] as usize);
+            let logits = &theta[r * v..(r + 1) * v];
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let z: f64 = logits.iter().map(|&x| ((x as f64) - maxl).exp()).sum();
+            loss_naive += maxl + z.ln() - theta[r * v + y] as f64;
+            for c in 0..v {
+                let pc = ((theta[r * v + c] as f64) - maxl).exp() / z;
+                g_naive[r * v + c] += (pc - if c == y { 1.0 } else { 0.0 }) / n as f64;
+            }
+        }
+        loss_naive /= n as f64;
+        let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+        loss_naive += 0.5 * p.l2 as f64 * reg;
+        for (gn, &t) in g_naive.iter_mut().zip(&theta) {
+            *gn += p.l2 as f64 * t as f64;
+        }
+        assert!((loss - loss_naive).abs() < 1e-9);
+        for (a, b) in g.iter().zip(&g_naive) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Adaptive quantization-level selection rules.
+//!
+//! * [`aquila_level`] — the paper's closed-form optimum (Theorem 1,
+//!   eq. 19), derived by minimizing the Lemma-1 model-deviation bound.
+//! * [`adaquantfl_level`] — AdaQuantFL's global-loss rule
+//!   (Jhunjhunwala et al., 2021), used by the `AdaQuantFL` and `LAdaQ`
+//!   baselines.
+//! * [`dadaquant_time_level`] — DAdaQuant's time-adaptive doubling rule
+//!   (Hönig et al., 2022), used by the `DAdaQuant` baseline.
+
+use super::midtread::MAX_BITS;
+
+/// AQUILA's optimal quantization level (eq. 19):
+///
+/// ```text
+/// b* = ceil( log₂( R·√d / ‖v‖₂ + 1 ) )
+/// ```
+///
+/// where `v = ∇f_m(θᵏ) − q_m^{k−1}` is the gradient innovation,
+/// `R = ‖v‖_∞`, and `d` the model dimension.
+///
+/// Self-consistency (Theorem 1 remark): since `R ≤ ‖v‖₂`, the argument
+/// lies in `(1, √d + 1]`, hence `1 ≤ b* ≤ ceil(log₂(√d + 1))` with **no
+/// clamping needed** — unlike e.g. DAdaQuant's `max(1, round(...))`.
+///
+/// Degenerate input `‖v‖₂ = 0` (zero innovation — nothing to transmit)
+/// returns 1.
+pub fn aquila_level(innov_l2: f64, innov_linf: f32, d: usize) -> u8 {
+    debug_assert!(innov_l2 >= 0.0);
+    if innov_l2 <= 0.0 || innov_linf <= 0.0 {
+        return 1;
+    }
+    let ratio = innov_linf as f64 * (d as f64).sqrt() / innov_l2;
+    let b = (ratio + 1.0).log2().ceil();
+    // f64 rounding can yield 0.0 for ratios within 1 ulp above 0.
+    (b.max(1.0) as u8).min(MAX_BITS)
+}
+
+/// Upper bound on the AQUILA level for dimension `d`:
+/// `ceil(log₂(√d + 1))`. Tested as an invariant of [`aquila_level`].
+pub fn aquila_level_upper_bound(d: usize) -> u8 {
+    (((d as f64).sqrt() + 1.0).log2().ceil() as u8).max(1)
+}
+
+/// The optimal granularity `τ* = ‖v‖₂ / (R√d)` (eq. 20) prior to
+/// integrality rounding — exposed for the theory tests which verify that
+/// `b*` is the integer minimizer of the Lemma-1 deviation objective.
+pub fn aquila_tau_star(innov_l2: f64, innov_linf: f32, d: usize) -> f64 {
+    if innov_linf <= 0.0 {
+        return 1.0;
+    }
+    (innov_l2 / (innov_linf as f64 * (d as f64).sqrt())).min(1.0)
+}
+
+/// AdaQuantFL: `b_k = floor( sqrt(f(θ⁰)/f(θᵏ)) · b₀ )`, clamped to
+/// `[1, cap]`.
+///
+/// The paper's Section II criticism — that this grows without bound as
+/// the loss decays (potentially past 32 bits) — is reproduced by the
+/// baselines; `cap` defaults to 32 ("a floating point is represented by
+/// 32 bits in our case").
+pub fn adaquantfl_level(f0: f64, fk: f64, b0: u8, cap: u8) -> u8 {
+    assert!(b0 >= 1);
+    if !(fk > 0.0) || !(f0 > 0.0) {
+        return cap;
+    }
+    let b = ((f0 / fk).sqrt() * b0 as f64).floor();
+    (b.max(1.0) as u64).min(cap as u64) as u8
+}
+
+/// DAdaQuant's time-adaptive component: the level doubles each time the
+/// running-best training loss stagnates for `patience` evaluations,
+/// starting from `b0`. (Simplified faithful reimplementation of the
+/// time-adaptation rule; the client-adaptation component lives in the
+/// `DAdaQuant` baseline.)
+#[derive(Clone, Debug)]
+pub struct DadaquantSchedule {
+    level: u8,
+    best_loss: f64,
+    stale: u32,
+    patience: u32,
+    cap: u8,
+}
+
+impl DadaquantSchedule {
+    pub fn new(b0: u8, patience: u32, cap: u8) -> Self {
+        Self {
+            level: b0.max(1),
+            best_loss: f64::INFINITY,
+            stale: 0,
+            patience: patience.max(1),
+            cap,
+        }
+    }
+
+    /// Feed the current global loss estimate; returns the level to use.
+    pub fn observe(&mut self, loss: f64) -> u8 {
+        if loss < self.best_loss {
+            self.best_loss = loss;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+            if self.stale >= self.patience {
+                self.level = (self.level.saturating_mul(2)).min(self.cap);
+                self.stale = 0;
+            }
+        }
+        self.level
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+}
+
+/// DAdaQuant time-level convenience for tests.
+pub fn dadaquant_time_level(sched: &mut DadaquantSchedule, loss: f64) -> u8 {
+    sched.observe(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::vecmath::l2sq_and_linf;
+
+    #[test]
+    fn aquila_level_at_least_one_never_clamped() {
+        let mut rng = Xoshiro256pp::seed_from_u64(20);
+        for _ in 0..200 {
+            let d = 1 + rng.next_bounded(4096) as usize;
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 2.0)).collect();
+            let (l2sq, linf) = l2sq_and_linf(&v);
+            let b = aquila_level(l2sq.sqrt(), linf, d);
+            assert!(b >= 1);
+            assert!(
+                b <= aquila_level_upper_bound(d),
+                "b={b} exceeds bound for d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn aquila_level_upper_bound_values() {
+        // d = 1M -> sqrt(d) = 1000 -> ceil(log2(1001)) = 10.
+        assert_eq!(aquila_level_upper_bound(1_000_000), 10);
+        // d = 1 -> ceil(log2(2)) = 1.
+        assert_eq!(aquila_level_upper_bound(1), 1);
+        assert_eq!(aquila_level_upper_bound(16), 3); // ceil(log2(5)) = 3
+    }
+
+    #[test]
+    fn aquila_degenerate_zero_innovation() {
+        assert_eq!(aquila_level(0.0, 0.0, 100), 1);
+    }
+
+    #[test]
+    fn aquila_spiky_vector_needs_more_bits() {
+        // A one-hot innovation has R = ‖v‖₂ -> ratio √d -> max level;
+        // a flat vector has R√d/‖v‖₂ = 1 -> b = 1.
+        let d = 1024;
+        let mut spiky = vec![0.0f32; d];
+        spiky[7] = 3.0;
+        let (l2sq, linf) = l2sq_and_linf(&spiky);
+        let b_spiky = aquila_level(l2sq.sqrt(), linf, d);
+        let flat = vec![0.5f32; d];
+        let (l2sq_f, linf_f) = l2sq_and_linf(&flat);
+        let b_flat = aquila_level(l2sq_f.sqrt(), linf_f, d);
+        assert_eq!(b_flat, 1);
+        assert_eq!(b_spiky, aquila_level_upper_bound(d));
+        assert!(b_spiky > b_flat);
+    }
+
+    #[test]
+    fn tau_star_in_unit_interval() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        for _ in 0..100 {
+            let d = 2 + rng.next_bounded(1000) as usize;
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            let (l2sq, linf) = l2sq_and_linf(&v);
+            let t = aquila_tau_star(l2sq.sqrt(), linf, d);
+            assert!(t > 0.0 && t <= 1.0, "tau*={t}");
+        }
+    }
+
+    #[test]
+    fn adaquantfl_grows_as_loss_decays() {
+        let b0 = 2;
+        let f0 = 2.3;
+        let early = adaquantfl_level(f0, 2.3, b0, 32);
+        let mid = adaquantfl_level(f0, 0.5, b0, 32);
+        let late = adaquantfl_level(f0, 0.01, b0, 32);
+        assert_eq!(early, 2);
+        assert!(mid > early);
+        assert!(late > mid);
+        // The pathology the paper calls out: level exceeds 32 without cap.
+        assert_eq!(adaquantfl_level(f0, 1e-6, b0, 32), 32);
+    }
+
+    #[test]
+    fn adaquantfl_degenerate_loss() {
+        assert_eq!(adaquantfl_level(1.0, 0.0, 2, 32), 32);
+        assert_eq!(adaquantfl_level(1.0, f64::NAN, 2, 32), 32);
+    }
+
+    #[test]
+    fn dadaquant_schedule_doubles_on_stagnation() {
+        let mut s = DadaquantSchedule::new(1, 2, 16);
+        assert_eq!(s.observe(1.0), 1);
+        assert_eq!(s.observe(0.9), 1); // improving
+        assert_eq!(s.observe(0.95), 1); // stale 1
+        assert_eq!(s.observe(0.95), 2); // stale 2 -> double
+        assert_eq!(s.observe(0.95), 2);
+        assert_eq!(s.observe(0.95), 4);
+        for _ in 0..20 {
+            s.observe(1.0);
+        }
+        assert!(s.level() <= 16);
+    }
+}

@@ -1,0 +1,152 @@
+//! Bit-packing of quantization codes into a wire byte stream.
+//!
+//! The communication costs reported by every table and figure are the
+//! *actual serialized sizes* of what devices send, so the ψ vectors are
+//! really packed at `b` bits per element (LSB-first within a little-endian
+//! `u64` accumulator) rather than estimated as `d·b/8`.
+
+/// Number of payload bytes for `n` codes at `bits` bits each.
+#[inline]
+pub const fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Pack `codes` (each `< 2^bits`) into a byte vector.
+///
+/// Codes are written LSB-first: code `i` occupies bit positions
+/// `[i·b, (i+1)·b)` of the stream.
+pub fn pack(codes: &[u32], bits: u8) -> Vec<u8> {
+    assert!((1..=32).contains(&bits));
+    let mut out = Vec::with_capacity(packed_len(codes.len(), bits));
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let b = bits as u32;
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    for &c in codes {
+        debug_assert!((c as u64) <= mask, "code {c} exceeds {bits} bits");
+        acc |= ((c as u64) & mask) << acc_bits;
+        acc_bits += b;
+        while acc_bits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            acc_bits -= 8;
+        }
+    }
+    if acc_bits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+    out
+}
+
+/// Unpack `n` codes of `bits` bits each from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits));
+    assert!(
+        bytes.len() >= packed_len(n, bits),
+        "byte stream too short: {} < {}",
+        bytes.len(),
+        packed_len(n, bits)
+    );
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let b = bits as u32;
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    let mut iter = bytes.iter();
+    for _ in 0..n {
+        while acc_bits < b {
+            acc |= (*iter.next().expect("length checked") as u64) << acc_bits;
+            acc_bits += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= b;
+        acc_bits -= b;
+    }
+    out
+}
+
+/// Pack a sign bitmap (1 bit per element, 1 = negative).
+pub fn pack_signs(signs: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; signs.len().div_ceil(8)];
+    for (i, &s) in signs.iter().enumerate() {
+        if s {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Unpack a sign bitmap of `n` elements.
+pub fn unpack_signs(bytes: &[u8], n: usize) -> Vec<bool> {
+    assert!(bytes.len() >= n.div_ceil(8));
+    (0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        for bits in 1..=32u8 {
+            let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+            let codes: Vec<u32> =
+                (0..251).map(|_| (rng.next_u64() & mask) as u32).collect();
+            let packed = pack(&codes, bits);
+            assert_eq!(packed.len(), packed_len(codes.len(), bits));
+            let unpacked = unpack(&packed, bits, codes.len());
+            assert_eq!(unpacked, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn exact_sizes() {
+        assert_eq!(packed_len(8, 1), 1);
+        assert_eq!(packed_len(9, 1), 2);
+        assert_eq!(packed_len(3, 3), 2); // 9 bits -> 2 bytes
+        assert_eq!(packed_len(1000, 4), 500);
+        assert_eq!(packed_len(0, 7), 0);
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        assert_eq!(pack(&[], 5), Vec::<u8>::new());
+        assert_eq!(unpack(&[], 5, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn boundary_codes() {
+        for bits in [1u8, 7, 8, 9, 31, 32] {
+            let max = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes = vec![0, max, 0, max, max];
+            assert_eq!(unpack(&pack(&codes, bits), bits, 5), codes);
+        }
+    }
+
+    #[test]
+    fn known_layout() {
+        // Two 4-bit codes 0xA, 0x5 -> single byte 0x5A (LSB-first).
+        assert_eq!(pack(&[0xA, 0x5], 4), vec![0x5A]);
+        // Three 3-bit codes 1, 2, 4: code0 occupies stream bits 0–2
+        // (bit0 = 1), code1 bits 3–5 (bit4 = 1), code2 bits 6–8
+        // (bit8 = 1) ⇒ byte0 = 0b0001_0001 = 0x11, byte1 = 0x01.
+        assert_eq!(pack(&[1, 2, 4], 3), vec![0x11, 0x01]);
+    }
+
+    #[test]
+    fn signs_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let signs: Vec<bool> = (0..77).map(|_| rng.bernoulli(0.5)).collect();
+        let packed = pack_signs(&signs);
+        assert_eq!(packed.len(), 10);
+        assert_eq!(unpack_signs(&packed, 77), signs);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unpack_rejects_short_stream() {
+        unpack(&[0u8; 3], 8, 4);
+    }
+}

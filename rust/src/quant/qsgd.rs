@@ -1,0 +1,168 @@
+//! QSGD stochastic quantizer (Alistarh et al., 2017) — the fixed-level
+//! stochastic baseline column of Tables II/III.
+//!
+//! For a vector `v` and `s = 2^b − 1` levels:
+//!
+//! ```text
+//! Q(vᵢ) = ‖v‖₂ · sign(vᵢ) · ξᵢ,     ξᵢ ∈ {l/s, (l+1)/s}
+//! ```
+//!
+//! where `l = floor(|vᵢ|/‖v‖₂ · s)` and `ξᵢ = (l+1)/s` with probability
+//! `|vᵢ|/‖v‖₂·s − l` (stochastic rounding — unbiased: `E[Q(v)] = v`).
+//!
+//! Wire format: `‖v‖₂` (f32) + 1 sign bit + `b` magnitude bits per
+//! element.
+
+use crate::util::rng::Xoshiro256pp;
+use crate::util::vecmath::norm2;
+
+/// A QSGD-quantized vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QsgdVec {
+    /// Magnitude bits per element.
+    pub bits: u8,
+    /// `‖v‖₂` scale.
+    pub norm: f32,
+    /// Magnitude codes in `[0, 2^b − 1]`.
+    pub mags: Vec<u32>,
+    /// Sign bits (true = negative).
+    pub signs: Vec<bool>,
+}
+
+impl QsgdVec {
+    pub fn dim(&self) -> usize {
+        self.mags.len()
+    }
+}
+
+/// Stochastically quantize `v` at `bits` magnitude bits.
+pub fn quantize(v: &[f32], bits: u8, rng: &mut Xoshiro256pp) -> QsgdVec {
+    assert!((1..=31).contains(&bits), "qsgd bits must be in 1..=31");
+    let norm = norm2(v) as f32;
+    let s = ((1u64 << bits) - 1) as f64;
+    let mut mags = Vec::with_capacity(v.len());
+    let mut signs = Vec::with_capacity(v.len());
+    if norm == 0.0 {
+        mags.resize(v.len(), 0);
+        signs.resize(v.len(), false);
+        return QsgdVec {
+            bits,
+            norm,
+            mags,
+            signs,
+        };
+    }
+    let inv = 1.0 / norm as f64;
+    for &x in v {
+        signs.push(x < 0.0);
+        let a = (x.abs() as f64 * inv * s).min(s);
+        let l = a.floor();
+        let p = a - l;
+        let code = if rng.next_f64() < p { l + 1.0 } else { l };
+        mags.push(code.min(s) as u32);
+    }
+    QsgdVec {
+        bits,
+        norm,
+        mags,
+        signs,
+    }
+}
+
+/// Reconstruct the (unbiased) estimate of `v`.
+pub fn dequantize_into(q: &QsgdVec, out: &mut [f32]) {
+    assert_eq!(q.mags.len(), out.len());
+    if q.norm == 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    let s = ((1u64 << q.bits) - 1) as f64;
+    let scale = q.norm as f64 / s;
+    for i in 0..out.len() {
+        let mag = scale * q.mags[i] as f64;
+        out[i] = if q.signs[i] { -mag } else { mag } as f32;
+    }
+}
+
+pub fn dequantize(q: &QsgdVec) -> Vec<f32> {
+    let mut out = vec![0.0f32; q.dim()];
+    dequantize_into(q, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::vecmath::{norm2_sq, sub};
+
+    #[test]
+    fn zero_vector() {
+        let mut rng = Xoshiro256pp::seed_from_u64(30);
+        let q = quantize(&[0.0; 16], 4, &mut rng);
+        assert_eq!(q.norm, 0.0);
+        assert_eq!(dequantize(&q), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let v = [0.3f32, -0.7, 0.05, 0.0, 1.0];
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; v.len()];
+        for _ in 0..trials {
+            let dq = dequantize(&quantize(&v, 2, &mut rng));
+            for (a, x) in acc.iter_mut().zip(&dq) {
+                *a += *x as f64;
+            }
+        }
+        for (a, &orig) in acc.iter().zip(&v) {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - orig as f64).abs() < 0.02,
+                "biased: {mean} vs {orig}"
+            );
+        }
+    }
+
+    #[test]
+    fn codes_fit_in_bits() {
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let v: Vec<f32> = (0..500).map(|_| rng.gaussian_f32(0.0, 2.0)).collect();
+        for bits in [1u8, 4, 8] {
+            let q = quantize(&v, bits, &mut rng);
+            let max = (1u64 << bits) - 1;
+            assert!(q.mags.iter().all(|&c| (c as u64) <= max));
+        }
+    }
+
+    #[test]
+    fn variance_decreases_with_bits() {
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let v: Vec<f32> = (0..256).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let mut errs = Vec::new();
+        for bits in [1u8, 4, 8] {
+            let mut total = 0.0;
+            for _ in 0..50 {
+                let dq = dequantize(&quantize(&v, bits, &mut rng));
+                let mut e = vec![0.0f32; v.len()];
+                sub(&v, &dq, &mut e);
+                total += norm2_sq(&e);
+            }
+            errs.push(total);
+        }
+        assert!(errs[0] > errs[1]);
+        assert!(errs[1] > errs[2]);
+    }
+
+    #[test]
+    fn max_element_exact_at_full_prob() {
+        // |v_i| = ‖v‖₂ for a one-hot vector: a = s exactly, code = s,
+        // reconstruction exact regardless of rng.
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let mut v = vec![0.0f32; 32];
+        v[5] = -2.5;
+        let q = quantize(&v, 3, &mut rng);
+        let dq = dequantize(&q);
+        assert!((dq[5] + 2.5).abs() < 1e-6);
+    }
+}

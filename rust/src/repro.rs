@@ -1,0 +1,193 @@
+//! The table/figure reproduction harness: runs the experiment matrix
+//! and prints rows in the paper's format. Used by the `repro` binary,
+//! the benches, and the examples.
+
+use crate::algorithms::{self, Algorithm};
+use crate::config::ExperimentSpec;
+use crate::coordinator::Coordinator;
+use crate::hetero::half_half_masks;
+use crate::metrics::{bits_display, RunTrace};
+use std::path::Path;
+
+/// Run one experiment cell (dataset × split × algorithm).
+pub fn run_cell(spec: &ExperimentSpec, algo: &dyn Algorithm) -> RunTrace {
+    let problem = spec.build_problem();
+    let cfg = spec.run_config();
+    let mut coordinator = if spec.hetero {
+        let masks = half_half_masks(&problem.layout(), problem.num_devices(), 0.5);
+        Coordinator::with_masks(problem.as_ref(), algo, masks, cfg)
+    } else {
+        Coordinator::new(problem.as_ref(), algo, cfg)
+    };
+    coordinator.run(spec.dataset.name(), spec.split.name(spec.dataset))
+}
+
+/// Format the headline metric (accuracy % for classification,
+/// perplexity for LM) the way the tables print it.
+pub fn metric_display(trace: &RunTrace) -> String {
+    if let Some(acc) = trace.final_accuracy() {
+        format!("{:.2}", acc * 100.0)
+    } else if let Some(ppl) = trace.final_perplexity() {
+        format!("{ppl:.2}")
+    } else {
+        format!("{:.3}", trace.final_train_loss())
+    }
+}
+
+/// Run a full table (rows × the 7-algorithm suite) and print it in the
+/// paper's row format. Traces are written as CSV under `out_dir` for
+/// the figure series. Returns all traces keyed `(row_label, algo)`.
+pub fn run_table(
+    title: &str,
+    rows: &[ExperimentSpec],
+    out_dir: Option<&Path>,
+) -> Vec<(String, String, RunTrace)> {
+    let mut all = Vec::new();
+    println!("\n=== {title} ===");
+    println!(
+        "{:<18} {:>10} | columns: Acc/PP  Cost(Gb)  [skip%]",
+        "Row",
+        ""
+    );
+    for spec in rows {
+        let suite = algorithms::table_suite(spec.beta);
+        let mut cells = Vec::new();
+        for algo in &suite {
+            let trace = run_cell(spec, algo.as_ref());
+            if let Some(dir) = out_dir {
+                let fname = format!(
+                    "{}_{}_{}.csv",
+                    spec.dataset.name().to_lowercase().replace('-', ""),
+                    spec.split.name(spec.dataset).to_lowercase().replace('-', ""),
+                    algo.name().to_lowercase()
+                );
+                trace.write_csv(&dir.join(fname)).expect("writing trace csv");
+            }
+            cells.push((algo.name().to_string(), trace));
+        }
+        print!("{:<18}", spec.row_label());
+        for (name, trace) in &cells {
+            let total = trace.total_uploads() + trace.total_skips();
+            let skip_pct = if total > 0 {
+                100.0 * trace.total_skips() as f64 / total as f64
+            } else {
+                0.0
+            };
+            print!(
+                " | {} {}/{} [{:.0}%]",
+                name,
+                metric_display(trace),
+                bits_display(trace.total_bits()),
+                skip_pct
+            );
+        }
+        println!();
+        for (name, trace) in cells {
+            all.push((spec.row_label(), name, trace));
+        }
+    }
+    // AQUILA-vs-baseline savings summary (the paper's headline claims).
+    print_savings(&all);
+    all
+}
+
+/// Print AQUILA's bit savings vs each baseline, averaged over rows —
+/// the quantities behind "AQUILA reduces 60.4% overall communication
+/// costs compared to LENA and 57.2% compared to MARINA on average".
+pub fn print_savings(all: &[(String, String, RunTrace)]) {
+    use std::collections::BTreeMap;
+    let mut by_row: BTreeMap<&str, BTreeMap<&str, u64>> = BTreeMap::new();
+    for (row, algo, trace) in all {
+        by_row
+            .entry(row)
+            .or_default()
+            .insert(algo, trace.total_bits());
+    }
+    let mut savings: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for cells in by_row.values() {
+        let Some(&aq) = cells.get("AQUILA") else {
+            continue;
+        };
+        for (algo, &bits) in cells {
+            if *algo != "AQUILA" && bits > 0 {
+                savings
+                    .entry(algo)
+                    .or_default()
+                    .push(100.0 * (1.0 - aq as f64 / bits as f64));
+            }
+        }
+    }
+    println!("\nAQUILA average bit savings vs baselines:");
+    for (algo, s) in savings {
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        println!("  vs {algo:<12} {mean:>6.1}%");
+    }
+}
+
+/// The β-ablation sweep (Figures 4 and 5): run AQUILA at several β on
+/// one dataset row, returning `(β, trace)` pairs.
+pub fn ablation_beta(spec: &ExperimentSpec, betas: &[f32]) -> Vec<(f32, RunTrace)> {
+    betas
+        .iter()
+        .map(|&beta| {
+            let mut s = spec.clone();
+            s.beta = beta;
+            let algo = algorithms::aquila::Aquila::new(beta);
+            (beta, run_cell(&s, &algo))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, SplitKind};
+
+    fn tiny_spec() -> ExperimentSpec {
+        let mut s =
+            ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false).scaled(0.02, 12);
+        s.devices = 4;
+        s
+    }
+
+    #[test]
+    fn run_cell_produces_trace() {
+        let spec = tiny_spec();
+        let algo = algorithms::aquila::Aquila::new(spec.beta);
+        let t = run_cell(&spec, &algo);
+        assert_eq!(t.rounds.len(), 12);
+        assert!(t.total_bits() > 0);
+        assert_eq!(t.algorithm, "AQUILA");
+    }
+
+    #[test]
+    fn hetero_cell_cheaper_than_homogeneous() {
+        let spec = tiny_spec();
+        let mut hetero = spec.clone();
+        hetero.hetero = true;
+        let algo = algorithms::fedavg::FedAvg;
+        let t_homo = run_cell(&spec, &algo);
+        let t_het = run_cell(&hetero, &algo);
+        assert!(t_het.total_bits() < t_homo.total_bits());
+    }
+
+    #[test]
+    fn ablation_zero_beta_never_skips() {
+        let spec = tiny_spec();
+        let out = ablation_beta(&spec, &[0.0, 5.0]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.total_skips(), 0);
+        // Large β skips strictly more.
+        assert!(out[1].1.total_skips() > 0);
+        assert!(out[1].1.total_bits() < out[0].1.total_bits());
+    }
+
+    #[test]
+    fn metric_display_formats() {
+        let spec = tiny_spec();
+        let algo = algorithms::fedavg::FedAvg;
+        let t = run_cell(&spec, &algo);
+        let m = metric_display(&t);
+        assert!(m.parse::<f64>().is_ok());
+    }
+}

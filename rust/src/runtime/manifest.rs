@@ -1,0 +1,190 @@
+//! The artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, describing every AOT-lowered HLO module —
+//! model entries (grad/eval), their shapes, and the flat parameter
+//! layout (used for HeteroFL masks) — plus the L1 quantization kernel
+//! artifacts.
+
+use crate::problems::{LayerSpec, ParamLayout};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled model (a `variant` in `python/compile/model.py`).
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Flat parameter dimension `d`.
+    pub dim: usize,
+    /// HLO text file computing `(loss, grad)` from `(θ, x, y)`.
+    pub grad_file: PathBuf,
+    /// HLO text file computing `(loss,)` from `(θ, x, y)`.
+    pub eval_file: PathBuf,
+    /// Optional fused device step `(θ, q_prev, x, y) -> (loss, dq,
+    /// range, bits, ‖Δq‖², ‖ε‖²)` — model grad + L1 Pallas quantizer in
+    /// one module.
+    pub step_file: Option<PathBuf>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub layout: ParamLayout,
+}
+
+/// One AOT-compiled L1 kernel entry (the fused AQUILA quantizer at a
+/// fixed dimension).
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub name: String,
+    pub dim: usize,
+    pub file: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub kernels: Vec<KernelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let mut models = Vec::new();
+        for m in j.get("models").as_arr().unwrap_or(&[]) {
+            let name = m
+                .get("name")
+                .as_str()
+                .context("model entry missing name")?
+                .to_string();
+            let dim = m.get("dim").as_usize().context("model missing dim")?;
+            let mut entries = Vec::new();
+            for l in m.get("layout").as_arr().unwrap_or(&[]) {
+                entries.push(LayerSpec {
+                    name: l.get("name").as_str().unwrap_or("?").to_string(),
+                    shape: l
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: l.get("offset").as_usize().unwrap_or(0),
+                });
+            }
+            let layout = ParamLayout { entries };
+            if layout.dim() != dim {
+                bail!(
+                    "model {name}: layout covers {} params but dim = {dim}",
+                    layout.dim()
+                );
+            }
+            models.push(ModelEntry {
+                grad_file: dir.join(
+                    m.get("grad")
+                        .as_str()
+                        .context("model missing grad file")?,
+                ),
+                eval_file: dir.join(
+                    m.get("eval")
+                        .as_str()
+                        .context("model missing eval file")?,
+                ),
+                step_file: m.get("step").as_str().map(|s| dir.join(s)),
+                batch: m.get("batch").as_usize().unwrap_or(1),
+                seq: m.get("seq").as_usize().unwrap_or(1),
+                vocab: m.get("vocab").as_usize().unwrap_or(0),
+                name,
+                dim,
+                layout,
+            });
+        }
+        let mut kernels = Vec::new();
+        for k in j.get("kernels").as_arr().unwrap_or(&[]) {
+            kernels.push(KernelEntry {
+                name: k
+                    .get("name")
+                    .as_str()
+                    .context("kernel missing name")?
+                    .to_string(),
+                dim: k.get("dim").as_usize().context("kernel missing dim")?,
+                file: dir.join(k.get("file").as_str().context("kernel missing file")?),
+            });
+        }
+        Ok(Self {
+            root: dir.to_path_buf(),
+            models,
+            kernels,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                format!(
+                    "model '{name}' not in manifest (have: {:?})",
+                    self.models.iter().map(|m| &m.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&KernelEntry> {
+        self.kernels
+            .iter()
+            .find(|k| k.name == name)
+            .with_context(|| format!("kernel '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": [{
+        "name": "txf_tiny", "dim": 10,
+        "grad": "grad_txf_tiny.hlo.txt", "eval": "eval_txf_tiny.hlo.txt",
+        "batch": 4, "seq": 8, "vocab": 16,
+        "layout": [
+          {"name": "embed", "shape": [2, 3], "offset": 0},
+          {"name": "bias", "shape": [4], "offset": 6}
+        ]
+      }],
+      "kernels": [{"name": "aquila_quant", "dim": 10, "file": "quant_10.hlo.txt"}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let model = m.model("txf_tiny").unwrap();
+        assert_eq!(model.dim, 10);
+        assert_eq!(model.batch, 4);
+        assert_eq!(model.layout.entries.len(), 2);
+        assert_eq!(model.layout.entries[1].offset, 6);
+        assert!(model.grad_file.ends_with("grad_txf_tiny.hlo.txt"));
+        assert_eq!(m.kernel("aquila_quant").unwrap().dim, 10);
+    }
+
+    #[test]
+    fn rejects_dim_layout_mismatch() {
+        let bad = SAMPLE.replace("\"dim\": 10", "\"dim\": 11");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

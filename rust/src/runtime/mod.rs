@@ -1,0 +1,301 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them
+//! from the Rust hot path — the L2/L3 bridge.
+//!
+//! Python runs **once** (`make artifacts`: JAX lowers the model and the
+//! Pallas kernel to HLO text, see `python/compile/aot.py`); this module
+//! loads the text through the `xla` crate
+//! (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`) and executes compiled modules with zero Python
+//! involvement per round.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{KernelEntry, Manifest, ModelEntry};
+
+use crate::data::TokenDataset;
+use crate::problems::{EvalMetrics, GradientSource, ParamLayout};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled HLO module plus the serialized-execution lock.
+///
+/// SAFETY note: the underlying TFRT CPU PJRT client is thread-safe, but
+/// the `xla` crate's wrappers are raw-pointer newtypes without
+/// `Send`/`Sync` markers. We (a) serialize every `execute` behind a
+/// `Mutex` and (b) never move the client across threads after
+/// construction, so declaring the wrapper `Send + Sync` is sound for the
+/// CPU client used here.
+pub struct HloExecutable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    /// Human-readable identifier (artifact path).
+    pub tag: String,
+}
+
+unsafe impl Send for HloExecutable {}
+unsafe impl Sync for HloExecutable {}
+
+impl HloExecutable {
+    /// Run with the given inputs; returns the flattened output tuple.
+    ///
+    /// `aot.py` lowers every entry with `return_tuple=True`, so the
+    /// single output literal is a tuple we decompose.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe.lock().expect("executable lock poisoned");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.tag))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.tag))?;
+        lit.to_tuple().with_context(|| format!("untupling {}", self.tag))
+    }
+}
+
+/// The PJRT CPU runtime: client + compile cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Construct a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(HloExecutable {
+            exe: Mutex::new(exe),
+            tag: path.display().to_string(),
+        })
+    }
+}
+
+/// Token batches for one device: `x[b, s]` inputs and `y[b, s]`
+/// next-token targets, flattened row-major.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TokenBatch {
+    /// Deterministically carve `batch` sequences of length `seq` from a
+    /// token shard (full-batch local data in the paper's sense).
+    pub fn from_shard(shard: &TokenDataset, batch: usize, seq: usize) -> Result<Self> {
+        let need = batch * seq + 1;
+        if shard.len() < need {
+            anyhow::bail!(
+                "shard too short: {} tokens < batch {batch} × seq {seq} + 1",
+                shard.len()
+            );
+        }
+        let stride = (shard.len() - seq - 1) / batch.max(1);
+        let mut x = Vec::with_capacity(batch * seq);
+        let mut y = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let start = b * stride;
+            for s in 0..seq {
+                x.push(shard.tokens[start + s] as i32);
+                y.push(shard.tokens[start + s + 1] as i32);
+            }
+        }
+        Ok(Self { x, y, batch, seq })
+    }
+
+    fn literals(&self) -> Result<(xla::Literal, xla::Literal)> {
+        let dims = [self.batch as i64, self.seq as i64];
+        let x = xla::Literal::vec1(&self.x).reshape(&dims)?;
+        let y = xla::Literal::vec1(&self.y).reshape(&dims)?;
+        Ok((x, y))
+    }
+}
+
+/// A [`GradientSource`] backed by AOT-compiled JAX models executed via
+/// PJRT — the neural-model path of the three-layer architecture.
+pub struct HloGradientSource {
+    grad_exe: HloExecutable,
+    eval_exe: HloExecutable,
+    dim: usize,
+    layout: ParamLayout,
+    shards: Vec<TokenBatch>,
+    eval_batch: TokenBatch,
+    init_scale: f32,
+    /// Report perplexity (LM) vs plain loss.
+    lm_metrics: bool,
+}
+
+impl HloGradientSource {
+    /// Build from a manifest model entry + per-device token shards +
+    /// held-out tokens.
+    pub fn new(
+        runtime: &PjrtRuntime,
+        model: &ModelEntry,
+        device_shards: &[TokenDataset],
+        heldout: &TokenDataset,
+    ) -> Result<Self> {
+        let grad_exe = runtime.load_hlo(&model.grad_file)?;
+        let eval_exe = runtime.load_hlo(&model.eval_file)?;
+        let shards = device_shards
+            .iter()
+            .map(|s| TokenBatch::from_shard(s, model.batch, model.seq))
+            .collect::<Result<Vec<_>>>()?;
+        let eval_batch = TokenBatch::from_shard(heldout, model.batch, model.seq)?;
+        Ok(Self {
+            grad_exe,
+            eval_exe,
+            dim: model.dim,
+            layout: model.layout.clone(),
+            shards,
+            eval_batch,
+            init_scale: 0.02,
+            lm_metrics: true,
+        })
+    }
+
+    fn run_grad(&self, theta: &[f32], batch: &TokenBatch) -> Result<(f64, Vec<f32>)> {
+        let t = xla::Literal::vec1(theta);
+        let (x, y) = batch.literals()?;
+        let outs = self.grad_exe.run(&[t, x, y])?;
+        anyhow::ensure!(outs.len() == 2, "grad entry must return (loss, grad)");
+        let loss = outs[0].to_vec::<f32>()?[0] as f64;
+        let grad = outs[1].to_vec::<f32>()?;
+        Ok((loss, grad))
+    }
+}
+
+impl GradientSource for HloGradientSource {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        let (loss, g) = self
+            .run_grad(theta, &self.shards[device])
+            .expect("HLO gradient execution failed");
+        grad.copy_from_slice(&g);
+        loss
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        let t = xla::Literal::vec1(theta);
+        let (x, y) = self.eval_batch.literals().expect("eval batch literals");
+        let outs = self
+            .eval_exe
+            .run(&[t, x, y])
+            .expect("HLO eval execution failed");
+        let loss = outs[0].to_vec::<f32>().expect("eval loss")[0] as f64;
+        EvalMetrics {
+            loss,
+            accuracy: None,
+            perplexity: if self.lm_metrics { Some(loss.exp()) } else { None },
+        }
+    }
+
+    fn init_theta(&self, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Xoshiro256pp::stream(seed, 0x7F0);
+        (0..self.dim)
+            .map(|_| rng.gaussian_f32(0.0, self.init_scale))
+            .collect()
+    }
+
+    fn layout(&self) -> ParamLayout {
+        self.layout.clone()
+    }
+}
+
+/// The L1 kernel loaded as an HLO artifact: the fused AQUILA device
+/// step (innovation norms → eq. 19 level → mid-tread quantize →
+/// dequantized Δq + skip-rule norms), used for Rust↔Pallas parity tests
+/// and the `pjrt` quantization backend.
+pub struct HloQuantKernel {
+    exe: HloExecutable,
+    pub dim: usize,
+}
+
+/// Output of the fused HLO device step (mirrors
+/// `quant::midtread::QuantizeOutcome` + the level decision).
+#[derive(Clone, Debug)]
+pub struct HloQuantResult {
+    pub dq: Vec<f32>,
+    pub range: f32,
+    pub bits: u8,
+    pub dq_norm_sq: f64,
+    pub err_norm_sq: f64,
+}
+
+impl HloQuantKernel {
+    pub fn load(runtime: &PjrtRuntime, entry: &KernelEntry) -> Result<Self> {
+        Ok(Self {
+            exe: runtime.load_hlo(&entry.file)?,
+            dim: entry.dim,
+        })
+    }
+
+    /// Execute the fused step for `(g, q_prev)`.
+    pub fn run(&self, grad: &[f32], q_prev: &[f32]) -> Result<HloQuantResult> {
+        anyhow::ensure!(grad.len() == self.dim && q_prev.len() == self.dim);
+        let g = xla::Literal::vec1(grad);
+        let q = xla::Literal::vec1(q_prev);
+        let outs = self.exe.run(&[g, q])?;
+        anyhow::ensure!(
+            outs.len() == 5,
+            "quant kernel must return (dq, range, bits, dq_norm_sq, err_norm_sq)"
+        );
+        Ok(HloQuantResult {
+            dq: outs[0].to_vec::<f32>()?,
+            range: outs[1].to_vec::<f32>()?[0],
+            bits: outs[2].to_vec::<i32>()?[0] as u8,
+            dq_norm_sq: outs[3].to_vec::<f32>()?[0] as f64,
+            err_norm_sq: outs[4].to_vec::<f32>()?[0] as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::text::{markov_corpus, CorpusSpec};
+
+    #[test]
+    fn token_batch_shapes() {
+        let ds = markov_corpus(&CorpusSpec::wikitext2_like(1000, 1));
+        let b = TokenBatch::from_shard(&ds, 4, 16).unwrap();
+        assert_eq!(b.x.len(), 64);
+        assert_eq!(b.y.len(), 64);
+        // y is x shifted by one.
+        assert_eq!(b.x[1], b.y[0]);
+    }
+
+    #[test]
+    fn token_batch_rejects_short_shard() {
+        let ds = markov_corpus(&CorpusSpec::wikitext2_like(20, 2));
+        assert!(TokenBatch::from_shard(&ds, 8, 16).is_err());
+    }
+}

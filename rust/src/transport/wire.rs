@@ -1,0 +1,297 @@
+//! Wire format for device→server uploads.
+//!
+//! Every table and figure reports *actual serialized bytes × 8*, so all
+//! uploads round-trip through this encoding in the simulator: the client
+//! encodes, the transport counts `bytes.len()`, the server decodes.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! [0]      tag: u8       payload kind
+//! [1]      bits: u8      quantization level (0 for raw payloads)
+//! [2..6]   scale: f32    range R (mid-tread) or ‖v‖₂ (QSGD); 0 for raw
+//! [6..10]  len: u32      element count d (or |support| under HeteroFL)
+//! [10..]   body          packed codes / sign bitmap + codes / raw f32
+//! ```
+
+use crate::quant::midtread::QuantizedVec;
+use crate::quant::packing;
+use crate::quant::qsgd::QsgdVec;
+
+/// Header size in bytes (tag + bits + scale + len).
+pub const HEADER_BYTES: usize = 10;
+
+/// A device upload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Mid-tread-quantized gradient *innovation* `Δq_m` — lazy
+    /// aggregation family (AQUILA, LAQ, LAdaQ). Server folds
+    /// incrementally: `q̄ += Δq/M`.
+    MidtreadDelta(QuantizedVec),
+    /// Mid-tread-quantized *full* gradient (AdaQuantFL, DAdaQuant).
+    MidtreadFull(QuantizedVec),
+    /// QSGD stochastically-quantized full gradient.
+    Qsgd(QsgdVec),
+    /// Raw f32 gradient innovation (LENA trigger uploads, MARINA
+    /// correction steps are quantized — see `algorithms::marina`).
+    RawDelta(Vec<f32>),
+    /// Raw f32 full gradient (FedAvg baseline, MARINA sync rounds).
+    RawFull(Vec<f32>),
+}
+
+const TAG_MT_DELTA: u8 = 1;
+const TAG_MT_FULL: u8 = 2;
+const TAG_QSGD: u8 = 3;
+const TAG_RAW_DELTA: u8 = 4;
+const TAG_RAW_FULL: u8 = 5;
+
+/// Error from [`decode`].
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("message truncated: need {need} bytes, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("unknown payload tag {0}")]
+    UnknownTag(u8),
+    #[error("invalid bits field {0}")]
+    BadBits(u8),
+}
+
+impl Payload {
+    /// Element count carried by this payload.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => q.dim(),
+            Payload::Qsgd(q) => q.dim(),
+            Payload::RawDelta(v) | Payload::RawFull(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Quantization level used, if any (for metrics).
+    pub fn level(&self) -> Option<u8> {
+        match self {
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => Some(q.bits),
+            Payload::Qsgd(q) => Some(q.bits),
+            _ => None,
+        }
+    }
+}
+
+/// Serialize a payload to wire bytes.
+pub fn encode(p: &Payload) -> Vec<u8> {
+    let (tag, bits, scale, n) = match p {
+        Payload::MidtreadDelta(q) => (TAG_MT_DELTA, q.bits, q.range, q.dim()),
+        Payload::MidtreadFull(q) => (TAG_MT_FULL, q.bits, q.range, q.dim()),
+        Payload::Qsgd(q) => (TAG_QSGD, q.bits, q.norm, q.dim()),
+        Payload::RawDelta(v) => (TAG_RAW_DELTA, 0, 0.0, v.len()),
+        Payload::RawFull(v) => (TAG_RAW_FULL, 0, 0.0, v.len()),
+    };
+    let body_len = match p {
+        Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+            packing::packed_len(q.dim(), q.bits)
+        }
+        Payload::Qsgd(q) => q.dim().div_ceil(8) + packing::packed_len(q.dim(), q.bits),
+        Payload::RawDelta(v) | Payload::RawFull(v) => 4 * v.len(),
+    };
+    let mut out = Vec::with_capacity(HEADER_BYTES + body_len);
+    out.push(tag);
+    out.push(bits);
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    match p {
+        Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+            out.extend_from_slice(&packing::pack(&q.psi, q.bits));
+        }
+        Payload::Qsgd(q) => {
+            out.extend_from_slice(&packing::pack_signs(&q.signs));
+            out.extend_from_slice(&packing::pack(&q.mags, q.bits));
+        }
+        Payload::RawDelta(v) | Payload::RawFull(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Deserialize wire bytes back into a payload.
+pub fn decode(bytes: &[u8]) -> Result<Payload, WireError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(WireError::Truncated {
+            need: HEADER_BYTES,
+            have: bytes.len(),
+        });
+    }
+    let tag = bytes[0];
+    let bits = bytes[1];
+    let scale = f32::from_le_bytes(bytes[2..6].try_into().unwrap());
+    let n = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let body = &bytes[HEADER_BYTES..];
+    let need_body = |need: usize| -> Result<(), WireError> {
+        if body.len() < need {
+            Err(WireError::Truncated {
+                need: HEADER_BYTES + need,
+                have: bytes.len(),
+            })
+        } else {
+            Ok(())
+        }
+    };
+    match tag {
+        TAG_MT_DELTA | TAG_MT_FULL => {
+            if !(1..=32).contains(&bits) {
+                return Err(WireError::BadBits(bits));
+            }
+            need_body(packing::packed_len(n, bits))?;
+            let psi = packing::unpack(body, bits, n);
+            let q = QuantizedVec {
+                bits,
+                range: scale,
+                psi,
+            };
+            Ok(if tag == TAG_MT_DELTA {
+                Payload::MidtreadDelta(q)
+            } else {
+                Payload::MidtreadFull(q)
+            })
+        }
+        TAG_QSGD => {
+            if !(1..=31).contains(&bits) {
+                return Err(WireError::BadBits(bits));
+            }
+            let sign_bytes = n.div_ceil(8);
+            need_body(sign_bytes + packing::packed_len(n, bits))?;
+            let signs = packing::unpack_signs(&body[..sign_bytes], n);
+            let mags = packing::unpack(&body[sign_bytes..], bits, n);
+            Ok(Payload::Qsgd(QsgdVec {
+                bits,
+                norm: scale,
+                mags,
+                signs,
+            }))
+        }
+        TAG_RAW_DELTA | TAG_RAW_FULL => {
+            need_body(4 * n)?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(f32::from_le_bytes(
+                    body[4 * i..4 * i + 4].try_into().unwrap(),
+                ));
+            }
+            Ok(if tag == TAG_RAW_DELTA {
+                Payload::RawDelta(v)
+            } else {
+                Payload::RawFull(v)
+            })
+        }
+        t => Err(WireError::UnknownTag(t)),
+    }
+}
+
+/// Exact wire size in bits without encoding (used by size assertions and
+/// fast-path accounting; must agree with `encode(p).len() * 8` — tested).
+pub fn wire_bits(p: &Payload) -> u64 {
+    let body_bytes = match p {
+        Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+            packing::packed_len(q.dim(), q.bits)
+        }
+        Payload::Qsgd(q) => q.dim().div_ceil(8) + packing::packed_len(q.dim(), q.bits),
+        Payload::RawDelta(v) | Payload::RawFull(v) => 4 * v.len(),
+    };
+    ((HEADER_BYTES + body_bytes) * 8) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::midtread::quantize;
+    use crate::quant::qsgd;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn sample_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn midtread_roundtrip() {
+        let v = sample_vec(300, 1);
+        for bits in [1u8, 3, 8, 13] {
+            let q = quantize(&v, bits);
+            for p in [
+                Payload::MidtreadDelta(q.clone()),
+                Payload::MidtreadFull(q.clone()),
+            ] {
+                let enc = encode(&p);
+                assert_eq!(enc.len() as u64 * 8, wire_bits(&p));
+                assert_eq!(decode(&enc).unwrap(), p);
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_roundtrip() {
+        let v = sample_vec(127, 2);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let q = qsgd::quantize(&v, 4, &mut rng);
+        let p = Payload::Qsgd(q);
+        let enc = encode(&p);
+        assert_eq!(enc.len() as u64 * 8, wire_bits(&p));
+        assert_eq!(decode(&enc).unwrap(), p);
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let v = sample_vec(64, 4);
+        for p in [Payload::RawDelta(v.clone()), Payload::RawFull(v.clone())] {
+            let enc = encode(&p);
+            assert_eq!(enc.len(), HEADER_BYTES + 256);
+            assert_eq!(decode(&enc).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn quantized_is_smaller_than_raw() {
+        let v = sample_vec(10_000, 5);
+        let raw = encode(&Payload::RawFull(v.clone()));
+        let q4 = encode(&Payload::MidtreadFull(quantize(&v, 4)));
+        // 4-bit packing ⇒ ~8x smaller than f32.
+        assert!(q4.len() * 7 < raw.len(), "{} vs {}", q4.len(), raw.len());
+    }
+
+    #[test]
+    fn empty_payloads() {
+        for p in [
+            Payload::RawFull(vec![]),
+            Payload::MidtreadDelta(quantize(&[], 4)),
+        ] {
+            let enc = encode(&p);
+            assert_eq!(decode(&enc).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[99; 16]).is_err()); // unknown tag
+        let v = sample_vec(32, 6);
+        let mut enc = encode(&Payload::RawFull(v));
+        enc.truncate(20); // truncated body
+        assert!(decode(&enc).is_err());
+        // Bad bits for midtread.
+        let mut enc2 = encode(&Payload::MidtreadFull(quantize(&[1.0, 2.0], 4)));
+        enc2[1] = 0;
+        assert!(decode(&enc2).is_err());
+    }
+
+    #[test]
+    fn level_accessor() {
+        let v = sample_vec(8, 7);
+        assert_eq!(Payload::MidtreadFull(quantize(&v, 6)).level(), Some(6));
+        assert_eq!(Payload::RawFull(v).level(), None);
+    }
+}

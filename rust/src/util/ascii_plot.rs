@@ -1,0 +1,113 @@
+//! Terminal line plots for loss curves and bit traces (used by the
+//! examples and the e2e driver so runs are inspectable without leaving
+//! the terminal).
+
+/// Render `series` as an ASCII plot of the given size. Each series is a
+/// `(label, points)` pair; points are `(x, y)`. Distinct marker glyphs
+/// per series; linear axes; NaN/∞ points skipped.
+pub fn plot(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    const MARKS: [char; 6] = ['*', '+', 'o', 'x', '#', '@'];
+    let width = width.max(16);
+    let height = height.max(4);
+    let finite = |v: f64| v.is_finite();
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, pts) in series {
+        for &(x, y) in pts.iter() {
+            if finite(x) && finite(y) {
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                ymin = ymin.min(y);
+                ymax = ymax.max(y);
+            }
+        }
+    }
+    if !xmin.is_finite() || !ymin.is_finite() {
+        return String::from("(no finite points)\n");
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in pts.iter() {
+            if !finite(x) || !finite(y) {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.4} |")
+        } else if i == height - 1 {
+            format!("{ymin:>10.4} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>12}{:<width$}\n",
+        "",
+        format!("{xmin:.3} .. {xmax:.3}"),
+        width = width
+    ));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {label}\n", MARKS[si % MARKS.len()]));
+    }
+    out
+}
+
+/// Convenience: plot a single y-series against its index.
+pub fn plot_curve(label: &str, ys: &[f64], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = ys.iter().enumerate().map(|(i, &y)| (i as f64, y)).collect();
+    plot(&[(label, &pts)], width, height)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_descending_curve() {
+        let ys: Vec<f64> = (0..50).map(|i| 100.0 / (1.0 + i as f64)).collect();
+        let s = plot_curve("loss", &ys, 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.contains("loss"));
+        // First grid row (max label) contains the max value.
+        assert!(s.starts_with(&format!("{:>10.4} |", 100.0)));
+        assert_eq!(s.lines().count(), 10 + 2 + 1);
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_marks() {
+        let a: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, i as f64)).collect();
+        let b: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, (10 - i) as f64)).collect();
+        let s = plot(&[("up", &a), ("down", &b)], 30, 8);
+        assert!(s.contains('*') && s.contains('+'));
+        assert!(s.contains("up") && s.contains("down"));
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        assert!(plot(&[("e", &[] as &[(f64, f64)])], 20, 5).contains("no finite"));
+        let nanpts = [(0.0, f64::NAN), (1.0, f64::INFINITY)];
+        assert!(plot(&[("n", &nanpts)], 20, 5).contains("no finite"));
+        // Constant series doesn't divide by zero.
+        let flat = [(0.0, 5.0), (1.0, 5.0)];
+        let s = plot(&[("flat", &flat)], 20, 5);
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained substrates: RNG, JSON, TOML-subset, thread pool, and
+//! dense vector kernels.
+//!
+//! The offline build environment ships only the `xla` crate's transitive
+//! dependencies, so everything a typical project would pull from
+//! `rand`/`serde_json`/`toml`/`rayon` is implemented here (see
+//! DESIGN.md §4, S18).
+
+pub mod ascii_plot;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod toml;
+pub mod vecmath;

@@ -1,0 +1,141 @@
+//! Scoped parallel execution for per-device work.
+//!
+//! The simulator runs `M` devices per round; device gradient computation
+//! dominates round wall-clock. With no tokio/rayon available offline, this
+//! module provides a small work-stealing-free static partitioner over
+//! `std::thread::scope`: deterministic (device i always produces result i,
+//! independent of thread interleaving), panic-propagating, and with zero
+//! per-round allocation beyond the output vector.
+
+/// Number of worker threads to use: `AQUILA_THREADS` env var, else the
+/// available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("AQUILA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `0..n` in parallel on `threads` workers, preserving order.
+///
+/// Work is distributed in contiguous chunks. `f` must be `Sync` (it is
+/// invoked concurrently from several threads); results are written into a
+/// pre-sized vector so ordering is deterministic.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+
+    // Contiguous chunking: indices [t*chunk, min((t+1)*chunk, n)).
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slot_chunk) in results.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (i, slot) in slot_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|o| o.expect("worker thread filled every slot"))
+        .collect()
+}
+
+/// Parallel for-each over mutable slices: applies `f(index, &mut item)`
+/// with work split in contiguous chunks.
+pub fn parallel_for_each_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, part) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (i, item) in part.iter_mut().enumerate() {
+                    f(base + i, item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(1000, 8, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i), vec![0]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn for_each_mut_touches_all() {
+        let mut xs = vec![0usize; 257];
+        parallel_for_each_mut(&mut xs, 4, |i, x| *x = i + 1);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i + 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn panics_propagate() {
+        parallel_map(8, 4, |i| {
+            if i == 5 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,283 @@
+//! Minimal TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset the config system uses:
+//!
+//! * `[table]` and `[table.sub]` headers,
+//! * `key = value` with values: string (`"..."`), integer, float, bool,
+//!   and homogeneous arrays of those,
+//! * `#` comments, blank lines.
+//!
+//! Not supported (rejected with an error rather than misparsed):
+//! multi-line strings, dates, inline tables, array-of-tables.
+//!
+//! Parsed documents flatten to `dotted.key -> Value` which is what the
+//! [`crate::config`] layer consumes.
+
+use std::collections::BTreeMap;
+
+/// A TOML scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric accessor accepting either int or float syntax.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Error with 1-based line number context.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document into a flat `dotted.key -> Value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut map = BTreeMap::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let stripped = strip_comment(raw).trim().to_string();
+        if stripped.is_empty() {
+            continue;
+        }
+        if let Some(rest) = stripped.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line,
+                msg: "unterminated table header".into(),
+            })?;
+            if name.starts_with('[') {
+                return Err(TomlError {
+                    line,
+                    msg: "array-of-tables is not supported".into(),
+                });
+            }
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(TomlError {
+                    line,
+                    msg: "empty table name".into(),
+                });
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = stripped.find('=').ok_or(TomlError {
+            line,
+            msg: "expected `key = value`".into(),
+        })?;
+        let key = stripped[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line,
+                msg: "empty key".into(),
+            });
+        }
+        let val_text = stripped[eq + 1..].trim();
+        let value = parse_value(val_text).map_err(|msg| TomlError { line, msg })?;
+        map.insert(format!("{prefix}{key}"), value);
+    }
+    Ok(map)
+}
+
+/// Strip a `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {text}"))
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape: \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Split on commas not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let m = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Float(2.5));
+        assert_eq!(m["c"], Value::Str("hi".into()));
+        assert_eq!(m["d"], Value::Bool(true));
+    }
+
+    #[test]
+    fn parses_tables_and_dotted_keys() {
+        let doc = "top = 1\n[server]\nalpha = 0.1\n[server.limits]\nmax = 10\n";
+        let m = parse(doc).unwrap();
+        assert_eq!(m["top"], Value::Int(1));
+        assert_eq!(m["server.alpha"], Value::Float(0.1));
+        assert_eq!(m["server.limits.max"], Value::Int(10));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let m = parse("xs = [1, 2, 3]\nys = [0.1, 0.25]\nss = [\"a\", \"b\"]\n").unwrap();
+        assert_eq!(
+            m["xs"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(m["ys"].as_array().unwrap()[1].as_f64(), Some(0.25));
+        assert_eq!(m["ss"].as_array().unwrap()[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = "# heading\na = 1 # trailing\n\nb = \"has # inside\" # real comment\n";
+        let m = parse(doc).unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Str("has # inside".into()));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let m = parse("n = 1_000_000\n").unwrap();
+        assert_eq!(m["n"], Value::Int(1_000_000));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+        assert!(parse("[[aot]]\n").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let m = parse("i = 3\nf = 3.0\ne = 1e2\n").unwrap();
+        assert_eq!(m["i"], Value::Int(3));
+        assert_eq!(m["f"], Value::Float(3.0));
+        assert_eq!(m["e"], Value::Float(100.0));
+        assert_eq!(m["i"].as_f64(), Some(3.0));
+    }
+}

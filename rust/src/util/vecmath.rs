@@ -1,0 +1,189 @@
+//! Dense `f32` vector kernels used on the coordinator hot path.
+//!
+//! These are the L3 equivalents of BLAS-1 routines. They are written to
+//! auto-vectorize (simple indexed loops over slices of equal, asserted
+//! length, accumulation in f64 where numerical robustness matters for
+//! norms of million-element gradients).
+
+/// `||v||₂²` with f64 accumulation.
+#[inline]
+pub fn norm2_sq(v: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in v {
+        acc += (x as f64) * (x as f64);
+    }
+    acc
+}
+
+/// `||v||₂`.
+#[inline]
+pub fn norm2(v: &[f32]) -> f64 {
+    norm2_sq(v).sqrt()
+}
+
+/// `||v||_∞`.
+#[inline]
+pub fn norm_inf(v: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in v {
+        let a = x.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// `||a − b||₂²` without materializing the difference.
+#[inline]
+pub fn diff_norm2_sq(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y = x`.
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// `v *= s`.
+#[inline]
+pub fn scale(v: &mut [f32], s: f32) {
+    for x in v {
+        *x *= s;
+    }
+}
+
+/// `out = a − b`.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += (a[i] as f64) * (b[i] as f64);
+    }
+    acc
+}
+
+/// Fused pass computing `(||v||₂², ||v||_∞)` in a single traversal —
+/// the reduction stage of the AQUILA device step (mirrors the L1 Pallas
+/// kernel's pass 1).
+#[inline]
+pub fn l2sq_and_linf(v: &[f32]) -> (f64, f32) {
+    let mut l2 = 0.0f64;
+    let mut li = 0.0f32;
+    for &x in v {
+        l2 += (x as f64) * (x as f64);
+        let a = x.abs();
+        if a > li {
+            li = a;
+        }
+    }
+    (l2, li)
+}
+
+/// Fused pass over the *implicit* innovation `g − q` computing
+/// `(||g−q||₂², ||g−q||_∞)` without materializing it.
+#[inline]
+pub fn innovation_norms(g: &[f32], q: &[f32]) -> (f64, f32) {
+    assert_eq!(g.len(), q.len());
+    let mut l2 = 0.0f64;
+    let mut li = 0.0f32;
+    for i in 0..g.len() {
+        let d = g[i] - q[i];
+        l2 += (d as f64) * (d as f64);
+        let a = d.abs();
+        if a > li {
+            li = a;
+        }
+    }
+    (l2, li)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        let v = [3.0f32, -4.0];
+        assert_eq!(norm2_sq(&v), 25.0);
+        assert_eq!(norm2(&v), 5.0);
+        assert_eq!(norm_inf(&v), 4.0);
+    }
+
+    #[test]
+    fn empty_vectors() {
+        assert_eq!(norm2_sq(&[]), 0.0);
+        assert_eq!(norm_inf(&[]), 0.0);
+        let (l2, li) = l2sq_and_linf(&[]);
+        assert_eq!((l2, li), (0.0, 0.0));
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+        let mut out = [0.0f32; 3];
+        sub(&y, &x, &mut out);
+        assert_eq!(out, [11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn fused_matches_separate() {
+        let v: Vec<f32> = (0..1000).map(|i| ((i * 37) % 101) as f32 - 50.0).collect();
+        let (l2, li) = l2sq_and_linf(&v);
+        assert!((l2 - norm2_sq(&v)).abs() < 1e-6);
+        assert_eq!(li, norm_inf(&v));
+    }
+
+    #[test]
+    fn innovation_matches_materialized() {
+        let g: Vec<f32> = (0..512).map(|i| (i as f32).sin()).collect();
+        let q: Vec<f32> = (0..512).map(|i| (i as f32).cos()).collect();
+        let mut d = vec![0.0f32; 512];
+        sub(&g, &q, &mut d);
+        let (l2, li) = innovation_norms(&g, &q);
+        assert!((l2 - norm2_sq(&d)).abs() < 1e-6);
+        assert_eq!(li, norm_inf(&d));
+    }
+
+    #[test]
+    fn diff_norm_matches() {
+        let a = [1.0f32, 5.0, -2.0];
+        let b = [0.0f32, 3.0, -4.0];
+        assert_eq!(diff_norm2_sq(&a, &b), 1.0 + 4.0 + 4.0);
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

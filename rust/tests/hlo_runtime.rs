@@ -1,0 +1,170 @@
+//! Integration tests across the L3↔L2/L1 bridge: load the AOT HLO
+//! artifacts through PJRT and validate numerics against the Rust
+//! implementations.
+//!
+//! These tests are skipped (with a note) when `artifacts/` has not been
+//! built — run `make artifacts` first. CI runs them after the AOT step.
+
+use aquila::data::text::{markov_corpus, shard_corpus, CorpusSpec};
+use aquila::problems::GradientSource;
+use aquila::quant::levels::aquila_level;
+use aquila::quant::midtread::quantize_innovation_fused;
+use aquila::runtime::{HloGradientSource, HloQuantKernel, Manifest, PjrtRuntime};
+use aquila::util::rng::Xoshiro256pp;
+use aquila::util::vecmath::innovation_norms;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_vec(d: usize, seed: u64, std: f32) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..d).map(|_| rng.gaussian_f32(0.0, std)).collect()
+}
+
+#[test]
+fn manifest_loads_and_references_existing_files() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(!m.models.is_empty());
+    for model in &m.models {
+        assert!(model.grad_file.exists(), "{:?}", model.grad_file);
+        assert!(model.eval_file.exists());
+        assert!(model.dim > 0);
+        assert_eq!(model.layout.dim(), model.dim);
+        if let Some(step) = &model.step_file {
+            assert!(step.exists());
+        }
+    }
+    for k in &m.kernels {
+        assert!(k.file.exists());
+    }
+}
+
+#[test]
+fn grad_artifact_executes_and_loss_is_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.model("txf_tiny").unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let corpus = markov_corpus(&CorpusSpec::wikitext2_like(20_000, 3));
+    let shards = shard_corpus(&corpus.slice(2000, corpus.len()), 4);
+    let heldout = corpus.slice(0, 2000);
+    let src = HloGradientSource::new(&runtime, model, &shards, &heldout).unwrap();
+    assert_eq!(src.dim(), model.dim);
+    assert_eq!(src.num_devices(), 4);
+
+    let theta = src.init_theta(1);
+    let mut grad = vec![0.0f32; src.dim()];
+    let loss = src.local_grad(0, &theta, &mut grad);
+    // Near-random init ⇒ loss ≈ ln(vocab) = ln 64 ≈ 4.16.
+    assert!(
+        (loss - (model.vocab as f64).ln()).abs() < 1.0,
+        "loss {loss} far from ln(V) = {}",
+        (model.vocab as f64).ln()
+    );
+    let gnorm = aquila::util::vecmath::norm2(&grad);
+    assert!(gnorm > 1e-3 && gnorm.is_finite(), "grad norm {gnorm}");
+
+    // One gradient step lowers the local loss.
+    let mut theta2 = theta.clone();
+    aquila::util::vecmath::axpy(-0.5, &grad, &mut theta2);
+    let mut g2 = vec![0.0f32; src.dim()];
+    let loss2 = src.local_grad(0, &theta2, &mut g2);
+    assert!(loss2 < loss, "descent failed: {loss} -> {loss2}");
+
+    // Eval reports perplexity = exp(loss).
+    let ev = src.eval(&theta);
+    let ppl = ev.perplexity.unwrap();
+    assert!((ppl - ev.loss.exp()).abs() < 1e-6);
+    assert!(ppl > 1.0 && ppl < 2.0 * model.vocab as f64);
+}
+
+#[test]
+fn pallas_kernel_parity_with_rust_hot_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let entry = &m.kernels[0];
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let kernel = HloQuantKernel::load(&runtime, entry).unwrap();
+    let d = kernel.dim;
+    for seed in 0..3u64 {
+        let g = random_vec(d, 100 + seed, 1.0);
+        let q = random_vec(d, 200 + seed, 0.8);
+        let hlo = kernel.run(&g, &q).unwrap();
+
+        // Rust-native fused step.
+        let (l2sq, linf) = innovation_norms(&g, &q);
+        let bits = aquila_level(l2sq.sqrt(), linf, d);
+        let mut dq = vec![0.0f32; d];
+        let out = quantize_innovation_fused(&g, &q, bits, linf, &mut dq);
+
+        assert_eq!(hlo.bits, bits, "level rule parity (seed {seed})");
+        assert!((hlo.range - linf).abs() <= f32::EPSILON * linf.abs());
+        for (i, (a, b)) in hlo.dq.iter().zip(&dq).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * linf.abs().max(1.0),
+                "dq[{i}]: HLO {a} vs rust {b}"
+            );
+        }
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1e-9);
+        assert!(rel(hlo.dq_norm_sq, out.dq_norm_sq) < 1e-3);
+        assert!(rel(hlo.err_norm_sq, out.err_norm_sq) < 2e-2);
+    }
+}
+
+#[test]
+fn zero_innovation_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let kernel = HloQuantKernel::load(&runtime, &m.kernels[0]).unwrap();
+    let g = random_vec(kernel.dim, 7, 0.5);
+    let hlo = kernel.run(&g, &g).unwrap();
+    assert_eq!(hlo.bits, 1);
+    assert_eq!(hlo.range, 0.0);
+    assert!(hlo.dq.iter().all(|&x| x == 0.0));
+    assert_eq!(hlo.dq_norm_sq, 0.0);
+    assert_eq!(hlo.err_norm_sq, 0.0);
+}
+
+#[test]
+fn hlo_source_runs_a_federated_round() {
+    use aquila::algorithms::aquila::Aquila;
+    use aquila::coordinator::{Coordinator, RunConfig};
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.model("txf_tiny").unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let corpus = markov_corpus(&CorpusSpec::wikitext2_like(30_000, 5));
+    let shards = shard_corpus(&corpus.slice(3000, corpus.len()), 4);
+    let heldout = corpus.slice(0, 3000);
+    let src = HloGradientSource::new(&runtime, model, &shards, &heldout).unwrap();
+    let algo = Aquila::new(1.25);
+    let cfg = RunConfig {
+        alpha: 0.5,
+        beta: 1.25,
+        rounds: 5,
+        eval_every: 0,
+        seed: 11,
+        threads: 2,
+        ..RunConfig::default()
+    };
+    let trace = Coordinator::new(&src, &algo, cfg).run("wt2-hlo", "iid");
+    assert_eq!(trace.rounds.len(), 5);
+    assert!(trace.total_bits() > 0);
+    // Loss must move downward over 5 rounds of full-batch descent.
+    assert!(
+        trace.final_train_loss() < trace.rounds[0].train_loss,
+        "{} -> {}",
+        trace.rounds[0].train_loss,
+        trace.final_train_loss()
+    );
+}

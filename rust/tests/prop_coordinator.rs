@@ -1,0 +1,245 @@
+//! Coordinator invariants under randomized configurations (in-house
+//! property harness): bit accounting, aggregation semantics, skip
+//! behaviour, determinism, hetero masking, and failure injection.
+
+use aquila::algorithms::{
+    adaquantfl::AdaQuantFl, aquila::Aquila, fedavg::FedAvg, laq::Laq, lena::Lena,
+    marina::Marina, qsgd::QsgdAlgo, Algorithm,
+};
+use aquila::coordinator::{Coordinator, RunConfig};
+use aquila::hetero::{half_half_masks, CapacityMask};
+use aquila::problems::quadratic::QuadraticProblem;
+use aquila::problems::GradientSource;
+use aquila::transport::FaultSpec;
+use aquila::util::rng::Xoshiro256pp;
+
+fn algorithms() -> Vec<Box<dyn Algorithm>> {
+    vec![
+        Box::new(FedAvg),
+        Box::new(QsgdAlgo::new(8)),
+        Box::new(AdaQuantFl::new(2, 32)),
+        Box::new(Laq::new(8, 0.8, 10)),
+        Box::new(Lena::new(0.8, 10)),
+        Box::new(Marina::new(8, 0.2)),
+        Box::new(Aquila::new(0.25)),
+    ]
+}
+
+fn cfg(seed: u64, rounds: usize) -> RunConfig {
+    RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        rounds,
+        eval_every: 0,
+        seed,
+        threads: 3,
+        ..RunConfig::default()
+    }
+}
+
+/// Cumulative bits always equal the sum of per-round bits, bits are
+/// strictly positive on upload rounds, and skip rounds bill zero.
+#[test]
+fn prop_bit_accounting_all_algorithms() {
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    for case in 0..6 {
+        let d = 8 + rng.next_bounded(64) as usize;
+        let m = 2 + rng.next_bounded(8) as usize;
+        let p = QuadraticProblem::new(d, m, 0.5, 2.0, 0.5, case);
+        for algo in algorithms() {
+            let trace = Coordinator::new(&p, algo.as_ref(), cfg(case, 15)).run("q", "iid");
+            let mut cum = 0u64;
+            for r in &trace.rounds {
+                cum += r.bits_up;
+                assert_eq!(r.cum_bits, cum, "{}", algo.name());
+                if r.uploads == 0 {
+                    assert_eq!(r.bits_up, 0, "{}: bits without uploads", algo.name());
+                }
+                if r.bits_up == 0 {
+                    assert_eq!(r.uploads, 0, "{}: uploads without bits", algo.name());
+                }
+                assert!(r.uploads + r.skips <= m);
+            }
+        }
+    }
+}
+
+/// Round 0 bootstraps: every participating device uploads, regardless
+/// of algorithm.
+#[test]
+fn prop_round_zero_all_upload() {
+    let p = QuadraticProblem::new(32, 6, 0.5, 2.0, 0.5, 7);
+    for algo in algorithms() {
+        let mut c = Coordinator::new(&p, algo.as_ref(), cfg(1, 1));
+        let rec = c.run_round(0);
+        assert_eq!(rec.uploads, 6, "{} bootstrap", algo.name());
+        assert_eq!(rec.skips, 0);
+    }
+}
+
+/// Determinism: identical seeds ⇒ identical traces, across thread
+/// counts and algorithms.
+#[test]
+fn prop_determinism_across_threads() {
+    let p = QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 9);
+    for algo in algorithms() {
+        let mut c1 = cfg(5, 12);
+        c1.threads = 1;
+        let mut c4 = cfg(5, 12);
+        c4.threads = 4;
+        let t1 = Coordinator::new(&p, algo.as_ref(), c1).run("q", "iid");
+        let t4 = Coordinator::new(&p, algo.as_ref(), c4).run("q", "iid");
+        assert_eq!(t1.total_bits(), t4.total_bits(), "{}", algo.name());
+        for (a, b) in t1.rounds.iter().zip(&t4.rounds) {
+            assert_eq!(a.train_loss, b.train_loss, "{}", algo.name());
+            assert_eq!(a.uploads, b.uploads);
+        }
+    }
+}
+
+/// Lazy-family equivalence: with β = 0 (never skip) AQUILA's trajectory
+/// equals "everyone uploads innovations every round", and the server's
+/// direction reconstructs the average stored quantized gradient —
+/// eq. (5)'s bookkeeping.
+#[test]
+fn prop_aquila_beta0_uploads_everything() {
+    let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 11);
+    let algo = Aquila::new(0.0);
+    let mut c = cfg(3, 10);
+    c.beta = 0.0;
+    let trace = Coordinator::new(&p, &algo, c).run("q", "iid");
+    assert_eq!(trace.total_skips(), 0);
+    assert_eq!(trace.total_uploads(), 40);
+}
+
+/// Heterogeneous runs: no coordinate outside a device's mask is ever
+/// touched by that device's uploads (checked indirectly: a run where
+/// ALL devices share a 50% mask leaves the complementary coordinates of
+/// θ exactly at their initial values).
+#[test]
+fn prop_hetero_mask_no_leak() {
+    let p = QuadraticProblem::new(64, 4, 0.5, 2.0, 0.5, 13);
+    let layout = p.layout();
+    let half = std::sync::Arc::new(CapacityMask::from_layout(&layout, 0.5));
+    let masks = vec![half.clone(); 4];
+    let algo = Aquila::new(0.1);
+    let mut coord = Coordinator::with_masks(&p, &algo, masks, cfg(15, 10));
+    let theta0 = coord.theta().to_vec();
+    for k in 0..10 {
+        coord.run_round(k);
+    }
+    let theta = coord.theta();
+    for i in 0..64u32 {
+        let in_mask = half.indices.contains(&i);
+        let moved = (theta[i as usize] - theta0[i as usize]).abs() > 0.0;
+        if !in_mask {
+            assert!(!moved, "coordinate {i} outside mask moved");
+        }
+    }
+    // And the masked coordinates did move (training happened).
+    assert!(half
+        .indices
+        .iter()
+        .any(|&i| (theta[i as usize] - theta0[i as usize]).abs() > 1e-6));
+}
+
+/// The 100%–50% split reduces total bits for every always-upload
+/// algorithm by roughly the support ratio.
+#[test]
+fn prop_hetero_bit_reduction_ratio() {
+    let p = QuadraticProblem::new(256, 8, 0.5, 2.0, 0.5, 17);
+    let algo = FedAvg;
+    let t_full = Coordinator::new(&p, &algo, cfg(19, 5)).run("q", "iid");
+    let masks = half_half_masks(&p.layout(), 8, 0.5);
+    let support = masks[7].support();
+    let t_het = Coordinator::with_masks(&p, &algo, masks, cfg(19, 5)).run("q", "het");
+    // Expected payload ratio: half devices full d, half at `support`.
+    let expect = (0.5 + 0.5 * support as f64 / 256.0) * t_full.total_bits() as f64;
+    let actual = t_het.total_bits() as f64;
+    assert!(
+        (actual - expect).abs() / expect < 0.05,
+        "hetero bits {actual} vs expected {expect}"
+    );
+}
+
+/// Fault injection: with drop probability p, delivered messages ≈
+/// (1-p)·sent, bits are still billed for drops, and training still
+/// converges for FedAvg.
+#[test]
+fn prop_fault_injection_accounting() {
+    let p = QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 21);
+    let algo = FedAvg;
+    let mut c = cfg(23, 60);
+    c.alpha = 0.1;
+    c.faults = FaultSpec {
+        drop_prob: 0.3,
+        seed: 5,
+    };
+    let trace = Coordinator::new(&p, &algo, c).run("q", "iid");
+    // FedAvg sends every round; bits equal the no-fault case.
+    let c2 = cfg(23, 60);
+    let t2 = Coordinator::new(&p, &algo, c2).run("q", "iid");
+    assert_eq!(trace.total_bits(), t2.total_bits());
+    let gap = trace.final_train_loss() - p.optimum_value();
+    assert!(gap < 0.1, "no convergence under faults: gap {gap}");
+}
+
+/// MARINA sync cadence: with p_sync = 1 every round is raw (bits equal
+/// FedAvg's); with p_sync = 0 only round 0 is raw.
+#[test]
+fn prop_marina_sync_extremes() {
+    let p = QuadraticProblem::new(32, 4, 0.5, 2.0, 0.5, 25);
+    let mut c_all = cfg(27, 8);
+    c_all.marina_p_sync = 1.0;
+    let marina = Marina::new(8, 1.0);
+    let t_all = Coordinator::new(&p, &marina, c_all).run("q", "iid");
+    let fed = FedAvg;
+    let t_fed = Coordinator::new(&p, &fed, cfg(27, 8)).run("q", "iid");
+    assert_eq!(t_all.total_bits(), t_fed.total_bits());
+
+    let mut c_none = cfg(29, 8);
+    c_none.marina_p_sync = 0.0;
+    let marina0 = Marina::new(8, 0.0);
+    let t_none = Coordinator::new(&p, &marina0, c_none).run("q", "iid");
+    assert!(t_none.total_bits() < t_fed.total_bits());
+}
+
+/// Loss estimates broadcast to AdaQuantFL drive its level up as
+/// training converges (the Section-II pathology, observable end to
+/// end).
+#[test]
+fn prop_adaquantfl_level_grows_e2e() {
+    // Shared-center quadratic: f* = 0, so the loss ratio f(θ⁰)/f(θᵏ)
+    // diverges as training converges — exposing the unbounded-level
+    // pathology end to end.
+    let p = QuadraticProblem::shared_center(32, 4, 0.5, 2.0, 31);
+    let algo = AdaQuantFl::new(2, 32);
+    let trace = Coordinator::new(&p, &algo, cfg(33, 80)).run("q", "iid");
+    let early = trace.rounds[1].mean_level;
+    let late = trace.rounds.last().unwrap().mean_level;
+    assert!(
+        late > early * 2.0,
+        "AdaQuantFL level did not grow: {early} -> {late}"
+    );
+    // And eventually hits the 32-bit cap the paper calls meaningless.
+    assert!(late >= 30.0, "late level {late}");
+}
+
+/// AQUILA's level stays bounded by Theorem 1's cap throughout a run
+/// while AdaQuantFL's exceeds it.
+#[test]
+fn prop_aquila_level_bounded_e2e() {
+    use aquila::quant::levels::aquila_level_upper_bound;
+    let p = QuadraticProblem::new(64, 4, 0.5, 2.0, 0.5, 37);
+    let algo = Aquila::new(0.25);
+    let trace = Coordinator::new(&p, &algo, cfg(39, 60)).run("q", "iid");
+    let cap = aquila_level_upper_bound(64) as f64;
+    for r in &trace.rounds {
+        assert!(
+            r.mean_level <= cap + 1e-9,
+            "round {}: level {} above cap {cap}",
+            r.round,
+            r.mean_level
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Property tests for the quantization stack (in-house seeded-case
+//! harness; the offline registry has no proptest — see DESIGN.md S18).
+//!
+//! Each property runs hundreds of randomized cases over dimensions,
+//! levels, and value scales.
+
+use aquila::quant::levels::{aquila_level, aquila_level_upper_bound, aquila_tau_star};
+use aquila::quant::midtread::{
+    dequantize, quantize, quantize_innovation_fused, quantize_with_range, tau,
+};
+use aquila::quant::packing::{pack, packed_len, unpack};
+use aquila::quant::qsgd;
+use aquila::transport::wire::{decode, encode, wire_bits, Payload};
+use aquila::util::rng::Xoshiro256pp;
+use aquila::util::vecmath::{innovation_norms, norm2_sq};
+
+fn random_vec(rng: &mut Xoshiro256pp, d: usize, scale: f32) -> Vec<f32> {
+    (0..d).map(|_| rng.gaussian_f32(0.0, scale)).collect()
+}
+
+/// Per-element mid-tread error ≤ τR, for all (d, b, scale).
+#[test]
+fn prop_midtread_error_bound() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1000);
+    for case in 0..300 {
+        let d = 1 + rng.next_bounded(3000) as usize;
+        let bits = 1 + rng.next_bounded(16) as u8;
+        let scale = [1e-4f32, 1.0, 1e4][case % 3];
+        let v = random_vec(&mut rng, d, scale);
+        let q = quantize(&v, bits);
+        let dq = dequantize(&q);
+        // τR plus the f32 representation error of values near ±R (at
+        // b = 16 and |v| ≈ 3e4 a single f32 ULP is ~2e-3 and the grid
+        // step ~1, so the ULP term matters).
+        let bound = tau(bits) * q.range as f64 * (1.0 + 1e-5)
+            + q.range as f64 * f32::EPSILON as f64 * 4.0;
+        for (i, (a, b)) in v.iter().zip(&dq).enumerate() {
+            assert!(
+                ((a - b).abs() as f64) <= bound + 1e-12,
+                "case {case} d={d} b={bits} i={i}: |{a} - {b}| > {bound}"
+            );
+        }
+    }
+}
+
+/// Codes always fit in `bits` bits.
+#[test]
+fn prop_codes_fit() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1001);
+    for _ in 0..200 {
+        let d = 1 + rng.next_bounded(500) as usize;
+        let bits = 1 + rng.next_bounded(20) as u8;
+        let v = random_vec(&mut rng, d, 2.0);
+        let q = quantize(&v, bits);
+        let max = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        assert!(q.psi.iter().all(|&c| c <= max));
+    }
+}
+
+/// Packing round-trips exactly for every (codes, bits).
+#[test]
+fn prop_packing_roundtrip() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1002);
+    for _ in 0..300 {
+        let n = rng.next_bounded(1000) as usize;
+        let bits = 1 + rng.next_bounded(32) as u8;
+        let mask: u64 = if bits == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << bits) - 1
+        };
+        let codes: Vec<u32> = (0..n).map(|_| (rng.next_u64() & mask) as u32).collect();
+        let packed = pack(&codes, bits);
+        assert_eq!(packed.len(), packed_len(n, bits));
+        assert_eq!(unpack(&packed, bits, n), codes);
+    }
+}
+
+/// Wire encode/decode is the identity, and `wire_bits` = 8×bytes.
+#[test]
+fn prop_wire_roundtrip() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1003);
+    for case in 0..200 {
+        let d = 1 + rng.next_bounded(400) as usize;
+        let v = random_vec(&mut rng, d, 1.0);
+        let payload = match case % 5 {
+            0 => Payload::MidtreadDelta(quantize(&v, 1 + (case % 13) as u8)),
+            1 => Payload::MidtreadFull(quantize(&v, 1 + (case % 13) as u8)),
+            2 => Payload::Qsgd(qsgd::quantize(&v, 1 + (case % 8) as u8, &mut rng)),
+            3 => Payload::RawDelta(v.clone()),
+            _ => Payload::RawFull(v.clone()),
+        };
+        let bytes = encode(&payload);
+        assert_eq!(bytes.len() as u64 * 8, wire_bits(&payload));
+        assert_eq!(decode(&bytes).unwrap(), payload);
+    }
+}
+
+/// Theorem 1 self-consistency: 1 ≤ b* ≤ ceil(log2(√d + 1)) and
+/// τ* ∈ (0, 1] — the "no clamping needed" property.
+#[test]
+fn prop_level_rule_self_consistent() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1004);
+    for _ in 0..500 {
+        let d = 1 + rng.next_bounded(5000) as usize;
+        let v = random_vec(&mut rng, d, 3.0);
+        let (l2sq, linf) = aquila::util::vecmath::l2sq_and_linf(&v);
+        let b = aquila_level(l2sq.sqrt(), linf, v.len());
+        assert!(b >= 1);
+        assert!(b <= aquila_level_upper_bound(v.len()));
+        let t = aquila_tau_star(l2sq.sqrt(), linf, v.len());
+        assert!(t > 0.0 && t <= 1.0);
+    }
+}
+
+/// The fused innovation path agrees with quantize + dequantize composed
+/// and with materialized norms.
+#[test]
+fn prop_fused_equals_composed() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1005);
+    for _ in 0..100 {
+        let d = 1 + rng.next_bounded(2000) as usize;
+        let bits = 1 + rng.next_bounded(12) as u8;
+        let g = random_vec(&mut rng, d, 1.0);
+        let q = random_vec(&mut rng, d, 1.0);
+        let v: Vec<f32> = g.iter().zip(&q).map(|(a, b)| a - b).collect();
+        let (_, linf) = innovation_norms(&g, &q);
+
+        let mut dq = vec![0.0f32; d];
+        let out = quantize_innovation_fused(&g, &q, bits, linf, &mut dq);
+        let composed = quantize_with_range(&v, bits, linf);
+        assert_eq!(out.quantized.psi, composed.psi);
+
+        let dq_n = norm2_sq(&dq);
+        assert!((out.dq_norm_sq - dq_n).abs() <= 1e-4 * dq_n.max(1.0));
+        let err: Vec<f32> = v.iter().zip(&dq).map(|(a, b)| a - b).collect();
+        let err_n = norm2_sq(&err);
+        assert!((out.err_norm_sq - err_n).abs() <= 1e-4 * err_n.max(1e-12));
+    }
+}
+
+/// Quantized-then-dequantized error norm shrinks monotonically (weakly)
+/// as bits grow.
+#[test]
+fn prop_error_monotone_in_bits() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1006);
+    for _ in 0..50 {
+        let d = 16 + rng.next_bounded(1000) as usize;
+        let v = random_vec(&mut rng, d, 1.0);
+        let mut prev = f64::INFINITY;
+        for bits in [1u8, 2, 4, 8, 12] {
+            let q = quantize(&v, bits);
+            let dq = dequantize(&q);
+            let err: f64 = v
+                .iter()
+                .zip(&dq)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!(
+                err <= prev * (1.0 + 1e-9),
+                "error grew from {prev} to {err} at b={bits}"
+            );
+            prev = err;
+        }
+    }
+}
+
+/// QSGD is unbiased across many draws (statistical property at coarse
+/// tolerance).
+#[test]
+fn prop_qsgd_unbiased() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1007);
+    let v = random_vec(&mut rng, 64, 1.0);
+    let mut acc = vec![0.0f64; 64];
+    let trials = 3000;
+    for _ in 0..trials {
+        let q = qsgd::quantize(&v, 3, &mut rng);
+        for (a, x) in acc.iter_mut().zip(qsgd::dequantize(&q)) {
+            *a += x as f64;
+        }
+    }
+    let norm = norm2_sq(&v).sqrt();
+    for (i, a) in acc.iter().enumerate() {
+        let mean = a / trials as f64;
+        assert!(
+            (mean - v[i] as f64).abs() < 0.05 * norm,
+            "coord {i}: {mean} vs {}",
+            v[i]
+        );
+    }
+}
+
+/// Adversarial value patterns: subnormals, huge dynamic range, constant
+/// vectors, alternating signs.
+#[test]
+fn prop_adversarial_patterns() {
+    let patterns: Vec<Vec<f32>> = vec![
+        vec![f32::MIN_POSITIVE; 64],
+        (0..64)
+            .map(|i| if i % 2 == 0 { 1e30 } else { 1e-30 })
+            .collect(),
+        vec![-1.0; 17],
+        (0..33)
+            .map(|i| if i % 2 == 0 { 5.0 } else { -5.0 })
+            .collect(),
+        vec![0.0; 8],
+    ];
+    for (pi, v) in patterns.iter().enumerate() {
+        for bits in [1u8, 4, 16] {
+            let q = quantize(v, bits);
+            let dq = dequantize(&q);
+            let bound = tau(bits) * q.range as f64 * (1.0 + 1e-5) + 1e-30;
+            for (a, b) in v.iter().zip(&dq) {
+                assert!(
+                    ((a - b).abs() as f64) <= bound,
+                    "pattern {pi} bits {bits}: {a} -> {b}"
+                );
+            }
+            // Wire round-trip stays exact even for extremes.
+            let p = Payload::MidtreadFull(q);
+            assert_eq!(decode(&encode(&p)).unwrap(), p);
+        }
+    }
+}
