@@ -37,7 +37,7 @@ fn main() {
     let mut aquila_bits = 0u64;
     let mut rows = Vec::new();
     for algo in table_suite(spec.beta) {
-        let trace = run_cell(&spec, algo.as_ref());
+        let trace = run_cell(&spec, algo.clone());
         let total = trace.total_uploads() + trace.total_skips();
         let mean_b: f64 = {
             let levels: Vec<f64> = trace

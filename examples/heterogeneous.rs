@@ -7,14 +7,16 @@
 
 use aquila::algorithms::{aquila::Aquila, qsgd::QsgdAlgo, Algorithm};
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
-use aquila::coordinator::Coordinator;
+use aquila::coordinator::Session;
 use aquila::hetero::{half_half_masks, CapacityMask};
 use aquila::metrics::bits_display;
+use aquila::problems::GradientSource;
 use aquila::repro::metric_display;
+use std::sync::Arc;
 
 fn main() {
     let spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false).scaled(0.3, 120);
-    let problem = spec.build_problem();
+    let problem: Arc<dyn GradientSource> = spec.build_problem().into();
     let layout = problem.layout();
 
     // The 100%–50% split of the paper's heterogeneous tables.
@@ -27,24 +29,28 @@ fn main() {
         100.0 * reduced.support() as f64 / full_d as f64
     );
 
-    let algos: Vec<(&str, Box<dyn Algorithm>)> = vec![
-        ("QSGD-8b", Box::new(QsgdAlgo::new(8))),
-        ("AQUILA", Box::new(Aquila::new(spec.beta))),
+    let algos: Vec<(&str, Arc<dyn Algorithm>)> = vec![
+        ("QSGD-8b", Arc::new(QsgdAlgo::new(8))),
+        ("AQUILA", Arc::new(Aquila::new(spec.beta))),
     ];
     println!(
         "{:<10} {:>12} {:>14} {:>14}",
         "algorithm", "accuracy", "homog(Gb)", "hetero(Gb)"
     );
     for (name, algo) in algos {
-        let t_homo = Coordinator::new(problem.as_ref(), algo.as_ref(), spec.run_config())
-            .run(spec.dataset.name(), "homog");
-        let t_het = Coordinator::with_masks(
-            problem.as_ref(),
-            algo.as_ref(),
-            masks.clone(),
-            spec.run_config(),
-        )
-        .run(spec.dataset.name(), "hetero");
+        let t_homo = Session::builder(problem.clone(), algo.clone())
+            .config(spec.run_config())
+            .dataset(spec.dataset.name())
+            .split("homog")
+            .build()
+            .run();
+        let t_het = Session::builder(problem.clone(), algo)
+            .config(spec.run_config())
+            .masks(masks.clone())
+            .dataset(spec.dataset.name())
+            .split("hetero")
+            .build()
+            .run();
         println!(
             "{name:<10} {:>11}% {:>14} {:>14}",
             metric_display(&t_het),

@@ -12,7 +12,9 @@
 use aquila::algorithms::{aquila::Aquila, fedavg::FedAvg, qsgd::QsgdAlgo};
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
 use aquila::metrics::bits_display;
-use aquila::repro::{metric_display, run_cell};
+use aquila::repro::{metric_display, run_cell, session_for};
+use aquila::selection::SelectionSpec;
+use std::sync::Arc;
 
 fn main() {
     // A CIFAR-10-like Gaussian-mixture task, 10 devices, IID split
@@ -27,15 +29,23 @@ fn main() {
         spec.beta
     );
 
-    println!("{:<10} {:>10} {:>12} {:>9} {:>8}", "algorithm", "accuracy", "uplink(Gb)", "uploads", "skip%");
+    // The AQUILA+rand5 row runs through the builder with an explicit
+    // selection strategy — the same thing `--select random-k:5` does.
+    let aquila_rand5 = session_for(&spec, Arc::new(Aquila::new(spec.beta)))
+        .selection_spec(SelectionSpec::RandomK(5))
+        .build()
+        .run();
+
+    println!("{:<12} {:>10} {:>12} {:>9} {:>8}", "algorithm", "accuracy", "uplink(Gb)", "uploads", "skip%");
     for (name, trace) in [
-        ("FedAvg", run_cell(&spec, &FedAvg)),
-        ("QSGD-8b", run_cell(&spec, &QsgdAlgo::new(8))),
-        ("AQUILA", run_cell(&spec, &Aquila::new(spec.beta))),
+        ("FedAvg", run_cell(&spec, Arc::new(FedAvg))),
+        ("QSGD-8b", run_cell(&spec, Arc::new(QsgdAlgo::new(8)))),
+        ("AQUILA", run_cell(&spec, Arc::new(Aquila::new(spec.beta)))),
+        ("AQUILA+rand5", aquila_rand5),
     ] {
         let total = trace.total_uploads() + trace.total_skips();
         println!(
-            "{name:<10} {:>9}% {:>12} {:>9} {:>7.1}%",
+            "{name:<12} {:>9}% {:>12} {:>9} {:>7.1}%",
             metric_display(&trace),
             bits_display(trace.total_bits()),
             trace.total_uploads(),

@@ -17,14 +17,17 @@
 //! free-runs the server into divergence — see EXPERIMENTS.md
 //! §Deviations D4.
 //!
-//! Usage: `make artifacts && cargo run --release --example train_transformer`
+//! Usage: `make artifacts && cargo run --release --features xla --example train_transformer`
+//! (the `xla` feature needs the vendored PJRT bindings; see `rust/Cargo.toml`)
 
 use aquila::algorithms::{aquila::Aquila, fedavg::FedAvg, Algorithm};
-use aquila::coordinator::{Coordinator, RunConfig};
+use aquila::coordinator::{RunConfig, Session};
 use aquila::data::text::{markov_corpus, shard_corpus, CorpusSpec};
 use aquila::metrics::{bits_display, RunTrace};
+use aquila::problems::GradientSource;
 use aquila::runtime::{HloGradientSource, Manifest, PjrtRuntime};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key)
@@ -57,7 +60,8 @@ fn main() -> anyhow::Result<()> {
 
     let runtime = PjrtRuntime::cpu()?;
     println!("PJRT platform: {}", runtime.platform());
-    let src = HloGradientSource::new(&runtime, model, &shards, &heldout)?;
+    let src: Arc<dyn GradientSource> =
+        Arc::new(HloGradientSource::new(&runtime, model, &shards, &heldout)?);
 
     let cfg = RunConfig {
         alpha,
@@ -70,12 +74,10 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("\n--- AQUILA (β = {beta}) ---");
-    let aquila_algo = Aquila::new(beta);
-    let t_aq = run_logged(&src, &aquila_algo, cfg.clone(), "aquila");
+    let t_aq = run_logged(src.clone(), Arc::new(Aquila::new(beta)), cfg.clone(), "aquila");
 
     println!("\n--- FedAvg (uncompressed reference) ---");
-    let fed = FedAvg;
-    let t_fed = run_logged(&src, &fed, cfg, "fedavg");
+    let t_fed = run_logged(src, Arc::new(FedAvg), cfg, "fedavg");
 
     println!("\n=== summary ===");
     summarize("AQUILA", &t_aq);
@@ -91,22 +93,27 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn run_logged(
-    src: &HloGradientSource,
-    algo: &dyn Algorithm,
+    src: Arc<dyn GradientSource>,
+    algo: Arc<dyn Algorithm>,
     cfg: RunConfig,
     tag: &str,
 ) -> RunTrace {
     let rounds = cfg.rounds;
-    let mut coord = Coordinator::new(src, algo, cfg);
+    let name = algo.name();
+    let mut session = Session::builder(src, algo)
+        .config(cfg)
+        .dataset("markov-wt2")
+        .split(&format!("iid-{tag}"))
+        .build();
     let mut trace = RunTrace {
-        algorithm: algo.name().to_string(),
+        algorithm: name.to_string(),
         dataset: "markov-wt2".to_string(),
         split: format!("iid-{tag}"),
         rounds: Vec::with_capacity(rounds),
     };
     let t0 = std::time::Instant::now();
     for k in 0..rounds {
-        let rec = coord.run_round(k);
+        let rec = session.run_round(k);
         if rec.eval_loss.is_some() || k < 3 {
             println!(
                 "round {k:>4}  train_loss {:>7.4}  ppl {:>8}  bits {:>12}  uploads {:>2}/{}  mean_b {:>4.1}",
@@ -124,7 +131,7 @@ fn run_logged(
     }
     println!(
         "[{}] {} rounds in {:.1}s",
-        algo.name(),
+        name,
         rounds,
         t0.elapsed().as_secs_f64()
     );

@@ -13,7 +13,7 @@ fn main() {
     let spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false).scaled(0.1, 25);
     bench.bench("fig2 subplot sweep (7 algos × 25 rounds)", || {
         for algo in table_suite(spec.beta) {
-            let trace = run_cell(&spec, algo.as_ref());
+            let trace = run_cell(&spec, algo);
             // The two series of the figure:
             let loss_vs_bits: Vec<(u64, f64)> = trace
                 .rounds

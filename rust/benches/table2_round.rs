@@ -7,22 +7,26 @@
 use aquila::algorithms::table_suite;
 use aquila::benchkit::{black_box, Bench};
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
-use aquila::coordinator::Coordinator;
+use aquila::coordinator::Session;
+use aquila::problems::GradientSource;
+use std::sync::Arc;
 
 fn main() {
     let mut bench = Bench::new();
     for ds in [DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2] {
         let spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.2, 8);
-        let problem = spec.build_problem();
+        let problem: Arc<dyn GradientSource> = spec.build_problem().into();
         for algo in table_suite(spec.beta) {
-            let mut coord = Coordinator::new(problem.as_ref(), algo.as_ref(), spec.run_config());
+            let mut session = Session::builder(problem.clone(), algo.clone())
+                .config(spec.run_config())
+                .build();
             // Bootstrap round outside the timed region.
-            coord.run_round(0);
+            session.run_round(0);
             let mut k = 1usize;
             bench.bench(
                 &format!("{} round [{}]", spec.row_label(), algo.name()),
                 || {
-                    black_box(coord.run_round(k));
+                    black_box(session.run_round(k));
                     k += 1;
                 },
             );

@@ -5,28 +5,28 @@
 use aquila::algorithms::table_suite;
 use aquila::benchkit::{black_box, Bench};
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
-use aquila::coordinator::Coordinator;
+use aquila::coordinator::Session;
 use aquila::hetero::half_half_masks;
+use aquila::problems::GradientSource;
+use std::sync::Arc;
 
 fn main() {
     let mut bench = Bench::new();
     for ds in [DatasetKind::Cf10, DatasetKind::Wt2] {
         let spec = ExperimentSpec::new(ds, SplitKind::Iid, true).scaled(0.2, 8);
-        let problem = spec.build_problem();
+        let problem: Arc<dyn GradientSource> = spec.build_problem().into();
         let masks = half_half_masks(&problem.layout(), problem.num_devices(), 0.5);
         for algo in table_suite(spec.beta) {
-            let mut coord = Coordinator::with_masks(
-                problem.as_ref(),
-                algo.as_ref(),
-                masks.clone(),
-                spec.run_config(),
-            );
-            coord.run_round(0);
+            let mut session = Session::builder(problem.clone(), algo.clone())
+                .config(spec.run_config())
+                .masks(masks.clone())
+                .build();
+            session.run_round(0);
             let mut k = 1usize;
             bench.bench(
                 &format!("{} hetero round [{}]", spec.row_label(), algo.name()),
                 || {
-                    black_box(coord.run_round(k));
+                    black_box(session.run_round(k));
                     k += 1;
                 },
             );

@@ -58,8 +58,10 @@ impl Algorithm for DAdaQuant {
     }
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
+        // Defensive only: the coordinator engine never invokes the
+        // client for unselected devices (participation is accounted
+        // engine-side, not in `DeviceState::skips`).
         if !ctx.is_selected(dev.id) {
-            dev.skips += 1;
             return ClientUpload::skip();
         }
         let bits = self.client_level(dev.id, ctx.dadaquant_level);

@@ -67,8 +67,11 @@ pub struct RoundCtx {
     /// Whether this is a MARINA synchronization round (coordinator flips
     /// a shared coin with probability `p_sync`).
     pub marina_sync: bool,
-    /// Devices selected this round (`None` = all devices participate);
-    /// used by DAdaQuant's random-K sampling.
+    /// Devices selected this round (`None` = all devices participate),
+    /// decided by the run's `crate::selection::SelectionStrategy`.
+    /// Invariant: sorted ascending and deduplicated (the coordinator
+    /// engine normalizes strategy output), so membership tests are
+    /// `O(log K)` — `is_selected` is called once per device per round.
     pub selected: Option<Vec<usize>>,
     /// DAdaQuant time-adaptive level (maintained server-side).
     pub dadaquant_level: u8,
@@ -92,11 +95,12 @@ impl RoundCtx {
         }
     }
 
-    /// Is `device` participating this round?
+    /// Is `device` participating this round? Binary search over the
+    /// sorted selection set (see the `selected` field invariant).
     pub fn is_selected(&self, device: usize) -> bool {
         match &self.selected {
             None => true,
-            Some(s) => s.contains(&device),
+            Some(s) => s.binary_search(&device).is_ok(),
         }
     }
 }
@@ -266,16 +270,17 @@ pub(crate) fn fold_incremental(srv: &mut ServerAgg, uploads: &[(usize, Payload)]
 }
 
 /// Construct every algorithm of Tables II/III with the hyperparameters
-/// used by the reproduction presets.
-pub fn table_suite(beta: f32) -> Vec<Box<dyn Algorithm>> {
+/// used by the reproduction presets, `Arc`-owned for direct use with
+/// `crate::coordinator::SessionBuilder`.
+pub fn table_suite(beta: f32) -> Vec<Arc<dyn Algorithm>> {
     vec![
-        Box::new(qsgd::QsgdAlgo::new(8)),
-        Box::new(adaquantfl::AdaQuantFl::new(4, 32)),
-        Box::new(laq::Laq::new(8, 0.8, 10)),
-        Box::new(ladaq::LAdaQ::new(4, 32, 0.8, 10)),
-        Box::new(lena::Lena::new(0.8, 10)),
-        Box::new(marina::Marina::new(8, 0.1)),
-        Box::new(aquila::Aquila::new(beta)),
+        Arc::new(qsgd::QsgdAlgo::new(8)),
+        Arc::new(adaquantfl::AdaQuantFl::new(4, 32)),
+        Arc::new(laq::Laq::new(8, 0.8, 10)),
+        Arc::new(ladaq::LAdaQ::new(4, 32, 0.8, 10)),
+        Arc::new(lena::Lena::new(0.8, 10)),
+        Arc::new(marina::Marina::new(8, 0.1)),
+        Arc::new(aquila::Aquila::new(beta)),
     ]
 }
 
@@ -336,6 +341,18 @@ mod tests {
         assert_eq!(srv.direction, vec![1.0]); // 4.0 / M=4
         fold_incremental(&mut srv, &ups);
         assert_eq!(srv.direction, vec![2.0]); // persists
+    }
+
+    #[test]
+    fn is_selected_binary_search_matches_membership() {
+        let mut ctx = RoundCtx::bare(1, 0.1, 0.25, 0.0);
+        assert!(ctx.is_selected(0) && ctx.is_selected(99)); // None = all
+        ctx.selected = Some(vec![0, 3, 4, 9]);
+        for d in 0..12 {
+            assert_eq!(ctx.is_selected(d), [0, 3, 4, 9].contains(&d), "{d}");
+        }
+        ctx.selected = Some(Vec::new());
+        assert!(!ctx.is_selected(0));
     }
 
     #[test]

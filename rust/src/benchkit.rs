@@ -1,5 +1,5 @@
 //! Criterion-style micro-benchmark harness (the offline registry has no
-//! `criterion`; see DESIGN.md S18).
+//! `criterion`; see DESIGN.md §6).
 //!
 //! Provides warmup + timed sampling, robust statistics (mean / median /
 //! std / min), throughput reporting, and a black-box sink. All

@@ -19,6 +19,7 @@ use crate::problems::logistic::LogisticProblem;
 use crate::problems::mlp::MlpProblem;
 use crate::problems::softmax_lm::SoftmaxLmProblem;
 use crate::problems::GradientSource;
+use crate::selection::SelectionSpec;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::toml;
 use std::path::Path;
@@ -111,6 +112,10 @@ pub struct ExperimentSpec {
     pub seed: u64,
     /// Scale factor on default dataset sizes (CI/smoke runs use < 1).
     pub data_scale: f64,
+    /// Device-selection strategy (`selection = "random-k:3"` in TOML,
+    /// `--select` on the CLI; the deprecated `sample_k = K` key maps to
+    /// `random-k:K`). Default: full participation.
+    pub selection: SelectionSpec,
 }
 
 impl ExperimentSpec {
@@ -138,6 +143,7 @@ impl ExperimentSpec {
             beta: dataset.paper_beta(),
             seed: 2023,
             data_scale: 1.0,
+            selection: SelectionSpec::Full,
         }
     }
 
@@ -222,7 +228,13 @@ impl ExperimentSpec {
     }
 
     /// Apply overrides from a parsed TOML map (`experiment` table).
-    pub fn apply_toml(&mut self, map: &std::collections::BTreeMap<String, toml::Value>) {
+    /// An unparseable `selection` value is an error — silently running
+    /// full participation instead of the intended cohort would produce
+    /// a mislabeled trace.
+    pub fn apply_toml(
+        &mut self,
+        map: &std::collections::BTreeMap<String, toml::Value>,
+    ) -> anyhow::Result<()> {
         let get = |k: &str| map.get(&format!("experiment.{k}")).or_else(|| map.get(k));
         if let Some(v) = get("dataset").and_then(|v| v.as_str()) {
             self.dataset = DatasetKind::parse(v).unwrap_or(self.dataset);
@@ -251,6 +263,16 @@ impl ExperimentSpec {
         if let Some(v) = get("data_scale").and_then(|v| v.as_f64()) {
             self.data_scale = v;
         }
+        // Deprecated spelling first, so an explicit `selection` wins.
+        if let Some(v) = get("sample_k").and_then(|v| v.as_i64()) {
+            self.selection = SelectionSpec::RandomK(v.max(1) as usize);
+        }
+        if let Some(v) = get("selection").and_then(|v| v.as_str()) {
+            self.selection = SelectionSpec::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown selection spec '{v}' (try: {})", SelectionSpec::SYNTAX)
+            })?;
+        }
+        Ok(())
     }
 
     /// Load a spec from a TOML file (starting from the cf10/iid
@@ -259,7 +281,7 @@ impl ExperimentSpec {
         let text = std::fs::read_to_string(path)?;
         let map = toml::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
-        spec.apply_toml(&map);
+        spec.apply_toml(&map)?;
         Ok(spec)
     }
 }
@@ -350,10 +372,35 @@ mod tests {
         let text = "[experiment]\ndataset = \"wt2\"\nrounds = 42\nbeta = 0.5\n";
         let map = toml::parse(text).unwrap();
         let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
-        spec.apply_toml(&map);
+        spec.apply_toml(&map).unwrap();
         assert_eq!(spec.dataset, DatasetKind::Wt2);
         assert_eq!(spec.rounds, 42);
         assert_eq!(spec.beta, 0.5);
+        assert_eq!(spec.selection, SelectionSpec::Full);
+    }
+
+    #[test]
+    fn toml_selection_overrides() {
+        let text = "[experiment]\nselection = \"round-robin:2\"\n";
+        let map = toml::parse(text).unwrap();
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.selection, SelectionSpec::RoundRobin(2));
+
+        // Deprecated sample_k maps to random-K...
+        let map = toml::parse("[experiment]\nsample_k = 4\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.selection, SelectionSpec::RandomK(4));
+
+        // ...but an explicit `selection` key wins over it.
+        let map =
+            toml::parse("[experiment]\nsample_k = 4\nselection = \"loss-weighted:2\"\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.selection, SelectionSpec::LossWeighted(2));
+
+        // An unknown spec is a hard error, not a silent full-cohort run.
+        let map = toml::parse("[experiment]\nselection = \"random-k\"\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
     }
 
     #[test]

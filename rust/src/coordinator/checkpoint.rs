@@ -1,20 +1,34 @@
 //! Run checkpointing: persist and restore the full coordinator state
-//! (global model, per-device lazy-aggregation state, counters) so long
-//! table sweeps and the e2e training run survive interruption.
+//! (global model, per-device lazy-aggregation state, counters, RNG
+//! streams) so long table sweeps and the e2e training run survive
+//! interruption.
 //!
 //! Format: a JSON header line (versioned, with dims for validation)
-//! followed by raw little-endian `f32` sections. Written atomically
-//! (temp file + rename).
+//! followed by raw little-endian `f32` sections, then — since version
+//! 2 — one fixed-width RNG record per device plus one for the
+//! coordinator coin. Version 1 checkpoints (no RNG section) still load,
+//! with a warning: stochastic-quantizer algorithms (QSGD) resumed from
+//! them will draw a fresh RNG stream and may diverge bitwise from the
+//! uninterrupted run. Written atomically (temp file + rename).
 
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// One [`crate::util::rng::Xoshiro256pp`] stream state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RngState {
+    /// The four xoshiro256++ state words.
+    pub s: [u64; 4],
+    /// Cached second Box–Muller output, if any.
+    pub gauss_cache: Option<f64>,
+}
+
 /// Serializable snapshot of a run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
-    /// Format version.
+    /// Format version this snapshot was loaded from / will save as.
     pub version: u32,
     /// Next round index to execute.
     pub round: usize,
@@ -28,6 +42,10 @@ pub struct Checkpoint {
     pub device_q: Vec<Vec<f32>>,
     /// Per-device `(uploads, skips, prev_err_sq)`.
     pub device_stats: Vec<(u64, u64, f64)>,
+    /// Per-device RNG streams (v2+; empty when loaded from v1).
+    pub device_rng: Vec<RngState>,
+    /// Coordinator coin RNG (MARINA sync coin; v2+).
+    pub coin_rng: Option<RngState>,
     /// Model-difference history, most recent first.
     pub diff_history: Vec<f64>,
     /// Cumulative uplink bits.
@@ -37,16 +55,29 @@ pub struct Checkpoint {
     pub prev_loss: f64,
 }
 
-const VERSION: u32 = 1;
+/// Current format version.
+pub const VERSION: u32 = 2;
+
+/// Bytes of one serialized RNG record: 4×u64 state + present flag +
+/// gauss flag + gauss f64.
+const RNG_RECORD_BYTES: usize = 4 * 8 + 1 + 1 + 8;
 
 impl Checkpoint {
-    /// Write atomically to `path`.
+    /// Write atomically to `path`. Saves as version 2 when RNG streams
+    /// are present (one per device), as version 1 otherwise (e.g. a
+    /// re-saved v1 snapshot).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
+        let with_rng = self.device_rng.len() == self.device_q.len();
+        let version = if with_rng { VERSION } else { 1 };
+        // Loss estimates may legitimately be NaN (snapshot before any
+        // participant-bearing round); bare `NaN` is not JSON, so write
+        // null and let `load` map it back to NaN.
+        let loss = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
         let header = obj(vec![
-            ("version", Json::Num(VERSION as f64)),
+            ("version", Json::Num(version as f64)),
             ("round", Json::Num(self.round as f64)),
             ("dim", Json::Num(self.theta.len() as f64)),
             ("devices", Json::Num(self.device_q.len() as f64)),
@@ -79,8 +110,8 @@ impl Checkpoint {
                 Json::Arr(self.diff_history.iter().map(|&d| Json::Num(d)).collect()),
             ),
             ("cum_bits", Json::Num(self.cum_bits as f64)),
-            ("init_loss", Json::Num(self.init_loss)),
-            ("prev_loss", Json::Num(self.prev_loss)),
+            ("init_loss", loss(self.init_loss)),
+            ("prev_loss", loss(self.prev_loss)),
         ]);
         let tmp = path.with_extension("tmp");
         {
@@ -92,13 +123,20 @@ impl Checkpoint {
             for q in &self.device_q {
                 write_f32s(&mut f, q)?;
             }
+            if with_rng {
+                for rng in &self.device_rng {
+                    write_rng(&mut f, Some(rng))?;
+                }
+                write_rng(&mut f, self.coin_rng.as_ref())?;
+            }
             f.flush()?;
         }
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
-    /// Load and validate from `path`.
+    /// Load and validate from `path`. Accepts versions 1 and 2; v1
+    /// loads warn that RNG streams are absent.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {path:?}"))?;
@@ -111,8 +149,14 @@ impl Checkpoint {
         let header = Json::parse(std::str::from_utf8(&all[..nl])?)
             .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
         let version = header.get("version").as_usize().unwrap_or(0) as u32;
-        if version != VERSION {
+        if version != 1 && version != VERSION {
             bail!("unsupported checkpoint version {version}");
+        }
+        if version == 1 {
+            eprintln!(
+                "warning: loading v1 checkpoint {path:?} without RNG streams; \
+                 stochastic-quantizer algorithms will not resume bit-exactly"
+            );
         }
         let dim = header.get("dim").as_usize().context("dim")?;
         let devices = header.get("devices").as_usize().context("devices")?;
@@ -127,24 +171,22 @@ impl Checkpoint {
             bail!("supports/devices mismatch");
         }
         let mut body = &all[nl + 1..];
-        let mut take = |n: usize| -> Result<Vec<f32>> {
-            let bytes = n * 4;
-            if body.len() < bytes {
-                bail!("checkpoint body truncated");
-            }
-            let (head, rest) = body.split_at(bytes);
-            body = rest;
-            Ok(head
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect())
-        };
-        let theta = take(dim)?;
-        let prev_theta = take(dim)?;
-        let direction = take(dim)?;
+        let theta = take_f32s(&mut body, dim)?;
+        let prev_theta = take_f32s(&mut body, dim)?;
+        let direction = take_f32s(&mut body, dim)?;
         let mut device_q = Vec::with_capacity(devices);
         for &s in &supports {
-            device_q.push(take(s)?);
+            device_q.push(take_f32s(&mut body, s)?);
+        }
+        let mut device_rng = Vec::new();
+        let mut coin_rng = None;
+        if version >= 2 {
+            for _ in 0..devices {
+                device_rng.push(
+                    take_rng(&mut body)?.context("device RNG record marked absent")?,
+                );
+            }
+            coin_rng = take_rng(&mut body)?;
         }
         if !body.is_empty() {
             bail!("trailing bytes in checkpoint");
@@ -170,6 +212,8 @@ impl Checkpoint {
             direction,
             device_q,
             device_stats,
+            device_rng,
+            coin_rng,
             diff_history: header
                 .get("diff_history")
                 .as_arr()
@@ -192,6 +236,55 @@ fn write_f32s(f: &mut std::fs::File, xs: &[f32]) -> std::io::Result<()> {
     f.write_all(&buf)
 }
 
+fn write_rng(f: &mut std::fs::File, rng: Option<&RngState>) -> std::io::Result<()> {
+    let mut buf = [0u8; RNG_RECORD_BYTES];
+    if let Some(r) = rng {
+        for (i, w) in r.s.iter().enumerate() {
+            buf[i * 8..(i + 1) * 8].copy_from_slice(&w.to_le_bytes());
+        }
+        buf[32] = 1;
+        if let Some(g) = r.gauss_cache {
+            buf[33] = 1;
+            buf[34..42].copy_from_slice(&g.to_le_bytes());
+        }
+    }
+    f.write_all(&buf)
+}
+
+fn take_bytes<'a>(body: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if body.len() < n {
+        bail!("checkpoint body truncated");
+    }
+    let (head, rest) = body.split_at(n);
+    *body = rest;
+    Ok(head)
+}
+
+fn take_f32s(body: &mut &[u8], n: usize) -> Result<Vec<f32>> {
+    Ok(take_bytes(body, n * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Read one RNG record; `Ok(None)` for an absent-marked record.
+fn take_rng(body: &mut &[u8]) -> Result<Option<RngState>> {
+    let rec = take_bytes(body, RNG_RECORD_BYTES)?;
+    if rec[32] == 0 {
+        return Ok(None);
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in s.iter_mut().enumerate() {
+        *w = u64::from_le_bytes(rec[i * 8..(i + 1) * 8].try_into().unwrap());
+    }
+    let gauss_cache = if rec[33] == 1 {
+        Some(f64::from_le_bytes(rec[34..42].try_into().unwrap()))
+    } else {
+        None
+    };
+    Ok(Some(RngState { s, gauss_cache }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +298,20 @@ mod tests {
             direction: vec![0.1, 0.2, 0.3],
             device_q: vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0]],
             device_stats: vec![(10, 2, 0.125), (8, 4, 0.5)],
+            device_rng: vec![
+                RngState {
+                    s: [1, 2, 3, 4],
+                    gauss_cache: None,
+                },
+                RngState {
+                    s: [u64::MAX, 7, 8, 9],
+                    gauss_cache: Some(-0.75),
+                },
+            ],
+            coin_rng: Some(RngState {
+                s: [11, 12, 13, 14],
+                gauss_cache: None,
+            }),
             diff_history: vec![0.5, 0.25],
             cum_bits: 123_456,
             init_loss: 2.5,
@@ -220,6 +327,41 @@ mod tests {
         c.save(&path).unwrap();
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_without_rng_still_loads() {
+        let dir = std::env::temp_dir().join("aquila_ckpt_v1");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        // No RNG streams: saves in v1 layout.
+        c.device_rng.clear();
+        c.coin_rng = None;
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.version, 1);
+        assert!(loaded.device_rng.is_empty());
+        assert_eq!(loaded.coin_rng, None);
+        assert_eq!(loaded.theta, c.theta);
+        assert_eq!(loaded.device_q, c.device_q);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nan_losses_roundtrip_as_null() {
+        // A pre-first-round snapshot (or a run whose sparse selection
+        // left round 0 without participants) has NaN loss estimates.
+        let dir = std::env::temp_dir().join("aquila_ckpt_nan");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.init_loss = f64::NAN;
+        c.prev_loss = f64::NAN;
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert!(loaded.init_loss.is_nan());
+        assert!(loaded.prev_loss.is_nan());
+        assert_eq!(loaded.theta, c.theta);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -241,7 +383,7 @@ mod tests {
         let path = dir.join("run.ckpt");
         sample().save(&path).unwrap();
         let text = std::fs::read(&path).unwrap();
-        let s = String::from_utf8_lossy(&text).replace("\"version\":1", "\"version\":9");
+        let s = String::from_utf8_lossy(&text).replace("\"version\":2", "\"version\":9");
         std::fs::write(&path, s).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,369 @@
+//! The round engine: every piece of mutable run state plus the round
+//! protocol, independent of *how* the problem/algorithm/strategy are
+//! owned. The owned [`super::Session`] and the deprecated borrowed
+//! [`super::Coordinator`] are both thin front-ends over this type.
+
+use super::checkpoint::{Checkpoint, RngState, VERSION};
+use super::RunConfig;
+use crate::algorithms::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use crate::hetero::CapacityMask;
+use crate::metrics::RoundRecord;
+use crate::problems::GradientSource;
+use crate::quant::levels::DadaquantSchedule;
+use crate::selection::{DeviceView, Selection, SelectionStrategy, SelectionView};
+use crate::transport::wire::Payload;
+use crate::transport::Channel;
+use crate::util::pool::parallel_for_each_mut;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::vecmath::{axpy, diff_norm2_sq};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Per-device slot: algorithm state + reusable buffers + per-round
+/// staging, kept together so one thread owns the whole cache line set.
+struct DeviceSlot {
+    state: DeviceState,
+    grad_full: Vec<f32>,
+    grad_gathered: Vec<f32>,
+    staged: Option<Payload>,
+    staged_level: Option<u8>,
+    loss: f64,
+    participated: bool,
+}
+
+/// Mutable run state + the round protocol (steps 1–5 of the module docs
+/// in `crate::coordinator`). Problem, algorithm, and selection strategy
+/// are passed per call so front-ends may own them however they like.
+pub struct RoundEngine {
+    cfg: RunConfig,
+    slots: Vec<DeviceSlot>,
+    server: ServerAgg,
+    theta: Vec<f32>,
+    prev_theta: Vec<f32>,
+    channel: Channel,
+    diff_history: VecDeque<f64>,
+    /// Recent global train losses, most recent first (selection view).
+    loss_history: VecDeque<f64>,
+    /// Per-device statistics exposed to selection strategies.
+    device_views: Vec<DeviceView>,
+    init_loss: f64,
+    prev_loss: f64,
+    coin_rng: Xoshiro256pp,
+    dadaquant: DadaquantSchedule,
+    threads: usize,
+    cum_bits: u64,
+}
+
+impl RoundEngine {
+    /// Build the engine for `problem` with explicit per-device masks.
+    pub fn new(
+        problem: &dyn GradientSource,
+        masks: Vec<Arc<CapacityMask>>,
+        cfg: RunConfig,
+    ) -> Self {
+        let d = problem.dim();
+        let m = problem.num_devices();
+        assert_eq!(masks.len(), m, "need one mask per device");
+        for mask in &masks {
+            assert_eq!(mask.full_dim, d);
+        }
+        let theta = problem.init_theta(cfg.seed);
+        let slots = masks
+            .iter()
+            .enumerate()
+            .map(|(i, mask)| DeviceSlot {
+                state: DeviceState::new(i, mask.clone(), cfg.seed),
+                grad_full: vec![0.0; d],
+                grad_gathered: Vec::with_capacity(mask.support()),
+                staged: None,
+                staged_level: None,
+                loss: 0.0,
+                participated: false,
+            })
+            .collect();
+        let threads = if cfg.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            cfg.threads
+        };
+        Self {
+            server: ServerAgg::new(d, masks),
+            slots,
+            prev_theta: theta.clone(),
+            theta,
+            channel: Channel::new(cfg.faults.clone()),
+            diff_history: VecDeque::with_capacity(cfg.history_depth + 1),
+            loss_history: VecDeque::with_capacity(cfg.history_depth + 1),
+            device_views: vec![DeviceView::default(); m],
+            init_loss: f64::NAN,
+            prev_loss: f64::NAN,
+            coin_rng: Xoshiro256pp::stream(cfg.seed, 0xC011),
+            dadaquant: DadaquantSchedule::new(2, 3, 16),
+            threads,
+            cfg,
+            cum_bits: 0,
+        }
+    }
+
+    /// Run configuration this engine was built with.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Current global model.
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Cumulative uplink bits so far (survives checkpoint restore,
+    /// unlike the channel's own since-construction counter).
+    pub fn total_bits(&self) -> u64 {
+        self.cum_bits
+    }
+
+    /// Per-device upload/skip counters.
+    pub fn device_stats(&self) -> Vec<(u64, u64)> {
+        self.slots
+            .iter()
+            .map(|s| (s.state.uploads, s.state.skips))
+            .collect()
+    }
+
+    fn build_ctx(&mut self, round: usize, strategy: &mut dyn SelectionStrategy) -> RoundCtx {
+        let m = self.slots.len();
+        let model_diff_sq = self.diff_history.front().copied().unwrap_or(0.0);
+        let loss_history: Vec<f64> = self.loss_history.iter().copied().collect();
+        let view = SelectionView {
+            round,
+            num_devices: m,
+            devices: &self.device_views,
+            init_loss: self.init_loss,
+            prev_loss: self.prev_loss,
+            loss_history: &loss_history,
+        };
+        let selected = match strategy.select(&view) {
+            Selection::All => None,
+            Selection::Devices(mut ids) => {
+                // `RoundCtx::is_selected` binary-searches: sorted,
+                // deduped, in-range.
+                ids.retain(|&i| i < m);
+                ids.sort_unstable();
+                ids.dedup();
+                Some(ids)
+            }
+        };
+        let dadaquant_level = if round == 0 || self.prev_loss.is_nan() {
+            self.dadaquant.level()
+        } else {
+            self.dadaquant.observe(self.prev_loss)
+        };
+        RoundCtx {
+            round,
+            num_devices: m,
+            alpha: self.cfg.alpha,
+            beta: self.cfg.beta,
+            model_diff_sq,
+            model_diff_history: self.diff_history.iter().copied().collect(),
+            init_loss: if self.init_loss.is_nan() { 1.0 } else { self.init_loss },
+            prev_loss: if self.prev_loss.is_nan() { 1.0 } else { self.prev_loss },
+            marina_sync: round == 0 || self.coin_rng.bernoulli(self.cfg.marina_p_sync),
+            selected,
+            dadaquant_level,
+        }
+    }
+
+    /// Execute one communication round; returns its record.
+    pub fn run_round(
+        &mut self,
+        problem: &dyn GradientSource,
+        algo: &dyn Algorithm,
+        strategy: &mut dyn SelectionStrategy,
+        round: usize,
+    ) -> RoundRecord {
+        let ctx = self.build_ctx(round, strategy);
+        let theta = &self.theta;
+
+        // ---- device phase (parallel) ---------------------------------
+        parallel_for_each_mut(&mut self.slots, self.threads, |i, slot| {
+            slot.staged = None;
+            slot.staged_level = None;
+            slot.participated = ctx.is_selected(i);
+            if !slot.participated {
+                // Unselected devices neither compute nor consult the
+                // algorithm: participation is the engine's concern,
+                // not part of the `Algorithm` client contract (most
+                // client rules assume a full-length gradient).
+                return;
+            }
+            slot.loss = problem.local_grad(i, theta, &mut slot.grad_full);
+            slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
+            let ClientUpload { payload, level } =
+                algo.client_step(&mut slot.state, &slot.grad_gathered, &ctx);
+            slot.staged = payload;
+            slot.staged_level = level;
+        });
+
+        // ---- transport phase ------------------------------------------
+        let uploads: Vec<(usize, Payload)> = self
+            .slots
+            .iter_mut()
+            .filter_map(|s| s.staged.take().map(|p| (s.state.id, p)))
+            .collect();
+        let upload_count = uploads.len();
+        let (delivered, stats) = self.channel.transmit(uploads);
+
+        // ---- server phase ---------------------------------------------
+        algo.server_fold(&mut self.server, &delivered, &ctx);
+        self.prev_theta.copy_from_slice(&self.theta);
+        axpy(-self.cfg.alpha, &self.server.direction, &mut self.theta);
+        let diff = diff_norm2_sq(&self.theta, &self.prev_theta);
+        self.diff_history.push_front(diff);
+        while self.diff_history.len() > self.cfg.history_depth {
+            self.diff_history.pop_back();
+        }
+
+        // ---- metrics ----------------------------------------------------
+        let participants: Vec<&DeviceSlot> =
+            self.slots.iter().filter(|s| s.participated).collect();
+        let train_loss = if participants.is_empty() {
+            self.prev_loss
+        } else {
+            participants.iter().map(|s| s.loss).sum::<f64>() / participants.len() as f64
+        };
+        // First *observed* loss anchors f(θ⁰): with sparse selection
+        // (availability schedules) round 0 may have no participants,
+        // and a NaN anchor would poison AdaQuantFL's level rule for
+        // the whole run.
+        if self.init_loss.is_nan() && train_loss.is_finite() {
+            self.init_loss = train_loss;
+        }
+        self.prev_loss = train_loss;
+        self.loss_history.push_front(train_loss);
+        while self.loss_history.len() > self.cfg.history_depth {
+            self.loss_history.pop_back();
+        }
+        let levels: Vec<u8> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.staged_level)
+            .collect();
+        let mean_level = if levels.is_empty() {
+            0.0
+        } else {
+            levels.iter().map(|&b| b as f64).sum::<f64>() / levels.len() as f64
+        };
+        self.cum_bits += stats.uplink_bits;
+        for (view, slot) in self.device_views.iter_mut().zip(&self.slots) {
+            view.uploads = slot.state.uploads;
+            view.skips = slot.state.skips;
+            if slot.participated {
+                view.last_loss = Some(slot.loss);
+            }
+        }
+        let do_eval = (self.cfg.eval_every > 0 && round.is_multiple_of(self.cfg.eval_every))
+            || round + 1 == self.cfg.rounds;
+        let (eval_loss, accuracy, perplexity) = if do_eval {
+            let ev = problem.eval(&self.theta);
+            (Some(ev.loss), ev.accuracy, ev.perplexity)
+        } else {
+            (None, None, None)
+        };
+        RoundRecord {
+            round,
+            bits_up: stats.uplink_bits,
+            cum_bits: self.cum_bits,
+            uploads: upload_count,
+            skips: participants.len().saturating_sub(upload_count),
+            mean_level,
+            train_loss,
+            eval_loss,
+            accuracy,
+            perplexity,
+        }
+    }
+
+    /// Snapshot the run state (resume with [`RoundEngine::restore`]).
+    /// `next_round` is the index of the first round not yet executed.
+    pub fn snapshot(&self, next_round: usize) -> Checkpoint {
+        let rng_state = |rng: &Xoshiro256pp| {
+            let (s, gauss_cache) = rng.snapshot();
+            RngState { s, gauss_cache }
+        };
+        Checkpoint {
+            version: VERSION,
+            round: next_round,
+            theta: self.theta.clone(),
+            prev_theta: self.prev_theta.clone(),
+            direction: self.server.direction.clone(),
+            device_q: self.slots.iter().map(|s| s.state.q_prev.clone()).collect(),
+            device_stats: self
+                .slots
+                .iter()
+                .map(|s| (s.state.uploads, s.state.skips, s.state.prev_err_sq))
+                .collect(),
+            device_rng: self.slots.iter().map(|s| rng_state(&s.state.rng)).collect(),
+            coin_rng: Some(rng_state(&self.coin_rng)),
+            diff_history: self.diff_history.iter().copied().collect(),
+            cum_bits: self.cum_bits,
+            init_loss: self.init_loss,
+            prev_loss: self.prev_loss,
+        }
+    }
+
+    /// Restore a snapshot produced by [`RoundEngine::snapshot`] on an
+    /// engine built with the same problem/masks/config. Returns the
+    /// next round index to execute.
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            ckpt.theta.len() == self.theta.len(),
+            "checkpoint dim {} != model dim {}",
+            ckpt.theta.len(),
+            self.theta.len()
+        );
+        anyhow::ensure!(
+            ckpt.device_q.len() == self.slots.len(),
+            "checkpoint device count mismatch"
+        );
+        for (slot, q) in self.slots.iter().zip(&ckpt.device_q) {
+            anyhow::ensure!(
+                slot.state.q_prev.len() == q.len(),
+                "device {} support mismatch",
+                slot.state.id
+            );
+        }
+        self.theta.copy_from_slice(&ckpt.theta);
+        self.prev_theta.copy_from_slice(&ckpt.prev_theta);
+        self.server.direction.copy_from_slice(&ckpt.direction);
+        for (slot, (q, &(u, s, e))) in self
+            .slots
+            .iter_mut()
+            .zip(ckpt.device_q.iter().zip(&ckpt.device_stats))
+        {
+            slot.state.q_prev.copy_from_slice(q);
+            slot.state.uploads = u;
+            slot.state.skips = s;
+            slot.state.prev_err_sq = e;
+        }
+        // RNG streams (v2 checkpoints; v1 keeps fresh streams and
+        // `Checkpoint::load` already warned).
+        if ckpt.device_rng.len() == self.slots.len() {
+            for (slot, rng) in self.slots.iter_mut().zip(&ckpt.device_rng) {
+                slot.state.rng = Xoshiro256pp::from_snapshot(rng.s, rng.gauss_cache);
+            }
+        }
+        if let Some(coin) = &ckpt.coin_rng {
+            self.coin_rng = Xoshiro256pp::from_snapshot(coin.s, coin.gauss_cache);
+        }
+        for (view, slot) in self.device_views.iter_mut().zip(&self.slots) {
+            view.uploads = slot.state.uploads;
+            view.skips = slot.state.skips;
+            view.last_loss = None;
+        }
+        self.diff_history = ckpt.diff_history.iter().copied().collect();
+        self.loss_history.clear();
+        self.cum_bits = ckpt.cum_bits;
+        self.init_loss = ckpt.init_loss;
+        self.prev_loss = ckpt.prev_loss;
+        Ok(ckpt.round)
+    }
+}

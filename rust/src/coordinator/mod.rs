@@ -3,33 +3,40 @@
 //! Owns the global model `θ`, the per-device states, the simulated
 //! uplink channel, and the round protocol:
 //!
-//! 1. broadcast `θᵏ` (plus `‖θᵏ − θ^{k−1}‖²` and the loss estimates the
+//! 1. a [`crate::selection::SelectionStrategy`] picks the round's
+//!    participant set (full, random-K, round-robin, loss-weighted,
+//!    availability-aware, or user-defined);
+//! 2. broadcast `θᵏ` (plus `‖θᵏ − θ^{k−1}‖²` and the loss estimates the
 //!    baselines' rules need);
-//! 2. every device computes its full-batch local gradient
+//! 3. every *selected* device computes its full-batch local gradient
 //!    `∇f_m(θᵏ)` (in parallel across a thread pool), gathers it through
 //!    its HeteroFL capacity mask, and runs the algorithm's client step;
-//! 3. uploads cross the byte-counting channel (with optional fault
-//!    injection) and are decoded server-side;
-//! 4. the algorithm's server fold produces the step direction and the
-//!    server updates `θ^{k+1} = θᵏ − α·direction` (eq. 5 / Algorithm 1
-//!    line 14);
-//! 5. metrics are recorded (bits, uploads, levels, losses, periodic
-//!    held-out evaluation).
+//! 4. uploads cross the byte-counting channel (with optional fault
+//!    injection) and are decoded server-side; the algorithm's server
+//!    fold produces the step direction and the server updates
+//!    `θ^{k+1} = θᵏ − α·direction` (eq. 5 / Algorithm 1 line 14);
+//! 5. metrics are recorded and streamed to every attached
+//!    [`crate::metrics::observer::RoundObserver`].
+//!
+//! Two front-ends share the [`engine::RoundEngine`] implementing the
+//! protocol: the owned, builder-constructed [`Session`] (use this), and
+//! the deprecated lifetime-bound [`Coordinator`] kept as a shim for one
+//! release. See DESIGN.md §2 for the architecture.
 
 pub mod checkpoint;
+pub mod engine;
+mod session;
 
-use crate::algorithms::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use checkpoint::Checkpoint;
+pub use session::{Session, SessionBuilder};
+
+use crate::algorithms::Algorithm;
 use crate::hetero::CapacityMask;
 use crate::metrics::{RoundRecord, RunTrace};
 use crate::problems::GradientSource;
-use crate::quant::levels::DadaquantSchedule;
-use crate::transport::wire::Payload;
-use crate::transport::{Channel, FaultSpec};
-use crate::util::pool::parallel_for_each_mut;
-use crate::util::rng::Xoshiro256pp;
-use crate::util::vecmath::{axpy, diff_norm2_sq};
-use std::collections::VecDeque;
+use crate::selection::{FullParticipation, RandomK, SelectionStrategy};
+use crate::transport::FaultSpec;
+use checkpoint::Checkpoint;
+use engine::RoundEngine;
 use std::sync::Arc;
 
 /// Runtime configuration of one FL run.
@@ -44,14 +51,16 @@ pub struct RunConfig {
     /// Evaluate held-out metrics every this many rounds (0 = only at
     /// the end).
     pub eval_every: usize,
-    /// Base seed (device RNG streams, θ⁰, MARINA coin, sampling).
+    /// Base seed (device RNG streams, θ⁰, MARINA coin, selection).
     pub seed: u64,
     /// Worker threads for device gradient computation (0 = auto).
     pub threads: usize,
     /// MARINA synchronization probability.
     pub marina_p_sync: f64,
-    /// DAdaQuant cohort size (None = all devices participate — the
-    /// setting of every non-DAdaQuant algorithm).
+    /// Deprecated spelling of [`crate::selection::SelectionSpec::RandomK`]:
+    /// honored by the [`Coordinator`] shim and by [`SessionBuilder`]
+    /// when no explicit strategy/spec is given. Prefer
+    /// `SessionBuilder::selection_spec`.
     pub sample_k: Option<usize>,
     /// Depth of the model-difference history broadcast (LAQ/LENA `D`).
     pub history_depth: usize,
@@ -76,45 +85,40 @@ impl Default for RunConfig {
     }
 }
 
-/// Per-device slot: algorithm state + reusable buffers + per-round
-/// staging, kept together so one thread owns the whole cache line set.
-struct DeviceSlot {
-    state: DeviceState,
-    grad_full: Vec<f32>,
-    grad_gathered: Vec<f32>,
-    staged: Option<Payload>,
-    staged_level: Option<u8>,
-    loss: f64,
-    participated: bool,
+/// The deprecated `sample_k` fallback, shared by the [`Coordinator`]
+/// shim and [`SessionBuilder`] so the two front-ends cannot diverge.
+pub(crate) fn strategy_from_cfg(cfg: &RunConfig) -> Box<dyn SelectionStrategy> {
+    match cfg.sample_k {
+        Some(k) => Box::new(RandomK::new(k.max(1), cfg.seed)),
+        None => Box::new(FullParticipation),
+    }
 }
 
-/// The coordinator. See module docs.
+/// Deprecated borrowed-reference front-end over
+/// [`engine::RoundEngine`], kept for one release so downstream code
+/// migrating to [`Session`] keeps compiling. Selection is limited to
+/// full participation or `RunConfig::sample_k` random-K; there are no
+/// observers.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Session::builder(...)` — pluggable selection strategies and metric sinks; \
+            this shim will be removed next release"
+)]
 pub struct Coordinator<'a> {
     problem: &'a dyn GradientSource,
     algo: &'a dyn Algorithm,
-    cfg: RunConfig,
-    slots: Vec<DeviceSlot>,
-    server: ServerAgg,
-    theta: Vec<f32>,
-    prev_theta: Vec<f32>,
-    channel: Channel,
-    diff_history: VecDeque<f64>,
-    init_loss: f64,
-    prev_loss: f64,
-    coin_rng: Xoshiro256pp,
-    dadaquant: DadaquantSchedule,
-    threads: usize,
-    cum_bits: u64,
+    strategy: Box<dyn SelectionStrategy>,
+    engine: RoundEngine,
 }
 
+#[allow(deprecated)]
 impl<'a> Coordinator<'a> {
     /// Homogeneous setup: every device holds the full model.
     pub fn new(problem: &'a dyn GradientSource, algo: &'a dyn Algorithm, cfg: RunConfig) -> Self {
         let d = problem.dim();
         let m = problem.num_devices();
         let full = Arc::new(CapacityMask::full(d));
-        let masks = vec![full; m];
-        Self::with_masks(problem, algo, masks, cfg)
+        Self::with_masks(problem, algo, vec![full; m], cfg)
     }
 
     /// Heterogeneous setup with explicit per-device capacity masks
@@ -125,258 +129,57 @@ impl<'a> Coordinator<'a> {
         masks: Vec<Arc<CapacityMask>>,
         cfg: RunConfig,
     ) -> Self {
-        let d = problem.dim();
-        let m = problem.num_devices();
-        assert_eq!(masks.len(), m, "need one mask per device");
-        for mask in &masks {
-            assert_eq!(mask.full_dim, d);
-        }
-        let theta = problem.init_theta(cfg.seed);
-        let slots = masks
-            .iter()
-            .enumerate()
-            .map(|(i, mask)| DeviceSlot {
-                state: DeviceState::new(i, mask.clone(), cfg.seed),
-                grad_full: vec![0.0; d],
-                grad_gathered: Vec::with_capacity(mask.support()),
-                staged: None,
-                staged_level: None,
-                loss: 0.0,
-                participated: false,
-            })
-            .collect();
-        let threads = if cfg.threads == 0 {
-            crate::util::pool::default_threads()
-        } else {
-            cfg.threads
-        };
+        let strategy = strategy_from_cfg(&cfg);
+        let engine = RoundEngine::new(problem, masks, cfg);
         Self {
             problem,
             algo,
-            server: ServerAgg::new(d, masks),
-            slots,
-            prev_theta: theta.clone(),
-            theta,
-            channel: Channel::new(cfg.faults.clone()),
-            diff_history: VecDeque::with_capacity(cfg.history_depth + 1),
-            init_loss: f64::NAN,
-            prev_loss: f64::NAN,
-            coin_rng: Xoshiro256pp::stream(cfg.seed, 0xC011),
-            dadaquant: DadaquantSchedule::new(2, 3, 16),
-            threads,
-            cfg,
-            cum_bits: 0,
+            strategy,
+            engine,
         }
     }
 
     /// Current global model.
     pub fn theta(&self) -> &[f32] {
-        &self.theta
+        self.engine.theta()
     }
 
     /// Cumulative uplink bits so far.
     pub fn total_bits(&self) -> u64 {
-        self.channel.total_bits
+        self.engine.total_bits()
     }
 
     /// Per-device upload/skip counters.
     pub fn device_stats(&self) -> Vec<(u64, u64)> {
-        self.slots
-            .iter()
-            .map(|s| (s.state.uploads, s.state.skips))
-            .collect()
+        self.engine.device_stats()
     }
 
     /// Snapshot the run state (resume with [`Coordinator::restore`]).
-    /// `next_round` is the index of the first round not yet executed.
     pub fn snapshot(&self, next_round: usize) -> Checkpoint {
-        Checkpoint {
-            version: 1,
-            round: next_round,
-            theta: self.theta.clone(),
-            prev_theta: self.prev_theta.clone(),
-            direction: self.server.direction.clone(),
-            device_q: self.slots.iter().map(|s| s.state.q_prev.clone()).collect(),
-            device_stats: self
-                .slots
-                .iter()
-                .map(|s| (s.state.uploads, s.state.skips, s.state.prev_err_sq))
-                .collect(),
-            diff_history: self.diff_history.iter().copied().collect(),
-            cum_bits: self.cum_bits,
-            init_loss: self.init_loss,
-            prev_loss: self.prev_loss,
-        }
+        self.engine.snapshot(next_round)
     }
 
-    /// Restore a snapshot produced by [`Coordinator::snapshot`] on a
-    /// coordinator built with the same problem/masks/config. Returns the
-    /// next round index to execute.
+    /// Restore a snapshot produced by [`Coordinator::snapshot`].
     pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
-        anyhow::ensure!(
-            ckpt.theta.len() == self.theta.len(),
-            "checkpoint dim {} != model dim {}",
-            ckpt.theta.len(),
-            self.theta.len()
-        );
-        anyhow::ensure!(
-            ckpt.device_q.len() == self.slots.len(),
-            "checkpoint device count mismatch"
-        );
-        for (slot, q) in self.slots.iter().zip(&ckpt.device_q) {
-            anyhow::ensure!(
-                slot.state.q_prev.len() == q.len(),
-                "device {} support mismatch",
-                slot.state.id
-            );
-        }
-        self.theta.copy_from_slice(&ckpt.theta);
-        self.prev_theta.copy_from_slice(&ckpt.prev_theta);
-        self.server.direction.copy_from_slice(&ckpt.direction);
-        for (slot, (q, &(u, s, e))) in self
-            .slots
-            .iter_mut()
-            .zip(ckpt.device_q.iter().zip(&ckpt.device_stats))
-        {
-            slot.state.q_prev.copy_from_slice(q);
-            slot.state.uploads = u;
-            slot.state.skips = s;
-            slot.state.prev_err_sq = e;
-        }
-        self.diff_history = ckpt.diff_history.iter().copied().collect();
-        self.cum_bits = ckpt.cum_bits;
-        self.init_loss = ckpt.init_loss;
-        self.prev_loss = ckpt.prev_loss;
-        Ok(ckpt.round)
-    }
-
-    fn build_ctx(&mut self, round: usize) -> RoundCtx {
-        let m = self.slots.len();
-        let model_diff_sq = self.diff_history.front().copied().unwrap_or(0.0);
-        let selected = self.cfg.sample_k.map(|k| {
-            let k = k.min(m);
-            self.coin_rng.sample_indices(m, k)
-        });
-        let dadaquant_level = if round == 0 || self.prev_loss.is_nan() {
-            self.dadaquant.level()
-        } else {
-            self.dadaquant.observe(self.prev_loss)
-        };
-        RoundCtx {
-            round,
-            num_devices: m,
-            alpha: self.cfg.alpha,
-            beta: self.cfg.beta,
-            model_diff_sq,
-            model_diff_history: self.diff_history.iter().copied().collect(),
-            init_loss: if self.init_loss.is_nan() { 1.0 } else { self.init_loss },
-            prev_loss: if self.prev_loss.is_nan() { 1.0 } else { self.prev_loss },
-            marina_sync: round == 0 || self.coin_rng.bernoulli(self.cfg.marina_p_sync),
-            selected,
-            dadaquant_level,
-        }
+        self.engine.restore(ckpt)
     }
 
     /// Execute one communication round; returns its record.
     pub fn run_round(&mut self, round: usize) -> RoundRecord {
-        let ctx = self.build_ctx(round);
-        let theta = &self.theta;
-        let problem = self.problem;
-        let algo = self.algo;
-
-        // ---- device phase (parallel) ---------------------------------
-        parallel_for_each_mut(&mut self.slots, self.threads, |i, slot| {
-            slot.staged = None;
-            slot.staged_level = None;
-            slot.participated = ctx.is_selected(i);
-            if !slot.participated {
-                // Unselected devices (DAdaQuant sampling) do not even
-                // compute this round.
-                let up = algo.client_step(&mut slot.state, &[], &ctx);
-                debug_assert!(up.payload.is_none());
-                return;
-            }
-            slot.loss = problem.local_grad(i, theta, &mut slot.grad_full);
-            slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
-            let ClientUpload { payload, level } =
-                algo.client_step(&mut slot.state, &slot.grad_gathered, &ctx);
-            slot.staged = payload;
-            slot.staged_level = level;
-        });
-
-        // ---- transport phase ------------------------------------------
-        let uploads: Vec<(usize, Payload)> = self
-            .slots
-            .iter_mut()
-            .filter_map(|s| s.staged.take().map(|p| (s.state.id, p)))
-            .collect();
-        let upload_count = uploads.len();
-        let (delivered, stats) = self.channel.transmit(uploads);
-
-        // ---- server phase ---------------------------------------------
-        self.algo.server_fold(&mut self.server, &delivered, &ctx);
-        self.prev_theta.copy_from_slice(&self.theta);
-        axpy(-self.cfg.alpha, &self.server.direction, &mut self.theta);
-        let diff = diff_norm2_sq(&self.theta, &self.prev_theta);
-        self.diff_history.push_front(diff);
-        while self.diff_history.len() > self.cfg.history_depth {
-            self.diff_history.pop_back();
-        }
-
-        // ---- metrics ----------------------------------------------------
-        let participants: Vec<&DeviceSlot> =
-            self.slots.iter().filter(|s| s.participated).collect();
-        let train_loss = if participants.is_empty() {
-            self.prev_loss
-        } else {
-            participants.iter().map(|s| s.loss).sum::<f64>() / participants.len() as f64
-        };
-        if round == 0 {
-            self.init_loss = train_loss;
-        }
-        self.prev_loss = train_loss;
-        let levels: Vec<u8> = self
-            .slots
-            .iter()
-            .filter_map(|s| s.staged_level)
-            .collect();
-        let mean_level = if levels.is_empty() {
-            0.0
-        } else {
-            levels.iter().map(|&b| b as f64).sum::<f64>() / levels.len() as f64
-        };
-        self.cum_bits += stats.uplink_bits;
-        let do_eval = (self.cfg.eval_every > 0 && round.is_multiple_of(self.cfg.eval_every))
-            || round + 1 == self.cfg.rounds;
-        let (eval_loss, accuracy, perplexity) = if do_eval {
-            let ev = self.problem.eval(&self.theta);
-            (Some(ev.loss), ev.accuracy, ev.perplexity)
-        } else {
-            (None, None, None)
-        };
-        RoundRecord {
-            round,
-            bits_up: stats.uplink_bits,
-            cum_bits: self.cum_bits,
-            uploads: upload_count,
-            skips: participants.len().saturating_sub(upload_count),
-            mean_level,
-            train_loss,
-            eval_loss,
-            accuracy,
-            perplexity,
-        }
+        self.engine
+            .run_round(self.problem, self.algo, self.strategy.as_mut(), round)
     }
 
     /// Run the full configured horizon, producing a trace.
     pub fn run(&mut self, dataset: &str, split: &str) -> RunTrace {
+        let rounds = self.engine.config().rounds;
         let mut trace = RunTrace {
             algorithm: self.algo.name().to_string(),
             dataset: dataset.to_string(),
             split: split.to_string(),
-            rounds: Vec::with_capacity(self.cfg.rounds),
+            rounds: Vec::with_capacity(rounds),
         };
-        for k in 0..self.cfg.rounds {
+        for k in 0..rounds {
             trace.rounds.push(self.run_round(k));
         }
         trace
@@ -389,6 +192,7 @@ mod tests {
     use crate::algorithms::{aquila::Aquila, fedavg::FedAvg, qsgd::QsgdAlgo};
     use crate::problems::quadratic::QuadraticProblem;
     use crate::problems::GradientSource;
+    use crate::selection::SelectionSpec;
 
     fn quick_cfg(rounds: usize) -> RunConfig {
         RunConfig {
@@ -402,12 +206,22 @@ mod tests {
         }
     }
 
+    fn session(
+        p: &Arc<QuadraticProblem>,
+        algo: Arc<dyn Algorithm>,
+        cfg: RunConfig,
+    ) -> Session {
+        Session::builder(p.clone(), algo)
+            .config(cfg)
+            .dataset("quad")
+            .split("iid")
+            .build()
+    }
+
     #[test]
     fn fedavg_converges_on_quadratic() {
-        let p = QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 1);
-        let algo = FedAvg;
-        let mut c = Coordinator::new(&p, &algo, quick_cfg(60));
-        let trace = c.run("quad", "iid");
+        let p = Arc::new(QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 1));
+        let trace = session(&p, Arc::new(FedAvg), quick_cfg(60)).run();
         let gap0 = trace.rounds[0].train_loss - p.optimum_value();
         let gap = trace.final_train_loss() - p.optimum_value();
         assert!(gap < gap0 * 1e-3, "no convergence: {gap0} -> {gap}");
@@ -415,10 +229,8 @@ mod tests {
 
     #[test]
     fn aquila_converges_and_skips() {
-        let p = QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 2);
-        let algo = Aquila::new(0.25);
-        let mut c = Coordinator::new(&p, &algo, quick_cfg(80));
-        let trace = c.run("quad", "iid");
+        let p = Arc::new(QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 2));
+        let trace = session(&p, Arc::new(Aquila::new(0.25)), quick_cfg(80)).run();
         let gap = trace.final_train_loss() - p.optimum_value();
         assert!(gap < 1e-2, "gap {gap}");
         assert!(trace.total_skips() > 0, "β=0.25 should skip sometimes");
@@ -426,11 +238,9 @@ mod tests {
 
     #[test]
     fn aquila_beats_fedavg_bits_on_quadratic() {
-        let p = QuadraticProblem::new(64, 10, 0.5, 2.0, 0.5, 3);
-        let fed = FedAvg;
-        let aq = Aquila::new(0.25);
-        let t_fed = Coordinator::new(&p, &fed, quick_cfg(60)).run("q", "iid");
-        let t_aq = Coordinator::new(&p, &aq, quick_cfg(60)).run("q", "iid");
+        let p = Arc::new(QuadraticProblem::new(64, 10, 0.5, 2.0, 0.5, 3));
+        let t_fed = session(&p, Arc::new(FedAvg), quick_cfg(60)).run();
+        let t_aq = session(&p, Arc::new(Aquila::new(0.25)), quick_cfg(60)).run();
         // Both converge...
         assert!(t_fed.final_train_loss() - p.optimum_value() < 1e-2);
         assert!(t_aq.final_train_loss() - p.optimum_value() < 1e-2);
@@ -445,40 +255,37 @@ mod tests {
 
     #[test]
     fn bits_accounting_is_consistent() {
-        let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 4);
-        let algo = QsgdAlgo::new(8);
-        let mut c = Coordinator::new(&p, &algo, quick_cfg(10));
-        let trace = c.run("q", "iid");
+        let p = Arc::new(QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 4));
+        let mut s = session(&p, Arc::new(QsgdAlgo::new(8)), quick_cfg(10));
+        let trace = s.run();
         let sum: u64 = trace.rounds.iter().map(|r| r.bits_up).sum();
         assert_eq!(sum, trace.total_bits());
-        assert_eq!(sum, c.total_bits());
+        assert_eq!(sum, s.total_bits());
         // QSGD transmits every device every round.
         assert!(trace.rounds.iter().all(|r| r.uploads == 4 && r.skips == 0));
     }
 
     #[test]
     fn deterministic_given_seed() {
-        let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5);
-        let algo = Aquila::new(0.25);
-        let t1 = Coordinator::new(&p, &algo, quick_cfg(20)).run("q", "iid");
-        let t2 = Coordinator::new(&p, &algo, quick_cfg(20)).run("q", "iid");
+        let p = Arc::new(QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5));
+        let t1 = session(&p, Arc::new(Aquila::new(0.25)), quick_cfg(20)).run();
+        let t2 = session(&p, Arc::new(Aquila::new(0.25)), quick_cfg(20)).run();
         assert_eq!(t1.total_bits(), t2.total_bits());
         assert_eq!(t1.final_train_loss(), t2.final_train_loss());
         // Thread count must not affect results.
         let mut cfg1 = quick_cfg(20);
         cfg1.threads = 1;
-        let t3 = Coordinator::new(&p, &algo, cfg1).run("q", "iid");
+        let t3 = session(&p, Arc::new(Aquila::new(0.25)), cfg1).run();
         assert_eq!(t1.final_train_loss(), t3.final_train_loss());
         assert_eq!(t1.total_bits(), t3.total_bits());
     }
 
     #[test]
     fn eval_cadence() {
-        let p = QuadraticProblem::new(8, 3, 0.5, 2.0, 0.5, 6);
-        let algo = FedAvg;
+        let p = Arc::new(QuadraticProblem::new(8, 3, 0.5, 2.0, 0.5, 6));
         let mut cfg = quick_cfg(10);
         cfg.eval_every = 3;
-        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        let trace = session(&p, Arc::new(FedAvg), cfg).run();
         for r in &trace.rounds {
             let expect = r.round % 3 == 0 || r.round == 9;
             assert_eq!(r.eval_loss.is_some(), expect, "round {}", r.round);
@@ -487,15 +294,14 @@ mod tests {
 
     #[test]
     fn fault_injection_still_converges() {
-        let p = QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 7);
-        let algo = FedAvg;
+        let p = Arc::new(QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 7));
         let mut cfg = quick_cfg(120);
         cfg.faults = FaultSpec {
             drop_prob: 0.2,
             seed: 9,
         };
         cfg.alpha = 0.1;
-        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        let trace = session(&p, Arc::new(FedAvg), cfg).run();
         let gap = trace.final_train_loss() - p.optimum_value();
         assert!(gap < 0.05, "gap {gap} under 20% drop rate");
     }
@@ -503,11 +309,12 @@ mod tests {
     #[test]
     fn sampled_cohort_limits_uploads() {
         use crate::algorithms::dadaquant::DAdaQuant;
-        let p = QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 8);
-        let algo = DAdaQuant::uniform(16);
-        let mut cfg = quick_cfg(10);
-        cfg.sample_k = Some(3);
-        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        let p = Arc::new(QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 8));
+        let trace = Session::builder(p.clone(), Arc::new(DAdaQuant::uniform(16)))
+            .config(quick_cfg(10))
+            .selection_spec(SelectionSpec::RandomK(3))
+            .build()
+            .run();
         assert!(trace.rounds.iter().all(|r| r.uploads <= 3));
         assert!(trace.rounds.iter().all(|r| r.uploads >= 1));
     }
@@ -516,17 +323,15 @@ mod tests {
     fn checkpoint_resume_is_exact() {
         // Run 20 rounds straight vs 10 + snapshot/restore + 10: the
         // deterministic parts of the trace must match exactly.
-        // (Algorithms with client RNG — QSGD — would also need the RNG
-        // stream persisted; AQUILA's client is deterministic.)
-        let p = QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 77);
-        let algo = Aquila::new(0.25);
-        let mut full = Coordinator::new(&p, &algo, quick_cfg(20));
+        let p = Arc::new(QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 77));
+        let algo: Arc<dyn Algorithm> = Arc::new(Aquila::new(0.25));
+        let mut full = session(&p, algo.clone(), quick_cfg(20));
         let mut full_trace = Vec::new();
         for k in 0..20 {
             full_trace.push(full.run_round(k));
         }
 
-        let mut first = Coordinator::new(&p, &algo, quick_cfg(20));
+        let mut first = session(&p, algo.clone(), quick_cfg(20));
         for k in 0..10 {
             first.run_round(k);
         }
@@ -535,8 +340,8 @@ mod tests {
         let dir = std::env::temp_dir().join("aquila_coord_ckpt");
         let path = dir.join("t.ckpt");
         ckpt.save(&path).unwrap();
-        let loaded = crate::coordinator::checkpoint::Checkpoint::load(&path).unwrap();
-        let mut second = Coordinator::new(&p, &algo, quick_cfg(20));
+        let loaded = Checkpoint::load(&path).unwrap();
+        let mut second = session(&p, algo, quick_cfg(20));
         let next = second.restore(&loaded).unwrap();
         assert_eq!(next, 10);
         for k in next..20 {
@@ -549,29 +354,96 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_resume_qsgd_is_exact() {
+        // QSGD's client is a stochastic quantizer: exact resume needs
+        // the device RNG streams the v2 checkpoint format persists —
+        // the gap the v1 format left open.
+        let p = Arc::new(QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 79));
+        let algo: Arc<dyn Algorithm> = Arc::new(QsgdAlgo::new(6));
+        let mut full = session(&p, algo.clone(), quick_cfg(16));
+        let mut full_trace = Vec::new();
+        for k in 0..16 {
+            full_trace.push(full.run_round(k));
+        }
+
+        let mut first = session(&p, algo.clone(), quick_cfg(16));
+        for k in 0..8 {
+            first.run_round(k);
+        }
+        let ckpt = first.snapshot(8);
+        let dir = std::env::temp_dir().join("aquila_coord_ckpt_qsgd");
+        let path = dir.join("t.ckpt");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.version, 2);
+        assert_eq!(loaded.device_rng.len(), 5);
+        let mut second = session(&p, algo, quick_cfg(16));
+        let next = second.restore(&loaded).unwrap();
+        for k in next..16 {
+            let rec = second.run_round(k);
+            assert_eq!(rec.train_loss, full_trace[k].train_loss, "round {k}");
+            assert_eq!(rec.bits_up, full_trace[k].bits_up, "round {k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn restore_rejects_mismatched_shapes() {
-        let p = QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 78);
-        let p2 = QuadraticProblem::new(16, 5, 0.5, 2.0, 0.5, 78);
-        let algo = Aquila::new(0.25);
-        let c1 = Coordinator::new(&p, &algo, quick_cfg(5));
-        let ckpt = c1.snapshot(0);
-        let mut c2 = Coordinator::new(&p2, &algo, quick_cfg(5));
-        assert!(c2.restore(&ckpt).is_err());
+        let p = Arc::new(QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 78));
+        let p2 = Arc::new(QuadraticProblem::new(16, 5, 0.5, 2.0, 0.5, 78));
+        let algo: Arc<dyn Algorithm> = Arc::new(Aquila::new(0.25));
+        let s1 = session(&p, algo.clone(), quick_cfg(5));
+        let ckpt = s1.snapshot(0);
+        let mut s2 = session(&p2, algo, quick_cfg(5));
+        assert!(s2.restore(&ckpt).is_err());
     }
 
     #[test]
     fn hetero_masks_reduce_bits() {
         use crate::hetero::half_half_masks;
-        let p = QuadraticProblem::new(64, 8, 0.5, 2.0, 0.5, 9);
-        let algo = QsgdAlgo::new(8);
-        let full_trace = Coordinator::new(&p, &algo, quick_cfg(5)).run("q", "iid");
+        let p = Arc::new(QuadraticProblem::new(64, 8, 0.5, 2.0, 0.5, 9));
+        let algo: Arc<dyn Algorithm> = Arc::new(QsgdAlgo::new(8));
+        let full_trace = session(&p, algo.clone(), quick_cfg(5)).run();
         let masks = half_half_masks(&p.layout(), 8, 0.5);
-        let hetero_trace = Coordinator::with_masks(&p, &algo, masks, quick_cfg(5)).run("q", "het");
+        let hetero_trace = Session::builder(p.clone(), algo)
+            .config(quick_cfg(5))
+            .masks(masks)
+            .build()
+            .run();
         assert!(
             hetero_trace.total_bits() < full_trace.total_bits(),
             "{} vs {}",
             hetero_trace.total_bits(),
             full_trace.total_bits()
         );
+    }
+
+    // ---- deprecated shim ------------------------------------------------
+
+    #[test]
+    #[allow(deprecated)]
+    fn coordinator_shim_still_works() {
+        // The one-release compatibility guarantee: borrowed construction,
+        // identical results to the Session path.
+        let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5);
+        let algo = Aquila::new(0.25);
+        let t_shim = Coordinator::new(&p, &algo, quick_cfg(20)).run("quad", "iid");
+        let arc = Arc::new(QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5));
+        let t_sess = session(&arc, Arc::new(Aquila::new(0.25)), quick_cfg(20)).run();
+        assert_eq!(t_shim.total_bits(), t_sess.total_bits());
+        assert_eq!(t_shim.final_train_loss(), t_sess.final_train_loss());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn coordinator_shim_honors_sample_k() {
+        use crate::algorithms::dadaquant::DAdaQuant;
+        let p = QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 8);
+        let algo = DAdaQuant::uniform(16);
+        let mut cfg = quick_cfg(10);
+        cfg.sample_k = Some(3);
+        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
+        assert!(trace.rounds.iter().all(|r| r.uploads <= 3));
+        assert!(trace.rounds.iter().all(|r| r.uploads >= 1));
     }
 }

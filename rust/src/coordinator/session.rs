@@ -1,0 +1,232 @@
+//! The owned run API: [`SessionBuilder`] composes an `Arc`-owned
+//! problem/algorithm with a pluggable [`SelectionStrategy`] and any
+//! number of [`RoundObserver`] metric sinks into a [`Session`].
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use aquila::coordinator::{RunConfig, Session};
+//! # use aquila::algorithms::aquila::Aquila;
+//! # use aquila::problems::quadratic::QuadraticProblem;
+//! # use aquila::selection::SelectionSpec;
+//! let problem = Arc::new(QuadraticProblem::new(32, 8, 0.5, 2.0, 0.5, 1));
+//! let algo = Arc::new(Aquila::new(0.25));
+//! let trace = Session::builder(problem, algo)
+//!     .config(RunConfig { rounds: 50, ..RunConfig::default() })
+//!     .selection_spec(SelectionSpec::RandomK(3))
+//!     .dataset("quad")
+//!     .split("iid")
+//!     .build()
+//!     .run();
+//! ```
+
+use super::checkpoint::Checkpoint;
+use super::engine::RoundEngine;
+use super::RunConfig;
+use crate::algorithms::Algorithm;
+use crate::hetero::CapacityMask;
+use crate::metrics::observer::{RoundObserver, RunMeta};
+use crate::metrics::{RoundRecord, RunTrace};
+use crate::problems::GradientSource;
+use crate::selection::{SelectionSpec, SelectionStrategy};
+use std::sync::Arc;
+
+/// Builder for [`Session`]. Construct via [`Session::builder`].
+pub struct SessionBuilder {
+    problem: Arc<dyn GradientSource>,
+    algo: Arc<dyn Algorithm>,
+    cfg: RunConfig,
+    masks: Option<Vec<Arc<CapacityMask>>>,
+    strategy: Option<Box<dyn SelectionStrategy>>,
+    spec: Option<SelectionSpec>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    dataset: String,
+    split: String,
+}
+
+impl SessionBuilder {
+    pub fn new(problem: Arc<dyn GradientSource>, algo: Arc<dyn Algorithm>) -> Self {
+        Self {
+            problem,
+            algo,
+            cfg: RunConfig::default(),
+            masks: None,
+            strategy: None,
+            spec: None,
+            observers: Vec::new(),
+            dataset: "unnamed".to_string(),
+            split: "default".to_string(),
+        }
+    }
+
+    /// Runtime configuration (learning rate, rounds, seed, ...).
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Explicit per-device capacity masks (heterogeneous runs); default
+    /// is full capacity everywhere.
+    pub fn masks(mut self, masks: Vec<Arc<CapacityMask>>) -> Self {
+        self.masks = Some(masks);
+        self
+    }
+
+    /// Inject a selection strategy instance. Takes precedence over
+    /// [`SessionBuilder::selection_spec`].
+    pub fn selection(mut self, strategy: Box<dyn SelectionStrategy>) -> Self {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Build the strategy from a config-parseable spec at
+    /// [`SessionBuilder::build`] time (needs the device count + seed).
+    pub fn selection_spec(mut self, spec: SelectionSpec) -> Self {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Attach a streaming metrics sink; may be called repeatedly.
+    pub fn observer(mut self, obs: Box<dyn RoundObserver>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Dataset label recorded in traces.
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.dataset = name.to_string();
+        self
+    }
+
+    /// Split label recorded in traces.
+    pub fn split(mut self, name: &str) -> Self {
+        self.split = name.to_string();
+        self
+    }
+
+    /// Assemble the session. Strategy precedence: explicit instance >
+    /// spec > deprecated `RunConfig::sample_k` (kept so old configs
+    /// keep working) > full participation.
+    pub fn build(self) -> Session {
+        let m = self.problem.num_devices();
+        let d = self.problem.dim();
+        let masks = self
+            .masks
+            .unwrap_or_else(|| vec![Arc::new(CapacityMask::full(d)); m]);
+        let strategy: Box<dyn SelectionStrategy> = match (self.strategy, self.spec) {
+            (Some(s), _) => s,
+            (None, Some(spec)) => spec.build(m, self.cfg.seed),
+            (None, None) => super::strategy_from_cfg(&self.cfg),
+        };
+        let engine = RoundEngine::new(self.problem.as_ref(), masks, self.cfg);
+        Session {
+            problem: self.problem,
+            algo: self.algo,
+            strategy,
+            observers: self.observers,
+            engine,
+            dataset: self.dataset,
+            split: self.split,
+        }
+    }
+}
+
+/// An owned federated run: problem + algorithm + selection strategy +
+/// observers + mutable round state. Replaces the lifetime-bound
+/// [`super::Coordinator`].
+pub struct Session {
+    problem: Arc<dyn GradientSource>,
+    algo: Arc<dyn Algorithm>,
+    strategy: Box<dyn SelectionStrategy>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    engine: RoundEngine,
+    dataset: String,
+    split: String,
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder(problem: Arc<dyn GradientSource>, algo: Arc<dyn Algorithm>) -> SessionBuilder {
+        SessionBuilder::new(problem, algo)
+    }
+
+    /// Current global model.
+    pub fn theta(&self) -> &[f32] {
+        self.engine.theta()
+    }
+
+    /// Cumulative uplink bits so far.
+    pub fn total_bits(&self) -> u64 {
+        self.engine.total_bits()
+    }
+
+    /// Per-device upload/skip counters.
+    pub fn device_stats(&self) -> Vec<(u64, u64)> {
+        self.engine.device_stats()
+    }
+
+    /// The run configuration.
+    pub fn config(&self) -> &RunConfig {
+        self.engine.config()
+    }
+
+    /// Name of the active selection strategy.
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Execute one communication round (and notify observers).
+    pub fn run_round(&mut self, round: usize) -> RoundRecord {
+        let rec = self.engine.run_round(
+            self.problem.as_ref(),
+            self.algo.as_ref(),
+            self.strategy.as_mut(),
+            round,
+        );
+        for obs in &mut self.observers {
+            obs.on_round(&rec);
+        }
+        rec
+    }
+
+    /// Run the full configured horizon, producing a trace. Observers
+    /// see `on_run_start` / every round / `on_run_end`.
+    pub fn run(&mut self) -> RunTrace {
+        let rounds = self.engine.config().rounds;
+        let meta = RunMeta {
+            algorithm: self.algo.name().to_string(),
+            dataset: self.dataset.clone(),
+            split: self.split.clone(),
+            rounds,
+        };
+        for obs in &mut self.observers {
+            obs.on_run_start(&meta);
+        }
+        let mut trace = RunTrace {
+            algorithm: meta.algorithm.clone(),
+            dataset: meta.dataset.clone(),
+            split: meta.split.clone(),
+            rounds: Vec::with_capacity(rounds),
+        };
+        for k in 0..rounds {
+            trace.rounds.push(self.run_round(k));
+        }
+        for obs in &mut self.observers {
+            obs.on_run_end();
+        }
+        trace
+    }
+
+    /// Snapshot the run state (resume with [`Session::restore`]).
+    /// `next_round` is the index of the first round not yet executed.
+    /// Selection-strategy and observer state are not captured (see
+    /// DESIGN.md §4).
+    pub fn snapshot(&self, next_round: usize) -> Checkpoint {
+        self.engine.snapshot(next_round)
+    }
+
+    /// Restore a snapshot onto a session built with the same
+    /// problem/masks/config. Returns the next round index to execute.
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
+        self.engine.restore(ckpt)
+    }
+}

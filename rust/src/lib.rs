@@ -5,18 +5,23 @@
 //! Shi, Liu, Lan, Ding, Zhang; 2023) as a three-layer Rust + JAX +
 //! Pallas system:
 //!
-//! * **L3 (this crate)** — the federated coordinator: server/device
-//!   state, the AQUILA round protocol (adaptive level selection, eq. 19;
-//!   lazy device selection, eq. 8), seven baseline algorithms, honest
-//!   byte-accounted transport, datasets, partitioners, metrics, theory
-//!   calculators and the table/figure reproduction harness.
+//! * **L3 (this crate)** — the federated coordinator: an owned,
+//!   builder-constructed [`coordinator::Session`] composing a
+//!   [`problems::GradientSource`], an [`algorithms::Algorithm`], a
+//!   pluggable [`selection::SelectionStrategy`] (the paper's eq. 8
+//!   context made an injectable policy), and streaming
+//!   [`metrics::observer::RoundObserver`] sinks; seven baseline
+//!   algorithms, honest byte-accounted transport, datasets,
+//!   partitioners, metrics, theory calculators and the table/figure
+//!   reproduction harness.
 //! * **L2** — JAX neural models (`python/compile/model.py`) lowered AOT
 //!   to HLO text artifacts executed through PJRT (`runtime`).
 //! * **L1** — the fused Pallas quantization kernel
 //!   (`python/compile/kernels/aquila_quant.py`), mirrored bit-exactly by
 //!   [`quant::midtread`] on the Rust hot path.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! See `DESIGN.md` for the architecture (Session/SelectionStrategy/
+//! RoundObserver layering in §2) and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
 pub mod algorithms;
@@ -29,7 +34,9 @@ pub mod metrics;
 pub mod problems;
 pub mod quant;
 pub mod repro;
+#[cfg(feature = "xla")]
 pub mod runtime;
+pub mod selection;
 pub mod theory;
 pub mod transport;
 pub mod util;

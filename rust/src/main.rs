@@ -6,17 +6,21 @@
 //! repro fig2   [--out DIR]                            Figure 2 series (CSV)
 //! repro fig3   [--out DIR]                            Figure 3 series (CSV)
 //! repro ablation-beta [--dataset D]                   Figures 4–5 β sweep
-//! repro run --config FILE [--algo NAME]               single configured run
+//! repro run --config FILE [--algo NAME] [--select SPEC]
+//!           [--out FILE.csv] [--jsonl FILE.jsonl]     single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
-//! repro list                                          presets + algorithms
+//! repro list                                          presets + algorithms + strategies
 //! ```
 
 use aquila::algorithms::{self, Algorithm};
 use aquila::config::{table2_rows, table3_rows, DatasetKind, ExperimentSpec, SplitKind};
 use aquila::metrics::bits_display;
+use aquila::metrics::observer::{CsvStream, JsonLines};
 use aquila::repro;
+use aquila::selection::SelectionSpec;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 struct Args {
     cmd: String,
@@ -71,17 +75,17 @@ fn out_dir(args: &Args, default: &str) -> PathBuf {
     )
 }
 
-fn algo_by_name(name: &str, beta: f32) -> Option<Box<dyn Algorithm>> {
+fn algo_by_name(name: &str, beta: f32) -> Option<Arc<dyn Algorithm>> {
     match name.to_ascii_lowercase().as_str() {
-        "aquila" => Some(Box::new(algorithms::aquila::Aquila::new(beta))),
-        "qsgd" => Some(Box::new(algorithms::qsgd::QsgdAlgo::new(8))),
-        "adaquantfl" | "adaq" => Some(Box::new(algorithms::adaquantfl::AdaQuantFl::new(4, 32))),
-        "laq" => Some(Box::new(algorithms::laq::Laq::new(8, 0.8, 10))),
-        "ladaq" => Some(Box::new(algorithms::ladaq::LAdaQ::new(4, 32, 0.8, 10))),
-        "lena" => Some(Box::new(algorithms::lena::Lena::new(0.8, 10))),
-        "marina" => Some(Box::new(algorithms::marina::Marina::new(8, 0.1))),
-        "fedavg" => Some(Box::new(algorithms::fedavg::FedAvg)),
-        "dadaquant" => Some(Box::new(algorithms::dadaquant::DAdaQuant::uniform(16))),
+        "aquila" => Some(Arc::new(algorithms::aquila::Aquila::new(beta))),
+        "qsgd" => Some(Arc::new(algorithms::qsgd::QsgdAlgo::new(8))),
+        "adaquantfl" | "adaq" => Some(Arc::new(algorithms::adaquantfl::AdaQuantFl::new(4, 32))),
+        "laq" => Some(Arc::new(algorithms::laq::Laq::new(8, 0.8, 10))),
+        "ladaq" => Some(Arc::new(algorithms::ladaq::LAdaQ::new(4, 32, 0.8, 10))),
+        "lena" => Some(Arc::new(algorithms::lena::Lena::new(0.8, 10))),
+        "marina" => Some(Arc::new(algorithms::marina::Marina::new(8, 0.1))),
+        "fedavg" => Some(Arc::new(algorithms::fedavg::FedAvg)),
+        "dadaquant" => Some(Arc::new(algorithms::dadaquant::DAdaQuant::uniform(16))),
         _ => None,
     }
 }
@@ -172,13 +176,25 @@ fn cmd_run(args: &Args) -> ExitCode {
         eprintln!("repro run requires --config FILE");
         return ExitCode::FAILURE;
     };
-    let spec = match ExperimentSpec::from_file(std::path::Path::new(cfg_path)) {
+    let mut spec = match ExperimentSpec::from_file(std::path::Path::new(cfg_path)) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("config error: {e}");
             return ExitCode::FAILURE;
         }
     };
+    if let Some(s) = args.flags.get("select") {
+        match SelectionSpec::parse(s) {
+            Some(sel) => spec.selection = sel,
+            None => {
+                eprintln!(
+                    "unknown selection spec '{s}' (try: {})",
+                    SelectionSpec::SYNTAX
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     let algo_name = args
         .flags
         .get("algo")
@@ -189,21 +205,42 @@ fn cmd_run(args: &Args) -> ExitCode {
         return ExitCode::FAILURE;
     };
     println!(
-        "running {} on {} ({} devices, {} rounds, α={}, β={})",
+        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={})",
         algo.name(),
         spec.row_label(),
         spec.devices,
         spec.rounds,
         spec.alpha,
-        spec.beta
+        spec.beta,
+        spec.selection,
     );
-    let trace = repro::run_cell(&spec, algo.as_ref());
+    // Streaming sinks: rounds hit the files as they complete.
+    let mut builder = repro::session_for(&spec, algo);
+    if let Some(out) = args.flags.get("out") {
+        match CsvStream::create(std::path::Path::new(out)) {
+            Ok(obs) => builder = builder.observer(Box::new(obs)),
+            Err(e) => {
+                eprintln!("cannot open --out {out}: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if let Some(path) = args.flags.get("jsonl") {
+        match JsonLines::create(std::path::Path::new(path)) {
+            Ok(obs) => builder = builder.observer(Box::new(obs)),
+            Err(e) => {
+                eprintln!("cannot open --jsonl {path}: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let trace = builder.build().run();
     println!("{}", trace.summary_json());
     if let Some(out) = args.flags.get("out") {
-        trace
-            .write_csv(std::path::Path::new(out))
-            .expect("write csv");
-        println!("trace written to {out}");
+        println!("trace streamed to {out}");
+    }
+    if let Some(path) = args.flags.get("jsonl") {
+        println!("json-lines streamed to {path}");
     }
     ExitCode::SUCCESS
 }
@@ -248,6 +285,10 @@ fn cmd_list() {
         println!("  {:<18} M={:<4}", r.row_label(), r.devices);
     }
     println!("algorithms: qsgd adaquantfl laq ladaq lena marina aquila fedavg dadaquant");
+    println!(
+        "selection strategies (--select / selection = \"...\"): {}",
+        SelectionSpec::SYNTAX
+    );
 }
 
 fn main() -> ExitCode {
@@ -265,6 +306,7 @@ fn main() -> ExitCode {
             println!("AQUILA reproduction CLI — commands:");
             println!("  table2 | table3 | fig2 | fig3 | ablation-beta | run | theory | list");
             println!("  common flags: --scale S --rounds N --seed K --out DIR");
+            println!("  run flags: --config FILE --algo NAME --select SPEC --jsonl FILE");
         }
     }
     ExitCode::SUCCESS

@@ -1,5 +1,10 @@
 //! Per-round metrics, run summaries, and CSV/JSON emission — the data
-//! behind every table row and figure series.
+//! behind every table row and figure series. Streaming sinks live in
+//! [`observer`]: attach a [`observer::RoundObserver`] to a
+//! `crate::coordinator::Session` to emit records as the run progresses
+//! instead of accumulating them monolithically.
+
+pub mod observer;
 
 use crate::util::json::{obj, Json};
 use std::io::Write;
@@ -27,6 +32,49 @@ pub struct RoundRecord {
     pub eval_loss: Option<f64>,
     pub accuracy: Option<f64>,
     pub perplexity: Option<f64>,
+}
+
+impl RoundRecord {
+    /// Column header matching [`RoundRecord::csv_row`].
+    pub const CSV_HEADER: &'static str =
+        "round,bits_up,cum_bits,uploads,skips,mean_level,train_loss,eval_loss,accuracy,perplexity";
+
+    /// One CSV line (no trailing newline).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.4},{:.6},{},{},{}",
+            self.round,
+            self.bits_up,
+            self.cum_bits,
+            self.uploads,
+            self.skips,
+            self.mean_level,
+            self.train_loss,
+            self.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            self.accuracy.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            self.perplexity.map(|v| format!("{v:.4}")).unwrap_or_default(),
+        )
+    }
+
+    /// The record as a JSON object (JSON-lines streaming sink).
+    /// Non-finite values (a NaN train loss on a round with no
+    /// participants) serialize as `null` — bare `NaN` is not JSON.
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("bits_up", Json::Num(self.bits_up as f64)),
+            ("cum_bits", Json::Num(self.cum_bits as f64)),
+            ("uploads", Json::Num(self.uploads as f64)),
+            ("skips", Json::Num(self.skips as f64)),
+            ("mean_level", num(self.mean_level)),
+            ("train_loss", num(self.train_loss)),
+            ("eval_loss", opt(self.eval_loss)),
+            ("accuracy", opt(self.accuracy)),
+            ("perplexity", opt(self.perplexity)),
+        ])
+    }
 }
 
 /// Full trace of a run plus identifying metadata.
@@ -81,25 +129,9 @@ impl RunTrace {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(
-            f,
-            "round,bits_up,cum_bits,uploads,skips,mean_level,train_loss,eval_loss,accuracy,perplexity"
-        )?;
+        writeln!(f, "{}", RoundRecord::CSV_HEADER)?;
         for r in &self.rounds {
-            writeln!(
-                f,
-                "{},{},{},{},{},{:.4},{:.6},{},{},{}",
-                r.round,
-                r.bits_up,
-                r.cum_bits,
-                r.uploads,
-                r.skips,
-                r.mean_level,
-                r.train_loss,
-                r.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
-                r.accuracy.map(|v| format!("{v:.6}")).unwrap_or_default(),
-                r.perplexity.map(|v| format!("{v:.4}")).unwrap_or_default(),
-            )?;
+            writeln!(f, "{}", r.csv_row())?;
         }
         Ok(())
     }

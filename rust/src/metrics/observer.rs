@@ -1,0 +1,260 @@
+//! Streaming metric sinks: a [`RoundObserver`] receives every
+//! [`RoundRecord`] as the round loop produces it, so traces no longer
+//! have to be accumulated monolithically inside the coordinator.
+//!
+//! Shipped sinks: [`TraceCollector`] (in-memory [`RunTrace`]),
+//! [`CsvStream`] (streaming CSV file), [`JsonLines`] (one JSON object
+//! per round). Attach with `SessionBuilder::observer`; a session may
+//! carry any number of sinks.
+
+use super::{RoundRecord, RunTrace};
+use crate::util::json::{obj, Json};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Run-identifying metadata delivered once at `on_run_start`.
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    pub algorithm: String,
+    pub dataset: String,
+    pub split: String,
+    /// Configured horizon `K`.
+    pub rounds: usize,
+}
+
+/// A per-round metrics sink. All methods are called from the round
+/// loop thread, in round order.
+pub trait RoundObserver: Send {
+    /// Called once before round 0 when driven via `Session::run`
+    /// (manual `run_round` stepping skips it).
+    fn on_run_start(&mut self, _meta: &RunMeta) {}
+
+    /// Called after every completed round.
+    fn on_round(&mut self, record: &RoundRecord);
+
+    /// Called once after the final round; flush buffers here.
+    fn on_run_end(&mut self) {}
+}
+
+/// In-memory sink accumulating a [`RunTrace`]. Wrap in
+/// `Arc<Mutex<...>>` (which also implements [`RoundObserver`]) to keep
+/// a handle to the trace while the session owns the observer.
+#[derive(Debug, Default)]
+pub struct TraceCollector {
+    trace: RunTrace,
+}
+
+impl TraceCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A handle usable both as an observer (clone one `Arc` into the
+    /// builder) and as the post-run accessor.
+    pub fn shared() -> Arc<Mutex<TraceCollector>> {
+        Arc::new(Mutex::new(Self::new()))
+    }
+
+    /// The trace collected so far.
+    pub fn trace(&self) -> &RunTrace {
+        &self.trace
+    }
+
+    pub fn into_trace(self) -> RunTrace {
+        self.trace
+    }
+}
+
+impl RoundObserver for TraceCollector {
+    fn on_run_start(&mut self, meta: &RunMeta) {
+        self.trace.algorithm = meta.algorithm.clone();
+        self.trace.dataset = meta.dataset.clone();
+        self.trace.split = meta.split.clone();
+        self.trace.rounds.reserve(meta.rounds);
+    }
+
+    fn on_round(&mut self, record: &RoundRecord) {
+        self.trace.rounds.push(record.clone());
+    }
+}
+
+impl RoundObserver for Arc<Mutex<TraceCollector>> {
+    fn on_run_start(&mut self, meta: &RunMeta) {
+        self.lock().unwrap().on_run_start(meta);
+    }
+
+    fn on_round(&mut self, record: &RoundRecord) {
+        self.lock().unwrap().on_round(record);
+    }
+}
+
+/// Streaming CSV sink: header on creation, one row per round, flushed
+/// at run end (and on drop via `BufWriter`).
+pub struct CsvStream {
+    w: BufWriter<std::fs::File>,
+}
+
+impl CsvStream {
+    /// Create/truncate `path` (parent directories are created) and
+    /// write the header line.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "{}", RoundRecord::CSV_HEADER)?;
+        Ok(Self { w })
+    }
+}
+
+impl RoundObserver for CsvStream {
+    fn on_round(&mut self, record: &RoundRecord) {
+        // Fail loudly: a silently truncated trace is worse than an
+        // aborted run (the pre-observer `--out` path panicked too).
+        writeln!(self.w, "{}", record.csv_row()).expect("writing CSV trace row");
+    }
+
+    fn on_run_end(&mut self) {
+        self.w.flush().expect("flushing CSV trace");
+    }
+}
+
+/// JSON-lines sink: one `{"meta": ...}` object at run start, then one
+/// record object per round.
+pub struct JsonLines {
+    w: BufWriter<std::fs::File>,
+}
+
+impl JsonLines {
+    /// Create/truncate `path` (parent directories are created).
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(Self {
+            w: BufWriter::new(std::fs::File::create(path)?),
+        })
+    }
+}
+
+impl RoundObserver for JsonLines {
+    fn on_run_start(&mut self, meta: &RunMeta) {
+        let j = obj(vec![(
+            "meta",
+            obj(vec![
+                ("algorithm", Json::Str(meta.algorithm.clone())),
+                ("dataset", Json::Str(meta.dataset.clone())),
+                ("split", Json::Str(meta.split.clone())),
+                ("rounds", Json::Num(meta.rounds as f64)),
+            ]),
+        )]);
+        writeln!(self.w, "{j}").expect("writing json-lines meta");
+    }
+
+    fn on_round(&mut self, record: &RoundRecord) {
+        writeln!(self.w, "{}", record.to_json()).expect("writing json-lines record");
+    }
+
+    fn on_run_end(&mut self) {
+        self.w.flush().expect("flushing json-lines trace");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            bits_up: 10,
+            cum_bits: 10 * (round as u64 + 1),
+            uploads: 2,
+            skips: 1,
+            mean_level: 3.0,
+            train_loss: 1.0 / (round as f64 + 1.0),
+            eval_loss: None,
+            accuracy: Some(0.5),
+            perplexity: None,
+        }
+    }
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            algorithm: "AQUILA".into(),
+            dataset: "quad".into(),
+            split: "iid".into(),
+            rounds: 3,
+        }
+    }
+
+    #[test]
+    fn trace_collector_accumulates() {
+        let mut c = TraceCollector::new();
+        c.on_run_start(&meta());
+        for k in 0..3 {
+            c.on_round(&rec(k));
+        }
+        c.on_run_end();
+        let t = c.into_trace();
+        assert_eq!(t.algorithm, "AQUILA");
+        assert_eq!(t.rounds.len(), 3);
+        assert_eq!(t.total_bits(), 30);
+    }
+
+    #[test]
+    fn shared_collector_readable_after_run() {
+        let shared = TraceCollector::shared();
+        {
+            let mut obs: Box<dyn RoundObserver> = Box::new(shared.clone());
+            obs.on_run_start(&meta());
+            obs.on_round(&rec(0));
+            obs.on_run_end();
+        }
+        assert_eq!(shared.lock().unwrap().trace().rounds.len(), 1);
+    }
+
+    #[test]
+    fn csv_stream_writes_rows() {
+        let dir = std::env::temp_dir().join("aquila_obs_csv");
+        let path = dir.join("t.csv");
+        {
+            let mut s = CsvStream::create(&path).unwrap();
+            s.on_run_start(&meta());
+            for k in 0..2 {
+                s.on_round(&rec(k));
+            }
+            s.on_run_end();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], RoundRecord::CSV_HEADER);
+        assert!(lines[1].starts_with("0,10,10,2,1,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_lines_parse_back() {
+        let dir = std::env::temp_dir().join("aquila_obs_jsonl");
+        let path = dir.join("t.jsonl");
+        {
+            let mut s = JsonLines::create(&path).unwrap();
+            s.on_run_start(&meta());
+            for k in 0..2 {
+                s.on_round(&rec(k));
+            }
+            s.on_run_end();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let m = Json::parse(lines[0]).unwrap();
+        assert_eq!(m.get("meta").get("algorithm").as_str(), Some("AQUILA"));
+        let r1 = Json::parse(lines[2]).unwrap();
+        assert_eq!(r1.get("round").as_usize(), Some(1));
+        assert_eq!(r1.get("eval_loss"), &Json::Null);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

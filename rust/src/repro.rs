@@ -4,22 +4,35 @@
 
 use crate::algorithms::{self, Algorithm};
 use crate::config::ExperimentSpec;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Session, SessionBuilder};
 use crate::hetero::half_half_masks;
 use crate::metrics::{bits_display, RunTrace};
+use crate::problems::GradientSource;
 use std::path::Path;
+use std::sync::Arc;
+
+/// A configured [`SessionBuilder`] for one experiment cell — attach
+/// observers or override the selection strategy before `build()`.
+pub fn session_for(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> SessionBuilder {
+    let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+    let mut builder = Session::builder(problem.clone(), algo)
+        .config(spec.run_config())
+        .selection_spec(spec.selection.clone())
+        .dataset(spec.dataset.name())
+        .split(spec.split.name(spec.dataset));
+    if spec.hetero {
+        builder = builder.masks(half_half_masks(
+            &problem.layout(),
+            problem.num_devices(),
+            0.5,
+        ));
+    }
+    builder
+}
 
 /// Run one experiment cell (dataset × split × algorithm).
-pub fn run_cell(spec: &ExperimentSpec, algo: &dyn Algorithm) -> RunTrace {
-    let problem = spec.build_problem();
-    let cfg = spec.run_config();
-    let mut coordinator = if spec.hetero {
-        let masks = half_half_masks(&problem.layout(), problem.num_devices(), 0.5);
-        Coordinator::with_masks(problem.as_ref(), algo, masks, cfg)
-    } else {
-        Coordinator::new(problem.as_ref(), algo, cfg)
-    };
-    coordinator.run(spec.dataset.name(), spec.split.name(spec.dataset))
+pub fn run_cell(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> RunTrace {
+    session_for(spec, algo).build().run()
 }
 
 /// Format the headline metric (accuracy % for classification,
@@ -53,7 +66,7 @@ pub fn run_table(
         let suite = algorithms::table_suite(spec.beta);
         let mut cells = Vec::new();
         for algo in &suite {
-            let trace = run_cell(spec, algo.as_ref());
+            let trace = run_cell(spec, algo.clone());
             if let Some(dir) = out_dir {
                 let fname = format!(
                     "{}_{}_{}.csv",
@@ -132,8 +145,7 @@ pub fn ablation_beta(spec: &ExperimentSpec, betas: &[f32]) -> Vec<(f32, RunTrace
         .map(|&beta| {
             let mut s = spec.clone();
             s.beta = beta;
-            let algo = algorithms::aquila::Aquila::new(beta);
-            (beta, run_cell(&s, &algo))
+            (beta, run_cell(&s, Arc::new(algorithms::aquila::Aquila::new(beta))))
         })
         .collect()
 }
@@ -153,8 +165,7 @@ mod tests {
     #[test]
     fn run_cell_produces_trace() {
         let spec = tiny_spec();
-        let algo = algorithms::aquila::Aquila::new(spec.beta);
-        let t = run_cell(&spec, &algo);
+        let t = run_cell(&spec, Arc::new(algorithms::aquila::Aquila::new(spec.beta)));
         assert_eq!(t.rounds.len(), 12);
         assert!(t.total_bits() > 0);
         assert_eq!(t.algorithm, "AQUILA");
@@ -165,10 +176,19 @@ mod tests {
         let spec = tiny_spec();
         let mut hetero = spec.clone();
         hetero.hetero = true;
-        let algo = algorithms::fedavg::FedAvg;
-        let t_homo = run_cell(&spec, &algo);
-        let t_het = run_cell(&hetero, &algo);
+        let t_homo = run_cell(&spec, Arc::new(algorithms::fedavg::FedAvg));
+        let t_het = run_cell(&hetero, Arc::new(algorithms::fedavg::FedAvg));
         assert!(t_het.total_bits() < t_homo.total_bits());
+    }
+
+    #[test]
+    fn run_cell_honors_selection_spec() {
+        use crate::selection::SelectionSpec;
+        let mut spec = tiny_spec();
+        spec.selection = SelectionSpec::RoundRobin(2);
+        let t = run_cell(&spec, Arc::new(algorithms::fedavg::FedAvg));
+        assert!(t.rounds.iter().all(|r| r.uploads <= 2));
+        assert!(t.total_uploads() > 0);
     }
 
     #[test]
@@ -185,8 +205,7 @@ mod tests {
     #[test]
     fn metric_display_formats() {
         let spec = tiny_spec();
-        let algo = algorithms::fedavg::FedAvg;
-        let t = run_cell(&spec, &algo);
+        let t = run_cell(&spec, Arc::new(algorithms::fedavg::FedAvg));
         let m = metric_display(&t);
         assert!(m.parse::<f64>().is_ok());
     }

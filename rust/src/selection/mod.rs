@@ -1,0 +1,563 @@
+//! Pluggable device-selection strategies — the paper's eq. 8 context
+//! made a first-class, injectable policy.
+//!
+//! AQUILA's headline contribution is an adaptive *device selection
+//! strategy*; production FL coordinators (xaynet's
+//! `Controller`/`RandomController` split, DAdaQuant's random-K cohorts)
+//! likewise treat participant selection as a policy object rather than
+//! a hardcoded `Option<Vec<usize>>`. A [`SelectionStrategy`] decides
+//! each round's participant set from the round index, per-device upload
+//! statistics, and the global loss history; the coordinator engine
+//! (`crate::coordinator`) sorts the result and exposes it to algorithms
+//! through `RoundCtx::selected`.
+//!
+//! Shipped strategies:
+//!
+//! | spec string | type | behaviour |
+//! |---|---|---|
+//! | `full` | [`FullParticipation`] | every device, every round |
+//! | `random-k:K` | [`RandomK`] | uniform K-cohort (DAdaQuant-style) |
+//! | `round-robin[:K]` | [`RoundRobin`] | deterministic rotating K-cohort |
+//! | `loss-weighted:K` | [`LossWeighted`] | K-cohort sampled ∝ last local loss |
+//! | `availability:P,D[,K]` | [`AvailabilityAware`] | per-device up/down duty cycles |
+//!
+//! Strategies are deterministic given the run seed: each stateful
+//! strategy owns an independent [`Xoshiro256pp`] stream derived from
+//! it, so traces stay bit-reproducible across runs and thread counts.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Per-device statistics the coordinator exposes to strategies.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceView {
+    /// Rounds in which this device uploaded a payload.
+    pub uploads: u64,
+    /// Rounds in which this device participated but skipped (lazy
+    /// algorithms).
+    pub skips: u64,
+    /// Most recent local training loss (`None` until the device first
+    /// participates).
+    pub last_loss: Option<f64>,
+}
+
+/// Read-only snapshot of the run state a strategy may consult when
+/// choosing a cohort.
+#[derive(Clone, Debug)]
+pub struct SelectionView<'a> {
+    /// Communication round `k` (0-based).
+    pub round: usize,
+    /// Total device count `M`.
+    pub num_devices: usize,
+    /// Per-device statistics, indexed by device id.
+    pub devices: &'a [DeviceView],
+    /// `f(θ⁰)` estimate (NaN before round 0 completes).
+    pub init_loss: f64,
+    /// `f(θ^{k−1})` estimate (NaN before round 0 completes).
+    pub prev_loss: f64,
+    /// Recent global training losses, most recent first (bounded by the
+    /// run's `history_depth`).
+    pub loss_history: &'a [f64],
+}
+
+/// A strategy's verdict for one round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Selection {
+    /// Every device participates (no cohort restriction).
+    All,
+    /// Exactly these devices participate. The engine sorts, dedups,
+    /// and range-checks before use; order and duplicates don't matter.
+    Devices(Vec<usize>),
+}
+
+/// Decides each round's participant set. Implementations may be
+/// stateful (cursors, RNG streams) — the coordinator calls `select`
+/// exactly once per round, in round order.
+pub trait SelectionStrategy: Send {
+    /// Short name for banners/metrics (matches the spec-string head).
+    fn name(&self) -> &'static str;
+
+    /// Choose the participant set for `view.round`.
+    fn select(&mut self, view: &SelectionView) -> Selection;
+}
+
+/// Every device participates every round — the setting of every
+/// non-sampling algorithm in the paper's tables.
+#[derive(Clone, Debug, Default)]
+pub struct FullParticipation;
+
+impl SelectionStrategy for FullParticipation {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn select(&mut self, _view: &SelectionView) -> Selection {
+        Selection::All
+    }
+}
+
+/// Uniform random K-cohort per round (DAdaQuant's client sampling; the
+/// old `RunConfig::sample_k` behaviour).
+#[derive(Clone, Debug)]
+pub struct RandomK {
+    k: usize,
+    rng: Xoshiro256pp,
+}
+
+impl RandomK {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1, "random-k cohort must be non-empty");
+        Self {
+            k,
+            rng: Xoshiro256pp::stream(seed, 0x5E1E_C715),
+        }
+    }
+}
+
+impl SelectionStrategy for RandomK {
+    fn name(&self) -> &'static str {
+        "random-k"
+    }
+
+    fn select(&mut self, view: &SelectionView) -> Selection {
+        let k = self.k.min(view.num_devices);
+        Selection::Devices(self.rng.sample_indices(view.num_devices, k))
+    }
+}
+
+/// Deterministic rotating K-cohort: round `r` selects devices
+/// `r·K..r·K+K (mod M)`, so every device is selected once per `⌈M/K⌉`
+/// rounds. Stateless — the cohort is derived from the round index, so
+/// checkpoint-resumed runs continue the rotation exactly.
+#[derive(Clone, Debug)]
+pub struct RoundRobin {
+    k: usize,
+}
+
+impl RoundRobin {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "round-robin cohort must be non-empty");
+        Self { k }
+    }
+}
+
+impl SelectionStrategy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn select(&mut self, view: &SelectionView) -> Selection {
+        let m = view.num_devices.max(1);
+        let k = self.k.min(m);
+        let start = (view.round * k) % m;
+        let ids = (0..k).map(|i| (start + i) % m).collect();
+        Selection::Devices(ids)
+    }
+}
+
+/// K-cohort sampled without replacement with probability proportional
+/// to each device's most recent local loss — high-loss (straggling)
+/// devices are heard from more often. Devices never yet observed get
+/// the maximum weight so everyone is eventually explored.
+#[derive(Clone, Debug)]
+pub struct LossWeighted {
+    k: usize,
+    rng: Xoshiro256pp,
+}
+
+impl LossWeighted {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1, "loss-weighted cohort must be non-empty");
+        Self {
+            k,
+            rng: Xoshiro256pp::stream(seed, 0x1055_3E1E),
+        }
+    }
+}
+
+impl SelectionStrategy for LossWeighted {
+    fn name(&self) -> &'static str {
+        "loss-weighted"
+    }
+
+    fn select(&mut self, view: &SelectionView) -> Selection {
+        let m = view.num_devices;
+        let k = self.k.min(m);
+        // Unobserved devices weigh as much as the worst observed one
+        // (uniform when nothing has been observed yet).
+        let max_seen = view
+            .devices
+            .iter()
+            .filter_map(|d| d.last_loss)
+            .filter(|l| l.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let default_w = if max_seen.is_finite() { max_seen } else { 1.0 };
+        let weights: Vec<f64> = (0..m)
+            .map(|i| {
+                let w = view
+                    .devices
+                    .get(i)
+                    .and_then(|d| d.last_loss)
+                    .filter(|l| l.is_finite())
+                    .unwrap_or(default_w);
+                w.max(1e-12)
+            })
+            .collect();
+        let mut avail: Vec<usize> = (0..m).collect();
+        let mut chosen = Vec::with_capacity(k);
+        for _ in 0..k {
+            let total: f64 = avail.iter().map(|&i| weights[i]).sum();
+            let mut t = self.rng.next_f64() * total;
+            let mut pick = avail.len() - 1;
+            for (pos, &i) in avail.iter().enumerate() {
+                t -= weights[i];
+                if t <= 0.0 {
+                    pick = pos;
+                    break;
+                }
+            }
+            chosen.push(avail.swap_remove(pick));
+        }
+        Selection::Devices(chosen)
+    }
+}
+
+/// Per-device periodic up/down schedule: device `m` is reachable in
+/// round `r` iff `(r + phase_m) mod period < duty`. Models the
+/// non-uniform participation the paper criticizes fixed-cohort
+/// baselines for assuming away.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AvailabilitySchedule {
+    /// Cycle length in rounds.
+    pub period: usize,
+    /// Rounds per cycle the device is up (`1..=period`).
+    pub duty: usize,
+    /// Per-device phase offsets.
+    pub phases: Vec<usize>,
+}
+
+impl AvailabilitySchedule {
+    /// Random per-device phases derived deterministically from `seed`.
+    pub fn periodic(period: usize, duty: usize, num_devices: usize, seed: u64) -> Self {
+        assert!(period >= 1, "period must be >= 1");
+        assert!(
+            (1..=period).contains(&duty),
+            "duty must be in 1..=period (got {duty}/{period})"
+        );
+        let mut rng = Xoshiro256pp::stream(seed, 0xA7A1_1AB1);
+        let phases = (0..num_devices)
+            .map(|_| rng.next_bounded(period as u64) as usize)
+            .collect();
+        Self {
+            period,
+            duty,
+            phases,
+        }
+    }
+
+    /// Is `device` reachable in `round`?
+    pub fn is_up(&self, device: usize, round: usize) -> bool {
+        let phase = self.phases.get(device).copied().unwrap_or(0);
+        (round + phase) % self.period < self.duty
+    }
+}
+
+/// Selects among currently-available devices (per an
+/// [`AvailabilitySchedule`]), optionally capped at a random `K`-subset
+/// of them — the new availability scenario class.
+#[derive(Clone, Debug)]
+pub struct AvailabilityAware {
+    schedule: AvailabilitySchedule,
+    cap: Option<usize>,
+    rng: Xoshiro256pp,
+}
+
+impl AvailabilityAware {
+    pub fn new(schedule: AvailabilitySchedule, cap: Option<usize>, seed: u64) -> Self {
+        if let Some(k) = cap {
+            assert!(k >= 1, "availability cap must be non-empty");
+        }
+        Self {
+            schedule,
+            cap,
+            rng: Xoshiro256pp::stream(seed, 0xAB1E_CA90),
+        }
+    }
+
+    /// The schedule this strategy follows.
+    pub fn schedule(&self) -> &AvailabilitySchedule {
+        &self.schedule
+    }
+}
+
+impl SelectionStrategy for AvailabilityAware {
+    fn name(&self) -> &'static str {
+        "availability"
+    }
+
+    fn select(&mut self, view: &SelectionView) -> Selection {
+        let up: Vec<usize> = (0..view.num_devices)
+            .filter(|&i| self.schedule.is_up(i, view.round))
+            .collect();
+        match self.cap {
+            Some(k) if up.len() > k => {
+                let picks = self.rng.sample_indices(up.len(), k);
+                Selection::Devices(picks.into_iter().map(|p| up[p]).collect())
+            }
+            _ => Selection::Devices(up),
+        }
+    }
+}
+
+/// Config-parseable description of a selection strategy — the
+/// `--select` CLI flag and the `selection = "..."` TOML key.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum SelectionSpec {
+    #[default]
+    Full,
+    RandomK(usize),
+    RoundRobin(usize),
+    LossWeighted(usize),
+    Availability {
+        period: usize,
+        duty: usize,
+        cap: Option<usize>,
+    },
+}
+
+impl SelectionSpec {
+    /// Accepted spec syntax, for error messages and help text.
+    pub const SYNTAX: &'static str =
+        "full | random-k:K | round-robin[:K] | loss-weighted:K | availability:PERIOD,DUTY[,K]";
+
+    /// Parse a spec string: `full`, `random-k:K`, `round-robin[:K]`,
+    /// `loss-weighted:K`, `availability:PERIOD,DUTY[,K]`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        let (head, tail) = match s.split_once(':') {
+            Some((h, t)) => (h, Some(t)),
+            None => (s, None),
+        };
+        let positive = |t: &str| t.parse::<usize>().ok().filter(|&k| k >= 1);
+        match head.to_ascii_lowercase().as_str() {
+            "full" | "all" => Some(Self::Full),
+            "random-k" | "randomk" | "random" => tail.and_then(positive).map(Self::RandomK),
+            "round-robin" | "roundrobin" | "rr" => match tail {
+                Some(t) => positive(t).map(Self::RoundRobin),
+                None => Some(Self::RoundRobin(1)),
+            },
+            "loss-weighted" | "lossweighted" | "lw" => {
+                tail.and_then(positive).map(Self::LossWeighted)
+            }
+            "availability" | "avail" => {
+                let parts: Vec<&str> = tail?.split(',').collect();
+                if parts.len() < 2 || parts.len() > 3 {
+                    return None;
+                }
+                let period = positive(parts[0])?;
+                let duty = positive(parts[1])?;
+                if duty > period {
+                    return None;
+                }
+                let cap = match parts.get(2) {
+                    Some(p) => Some(positive(p)?),
+                    None => None,
+                };
+                Some(Self::Availability { period, duty, cap })
+            }
+            _ => None,
+        }
+    }
+
+    /// Instantiate the strategy for a system of `num_devices` devices,
+    /// deriving RNG streams from `seed`.
+    pub fn build(&self, num_devices: usize, seed: u64) -> Box<dyn SelectionStrategy> {
+        match *self {
+            Self::Full => Box::new(FullParticipation),
+            Self::RandomK(k) => Box::new(RandomK::new(k, seed)),
+            Self::RoundRobin(k) => Box::new(RoundRobin::new(k)),
+            Self::LossWeighted(k) => Box::new(LossWeighted::new(k, seed)),
+            Self::Availability { period, duty, cap } => Box::new(AvailabilityAware::new(
+                AvailabilitySchedule::periodic(period, duty, num_devices, seed),
+                cap,
+                seed,
+            )),
+        }
+    }
+
+    /// Upper bound on the cohort size, if the spec implies one.
+    pub fn cohort_cap(&self) -> Option<usize> {
+        match *self {
+            Self::Full => None,
+            Self::RandomK(k) | Self::RoundRobin(k) | Self::LossWeighted(k) => Some(k),
+            Self::Availability { cap, .. } => cap,
+        }
+    }
+}
+
+impl std::fmt::Display for SelectionSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Self::Full => write!(f, "full"),
+            Self::RandomK(k) => write!(f, "random-k:{k}"),
+            Self::RoundRobin(k) => write!(f, "round-robin:{k}"),
+            Self::LossWeighted(k) => write!(f, "loss-weighted:{k}"),
+            Self::Availability { period, duty, cap } => match cap {
+                Some(k) => write!(f, "availability:{period},{duty},{k}"),
+                None => write!(f, "availability:{period},{duty}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(round: usize, m: usize, devices: &[DeviceView]) -> SelectionView<'_> {
+        SelectionView {
+            round,
+            num_devices: m,
+            devices,
+            init_loss: 1.0,
+            prev_loss: 1.0,
+            loss_history: &[],
+        }
+    }
+
+    #[test]
+    fn full_selects_all() {
+        let devs = vec![DeviceView::default(); 4];
+        let mut s = FullParticipation;
+        assert_eq!(s.select(&view(0, 4, &devs)), Selection::All);
+    }
+
+    #[test]
+    fn random_k_bounds_and_determinism() {
+        let devs = vec![DeviceView::default(); 10];
+        let mut a = RandomK::new(3, 7);
+        let mut b = RandomK::new(3, 7);
+        for r in 0..20 {
+            let sa = a.select(&view(r, 10, &devs));
+            let sb = b.select(&view(r, 10, &devs));
+            assert_eq!(sa, sb, "round {r}");
+            let Selection::Devices(ids) = sa else {
+                panic!("random-k must return an explicit cohort");
+            };
+            assert_eq!(ids.len(), 3);
+            assert!(ids.iter().all(|&i| i < 10));
+        }
+    }
+
+    #[test]
+    fn round_robin_covers_everyone() {
+        let devs = vec![DeviceView::default(); 7];
+        let mut s = RoundRobin::new(2);
+        let mut hit = vec![false; 7];
+        for r in 0..7 {
+            let Selection::Devices(ids) = s.select(&view(r, 7, &devs)) else {
+                panic!("round-robin returns cohorts");
+            };
+            assert_eq!(ids.len(), 2);
+            for i in ids {
+                hit[i] = true;
+            }
+        }
+        assert!(hit.iter().all(|&h| h), "coverage {hit:?}");
+    }
+
+    #[test]
+    fn loss_weighted_prefers_lossy_devices() {
+        let mut devs = vec![DeviceView::default(); 4];
+        devs[2].last_loss = Some(100.0);
+        for (i, d) in devs.iter_mut().enumerate() {
+            if i != 2 && d.last_loss.is_none() {
+                d.last_loss = Some(0.01);
+            }
+        }
+        let mut s = LossWeighted::new(1, 3);
+        let mut count2 = 0;
+        for r in 0..200 {
+            let Selection::Devices(ids) = s.select(&view(r, 4, &devs)) else {
+                panic!()
+            };
+            assert_eq!(ids.len(), 1);
+            if ids[0] == 2 {
+                count2 += 1;
+            }
+        }
+        assert!(count2 > 150, "device 2 picked only {count2}/200 times");
+    }
+
+    #[test]
+    fn availability_respects_schedule() {
+        let sched = AvailabilitySchedule {
+            period: 4,
+            duty: 2,
+            phases: vec![0, 1, 2, 3],
+        };
+        let mut s = AvailabilityAware::new(sched.clone(), None, 5);
+        let devs = vec![DeviceView::default(); 4];
+        for r in 0..8 {
+            let Selection::Devices(ids) = s.select(&view(r, 4, &devs)) else {
+                panic!()
+            };
+            for i in 0..4 {
+                assert_eq!(ids.contains(&i), sched.is_up(i, r), "round {r} dev {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn availability_cap_limits_cohort() {
+        let sched = AvailabilitySchedule::periodic(2, 2, 8, 1); // always up
+        let mut s = AvailabilityAware::new(sched, Some(3), 5);
+        let devs = vec![DeviceView::default(); 8];
+        for r in 0..10 {
+            let Selection::Devices(ids) = s.select(&view(r, 8, &devs)) else {
+                panic!()
+            };
+            assert_eq!(ids.len(), 3);
+        }
+    }
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for (text, spec) in [
+            ("full", SelectionSpec::Full),
+            ("random-k:3", SelectionSpec::RandomK(3)),
+            ("round-robin", SelectionSpec::RoundRobin(1)),
+            ("round-robin:2", SelectionSpec::RoundRobin(2)),
+            ("loss-weighted:4", SelectionSpec::LossWeighted(4)),
+            (
+                "availability:8,5",
+                SelectionSpec::Availability {
+                    period: 8,
+                    duty: 5,
+                    cap: None,
+                },
+            ),
+            (
+                "availability:8,5,3",
+                SelectionSpec::Availability {
+                    period: 8,
+                    duty: 5,
+                    cap: Some(3),
+                },
+            ),
+        ] {
+            assert_eq!(SelectionSpec::parse(text), Some(spec.clone()), "{text}");
+            // Display output parses back to the same spec.
+            assert_eq!(SelectionSpec::parse(&spec.to_string()), Some(spec));
+        }
+        for bad in [
+            "random-k",
+            "random-k:0",
+            "availability:4",
+            "availability:4,9",
+            "availability:0,0",
+            "martian",
+        ] {
+            assert_eq!(SelectionSpec::parse(bad), None, "{bad}");
+        }
+    }
+}

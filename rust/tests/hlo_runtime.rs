@@ -4,6 +4,8 @@
 //!
 //! These tests are skipped (with a note) when `artifacts/` has not been
 //! built — run `make artifacts` first. CI runs them after the AOT step.
+//! The whole file needs the `xla` feature (PJRT bindings).
+#![cfg(feature = "xla")]
 
 use aquila::data::text::{markov_corpus, shard_corpus, CorpusSpec};
 use aquila::problems::GradientSource;
@@ -138,7 +140,8 @@ fn zero_innovation_parity() {
 #[test]
 fn hlo_source_runs_a_federated_round() {
     use aquila::algorithms::aquila::Aquila;
-    use aquila::coordinator::{Coordinator, RunConfig};
+    use aquila::coordinator::{RunConfig, Session};
+    use std::sync::Arc;
     let Some(dir) = artifacts_dir() else { return };
     let m = Manifest::load(&dir).unwrap();
     let model = m.model("txf_tiny").unwrap();
@@ -146,8 +149,7 @@ fn hlo_source_runs_a_federated_round() {
     let corpus = markov_corpus(&CorpusSpec::wikitext2_like(30_000, 5));
     let shards = shard_corpus(&corpus.slice(3000, corpus.len()), 4);
     let heldout = corpus.slice(0, 3000);
-    let src = HloGradientSource::new(&runtime, model, &shards, &heldout).unwrap();
-    let algo = Aquila::new(1.25);
+    let src = Arc::new(HloGradientSource::new(&runtime, model, &shards, &heldout).unwrap());
     let cfg = RunConfig {
         alpha: 0.5,
         beta: 1.25,
@@ -157,7 +159,12 @@ fn hlo_source_runs_a_federated_round() {
         threads: 2,
         ..RunConfig::default()
     };
-    let trace = Coordinator::new(&src, &algo, cfg).run("wt2-hlo", "iid");
+    let trace = Session::builder(src, Arc::new(Aquila::new(1.25)))
+        .config(cfg)
+        .dataset("wt2-hlo")
+        .split("iid")
+        .build()
+        .run();
     assert_eq!(trace.rounds.len(), 5);
     assert!(trace.total_bits() > 0);
     // Loss must move downward over 5 rounds of full-batch descent.

@@ -1,27 +1,30 @@
 //! Coordinator invariants under randomized configurations (in-house
 //! property harness): bit accounting, aggregation semantics, skip
-//! behaviour, determinism, hetero masking, and failure injection.
+//! behaviour, determinism, hetero masking, failure injection, and
+//! selection-strategy properties — all through the `Session` API.
 
 use aquila::algorithms::{
     adaquantfl::AdaQuantFl, aquila::Aquila, fedavg::FedAvg, laq::Laq, lena::Lena,
     marina::Marina, qsgd::QsgdAlgo, Algorithm,
 };
-use aquila::coordinator::{Coordinator, RunConfig};
+use aquila::coordinator::{RunConfig, Session};
 use aquila::hetero::{half_half_masks, CapacityMask};
 use aquila::problems::quadratic::QuadraticProblem;
 use aquila::problems::GradientSource;
+use aquila::selection::SelectionSpec;
 use aquila::transport::FaultSpec;
 use aquila::util::rng::Xoshiro256pp;
+use std::sync::Arc;
 
-fn algorithms() -> Vec<Box<dyn Algorithm>> {
+fn algorithms() -> Vec<Arc<dyn Algorithm>> {
     vec![
-        Box::new(FedAvg),
-        Box::new(QsgdAlgo::new(8)),
-        Box::new(AdaQuantFl::new(2, 32)),
-        Box::new(Laq::new(8, 0.8, 10)),
-        Box::new(Lena::new(0.8, 10)),
-        Box::new(Marina::new(8, 0.2)),
-        Box::new(Aquila::new(0.25)),
+        Arc::new(FedAvg),
+        Arc::new(QsgdAlgo::new(8)),
+        Arc::new(AdaQuantFl::new(2, 32)),
+        Arc::new(Laq::new(8, 0.8, 10)),
+        Arc::new(Lena::new(0.8, 10)),
+        Arc::new(Marina::new(8, 0.2)),
+        Arc::new(Aquila::new(0.25)),
     ]
 }
 
@@ -37,6 +40,10 @@ fn cfg(seed: u64, rounds: usize) -> RunConfig {
     }
 }
 
+fn session(p: &Arc<QuadraticProblem>, algo: Arc<dyn Algorithm>, cfg: RunConfig) -> Session {
+    Session::builder(p.clone(), algo).config(cfg).build()
+}
+
 /// Cumulative bits always equal the sum of per-round bits, bits are
 /// strictly positive on upload rounds, and skip rounds bill zero.
 #[test]
@@ -45,18 +52,19 @@ fn prop_bit_accounting_all_algorithms() {
     for case in 0..6 {
         let d = 8 + rng.next_bounded(64) as usize;
         let m = 2 + rng.next_bounded(8) as usize;
-        let p = QuadraticProblem::new(d, m, 0.5, 2.0, 0.5, case);
+        let p = Arc::new(QuadraticProblem::new(d, m, 0.5, 2.0, 0.5, case));
         for algo in algorithms() {
-            let trace = Coordinator::new(&p, algo.as_ref(), cfg(case, 15)).run("q", "iid");
+            let name = algo.name();
+            let trace = session(&p, algo, cfg(case, 15)).run();
             let mut cum = 0u64;
             for r in &trace.rounds {
                 cum += r.bits_up;
-                assert_eq!(r.cum_bits, cum, "{}", algo.name());
+                assert_eq!(r.cum_bits, cum, "{name}");
                 if r.uploads == 0 {
-                    assert_eq!(r.bits_up, 0, "{}: bits without uploads", algo.name());
+                    assert_eq!(r.bits_up, 0, "{name}: bits without uploads");
                 }
                 if r.bits_up == 0 {
-                    assert_eq!(r.uploads, 0, "{}: uploads without bits", algo.name());
+                    assert_eq!(r.uploads, 0, "{name}: uploads without bits");
                 }
                 assert!(r.uploads + r.skips <= m);
             }
@@ -68,11 +76,12 @@ fn prop_bit_accounting_all_algorithms() {
 /// of algorithm.
 #[test]
 fn prop_round_zero_all_upload() {
-    let p = QuadraticProblem::new(32, 6, 0.5, 2.0, 0.5, 7);
+    let p = Arc::new(QuadraticProblem::new(32, 6, 0.5, 2.0, 0.5, 7));
     for algo in algorithms() {
-        let mut c = Coordinator::new(&p, algo.as_ref(), cfg(1, 1));
-        let rec = c.run_round(0);
-        assert_eq!(rec.uploads, 6, "{} bootstrap", algo.name());
+        let name = algo.name();
+        let mut s = session(&p, algo, cfg(1, 1));
+        let rec = s.run_round(0);
+        assert_eq!(rec.uploads, 6, "{name} bootstrap");
         assert_eq!(rec.skips, 0);
     }
 }
@@ -81,17 +90,18 @@ fn prop_round_zero_all_upload() {
 /// counts and algorithms.
 #[test]
 fn prop_determinism_across_threads() {
-    let p = QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 9);
+    let p = Arc::new(QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 9));
     for algo in algorithms() {
+        let name = algo.name();
         let mut c1 = cfg(5, 12);
         c1.threads = 1;
         let mut c4 = cfg(5, 12);
         c4.threads = 4;
-        let t1 = Coordinator::new(&p, algo.as_ref(), c1).run("q", "iid");
-        let t4 = Coordinator::new(&p, algo.as_ref(), c4).run("q", "iid");
-        assert_eq!(t1.total_bits(), t4.total_bits(), "{}", algo.name());
+        let t1 = session(&p, algo.clone(), c1).run();
+        let t4 = session(&p, algo, c4).run();
+        assert_eq!(t1.total_bits(), t4.total_bits(), "{name}");
         for (a, b) in t1.rounds.iter().zip(&t4.rounds) {
-            assert_eq!(a.train_loss, b.train_loss, "{}", algo.name());
+            assert_eq!(a.train_loss, b.train_loss, "{name}");
             assert_eq!(a.uploads, b.uploads);
         }
     }
@@ -103,11 +113,10 @@ fn prop_determinism_across_threads() {
 /// eq. (5)'s bookkeeping.
 #[test]
 fn prop_aquila_beta0_uploads_everything() {
-    let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 11);
-    let algo = Aquila::new(0.0);
+    let p = Arc::new(QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 11));
     let mut c = cfg(3, 10);
     c.beta = 0.0;
-    let trace = Coordinator::new(&p, &algo, c).run("q", "iid");
+    let trace = session(&p, Arc::new(Aquila::new(0.0)), c).run();
     assert_eq!(trace.total_skips(), 0);
     assert_eq!(trace.total_uploads(), 40);
 }
@@ -118,12 +127,14 @@ fn prop_aquila_beta0_uploads_everything() {
 /// θ exactly at their initial values).
 #[test]
 fn prop_hetero_mask_no_leak() {
-    let p = QuadraticProblem::new(64, 4, 0.5, 2.0, 0.5, 13);
+    let p = Arc::new(QuadraticProblem::new(64, 4, 0.5, 2.0, 0.5, 13));
     let layout = p.layout();
-    let half = std::sync::Arc::new(CapacityMask::from_layout(&layout, 0.5));
+    let half = Arc::new(CapacityMask::from_layout(&layout, 0.5));
     let masks = vec![half.clone(); 4];
-    let algo = Aquila::new(0.1);
-    let mut coord = Coordinator::with_masks(&p, &algo, masks, cfg(15, 10));
+    let mut coord = Session::builder(p.clone(), Arc::new(Aquila::new(0.1)))
+        .config(cfg(15, 10))
+        .masks(masks)
+        .build();
     let theta0 = coord.theta().to_vec();
     for k in 0..10 {
         coord.run_round(k);
@@ -147,12 +158,15 @@ fn prop_hetero_mask_no_leak() {
 /// algorithm by roughly the support ratio.
 #[test]
 fn prop_hetero_bit_reduction_ratio() {
-    let p = QuadraticProblem::new(256, 8, 0.5, 2.0, 0.5, 17);
-    let algo = FedAvg;
-    let t_full = Coordinator::new(&p, &algo, cfg(19, 5)).run("q", "iid");
+    let p = Arc::new(QuadraticProblem::new(256, 8, 0.5, 2.0, 0.5, 17));
+    let t_full = session(&p, Arc::new(FedAvg), cfg(19, 5)).run();
     let masks = half_half_masks(&p.layout(), 8, 0.5);
     let support = masks[7].support();
-    let t_het = Coordinator::with_masks(&p, &algo, masks, cfg(19, 5)).run("q", "het");
+    let t_het = Session::builder(p.clone(), Arc::new(FedAvg))
+        .config(cfg(19, 5))
+        .masks(masks)
+        .build()
+        .run();
     // Expected payload ratio: half devices full d, half at `support`.
     let expect = (0.5 + 0.5 * support as f64 / 256.0) * t_full.total_bits() as f64;
     let actual = t_het.total_bits() as f64;
@@ -167,18 +181,16 @@ fn prop_hetero_bit_reduction_ratio() {
 /// converges for FedAvg.
 #[test]
 fn prop_fault_injection_accounting() {
-    let p = QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 21);
-    let algo = FedAvg;
+    let p = Arc::new(QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 21));
     let mut c = cfg(23, 60);
     c.alpha = 0.1;
     c.faults = FaultSpec {
         drop_prob: 0.3,
         seed: 5,
     };
-    let trace = Coordinator::new(&p, &algo, c).run("q", "iid");
+    let trace = session(&p, Arc::new(FedAvg), c).run();
     // FedAvg sends every round; bits equal the no-fault case.
-    let c2 = cfg(23, 60);
-    let t2 = Coordinator::new(&p, &algo, c2).run("q", "iid");
+    let t2 = session(&p, Arc::new(FedAvg), cfg(23, 60)).run();
     assert_eq!(trace.total_bits(), t2.total_bits());
     let gap = trace.final_train_loss() - p.optimum_value();
     assert!(gap < 0.1, "no convergence under faults: gap {gap}");
@@ -188,19 +200,16 @@ fn prop_fault_injection_accounting() {
 /// FedAvg's); with p_sync = 0 only round 0 is raw.
 #[test]
 fn prop_marina_sync_extremes() {
-    let p = QuadraticProblem::new(32, 4, 0.5, 2.0, 0.5, 25);
+    let p = Arc::new(QuadraticProblem::new(32, 4, 0.5, 2.0, 0.5, 25));
     let mut c_all = cfg(27, 8);
     c_all.marina_p_sync = 1.0;
-    let marina = Marina::new(8, 1.0);
-    let t_all = Coordinator::new(&p, &marina, c_all).run("q", "iid");
-    let fed = FedAvg;
-    let t_fed = Coordinator::new(&p, &fed, cfg(27, 8)).run("q", "iid");
+    let t_all = session(&p, Arc::new(Marina::new(8, 1.0)), c_all).run();
+    let t_fed = session(&p, Arc::new(FedAvg), cfg(27, 8)).run();
     assert_eq!(t_all.total_bits(), t_fed.total_bits());
 
     let mut c_none = cfg(29, 8);
     c_none.marina_p_sync = 0.0;
-    let marina0 = Marina::new(8, 0.0);
-    let t_none = Coordinator::new(&p, &marina0, c_none).run("q", "iid");
+    let t_none = session(&p, Arc::new(Marina::new(8, 0.0)), c_none).run();
     assert!(t_none.total_bits() < t_fed.total_bits());
 }
 
@@ -212,9 +221,8 @@ fn prop_adaquantfl_level_grows_e2e() {
     // Shared-center quadratic: f* = 0, so the loss ratio f(θ⁰)/f(θᵏ)
     // diverges as training converges — exposing the unbounded-level
     // pathology end to end.
-    let p = QuadraticProblem::shared_center(32, 4, 0.5, 2.0, 31);
-    let algo = AdaQuantFl::new(2, 32);
-    let trace = Coordinator::new(&p, &algo, cfg(33, 80)).run("q", "iid");
+    let p = Arc::new(QuadraticProblem::shared_center(32, 4, 0.5, 2.0, 31));
+    let trace = session(&p, Arc::new(AdaQuantFl::new(2, 32)), cfg(33, 80)).run();
     let early = trace.rounds[1].mean_level;
     let late = trace.rounds.last().unwrap().mean_level;
     assert!(
@@ -230,9 +238,8 @@ fn prop_adaquantfl_level_grows_e2e() {
 #[test]
 fn prop_aquila_level_bounded_e2e() {
     use aquila::quant::levels::aquila_level_upper_bound;
-    let p = QuadraticProblem::new(64, 4, 0.5, 2.0, 0.5, 37);
-    let algo = Aquila::new(0.25);
-    let trace = Coordinator::new(&p, &algo, cfg(39, 60)).run("q", "iid");
+    let p = Arc::new(QuadraticProblem::new(64, 4, 0.5, 2.0, 0.5, 37));
+    let trace = session(&p, Arc::new(Aquila::new(0.25)), cfg(39, 60)).run();
     let cap = aquila_level_upper_bound(64) as f64;
     for r in &trace.rounds {
         assert!(
@@ -242,4 +249,142 @@ fn prop_aquila_level_bounded_e2e() {
             r.mean_level
         );
     }
+}
+
+// ---- selection-strategy properties -------------------------------------
+
+fn strategy_specs() -> Vec<SelectionSpec> {
+    vec![
+        SelectionSpec::RandomK(3),
+        SelectionSpec::RoundRobin(2),
+        SelectionSpec::LossWeighted(3),
+        SelectionSpec::Availability {
+            period: 4,
+            duty: 3,
+            cap: Some(3),
+        },
+    ]
+}
+
+fn strategy_session(
+    p: &Arc<QuadraticProblem>,
+    algo: Arc<dyn Algorithm>,
+    spec: SelectionSpec,
+    seed: u64,
+    rounds: usize,
+) -> Session {
+    Session::builder(p.clone(), algo)
+        .config(cfg(seed, rounds))
+        .selection_spec(spec)
+        .build()
+}
+
+/// Per-round uploads never exceed the cohort the strategy selected
+/// (`uploads ≤ |selected| ≤ cap`), across strategies and algorithms.
+#[test]
+fn prop_uploads_bounded_by_cohort_across_strategies() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 51));
+    for spec in strategy_specs() {
+        let cap = spec.cohort_cap().expect("all test specs are capped");
+        for algo in [
+            Arc::new(FedAvg) as Arc<dyn Algorithm>,
+            Arc::new(QsgdAlgo::new(8)),
+            Arc::new(Aquila::new(0.25)),
+        ] {
+            let name = algo.name();
+            let trace = strategy_session(&p, algo, spec.clone(), 53, 16).run();
+            for r in &trace.rounds {
+                assert!(
+                    r.uploads + r.skips <= cap,
+                    "{name}/{spec}: round {} had {} participants > cap {cap}",
+                    r.round,
+                    r.uploads + r.skips
+                );
+            }
+            assert!(trace.total_uploads() > 0, "{name}/{spec}: nothing uploaded");
+        }
+    }
+}
+
+/// Identical seeds ⇒ identical traces for every (stochastic or not)
+/// selection strategy.
+#[test]
+fn prop_selection_deterministic_given_seed() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 55));
+    for spec in strategy_specs() {
+        let t1 = strategy_session(&p, Arc::new(Aquila::new(0.25)), spec.clone(), 57, 14).run();
+        let t2 = strategy_session(&p, Arc::new(Aquila::new(0.25)), spec.clone(), 57, 14).run();
+        assert_eq!(t1.total_bits(), t2.total_bits(), "{spec}");
+        for (a, b) in t1.rounds.iter().zip(&t2.rounds) {
+            assert_eq!(a.train_loss, b.train_loss, "{spec} round {}", a.round);
+            assert_eq!(a.uploads, b.uploads, "{spec} round {}", a.round);
+        }
+    }
+}
+
+/// Round-robin visits every device: after `M` rounds at K = 1 each
+/// device has participated exactly once; after `2M` rounds, twice.
+#[test]
+fn prop_round_robin_selects_everyone_eventually() {
+    let m = 7;
+    let p = Arc::new(QuadraticProblem::new(16, m, 0.5, 2.0, 0.5, 59));
+    let mut s = strategy_session(
+        &p,
+        Arc::new(QsgdAlgo::new(8)),
+        SelectionSpec::RoundRobin(1),
+        61,
+        2 * m,
+    );
+    for k in 0..2 * m {
+        s.run_round(k);
+    }
+    for (dev, (uploads, skips)) in s.device_stats().into_iter().enumerate() {
+        assert_eq!(
+            uploads + skips,
+            2,
+            "device {dev} participated {} times",
+            uploads + skips
+        );
+    }
+}
+
+/// Loss-weighted selection still covers unobserved devices (max-weight
+/// exploration) and produces full-size cohorts.
+#[test]
+fn prop_loss_weighted_explores_and_fills_cohort() {
+    let m = 6;
+    let p = Arc::new(QuadraticProblem::new(16, m, 0.5, 2.0, 0.5, 63));
+    let mut s = strategy_session(
+        &p,
+        Arc::new(FedAvg),
+        SelectionSpec::LossWeighted(2),
+        65,
+        40,
+    );
+    let mut per_round_uploads = Vec::new();
+    for k in 0..40 {
+        per_round_uploads.push(s.run_round(k).uploads);
+    }
+    assert!(per_round_uploads.iter().all(|&u| u == 2));
+    let touched = s
+        .device_stats()
+        .iter()
+        .filter(|&&(u, sk)| u + sk > 0)
+        .count();
+    assert_eq!(touched, m, "only {touched}/{m} devices ever selected");
+}
+
+/// Availability-aware selection: a device that is down this round is
+/// never selected; with duty == period it degrades to (capped) full
+/// participation.
+#[test]
+fn prop_availability_full_duty_is_full_participation() {
+    let p = Arc::new(QuadraticProblem::new(16, 5, 0.5, 2.0, 0.5, 67));
+    let spec = SelectionSpec::Availability {
+        period: 3,
+        duty: 3,
+        cap: None,
+    };
+    let trace = strategy_session(&p, Arc::new(QsgdAlgo::new(8)), spec, 69, 6).run();
+    assert!(trace.rounds.iter().all(|r| r.uploads == 5));
 }

@@ -2,10 +2,11 @@
 //! problem, where `L`, `μ`, `θ*` and `f*` are exact.
 
 use aquila::algorithms::aquila::Aquila;
-use aquila::coordinator::{Coordinator, RunConfig};
+use aquila::coordinator::{RunConfig, Session};
 use aquila::problems::quadratic::QuadraticProblem;
 use aquila::problems::GradientSource;
 use aquila::theory;
+use std::sync::Arc;
 
 fn run_cfg(alpha: f32, beta: f32, rounds: usize) -> RunConfig {
     RunConfig {
@@ -24,7 +25,7 @@ fn run_cfg(alpha: f32, beta: f32, rounds: usize) -> RunConfig {
 /// ally and reaches ε within the predicted K (up to constant slack).
 #[test]
 fn theorem3_round_count_brackets_measured() {
-    let p = QuadraticProblem::new(48, 8, 0.5, 2.0, 0.5, 101);
+    let p = Arc::new(QuadraticProblem::new(48, 8, 0.5, 2.0, 0.5, 101));
     let l = p.smoothness();
     let mu = p.pl_constant();
     let alpha = (0.5 / l) as f32;
@@ -33,8 +34,9 @@ fn theorem3_round_count_brackets_measured() {
     let beta = (theory::max_feasible_beta(l, alpha as f64, gamma) * 0.5) as f32;
     assert!(theory::corollary1_condition(l, alpha as f64, beta as f64, gamma));
 
-    let algo = Aquila::new(beta);
-    let mut coord = Coordinator::new(&p, &algo, run_cfg(alpha, beta, 400));
+    let mut coord = Session::builder(p.clone(), Arc::new(Aquila::new(beta)))
+        .config(run_cfg(alpha, beta, 400))
+        .build();
     let fstar = p.optimum_value();
     let mut gaps = Vec::new();
     for k in 0..400 {
@@ -75,13 +77,14 @@ fn theorem3_round_count_brackets_measured() {
 /// theorem's telescoped product is what matters).
 #[test]
 fn measured_contraction_beats_theorem3_rate() {
-    let p = QuadraticProblem::new(32, 6, 0.5, 2.0, 0.3, 103);
+    let p = Arc::new(QuadraticProblem::new(32, 6, 0.5, 2.0, 0.3, 103));
     let l = p.smoothness();
     let mu = p.pl_constant();
     let alpha = (0.5 / l) as f32;
     let beta = (theory::max_feasible_beta(l, alpha as f64, 2.0) * 0.5) as f32;
-    let algo = Aquila::new(beta);
-    let mut coord = Coordinator::new(&p, &algo, run_cfg(alpha, beta, 120));
+    let mut coord = Session::builder(p.clone(), Arc::new(Aquila::new(beta)))
+        .config(run_cfg(alpha, beta, 120))
+        .build();
     let fstar = p.optimum_value();
     let coef = 1.0 / (2.0 * alpha as f64) - l / 2.0;
     let mut prev_theta = coord.theta().to_vec();
@@ -205,13 +208,14 @@ fn lemma1_bound_holds_in_live_rounds() {
 /// over K rounds is ≤ 2ω₁/(αK) for feasible hyperparameters.
 #[test]
 fn corollary1_average_gradient_bound() {
-    let p = QuadraticProblem::new(32, 6, 0.5, 2.0, 0.4, 109);
+    let p = Arc::new(QuadraticProblem::new(32, 6, 0.5, 2.0, 0.4, 109));
     let l = p.smoothness();
     let alpha = (0.4 / l) as f32;
     let gamma = 2.0;
     let beta = (theory::max_feasible_beta(l, alpha as f64, gamma) * 0.5) as f32;
-    let algo = Aquila::new(beta);
-    let mut coord = Coordinator::new(&p, &algo, run_cfg(alpha, beta, 150));
+    let mut coord = Session::builder(p.clone(), Arc::new(Aquila::new(beta)))
+        .config(run_cfg(alpha, beta, 150))
+        .build();
     let fstar = p.optimum_value();
 
     // Track ‖∇f(θᵏ)‖² directly.
