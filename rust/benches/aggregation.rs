@@ -1,52 +1,134 @@
-//! Server-side benchmarks: payload folding (dequantize + scatter-add)
-//! and the model update — the L3 aggregation path.
+//! Server-side benchmarks: the zero-copy shard-parallel fold (packed
+//! wire bytes → fused dequantize–scatter into `direction`) versus the
+//! pre-PR materializing path (decode → `Vec<u32>` ψ → dense f32 scratch
+//! → scatter-add), plus the model update — the L3 aggregation path.
+//!
+//! The headline case is the ISSUE-2 acceptance scenario: d = 1M,
+//! M = 32 devices, 4-bit payloads. The bench asserts that the serial
+//! and shard-parallel folds produce bit-identical `direction` vectors
+//! and prints the measured speedup.
 
 use aquila::algorithms::ServerAgg;
 use aquila::benchkit::{black_box, Bench};
 use aquila::hetero::CapacityMask;
 use aquila::problems::ParamLayout;
-use aquila::quant::midtread::quantize;
-use aquila::transport::wire::Payload;
+use aquila::quant::midtread::{dequantize_into, quantize};
+use aquila::transport::wire::{decode, upload_refs, EncodedUpload, Payload};
+use aquila::util::pool::default_threads;
 use aquila::util::rng::Xoshiro256pp;
 use aquila::util::vecmath::{axpy, diff_norm2_sq};
 use std::sync::Arc;
 
 fn main() {
-    let mut bench = Bench::new();
+    let mut bench = Bench::from_env_args();
     let d = 1_048_576usize;
-    let m = 16usize;
+    let m = 32usize;
+    let threads = default_threads().max(4);
     let mut rng = Xoshiro256pp::seed_from_u64(4);
-    let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
 
+    // One distinct 4-bit innovation payload per device, pre-encoded to
+    // wire bytes (what the channel delivers).
     let full = Arc::new(CapacityMask::full(d));
     let masks: Vec<_> = (0..m).map(|_| full.clone()).collect();
-    let mut srv = ServerAgg::new(d, masks);
-    let payload = Payload::MidtreadDelta(quantize(&v, 4));
+    let staged: Vec<EncodedUpload> = (0..m)
+        .map(|dev| {
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            EncodedUpload::encode(dev, &Payload::MidtreadDelta(quantize(&v, 4)))
+        })
+        .collect();
+    let uploads = upload_refs(&staged);
+    let scale = 1.0 / m as f32;
 
-    bench.bench_throughput("fold_one_payload d=1M b=4", d as u64, || {
-        srv.add_scaled_payload(0, black_box(&payload), 1.0 / m as f32);
-        black_box(&srv.direction);
-    });
+    // Pre-PR reference: decode to owned payloads, dequantize into a
+    // dense scratch, scatter-add — the materializing pipeline this PR
+    // removed from the round path.
+    let mut dense = vec![0.0f32; d];
+    let mut scratch = vec![0.0f32; d];
+    bench.bench_throughput(
+        &format!("fold_materializing d=1M M={m} b=4 (pre-PR path)"),
+        (d * m) as u64,
+        || {
+            for up in &staged {
+                let p = decode(black_box(&up.bytes)).unwrap();
+                match &p {
+                    Payload::MidtreadDelta(q) => dequantize_into(q, &mut scratch),
+                    _ => unreachable!(),
+                }
+                full.scatter_add(&scratch, scale, &mut dense);
+            }
+            black_box(&dense);
+        },
+    );
 
-    // Masked (hetero) fold: 50% support.
+    // Zero-copy serial fold (threads = 1).
+    let mut srv_serial = ServerAgg::new(d, masks.clone());
+    srv_serial.set_threads(1);
+    let serial_mean = bench
+        .bench_throughput(
+            &format!("fold_packed_serial d=1M M={m} b=4"),
+            (d * m) as u64,
+            || {
+                srv_serial.accumulate(black_box(&uploads), scale);
+                black_box(&srv_serial.direction);
+            },
+        )
+        .mean;
+
+    // Zero-copy shard-parallel fold.
+    let mut srv_par = ServerAgg::new(d, masks.clone());
+    srv_par.set_threads(threads);
+    let par_mean = bench
+        .bench_throughput(
+            &format!("fold_packed_parallel d=1M M={m} b=4 t={threads}"),
+            (d * m) as u64,
+            || {
+                srv_par.accumulate(black_box(&uploads), scale);
+                black_box(&srv_par.direction);
+            },
+        )
+        .mean;
+
+    // Determinism acceptance check: serial and parallel folds from a
+    // clean slate must agree bit-for-bit.
+    srv_serial.reset();
+    srv_par.reset();
+    srv_serial.accumulate(&uploads, scale);
+    srv_par.accumulate(&uploads, scale);
+    let identical = srv_serial
+        .direction
+        .iter()
+        .zip(&srv_par.direction)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "shard-parallel fold diverged from serial fold");
+    println!(
+        "fold determinism: serial == parallel (bit-identical); speedup {:.2}x on {threads} threads",
+        serial_mean.as_secs_f64() / par_mean.as_secs_f64()
+    );
+
+    // Masked (hetero) fold: 50% support through mask indices.
     let layout = ParamLayout::contiguous(&[("w", vec![1024, 1024])]);
     let half = Arc::new(CapacityMask::from_layout(&layout, 0.5));
     let hsupport = half.support();
     let mut srv_h = ServerAgg::new(layout.dim(), vec![half.clone()]);
-    let vh: Vec<f32> = v[..hsupport].to_vec();
-    let payload_h = Payload::MidtreadDelta(quantize(&vh, 4));
+    srv_h.set_threads(threads);
+    let vh: Vec<f32> = (0..hsupport).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+    let staged_h = vec![EncodedUpload::encode(
+        0,
+        &Payload::MidtreadDelta(quantize(&vh, 4)),
+    )];
+    let uploads_h = upload_refs(&staged_h);
     bench.bench_throughput(
-        &format!("fold_masked_payload support={hsupport}"),
+        &format!("fold_masked_payload support={hsupport} t={threads}"),
         hsupport as u64,
         || {
-            srv_h.add_scaled_payload(0, black_box(&payload_h), 0.25);
+            srv_h.accumulate(black_box(&uploads_h), 0.25);
             black_box(&srv_h.direction);
         },
     );
 
     // θ update + model-diff (once per round).
-    let mut theta = v.clone();
-    let prev = v.clone();
+    let mut theta: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+    let prev = theta.clone();
     let dir: Vec<f32> = (0..d).map(|i| (i % 7) as f32 * 1e-4).collect();
     bench.bench_throughput("theta_update+diff d=1M", d as u64, || {
         axpy(-0.1, black_box(&dir), &mut theta);

@@ -9,7 +9,7 @@ use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
 use aquila::repro::run_cell;
 
 fn main() {
-    let mut bench = Bench::new();
+    let mut bench = Bench::from_env_args();
     let spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::NonIid, false).scaled(0.1, 25);
     bench.bench("fig2 subplot sweep (7 algos × 25 rounds)", || {
         for algo in table_suite(spec.beta) {

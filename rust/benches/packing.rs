@@ -3,12 +3,12 @@
 
 use aquila::benchkit::{black_box, Bench};
 use aquila::quant::midtread::quantize;
-use aquila::quant::packing::{pack, unpack};
+use aquila::quant::packing::{pack, unpack, unpack_range};
 use aquila::transport::wire::{decode, encode, Payload};
 use aquila::util::rng::Xoshiro256pp;
 
 fn main() {
-    let mut bench = Bench::new();
+    let mut bench = Bench::from_env_args();
     let d = 1_048_576usize;
     let mut rng = Xoshiro256pp::seed_from_u64(3);
     let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
@@ -22,6 +22,16 @@ fn main() {
         bench.bench_throughput(&format!("unpack d=1M b={bits}"), d as u64, || {
             black_box(unpack(black_box(&packed), bits, d));
         });
+        // O(1)-addressed sub-range decode: one shard's worth of codes
+        // from the middle of the stream (what the parallel fold does).
+        let (lo, hi) = (d / 4, d / 4 + d / 8);
+        bench.bench_throughput(
+            &format!("unpack_range d/8 @d/4 b={bits}"),
+            (hi - lo) as u64,
+            || {
+                black_box(unpack_range(black_box(&packed), bits, lo, hi));
+            },
+        );
     }
 
     let q4 = quantize(&v, 4);

@@ -14,7 +14,7 @@ fn random_vec(d: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
-    let mut bench = Bench::new();
+    let mut bench = Bench::from_env_args();
     for &d in &[22_016usize, 1_048_576] {
         let g = random_vec(d, 1);
         let q = random_vec(d, 2);

@@ -12,7 +12,7 @@ use aquila::problems::GradientSource;
 use std::sync::Arc;
 
 fn main() {
-    let mut bench = Bench::new();
+    let mut bench = Bench::from_env_args();
     for ds in [DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2] {
         let spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.2, 8);
         let problem: Arc<dyn GradientSource> = spec.build_problem().into();

@@ -12,8 +12,8 @@
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::quant::levels::adaquantfl_level;
-use crate::quant::midtread::quantize;
-use crate::transport::wire::Payload;
+use crate::quant::midtread::quantize_buf;
+use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -50,7 +50,7 @@ impl Algorithm for AdaQuantFl {
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
         let bits = self.level(ctx);
-        let q = quantize(grad, bits);
+        let q = quantize_buf(grad, bits, std::mem::take(&mut dev.psi));
         dev.uploads += 1;
         ClientUpload {
             payload: Some(Payload::MidtreadFull(q)),
@@ -58,7 +58,7 @@ impl Algorithm for AdaQuantFl {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         super::fold_average(srv, uploads);
     }
 }

@@ -20,8 +20,8 @@
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::quant::levels::aquila_level;
-use crate::quant::midtread::quantize_innovation_fused;
-use crate::transport::wire::Payload;
+use crate::quant::midtread::quantize_innovation_fused_buf;
+use crate::transport::wire::{Payload, UploadRef};
 use crate::util::vecmath::innovation_norms;
 
 /// See module docs. `β` is carried in [`RoundCtx`] so sweeps (Figure
@@ -71,10 +71,12 @@ impl Algorithm for Aquila {
         let bits = self
             .fixed_level
             .unwrap_or_else(|| aquila_level(l2sq.sqrt(), linf, d));
-        // Step 3: fused quantize (Δq into scratch, plus both norms).
+        // Step 3: fused quantize (Δq into scratch, codes into the
+        // recycled per-device ψ buffer, plus both norms).
         let mut dq = std::mem::take(&mut dev.scratch);
         dq.resize(d, 0.0);
-        let outcome = quantize_innovation_fused(grad, &dev.q_prev, bits, linf, &mut dq);
+        let psi = std::mem::take(&mut dev.psi);
+        let outcome = quantize_innovation_fused_buf(grad, &dev.q_prev, bits, linf, &mut dq, psi);
         // Step 4: the skip criterion (eq. 8). Round 0 always uploads.
         let threshold = ctx.beta as f64 / (ctx.alpha as f64 * ctx.alpha as f64)
             * ctx.model_diff_sq;
@@ -84,6 +86,7 @@ impl Algorithm for Aquila {
             dev.skips += 1;
             dev.prev_err_sq = outcome.err_norm_sq;
             dev.scratch = dq;
+            dev.psi = outcome.quantized.psi;
             return ClientUpload::skip_at_level(bits);
         }
         // Step 5: upload; device stores its new quantized gradient.
@@ -99,7 +102,7 @@ impl Algorithm for Aquila {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         super::fold_incremental(srv, uploads);
     }
 }
@@ -109,6 +112,7 @@ mod tests {
     use super::*;
     use crate::hetero::CapacityMask;
     use crate::quant::levels::aquila_level_upper_bound;
+    use crate::quant::midtread::quantize_innovation_fused;
     use crate::util::rng::Xoshiro256pp;
     use std::sync::Arc;
 

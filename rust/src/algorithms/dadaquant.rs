@@ -16,8 +16,8 @@
 //!   transmit.
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::midtread::quantize;
-use crate::transport::wire::Payload;
+use crate::quant::midtread::quantize_buf;
+use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -65,7 +65,7 @@ impl Algorithm for DAdaQuant {
             return ClientUpload::skip();
         }
         let bits = self.client_level(dev.id, ctx.dadaquant_level);
-        let q = quantize(grad, bits);
+        let q = quantize_buf(grad, bits, std::mem::take(&mut dev.psi));
         dev.uploads += 1;
         ClientUpload {
             payload: Some(Payload::MidtreadFull(q)),
@@ -73,7 +73,7 @@ impl Algorithm for DAdaQuant {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         // FedAvg over the sampled cohort.
         super::fold_average(srv, uploads);
     }

@@ -4,7 +4,7 @@
 //! against.
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::transport::wire::Payload;
+use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
 #[derive(Clone, Debug, Default)]
@@ -21,13 +21,16 @@ impl Algorithm for FedAvg {
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], _ctx: &RoundCtx) -> ClientUpload {
         dev.uploads += 1;
+        let mut raw = std::mem::take(&mut dev.raw);
+        raw.clear();
+        raw.extend_from_slice(grad);
         ClientUpload {
-            payload: Some(Payload::RawFull(grad.to_vec())),
+            payload: Some(Payload::RawFull(raw)),
             level: None,
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         super::fold_average(srv, uploads);
     }
 }
@@ -48,11 +51,11 @@ mod tests {
         let u0 = algo.client_step(&mut d0, &[1.0, 2.0, 3.0], &ctx);
         let u1 = algo.client_step(&mut d1, &[3.0, 2.0, 1.0], &ctx);
         let mut srv = ServerAgg::new(3, vec![full.clone(), full]);
-        algo.server_fold(
-            &mut srv,
-            &[(0, u0.payload.unwrap()), (1, u1.payload.unwrap())],
-            &ctx,
-        );
+        let staged = vec![
+            crate::transport::wire::EncodedUpload::encode(0, &u0.payload.unwrap()),
+            crate::transport::wire::EncodedUpload::encode(1, &u1.payload.unwrap()),
+        ];
+        algo.server_fold(&mut srv, &crate::transport::wire::upload_refs(&staged), &ctx);
         assert_eq!(srv.direction, vec![2.0, 2.0, 2.0]);
     }
 }

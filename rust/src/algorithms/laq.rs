@@ -17,8 +17,8 @@
 //! LAG-comparison remarks after Corollary 1 / Theorem 3).
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::midtread::quantize_innovation_fused;
-use crate::transport::wire::Payload;
+use crate::quant::midtread::quantize_innovation_fused_buf;
+use crate::transport::wire::{Payload, UploadRef};
 use crate::util::vecmath::innovation_norms;
 
 /// See module docs.
@@ -68,12 +68,15 @@ impl Algorithm for Laq {
         let (_l2sq, linf) = innovation_norms(grad, &dev.q_prev);
         let mut dq = std::mem::take(&mut dev.scratch);
         dq.resize(d, 0.0);
-        let outcome = quantize_innovation_fused(grad, &dev.q_prev, self.bits, linf, &mut dq);
+        let psi = std::mem::take(&mut dev.psi);
+        let outcome =
+            quantize_innovation_fused_buf(grad, &dev.q_prev, self.bits, linf, &mut dq, psi);
         let skip = ctx.round > 0
             && outcome.dq_norm_sq <= self.threshold(dev, outcome.err_norm_sq, ctx);
         if skip {
             dev.skips += 1;
             dev.scratch = dq;
+            dev.psi = outcome.quantized.psi;
             return ClientUpload::skip_at_level(self.bits);
         }
         for (q, &delta) in dev.q_prev.iter_mut().zip(dq.iter()) {
@@ -88,7 +91,7 @@ impl Algorithm for Laq {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         super::fold_incremental(srv, uploads);
     }
 }

@@ -15,7 +15,7 @@
 //! where LENA's totals sit close to the unquantized scale of QSGD×4).
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::transport::wire::Payload;
+use crate::transport::wire::{Payload, UploadRef};
 use crate::util::vecmath::innovation_norms;
 
 /// See module docs.
@@ -61,12 +61,11 @@ impl Algorithm for Lena {
             dev.skips += 1;
             return ClientUpload::skip();
         }
-        // Raw innovation; device reference becomes the exact gradient.
-        let delta: Vec<f32> = grad
-            .iter()
-            .zip(&dev.q_prev)
-            .map(|(g, q)| g - q)
-            .collect();
+        // Raw innovation (into the recycled raw buffer); device
+        // reference becomes the exact gradient.
+        let mut delta = std::mem::take(&mut dev.raw);
+        delta.clear();
+        delta.extend(grad.iter().zip(&dev.q_prev).map(|(g, q)| g - q));
         dev.q_prev.copy_from_slice(grad);
         dev.uploads += 1;
         ClientUpload {
@@ -75,7 +74,7 @@ impl Algorithm for Lena {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         super::fold_incremental(srv, uploads);
     }
 }

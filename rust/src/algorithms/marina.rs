@@ -12,8 +12,8 @@
 //! quantizer for comparability (same wire format as the lazy family).
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::midtread::quantize_innovation_fused;
-use crate::transport::wire::Payload;
+use crate::quant::midtread::quantize_innovation_fused_buf;
+use crate::transport::wire::{Payload, UploadRef};
 use crate::util::vecmath::innovation_norms;
 
 /// See module docs.
@@ -47,8 +47,11 @@ impl Algorithm for Marina {
         dev.uploads += 1;
         if sync {
             dev.q_prev.copy_from_slice(grad);
+            let mut raw = std::mem::take(&mut dev.raw);
+            raw.clear();
+            raw.extend_from_slice(grad);
             return ClientUpload {
-                payload: Some(Payload::RawFull(grad.to_vec())),
+                payload: Some(Payload::RawFull(raw)),
                 level: None,
             };
         }
@@ -56,7 +59,9 @@ impl Algorithm for Marina {
         let (_l2, linf) = innovation_norms(grad, &dev.q_prev);
         let mut dq = std::mem::take(&mut dev.scratch);
         dq.resize(d, 0.0);
-        let outcome = quantize_innovation_fused(grad, &dev.q_prev, self.bits, linf, &mut dq);
+        let psi = std::mem::take(&mut dev.psi);
+        let outcome =
+            quantize_innovation_fused_buf(grad, &dev.q_prev, self.bits, linf, &mut dq, psi);
         // MARINA's reference is the *previous local gradient*, not the
         // quantized estimate.
         dev.q_prev.copy_from_slice(grad);
@@ -68,18 +73,12 @@ impl Algorithm for Marina {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], ctx: &RoundCtx) {
         if ctx.marina_sync || ctx.round == 0 {
             super::fold_average(srv, uploads);
-        } else {
+        } else if !uploads.is_empty() {
             // g_est += average of compressed differences.
-            if uploads.is_empty() {
-                return;
-            }
-            let scale = 1.0 / uploads.len() as f32;
-            for (dev, p) in uploads {
-                srv.add_scaled_payload(*dev, p, scale);
-            }
+            srv.accumulate(uploads, 1.0 / uploads.len() as f32);
         }
     }
 }
@@ -90,6 +89,8 @@ mod tests {
     use crate::hetero::CapacityMask;
     use crate::util::rng::Xoshiro256pp;
     use std::sync::Arc;
+
+    use crate::transport::wire::{upload_refs, EncodedUpload};
 
     fn grad(d: usize, seed: u64) -> Vec<f32> {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -139,18 +140,18 @@ mod tests {
         let mut c0 = RoundCtx::bare(0, 0.1, 0.0, 0.0);
         c0.marina_sync = true;
         let ups0 = vec![
-            (0, algo.client_step(&mut d0, &a0, &c0).payload.unwrap()),
-            (1, algo.client_step(&mut d1, &a1, &c0).payload.unwrap()),
+            EncodedUpload::encode(0, &algo.client_step(&mut d0, &a0, &c0).payload.unwrap()),
+            EncodedUpload::encode(1, &algo.client_step(&mut d1, &a1, &c0).payload.unwrap()),
         ];
-        algo.server_fold(&mut srv, &ups0, &c0);
+        algo.server_fold(&mut srv, &upload_refs(&ups0), &c0);
         let (b0, b1) = (grad(8, 12), grad(8, 13));
         let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 1.0);
         c1.marina_sync = false;
         let ups1 = vec![
-            (0, algo.client_step(&mut d0, &b0, &c1).payload.unwrap()),
-            (1, algo.client_step(&mut d1, &b1, &c1).payload.unwrap()),
+            EncodedUpload::encode(0, &algo.client_step(&mut d0, &b0, &c1).payload.unwrap()),
+            EncodedUpload::encode(1, &algo.client_step(&mut d1, &b1, &c1).payload.unwrap()),
         ];
-        algo.server_fold(&mut srv, &ups1, &c1);
+        algo.server_fold(&mut srv, &upload_refs(&ups1), &c1);
         for i in 0..8 {
             let want = 0.5 * (b0[i] + b1[i]);
             assert!(

@@ -35,9 +35,8 @@ pub mod marina;
 pub mod qsgd;
 
 use crate::hetero::CapacityMask;
-use crate::quant::midtread;
-use crate::quant::qsgd as qsgd_quant;
-use crate::transport::wire::Payload;
+use crate::transport::wire::{self, Payload, PayloadView, UploadRef};
+use crate::util::pool::parallel_for_shards;
 use crate::util::rng::Xoshiro256pp;
 use std::sync::Arc;
 
@@ -118,6 +117,16 @@ pub struct DeviceState {
     pub prev_err_sq: f64,
     /// Scratch for dequantized innovations (avoids per-round allocation).
     pub scratch: Vec<f32>,
+    /// Recycled ψ/magnitude code buffer: client steps take it
+    /// (`std::mem::take`), hand it to the `_buf` quantizers, and the
+    /// coordinator returns it via [`DeviceState::recycle`] after the
+    /// payload is serialized — so steady-state rounds allocate nothing.
+    pub psi: Vec<u32>,
+    /// Recycled QSGD sign buffer (see `psi`).
+    pub signs: Vec<bool>,
+    /// Recycled raw-f32 payload buffer (LENA/FedAvg/MARINA-sync; see
+    /// `psi`).
+    pub raw: Vec<f32>,
     /// Device-local RNG stream (stochastic quantizers).
     pub rng: Xoshiro256pp,
     pub uploads: u64,
@@ -134,6 +143,9 @@ impl DeviceState {
             q_prev: vec![0.0; support],
             prev_err_sq: 0.0,
             scratch: vec![0.0; support],
+            psi: Vec::new(),
+            signs: Vec::new(),
+            raw: Vec::new(),
             rng: Xoshiro256pp::stream(seed, 0xDE_u64 << 32 | id as u64),
             uploads: 0,
             skips: 0,
@@ -144,6 +156,24 @@ impl DeviceState {
     /// Gathered dimension.
     pub fn support(&self) -> usize {
         self.mask.support()
+    }
+
+    /// Reclaim the code/sign/raw buffers of a payload this device just
+    /// staged (after serialization), so the next round's client step
+    /// reuses their capacity instead of allocating.
+    pub fn recycle(&mut self, payload: Payload) {
+        match payload {
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+                self.psi = q.psi;
+            }
+            Payload::Qsgd(q) => {
+                self.psi = q.mags;
+                self.signs = q.signs;
+            }
+            Payload::RawDelta(v) | Payload::RawFull(v) => {
+                self.raw = v;
+            }
+        }
     }
 }
 
@@ -173,6 +203,11 @@ impl ClientUpload {
     }
 }
 
+/// Minimum direction elements per fold shard: below this the
+/// scatter-add is cheaper than a thread spawn, so the fold stays
+/// serial (tests and tiny problems never pay scope overhead).
+const FOLD_SHARD_MIN: usize = 8192;
+
 /// Server-side aggregation state shared by all algorithms.
 pub struct ServerAgg {
     /// The step direction: `θ^{k+1} = θᵏ − α · direction`. For the lazy
@@ -184,7 +219,8 @@ pub struct ServerAgg {
     pub masks: Vec<Arc<CapacityMask>>,
     /// Total device count `M`.
     pub m: usize,
-    scratch: Vec<f32>,
+    /// Worker threads for the shard-parallel fold (1 = serial).
+    threads: usize,
 }
 
 impl ServerAgg {
@@ -194,8 +230,14 @@ impl ServerAgg {
             direction: vec![0.0; full_dim],
             masks,
             m,
-            scratch: Vec::new(),
+            threads: 1,
         }
+    }
+
+    /// Set the fold thread count (the coordinator engine passes its
+    /// worker count; defaults to 1 = serial).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Clear the direction (reset-style algorithms).
@@ -203,30 +245,65 @@ impl ServerAgg {
         self.direction.fill(0.0);
     }
 
-    /// Decode `payload` to a dense gathered vector and scatter-add
-    /// `scale ×` it into the direction through the device's mask.
-    pub fn add_scaled_payload(&mut self, device: usize, payload: &Payload, scale: f32) {
-        let mask = &self.masks[device];
-        let n = payload.len();
-        assert_eq!(
-            n,
-            mask.support(),
-            "payload length {n} != device {device} support {}",
-            mask.support()
-        );
-        self.scratch.resize(n, 0.0);
-        match payload {
-            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
-                midtread::dequantize_into(q, &mut self.scratch);
-            }
-            Payload::Qsgd(q) => {
-                qsgd_quant::dequantize_into(q, &mut self.scratch);
-            }
-            Payload::RawDelta(v) | Payload::RawFull(v) => {
-                self.scratch.copy_from_slice(v);
-            }
+    /// The shared fold core every algorithm routes through (§Perf):
+    /// `direction += scale · Σ decode(p)` computed zero-copy — each
+    /// upload's packed wire body is dequantize–scatter-added into
+    /// `direction` shard-by-shard across `threads` workers, with no ψ
+    /// or dense-scratch materialization.
+    ///
+    /// Determinism: shards partition the *output*; within a shard,
+    /// uploads are applied in slice order, so every direction element
+    /// accumulates contributions in exactly the serial fold's order —
+    /// results are bit-identical for any thread count (property-tested
+    /// in `rust/tests/prop_fold.rs`).
+    pub fn accumulate(&mut self, uploads: &[UploadRef<'_>], scale: f32) {
+        if uploads.is_empty() {
+            return;
         }
-        mask.scatter_add(&self.scratch, scale, &mut self.direction);
+        // Parse headers and resolve masks once, not once per shard.
+        let dim = self.direction.len();
+        let staged: Vec<(PayloadView<'_>, &CapacityMask)> = uploads
+            .iter()
+            .map(|up| {
+                let view = up.view();
+                let mask = self.masks[up.device].as_ref();
+                assert_eq!(
+                    view.len,
+                    mask.support(),
+                    "payload length {} != device {} support {}",
+                    view.len,
+                    up.device,
+                    mask.support()
+                );
+                // The shard scatter clamps to the output range, so a
+                // dim mismatch must fail loudly here rather than drop
+                // contributions silently.
+                assert_eq!(
+                    mask.full_dim, dim,
+                    "device {} mask dim {} != direction dim {dim}",
+                    up.device, mask.full_dim
+                );
+                (view, mask)
+            })
+            .collect();
+        parallel_for_shards(
+            &mut self.direction,
+            self.threads,
+            FOLD_SHARD_MIN,
+            |base, shard| {
+                for (view, mask) in &staged {
+                    view.scatter_add_shard(mask, scale, base, shard);
+                }
+            },
+        );
+    }
+
+    /// Decode `payload` to its contribution and scatter-add `scale ×`
+    /// it into the direction through the device's mask — single-payload
+    /// convenience over [`ServerAgg::accumulate`] (tests, examples).
+    pub fn add_scaled_payload(&mut self, device: usize, payload: &Payload, scale: f32) {
+        let bytes = wire::encode(payload);
+        self.accumulate(&[UploadRef { device, bytes: &bytes }], scale);
     }
 }
 
@@ -244,29 +321,24 @@ pub trait Algorithm: Send + Sync {
     /// space (`dev.support()` long).
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload;
 
-    /// Server half: fold the round's decoded uploads into
+    /// Server half: fold the round's delivered uploads (still in wire
+    /// form — fold zero-copy via [`ServerAgg::accumulate`]) into
     /// `srv.direction`.
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], ctx: &RoundCtx);
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], ctx: &RoundCtx);
 }
 
 /// Standard reset-style fold: `direction = (1/|uploads|) Σ decode(p)`.
-pub(crate) fn fold_average(srv: &mut ServerAgg, uploads: &[(usize, Payload)]) {
+pub(crate) fn fold_average(srv: &mut ServerAgg, uploads: &[UploadRef<'_>]) {
     srv.reset();
     if uploads.is_empty() {
         return;
     }
-    let scale = 1.0 / uploads.len() as f32;
-    for (dev, p) in uploads {
-        srv.add_scaled_payload(*dev, p, scale);
-    }
+    srv.accumulate(uploads, 1.0 / uploads.len() as f32);
 }
 
 /// Standard lazy fold: `q̄ += (1/M) Σ decode(Δq)`.
-pub(crate) fn fold_incremental(srv: &mut ServerAgg, uploads: &[(usize, Payload)]) {
-    let scale = 1.0 / srv.m as f32;
-    for (dev, p) in uploads {
-        srv.add_scaled_payload(*dev, p, scale);
-    }
+pub(crate) fn fold_incremental(srv: &mut ServerAgg, uploads: &[UploadRef<'_>]) {
+    srv.accumulate(uploads, 1.0 / srv.m as f32);
 }
 
 /// Construct every algorithm of Tables II/III with the hyperparameters
@@ -318,29 +390,40 @@ mod tests {
 
     #[test]
     fn fold_average_of_two() {
+        use crate::transport::wire::{upload_refs, EncodedUpload};
         let full = Arc::new(CapacityMask::full(2));
         let mut srv = ServerAgg::new(2, vec![full.clone(), full]);
-        let ups = vec![
-            (0usize, Payload::RawFull(vec![2.0, 0.0])),
-            (1usize, Payload::RawFull(vec![0.0, 4.0])),
+        let staged = vec![
+            EncodedUpload::encode(0, &Payload::RawFull(vec![2.0, 0.0])),
+            EncodedUpload::encode(1, &Payload::RawFull(vec![0.0, 4.0])),
         ];
-        fold_average(&mut srv, &ups);
+        fold_average(&mut srv, &upload_refs(&staged));
         assert_eq!(srv.direction, vec![1.0, 2.0]);
         // Re-fold resets rather than accumulates.
-        fold_average(&mut srv, &ups);
+        fold_average(&mut srv, &upload_refs(&staged));
         assert_eq!(srv.direction, vec![1.0, 2.0]);
     }
 
     #[test]
     fn fold_incremental_accumulates_over_m() {
+        use crate::transport::wire::{upload_refs, EncodedUpload};
         let full = Arc::new(CapacityMask::full(1));
         let masks = vec![full.clone(), full.clone(), full.clone(), full];
         let mut srv = ServerAgg::new(1, masks);
-        let ups = vec![(0usize, Payload::RawDelta(vec![4.0]))];
-        fold_incremental(&mut srv, &ups);
+        let staged = vec![EncodedUpload::encode(0, &Payload::RawDelta(vec![4.0]))];
+        fold_incremental(&mut srv, &upload_refs(&staged));
         assert_eq!(srv.direction, vec![1.0]); // 4.0 / M=4
-        fold_incremental(&mut srv, &ups);
+        fold_incremental(&mut srv, &upload_refs(&staged));
         assert_eq!(srv.direction, vec![2.0]); // persists
+    }
+
+    #[test]
+    fn recycle_returns_buffers() {
+        let mut dev = DeviceState::new(0, Arc::new(CapacityMask::full(4)), 1);
+        dev.recycle(Payload::MidtreadDelta(quantize(&[1.0, 2.0, 3.0, 4.0], 4)));
+        assert_eq!(dev.psi.len(), 4);
+        dev.recycle(Payload::RawFull(vec![1.0; 4]));
+        assert_eq!(dev.raw.len(), 4);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::quant::qsgd;
-use crate::transport::wire::Payload;
+use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -29,7 +29,9 @@ impl Algorithm for QsgdAlgo {
     }
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], _ctx: &RoundCtx) -> ClientUpload {
-        let q = qsgd::quantize(grad, self.bits, &mut dev.rng);
+        let mags = std::mem::take(&mut dev.psi);
+        let signs = std::mem::take(&mut dev.signs);
+        let q = qsgd::quantize_buf(grad, self.bits, &mut dev.rng, mags, signs);
         dev.uploads += 1;
         ClientUpload {
             payload: Some(Payload::Qsgd(q)),
@@ -37,7 +39,7 @@ impl Algorithm for QsgdAlgo {
         }
     }
 
-    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[(usize, Payload)], _ctx: &RoundCtx) {
+    fn server_fold(&self, srv: &mut ServerAgg, uploads: &[UploadRef<'_>], _ctx: &RoundCtx) {
         super::fold_average(srv, uploads);
     }
 }
@@ -72,9 +74,11 @@ mod tests {
         let grad: Vec<f32> = (0..256).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
         let up = algo.client_step(&mut dev, &grad, &RoundCtx::bare(0, 0.1, 0.25, 0.0));
         let mut srv = ServerAgg::new(256, vec![Arc::new(CapacityMask::full(256))]);
+        let staged =
+            vec![crate::transport::wire::EncodedUpload::encode(0, &up.payload.unwrap())];
         algo.server_fold(
             &mut srv,
-            &[(0, up.payload.unwrap())],
+            &crate::transport::wire::upload_refs(&staged),
             &RoundCtx::bare(0, 0.1, 0.25, 0.0),
         );
         let err: f64 = grad

@@ -2,10 +2,17 @@
 //! `criterion`; see DESIGN.md §6).
 //!
 //! Provides warmup + timed sampling, robust statistics (mean / median /
-//! std / min), throughput reporting, and a black-box sink. All
-//! `rust/benches/*.rs` binaries are built on this.
+//! std / min), throughput reporting, a black-box sink, and
+//! machine-readable output: `--json <path>` (or `AQUILA_BENCH_JSON`)
+//! makes [`Bench::finish`] write one `{name, mean_ns, median_ns,
+//! min_ns, elements}` record per case, which is how
+//! `BENCH_aggregation.json` / `BENCH_round.json` in the repo root track
+//! the perf trajectory across PRs. All `rust/benches/*.rs` binaries are
+//! built on this.
 
+use crate::util::json::{obj, Json};
 use std::hint::black_box as bb;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Re-exported opaque sink preventing the optimizer from deleting the
@@ -56,6 +63,8 @@ pub struct Bench {
     pub budget: Duration,
     /// Max samples.
     pub max_samples: usize,
+    /// Where to write the JSON report at [`Bench::finish`], if anywhere.
+    pub json_path: Option<PathBuf>,
     results: Vec<Stats>,
 }
 
@@ -81,8 +90,34 @@ impl Bench {
                 Duration::from_secs(1)
             },
             max_samples: 1000,
+            json_path: None,
             results: Vec::new(),
         }
+    }
+
+    /// [`Bench::new`] plus CLI/env configuration: `--json <path>` on
+    /// the bench binary's argv (or the `AQUILA_BENCH_JSON` env var)
+    /// selects the JSON report path. Every bench binary constructs its
+    /// runner through this.
+    pub fn from_env_args() -> Self {
+        let mut bench = Self::new();
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--json" {
+                match args.next() {
+                    Some(p) => bench.json_path = Some(PathBuf::from(p)),
+                    None => eprintln!("--json requires a path argument"),
+                }
+            }
+        }
+        if bench.json_path.is_none() {
+            if let Ok(p) = std::env::var("AQUILA_BENCH_JSON") {
+                if !p.is_empty() {
+                    bench.json_path = Some(PathBuf::from(p));
+                }
+            }
+        }
+        bench
     }
 
     /// Time `f` repeatedly; one sample = one call.
@@ -148,10 +183,51 @@ impl Bench {
         &self.results
     }
 
-    /// Print a closing summary (and return it for tests).
+    /// The JSON report: one record per case.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("name", Json::Str(s.name.clone())),
+                        ("mean_ns", Json::Num(s.mean.as_nanos() as f64)),
+                        ("median_ns", Json::Num(s.median.as_nanos() as f64)),
+                        ("min_ns", Json::Num(s.min.as_nanos() as f64)),
+                        (
+                            "elements",
+                            match s.elements {
+                                Some(e) => Json::Num(e as f64),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// Print a closing summary (and return it for tests); writes the
+    /// JSON report when a path was configured.
     pub fn finish(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("\n=== {} benchmark cases ===\n", self.results.len()));
+        if let Some(path) = &self.json_path {
+            match self.write_json(path) {
+                Ok(()) => out.push_str(&format!("wrote {}\n", path.display())),
+                Err(e) => out.push_str(&format!("failed to write {}: {e}\n", path.display())),
+            }
+        }
         print!("{out}");
         out
     }
@@ -166,6 +242,7 @@ mod tests {
             warmup: Duration::from_millis(1),
             budget: Duration::from_millis(10),
             max_samples: 50,
+            json_path: None,
             results: Vec::new(),
         }
     }
@@ -200,5 +277,39 @@ mod tests {
         b.bench("b", || {});
         assert_eq!(b.results().len(), 2);
         assert!(b.finish().contains("2 benchmark cases"));
+    }
+
+    #[test]
+    fn json_report_schema() {
+        use crate::util::json::Json;
+        let mut b = fast_bench();
+        b.bench_throughput("tp", 128, || {});
+        b.bench("plain", || {});
+        let j = b.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").as_str(), Some("tp"));
+        assert_eq!(arr[0].get("elements").as_f64(), Some(128.0));
+        assert!(arr[0].get("mean_ns").as_f64().is_some());
+        assert!(arr[0].get("median_ns").as_f64().is_some());
+        assert!(arr[0].get("min_ns").as_f64().is_some());
+        assert_eq!(arr[1].get("elements"), &Json::Null);
+        // Round-trips through the parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn finish_writes_json_file() {
+        let dir = std::env::temp_dir().join("aquila_benchkit_json");
+        let path = dir.join("out.json");
+        let mut b = fast_bench();
+        b.json_path = Some(path.clone());
+        b.bench("case", || {});
+        b.finish();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -9,7 +9,12 @@
 //! coordinator coin. Version 1 checkpoints (no RNG section) still load,
 //! with a warning: stochastic-quantizer algorithms (QSGD) resumed from
 //! them will draw a fresh RNG stream and may diverge bitwise from the
-//! uninterrupted run. Written atomically (temp file + rename).
+//! uninterrupted run. Version **3** adds the global train-loss history
+//! and per-device last-loss estimates to the header, so loss-driven
+//! selection strategies (`loss-weighted`) resume on the same
+//! information the uninterrupted run had; v1/v2 checkpoints still load
+//! (with those histories empty). Written atomically (temp file +
+//! rename).
 
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
@@ -48,6 +53,11 @@ pub struct Checkpoint {
     pub coin_rng: Option<RngState>,
     /// Model-difference history, most recent first.
     pub diff_history: Vec<f64>,
+    /// Global train-loss history, most recent first (v3+; empty when
+    /// loaded from older versions).
+    pub loss_history: Vec<f64>,
+    /// Per-device most recent local loss (v3+; NaN = never observed).
+    pub device_last_loss: Vec<f64>,
     /// Cumulative uplink bits.
     pub cum_bits: u64,
     /// Loss estimates.
@@ -56,16 +66,16 @@ pub struct Checkpoint {
 }
 
 /// Current format version.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
 /// Bytes of one serialized RNG record: 4×u64 state + present flag +
 /// gauss flag + gauss f64.
 const RNG_RECORD_BYTES: usize = 4 * 8 + 1 + 1 + 8;
 
 impl Checkpoint {
-    /// Write atomically to `path`. Saves as version 2 when RNG streams
-    /// are present (one per device), as version 1 otherwise (e.g. a
-    /// re-saved v1 snapshot).
+    /// Write atomically to `path`. Saves as the current version when
+    /// RNG streams are present (one per device), as version 1 otherwise
+    /// (e.g. a re-saved v1 snapshot).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -109,6 +119,14 @@ impl Checkpoint {
                 "diff_history",
                 Json::Arr(self.diff_history.iter().map(|&d| Json::Num(d)).collect()),
             ),
+            (
+                "loss_history",
+                Json::Arr(self.loss_history.iter().map(|&l| loss(l)).collect()),
+            ),
+            (
+                "device_last_loss",
+                Json::Arr(self.device_last_loss.iter().map(|&l| loss(l)).collect()),
+            ),
             ("cum_bits", Json::Num(self.cum_bits as f64)),
             ("init_loss", loss(self.init_loss)),
             ("prev_loss", loss(self.prev_loss)),
@@ -135,8 +153,9 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Load and validate from `path`. Accepts versions 1 and 2; v1
-    /// loads warn that RNG streams are absent.
+    /// Load and validate from `path`. Accepts versions 1 through the
+    /// current one; v1 loads warn that RNG streams are absent, and
+    /// pre-v3 loads leave the loss histories empty.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {path:?}"))?;
@@ -149,7 +168,7 @@ impl Checkpoint {
         let header = Json::parse(std::str::from_utf8(&all[..nl])?)
             .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
         let version = header.get("version").as_usize().unwrap_or(0) as u32;
-        if version != 1 && version != VERSION {
+        if !(1..=VERSION).contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         if version == 1 {
@@ -220,6 +239,22 @@ impl Checkpoint {
                 .unwrap_or(&[])
                 .iter()
                 .filter_map(|v| v.as_f64())
+                .collect(),
+            // v3 fields; absent (empty) in v1/v2 headers. Nulls encode
+            // NaN (never-observed losses).
+            loss_history: header
+                .get("loss_history")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN))
+                .collect(),
+            device_last_loss: header
+                .get("device_last_loss")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN))
                 .collect(),
             cum_bits: header.get("cum_bits").as_f64().unwrap_or(0.0) as u64,
             init_loss: header.get("init_loss").as_f64().unwrap_or(f64::NAN),
@@ -313,6 +348,8 @@ mod tests {
                 gauss_cache: None,
             }),
             diff_history: vec![0.5, 0.25],
+            loss_history: vec![0.8, 0.9, 1.1],
+            device_last_loss: vec![0.7, f64::NAN],
             cum_bits: 123_456,
             init_loss: 2.5,
             prev_loss: 0.75,
@@ -323,10 +360,57 @@ mod tests {
     fn roundtrip() {
         let dir = std::env::temp_dir().join("aquila_ckpt_test");
         let path = dir.join("run.ckpt");
-        let c = sample();
+        let mut c = sample();
+        // NaN breaks PartialEq; exercise it separately below.
+        c.device_last_loss = vec![0.7, 0.6];
         c.save(&path).unwrap();
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded, c);
+        assert_eq!(loaded.version, VERSION);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_histories_roundtrip_with_nan() {
+        let dir = std::env::temp_dir().join("aquila_ckpt_v3");
+        let path = dir.join("run.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.loss_history, c.loss_history);
+        assert_eq!(loaded.device_last_loss[0], 0.7);
+        assert!(loaded.device_last_loss[1].is_nan());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_header_without_histories_loads_empty() {
+        // Simulate an old v2 checkpoint: strip the v3 keys and rewrite
+        // the version field.
+        let dir = std::env::temp_dir().join("aquila_ckpt_v2compat");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.device_last_loss = vec![0.1, 0.2];
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = String::from_utf8(bytes[..nl].to_vec()).unwrap();
+        let mut j = crate::util::json::Json::parse(&header).unwrap();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("loss_history");
+            m.remove("device_last_loss");
+            m.insert("version".into(), crate::util::json::Json::Num(2.0));
+        }
+        let mut rewritten = j.to_string().into_bytes();
+        rewritten.push(b'\n');
+        rewritten.extend_from_slice(&bytes[nl + 1..]);
+        std::fs::write(&path, rewritten).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.version, 2);
+        assert!(loaded.loss_history.is_empty());
+        assert!(loaded.device_last_loss.is_empty());
+        assert_eq!(loaded.theta, c.theta);
+        assert_eq!(loaded.device_rng, c.device_rng);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -383,7 +467,8 @@ mod tests {
         let path = dir.join("run.ckpt");
         sample().save(&path).unwrap();
         let text = std::fs::read(&path).unwrap();
-        let s = String::from_utf8_lossy(&text).replace("\"version\":2", "\"version\":9");
+        let s = String::from_utf8_lossy(&text)
+            .replace(&format!("\"version\":{VERSION}"), "\"version\":9");
         std::fs::write(&path, s).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();

@@ -11,12 +11,11 @@ use crate::metrics::RoundRecord;
 use crate::problems::GradientSource;
 use crate::quant::levels::DadaquantSchedule;
 use crate::selection::{DeviceView, Selection, SelectionStrategy, SelectionView};
-use crate::transport::wire::Payload;
+use crate::transport::wire::{self, UploadRef};
 use crate::transport::Channel;
 use crate::util::pool::parallel_for_each_mut;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::vecmath::{axpy, diff_norm2_sq};
-use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Per-device slot: algorithm state + reusable buffers + per-round
@@ -25,7 +24,11 @@ struct DeviceSlot {
     state: DeviceState,
     grad_full: Vec<f32>,
     grad_gathered: Vec<f32>,
-    staged: Option<Payload>,
+    /// This round's serialized upload (valid when `staged`); encoded in
+    /// the parallel device phase and read zero-copy by the server fold.
+    /// Persists across rounds so encoding stops allocating after round 0.
+    wire_buf: Vec<u8>,
+    staged: bool,
     staged_level: Option<u8>,
     loss: f64,
     participated: bool,
@@ -41,9 +44,15 @@ pub struct RoundEngine {
     theta: Vec<f32>,
     prev_theta: Vec<f32>,
     channel: Channel,
-    diff_history: VecDeque<f64>,
-    /// Recent global train losses, most recent first (selection view).
-    loss_history: VecDeque<f64>,
+    /// Recent squared model differences, most recent first.
+    diff_history: Vec<f64>,
+    /// Recent global train losses, most recent first (selection view;
+    /// persisted since checkpoint v3 so post-restore selection matches
+    /// the uninterrupted run).
+    loss_history: Vec<f64>,
+    /// Recycled buffer for `RoundCtx::model_diff_history` (the context
+    /// hands it back at the end of every round — no per-round allocation).
+    ctx_diff_buf: Vec<f64>,
     /// Per-device statistics exposed to selection strategies.
     device_views: Vec<DeviceView>,
     init_loss: f64,
@@ -75,7 +84,8 @@ impl RoundEngine {
                 state: DeviceState::new(i, mask.clone(), cfg.seed),
                 grad_full: vec![0.0; d],
                 grad_gathered: Vec::with_capacity(mask.support()),
-                staged: None,
+                wire_buf: Vec::new(),
+                staged: false,
                 staged_level: None,
                 loss: 0.0,
                 participated: false,
@@ -86,14 +96,17 @@ impl RoundEngine {
         } else {
             cfg.threads
         };
+        let mut server = ServerAgg::new(d, masks);
+        server.set_threads(threads);
         Self {
-            server: ServerAgg::new(d, masks),
+            server,
             slots,
             prev_theta: theta.clone(),
             theta,
             channel: Channel::new(cfg.faults.clone()),
-            diff_history: VecDeque::with_capacity(cfg.history_depth + 1),
-            loss_history: VecDeque::with_capacity(cfg.history_depth + 1),
+            diff_history: Vec::with_capacity(cfg.history_depth + 1),
+            loss_history: Vec::with_capacity(cfg.history_depth + 1),
+            ctx_diff_buf: Vec::with_capacity(cfg.history_depth + 1),
             device_views: vec![DeviceView::default(); m],
             init_loss: f64::NAN,
             prev_loss: f64::NAN,
@@ -131,15 +144,14 @@ impl RoundEngine {
 
     fn build_ctx(&mut self, round: usize, strategy: &mut dyn SelectionStrategy) -> RoundCtx {
         let m = self.slots.len();
-        let model_diff_sq = self.diff_history.front().copied().unwrap_or(0.0);
-        let loss_history: Vec<f64> = self.loss_history.iter().copied().collect();
+        let model_diff_sq = self.diff_history.first().copied().unwrap_or(0.0);
         let view = SelectionView {
             round,
             num_devices: m,
             devices: &self.device_views,
             init_loss: self.init_loss,
             prev_loss: self.prev_loss,
-            loss_history: &loss_history,
+            loss_history: &self.loss_history,
         };
         let selected = match strategy.select(&view) {
             Selection::All => None,
@@ -157,13 +169,16 @@ impl RoundEngine {
         } else {
             self.dadaquant.observe(self.prev_loss)
         };
+        let mut model_diff_history = std::mem::take(&mut self.ctx_diff_buf);
+        model_diff_history.clear();
+        model_diff_history.extend_from_slice(&self.diff_history);
         RoundCtx {
             round,
             num_devices: m,
             alpha: self.cfg.alpha,
             beta: self.cfg.beta,
             model_diff_sq,
-            model_diff_history: self.diff_history.iter().copied().collect(),
+            model_diff_history,
             init_loss: if self.init_loss.is_nan() { 1.0 } else { self.init_loss },
             prev_loss: if self.prev_loss.is_nan() { 1.0 } else { self.prev_loss },
             marina_sync: round == 0 || self.coin_rng.bernoulli(self.cfg.marina_p_sync),
@@ -180,12 +195,16 @@ impl RoundEngine {
         strategy: &mut dyn SelectionStrategy,
         round: usize,
     ) -> RoundRecord {
-        let ctx = self.build_ctx(round, strategy);
+        let mut ctx = self.build_ctx(round, strategy);
         let theta = &self.theta;
 
         // ---- device phase (parallel) ---------------------------------
+        // Each selected device computes its gradient, runs the client
+        // rule, and *serializes* its upload into the slot's persistent
+        // wire buffer; payload code buffers are recycled back into the
+        // device state so steady-state rounds allocate nothing.
         parallel_for_each_mut(&mut self.slots, self.threads, |i, slot| {
-            slot.staged = None;
+            slot.staged = false;
             slot.staged_level = None;
             slot.participated = ctx.is_selected(i);
             if !slot.participated {
@@ -199,28 +218,37 @@ impl RoundEngine {
             slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
             let ClientUpload { payload, level } =
                 algo.client_step(&mut slot.state, &slot.grad_gathered, &ctx);
-            slot.staged = payload;
             slot.staged_level = level;
+            if let Some(p) = payload {
+                wire::encode_into(&p, &mut slot.wire_buf);
+                slot.staged = true;
+                slot.state.recycle(p);
+            }
         });
 
         // ---- transport phase ------------------------------------------
-        let uploads: Vec<(usize, Payload)> = self
+        // Uploads stay as wire bytes end to end: the channel bills and
+        // optionally drops them, the fold reads them zero-copy.
+        let staged: Vec<UploadRef<'_>> = self
             .slots
-            .iter_mut()
-            .filter_map(|s| s.staged.take().map(|p| (s.state.id, p)))
+            .iter()
+            .filter(|s| s.staged)
+            .map(|s| UploadRef {
+                device: s.state.id,
+                bytes: &s.wire_buf,
+            })
             .collect();
-        let upload_count = uploads.len();
-        let (delivered, stats) = self.channel.transmit(uploads);
+        let upload_count = staged.len();
+        let (delivered, stats) = self.channel.transmit(staged);
 
         // ---- server phase ---------------------------------------------
         algo.server_fold(&mut self.server, &delivered, &ctx);
+        drop(delivered);
         self.prev_theta.copy_from_slice(&self.theta);
         axpy(-self.cfg.alpha, &self.server.direction, &mut self.theta);
         let diff = diff_norm2_sq(&self.theta, &self.prev_theta);
-        self.diff_history.push_front(diff);
-        while self.diff_history.len() > self.cfg.history_depth {
-            self.diff_history.pop_back();
-        }
+        self.diff_history.insert(0, diff);
+        self.diff_history.truncate(self.cfg.history_depth);
 
         // ---- metrics ----------------------------------------------------
         let participants: Vec<&DeviceSlot> =
@@ -238,10 +266,8 @@ impl RoundEngine {
             self.init_loss = train_loss;
         }
         self.prev_loss = train_loss;
-        self.loss_history.push_front(train_loss);
-        while self.loss_history.len() > self.cfg.history_depth {
-            self.loss_history.pop_back();
-        }
+        self.loss_history.insert(0, train_loss);
+        self.loss_history.truncate(self.cfg.history_depth);
         let levels: Vec<u8> = self
             .slots
             .iter()
@@ -268,6 +294,8 @@ impl RoundEngine {
         } else {
             (None, None, None)
         };
+        // Hand the context's history buffer back for the next round.
+        self.ctx_diff_buf = std::mem::take(&mut ctx.model_diff_history);
         RoundRecord {
             round,
             bits_up: stats.uplink_bits,
@@ -303,7 +331,13 @@ impl RoundEngine {
                 .collect(),
             device_rng: self.slots.iter().map(|s| rng_state(&s.state.rng)).collect(),
             coin_rng: Some(rng_state(&self.coin_rng)),
-            diff_history: self.diff_history.iter().copied().collect(),
+            diff_history: self.diff_history.clone(),
+            loss_history: self.loss_history.clone(),
+            device_last_loss: self
+                .device_views
+                .iter()
+                .map(|v| v.last_loss.unwrap_or(f64::NAN))
+                .collect(),
             cum_bits: self.cum_bits,
             init_loss: self.init_loss,
             prev_loss: self.prev_loss,
@@ -354,13 +388,20 @@ impl RoundEngine {
         if let Some(coin) = &ckpt.coin_rng {
             self.coin_rng = Xoshiro256pp::from_snapshot(coin.s, coin.gauss_cache);
         }
-        for (view, slot) in self.device_views.iter_mut().zip(&self.slots) {
+        for (i, (view, slot)) in self.device_views.iter_mut().zip(&self.slots).enumerate() {
             view.uploads = slot.state.uploads;
             view.skips = slot.state.skips;
-            view.last_loss = None;
+            // v3 checkpoints carry the per-device loss estimates that
+            // loss-weighted selection samples from; older versions
+            // leave them unobserved.
+            view.last_loss = ckpt
+                .device_last_loss
+                .get(i)
+                .copied()
+                .filter(|l| l.is_finite());
         }
-        self.diff_history = ckpt.diff_history.iter().copied().collect();
-        self.loss_history.clear();
+        self.diff_history = ckpt.diff_history.clone();
+        self.loss_history = ckpt.loss_history.clone();
         self.cum_bits = ckpt.cum_bits;
         self.init_loss = ckpt.init_loss;
         self.prev_loss = ckpt.prev_loss;

@@ -78,21 +78,35 @@ pub fn tau(bits: u8) -> f64 {
 
 /// Quantize `v` at level `bits` with range `R = ‖v‖_∞` (Definition 2).
 pub fn quantize(v: &[f32], bits: u8) -> QuantizedVec {
+    quantize_buf(v, bits, Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize`] (see
+/// [`quantize_with_range_into`]).
+pub fn quantize_buf(v: &[f32], bits: u8, psi: Vec<u32>) -> QuantizedVec {
     let range = crate::util::vecmath::norm_inf(v);
-    quantize_with_range(v, bits, range)
+    quantize_with_range_into(v, bits, range, psi)
 }
 
 /// Quantize with an externally supplied range (the range of the
 /// innovation is usually already known from the fused norm pass).
 pub fn quantize_with_range(v: &[f32], bits: u8, range: f32) -> QuantizedVec {
+    quantize_with_range_into(v, bits, range, Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize_with_range`]: `psi` is cleared and
+/// refilled, keeping its capacity (the coordinator recycles each
+/// device's code buffer across rounds — §Perf).
+pub fn quantize_with_range_into(v: &[f32], bits: u8, range: f32, mut psi: Vec<u32>) -> QuantizedVec {
     assert!((1..=MAX_BITS).contains(&bits), "bits must be in 1..=32");
     assert!(range >= 0.0 && range.is_finite(), "range must be finite ≥ 0");
-    let mut psi = Vec::with_capacity(v.len());
+    psi.clear();
+    psi.reserve(v.len());
     if range == 0.0 {
         psi.resize(v.len(), 0);
         return QuantizedVec { bits, range, psi };
     }
-    let max_code = ((1u64 << bits) - 1) as u32;
+    let max_code = crate::quant::max_code(bits);
     if bits <= 12 {
         // f32 fast path — must stay bit-identical to
         // `quantize_innovation_fused` (§Perf).
@@ -141,6 +155,56 @@ pub fn dequantize(q: &QuantizedVec) -> Vec<f32> {
     out
 }
 
+/// Fused server-side kernel (§Perf): reconstruct codes `codes.start..
+/// codes.end` straight from the *packed* wire body and scatter-add
+/// `scale · Δqᵢ` into one contiguous output shard — no ψ vector and no
+/// dense scratch are ever materialized.
+///
+/// `targets` maps code position → full-model coordinate (`None` =
+/// identity, the full-capacity fast path); `out` is the shard slice
+/// `direction[out_base .. out_base + out.len()]`, so every touched
+/// coordinate must satisfy `out_base ≤ idx < out_base + out.len()` —
+/// the caller selects `codes` accordingly (contiguous because mask
+/// indices are sorted).
+///
+/// Per-element arithmetic is exactly [`dequantize_into`] followed by
+/// `out += scale · Δq` and is independent of shard boundaries, which is
+/// what makes the shard-parallel fold bit-identical to the serial one.
+#[allow(clippy::too_many_arguments)]
+pub fn dequantize_scatter_add(
+    body: &[u8],
+    bits: u8,
+    range: f32,
+    codes: std::ops::Range<usize>,
+    targets: Option<&[u32]>,
+    out_base: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    if codes.is_empty() || range == 0.0 {
+        // Δq ≡ 0 at range 0 (Lemma 4 reconstruction collapses to −R = 0).
+        return;
+    }
+    let step = 2.0 * tau(bits) * range as f64;
+    let r = range as f64;
+    match targets {
+        None => {
+            let mut j = codes.start - out_base;
+            crate::quant::packing::for_each_code(body, bits, codes.start, codes.end, |c| {
+                out[j] += scale * ((step * c as f64 - r) as f32);
+                j += 1;
+            });
+        }
+        Some(idx) => {
+            let mut p = codes.start;
+            crate::quant::packing::for_each_code(body, bits, codes.start, codes.end, |c| {
+                out[idx[p] as usize - out_base] += scale * ((step * c as f64 - r) as f32);
+                p += 1;
+            });
+        }
+    }
+}
+
 /// Result of the fused quantize pass used on the AQUILA device hot path.
 #[derive(Clone, Debug)]
 pub struct QuantizeOutcome {
@@ -163,11 +227,28 @@ pub fn quantize_innovation_fused(
     range: f32,
     dq_out: &mut [f32],
 ) -> QuantizeOutcome {
+    quantize_innovation_fused_buf(g, q_prev, bits, range, dq_out, Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize_innovation_fused`]: `psi` is
+/// cleared and refilled with the codes (keeping its capacity) and ends
+/// up owned by the returned [`QuantizedVec`]. The device hot path hands
+/// in its recycled per-device code buffer so the quantize step performs
+/// zero allocations in steady state.
+pub fn quantize_innovation_fused_buf(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    range: f32,
+    dq_out: &mut [f32],
+    mut psi: Vec<u32>,
+) -> QuantizeOutcome {
     assert_eq!(g.len(), q_prev.len());
     assert_eq!(g.len(), dq_out.len());
     assert!((1..=MAX_BITS).contains(&bits));
     let d = g.len();
-    let mut psi = Vec::with_capacity(d);
+    psi.clear();
+    psi.reserve(d);
     if range == 0.0 {
         psi.resize(d, 0);
         dq_out.fill(0.0);
@@ -182,7 +263,7 @@ pub fn quantize_innovation_fused(
             err_norm_sq: 0.0,
         };
     }
-    let max_code = ((1u64 << bits) - 1) as u32;
+    let max_code = crate::quant::max_code(bits);
     let mut dq_norm_sq = 0.0f64;
     let mut err_norm_sq = 0.0f64;
     if bits <= 12 {
@@ -368,5 +449,72 @@ mod tests {
     #[should_panic]
     fn rejects_zero_bits() {
         quantize(&[1.0], 0);
+    }
+
+    #[test]
+    fn fused_buf_reuses_capacity() {
+        let g = [1.0f32, -2.0, 0.5];
+        let qp = [0.0f32; 3];
+        let mut dq = [0.0f32; 3];
+        let psi = Vec::with_capacity(64);
+        let cap_ptr = psi.as_ptr();
+        let out = quantize_innovation_fused_buf(&g, &qp, 4, 2.0, &mut dq, psi);
+        assert_eq!(out.quantized.psi.len(), 3);
+        assert_eq!(out.quantized.psi.as_ptr(), cap_ptr, "buffer not reused");
+        let composed = quantize_with_range(&[1.0, -2.0, 0.5], 4, 2.0);
+        assert_eq!(out.quantized.psi, composed.psi);
+    }
+
+    #[test]
+    fn scatter_add_matches_dequantize_then_add() {
+        use crate::quant::packing::pack;
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for bits in [1u8, 4, 7, 13] {
+            let d = 301;
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.5)).collect();
+            let q = quantize(&v, bits);
+            let body = pack(&q.psi, bits);
+            // Reference: dense dequantize then scaled add.
+            let mut expect = vec![0.25f32; d];
+            let dq = dequantize(&q);
+            for (e, x) in expect.iter_mut().zip(&dq) {
+                *e += 0.5 * x;
+            }
+            // Fused over two shards: [0, 100) and [100, d).
+            let mut out = vec![0.25f32; d];
+            let (lo, hi) = out.split_at_mut(100);
+            dequantize_scatter_add(&body, bits, q.range, 0..100, None, 0, 0.5, lo);
+            dequantize_scatter_add(&body, bits, q.range, 100..d, None, 100, 0.5, hi);
+            for (i, (a, b)) in out.iter().zip(&expect).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_add_through_indices() {
+        use crate::quant::packing::pack;
+        let v = [1.0f32, -1.0, 0.5, -0.25];
+        let q = quantize(&v, 6);
+        let body = pack(&q.psi, 6);
+        // Support positions 0..4 target coordinates 1, 3, 4, 7 of an
+        // 8-wide model.
+        let idx: Vec<u32> = vec![1, 3, 4, 7];
+        let mut out = vec![0.0f32; 8];
+        dequantize_scatter_add(&body, 6, q.range, 0..4, Some(&idx), 0, 2.0, &mut out);
+        let dq = dequantize(&q);
+        for (k, &t) in idx.iter().enumerate() {
+            assert_eq!(out[t as usize], 2.0 * dq[k], "k={k}");
+        }
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn scatter_add_zero_range_is_noop() {
+        let mut out = vec![1.0f32; 4];
+        dequantize_scatter_add(&[], 4, 0.0, 0..4, None, 0, 1.0, &mut out);
+        dequantize_scatter_add(&[0xFF], 4, 1.0, 2..2, None, 0, 1.0, &mut out);
+        assert_eq!(out, vec![1.0; 4]);
     }
 }

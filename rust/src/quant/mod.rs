@@ -12,3 +12,52 @@ pub use midtread::{
     dequantize, dequantize_into, quantize, quantize_innovation_fused, quantize_with_range,
     QuantizeOutcome, QuantizedVec, MAX_BITS,
 };
+
+/// Bit mask covering the low `bits` bits of a code word — the single
+/// source of the `(1 << b) − 1` expression previously duplicated across
+/// `packing`, `midtread`, and `qsgd` (each with its own `b == 32`
+/// special case).
+///
+/// Valid for `bits ∈ 1..=32`; `code_mask(32)` is `u32::MAX as u64`.
+#[inline]
+#[allow(clippy::manual_range_contains)] // RangeInclusive::contains is not const
+pub const fn code_mask(bits: u8) -> u64 {
+    assert!(bits >= 1 && bits <= 32, "bits must be in 1..=32");
+    (1u64 << bits) - 1
+}
+
+/// Largest code representable at `bits` bits: `2^b − 1`.
+#[inline]
+pub const fn max_code(bits: u8) -> u32 {
+    code_mask(bits) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{code_mask, max_code};
+
+    #[test]
+    fn code_mask_boundaries() {
+        assert_eq!(code_mask(1), 0x1);
+        assert_eq!(code_mask(4), 0xF);
+        assert_eq!(code_mask(8), 0xFF);
+        assert_eq!(code_mask(31), (1u64 << 31) - 1);
+        assert_eq!(code_mask(32), u32::MAX as u64);
+        for bits in 1..=32u8 {
+            assert_eq!(code_mask(bits).count_ones(), bits as u32);
+            assert_eq!(max_code(bits) as u64, code_mask(bits));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn code_mask_rejects_zero_bits() {
+        code_mask(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn code_mask_rejects_wide_bits() {
+        code_mask(33);
+    }
+}

@@ -4,6 +4,16 @@
 //! *actual serialized sizes* of what devices send, so the ψ vectors are
 //! really packed at `b` bits per element (LSB-first within a little-endian
 //! `u64` accumulator) rather than estimated as `d·b/8`.
+//!
+//! Layout invariant: code `i` occupies bit positions `[i·b, (i+1)·b)` of
+//! the stream, bytes little-endian. Fixed-width codes therefore make any
+//! sub-range O(1)-addressable — [`unpack_range`] and the streaming
+//! [`for_each_code`] start mid-stream without touching earlier bytes,
+//! which is what the shard-parallel server fold builds on (§Perf in
+//! DESIGN.md). Both the packer and the unpackers move whole little-endian
+//! `u64` words instead of single bytes.
+
+use super::code_mask;
 
 /// Number of payload bytes for `n` codes at `bits` bits each.
 #[inline]
@@ -16,70 +26,135 @@ pub const fn packed_len(n: usize, bits: u8) -> usize {
 /// Codes are written LSB-first: code `i` occupies bit positions
 /// `[i·b, (i+1)·b)` of the stream.
 pub fn pack(codes: &[u32], bits: u8) -> Vec<u8> {
-    assert!((1..=32).contains(&bits));
     let mut out = Vec::with_capacity(packed_len(codes.len(), bits));
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// Append the packed representation of `codes` to `out` (buffer-reusing
+/// form of [`pack`]; the device hot path packs into a per-device wire
+/// buffer that persists across rounds).
+///
+/// The accumulator flushes whole little-endian `u64` words; only the
+/// final partial word is written byte-wise.
+pub fn pack_into(codes: &[u32], bits: u8, out: &mut Vec<u8>) {
+    assert!((1..=32).contains(&bits));
+    out.reserve(packed_len(codes.len(), bits));
+    let b = bits as u32;
+    let mask = code_mask(bits);
     let mut acc: u64 = 0;
     let mut acc_bits: u32 = 0;
-    let b = bits as u32;
-    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
     for &c in codes {
         debug_assert!((c as u64) <= mask, "code {c} exceeds {bits} bits");
-        acc |= ((c as u64) & mask) << acc_bits;
-        acc_bits += b;
-        while acc_bits >= 8 {
-            out.push((acc & 0xFF) as u8);
-            acc >>= 8;
-            acc_bits -= 8;
+        let c = (c as u64) & mask;
+        acc |= c << acc_bits;
+        let filled = acc_bits + b;
+        if filled >= 64 {
+            out.extend_from_slice(&acc.to_le_bytes());
+            acc_bits = filled - 64;
+            // The high `acc_bits` bits of `c` did not fit in the flushed
+            // word; `c >> b` is 0 when the code ended exactly on the
+            // word boundary.
+            acc = c >> (b - acc_bits);
+        } else {
+            acc_bits = filled;
         }
     }
     if acc_bits > 0 {
-        out.push((acc & 0xFF) as u8);
+        let tail = (acc_bits as usize).div_ceil(8);
+        out.extend_from_slice(&acc.to_le_bytes()[..tail]);
     }
+}
+
+/// Visit codes `start..end` of the packed stream in order, without
+/// materializing a `Vec<u32>` — the core of the fused
+/// dequantize–scatter kernels.
+///
+/// Each code is extracted with one unaligned little-endian `u64` load:
+/// a code starts at most 7 bits into its first byte, so the ≤ 32 code
+/// bits always sit inside one 8-byte window. Codes whose window would
+/// run past the buffer (only possible within the last 7 bytes) fall
+/// back to a zero-padded load.
+#[inline]
+pub fn for_each_code<F: FnMut(u32)>(bytes: &[u8], bits: u8, start: usize, end: usize, mut f: F) {
+    assert!((1..=32).contains(&bits));
+    assert!(start <= end, "bad code range {start}..{end}");
+    assert!(
+        bytes.len() >= packed_len(end, bits),
+        "byte stream too short: {} < {}",
+        bytes.len(),
+        packed_len(end, bits)
+    );
+    let b = bits as usize;
+    let mask = code_mask(bits);
+    // Largest index whose 8-byte window fits: (i·b)/8 + 8 ≤ len.
+    let fast_end = if bytes.len() >= 8 {
+        end.min(((bytes.len() - 8) * 8 + 7) / b + 1)
+    } else {
+        start
+    };
+    let mut i = start;
+    while i < fast_end {
+        let bit = i * b;
+        let w = u64::from_le_bytes(bytes[bit / 8..bit / 8 + 8].try_into().unwrap());
+        f(((w >> (bit & 7)) & mask) as u32);
+        i += 1;
+    }
+    while i < end {
+        let bit = i * b;
+        let byte = bit / 8;
+        let mut buf = [0u8; 8];
+        let avail = (bytes.len() - byte).min(8);
+        buf[..avail].copy_from_slice(&bytes[byte..byte + avail]);
+        let w = u64::from_le_bytes(buf);
+        f(((w >> (bit & 7)) & mask) as u32);
+        i += 1;
+    }
+}
+
+/// Unpack the code sub-range `start..end` from `bytes`. Because codes
+/// are fixed-width, the range is addressed directly at bit offset
+/// `start·b` — no decode of the preceding codes.
+pub fn unpack_range(bytes: &[u8], bits: u8, start: usize, end: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(end.saturating_sub(start));
+    for_each_code(bytes, bits, start, end, |c| out.push(c));
     out
 }
 
 /// Unpack `n` codes of `bits` bits each from `bytes`.
 pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u32> {
-    assert!((1..=32).contains(&bits));
-    assert!(
-        bytes.len() >= packed_len(n, bits),
-        "byte stream too short: {} < {}",
-        bytes.len(),
-        packed_len(n, bits)
-    );
-    let mut out = Vec::with_capacity(n);
-    let mut acc: u64 = 0;
-    let mut acc_bits: u32 = 0;
-    let b = bits as u32;
-    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
-    let mut iter = bytes.iter();
-    for _ in 0..n {
-        while acc_bits < b {
-            acc |= (*iter.next().expect("length checked") as u64) << acc_bits;
-            acc_bits += 8;
-        }
-        out.push((acc & mask) as u32);
-        acc >>= b;
-        acc_bits -= b;
-    }
-    out
+    unpack_range(bytes, bits, 0, n)
 }
 
 /// Pack a sign bitmap (1 bit per element, 1 = negative).
 pub fn pack_signs(signs: &[bool]) -> Vec<u8> {
-    let mut out = vec![0u8; signs.len().div_ceil(8)];
+    let mut out = Vec::with_capacity(signs.len().div_ceil(8));
+    pack_signs_into(signs, &mut out);
+    out
+}
+
+/// Append a packed sign bitmap to `out` (buffer-reusing form).
+pub fn pack_signs_into(signs: &[bool], out: &mut Vec<u8>) {
+    let base = out.len();
+    out.resize(base + signs.len().div_ceil(8), 0);
+    let bitmap = &mut out[base..];
     for (i, &s) in signs.iter().enumerate() {
         if s {
-            out[i / 8] |= 1 << (i % 8);
+            bitmap[i / 8] |= 1 << (i % 8);
         }
     }
-    out
+}
+
+/// Read sign bit `i` of a packed sign bitmap.
+#[inline]
+pub fn sign_at(bytes: &[u8], i: usize) -> bool {
+    bytes[i / 8] & (1 << (i % 8)) != 0
 }
 
 /// Unpack a sign bitmap of `n` elements.
 pub fn unpack_signs(bytes: &[u8], n: usize) -> Vec<bool> {
     assert!(bytes.len() >= n.div_ceil(8));
-    (0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect()
+    (0..n).map(|i| sign_at(bytes, i)).collect()
 }
 
 #[cfg(test)]
@@ -91,7 +166,7 @@ mod tests {
     fn roundtrip_all_bit_widths() {
         let mut rng = Xoshiro256pp::seed_from_u64(10);
         for bits in 1..=32u8 {
-            let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+            let mask = code_mask(bits);
             let codes: Vec<u32> =
                 (0..251).map(|_| (rng.next_u64() & mask) as u32).collect();
             let packed = pack(&codes, bits);
@@ -136,17 +211,53 @@ mod tests {
     }
 
     #[test]
+    fn range_matches_full_unpack() {
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        for bits in [1u8, 3, 4, 7, 8, 13, 17, 32] {
+            let n = 513;
+            let mask = code_mask(bits);
+            let codes: Vec<u32> =
+                (0..n).map(|_| (rng.next_u64() & mask) as u32).collect();
+            let packed = pack(&codes, bits);
+            for (start, end) in [(0, n), (1, n), (0, n - 1), (17, 400), (n, n), (n - 3, n)] {
+                assert_eq!(
+                    unpack_range(&packed, bits, start, end),
+                    codes[start..end],
+                    "bits={bits} range={start}..{end}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_into_appends() {
+        let mut buf = vec![0xEEu8];
+        pack_into(&[0xA, 0x5], 4, &mut buf);
+        assert_eq!(buf, vec![0xEE, 0x5A]);
+    }
+
+    #[test]
     fn signs_roundtrip() {
         let mut rng = Xoshiro256pp::seed_from_u64(11);
         let signs: Vec<bool> = (0..77).map(|_| rng.bernoulli(0.5)).collect();
         let packed = pack_signs(&signs);
         assert_eq!(packed.len(), 10);
         assert_eq!(unpack_signs(&packed, 77), signs);
+        for (i, &s) in signs.iter().enumerate() {
+            assert_eq!(sign_at(&packed, i), s);
+        }
     }
 
     #[test]
     #[should_panic]
     fn unpack_rejects_short_stream() {
         unpack(&[0u8; 3], 8, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn range_rejects_short_stream() {
+        // end = 4 needs 4 bytes even if the range itself is small.
+        unpack_range(&[0u8; 3], 8, 3, 4);
     }
 }

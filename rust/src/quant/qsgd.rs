@@ -37,11 +37,26 @@ impl QsgdVec {
 
 /// Stochastically quantize `v` at `bits` magnitude bits.
 pub fn quantize(v: &[f32], bits: u8, rng: &mut Xoshiro256pp) -> QsgdVec {
+    quantize_buf(v, bits, rng, Vec::new(), Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize`]: `mags`/`signs` are cleared and
+/// refilled keeping their capacity, then owned by the returned
+/// [`QsgdVec`] (the coordinator recycles them per device — §Perf).
+pub fn quantize_buf(
+    v: &[f32],
+    bits: u8,
+    rng: &mut Xoshiro256pp,
+    mut mags: Vec<u32>,
+    mut signs: Vec<bool>,
+) -> QsgdVec {
     assert!((1..=31).contains(&bits), "qsgd bits must be in 1..=31");
     let norm = norm2(v) as f32;
-    let s = ((1u64 << bits) - 1) as f64;
-    let mut mags = Vec::with_capacity(v.len());
-    let mut signs = Vec::with_capacity(v.len());
+    let s = crate::quant::code_mask(bits) as f64;
+    mags.clear();
+    mags.reserve(v.len());
+    signs.clear();
+    signs.reserve(v.len());
     if norm == 0.0 {
         mags.resize(v.len(), 0);
         signs.resize(v.len(), false);
@@ -76,7 +91,7 @@ pub fn dequantize_into(q: &QsgdVec, out: &mut [f32]) {
         out.fill(0.0);
         return;
     }
-    let s = ((1u64 << q.bits) - 1) as f64;
+    let s = crate::quant::code_mask(q.bits) as f64;
     let scale = q.norm as f64 / s;
     for i in 0..out.len() {
         let mag = scale * q.mags[i] as f64;
@@ -88,6 +103,51 @@ pub fn dequantize(q: &QsgdVec) -> Vec<f32> {
     let mut out = vec![0.0f32; q.dim()];
     dequantize_into(q, &mut out);
     out
+}
+
+/// Fused server-side kernel (§Perf): reconstruct magnitudes
+/// `codes.start..codes.end` straight from the packed wire body (sign
+/// bitmap + packed magnitude codes) and scatter-add `scale · Q(v)ᵢ`
+/// into one contiguous output shard. Mirrors
+/// [`crate::quant::midtread::dequantize_scatter_add`]; per-element
+/// arithmetic matches [`dequantize_into`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn dequantize_scatter_add(
+    signs: &[u8],
+    mags: &[u8],
+    bits: u8,
+    norm: f32,
+    codes: std::ops::Range<usize>,
+    targets: Option<&[u32]>,
+    out_base: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    if codes.is_empty() || norm == 0.0 {
+        return;
+    }
+    let s = crate::quant::code_mask(bits) as f64;
+    let qscale = norm as f64 / s;
+    match targets {
+        None => {
+            let mut i = codes.start;
+            crate::quant::packing::for_each_code(mags, bits, codes.start, codes.end, |c| {
+                let mag = qscale * c as f64;
+                let v = (if crate::quant::packing::sign_at(signs, i) { -mag } else { mag }) as f32;
+                out[i - out_base] += scale * v;
+                i += 1;
+            });
+        }
+        Some(idx) => {
+            let mut i = codes.start;
+            crate::quant::packing::for_each_code(mags, bits, codes.start, codes.end, |c| {
+                let mag = qscale * c as f64;
+                let v = (if crate::quant::packing::sign_at(signs, i) { -mag } else { mag }) as f32;
+                out[idx[i] as usize - out_base] += scale * v;
+                i += 1;
+            });
+        }
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +212,30 @@ mod tests {
         }
         assert!(errs[0] > errs[1]);
         assert!(errs[1] > errs[2]);
+    }
+
+    #[test]
+    fn scatter_add_matches_dequantize_then_add() {
+        use crate::quant::packing::{pack, pack_signs};
+        let mut rng = Xoshiro256pp::seed_from_u64(35);
+        let d = 203;
+        let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 2.0)).collect();
+        let q = quantize(&v, 5, &mut rng);
+        let signs = pack_signs(&q.signs);
+        let mags = pack(&q.mags, 5);
+        let mut expect = vec![0.0f32; d];
+        let dq = dequantize(&q);
+        for (e, x) in expect.iter_mut().zip(&dq) {
+            *e += 0.75 * x;
+        }
+        // Two shards split at 64.
+        let mut out = vec![0.0f32; d];
+        let (lo, hi) = out.split_at_mut(64);
+        dequantize_scatter_add(&signs, &mags, 5, q.norm, 0..64, None, 0, 0.75, lo);
+        dequantize_scatter_add(&signs, &mags, 5, q.norm, 64..d, None, 64, 0.75, hi);
+        for (i, (a, b)) in out.iter().zip(&expect).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "i={i}");
+        }
     }
 
     #[test]

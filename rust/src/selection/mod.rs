@@ -21,11 +21,25 @@
 //! | `loss-weighted:K` | [`LossWeighted`] | K-cohort sampled ∝ last local loss |
 //! | `availability:P,D[,K]` | [`AvailabilityAware`] | per-device up/down duty cycles |
 //!
-//! Strategies are deterministic given the run seed: each stateful
-//! strategy owns an independent [`Xoshiro256pp`] stream derived from
-//! it, so traces stay bit-reproducible across runs and thread counts.
+//! Strategies are deterministic given the run seed **and the round
+//! index**: stochastic strategies derive an independent
+//! [`Xoshiro256pp`] stream from `(seed, round)` for every round rather
+//! than consuming one sequential stream, so traces stay
+//! bit-reproducible across runs and thread counts *and* a
+//! checkpoint-resumed run selects exactly the cohorts the uninterrupted
+//! run would have (no strategy state needs checkpointing).
 
 use crate::util::rng::Xoshiro256pp;
+
+/// Derive the per-round RNG stream of a stochastic strategy: a fresh
+/// stream keyed by `(seed, tag, round)`. Round-keying (rather than one
+/// long-lived stream) is what makes checkpoint resume select-equivalent.
+fn round_stream(seed: u64, tag: u64, round: usize) -> Xoshiro256pp {
+    Xoshiro256pp::stream(
+        seed,
+        tag ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
 
 /// Per-device statistics the coordinator exposes to strategies.
 #[derive(Clone, Debug, Default)]
@@ -100,16 +114,13 @@ impl SelectionStrategy for FullParticipation {
 #[derive(Clone, Debug)]
 pub struct RandomK {
     k: usize,
-    rng: Xoshiro256pp,
+    seed: u64,
 }
 
 impl RandomK {
     pub fn new(k: usize, seed: u64) -> Self {
         assert!(k >= 1, "random-k cohort must be non-empty");
-        Self {
-            k,
-            rng: Xoshiro256pp::stream(seed, 0x5E1E_C715),
-        }
+        Self { k, seed }
     }
 }
 
@@ -120,7 +131,8 @@ impl SelectionStrategy for RandomK {
 
     fn select(&mut self, view: &SelectionView) -> Selection {
         let k = self.k.min(view.num_devices);
-        Selection::Devices(self.rng.sample_indices(view.num_devices, k))
+        let mut rng = round_stream(self.seed, 0x5E1E_C715, view.round);
+        Selection::Devices(rng.sample_indices(view.num_devices, k))
     }
 }
 
@@ -161,16 +173,13 @@ impl SelectionStrategy for RoundRobin {
 #[derive(Clone, Debug)]
 pub struct LossWeighted {
     k: usize,
-    rng: Xoshiro256pp,
+    seed: u64,
 }
 
 impl LossWeighted {
     pub fn new(k: usize, seed: u64) -> Self {
         assert!(k >= 1, "loss-weighted cohort must be non-empty");
-        Self {
-            k,
-            rng: Xoshiro256pp::stream(seed, 0x1055_3E1E),
-        }
+        Self { k, seed }
     }
 }
 
@@ -202,11 +211,12 @@ impl SelectionStrategy for LossWeighted {
                 w.max(1e-12)
             })
             .collect();
+        let mut rng = round_stream(self.seed, 0x1055_3E1E, view.round);
         let mut avail: Vec<usize> = (0..m).collect();
         let mut chosen = Vec::with_capacity(k);
         for _ in 0..k {
             let total: f64 = avail.iter().map(|&i| weights[i]).sum();
-            let mut t = self.rng.next_f64() * total;
+            let mut t = rng.next_f64() * total;
             let mut pick = avail.len() - 1;
             for (pos, &i) in avail.iter().enumerate() {
                 t -= weights[i];
@@ -268,7 +278,7 @@ impl AvailabilitySchedule {
 pub struct AvailabilityAware {
     schedule: AvailabilitySchedule,
     cap: Option<usize>,
-    rng: Xoshiro256pp,
+    seed: u64,
 }
 
 impl AvailabilityAware {
@@ -279,7 +289,7 @@ impl AvailabilityAware {
         Self {
             schedule,
             cap,
-            rng: Xoshiro256pp::stream(seed, 0xAB1E_CA90),
+            seed,
         }
     }
 
@@ -300,7 +310,8 @@ impl SelectionStrategy for AvailabilityAware {
             .collect();
         match self.cap {
             Some(k) if up.len() > k => {
-                let picks = self.rng.sample_indices(up.len(), k);
+                let mut rng = round_stream(self.seed, 0xAB1E_CA90, view.round);
+                let picks = rng.sample_indices(up.len(), k);
                 Selection::Devices(picks.into_iter().map(|p| up[p]).collect())
             }
             _ => Selection::Devices(up),

@@ -1,15 +1,19 @@
 //! Simulated network transport with honest byte accounting.
 //!
 //! Every device upload is actually serialized ([`wire`]), its length
-//! counted, and deserialized on the server side — the bit totals in
-//! Tables II/III are sums of real `bytes.len() × 8`, not analytic
-//! estimates. The channel also supports failure injection (random device
-//! dropout) used by the robustness tests.
+//! counted — the bit totals in Tables II/III are sums of real
+//! `bytes.len() × 8`, not analytic estimates. Since the zero-copy
+//! aggregation redesign (§Perf in DESIGN.md) the server side no longer
+//! eagerly decodes: the channel validates each upload's wire framing
+//! and hands the *bytes* through; the fold reads them via
+//! [`wire::PayloadView`] without materializing ψ vectors. The channel
+//! also supports failure injection (random device dropout) used by the
+//! robustness tests.
 
 pub mod wire;
 
 use crate::util::rng::Xoshiro256pp;
-use wire::Payload;
+use wire::UploadRef;
 
 /// Per-round transport statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -39,8 +43,8 @@ impl FaultSpec {
     }
 }
 
-/// The simulated uplink channel: serializes, counts, optionally drops,
-/// deserializes.
+/// The simulated uplink channel: counts real wire bytes, optionally
+/// drops, and validates framing on behalf of the receiver.
 pub struct Channel {
     faults: FaultSpec,
     rng: Xoshiro256pp,
@@ -68,28 +72,26 @@ impl Channel {
         Self::new(FaultSpec::none())
     }
 
-    /// Transmit one round of uploads: returns the delivered payloads
-    /// (decoded from real bytes) and the round's stats.
+    /// Transmit one round of encoded uploads: returns the delivered
+    /// subset (same borrowed bytes — the server folds zero-copy) and
+    /// the round's stats. Framing is validated here so every delivered
+    /// upload can be viewed infallibly downstream.
     ///
     /// Dropped uploads still consumed uplink bandwidth (the bytes were
     /// sent; the loss is on the path) — consistent with how the paper
     /// counts transmitted bits.
-    pub fn transmit(
-        &mut self,
-        uploads: Vec<(usize, Payload)>,
-    ) -> (Vec<(usize, Payload)>, LinkStats) {
+    pub fn transmit<'a>(&mut self, uploads: Vec<UploadRef<'a>>) -> (Vec<UploadRef<'a>>, LinkStats) {
         let mut stats = LinkStats::default();
         let mut delivered = Vec::with_capacity(uploads.len());
-        for (device, payload) in uploads {
-            let bytes = wire::encode(&payload);
-            stats.uplink_bits += bytes.len() as u64 * 8;
+        for up in uploads {
+            wire::view(up.bytes).expect("self-encoded payload must be viewable");
+            stats.uplink_bits += up.bytes.len() as u64 * 8;
             if self.faults.drop_prob > 0.0 && self.rng.bernoulli(self.faults.drop_prob) {
                 stats.dropped += 1;
                 continue;
             }
-            let decoded = wire::decode(&bytes).expect("self-encoded payload must decode");
             stats.messages += 1;
-            delivered.push((device, decoded));
+            delivered.push(up);
         }
         self.total_bits += stats.uplink_bits;
         self.total_messages += stats.messages;
@@ -102,24 +104,26 @@ impl Channel {
 mod tests {
     use super::*;
     use crate::quant::midtread::quantize;
+    use wire::{encode, upload_refs, EncodedUpload, Payload};
 
     #[test]
     fn counts_real_bytes() {
         let mut ch = Channel::reliable();
         let v: Vec<f32> = (0..100).map(|i| i as f32).collect();
         let p = Payload::MidtreadFull(quantize(&v, 4));
-        let expected_bits = wire::encode(&p).len() as u64 * 8;
-        let (delivered, stats) = ch.transmit(vec![(0, p.clone())]);
+        let expected_bits = encode(&p).len() as u64 * 8;
+        let staged = vec![EncodedUpload::encode(0, &p)];
+        let (delivered, stats) = ch.transmit(upload_refs(&staged));
         assert_eq!(stats.uplink_bits, expected_bits);
         assert_eq!(delivered.len(), 1);
-        assert_eq!(delivered[0].1, p);
+        assert_eq!(delivered[0].view().to_owned(), p);
         assert_eq!(ch.total_bits, expected_bits);
     }
 
     #[test]
     fn empty_round_costs_nothing() {
         let mut ch = Channel::reliable();
-        let (delivered, stats) = ch.transmit(vec![]);
+        let (delivered, stats) = ch.transmit(Vec::new());
         assert!(delivered.is_empty());
         assert_eq!(stats, LinkStats::default());
     }
@@ -131,8 +135,9 @@ mod tests {
             seed: 1,
         });
         let p = Payload::RawFull(vec![1.0; 10]);
-        let bits = wire::encode(&p).len() as u64 * 8;
-        let (delivered, stats) = ch.transmit(vec![(0, p)]);
+        let bits = encode(&p).len() as u64 * 8;
+        let staged = vec![EncodedUpload::encode(0, &p)];
+        let (delivered, stats) = ch.transmit(upload_refs(&staged));
         assert!(delivered.is_empty());
         assert_eq!(stats.dropped, 1);
         // Bits were still spent.
@@ -147,10 +152,10 @@ mod tests {
         });
         let mut delivered_total = 0;
         for _ in 0..100 {
-            let ups = (0..10)
-                .map(|d| (d, Payload::RawFull(vec![0.0; 4])))
+            let staged: Vec<EncodedUpload> = (0..10)
+                .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 4])))
                 .collect();
-            let (del, _) = ch.transmit(ups);
+            let (del, _) = ch.transmit(upload_refs(&staged));
             delivered_total += del.len();
         }
         // ~500 of 1000 delivered.

@@ -13,10 +13,22 @@
 //! [6..10]  len: u32      element count d (or |support| under HeteroFL)
 //! [10..]   body          packed codes / sign bitmap + codes / raw f32
 //! ```
+//!
+//! Two server-side representations exist:
+//!
+//! * [`Payload`] — owned, codes materialized (`Vec<u32>` ψ). Client-side
+//!   staging and tests use this.
+//! * [`PayloadView`] — borrowed, zero-copy: the header is parsed, the
+//!   body stays *packed* in the received byte buffer. The aggregation
+//!   pipeline folds straight from views via the fused
+//!   dequantize–scatter kernels (`PayloadView::scatter_add_shard`), so
+//!   a 4-bit upload is never inflated to `Vec<u32>` + dense f32 scratch
+//!   on its way into `direction` (§Perf in DESIGN.md).
 
-use crate::quant::midtread::QuantizedVec;
+use crate::hetero::CapacityMask;
+use crate::quant::midtread::{self, QuantizedVec};
 use crate::quant::packing;
-use crate::quant::qsgd::QsgdVec;
+use crate::quant::qsgd::{self, QsgdVec};
 
 /// Header size in bytes (tag + bits + scale + len).
 pub const HEADER_BYTES: usize = 10;
@@ -39,13 +51,23 @@ pub enum Payload {
     RawFull(Vec<f32>),
 }
 
+/// Payload kind, as carried by the wire tag byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    MidtreadDelta,
+    MidtreadFull,
+    Qsgd,
+    RawDelta,
+    RawFull,
+}
+
 const TAG_MT_DELTA: u8 = 1;
 const TAG_MT_FULL: u8 = 2;
 const TAG_QSGD: u8 = 3;
 const TAG_RAW_DELTA: u8 = 4;
 const TAG_RAW_FULL: u8 = 5;
 
-/// Error from [`decode`].
+/// Error from [`decode`] / [`view`].
 #[derive(Debug, thiserror::Error)]
 pub enum WireError {
     #[error("message truncated: need {need} bytes, have {have}")]
@@ -80,34 +102,62 @@ impl Payload {
     }
 }
 
+/// Exact body size in bytes for a payload of `kind` with `n` elements
+/// at `bits` bits.
+const fn body_len(kind: PayloadKind, bits: u8, n: usize) -> usize {
+    match kind {
+        PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull => packing::packed_len(n, bits),
+        PayloadKind::Qsgd => n.div_ceil(8) + packing::packed_len(n, bits),
+        PayloadKind::RawDelta | PayloadKind::RawFull => 4 * n,
+    }
+}
+
+fn header_of(p: &Payload) -> (PayloadKind, u8, f32, usize) {
+    match p {
+        Payload::MidtreadDelta(q) => (PayloadKind::MidtreadDelta, q.bits, q.range, q.dim()),
+        Payload::MidtreadFull(q) => (PayloadKind::MidtreadFull, q.bits, q.range, q.dim()),
+        Payload::Qsgd(q) => (PayloadKind::Qsgd, q.bits, q.norm, q.dim()),
+        Payload::RawDelta(v) => (PayloadKind::RawDelta, 0, 0.0, v.len()),
+        Payload::RawFull(v) => (PayloadKind::RawFull, 0, 0.0, v.len()),
+    }
+}
+
+impl PayloadKind {
+    const fn tag(self) -> u8 {
+        match self {
+            PayloadKind::MidtreadDelta => TAG_MT_DELTA,
+            PayloadKind::MidtreadFull => TAG_MT_FULL,
+            PayloadKind::Qsgd => TAG_QSGD,
+            PayloadKind::RawDelta => TAG_RAW_DELTA,
+            PayloadKind::RawFull => TAG_RAW_FULL,
+        }
+    }
+}
+
 /// Serialize a payload to wire bytes.
 pub fn encode(p: &Payload) -> Vec<u8> {
-    let (tag, bits, scale, n) = match p {
-        Payload::MidtreadDelta(q) => (TAG_MT_DELTA, q.bits, q.range, q.dim()),
-        Payload::MidtreadFull(q) => (TAG_MT_FULL, q.bits, q.range, q.dim()),
-        Payload::Qsgd(q) => (TAG_QSGD, q.bits, q.norm, q.dim()),
-        Payload::RawDelta(v) => (TAG_RAW_DELTA, 0, 0.0, v.len()),
-        Payload::RawFull(v) => (TAG_RAW_FULL, 0, 0.0, v.len()),
-    };
-    let body_len = match p {
-        Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
-            packing::packed_len(q.dim(), q.bits)
-        }
-        Payload::Qsgd(q) => q.dim().div_ceil(8) + packing::packed_len(q.dim(), q.bits),
-        Payload::RawDelta(v) | Payload::RawFull(v) => 4 * v.len(),
-    };
-    let mut out = Vec::with_capacity(HEADER_BYTES + body_len);
-    out.push(tag);
+    let mut out = Vec::new();
+    encode_into(p, &mut out);
+    out
+}
+
+/// Serialize a payload into `out` (cleared first; capacity is kept so
+/// per-device wire buffers stop allocating after the first round).
+pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
+    out.clear();
+    let (kind, bits, scale, n) = header_of(p);
+    out.reserve(HEADER_BYTES + body_len(kind, bits, n));
+    out.push(kind.tag());
     out.push(bits);
     out.extend_from_slice(&scale.to_le_bytes());
     out.extend_from_slice(&(n as u32).to_le_bytes());
     match p {
         Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
-            out.extend_from_slice(&packing::pack(&q.psi, q.bits));
+            packing::pack_into(&q.psi, q.bits, out);
         }
         Payload::Qsgd(q) => {
-            out.extend_from_slice(&packing::pack_signs(&q.signs));
-            out.extend_from_slice(&packing::pack(&q.mags, q.bits));
+            packing::pack_signs_into(&q.signs, out);
+            packing::pack_into(&q.mags, q.bits, out);
         }
         Payload::RawDelta(v) | Payload::RawFull(v) => {
             for x in v {
@@ -115,101 +165,255 @@ pub fn encode(p: &Payload) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
-/// Deserialize wire bytes back into a payload.
-pub fn decode(bytes: &[u8]) -> Result<Payload, WireError> {
+/// Borrowed zero-copy view of an encoded upload: header parsed, body
+/// left packed in the wire buffer. See the module docs.
+#[derive(Clone, Copy, Debug)]
+pub struct PayloadView<'a> {
+    pub kind: PayloadKind,
+    /// Quantization level (0 for raw payloads).
+    pub bits: u8,
+    /// Range `R` (mid-tread) or `‖v‖₂` (QSGD); 0 for raw payloads.
+    pub scale: f32,
+    /// Element count.
+    pub len: usize,
+    /// Packed body, exactly `body_len` bytes.
+    pub body: &'a [u8],
+}
+
+/// Parse the header of `bytes` and borrow the body — the zero-copy
+/// counterpart of [`decode`]. Validates tag, bits, and body length.
+pub fn view(bytes: &[u8]) -> Result<PayloadView<'_>, WireError> {
     if bytes.len() < HEADER_BYTES {
         return Err(WireError::Truncated {
             need: HEADER_BYTES,
             have: bytes.len(),
         });
     }
-    let tag = bytes[0];
-    let bits = bytes[1];
-    let scale = f32::from_le_bytes(bytes[2..6].try_into().unwrap());
-    let n = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
-    let body = &bytes[HEADER_BYTES..];
-    let need_body = |need: usize| -> Result<(), WireError> {
-        if body.len() < need {
-            Err(WireError::Truncated {
-                need: HEADER_BYTES + need,
-                have: bytes.len(),
-            })
-        } else {
-            Ok(())
-        }
+    let kind = match bytes[0] {
+        TAG_MT_DELTA => PayloadKind::MidtreadDelta,
+        TAG_MT_FULL => PayloadKind::MidtreadFull,
+        TAG_QSGD => PayloadKind::Qsgd,
+        TAG_RAW_DELTA => PayloadKind::RawDelta,
+        TAG_RAW_FULL => PayloadKind::RawFull,
+        t => return Err(WireError::UnknownTag(t)),
     };
-    match tag {
-        TAG_MT_DELTA | TAG_MT_FULL => {
-            if !(1..=32).contains(&bits) {
-                return Err(WireError::BadBits(bits));
-            }
-            need_body(packing::packed_len(n, bits))?;
-            let psi = packing::unpack(body, bits, n);
-            let q = QuantizedVec {
-                bits,
-                range: scale,
-                psi,
-            };
-            Ok(if tag == TAG_MT_DELTA {
-                Payload::MidtreadDelta(q)
-            } else {
-                Payload::MidtreadFull(q)
-            })
+    let bits = bytes[1];
+    match kind {
+        PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull if !(1..=32).contains(&bits) => {
+            return Err(WireError::BadBits(bits));
         }
-        TAG_QSGD => {
-            if !(1..=31).contains(&bits) {
-                return Err(WireError::BadBits(bits));
-            }
-            let sign_bytes = n.div_ceil(8);
-            need_body(sign_bytes + packing::packed_len(n, bits))?;
-            let signs = packing::unpack_signs(&body[..sign_bytes], n);
-            let mags = packing::unpack(&body[sign_bytes..], bits, n);
-            Ok(Payload::Qsgd(QsgdVec {
-                bits,
-                norm: scale,
-                mags,
-                signs,
-            }))
+        PayloadKind::Qsgd if !(1..=31).contains(&bits) => {
+            return Err(WireError::BadBits(bits));
         }
-        TAG_RAW_DELTA | TAG_RAW_FULL => {
-            need_body(4 * n)?;
-            let mut v = Vec::with_capacity(n);
-            for i in 0..n {
-                v.push(f32::from_le_bytes(
-                    body[4 * i..4 * i + 4].try_into().unwrap(),
-                ));
-            }
-            Ok(if tag == TAG_RAW_DELTA {
-                Payload::RawDelta(v)
-            } else {
-                Payload::RawFull(v)
-            })
-        }
-        t => Err(WireError::UnknownTag(t)),
+        _ => {}
     }
+    let scale = f32::from_le_bytes(bytes[2..6].try_into().unwrap());
+    let len = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let need = body_len(kind, bits, len);
+    if bytes.len() < HEADER_BYTES + need {
+        return Err(WireError::Truncated {
+            need: HEADER_BYTES + need,
+            have: bytes.len(),
+        });
+    }
+    Ok(PayloadView {
+        kind,
+        bits,
+        scale,
+        len,
+        body: &bytes[HEADER_BYTES..HEADER_BYTES + need],
+    })
+}
+
+impl PayloadView<'_> {
+    /// Quantization level used, if any (for metrics).
+    pub fn level(&self) -> Option<u8> {
+        match self.kind {
+            PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull | PayloadKind::Qsgd => {
+                Some(self.bits)
+            }
+            _ => None,
+        }
+    }
+
+    /// Materialize an owned [`Payload`] (tests, legacy callers).
+    pub fn to_owned(&self) -> Payload {
+        match self.kind {
+            PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull => {
+                let q = QuantizedVec {
+                    bits: self.bits,
+                    range: self.scale,
+                    psi: packing::unpack(self.body, self.bits, self.len),
+                };
+                if self.kind == PayloadKind::MidtreadDelta {
+                    Payload::MidtreadDelta(q)
+                } else {
+                    Payload::MidtreadFull(q)
+                }
+            }
+            PayloadKind::Qsgd => {
+                let sign_bytes = self.len.div_ceil(8);
+                Payload::Qsgd(QsgdVec {
+                    bits: self.bits,
+                    norm: self.scale,
+                    signs: packing::unpack_signs(&self.body[..sign_bytes], self.len),
+                    mags: packing::unpack(&self.body[sign_bytes..], self.bits, self.len),
+                })
+            }
+            PayloadKind::RawDelta | PayloadKind::RawFull => {
+                let v: Vec<f32> = self
+                    .body
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                if self.kind == PayloadKind::RawDelta {
+                    Payload::RawDelta(v)
+                } else {
+                    Payload::RawFull(v)
+                }
+            }
+        }
+    }
+
+    /// Fused fold step (§Perf): add this payload's contribution to one
+    /// contiguous shard `out = direction[base .. base + out.len()]`,
+    /// scaled by `scale`, going straight from the packed body — no ψ
+    /// materialization, no dense scratch.
+    ///
+    /// `mask` is the uploading device's capacity mask (`len` must equal
+    /// its support). Because mask indices are sorted, the support
+    /// positions targeting the shard form one contiguous code range,
+    /// located by binary search; per-element arithmetic is independent
+    /// of shard boundaries, so any shard partition produces bit-identical
+    /// results.
+    pub fn scatter_add_shard(&self, mask: &CapacityMask, scale: f32, base: usize, out: &mut [f32]) {
+        debug_assert_eq!(self.len, mask.support());
+        let hi = base + out.len();
+        let (codes, targets) = if mask.is_full() {
+            (base.min(self.len)..hi.min(self.len), None)
+        } else {
+            let idx = mask.indices.as_slice();
+            let p0 = idx.partition_point(|&i| (i as usize) < base);
+            let p1 = idx.partition_point(|&i| (i as usize) < hi);
+            (p0..p1, Some(idx))
+        };
+        if codes.is_empty() {
+            return;
+        }
+        match self.kind {
+            PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull => {
+                midtread::dequantize_scatter_add(
+                    self.body, self.bits, self.scale, codes, targets, base, scale, out,
+                );
+            }
+            PayloadKind::Qsgd => {
+                let sign_bytes = self.len.div_ceil(8);
+                qsgd::dequantize_scatter_add(
+                    &self.body[..sign_bytes],
+                    &self.body[sign_bytes..],
+                    self.bits,
+                    self.scale,
+                    codes,
+                    targets,
+                    base,
+                    scale,
+                    out,
+                );
+            }
+            PayloadKind::RawDelta | PayloadKind::RawFull => {
+                raw_scatter_add(self.body, codes, targets, base, scale, out);
+            }
+        }
+    }
+}
+
+/// Raw-f32 leg of the fused fold: read elements straight from the wire
+/// body and scatter-add.
+fn raw_scatter_add(
+    body: &[u8],
+    codes: std::ops::Range<usize>,
+    targets: Option<&[u32]>,
+    out_base: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    for i in codes {
+        let v = f32::from_le_bytes(body[4 * i..4 * i + 4].try_into().unwrap());
+        let t = match targets {
+            None => i - out_base,
+            Some(idx) => idx[i] as usize - out_base,
+        };
+        out[t] += scale * v;
+    }
+}
+
+/// One delivered upload as the server fold consumes it: originating
+/// device + borrowed wire bytes (validated by the channel at receive
+/// time).
+#[derive(Clone, Copy, Debug)]
+pub struct UploadRef<'a> {
+    pub device: usize,
+    pub bytes: &'a [u8],
+}
+
+impl<'a> UploadRef<'a> {
+    /// Zero-copy view of the payload (header re-parse only; the channel
+    /// already validated the bytes).
+    pub fn view(&self) -> PayloadView<'a> {
+        view(self.bytes).expect("channel delivers only validated wire bytes")
+    }
+}
+
+/// Owned wire bytes + device id — staging convenience for tests and
+/// benches that construct server folds directly.
+#[derive(Clone, Debug)]
+pub struct EncodedUpload {
+    pub device: usize,
+    pub bytes: Vec<u8>,
+}
+
+impl EncodedUpload {
+    /// Encode `p` as coming from `device`.
+    pub fn encode(device: usize, p: &Payload) -> Self {
+        Self {
+            device,
+            bytes: encode(p),
+        }
+    }
+
+    /// Borrow as the fold-facing [`UploadRef`].
+    pub fn as_upload(&self) -> UploadRef<'_> {
+        UploadRef {
+            device: self.device,
+            bytes: &self.bytes,
+        }
+    }
+}
+
+/// Borrow a whole staged round (`EncodedUpload`s → `UploadRef`s).
+pub fn upload_refs(staged: &[EncodedUpload]) -> Vec<UploadRef<'_>> {
+    staged.iter().map(EncodedUpload::as_upload).collect()
+}
+
+/// Deserialize wire bytes back into an owned payload.
+pub fn decode(bytes: &[u8]) -> Result<Payload, WireError> {
+    Ok(view(bytes)?.to_owned())
 }
 
 /// Exact wire size in bits without encoding (used by size assertions and
 /// fast-path accounting; must agree with `encode(p).len() * 8` — tested).
 pub fn wire_bits(p: &Payload) -> u64 {
-    let body_bytes = match p {
-        Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
-            packing::packed_len(q.dim(), q.bits)
-        }
-        Payload::Qsgd(q) => q.dim().div_ceil(8) + packing::packed_len(q.dim(), q.bits),
-        Payload::RawDelta(v) | Payload::RawFull(v) => 4 * v.len(),
-    };
-    ((HEADER_BYTES + body_bytes) * 8) as u64
+    let (kind, bits, _, n) = header_of(p);
+    ((HEADER_BYTES + body_len(kind, bits, n)) * 8) as u64
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::midtread::quantize;
-    use crate::quant::qsgd;
+    use crate::quant::qsgd as qsgd_quant;
     use crate::util::rng::Xoshiro256pp;
 
     fn sample_vec(n: usize, seed: u64) -> Vec<f32> {
@@ -237,7 +441,7 @@ mod tests {
     fn qsgd_roundtrip() {
         let v = sample_vec(127, 2);
         let mut rng = Xoshiro256pp::seed_from_u64(3);
-        let q = qsgd::quantize(&v, 4, &mut rng);
+        let q = qsgd_quant::quantize(&v, 4, &mut rng);
         let p = Payload::Qsgd(q);
         let enc = encode(&p);
         assert_eq!(enc.len() as u64 * 8, wire_bits(&p));
@@ -251,6 +455,76 @@ mod tests {
             let enc = encode(&p);
             assert_eq!(enc.len(), HEADER_BYTES + 256);
             assert_eq!(decode(&enc).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn view_borrows_packed_body() {
+        let v = sample_vec(1000, 8);
+        let q = quantize(&v, 4);
+        let p = Payload::MidtreadFull(q.clone());
+        let enc = encode(&p);
+        let view = view(&enc).unwrap();
+        assert_eq!(view.kind, PayloadKind::MidtreadFull);
+        assert_eq!(view.bits, 4);
+        assert_eq!(view.len, 1000);
+        assert_eq!(view.scale, q.range);
+        // Body stays packed: 1000 4-bit codes = 500 bytes, untouched.
+        assert_eq!(view.body.len(), 500);
+        assert_eq!(view.body, &enc[HEADER_BYTES..]);
+        assert_eq!(view.to_owned(), p);
+        assert_eq!(view.level(), Some(4));
+    }
+
+    #[test]
+    fn view_scatter_matches_owned_fold() {
+        use crate::hetero::CapacityMask;
+        let d = 257;
+        let v = sample_vec(d, 9);
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let payloads = vec![
+            Payload::MidtreadDelta(quantize(&v, 4)),
+            Payload::MidtreadFull(quantize(&v, 9)),
+            Payload::Qsgd(qsgd_quant::quantize(&v, 5, &mut rng)),
+            Payload::RawDelta(v.clone()),
+            Payload::RawFull(v.clone()),
+        ];
+        let mask = CapacityMask::full(d);
+        for p in &payloads {
+            let enc = encode(p);
+            let view = view(&enc).unwrap();
+            // Whole-vector shard vs two uneven shards: bit-identical.
+            let mut whole = vec![0.0f32; d];
+            view.scatter_add_shard(&mask, 0.5, 0, &mut whole);
+            let mut split = vec![0.0f32; d];
+            let (a, b) = split.split_at_mut(100);
+            view.scatter_add_shard(&mask, 0.5, 0, a);
+            view.scatter_add_shard(&mask, 0.5, 100, b);
+            for (x, y) in whole.iter().zip(&split) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn view_scatter_respects_masks() {
+        use crate::hetero::CapacityMask;
+        use crate::problems::ParamLayout;
+        let layout = ParamLayout::contiguous(&[("w", vec![8, 8])]);
+        let mask = CapacityMask::from_layout(&layout, 0.5);
+        let support = mask.support();
+        let v = sample_vec(support, 11);
+        let p = Payload::MidtreadDelta(quantize(&v, 6));
+        let enc = encode(&p);
+        let view = view(&enc).unwrap();
+        let mut out = vec![0.0f32; 64];
+        // Shards of 16 coordinates each.
+        for (s, chunk) in out.chunks_mut(16).enumerate() {
+            view.scatter_add_shard(&mask, 1.0, s * 16, chunk);
+        }
+        for (i, &x) in out.iter().enumerate() {
+            let in_mask = mask.indices.contains(&(i as u32));
+            assert_eq!(x != 0.0, in_mask, "index {i}");
         }
     }
 
@@ -282,10 +556,24 @@ mod tests {
         let mut enc = encode(&Payload::RawFull(v));
         enc.truncate(20); // truncated body
         assert!(decode(&enc).is_err());
+        assert!(view(&enc).is_err());
         // Bad bits for midtread.
         let mut enc2 = encode(&Payload::MidtreadFull(quantize(&[1.0, 2.0], 4)));
         enc2[1] = 0;
         assert!(decode(&enc2).is_err());
+        assert!(view(&enc2).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let p = Payload::RawFull(sample_vec(16, 7));
+        let mut buf = Vec::new();
+        encode_into(&p, &mut buf);
+        let first = buf.clone();
+        let cap = buf.capacity();
+        encode_into(&p, &mut buf);
+        assert_eq!(buf, first);
+        assert_eq!(buf.capacity(), cap);
     }
 
     #[test]

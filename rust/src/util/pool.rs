@@ -85,6 +85,44 @@ where
     });
 }
 
+/// Split `out` into at most `threads` contiguous shards and run
+/// `f(shard_start, shard)` on every shard in parallel — the
+/// server-fold counterpart of [`parallel_for_each_mut`]. The shard
+/// count is capped at `⌊n / min_shard⌋`, so shards average at least
+/// `min_shard` elements (the final one may be slightly shorter) and
+/// outputs under `2·min_shard` run serially — a thread spawn costs
+/// more than that much scatter-add.
+///
+/// Each shard is an exclusive `&mut` sub-slice, so `f` can only write
+/// its own output range; as long as `f`'s per-element work is
+/// independent of the shard partition (true for the fused
+/// dequantize–scatter fold, which accumulates uploads into each element
+/// in upload order), results are bit-identical for every thread count.
+pub fn parallel_for_shards<T, F>(out: &mut [T], threads: usize, min_shard: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    // Floor division keeps the *average* shard ≥ min_shard elements.
+    let max_shards = (n / min_shard.max(1)).max(1);
+    let shards = threads.clamp(1, max_shards);
+    if shards <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(shards);
+    std::thread::scope(|scope| {
+        for (t, part) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(t * chunk, part));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +164,49 @@ mod tests {
         for (i, x) in xs.iter().enumerate() {
             assert_eq!(*x, i + 1);
         }
+    }
+
+    #[test]
+    fn shards_cover_output_exactly_once() {
+        for threads in [1usize, 2, 3, 7, 16] {
+            let mut out = vec![0usize; 1003];
+            parallel_for_shards(&mut out, threads, 1, |base, shard| {
+                for (i, x) in shard.iter_mut().enumerate() {
+                    *x += base + i + 1;
+                }
+            });
+            for (i, x) in out.iter().enumerate() {
+                assert_eq!(*x, i + 1, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_shard_limits_split() {
+        // 200 elements at min_shard 64 ⇒ floor(200/64) = 3 shards even
+        // with 8 threads, each at least 64 elements.
+        let calls = AtomicUsize::new(0);
+        let mut out = vec![0u8; 200];
+        parallel_for_shards(&mut out, 8, 64, |_base, shard| {
+            assert!(shard.len() >= 64, "undersized shard {}", shard.len());
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        // Output shorter than 2·min_shard ⇒ a single serial call.
+        let calls1 = AtomicUsize::new(0);
+        let mut small = vec![0u8; 100];
+        parallel_for_shards(&mut small, 8, 64, |base, shard| {
+            assert_eq!(base, 0);
+            assert_eq!(shard.len(), 100);
+            calls1.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls1.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn empty_output_is_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        parallel_for_shards(&mut out, 4, 16, |_, _| panic!("no shard expected"));
     }
 
     #[test]

@@ -86,8 +86,10 @@ fn prop_round_zero_all_upload() {
     }
 }
 
-/// Determinism: identical seeds ⇒ identical traces, across thread
-/// counts and algorithms.
+/// Determinism: identical seeds ⇒ identical traces **and bit-identical
+/// final models**, across thread counts (1/2/7 — exercising both the
+/// parallel device phase and the shard-parallel server fold) and
+/// algorithms.
 #[test]
 fn prop_determinism_across_threads() {
     let p = Arc::new(QuadraticProblem::new(24, 5, 0.5, 2.0, 0.5, 9));
@@ -95,14 +97,26 @@ fn prop_determinism_across_threads() {
         let name = algo.name();
         let mut c1 = cfg(5, 12);
         c1.threads = 1;
-        let mut c4 = cfg(5, 12);
-        c4.threads = 4;
-        let t1 = session(&p, algo.clone(), c1).run();
-        let t4 = session(&p, algo, c4).run();
-        assert_eq!(t1.total_bits(), t4.total_bits(), "{name}");
-        for (a, b) in t1.rounds.iter().zip(&t4.rounds) {
-            assert_eq!(a.train_loss, b.train_loss, "{name}");
-            assert_eq!(a.uploads, b.uploads);
+        let mut s1 = session(&p, algo.clone(), c1);
+        let t1 = s1.run();
+        let theta1: Vec<u32> = s1.theta().iter().map(|x| x.to_bits()).collect();
+        for threads in [2usize, 7] {
+            let mut c = cfg(5, 12);
+            c.threads = threads;
+            let mut s = session(&p, algo.clone(), c);
+            let t = s.run();
+            assert_eq!(t1.total_bits(), t.total_bits(), "{name} t={threads}");
+            for (a, b) in t1.rounds.iter().zip(&t.rounds) {
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{name} t={threads} round {}",
+                    a.round
+                );
+                assert_eq!(a.uploads, b.uploads);
+            }
+            let theta: Vec<u32> = s.theta().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(theta1, theta, "{name} t={threads}: θ diverged bitwise");
         }
     }
 }
@@ -372,6 +386,47 @@ fn prop_loss_weighted_explores_and_fills_cohort() {
         .filter(|&&(u, sk)| u + sk > 0)
         .count();
     assert_eq!(touched, m, "only {touched}/{m} devices ever selected");
+}
+
+/// Checkpoint v3 resume equivalence under loss-weighted selection: a
+/// run interrupted mid-way and restored from its snapshot selects the
+/// same cohorts and reproduces the uninterrupted trace bit-for-bit
+/// (loss history + per-device last losses persist; stochastic
+/// strategies derive their RNG from `(seed, round)`).
+#[test]
+fn prop_loss_weighted_resume_equivalence() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 71));
+    let algo = Arc::new(Aquila::new(0.25));
+    let spec = SelectionSpec::LossWeighted(3);
+
+    let mut uninterrupted = strategy_session(&p, algo.clone(), spec.clone(), 73, 16);
+    let mut full_rounds = Vec::new();
+    for k in 0..16 {
+        full_rounds.push(uninterrupted.run_round(k));
+    }
+
+    // Interrupt at round 8: snapshot, rebuild a fresh session, restore.
+    let mut first_half = strategy_session(&p, algo.clone(), spec.clone(), 73, 16);
+    for k in 0..8 {
+        first_half.run_round(k);
+    }
+    let ckpt = first_half.snapshot(8);
+    let mut resumed = strategy_session(&p, algo, spec, 73, 16);
+    let next = resumed.restore(&ckpt).unwrap();
+    assert_eq!(next, 8);
+    for k in 8..16 {
+        let r = resumed.run_round(k);
+        let f = &full_rounds[k];
+        assert_eq!(
+            r.train_loss.to_bits(),
+            f.train_loss.to_bits(),
+            "round {k} loss diverged after resume"
+        );
+        assert_eq!(r.uploads, f.uploads, "round {k} cohort diverged");
+        assert_eq!(r.bits_up, f.bits_up, "round {k} bits diverged");
+    }
+    assert_eq!(resumed.theta(), uninterrupted.theta());
+    assert_eq!(resumed.total_bits(), uninterrupted.total_bits());
 }
 
 /// Availability-aware selection: a device that is down this round is

@@ -1,0 +1,208 @@
+//! Properties of the zero-copy shard-parallel server fold (ISSUE 2):
+//!
+//! * the fold is **bit-identical** to the serial fold for 1/2/7
+//!   threads, across every payload kind and under HeteroFL masks;
+//! * `unpack_range` agrees with `unpack` on random sub-ranges for every
+//!   bit width 1..=32;
+//! * the fused view fold matches the materializing
+//!   decode → dequantize → scatter reference exactly.
+
+use aquila::algorithms::ServerAgg;
+use aquila::hetero::{half_half_masks, CapacityMask};
+use aquila::problems::ParamLayout;
+use aquila::quant::midtread::{dequantize_into as mt_dequantize_into, quantize};
+use aquila::quant::packing::{pack, unpack, unpack_range};
+use aquila::quant::qsgd;
+use aquila::quant::{code_mask, max_code};
+use aquila::transport::wire::{decode, upload_refs, EncodedUpload, Payload};
+use aquila::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+fn random_vec(rng: &mut Xoshiro256pp, d: usize, scale: f32) -> Vec<f32> {
+    (0..d).map(|_| rng.gaussian_f32(0.0, scale)).collect()
+}
+
+/// One payload of each wire kind, sized for `support` elements.
+fn payload_suite(rng: &mut Xoshiro256pp, support: usize) -> Vec<Payload> {
+    let v = random_vec(rng, support, 1.5);
+    vec![
+        Payload::MidtreadDelta(quantize(&v, 4)),
+        Payload::MidtreadFull(quantize(&v, 9)),
+        Payload::Qsgd(qsgd::quantize(&v, 5, rng)),
+        Payload::RawDelta(v.clone()),
+        Payload::RawFull(v),
+    ]
+}
+
+/// Materializing reference fold: decode each upload, dequantize into a
+/// dense gathered vector, scatter-add through its mask — the exact
+/// pre-PR pipeline, element-for-element.
+fn reference_fold(
+    dim: usize,
+    masks: &[Arc<CapacityMask>],
+    staged: &[EncodedUpload],
+    scale: f32,
+) -> Vec<f32> {
+    let mut direction = vec![0.0f32; dim];
+    for up in staged {
+        let p = decode(&up.bytes).unwrap();
+        let mask = &masks[up.device];
+        let mut scratch = vec![0.0f32; p.len()];
+        match &p {
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+                mt_dequantize_into(q, &mut scratch)
+            }
+            Payload::Qsgd(q) => qsgd::dequantize_into(q, &mut scratch),
+            Payload::RawDelta(v) | Payload::RawFull(v) => scratch.copy_from_slice(v),
+        }
+        mask.scatter_add(&scratch, scale, &mut direction);
+    }
+    direction
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Shard-parallel fold ≡ serial fold, bitwise, for 1/2/7 threads, all
+/// payload kinds, full masks.
+///
+/// Case 0 uses d = 60 000 — above 7 × the 8192-element shard floor —
+/// so the 7-thread fold genuinely runs 7 shards (and the 2-thread fold
+/// 2); the remaining cases keep small dimensions for the serial path.
+#[test]
+fn prop_fold_bit_identical_across_threads_full_masks() {
+    let mut rng = Xoshiro256pp::seed_from_u64(9000);
+    for case in 0..4 {
+        let d = if case == 0 {
+            60_000
+        } else {
+            100 + rng.next_bounded(4000) as usize
+        };
+        let m = 3 + rng.next_bounded(5) as usize;
+        let full = Arc::new(CapacityMask::full(d));
+        let masks: Vec<_> = (0..m).map(|_| full.clone()).collect();
+        // Mixed payload kinds across devices.
+        let kinds = payload_suite(&mut rng, d);
+        let staged: Vec<EncodedUpload> = (0..m)
+            .map(|dev| EncodedUpload::encode(dev, &kinds[dev % kinds.len()]))
+            .collect();
+        let scale = 1.0 / m as f32;
+
+        let reference = reference_fold(d, &masks, &staged, scale);
+        for threads in [1usize, 2, 7] {
+            let mut srv = ServerAgg::new(d, masks.clone());
+            srv.set_threads(threads);
+            srv.accumulate(&upload_refs(&staged), scale);
+            assert_bits_eq(
+                &srv.direction,
+                &reference,
+                &format!("case {case} threads {threads}"),
+            );
+        }
+    }
+}
+
+/// Same property under HeteroFL masks (100%–50% split): the masked
+/// scatter through sorted indices is shard-partition-invariant too.
+/// d = 33 000 crosses the 8192-element shard floor, so masked uploads
+/// genuinely straddle shard boundaries on the multi-thread folds.
+#[test]
+fn prop_fold_bit_identical_under_hetero_masks() {
+    let mut rng = Xoshiro256pp::seed_from_u64(9001);
+    let layout = ParamLayout::contiguous(&[("w", vec![180, 150]), ("b", vec![6000])]);
+    let d = layout.dim();
+    assert!(d >= 4 * 8192, "test must span multiple fold shards");
+    let m = 6;
+    let masks = half_half_masks(&layout, m, 0.5);
+    let staged: Vec<EncodedUpload> = (0..m)
+        .map(|dev| {
+            let support = masks[dev].support();
+            let kinds = payload_suite(&mut rng, support);
+            EncodedUpload::encode(dev, &kinds[dev % kinds.len()])
+        })
+        .collect();
+    let scale = 1.0 / m as f32;
+
+    let reference = reference_fold(d, &masks, &staged, scale);
+    for threads in [1usize, 2, 7] {
+        let mut srv = ServerAgg::new(d, masks.clone());
+        srv.set_threads(threads);
+        srv.accumulate(&upload_refs(&staged), scale);
+        assert_bits_eq(&srv.direction, &reference, &format!("threads {threads}"));
+    }
+}
+
+/// Folding twice accumulates (incremental semantics survive sharding;
+/// d = 20 000 spans multiple 8192-element shards on the 7-thread fold).
+#[test]
+fn prop_fold_accumulates_across_rounds() {
+    let mut rng = Xoshiro256pp::seed_from_u64(9002);
+    let d = 20_000;
+    let full = Arc::new(CapacityMask::full(d));
+    let masks = vec![full; 3];
+    let staged: Vec<EncodedUpload> = (0..3)
+        .map(|dev| {
+            let v = random_vec(&mut rng, d, 1.0);
+            EncodedUpload::encode(dev, &Payload::MidtreadDelta(quantize(&v, 6)))
+        })
+        .collect();
+    let once = {
+        let mut srv = ServerAgg::new(d, masks.clone());
+        srv.set_threads(2);
+        srv.accumulate(&upload_refs(&staged), 0.5);
+        srv.direction.clone()
+    };
+    let mut srv = ServerAgg::new(d, masks);
+    srv.set_threads(7);
+    srv.accumulate(&upload_refs(&staged), 0.5);
+    srv.accumulate(&upload_refs(&staged), 0.5);
+    let twice_serial: Vec<f32> = {
+        // Reference: accumulate the single-fold result twice, in the
+        // same per-element order.
+        let mut acc = vec![0.0f32; d];
+        for _ in 0..2 {
+            let mut tmp = ServerAgg::new(d, vec![Arc::new(CapacityMask::full(d)); 3]);
+            tmp.direction.copy_from_slice(&acc);
+            tmp.accumulate(&upload_refs(&staged), 0.5);
+            acc.copy_from_slice(&tmp.direction);
+        }
+        acc
+    };
+    assert_bits_eq(&srv.direction, &twice_serial, "two-round accumulate");
+    // And one pass matches the one-pass reference.
+    let mut one = ServerAgg::new(d, vec![Arc::new(CapacityMask::full(d)); 3]);
+    one.accumulate(&upload_refs(&staged), 0.5);
+    assert_bits_eq(&one.direction, &once, "one-round accumulate");
+}
+
+/// `unpack_range` agrees with `unpack` on random sub-ranges for every
+/// bit width 1..=32 (the satellite coverage task).
+#[test]
+fn prop_unpack_range_agrees_with_unpack() {
+    let mut rng = Xoshiro256pp::seed_from_u64(9003);
+    for bits in 1..=32u8 {
+        let n = 64 + rng.next_bounded(1500) as usize;
+        let mask = code_mask(bits);
+        let codes: Vec<u32> = (0..n).map(|_| (rng.next_u64() & mask) as u32).collect();
+        let packed = pack(&codes, bits);
+        let full = unpack(&packed, bits, n);
+        assert_eq!(full, codes, "bits={bits} full unpack");
+        for _ in 0..20 {
+            let a = rng.next_bounded(n as u64 + 1) as usize;
+            let b = rng.next_bounded(n as u64 + 1) as usize;
+            let (start, end) = if a <= b { (a, b) } else { (b, a) };
+            assert_eq!(
+                unpack_range(&packed, bits, start, end),
+                full[start..end],
+                "bits={bits} range {start}..{end} of {n}"
+            );
+        }
+    }
+    // max_code sanity at the boundary widths.
+    assert_eq!(max_code(1), 1);
+    assert_eq!(max_code(32), u32::MAX);
+}
