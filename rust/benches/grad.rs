@@ -1,0 +1,155 @@
+//! Device-phase benchmark: `local_grad` throughput per problem, the
+//! batched GEMM compute layer versus the retained naive per-sample
+//! reference — the before/after record of the ISSUE-3 refactor
+//! (`BENCH_grad.json` in the repo root).
+//!
+//! Throughput is reported in samples (tokens for the LM) per call. The
+//! bench also asserts the batched gradient matches the naive reference
+//! elementwise, so a compute-layer regression fails the CI smoke run
+//! rather than just skewing numbers.
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::data::partition::iid_partition;
+use aquila::data::synth::{train_test_split, MixtureSpec};
+use aquila::data::text::{markov_corpus, shard_corpus, CorpusSpec};
+use aquila::data::ClassificationDataset;
+use aquila::problems::cnn::CnnProblem;
+use aquila::problems::logistic::LogisticProblem;
+use aquila::problems::mlp::MlpProblem;
+use aquila::problems::softmax_lm::SoftmaxLmProblem;
+use aquila::problems::GradientSource;
+use aquila::util::rng::Xoshiro256pp;
+
+fn mixture_shards(
+    spec: &MixtureSpec,
+    devices: usize,
+) -> (Vec<ClassificationDataset>, ClassificationDataset) {
+    let (train, test) = train_test_split(spec, 0.15);
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let parts = iid_partition(train.len(), devices, &mut rng);
+    (parts.iter().map(|p| train.subset(p)).collect(), test)
+}
+
+/// Assert batched and naive gradients agree (1e-4 relative with a
+/// gradient-scale floor) — the bench doubles as a correctness smoke.
+fn assert_match(batched: &[f32], naive: &[f32], what: &str) {
+    let scale = naive.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs())).max(1e-6);
+    for (i, (&a, &b)) in batched.iter().zip(naive).enumerate() {
+        let (a, b) = (a as f64, b as f64);
+        let denom = a.abs().max(b.abs()).max(scale);
+        assert!(
+            (a - b).abs() <= 1e-4 * denom,
+            "{what}[{i}]: batched {a} vs naive {b}"
+        );
+    }
+}
+
+/// Bench one problem's `local_grad` both ways on device 0; returns the
+/// measured speedup.
+fn bench_problem<P, F>(bench: &mut Bench, problem: &P, naive: F, label: &str, samples: u64) -> f64
+where
+    P: GradientSource,
+    F: Fn(&P, usize, &[f32], &mut [f32]) -> f64,
+{
+    let d = problem.dim();
+    let theta = problem.init_theta(3);
+    let mut ws = problem.make_scratch();
+    let mut g = vec![0.0f32; d];
+    let mut g_ref = vec![0.0f32; d];
+    problem.local_grad(0, &theta, &mut g, &mut ws);
+    naive(problem, 0, &theta, &mut g_ref);
+    assert_match(&g, &g_ref, label);
+
+    let naive_mean = bench
+        .bench_throughput(&format!("{label} (naive per-sample)"), samples, || {
+            black_box(naive(problem, 0, black_box(&theta), &mut g_ref));
+        })
+        .mean;
+    let batched_mean = bench
+        .bench_throughput(&format!("{label} (batched gemm)"), samples, || {
+            black_box(problem.local_grad(0, black_box(&theta), &mut g, &mut ws));
+        })
+        .mean;
+    naive_mean.as_secs_f64() / batched_mean.as_secs_f64()
+}
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+
+    // Logistic regression, CF-100-shaped head on CF-10-sized features.
+    let spec = MixtureSpec {
+        num_classes: 10,
+        dim: 64,
+        num_samples: 4096,
+        separation: 0.3,
+        noise: 1.0,
+        seed: 41,
+    };
+    let (shards, test) = mixture_shards(&spec, 8);
+    let n = shards[0].len() as u64;
+    let logistic = LogisticProblem::new(shards, test, 1e-4);
+    let s_logistic = bench_problem(
+        &mut bench,
+        &logistic,
+        LogisticProblem::local_grad_naive,
+        &format!("logistic local_grad shard={n} d={}", logistic.dim()),
+        n,
+    );
+
+    // MLP (the CF-10 preset model, hidden 32).
+    let (shards, test) = mixture_shards(&spec, 8);
+    let mlp = MlpProblem::new(shards, test, 32, 1e-4);
+    let s_mlp = bench_problem(
+        &mut bench,
+        &mlp,
+        MlpProblem::local_grad_naive,
+        &format!("mlp local_grad shard={n} d={}", mlp.dim()),
+        n,
+    );
+
+    // CNN on 8×8 single-channel images, 8 filters of 3×3.
+    let spec_img = MixtureSpec {
+        num_classes: 10,
+        dim: 64,
+        num_samples: 2048,
+        separation: 0.3,
+        noise: 1.0,
+        seed: 43,
+    };
+    let (shards, test) = mixture_shards(&spec_img, 8);
+    let n_img = shards[0].len() as u64;
+    let cnn = CnnProblem::new(shards, test, 8, 3, 1e-4);
+    let s_cnn = bench_problem(
+        &mut bench,
+        &cnn,
+        CnnProblem::local_grad_naive,
+        &format!("cnn local_grad shard={n_img} d={}", cnn.dim()),
+        n_img,
+    );
+
+    // Bigram softmax LM (count-aggregated vs per-token reference).
+    let corpus = markov_corpus(&CorpusSpec {
+        vocab: 64,
+        length: 160_000,
+        peakedness: 2.0,
+        seed: 47,
+    });
+    let test = corpus.slice(0, 20_000);
+    let train = corpus.slice(20_000, corpus.len());
+    let shards = shard_corpus(&train, 8);
+    let tokens = shards[0].len() as u64;
+    let lm = SoftmaxLmProblem::new(shards, test, 1e-5);
+    let s_lm = bench_problem(
+        &mut bench,
+        &lm,
+        SoftmaxLmProblem::local_grad_naive,
+        &format!("softmax_lm local_grad tokens={tokens} d={}", lm.dim()),
+        tokens,
+    );
+
+    println!(
+        "speedups (naive / batched): logistic {s_logistic:.2}x  mlp {s_mlp:.2}x  \
+         cnn {s_cnn:.2}x  softmax_lm {s_lm:.2}x"
+    );
+    bench.finish();
+}

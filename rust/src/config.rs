@@ -116,6 +116,13 @@ pub struct ExperimentSpec {
     /// `--select` on the CLI; the deprecated `sample_k = K` key maps to
     /// `random-k:K`). Default: full participation.
     pub selection: SelectionSpec,
+    /// DAdaQuant time-adaptive schedule `(b₀, patience, cap)` —
+    /// `dadaquant_b0` / `dadaquant_patience` / `dadaquant_cap` in TOML,
+    /// `--dadaquant-*` on the CLI. Defaults match the paper's baseline
+    /// configuration (2, 3, 16).
+    pub dadaquant_b0: u8,
+    pub dadaquant_patience: u32,
+    pub dadaquant_cap: u8,
 }
 
 impl ExperimentSpec {
@@ -144,6 +151,9 @@ impl ExperimentSpec {
             seed: 2023,
             data_scale: 1.0,
             selection: SelectionSpec::Full,
+            dadaquant_b0: 2,
+            dadaquant_patience: 3,
+            dadaquant_cap: 16,
         }
     }
 
@@ -168,6 +178,9 @@ impl ExperimentSpec {
             eval_every: (self.rounds / 10).max(1),
             seed: self.seed,
             threads: 0,
+            dadaquant_b0: self.dadaquant_b0,
+            dadaquant_patience: self.dadaquant_patience,
+            dadaquant_cap: self.dadaquant_cap,
             ..RunConfig::default()
         }
     }
@@ -262,6 +275,21 @@ impl ExperimentSpec {
         }
         if let Some(v) = get("data_scale").and_then(|v| v.as_f64()) {
             self.data_scale = v;
+        }
+        // Out-of-range schedule values are hard errors, matching the
+        // CLI flags — silently clamping would run a different schedule
+        // than the experiment file describes.
+        if let Some(v) = get("dadaquant_b0").and_then(|v| v.as_i64()) {
+            anyhow::ensure!((1..=32).contains(&v), "dadaquant_b0 must be in 1..=32, got {v}");
+            self.dadaquant_b0 = v as u8;
+        }
+        if let Some(v) = get("dadaquant_patience").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v >= 1, "dadaquant_patience must be >= 1, got {v}");
+            self.dadaquant_patience = v as u32;
+        }
+        if let Some(v) = get("dadaquant_cap").and_then(|v| v.as_i64()) {
+            anyhow::ensure!((1..=32).contains(&v), "dadaquant_cap must be in 1..=32, got {v}");
+            self.dadaquant_cap = v as u8;
         }
         // Deprecated spelling first, so an explicit `selection` wins.
         if let Some(v) = get("sample_k").and_then(|v| v.as_i64()) {
@@ -362,8 +390,9 @@ mod tests {
         assert_eq!(p.num_devices(), 10);
         assert!(p.dim() > 0);
         let theta = p.init_theta(1);
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0; p.dim()];
-        let loss = p.local_grad(0, &theta, &mut g);
+        let loss = p.local_grad(0, &theta, &mut g, &mut ws);
         assert!(loss.is_finite() && loss > 0.0);
     }
 
@@ -400,6 +429,29 @@ mod tests {
 
         // An unknown spec is a hard error, not a silent full-cohort run.
         let map = toml::parse("[experiment]\nselection = \"random-k\"\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+    }
+
+    #[test]
+    fn toml_dadaquant_schedule_overrides() {
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        // Defaults mirror the engine's historical hardcoded values.
+        assert_eq!((spec.dadaquant_b0, spec.dadaquant_patience, spec.dadaquant_cap), (2, 3, 16));
+        let cfg = spec.run_config();
+        assert_eq!((cfg.dadaquant_b0, cfg.dadaquant_patience, cfg.dadaquant_cap), (2, 3, 16));
+        let text = "[experiment]\ndadaquant_b0 = 4\ndadaquant_patience = 5\ndadaquant_cap = 8\n";
+        let map = toml::parse(text).unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!((spec.dadaquant_b0, spec.dadaquant_patience, spec.dadaquant_cap), (4, 5, 8));
+        let cfg = spec.run_config();
+        assert_eq!((cfg.dadaquant_b0, cfg.dadaquant_patience, cfg.dadaquant_cap), (4, 5, 8));
+        // Out-of-range values are hard errors (same contract as the
+        // CLI flags), not silent clamps.
+        let map = toml::parse("[experiment]\ndadaquant_b0 = 0\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+        let map = toml::parse("[experiment]\ndadaquant_cap = 99\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+        let map = toml::parse("[experiment]\ndadaquant_patience = 0\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
     }
 

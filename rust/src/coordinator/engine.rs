@@ -8,12 +8,13 @@ use super::RunConfig;
 use crate::algorithms::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::hetero::CapacityMask;
 use crate::metrics::RoundRecord;
-use crate::problems::GradientSource;
+use crate::problems::{GradScratch, GradientSource};
 use crate::quant::levels::DadaquantSchedule;
 use crate::selection::{DeviceView, Selection, SelectionStrategy, SelectionView};
 use crate::transport::wire::{self, UploadRef};
 use crate::transport::Channel;
 use crate::util::pool::parallel_for_each_mut;
+use crate::util::ring::RecentWindow;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::vecmath::{axpy, diff_norm2_sq};
 use std::sync::Arc;
@@ -24,6 +25,10 @@ struct DeviceSlot {
     state: DeviceState,
     grad_full: Vec<f32>,
     grad_gathered: Vec<f32>,
+    /// Gradient workspace (activations, deltas, softmax staging) owned
+    /// by the slot so the batched `local_grad` passes allocate nothing
+    /// in steady state.
+    scratch: GradScratch,
     /// This round's serialized upload (valid when `staged`); encoded in
     /// the parallel device phase and read zero-copy by the server fold.
     /// Persists across rounds so encoding stops allocating after round 0.
@@ -45,11 +50,11 @@ pub struct RoundEngine {
     prev_theta: Vec<f32>,
     channel: Channel,
     /// Recent squared model differences, most recent first.
-    diff_history: Vec<f64>,
+    diff_history: RecentWindow,
     /// Recent global train losses, most recent first (selection view;
     /// persisted since checkpoint v3 so post-restore selection matches
     /// the uninterrupted run).
-    loss_history: Vec<f64>,
+    loss_history: RecentWindow,
     /// Recycled buffer for `RoundCtx::model_diff_history` (the context
     /// hands it back at the end of every round — no per-round allocation).
     ctx_diff_buf: Vec<f64>,
@@ -84,6 +89,7 @@ impl RoundEngine {
                 state: DeviceState::new(i, mask.clone(), cfg.seed),
                 grad_full: vec![0.0; d],
                 grad_gathered: Vec::with_capacity(mask.support()),
+                scratch: problem.make_scratch(),
                 wire_buf: Vec::new(),
                 staged: false,
                 staged_level: None,
@@ -104,14 +110,18 @@ impl RoundEngine {
             prev_theta: theta.clone(),
             theta,
             channel: Channel::new(cfg.faults.clone()),
-            diff_history: Vec::with_capacity(cfg.history_depth + 1),
-            loss_history: Vec::with_capacity(cfg.history_depth + 1),
+            diff_history: RecentWindow::new(cfg.history_depth),
+            loss_history: RecentWindow::new(cfg.history_depth),
             ctx_diff_buf: Vec::with_capacity(cfg.history_depth + 1),
             device_views: vec![DeviceView::default(); m],
             init_loss: f64::NAN,
             prev_loss: f64::NAN,
             coin_rng: Xoshiro256pp::stream(cfg.seed, 0xC011),
-            dadaquant: DadaquantSchedule::new(2, 3, 16),
+            dadaquant: DadaquantSchedule::new(
+                cfg.dadaquant_b0,
+                cfg.dadaquant_patience,
+                cfg.dadaquant_cap,
+            ),
             threads,
             cfg,
             cum_bits: 0,
@@ -144,14 +154,14 @@ impl RoundEngine {
 
     fn build_ctx(&mut self, round: usize, strategy: &mut dyn SelectionStrategy) -> RoundCtx {
         let m = self.slots.len();
-        let model_diff_sq = self.diff_history.first().copied().unwrap_or(0.0);
+        let model_diff_sq = self.diff_history.latest().unwrap_or(0.0);
         let view = SelectionView {
             round,
             num_devices: m,
             devices: &self.device_views,
             init_loss: self.init_loss,
             prev_loss: self.prev_loss,
-            loss_history: &self.loss_history,
+            loss_history: self.loss_history.as_slice(),
         };
         let selected = match strategy.select(&view) {
             Selection::All => None,
@@ -171,7 +181,7 @@ impl RoundEngine {
         };
         let mut model_diff_history = std::mem::take(&mut self.ctx_diff_buf);
         model_diff_history.clear();
-        model_diff_history.extend_from_slice(&self.diff_history);
+        model_diff_history.extend_from_slice(self.diff_history.as_slice());
         RoundCtx {
             round,
             num_devices: m,
@@ -214,7 +224,7 @@ impl RoundEngine {
                 // client rules assume a full-length gradient).
                 return;
             }
-            slot.loss = problem.local_grad(i, theta, &mut slot.grad_full);
+            slot.loss = problem.local_grad(i, theta, &mut slot.grad_full, &mut slot.scratch);
             slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
             let ClientUpload { payload, level } =
                 algo.client_step(&mut slot.state, &slot.grad_gathered, &ctx);
@@ -247,8 +257,7 @@ impl RoundEngine {
         self.prev_theta.copy_from_slice(&self.theta);
         axpy(-self.cfg.alpha, &self.server.direction, &mut self.theta);
         let diff = diff_norm2_sq(&self.theta, &self.prev_theta);
-        self.diff_history.insert(0, diff);
-        self.diff_history.truncate(self.cfg.history_depth);
+        self.diff_history.push(diff);
 
         // ---- metrics ----------------------------------------------------
         let participants: Vec<&DeviceSlot> =
@@ -266,8 +275,7 @@ impl RoundEngine {
             self.init_loss = train_loss;
         }
         self.prev_loss = train_loss;
-        self.loss_history.insert(0, train_loss);
-        self.loss_history.truncate(self.cfg.history_depth);
+        self.loss_history.push(train_loss);
         let levels: Vec<u8> = self
             .slots
             .iter()
@@ -331,8 +339,8 @@ impl RoundEngine {
                 .collect(),
             device_rng: self.slots.iter().map(|s| rng_state(&s.state.rng)).collect(),
             coin_rng: Some(rng_state(&self.coin_rng)),
-            diff_history: self.diff_history.clone(),
-            loss_history: self.loss_history.clone(),
+            diff_history: self.diff_history.to_vec(),
+            loss_history: self.loss_history.to_vec(),
             device_last_loss: self
                 .device_views
                 .iter()
@@ -400,8 +408,8 @@ impl RoundEngine {
                 .copied()
                 .filter(|l| l.is_finite());
         }
-        self.diff_history = ckpt.diff_history.clone();
-        self.loss_history = ckpt.loss_history.clone();
+        self.diff_history.assign(&ckpt.diff_history);
+        self.loss_history.assign(&ckpt.loss_history);
         self.cum_bits = ckpt.cum_bits;
         self.init_loss = ckpt.init_loss;
         self.prev_loss = ckpt.prev_loss;

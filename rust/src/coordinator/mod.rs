@@ -57,6 +57,14 @@ pub struct RunConfig {
     pub threads: usize,
     /// MARINA synchronization probability.
     pub marina_p_sync: f64,
+    /// DAdaQuant time-adaptive schedule: initial quantization level
+    /// `b₀` (doubles on training-loss stagnation).
+    pub dadaquant_b0: u8,
+    /// DAdaQuant schedule: stagnant observations tolerated before the
+    /// level doubles.
+    pub dadaquant_patience: u32,
+    /// DAdaQuant schedule: hard cap on the doubled level.
+    pub dadaquant_cap: u8,
     /// Deprecated spelling of [`crate::selection::SelectionSpec::RandomK`]:
     /// honored by the [`Coordinator`] shim and by [`SessionBuilder`]
     /// when no explicit strategy/spec is given. Prefer
@@ -78,6 +86,9 @@ impl Default for RunConfig {
             seed: 17,
             threads: 0,
             marina_p_sync: 0.1,
+            dadaquant_b0: 2,
+            dadaquant_patience: 3,
+            dadaquant_cap: 16,
             sample_k: None,
             history_depth: 10,
             faults: FaultSpec::none(),

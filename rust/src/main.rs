@@ -7,6 +7,7 @@
 //! repro fig3   [--out DIR]                            Figure 3 series (CSV)
 //! repro ablation-beta [--dataset D]                   Figures 4–5 β sweep
 //! repro run --config FILE [--algo NAME] [--select SPEC]
+//!           [--dadaquant-b0 B] [--dadaquant-patience P] [--dadaquant-cap C]
 //!           [--out FILE.csv] [--jsonl FILE.jsonl]     single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
 //! repro list                                          presets + algorithms + strategies
@@ -195,6 +196,35 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
+    // DAdaQuant schedule overrides (`dadaquant_*` TOML keys have the
+    // same effect; the CLI wins).
+    if let Some(v) = args.flags.get("dadaquant-b0") {
+        match v.parse::<u8>() {
+            Ok(b) if (1..=32).contains(&b) => spec.dadaquant_b0 = b,
+            _ => {
+                eprintln!("--dadaquant-b0 must be an integer in 1..=32, got '{v}'");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if let Some(v) = args.flags.get("dadaquant-patience") {
+        match v.parse::<u32>() {
+            Ok(p) if p >= 1 => spec.dadaquant_patience = p,
+            _ => {
+                eprintln!("--dadaquant-patience must be a positive integer, got '{v}'");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if let Some(v) = args.flags.get("dadaquant-cap") {
+        match v.parse::<u8>() {
+            Ok(c) if (1..=32).contains(&c) => spec.dadaquant_cap = c,
+            _ => {
+                eprintln!("--dadaquant-cap must be an integer in 1..=32, got '{v}'");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     let algo_name = args
         .flags
         .get("algo")
@@ -307,6 +337,7 @@ fn main() -> ExitCode {
             println!("  table2 | table3 | fig2 | fig3 | ablation-beta | run | theory | list");
             println!("  common flags: --scale S --rounds N --seed K --out DIR");
             println!("  run flags: --config FILE --algo NAME --select SPEC --jsonl FILE");
+            println!("             --dadaquant-b0 B --dadaquant-patience P --dadaquant-cap C");
         }
     }
     ExitCode::SUCCESS

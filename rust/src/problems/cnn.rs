@@ -13,15 +13,29 @@
 //! ```
 //!
 //! Layout: `conv_w [C×k×k] | conv_b [C] | fc_w [K×(C·H/2·W/2)] | fc_b [K]`.
+//!
+//! The convolution runs as a GEMM over **im2col patch matrices**
+//! precomputed per shard at construction (inputs never change between
+//! rounds): forward `conv[n·S²×C] = P·W_convᵀ`, backward
+//! `∂W_conv[C×k²] = δ_convᵀ·P` — with the dense head batched the same
+//! way as the MLP. The per-sample pre-batching path is retained as
+//! [`CnnProblem::local_grad_naive`].
 
-use super::{EvalMetrics, GradientSource, ParamLayout};
+use super::{
+    add_l2, stage_output_deltas, zeroed, EvalMetrics, GradScratch, GradientSource, ParamLayout,
+};
 use crate::data::ClassificationDataset;
+use crate::util::gemm::{col_sum_add, gemm_nn, gemm_nt, gemm_tn};
 use crate::util::rng::Xoshiro256pp;
 
 /// See module docs.
 pub struct CnnProblem {
     shards: Vec<ClassificationDataset>,
     test: ClassificationDataset,
+    /// Per-shard im2col matrices (`n·S² × k²`, zero-padded borders).
+    shard_patches: Vec<Vec<f32>>,
+    /// im2col of the held-out set.
+    test_patches: Vec<f32>,
     /// Image side (input dim must be `side²`).
     side: usize,
     /// Conv filters.
@@ -30,6 +44,39 @@ pub struct CnnProblem {
     ksize: usize,
     classes: usize,
     l2: f32,
+}
+
+/// Build the im2col patch matrix: one `k²` row per (sample, pixel),
+/// zero where the window leaves the image — so `P·Wᵀ` reproduces the
+/// same-padded convolution exactly.
+fn im2col(data: &ClassificationDataset, side: usize, ksize: usize) -> Vec<f32> {
+    let half = ksize / 2;
+    let k2 = ksize * ksize;
+    let n = data.len();
+    let mut out = vec![0.0f32; n * side * side * k2];
+    for i in 0..n {
+        let x = data.row(i);
+        for r in 0..side {
+            for q in 0..side {
+                let base = ((i * side + r) * side + q) * k2;
+                let patch = &mut out[base..base + k2];
+                for dr in 0..ksize {
+                    let rr = r as isize + dr as isize - half as isize;
+                    if rr < 0 || rr >= side as isize {
+                        continue;
+                    }
+                    for dq in 0..ksize {
+                        let qq = q as isize + dq as isize - half as isize;
+                        if qq < 0 || qq >= side as isize {
+                            continue;
+                        }
+                        patch[dr * ksize + dq] = x[rr as usize * side + qq as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 impl CnnProblem {
@@ -51,9 +98,13 @@ impl CnnProblem {
             assert_eq!(s.dim, dim_in);
             assert!(!s.is_empty());
         }
+        let shard_patches = shards.iter().map(|s| im2col(s, side, ksize)).collect();
+        let test_patches = im2col(&test, side, ksize);
         Self {
             shards,
             test,
+            shard_patches,
+            test_patches,
             side,
             channels,
             ksize,
@@ -75,13 +126,130 @@ impl CnnProblem {
         (conv_w, conv_b, fc_w, fc_b)
     }
 
-    /// Forward + optional backward for one dataset.
+    /// Batched forward + optional backward over one dataset (`patches`
+    /// must be its im2col matrix); returns `(mean loss, correct)`.
     fn loss_grad_on(
         &self,
         data: &ClassificationDataset,
+        patches: &[f32],
         theta: &[f32],
         mut grad: Option<&mut [f32]>,
+        scratch: &mut GradScratch,
     ) -> (f64, usize) {
+        let (s, c, kk) = (self.side, self.channels, self.ksize);
+        let k2 = kk * kk;
+        let ps = s / 2;
+        let pooled = ps * ps;
+        let feat = c * pooled;
+        let k_out = self.classes;
+        let (o_cw, o_cb, o_fw, o_fb) = self.offsets();
+        let n = data.len();
+        let rows = n * s * s;
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        let conv_w = &theta[o_cw..o_cw + c * k2];
+        let conv_b = &theta[o_cb..o_cb + c];
+        let fc_w = &theta[o_fw..o_fw + k_out * feat];
+        let fc_b = &theta[o_fb..o_fb + k_out];
+
+        // Conv as GEMM: conv[rows×C] = P·W_convᵀ + bias (pre-ReLU;
+        // spatial-major, channel-minor layout).
+        let conv = zeroed(&mut scratch.conv, rows * c);
+        for row in conv.chunks_exact_mut(c) {
+            row.copy_from_slice(conv_b);
+        }
+        gemm_nt(patches, conv_w, conv, rows, c, k2);
+
+        // 2×2 average pool over ReLU(conv), into the fc feature layout
+        // pool[i, ch·pooled + r·ps + q].
+        let pool = zeroed(&mut scratch.hidden, n * feat);
+        for (conv_i, pool_i) in conv.chunks_exact(s * s * c).zip(pool.chunks_exact_mut(feat)) {
+            for ch in 0..c {
+                for r in 0..ps {
+                    for q in 0..ps {
+                        let mut acc = 0.0f32;
+                        for dr in 0..2 {
+                            for dq in 0..2 {
+                                acc += conv_i[((2 * r + dr) * s + 2 * q + dq) * c + ch].max(0.0);
+                            }
+                        }
+                        pool_i[ch * pooled + r * ps + q] = acc * 0.25;
+                    }
+                }
+            }
+        }
+
+        // Dense head: logits[n×K] = pool·W_fcᵀ + 1·bᵀ.
+        let logits = zeroed(&mut scratch.logits, n * k_out);
+        for row in logits.chunks_exact_mut(k_out) {
+            row.copy_from_slice(fc_b);
+        }
+        gemm_nt(pool, fc_w, logits, n, k_out, feat);
+
+        // Softmax + CE per row; δ_out staged in place (× 1/n).
+        scratch.probs.clear();
+        scratch.probs.resize(k_out, 0.0);
+        let probs = &mut scratch.probs[..];
+        let want_grad = grad.is_some();
+        let inv_n = 1.0 / n as f64;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for (row, &y) in logits.chunks_exact_mut(k_out).zip(&data.labels) {
+            loss += super::logistic::softmax_row(row, y, probs, &mut correct);
+            if want_grad {
+                stage_output_deltas(row, probs, y, inv_n);
+            }
+        }
+        loss *= inv_n;
+
+        if let Some(g) = grad.as_deref_mut() {
+            // Dense head: ∂W_fc += δ_outᵀ·pool, ∂b_fc = colsum(δ_out).
+            gemm_tn(logits, pool, &mut g[o_fw..o_fw + k_out * feat], k_out, feat, n);
+            col_sum_add(logits, &mut g[o_fb..o_fb + k_out], k_out);
+            // δ_pool[n×feat] = δ_out·W_fc.
+            let dpool = zeroed(&mut scratch.dhidden, n * feat);
+            gemm_nn(logits, fc_w, dpool, n, feat, k_out);
+            // Unpool through the 2×2 average and the ReLU gate into
+            // δ_conv[rows×C] (every conv cell belongs to one pool cell).
+            let dconv = zeroed(&mut scratch.dconv, rows * c);
+            for ((conv_i, dconv_i), dpool_i) in conv
+                .chunks_exact(s * s * c)
+                .zip(dconv.chunks_exact_mut(s * s * c))
+                .zip(dpool.chunks_exact(feat))
+            {
+                for ch in 0..c {
+                    for r in 0..ps {
+                        for q in 0..ps {
+                            let dp = dpool_i[ch * pooled + r * ps + q] * 0.25;
+                            for dr in 0..2 {
+                                for dq in 0..2 {
+                                    let cell = ((2 * r + dr) * s + 2 * q + dq) * c + ch;
+                                    if conv_i[cell] > 0.0 {
+                                        dconv_i[cell] = dp;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Conv weights: ∂W_conv[C×k²] += δ_convᵀ·P, ∂b_conv =
+            // colsum(δ_conv).
+            gemm_tn(dconv, patches, &mut g[o_cw..o_cw + c * k2], c, k2, rows);
+            col_sum_add(dconv, &mut g[o_cb..o_cb + c], c);
+        }
+        add_l2(self.l2, theta, &mut loss, grad);
+        (loss, correct)
+    }
+
+    /// Retained per-sample reference implementation (the pre-batching
+    /// path): ground truth for `tests/prop_grad.rs` and the baseline
+    /// the `grad` bench measures the GEMM path against.
+    pub fn local_grad_naive(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let data = &self.shards[device];
         let (s, c, kk) = (self.side, self.channels, self.ksize);
         let half = kk / 2;
         let ps = s / 2;
@@ -89,9 +257,7 @@ impl CnnProblem {
         let k_out = self.classes;
         let (o_cw, o_cb, o_fw, o_fb) = self.offsets();
         let n = data.len();
-        if let Some(g) = grad.as_deref_mut() {
-            g.fill(0.0);
-        }
+        grad.fill(0.0);
         let inv_n = 1.0 / n as f64;
         let mut conv = vec![0.0f32; c * s * s]; // pre-ReLU activations
         let mut pool = vec![0.0f32; c * pooled];
@@ -102,7 +268,7 @@ impl CnnProblem {
         for i in 0..n {
             let x = data.row(i);
             let y = data.labels[i];
-            // ---- conv + ReLU ------------------------------------------
+            // ---- conv + 2×2 average pool over ReLU ---------------------
             for ch in 0..c {
                 let w = &theta[o_cw + ch * kk * kk..o_cw + (ch + 1) * kk * kk];
                 let b = theta[o_cb + ch];
@@ -126,7 +292,6 @@ impl CnnProblem {
                     }
                 }
             }
-            // ---- 2×2 average pool on ReLU(conv) ------------------------
             for ch in 0..c {
                 for r in 0..ps {
                     for q in 0..ps {
@@ -142,99 +307,69 @@ impl CnnProblem {
                 }
             }
             // ---- dense + softmax ---------------------------------------
-            for o in 0..k_out {
+            for (o, p) in probs.iter_mut().enumerate() {
                 let row = &theta[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
                 let mut acc = theta[o_fb + o] as f64;
-                for j in 0..c * pooled {
-                    acc += row[j] as f64 * pool[j] as f64;
+                for (&wj, &pj) in row.iter().zip(&pool) {
+                    acc += wj as f64 * pj as f64;
                 }
-                probs[o] = acc;
+                *p = acc;
             }
-            let maxl = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let mut z = 0.0;
-            for p in probs.iter_mut() {
-                *p = (*p - maxl).exp();
-                z += *p;
-            }
-            for p in probs.iter_mut() {
-                *p /= z;
-            }
-            loss += -(probs[y].max(1e-300).ln());
-            let pred = probs
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if pred == y {
-                correct += 1;
-            }
+            loss += super::logistic::softmax_f64_row(&mut probs, y, &mut correct);
             // ---- backward ----------------------------------------------
-            if let Some(g) = grad.as_deref_mut() {
-                dpool.fill(0.0);
-                for o in 0..k_out {
-                    let coef = ((probs[o] - if o == y { 1.0 } else { 0.0 }) * inv_n) as f32;
-                    let row_w = &theta[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
-                    let grow = &mut g[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
-                    for j in 0..c * pooled {
-                        grow[j] += coef * pool[j];
-                        dpool[j] += coef * row_w[j];
-                    }
-                    g[o_fb + o] += coef;
+            dpool.fill(0.0);
+            for o in 0..k_out {
+                let coef = ((probs[o] - if o == y { 1.0 } else { 0.0 }) * inv_n) as f32;
+                let row_w = &theta[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
+                let grow = &mut grad[o_fw + o * c * pooled..o_fw + (o + 1) * c * pooled];
+                for j in 0..c * pooled {
+                    grow[j] += coef * pool[j];
+                    dpool[j] += coef * row_w[j];
                 }
-                // Through avg-pool and ReLU into conv weights.
-                for ch in 0..c {
-                    let gw = &mut g[o_cw + ch * kk * kk..o_cw + (ch + 1) * kk * kk];
-                    let mut gb = 0.0f32;
-                    for r in 0..ps {
-                        for q in 0..ps {
-                            let dp = dpool[ch * pooled + r * ps + q] * 0.25;
-                            if dp == 0.0 {
-                                continue;
-                            }
-                            for dr in 0..2 {
-                                for dq in 0..2 {
-                                    let rr = 2 * r + dr;
-                                    let qq = 2 * q + dq;
-                                    // ReLU gate.
-                                    if conv[ch * s * s + rr * s + qq] <= 0.0 {
+                grad[o_fb + o] += coef;
+            }
+            // Through avg-pool and ReLU into conv weights.
+            for ch in 0..c {
+                let mut gb = 0.0f32;
+                for r in 0..ps {
+                    for q in 0..ps {
+                        let dp = dpool[ch * pooled + r * ps + q] * 0.25;
+                        if dp == 0.0 {
+                            continue;
+                        }
+                        for dr in 0..2 {
+                            for dq in 0..2 {
+                                let rr = 2 * r + dr;
+                                let qq = 2 * q + dq;
+                                // ReLU gate.
+                                if conv[ch * s * s + rr * s + qq] <= 0.0 {
+                                    continue;
+                                }
+                                gb += dp;
+                                let gw = &mut grad[o_cw + ch * kk * kk..o_cw + (ch + 1) * kk * kk];
+                                for kr in 0..kk {
+                                    let ir = rr as isize + kr as isize - half as isize;
+                                    if ir < 0 || ir >= s as isize {
                                         continue;
                                     }
-                                    gb += dp;
-                                    for kr in 0..kk {
-                                        let ir = rr as isize + kr as isize - half as isize;
-                                        if ir < 0 || ir >= s as isize {
+                                    for kq in 0..kk {
+                                        let iq = qq as isize + kq as isize - half as isize;
+                                        if iq < 0 || iq >= s as isize {
                                             continue;
                                         }
-                                        for kq in 0..kk {
-                                            let iq =
-                                                qq as isize + kq as isize - half as isize;
-                                            if iq < 0 || iq >= s as isize {
-                                                continue;
-                                            }
-                                            gw[kr * kk + kq] +=
-                                                dp * x[ir as usize * s + iq as usize];
-                                        }
+                                        gw[kr * kk + kq] += dp * x[ir as usize * s + iq as usize];
                                     }
                                 }
                             }
                         }
                     }
-                    g[o_cb + ch] += gb;
                 }
+                grad[o_cb + ch] += gb;
             }
         }
         loss *= inv_n;
-        if self.l2 > 0.0 {
-            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
-            loss += 0.5 * self.l2 as f64 * reg;
-            if let Some(g) = grad.as_deref_mut() {
-                for (gi, &ti) in g.iter_mut().zip(theta) {
-                    *gi += self.l2 * ti;
-                }
-            }
-        }
-        (loss, correct)
+        add_l2(self.l2, theta, &mut loss, Some(grad));
+        loss
     }
 }
 
@@ -248,14 +383,37 @@ impl GradientSource for CnnProblem {
         self.shards.len()
     }
 
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+    fn make_scratch(&self) -> GradScratch {
+        let n_max = self.shards.iter().map(|s| s.len()).max().unwrap_or(0);
+        let (s, c) = (self.side, self.channels);
+        let feat = c * self.pooled();
+        let mut ws = GradScratch::default();
+        ws.conv.reserve(n_max * s * s * c);
+        ws.dconv.reserve(n_max * s * s * c);
+        ws.hidden.reserve(n_max * feat);
+        ws.dhidden.reserve(n_max * feat);
+        ws.logits.reserve(n_max * self.classes);
+        ws.probs.reserve(self.classes);
+        ws
+    }
+
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        scratch: &mut GradScratch,
+    ) -> f64 {
         assert_eq!(theta.len(), self.dim());
         assert_eq!(grad.len(), self.dim());
-        self.loss_grad_on(&self.shards[device], theta, Some(grad)).0
+        let patches = &self.shard_patches[device];
+        self.loss_grad_on(&self.shards[device], patches, theta, Some(grad), scratch).0
     }
 
     fn eval(&self, theta: &[f32]) -> EvalMetrics {
-        let (loss, correct) = self.loss_grad_on(&self.test, theta, None);
+        let mut scratch = self.make_scratch();
+        let (loss, correct) =
+            self.loss_grad_on(&self.test, &self.test_patches, theta, None, &mut scratch);
         EvalMetrics {
             loss,
             accuracy: Some(correct as f64 / self.test.len() as f64),
@@ -331,17 +489,35 @@ mod tests {
     }
 
     #[test]
+    fn batched_matches_naive_reference() {
+        let p = small_problem();
+        let theta = p.init_theta(13);
+        let mut ws = p.make_scratch();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut g_ref = vec![0.0f32; p.dim()];
+        for dev in 0..p.num_devices() {
+            let loss = p.local_grad(dev, &theta, &mut g, &mut ws);
+            let loss_ref = p.local_grad_naive(dev, &theta, &mut g_ref);
+            assert!((loss - loss_ref).abs() < 1e-5 * loss_ref.abs().max(1.0));
+            for (a, b) in g.iter().zip(&g_ref) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn training_improves_accuracy() {
         let p = small_problem();
         let mut theta = p.init_theta(6);
         let acc0 = p.eval(&theta).accuracy.unwrap();
         let m = p.num_devices();
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         for _ in 0..150 {
             total.fill(0.0);
             for dev in 0..m {
-                p.local_grad(dev, &theta, &mut g);
+                p.local_grad(dev, &theta, &mut g, &mut ws);
                 axpy(1.0 / m as f32, &g, &mut total);
             }
             let step = total.clone();
@@ -359,8 +535,9 @@ mod tests {
         let mut theta = p.init_theta(7);
         let (_o_cw, o_cb, _, _) = p.offsets();
         theta[o_cb] = -1e6; // channel 0 dead
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
-        p.local_grad(0, &theta, &mut g);
+        p.local_grad(0, &theta, &mut g, &mut ws);
         for j in 0..p.ksize * p.ksize {
             let expect = p.l2 * theta[j];
             assert!(

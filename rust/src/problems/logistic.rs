@@ -5,9 +5,19 @@
 //! `d = K(D+1)`. Loss: mean softmax cross-entropy over the device shard
 //! plus `λ/2 ‖θ‖²` L2 regularization (making the problem strongly convex
 //! — useful for convergence tests).
+//!
+//! The gradient is computed batched over the whole shard: one
+//! `logits[n×K] = X·Wᵀ + 1bᵀ` GEMM forward, per-row f64 softmax, and
+//! one `∂W[K×D] = δᵀ·X` GEMM backward ([`crate::util::gemm`]). The
+//! pre-batching per-sample path is retained as
+//! [`LogisticProblem::local_grad_naive`] for property tests and the
+//! `grad` bench.
 
-use super::{EvalMetrics, GradientSource, ParamLayout};
+use super::{
+    add_l2, stage_output_deltas, zeroed, EvalMetrics, GradScratch, GradientSource, ParamLayout,
+};
 use crate::data::ClassificationDataset;
+use crate::util::gemm::{col_sum_add, gemm_nt, gemm_tn};
 use crate::util::rng::Xoshiro256pp;
 
 /// See module docs.
@@ -50,96 +60,134 @@ impl LogisticProblem {
         self.classes * self.dim_in
     }
 
-    /// Forward pass logits for one sample.
-    #[inline]
-    fn logits(&self, theta: &[f32], x: &[f32], out: &mut [f64]) {
-        let (k, dm) = (self.classes, self.dim_in);
-        let w = &theta[..k * dm];
-        let b = &theta[k * dm..];
-        for c in 0..k {
-            let row = &w[c * dm..(c + 1) * dm];
-            let mut acc = b[c] as f64;
-            for j in 0..dm {
-                acc += row[j] as f64 * x[j] as f64;
-            }
-            out[c] = acc;
-        }
-    }
-
-    /// Softmax in place; returns logsumexp.
-    fn softmax(logits: &mut [f64]) -> f64 {
-        let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let mut z = 0.0;
-        for l in logits.iter_mut() {
-            *l = (*l - maxl).exp();
-            z += *l;
-        }
-        for l in logits.iter_mut() {
-            *l /= z;
-        }
-        maxl + z.ln()
-    }
-
+    /// Batched loss/gradient over one dataset; returns
+    /// `(mean loss, correct predictions)`.
     fn loss_grad_on(
         &self,
         data: &ClassificationDataset,
         theta: &[f32],
-        grad: Option<&mut [f32]>,
+        mut grad: Option<&mut [f32]>,
+        scratch: &mut GradScratch,
     ) -> (f64, usize) {
         let (k, dm) = (self.classes, self.dim_in);
+        let n = data.len();
+        let w = &theta[..k * dm];
+        let b = &theta[k * dm..];
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+
+        // Forward: logits[n×K] = X·Wᵀ + 1·bᵀ, one GEMM over the shard.
+        let logits = zeroed(&mut scratch.logits, n * k);
+        for row in logits.chunks_exact_mut(k) {
+            row.copy_from_slice(b);
+        }
+        gemm_nt(&data.features, w, logits, n, k, dm);
+
+        // Per-row f64 softmax: loss, accuracy, and (in place) the
+        // backward staging δ = (softmax − onehot)/n.
+        scratch.probs.clear();
+        scratch.probs.resize(k, 0.0);
+        let probs = &mut scratch.probs[..];
+        let want_grad = grad.is_some();
+        let inv_n = 1.0 / n as f64;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for (row, &y) in logits.chunks_exact_mut(k).zip(&data.labels) {
+            loss += softmax_row(row, y, probs, &mut correct);
+            if want_grad {
+                stage_output_deltas(row, probs, y, inv_n);
+            }
+        }
+        loss *= inv_n;
+
+        // Backward: ∂W[K×D] += δᵀ·X, ∂b = column sums of δ.
+        if let Some(g) = grad.as_deref_mut() {
+            let (gw, gb) = g.split_at_mut(k * dm);
+            gemm_tn(logits, &data.features, gw, k, dm, n);
+            col_sum_add(logits, gb, k);
+        }
+        add_l2(self.l2, theta, &mut loss, grad);
+        (loss, correct)
+    }
+
+    /// Retained per-sample reference implementation (the pre-batching
+    /// path): ground truth for `tests/prop_grad.rs` and the baseline
+    /// the `grad` bench measures the GEMM path against.
+    pub fn local_grad_naive(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let data = &self.shards[device];
+        let (k, dm) = (self.classes, self.dim_in);
+        let w = &theta[..k * dm];
+        let b = &theta[k * dm..];
         let n = data.len();
         let mut probs = vec![0.0f64; k];
         let mut loss = 0.0f64;
         let mut correct = 0usize;
-        let mut grad = grad;
-        if let Some(g) = grad.as_deref_mut() {
-            g.fill(0.0);
-        }
+        grad.fill(0.0);
+        let inv_n = 1.0 / n as f64;
         for i in 0..n {
             let x = data.row(i);
             let y = data.labels[i];
-            self.logits(theta, x, &mut probs);
-            let lse = Self::softmax(&mut probs);
-            // loss_i = lse − logit_y; probs now holds softmax.
-            // Recover logit_y from prob: log p_y = logit_y − lse.
-            let py = probs[y].max(1e-300);
-            loss += -(py.ln());
-            let _ = lse;
-            let pred = probs
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if pred == y {
-                correct += 1;
-            }
-            if let Some(g) = grad.as_deref_mut() {
-                let scale = 1.0 / n as f64;
-                for c in 0..k {
-                    let coef = (probs[c] - if c == y { 1.0 } else { 0.0 }) * scale;
-                    let row = &mut g[c * dm..(c + 1) * dm];
-                    let cf = coef as f32;
-                    for j in 0..dm {
-                        row[j] += cf * x[j];
-                    }
-                    g[k * dm + c] += cf;
+            // Per-sample forward in f64.
+            for (c, p) in probs.iter_mut().enumerate() {
+                let row = &w[c * dm..(c + 1) * dm];
+                let mut acc = b[c] as f64;
+                for (&wj, &xj) in row.iter().zip(x) {
+                    acc += wj as f64 * xj as f64;
                 }
+                *p = acc;
+            }
+            loss += softmax_f64_row(&mut probs, y, &mut correct);
+            for c in 0..k {
+                let coef = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
+                let row = &mut grad[c * dm..(c + 1) * dm];
+                let cf = coef as f32;
+                for (gj, &xj) in row.iter_mut().zip(x) {
+                    *gj += cf * xj;
+                }
+                grad[k * dm + c] += cf;
             }
         }
-        loss /= n as f64;
-        // L2 regularization.
-        if self.l2 > 0.0 {
-            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
-            loss += 0.5 * self.l2 as f64 * reg;
-            if let Some(g) = grad {
-                for (gi, &ti) in g.iter_mut().zip(theta) {
-                    *gi += self.l2 * ti;
-                }
-            }
-        }
-        (loss, correct)
+        loss *= inv_n;
+        add_l2(self.l2, theta, &mut loss, Some(grad));
+        loss
     }
+}
+
+/// Softmax one f32 logit row in f64: fills `probs`, bumps `correct` on
+/// an argmax hit, and returns the sample's cross-entropy loss. Shared
+/// by every native softmax-output problem.
+pub(crate) fn softmax_row(row: &[f32], y: usize, probs: &mut [f64], correct: &mut usize) -> f64 {
+    for (p, &x) in probs.iter_mut().zip(row) {
+        *p = x as f64;
+    }
+    softmax_f64_row(probs, y, correct)
+}
+
+/// Softmax an f64 logit row in place (same numerics as the per-sample
+/// path: shift by max, exponentiate, normalize).
+pub(crate) fn softmax_f64_row(probs: &mut [f64], y: usize, correct: &mut usize) -> f64 {
+    let maxl = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0f64;
+    for p in probs.iter_mut() {
+        *p = (*p - maxl).exp();
+        z += *p;
+    }
+    let mut best = 0usize;
+    let mut bestp = f64::NEG_INFINITY;
+    for (c, p) in probs.iter_mut().enumerate() {
+        *p /= z;
+        if *p >= bestp {
+            bestp = *p;
+            best = c;
+        }
+    }
+    if best == y {
+        *correct += 1;
+    }
+    -(probs[y].max(1e-300).ln())
 }
 
 impl GradientSource for LogisticProblem {
@@ -151,14 +199,29 @@ impl GradientSource for LogisticProblem {
         self.shards.len()
     }
 
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+    fn make_scratch(&self) -> GradScratch {
+        let n_max = self.shards.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut ws = GradScratch::default();
+        ws.logits.reserve(n_max * self.classes);
+        ws.probs.reserve(self.classes);
+        ws
+    }
+
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        scratch: &mut GradScratch,
+    ) -> f64 {
         assert_eq!(theta.len(), self.dim());
         assert_eq!(grad.len(), self.dim());
-        self.loss_grad_on(&self.shards[device], theta, Some(grad)).0
+        self.loss_grad_on(&self.shards[device], theta, Some(grad), scratch).0
     }
 
     fn eval(&self, theta: &[f32]) -> EvalMetrics {
-        let (loss, correct) = self.loss_grad_on(&self.test, theta, None);
+        let mut scratch = self.make_scratch();
+        let (loss, correct) = self.loss_grad_on(&self.test, theta, None, &mut scratch);
         EvalMetrics {
             loss,
             accuracy: Some(correct as f64 / self.test.len() as f64),
@@ -224,17 +287,35 @@ mod tests {
     }
 
     #[test]
+    fn batched_matches_naive_reference() {
+        let p = small_problem();
+        let theta = p.init_theta(11);
+        let mut ws = p.make_scratch();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut g_ref = vec![0.0f32; p.dim()];
+        for dev in 0..p.num_devices() {
+            let loss = p.local_grad(dev, &theta, &mut g, &mut ws);
+            let loss_ref = p.local_grad_naive(dev, &theta, &mut g_ref);
+            assert!((loss - loss_ref).abs() < 1e-6 * loss_ref.abs().max(1.0));
+            for (a, b) in g.iter().zip(&g_ref) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn gradient_descent_learns() {
         let p = small_problem();
         let mut theta = p.init_theta(5);
         let acc0 = p.eval(&theta).accuracy.unwrap();
         let m = p.num_devices();
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         for _ in 0..150 {
             total.fill(0.0);
             for dev in 0..m {
-                p.local_grad(dev, &theta, &mut g);
+                p.local_grad(dev, &theta, &mut g, &mut ws);
                 axpy(1.0 / m as f32, &g, &mut total);
             }
             let step = total.clone();
@@ -251,12 +332,13 @@ mod tests {
     fn loss_decreases_with_descent_step() {
         let p = small_problem();
         let theta = p.init_theta(7);
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
-        let l0 = p.local_grad(1, &theta, &mut g);
+        let l0 = p.local_grad(1, &theta, &mut g, &mut ws);
         let mut theta2 = theta.clone();
         axpy(-0.1, &g, &mut theta2);
         let mut g2 = vec![0.0f32; p.dim()];
-        let l1 = p.local_grad(1, &theta2, &mut g2);
+        let l1 = p.local_grad(1, &theta2, &mut g2, &mut ws);
         assert!(l1 < l0);
     }
 

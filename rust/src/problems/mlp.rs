@@ -5,9 +5,19 @@
 //!
 //! Architecture: `x → W1 x + b1 → tanh → W2 h + b2 → softmax`.
 //! Layout: `W1 [H×D] | b1 [H] | W2 [K×H] | b2 [K]`, `d = H(D+1) + K(H+1)`.
+//!
+//! Both passes run batched over the whole device shard
+//! ([`crate::util::gemm`]): two forward GEMMs (`X·W1ᵀ`, `H·W2ᵀ`), two
+//! weight-gradient GEMMs (`δᵀ·H`, `δᵀ·X`) and one delta-backprop GEMM
+//! (`δ·W2`), with only the softmax/tanh nonlinearities elementwise. The
+//! per-sample pre-batching path is retained as
+//! [`MlpProblem::local_grad_naive`].
 
-use super::{EvalMetrics, GradientSource, ParamLayout};
+use super::{
+    add_l2, stage_output_deltas, zeroed, EvalMetrics, GradScratch, GradientSource, ParamLayout,
+};
 use crate::data::ClassificationDataset;
+use crate::util::gemm::{col_sum_add, gemm_nn, gemm_nt, gemm_tn};
 use crate::util::rng::Xoshiro256pp;
 
 /// See module docs.
@@ -54,12 +64,14 @@ impl MlpProblem {
         (w1, b1, w2, b2)
     }
 
-    #[allow(clippy::too_many_arguments)]
+    /// Batched loss/gradient over one dataset; returns
+    /// `(mean loss, correct predictions)`.
     fn loss_grad_on(
         &self,
         data: &ClassificationDataset,
         theta: &[f32],
         mut grad: Option<&mut [f32]>,
+        scratch: &mut GradScratch,
     ) -> (f64, usize) {
         let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
         let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
@@ -67,6 +79,73 @@ impl MlpProblem {
         if let Some(g) = grad.as_deref_mut() {
             g.fill(0.0);
         }
+        let w1 = &theta[o_w1..o_w1 + h * dm];
+        let b1 = &theta[o_b1..o_b1 + h];
+        let w2 = &theta[o_w2..o_w2 + k * h];
+        let b2 = &theta[o_b2..o_b2 + k];
+
+        // Forward: hidden[n×H] = tanh(X·W1ᵀ + 1·b1ᵀ).
+        let hid = zeroed(&mut scratch.hidden, n * h);
+        for row in hid.chunks_exact_mut(h) {
+            row.copy_from_slice(b1);
+        }
+        gemm_nt(&data.features, w1, hid, n, h, dm);
+        for v in hid.iter_mut() {
+            *v = v.tanh();
+        }
+
+        // logits[n×K] = hidden·W2ᵀ + 1·b2ᵀ.
+        let logits = zeroed(&mut scratch.logits, n * k);
+        for row in logits.chunks_exact_mut(k) {
+            row.copy_from_slice(b2);
+        }
+        gemm_nt(hid, w2, logits, n, k, h);
+
+        // Softmax + CE per row; δ_out staged in place (× 1/n).
+        scratch.probs.clear();
+        scratch.probs.resize(k, 0.0);
+        let probs = &mut scratch.probs[..];
+        let want_grad = grad.is_some();
+        let inv_n = 1.0 / n as f64;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for (row, &y) in logits.chunks_exact_mut(k).zip(&data.labels) {
+            loss += super::logistic::softmax_row(row, y, probs, &mut correct);
+            if want_grad {
+                stage_output_deltas(row, probs, y, inv_n);
+            }
+        }
+        loss *= inv_n;
+
+        if let Some(g) = grad.as_deref_mut() {
+            // Output layer: ∂W2[K×H] += δ_outᵀ·hidden, ∂b2 = colsum(δ_out).
+            gemm_tn(logits, hid, &mut g[o_w2..o_w2 + k * h], k, h, n);
+            col_sum_add(logits, &mut g[o_b2..o_b2 + k], k);
+            // δ_hidden[n×H] = δ_out·W2, gated through tanh'.
+            let dhid = zeroed(&mut scratch.dhidden, n * h);
+            gemm_nn(logits, w2, dhid, n, h, k);
+            for (dv, &hv) in dhid.iter_mut().zip(hid.iter()) {
+                *dv *= 1.0 - hv * hv;
+            }
+            // Input layer: ∂W1[H×D] += δ_hidᵀ·X, ∂b1 = colsum(δ_hid).
+            gemm_tn(dhid, &data.features, &mut g[o_w1..o_w1 + h * dm], h, dm, n);
+            col_sum_add(dhid, &mut g[o_b1..o_b1 + h], h);
+        }
+        add_l2(self.l2, theta, &mut loss, grad);
+        (loss, correct)
+    }
+
+    /// Retained per-sample reference implementation (the pre-batching
+    /// path): ground truth for `tests/prop_grad.rs` and the baseline
+    /// the `grad` bench measures the GEMM path against.
+    pub fn local_grad_naive(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let data = &self.shards[device];
+        let (dm, h, k) = (self.dim_in, self.hidden, self.classes);
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        let n = data.len();
+        grad.fill(0.0);
         let mut hid = vec![0.0f64; h];
         let mut probs = vec![0.0f64; k];
         let mut dhid = vec![0.0f64; h];
@@ -77,80 +156,49 @@ impl MlpProblem {
             let x = data.row(i);
             let y = data.labels[i];
             // Forward: hidden = tanh(W1 x + b1).
-            for a in 0..h {
+            for (a, hv) in hid.iter_mut().enumerate() {
                 let row = &theta[o_w1 + a * dm..o_w1 + (a + 1) * dm];
                 let mut acc = theta[o_b1 + a] as f64;
-                for j in 0..dm {
-                    acc += row[j] as f64 * x[j] as f64;
+                for (&wj, &xj) in row.iter().zip(x) {
+                    acc += wj as f64 * xj as f64;
                 }
-                hid[a] = acc.tanh();
+                *hv = acc.tanh();
             }
             // logits = W2 hid + b2.
-            for c in 0..k {
+            for (c, p) in probs.iter_mut().enumerate() {
                 let row = &theta[o_w2 + c * h..o_w2 + (c + 1) * h];
                 let mut acc = theta[o_b2 + c] as f64;
+                for (&wa, &ha) in row.iter().zip(&hid) {
+                    acc += wa as f64 * ha;
+                }
+                *p = acc;
+            }
+            loss += super::logistic::softmax_f64_row(&mut probs, y, &mut correct);
+            // Backprop into W2/b2 and hidden, then through tanh.
+            dhid.fill(0.0);
+            for c in 0..k {
+                let coef = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
+                let row_w2 = &theta[o_w2 + c * h..o_w2 + (c + 1) * h];
+                let grow = &mut grad[o_w2 + c * h..o_w2 + (c + 1) * h];
                 for a in 0..h {
-                    acc += row[a] as f64 * hid[a];
+                    grow[a] += (coef * hid[a]) as f32;
+                    dhid[a] += coef * row_w2[a] as f64;
                 }
-                probs[c] = acc;
+                grad[o_b2 + c] += coef as f32;
             }
-            // Softmax + CE.
-            let maxl = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let mut z = 0.0;
-            for p in probs.iter_mut() {
-                *p = (*p - maxl).exp();
-                z += *p;
-            }
-            for p in probs.iter_mut() {
-                *p /= z;
-            }
-            loss += -(probs[y].max(1e-300).ln());
-            let pred = probs
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if pred == y {
-                correct += 1;
-            }
-            if let Some(g) = grad.as_deref_mut() {
-                // dlogits = probs − onehot(y).
-                // Backprop into W2/b2 and hidden.
-                dhid.fill(0.0);
-                for c in 0..k {
-                    let coef = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
-                    let row_w2 = &theta[o_w2 + c * h..o_w2 + (c + 1) * h];
-                    let grow = &mut g[o_w2 + c * h..o_w2 + (c + 1) * h];
-                    for a in 0..h {
-                        grow[a] += (coef * hid[a]) as f32;
-                        dhid[a] += coef * row_w2[a] as f64;
-                    }
-                    g[o_b2 + c] += coef as f32;
+            for a in 0..h {
+                let dpre = dhid[a] * (1.0 - hid[a] * hid[a]);
+                let grow = &mut grad[o_w1 + a * dm..o_w1 + (a + 1) * dm];
+                let dp = dpre as f32;
+                for (gj, &xj) in grow.iter_mut().zip(x) {
+                    *gj += dp * xj;
                 }
-                // Through tanh: dpre = dhid * (1 − hid²).
-                for a in 0..h {
-                    let dpre = dhid[a] * (1.0 - hid[a] * hid[a]);
-                    let grow = &mut g[o_w1 + a * dm..o_w1 + (a + 1) * dm];
-                    let dp = dpre as f32;
-                    for j in 0..dm {
-                        grow[j] += dp * x[j];
-                    }
-                    g[o_b1 + a] += dp;
-                }
+                grad[o_b1 + a] += dp;
             }
         }
         loss *= inv_n;
-        if self.l2 > 0.0 {
-            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
-            loss += 0.5 * self.l2 as f64 * reg;
-            if let Some(g) = grad {
-                for (gi, &ti) in g.iter_mut().zip(theta) {
-                    *gi += self.l2 * ti;
-                }
-            }
-        }
-        (loss, correct)
+        add_l2(self.l2, theta, &mut loss, Some(grad));
+        loss
     }
 }
 
@@ -164,14 +212,31 @@ impl GradientSource for MlpProblem {
         self.shards.len()
     }
 
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+    fn make_scratch(&self) -> GradScratch {
+        let n_max = self.shards.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut ws = GradScratch::default();
+        ws.hidden.reserve(n_max * self.hidden);
+        ws.dhidden.reserve(n_max * self.hidden);
+        ws.logits.reserve(n_max * self.classes);
+        ws.probs.reserve(self.classes);
+        ws
+    }
+
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        scratch: &mut GradScratch,
+    ) -> f64 {
         assert_eq!(theta.len(), self.dim());
         assert_eq!(grad.len(), self.dim());
-        self.loss_grad_on(&self.shards[device], theta, Some(grad)).0
+        self.loss_grad_on(&self.shards[device], theta, Some(grad), scratch).0
     }
 
     fn eval(&self, theta: &[f32]) -> EvalMetrics {
-        let (loss, correct) = self.loss_grad_on(&self.test, theta, None);
+        let mut scratch = self.make_scratch();
+        let (loss, correct) = self.loss_grad_on(&self.test, theta, None, &mut scratch);
         EvalMetrics {
             loss,
             accuracy: Some(correct as f64 / self.test.len() as f64),
@@ -248,17 +313,35 @@ mod tests {
     }
 
     #[test]
+    fn batched_matches_naive_reference() {
+        let p = small_problem();
+        let theta = p.init_theta(12);
+        let mut ws = p.make_scratch();
+        let mut g = vec![0.0f32; p.dim()];
+        let mut g_ref = vec![0.0f32; p.dim()];
+        for dev in 0..p.num_devices() {
+            let loss = p.local_grad(dev, &theta, &mut g, &mut ws);
+            let loss_ref = p.local_grad_naive(dev, &theta, &mut g_ref);
+            assert!((loss - loss_ref).abs() < 1e-5 * loss_ref.abs().max(1.0));
+            for (a, b) in g.iter().zip(&g_ref) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn training_improves_accuracy() {
         let p = small_problem();
         let mut theta = p.init_theta(4);
         let acc0 = p.eval(&theta).accuracy.unwrap();
         let m = p.num_devices();
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         for _ in 0..200 {
             total.fill(0.0);
             for dev in 0..m {
-                p.local_grad(dev, &theta, &mut g);
+                p.local_grad(dev, &theta, &mut g, &mut ws);
                 axpy(1.0 / m as f32, &g, &mut total);
             }
             let step = total.clone();

@@ -15,6 +15,15 @@
 //! The paper's FL setting (Section II) uses *full local gradients* per
 //! round — `∇f_m(θᵏ)` over the device's whole shard — which all of these
 //! implement (deterministic, so runs are bit-reproducible).
+//!
+//! **Compute layer.** The native problems compute forward/backward
+//! passes as batched matrix products over the whole device shard
+//! (`util::gemm`, fixed accumulation order ⇒ bit-reproducible at any
+//! thread count) into a caller-owned [`GradScratch`] workspace, so
+//! steady-state rounds allocate nothing. Each problem retains a
+//! `local_grad_naive` per-sample reference implementation that the
+//! property tests (`tests/prop_grad.rs`) and the `grad` bench validate
+//! and measure the batched path against. See DESIGN.md §Compute.
 
 pub mod cnn;
 pub mod logistic;
@@ -83,6 +92,66 @@ pub struct EvalMetrics {
     pub perplexity: Option<f64>,
 }
 
+/// Reusable per-device workspace for [`GradientSource::local_grad`].
+///
+/// Problems size the buffers they need on first use (capacity is
+/// retained across calls, so steady-state rounds allocate nothing) and
+/// may pre-reserve in [`GradientSource::make_scratch`]. Buffer roles
+/// are by convention — a problem may repurpose any field — but the
+/// names match the batched passes in this module.
+#[derive(Clone, Debug, Default)]
+pub struct GradScratch {
+    /// Output-layer batch matrix (`n × K`): logits on the forward pass,
+    /// then `∂loss/∂logits` in place on the backward pass.
+    pub logits: Vec<f32>,
+    /// Hidden/feature activations (`n × H`; pooled features for the
+    /// CNN).
+    pub hidden: Vec<f32>,
+    /// Backpropagated hidden deltas (`n × H`; pooling deltas for the
+    /// CNN).
+    pub dhidden: Vec<f32>,
+    /// Pre-activation convolution feature map (`n·S² × C`, CNN only).
+    pub conv: Vec<f32>,
+    /// Convolution deltas (`n·S² × C`, CNN only).
+    pub dconv: Vec<f32>,
+    /// Per-row f64 staging (softmax probabilities).
+    pub probs: Vec<f64>,
+}
+
+/// Size `buf` to exactly `len` zeroed elements, reusing its capacity.
+#[inline]
+pub fn zeroed(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(len, 0.0);
+    &mut buf[..]
+}
+
+/// Add the `λ/2 ‖θ‖²` regularization term to `loss` (f64 accumulation)
+/// and `λθ` to `grad` — shared tail of every regularized problem.
+pub(crate) fn add_l2(l2: f32, theta: &[f32], loss: &mut f64, grad: Option<&mut [f32]>) {
+    if l2 <= 0.0 {
+        return;
+    }
+    let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+    *loss += 0.5 * l2 as f64 * reg;
+    if let Some(g) = grad {
+        for (gi, &ti) in g.iter_mut().zip(theta) {
+            *gi += l2 * ti;
+        }
+    }
+}
+
+/// Overwrite one logit row with the staged output deltas
+/// `(softmax − onehot(y)) / n` — the f32 operand of the backward
+/// weight-gradient GEMMs.
+#[inline]
+pub(crate) fn stage_output_deltas(row: &mut [f32], probs: &[f64], y: usize, inv_n: f64) {
+    for (c, (slot, &p)) in row.iter_mut().zip(probs).enumerate() {
+        let t = if c == y { 1.0 } else { 0.0 };
+        *slot = ((p - t) * inv_n) as f32;
+    }
+}
+
 /// A federated optimization problem: per-device local objectives over a
 /// shared flat parameter vector.
 pub trait GradientSource: Send + Sync {
@@ -92,9 +161,27 @@ pub trait GradientSource: Send + Sync {
     /// Number of devices `M`.
     fn num_devices(&self) -> usize;
 
+    /// Build a gradient workspace for this problem, pre-reserved for
+    /// its largest device shard where the problem knows the sizes.
+    /// Callers keep one per worker/device and pass it to every
+    /// [`GradientSource::local_grad`] call.
+    fn make_scratch(&self) -> GradScratch {
+        GradScratch::default()
+    }
+
     /// Full-batch local gradient `∇f_m(θ)` written into `grad`
-    /// (len `d`); returns the local loss `f_m(θ)`.
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64;
+    /// (len `d`); returns the local loss `f_m(θ)`. `scratch` provides
+    /// the intermediate buffers (any [`GradScratch`] works; reuse one
+    /// to keep steady-state rounds allocation-free). The result is a
+    /// pure function of `(device, θ)` — bit-identical across repeated
+    /// calls, scratch instances, and engine thread counts.
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        scratch: &mut GradScratch,
+    ) -> f64;
 
     /// Global objective `f(θ) = (1/M) Σ_m f_m(θ)`.
     ///
@@ -102,10 +189,11 @@ pub trait GradientSource: Send + Sync {
     /// cheaper closed form override this).
     fn global_loss(&self, theta: &[f32]) -> f64 {
         let mut grad = vec![0.0f32; self.dim()];
+        let mut scratch = self.make_scratch();
         let m = self.num_devices();
         let mut acc = 0.0;
         for dev in 0..m {
-            acc += self.local_grad(dev, theta, &mut grad);
+            acc += self.local_grad(dev, theta, &mut grad, &mut scratch);
         }
         acc / m as f64
     }
@@ -134,16 +222,17 @@ pub(crate) fn check_gradient<S: GradientSource>(
 ) {
     let d = src.dim();
     let mut grad = vec![0.0f32; d];
-    src.local_grad(device, theta, &mut grad);
+    let mut ws = src.make_scratch();
+    src.local_grad(device, theta, &mut grad, &mut ws);
     let eps = 1e-3f32;
     let mut th = theta.to_vec();
-    let mut scratch = vec![0.0f32; d];
+    let mut gbuf = vec![0.0f32; d];
     for &i in coords {
         let orig = th[i];
         th[i] = orig + eps;
-        let fp = src.local_grad(device, &th, &mut scratch);
+        let fp = src.local_grad(device, &th, &mut gbuf, &mut ws);
         th[i] = orig - eps;
-        let fm = src.local_grad(device, &th, &mut scratch);
+        let fm = src.local_grad(device, &th, &mut gbuf, &mut ws);
         th[i] = orig;
         let fd = (fp - fm) / (2.0 * eps as f64);
         let g = grad[i] as f64;

@@ -7,7 +7,7 @@
 //! for the theory tests validating Corollary 1, Theorem 3 and the
 //! hyperparameter condition `L/2 − 1/(2α) + βγ/α ≤ 0`.
 
-use super::{EvalMetrics, GradientSource, ParamLayout};
+use super::{EvalMetrics, GradScratch, GradientSource, ParamLayout};
 use crate::util::rng::Xoshiro256pp;
 
 /// See module docs.
@@ -118,7 +118,13 @@ impl GradientSource for QuadraticProblem {
         self.m
     }
 
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        _scratch: &mut GradScratch,
+    ) -> f64 {
         assert_eq!(theta.len(), self.dim);
         assert_eq!(grad.len(), self.dim);
         let a = self.a_row(device);
@@ -171,10 +177,11 @@ mod tests {
     fn optimum_has_zero_gradient() {
         let p = problem();
         let theta = p.optimum();
+        let mut ws = p.make_scratch();
         let mut total = vec![0.0f32; p.dim()];
         let mut g = vec![0.0f32; p.dim()];
         for dev in 0..p.num_devices() {
-            p.local_grad(dev, &theta, &mut g);
+            p.local_grad(dev, &theta, &mut g, &mut ws);
             axpy(1.0 / p.num_devices() as f32, &g, &mut total);
         }
         let n = crate::util::vecmath::norm2(&total);
@@ -199,6 +206,7 @@ mod tests {
         let alpha = (1.0 / p.smoothness()) as f32;
         let fstar = p.optimum_value();
         let mut theta = p.init_theta(2);
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         let mut prev_gap = p.global_loss(&theta) - fstar;
@@ -206,7 +214,7 @@ mod tests {
         for _ in 0..25 {
             total.fill(0.0);
             for dev in 0..p.num_devices() {
-                p.local_grad(dev, &theta, &mut g);
+                p.local_grad(dev, &theta, &mut g, &mut ws);
                 axpy(1.0 / p.num_devices() as f32, &g, &mut total);
             }
             axpy(-alpha, &total.clone(), &mut theta);
@@ -231,13 +239,14 @@ mod tests {
         let p = problem();
         let mu = p.pl_constant();
         let fstar = p.optimum_value();
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         for seed in 0..5u64 {
             let theta = p.init_theta(seed);
             total.fill(0.0);
             for dev in 0..p.num_devices() {
-                p.local_grad(dev, &theta, &mut g);
+                p.local_grad(dev, &theta, &mut g, &mut ws);
                 axpy(1.0 / p.num_devices() as f32, &g, &mut total);
             }
             let gsq = crate::util::vecmath::norm2_sq(&total);

@@ -6,14 +6,54 @@
 //! Markov corpus (`crate::data::text`) is drawn from, so training can in
 //! principle reach the corpus' entropy-rate perplexity floor. The
 //! transformer LM lives in the JAX/HLO path (`crate::runtime`).
+//!
+//! The gradient only depends on the data through per-row bigram counts
+//! (`∂L/∂W[r,c] = (total_r·p_c − count_{r,c})/n`), which are
+//! θ-independent — so the counts are aggregated **once per shard at
+//! construction** and every `local_grad` call is a pure dense `O(V²)`
+//! pass over the logit table with zero allocation (the seed recounted
+//! the shard and allocated `V²` counters on every call). The per-token
+//! reference path is retained as
+//! [`SoftmaxLmProblem::local_grad_naive`].
 
-use super::{EvalMetrics, GradientSource, ParamLayout};
+use super::{add_l2, EvalMetrics, GradScratch, GradientSource, ParamLayout};
 use crate::data::TokenDataset;
+
+/// Per-dataset bigram sufficient statistics.
+struct BigramStats {
+    /// `V×V` transition counts, row-major by previous token.
+    counts: Vec<u32>,
+    /// Per-row totals (`Σ_c counts[r,c]`).
+    row_totals: Vec<u32>,
+    /// Number of bigrams (`tokens − 1`).
+    n: usize,
+}
+
+impl BigramStats {
+    fn build(data: &TokenDataset, vocab: usize) -> Self {
+        let mut counts = vec![0u32; vocab * vocab];
+        let mut row_totals = vec![0u32; vocab];
+        for w in data.tokens.windows(2) {
+            counts[w[0] as usize * vocab + w[1] as usize] += 1;
+            row_totals[w[0] as usize] += 1;
+        }
+        Self {
+            counts,
+            row_totals,
+            n: data.len() - 1,
+        }
+    }
+}
 
 /// See module docs.
 pub struct SoftmaxLmProblem {
+    /// Per-device token shards, retained for the per-token reference
+    /// path ([`SoftmaxLmProblem::local_grad_naive`]).
     shards: Vec<TokenDataset>,
-    test: TokenDataset,
+    /// Counts for each device shard, aggregated at construction.
+    shard_stats: Vec<BigramStats>,
+    /// Counts for the held-out stream.
+    test_stats: BigramStats,
     vocab: usize,
     l2: f32,
 }
@@ -28,40 +68,38 @@ impl SoftmaxLmProblem {
         }
         assert_eq!(test.vocab, vocab);
         assert!(test.len() >= 2);
+        let shard_stats = shards.iter().map(|s| BigramStats::build(s, vocab)).collect();
+        let test_stats = BigramStats::build(&test, vocab);
         Self {
             shards,
-            test,
+            shard_stats,
+            test_stats,
             vocab,
             l2,
         }
     }
 
-    /// Mean NLL (and optional gradient) over a token stream's bigrams.
+    /// Mean NLL (and optional gradient) from precomputed bigram counts:
+    /// a dense `O(V²)` pass over the logit table, row-batched.
     fn loss_grad_on(
         &self,
-        data: &TokenDataset,
+        stats: &BigramStats,
         theta: &[f32],
         mut grad: Option<&mut [f32]>,
+        scratch: &mut GradScratch,
     ) -> f64 {
         let v = self.vocab;
-        let n = data.len() - 1;
+        let n = stats.n;
         if let Some(g) = grad.as_deref_mut() {
             g.fill(0.0);
         }
-        // Count bigrams first: gradient rows only depend on (prev ->
-        // distribution of next), so aggregate counts make the pass
-        // O(V² + n) instead of O(n·V).
-        let mut counts = vec![0u32; v * v];
-        let mut row_totals = vec![0u32; v];
-        for w in data.tokens.windows(2) {
-            counts[w[0] as usize * v + w[1] as usize] += 1;
-            row_totals[w[0] as usize] += 1;
-        }
-        let mut probs = vec![0.0f64; v];
+        scratch.probs.clear();
+        scratch.probs.resize(v, 0.0);
+        let probs = &mut scratch.probs[..];
         let mut loss = 0.0f64;
         let inv_n = 1.0 / n as f64;
         for r in 0..v {
-            let total = row_totals[r];
+            let total = stats.row_totals[r];
             if total == 0 {
                 continue;
             }
@@ -71,15 +109,15 @@ impl SoftmaxLmProblem {
                 maxl = maxl.max(x as f64);
             }
             let mut z = 0.0;
-            for (c, &x) in logits.iter().enumerate() {
-                probs[c] = ((x as f64) - maxl).exp();
-                z += probs[c];
+            for (p, &x) in probs.iter_mut().zip(logits) {
+                *p = ((x as f64) - maxl).exp();
+                z += *p;
             }
             let logz = maxl + z.ln();
             for p in probs.iter_mut() {
                 *p /= z;
             }
-            let crow = &counts[r * v..(r + 1) * v];
+            let crow = &stats.counts[r * v..(r + 1) * v];
             for c in 0..v {
                 if crow[c] > 0 {
                     loss += crow[c] as f64 * (logz - theta[r * v + c] as f64);
@@ -88,21 +126,46 @@ impl SoftmaxLmProblem {
             if let Some(g) = grad.as_deref_mut() {
                 let grow = &mut g[r * v..(r + 1) * v];
                 let tf = total as f64;
-                for c in 0..v {
-                    grow[c] = ((tf * probs[c] - crow[c] as f64) * inv_n) as f32;
+                for ((slot, &p), &cnt) in grow.iter_mut().zip(probs.iter()).zip(crow) {
+                    *slot = ((tf * p - cnt as f64) * inv_n) as f32;
                 }
             }
         }
         loss *= inv_n;
-        if self.l2 > 0.0 {
-            let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
-            loss += 0.5 * self.l2 as f64 * reg;
-            if let Some(g) = grad {
-                for (gi, &ti) in g.iter_mut().zip(theta) {
-                    *gi += self.l2 * ti;
-                }
+        add_l2(self.l2, theta, &mut loss, grad);
+        loss
+    }
+
+    /// Retained per-token reference implementation (one softmax per
+    /// bigram, f64 accumulation): ground truth for `tests/prop_grad.rs`
+    /// and the baseline the `grad` bench measures the count-aggregated
+    /// path against.
+    pub fn local_grad_naive(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let data = &self.shards[device];
+        let v = self.vocab;
+        let n = data.len() - 1;
+        let inv_n = 1.0 / n as f64;
+        let mut acc = vec![0.0f64; v * v];
+        let mut loss = 0.0f64;
+        for w in data.tokens.windows(2) {
+            let (r, y) = (w[0] as usize, w[1] as usize);
+            let logits = &theta[r * v..(r + 1) * v];
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let z: f64 = logits.iter().map(|&x| ((x as f64) - maxl).exp()).sum();
+            loss += maxl + z.ln() - theta[r * v + y] as f64;
+            let arow = &mut acc[r * v..(r + 1) * v];
+            for (slot, &x) in arow.iter_mut().zip(logits) {
+                *slot += ((x as f64) - maxl).exp() / z;
             }
+            acc[r * v + y] -= 1.0;
         }
+        loss *= inv_n;
+        for (g, a) in grad.iter_mut().zip(&acc) {
+            *g = (a * inv_n) as f32;
+        }
+        add_l2(self.l2, theta, &mut loss, Some(grad));
         loss
     }
 }
@@ -116,14 +179,27 @@ impl GradientSource for SoftmaxLmProblem {
         self.shards.len()
     }
 
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+    fn make_scratch(&self) -> GradScratch {
+        let mut ws = GradScratch::default();
+        ws.probs.reserve(self.vocab);
+        ws
+    }
+
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        scratch: &mut GradScratch,
+    ) -> f64 {
         assert_eq!(theta.len(), self.dim());
         assert_eq!(grad.len(), self.dim());
-        self.loss_grad_on(&self.shards[device], theta, Some(grad))
+        self.loss_grad_on(&self.shard_stats[device], theta, Some(grad), scratch)
     }
 
     fn eval(&self, theta: &[f32]) -> EvalMetrics {
-        let loss = self.loss_grad_on(&self.test, theta, None);
+        let mut scratch = self.make_scratch();
+        let loss = self.loss_grad_on(&self.test_stats, theta, None, &mut scratch);
         EvalMetrics {
             loss,
             accuracy: None,
@@ -144,9 +220,9 @@ impl GradientSource for SoftmaxLmProblem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Xoshiro256pp;
     use crate::data::text::{markov_corpus, shard_corpus, CorpusSpec, MarkovChain};
     use crate::problems::check_gradient;
+    use crate::util::rng::Xoshiro256pp;
     use crate::util::vecmath::axpy;
 
     fn small_problem() -> (SoftmaxLmProblem, CorpusSpec) {
@@ -187,12 +263,13 @@ mod tests {
         let floor = chain.mean_row_entropy().exp();
         let mut theta = p.init_theta(0);
         let m = p.num_devices();
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         for _ in 0..300 {
             total.fill(0.0);
             for dev in 0..m {
-                p.local_grad(dev, &theta, &mut g);
+                p.local_grad(dev, &theta, &mut g, &mut ws);
                 axpy(1.0 / m as f32, &g, &mut total);
             }
             let step = total.clone();
@@ -210,40 +287,31 @@ mod tests {
 
     #[test]
     fn aggregated_count_gradient_matches_naive() {
-        // The O(V²+n) count-based gradient must equal the naive per-
-        // sample gradient.
+        // The count-aggregated O(V²) gradient must match the retained
+        // per-token reference on random θ.
         let (p, _) = small_problem();
         let mut rng = Xoshiro256pp::seed_from_u64(8);
         let theta: Vec<f32> = (0..p.dim()).map(|_| rng.gaussian_f32(0.0, 0.2)).collect();
+        let mut ws = p.make_scratch();
         let mut g = vec![0.0f32; p.dim()];
-        let loss = p.local_grad(0, &theta, &mut g);
+        let loss = p.local_grad(0, &theta, &mut g, &mut ws);
+        let mut g_ref = vec![0.0f32; p.dim()];
+        let loss_ref = p.local_grad_naive(0, &theta, &mut g_ref);
+        assert!((loss - loss_ref).abs() < 1e-9 * loss_ref.abs().max(1.0));
+        for (a, b) in g.iter().zip(&g_ref) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
 
-        // Naive recomputation.
-        let data = &p.shards[0];
-        let v = p.vocab;
-        let n = data.len() - 1;
-        let mut g_naive = vec![0.0f64; p.dim()];
-        let mut loss_naive = 0.0f64;
-        for w in data.tokens.windows(2) {
-            let (r, y) = (w[0] as usize, w[1] as usize);
-            let logits = &theta[r * v..(r + 1) * v];
-            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-            let z: f64 = logits.iter().map(|&x| ((x as f64) - maxl).exp()).sum();
-            loss_naive += maxl + z.ln() - theta[r * v + y] as f64;
-            for c in 0..v {
-                let pc = ((theta[r * v + c] as f64) - maxl).exp() / z;
-                g_naive[r * v + c] += (pc - if c == y { 1.0 } else { 0.0 }) / n as f64;
-            }
-        }
-        loss_naive /= n as f64;
-        let reg: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
-        loss_naive += 0.5 * p.l2 as f64 * reg;
-        for (gn, &t) in g_naive.iter_mut().zip(&theta) {
-            *gn += p.l2 as f64 * t as f64;
-        }
-        assert!((loss - loss_naive).abs() < 1e-9);
-        for (a, b) in g.iter().zip(&g_naive) {
-            assert!((*a as f64 - b).abs() < 1e-5);
+    #[test]
+    fn counts_are_shard_stable() {
+        // Precomputed stats must agree with a recount of the shard.
+        let (p, _) = small_problem();
+        for (shard, stats) in p.shards.iter().zip(&p.shard_stats) {
+            let fresh = BigramStats::build(shard, p.vocab);
+            assert_eq!(fresh.counts, stats.counts);
+            assert_eq!(fresh.row_totals, stats.row_totals);
+            assert_eq!(fresh.n, shard.len() - 1);
         }
     }
 }

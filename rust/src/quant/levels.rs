@@ -83,9 +83,14 @@ pub struct DadaquantSchedule {
 }
 
 impl DadaquantSchedule {
+    /// `b0` is clamped into `[1, cap]` (and `cap` to at least 1), so a
+    /// misconfigured schedule can never start above its cap and then
+    /// *shrink* on the first stagnation — the level sequence is always
+    /// non-decreasing.
     pub fn new(b0: u8, patience: u32, cap: u8) -> Self {
+        let cap = cap.max(1);
         Self {
-            level: b0.max(1),
+            level: b0.clamp(1, cap),
             best_loss: f64::INFINITY,
             stale: 0,
             patience: patience.max(1),
@@ -201,6 +206,19 @@ mod tests {
     fn adaquantfl_degenerate_loss() {
         assert_eq!(adaquantfl_level(1.0, 0.0, 2, 32), 32);
         assert_eq!(adaquantfl_level(1.0, f64::NAN, 2, 32), 32);
+    }
+
+    #[test]
+    fn dadaquant_schedule_clamps_b0_to_cap() {
+        // b0 above the cap starts *at* the cap instead of overshooting
+        // and shrinking on the first stagnation.
+        let mut s = DadaquantSchedule::new(16, 2, 4);
+        assert_eq!(s.level(), 4);
+        assert_eq!(s.observe(1.0), 4);
+        assert_eq!(s.observe(1.0), 4);
+        assert_eq!(s.observe(1.0), 4);
+        // A zero cap degrades to the minimum valid level.
+        assert_eq!(DadaquantSchedule::new(3, 1, 0).level(), 1);
     }
 
     #[test]

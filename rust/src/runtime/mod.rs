@@ -17,7 +17,7 @@ pub mod manifest;
 pub use manifest::{KernelEntry, Manifest, ModelEntry};
 
 use crate::data::TokenDataset;
-use crate::problems::{EvalMetrics, GradientSource, ParamLayout};
+use crate::problems::{EvalMetrics, GradScratch, GradientSource, ParamLayout};
 use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Mutex;
@@ -195,7 +195,15 @@ impl GradientSource for HloGradientSource {
         self.shards.len()
     }
 
-    fn local_grad(&self, device: usize, theta: &[f32], grad: &mut [f32]) -> f64 {
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        _scratch: &mut GradScratch,
+    ) -> f64 {
+        // The workspace is unused: PJRT owns the intermediate buffers
+        // on its side of the FFI boundary.
         let (loss, g) = self
             .run_grad(theta, &self.shards[device])
             .expect("HLO gradient execution failed");

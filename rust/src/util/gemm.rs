@@ -1,0 +1,275 @@
+//! Blocked f32 SGEMM micro-kernels for the batched device-compute
+//! layer (`crate::problems`).
+//!
+//! Three row-major accumulate variants cover every product the problems
+//! need — `C += A·Bᵀ` for forward passes over a shard (`X·Wᵀ`),
+//! `C += Aᵀ·B` for weight gradients (`δᵀ·X`), and `C += A·B` for
+//! backpropagated deltas (`δ·W`) — plus the column-sum reduction for
+//! bias gradients.
+//!
+//! **Determinism contract.** Every kernel accumulates each output
+//! element in one fixed, data-independent order: [`gemm_nt`] walks the
+//! depth dimension in `KC`-sized blocks whose dot products fold
+//! [`LANES`] strided partial sums through a fixed reduction tree, while
+//! [`gemm_nn`] / [`gemm_tn`] / [`col_sum_add`] accumulate in plain
+//! index/row order (no depth blocking — adding it would *change* their
+//! accumulation order and the results the property tests pin). The
+//! kernels themselves are single-threaded (callers parallelize across
+//! *devices*, never inside one gradient), so `local_grad` is
+//! bit-reproducible run-to-run at any engine thread count. See
+//! DESIGN.md §Compute.
+//!
+//! The lane-strided partial sums exist so the reductions vectorize:
+//! a single-accumulator f32 dot cannot be auto-vectorized (strict FP
+//! semantics forbid reassociation), whereas independent lanes map
+//! directly onto SIMD adds.
+
+/// Depth (k) block size: `2·KC·4` bytes of operand rows stay L1-hot
+/// while a block of dot products runs.
+const KC: usize = 256;
+
+/// Partial-sum lanes in the dot-product kernel (one SIMD-width's worth
+/// of independent f32 accumulators).
+const LANES: usize = 8;
+
+/// Dot product of equal-length slices with `LANES` strided partial
+/// sums and a fixed reduction tree. Deterministic for a given input
+/// length; `debug_assert`s equal lengths.
+#[inline]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    let split = chunks * LANES;
+    for (a8, b8) in a[..split]
+        .chunks_exact(LANES)
+        .zip(b[..split].chunks_exact(LANES))
+    {
+        for ((s, &x), &y) in acc.iter_mut().zip(a8).zip(b8) {
+            *s += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in a[split..].iter().zip(&b[split..]) {
+        tail += x * y;
+    }
+    // Fixed pairwise tree over the lanes.
+    let q0 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let q1 = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    (q0 + q1) + tail
+}
+
+/// `C[m×n] += A[m×k] · B[n×k]ᵀ` (all row-major).
+///
+/// The transposed-B form makes both operand rows contiguous, so each
+/// `C[i,j]` is one [`dot_lanes`] call per depth block. This is the
+/// forward-pass kernel: `logits[n×K] += X[n×D] · W[K×D]ᵀ`.
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), n * k, "B must be n×k");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for (i, c_row) in c.chunks_exact_mut(n).enumerate() {
+            let a_blk = &a[i * k + k0..i * k + k0 + kb];
+            for (j, cij) in c_row.iter_mut().enumerate() {
+                let b_blk = &b[j * k + k0..j * k + k0 + kb];
+                *cij += dot_lanes(a_blk, b_blk);
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]` (all row-major).
+///
+/// Axpy-style kernel: each `A[i,l]` scales row `l` of `B` into row `i`
+/// of `C`, so the inner loop vectorizes over `n` and each `C` element
+/// accumulates its `k` terms in index order. This is the
+/// delta-backprop kernel: `δ_hidden[n×H] += δ_out[n×K] · W2[K×H]`.
+pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        for (&ail, b_row) in a_row.iter().zip(b.chunks_exact(n)) {
+            for (cij, &blj) in c_row.iter_mut().zip(b_row) {
+                *cij += ail * blj;
+            }
+        }
+    }
+}
+
+/// `C[m×n] += A[p×m]ᵀ · B[p×n]` (all row-major).
+///
+/// Rank-1-update kernel: each of the `p` rows contributes the outer
+/// product `A[r,·]ᵀ · B[r,·]`, streamed once, with `C` (the small
+/// weight-gradient matrix) staying cache-hot. Each `C` element
+/// accumulates its `p` terms in row order — fixed and data-independent.
+/// This is the weight-gradient kernel: `∂W[K×D] += δ[n×K]ᵀ · X[n×D]`.
+pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usize) {
+    assert_eq!(a.len(), p * m, "A must be p×m");
+    assert_eq!(b.len(), p * n, "B must be p×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    for (a_row, b_row) in a.chunks_exact(m).zip(b.chunks_exact(n)) {
+        for (&ari, c_row) in a_row.iter().zip(c.chunks_exact_mut(n)) {
+            for (cij, &brj) in c_row.iter_mut().zip(b_row) {
+                *cij += ari * brj;
+            }
+        }
+    }
+}
+
+/// `out[j] += Σ_rows A[·×n][row, j]` — column sums of a row-major
+/// matrix, accumulated in row order (the bias-gradient reduction).
+pub fn col_sum_add(a: &[f32], out: &mut [f32], n: usize) {
+    assert_eq!(out.len(), n, "out must have one slot per column");
+    if n == 0 {
+        return;
+    }
+    assert_eq!(a.len() % n, 0, "A must be rows×n");
+    for row in a.chunks_exact(n) {
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn randv(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    /// f64 reference: C += op(A)·op(B) with naive triple loops.
+    fn refr_nt(a: &[f32], b: &[f32], c: &mut [f64], m: usize, n: usize, k: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += a[i * k + l] as f64 * b[j * k + l] as f64;
+                }
+                c[i * n + j] += acc;
+            }
+        }
+    }
+
+    fn assert_close(got: &[f32], want: &[f64], tol: f64) {
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            let denom = w.abs().max(1.0);
+            assert!(
+                ((g as f64 - w) / denom).abs() < tol,
+                "elem {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn nt_matches_f64_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (17, 9, 300), (4, 32, 1000)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, n * k);
+            let mut c = vec![0.0f32; m * n];
+            let mut want = vec![0.0f64; m * n];
+            gemm_nt(&a, &b, &mut c, m, n, k);
+            refr_nt(&a, &b, &mut want, m, n, k);
+            assert_close(&c, &want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn nn_matches_nt_on_transposed_b() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let (m, n, k) = (6, 11, 23);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n); // k×n
+        let mut bt = vec![0.0f32; n * k]; // n×k
+        for r in 0..k {
+            for j in 0..n {
+                bt[j * k + r] = b[r * n + j];
+            }
+        }
+        let mut c_nn = vec![0.0f32; m * n];
+        let mut c_nt = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, &mut c_nn, m, n, k);
+        gemm_nt(&a, &bt, &mut c_nt, m, n, k);
+        for (x, y) in c_nn.iter().zip(&c_nt) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tn_matches_f64_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let (m, n, p) = (9, 14, 200);
+        let a = randv(&mut rng, p * m);
+        let b = randv(&mut rng, p * n);
+        let mut c = vec![0.0f32; m * n];
+        gemm_tn(&a, &b, &mut c, m, n, p);
+        let mut want = vec![0.0f64; m * n];
+        for r in 0..p {
+            for i in 0..m {
+                for j in 0..n {
+                    want[i * n + j] += a[r * m + i] as f64 * b[r * n + j] as f64;
+                }
+            }
+        }
+        assert_close(&c, &want, 1e-5);
+    }
+
+    #[test]
+    fn kernels_accumulate_into_c() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let mut c = [10.0f32];
+        gemm_nt(&a, &b, &mut c, 1, 1, 2);
+        assert_eq!(c[0], 10.0 + 11.0);
+    }
+
+    #[test]
+    fn deterministic_across_repeated_calls() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let (m, n, k) = (13, 21, 777);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_nt(&a, &b, &mut c1, m, n, k);
+        gemm_nt(&a, &b, &mut c2, m, n, k);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&c1), bits(&c2));
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let mut c = [1.0f32, 2.0];
+        gemm_nt(&[], &[], &mut c, 2, 1, 0);
+        assert_eq!(c, [1.0, 2.0]);
+        gemm_nn(&[], &[], &mut [], 0, 0, 5);
+        gemm_tn(&[], &[], &mut [], 0, 3, 0);
+        col_sum_add(&[], &mut [], 0);
+    }
+
+    #[test]
+    fn col_sums() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let mut out = [0.5f32, 0.0, 0.0];
+        col_sum_add(&a, &mut out, 3);
+        assert_eq!(out, [5.5, 7.0, 9.0]);
+    }
+}

@@ -1,5 +1,7 @@
-//! Self-contained substrates: RNG, JSON, TOML-subset, thread pool, and
-//! dense vector kernels.
+//! Self-contained substrates: RNG, JSON, TOML-subset, thread pool,
+//! dense vector kernels (BLAS-1 in `vecmath`, blocked SGEMM in
+//! `gemm`), and the recency ring buffer backing the engine's history
+//! views.
 //!
 //! The offline build environment ships only the `xla` crate's transitive
 //! dependencies, so everything a typical project would pull from
@@ -7,8 +9,10 @@
 //! DESIGN.md §4, S18).
 
 pub mod ascii_plot;
+pub mod gemm;
 pub mod json;
 pub mod pool;
+pub mod ring;
 pub mod rng;
 pub mod toml;
 pub mod vecmath;

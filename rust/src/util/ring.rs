@@ -1,0 +1,164 @@
+//! A fixed-capacity recency window over `f64` samples.
+//!
+//! The round engine broadcasts the most recent `history_depth` model
+//! differences and train losses every round. Storing them
+//! most-recent-first in a `Vec` made each push an O(depth)
+//! `insert(0, …)`; [`RecentWindow`] keeps the same *view* (a contiguous
+//! most-recent-first slice, which `RoundCtx` / `SelectionView` borrow
+//! directly) with amortized O(1) pushes.
+//!
+//! Implementation: a `2·cap` buffer written right-to-left. The live
+//! window is `buf[head..head + len]`; when `head` reaches 0 the window
+//! is relocated to the buffer's midpoint (one O(cap) copy every `cap`
+//! pushes).
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct RecentWindow {
+    buf: Vec<f64>,
+    head: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl RecentWindow {
+    /// Window retaining the `cap` most recent samples (`cap = 0` is a
+    /// valid always-empty window).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            buf: vec![0.0; 2 * cap],
+            head: 2 * cap,
+            len: 0,
+            cap,
+        }
+    }
+
+    /// Retention capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Record a sample, evicting the oldest once at capacity.
+    pub fn push(&mut self, x: f64) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.head == 0 {
+            // Relocate the newest `cap − 1` survivors to the midpoint;
+            // source and destination cannot overlap since keep < cap.
+            let keep = self.len.min(self.cap - 1);
+            self.buf.copy_within(0..keep, self.cap);
+            self.head = self.cap;
+            self.len = keep;
+        }
+        self.head -= 1;
+        self.buf[self.head] = x;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// The retained samples, most recent first.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.buf[self.head..self.head + self.len]
+    }
+
+    /// The most recent sample, if any.
+    pub fn latest(&self) -> Option<f64> {
+        self.as_slice().first().copied()
+    }
+
+    /// Owned most-recent-first copy (checkpoint serialization).
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.as_slice().to_vec()
+    }
+
+    /// Replace the contents from a most-recent-first slice, keeping at
+    /// most `capacity` newest samples (checkpoint restore).
+    pub fn assign(&mut self, most_recent_first: &[f64]) {
+        let keep = most_recent_first.len().min(self.cap);
+        self.head = self.cap;
+        self.len = keep;
+        self.buf[self.cap..self.cap + keep].copy_from_slice(&most_recent_first[..keep]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_insert_front_truncate() {
+        // The reference semantics this type replaces.
+        for cap in [1usize, 2, 3, 10] {
+            let mut ring = RecentWindow::new(cap);
+            let mut reference: Vec<f64> = Vec::new();
+            for i in 0..100 {
+                let x = (i * i) as f64;
+                ring.push(x);
+                reference.insert(0, x);
+                reference.truncate(cap);
+                assert_eq!(ring.as_slice(), &reference[..], "cap={cap} i={i}");
+                assert_eq!(ring.latest(), reference.first().copied());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_capacity_stays_empty() {
+        let mut ring = RecentWindow::new(0);
+        ring.push(1.0);
+        ring.push(2.0);
+        assert!(ring.is_empty());
+        assert_eq!(ring.as_slice(), &[] as &[f64]);
+        assert_eq!(ring.latest(), None);
+    }
+
+    #[test]
+    fn partial_fill() {
+        let mut ring = RecentWindow::new(5);
+        ring.push(1.0);
+        ring.push(2.0);
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.as_slice(), &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn assign_roundtrip() {
+        let mut ring = RecentWindow::new(4);
+        for i in 0..7 {
+            ring.push(i as f64);
+        }
+        let saved = ring.to_vec();
+        assert_eq!(saved, vec![6.0, 5.0, 4.0, 3.0]);
+        let mut restored = RecentWindow::new(4);
+        restored.assign(&saved);
+        assert_eq!(restored.as_slice(), &saved[..]);
+        // Pushing after restore keeps most-recent-first order.
+        restored.assign(&saved);
+        restored.push(9.0);
+        assert_eq!(restored.as_slice(), &[9.0, 6.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn assign_truncates_to_capacity() {
+        let mut ring = RecentWindow::new(2);
+        ring.assign(&[9.0, 8.0, 7.0]);
+        assert_eq!(ring.as_slice(), &[9.0, 8.0]);
+    }
+
+    #[test]
+    fn assign_empty_clears() {
+        let mut ring = RecentWindow::new(3);
+        ring.push(1.0);
+        ring.assign(&[]);
+        assert!(ring.is_empty());
+    }
+}

@@ -4,6 +4,7 @@
 use aquila::algorithms::{table_suite, Algorithm};
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
 use aquila::repro::{ablation_beta, run_cell};
+use std::sync::Arc;
 
 fn tiny(ds: DatasetKind, split: SplitKind, hetero: bool) -> ExperimentSpec {
     let mut s = ExperimentSpec::new(ds, split, hetero).scaled(0.1, 60);
@@ -21,11 +22,11 @@ fn aquila_cheapest_to_target_on_cf10_iid() {
     use aquila::algorithms::fedavg::FedAvg;
     let spec = tiny(DatasetKind::Cf10, SplitKind::Iid, false);
     // Target: within 10% of what uncompressed FedAvg achieves.
-    let t_fed = run_cell(&spec, &FedAvg);
+    let t_fed = run_cell(&spec, Arc::new(FedAvg));
     let target = t_fed.final_train_loss() * 1.10;
     let mut costs = Vec::new();
     for algo in table_suite(spec.beta) {
-        let t = run_cell(&spec, algo.as_ref());
+        let t = run_cell(&spec, algo.clone());
         costs.push((algo.name().to_string(), t.bits_to_loss(target)));
     }
     let aq = costs
@@ -63,12 +64,12 @@ fn aquila_cheapest_to_target_on_wt2() {
     use aquila::algorithms::fedavg::FedAvg;
     let mut spec = tiny(DatasetKind::Wt2, SplitKind::Iid, false);
     spec.beta = 1.25;
-    let t_fed = run_cell(&spec, &FedAvg);
+    let t_fed = run_cell(&spec, Arc::new(FedAvg));
     let target = t_fed.final_train_loss() * 1.10;
     let mut aq_bits = None;
     let mut others = Vec::new();
     for algo in table_suite(spec.beta) {
-        let t = run_cell(&spec, algo.as_ref());
+        let t = run_cell(&spec, algo.clone());
         if algo.name() == "AQUILA" {
             aq_bits = t.bits_to_loss(target);
         } else if !matches!(algo.name(), "LAQ" | "LAdaQ") {
@@ -96,7 +97,7 @@ fn level_dynamics_match_paper() {
     let spec = tiny(DatasetKind::Cf10, SplitKind::Iid, false);
     let suite = table_suite(spec.beta);
     let aq = suite.iter().find(|a| a.name() == "AQUILA").unwrap();
-    let t_aq = run_cell(&spec, aq.as_ref());
+    let t_aq = run_cell(&spec, aq.clone());
 
     let d = spec.build_problem().dim();
     let cap = aquila_level_upper_bound(d) as f64;
@@ -135,8 +136,8 @@ fn aquila_accuracy_comparable_noniid() {
         s.devices = 10;
         s
     };
-    let t_fed = run_cell(&spec, &FedAvg);
-    let t_aq = run_cell(&spec, &Aquila::new(spec.beta));
+    let t_fed = run_cell(&spec, Arc::new(FedAvg));
+    let t_aq = run_cell(&spec, Arc::new(Aquila::new(spec.beta)));
     let acc_fed = t_fed.final_accuracy().unwrap();
     let acc_aq = t_aq.final_accuracy().unwrap();
     assert!(
@@ -176,8 +177,8 @@ fn hetero_table_shape() {
     spec_het.hetero = true;
     let mut aq_het = None;
     for algo in table_suite(spec_h.beta) {
-        let homo = run_cell(&spec_h, algo.as_ref());
-        let het = run_cell(&spec_het, algo.as_ref());
+        let homo = run_cell(&spec_h, algo.clone());
+        let het = run_cell(&spec_het, algo.clone());
         assert!(
             het.total_bits() < homo.total_bits(),
             "{}: hetero {} ≥ homo {}",
@@ -204,7 +205,7 @@ fn full_matrix_smoke() {
             let mut spec = ExperimentSpec::new(ds, split, false).scaled(0.05, 8);
             spec.devices = 4;
             for algo in table_suite(spec.beta) {
-                let t = run_cell(&spec, algo.as_ref());
+                let t = run_cell(&spec, algo.clone());
                 assert_eq!(t.rounds.len(), 8, "{} {:?}", algo.name(), ds);
                 assert!(t.final_train_loss().is_finite());
             }

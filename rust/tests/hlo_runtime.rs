@@ -64,8 +64,9 @@ fn grad_artifact_executes_and_loss_is_sane() {
     assert_eq!(src.num_devices(), 4);
 
     let theta = src.init_theta(1);
+    let mut ws = src.make_scratch();
     let mut grad = vec![0.0f32; src.dim()];
-    let loss = src.local_grad(0, &theta, &mut grad);
+    let loss = src.local_grad(0, &theta, &mut grad, &mut ws);
     // Near-random init ⇒ loss ≈ ln(vocab) = ln 64 ≈ 4.16.
     assert!(
         (loss - (model.vocab as f64).ln()).abs() < 1.0,
@@ -79,7 +80,7 @@ fn grad_artifact_executes_and_loss_is_sane() {
     let mut theta2 = theta.clone();
     aquila::util::vecmath::axpy(-0.5, &grad, &mut theta2);
     let mut g2 = vec![0.0f32; src.dim()];
-    let loss2 = src.local_grad(0, &theta2, &mut g2);
+    let loss2 = src.local_grad(0, &theta2, &mut g2, &mut ws);
     assert!(loss2 < loss, "descent failed: {loss} -> {loss2}");
 
     // Eval reports perplexity = exp(loss).

@@ -1,0 +1,239 @@
+//! Property tests for the batched GEMM-backed compute layer
+//! (`problems` + `util::gemm`):
+//!
+//! * every batched gradient matches its retained naive per-sample
+//!   reference within 1e-4 relative tolerance on random θ;
+//! * `local_grad` is exactly deterministic — bit-identical across
+//!   repeated calls and across fresh/reused [`GradScratch`] instances;
+//! * whole-run traces are bit-identical for engine thread counts
+//!   1 / 2 / 7 (the workspaces are per-device, so the thread partition
+//!   cannot influence any gradient).
+
+use aquila::algorithms::aquila::Aquila;
+use aquila::coordinator::{RunConfig, Session};
+use aquila::data::partition::iid_partition;
+use aquila::data::synth::{train_test_split, MixtureSpec};
+use aquila::data::text::{markov_corpus, shard_corpus, CorpusSpec};
+use aquila::data::ClassificationDataset;
+use aquila::problems::cnn::CnnProblem;
+use aquila::problems::logistic::LogisticProblem;
+use aquila::problems::mlp::MlpProblem;
+use aquila::problems::softmax_lm::SoftmaxLmProblem;
+use aquila::problems::GradientSource;
+use aquila::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// |a − b| ≤ tol · max(|a|, |b|, ‖g_ref‖_∞) elementwise — relative
+/// tolerance with a gradient-scale floor so near-cancelled entries
+/// compare at the accumulation noise floor, not at ±∞ relative error.
+fn assert_grad_close(got: &[f32], want: &[f32], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len());
+    let scale = want.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs())).max(1e-6);
+    for (i, (&a, &b)) in got.iter().zip(want).enumerate() {
+        let (a, b) = (a as f64, b as f64);
+        let denom = a.abs().max(b.abs()).max(scale);
+        assert!(
+            (a - b).abs() <= tol * denom,
+            "{what}[{i}]: batched {a} vs naive {b} (denom {denom})"
+        );
+    }
+}
+
+fn assert_loss_close(got: f64, want: f64, what: &str) {
+    assert!(
+        (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+        "{what}: batched loss {got} vs naive {want}"
+    );
+}
+
+fn mixture_shards(
+    spec: &MixtureSpec,
+    devices: usize,
+    part_seed: u64,
+) -> (Vec<ClassificationDataset>, ClassificationDataset) {
+    let (train, test) = train_test_split(spec, 0.2);
+    let mut rng = Xoshiro256pp::seed_from_u64(part_seed);
+    let parts = iid_partition(train.len(), devices, &mut rng);
+    (parts.iter().map(|p| train.subset(p)).collect(), test)
+}
+
+fn logistic_problem(seed: u64) -> LogisticProblem {
+    let spec = MixtureSpec {
+        num_classes: 5,
+        dim: 13,
+        num_samples: 420,
+        separation: 1.2,
+        noise: 1.0,
+        seed,
+    };
+    let (shards, test) = mixture_shards(&spec, 4, seed ^ 0xA1);
+    LogisticProblem::new(shards, test, 1e-3)
+}
+
+fn mlp_problem(seed: u64) -> MlpProblem {
+    let spec = MixtureSpec {
+        num_classes: 4,
+        dim: 10,
+        num_samples: 360,
+        separation: 1.2,
+        noise: 0.9,
+        seed,
+    };
+    let (shards, test) = mixture_shards(&spec, 3, seed ^ 0xB2);
+    MlpProblem::new(shards, test, 12, 1e-4)
+}
+
+fn cnn_problem(seed: u64) -> CnnProblem {
+    let spec = MixtureSpec {
+        num_classes: 3,
+        dim: 64, // 8×8 images
+        num_samples: 270,
+        separation: 1.0,
+        noise: 0.8,
+        seed,
+    };
+    let (shards, test) = mixture_shards(&spec, 3, seed ^ 0xC3);
+    CnnProblem::new(shards, test, 4, 3, 1e-4)
+}
+
+fn lm_problem(seed: u64) -> SoftmaxLmProblem {
+    let spec = CorpusSpec {
+        vocab: 12,
+        length: 9_000,
+        peakedness: 1.8,
+        seed,
+    };
+    let full = markov_corpus(&spec);
+    let test = full.slice(0, 1500);
+    let train = full.slice(1500, full.len());
+    SoftmaxLmProblem::new(shard_corpus(&train, 3), test, 1e-4)
+}
+
+/// Random θ in the rough magnitude band training visits.
+fn random_theta(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..d).map(|_| rng.gaussian_f32(0.0, 0.4)).collect()
+}
+
+/// Run the batched-vs-naive comparison over random θ and every device.
+fn check_against_naive<P, F>(problem: &P, naive: F, tol: f64, what: &str)
+where
+    P: GradientSource,
+    F: Fn(&P, usize, &[f32], &mut [f32]) -> f64,
+{
+    let d = problem.dim();
+    let mut ws = problem.make_scratch();
+    let mut g = vec![0.0f32; d];
+    let mut g_ref = vec![0.0f32; d];
+    for trial in 0..3u64 {
+        let theta = random_theta(d, 0x5EED ^ (trial * 977));
+        for dev in 0..problem.num_devices() {
+            let loss = problem.local_grad(dev, &theta, &mut g, &mut ws);
+            let loss_ref = naive(problem, dev, &theta, &mut g_ref);
+            assert_loss_close(loss, loss_ref, what);
+            assert_grad_close(&g, &g_ref, tol, what);
+        }
+    }
+}
+
+#[test]
+fn prop_logistic_batched_matches_naive() {
+    for seed in [11u64, 12, 13] {
+        let p = logistic_problem(seed);
+        check_against_naive(&p, LogisticProblem::local_grad_naive, 1e-4, "logistic");
+    }
+}
+
+#[test]
+fn prop_mlp_batched_matches_naive() {
+    for seed in [21u64, 22, 23] {
+        let p = mlp_problem(seed);
+        check_against_naive(&p, MlpProblem::local_grad_naive, 1e-4, "mlp");
+    }
+}
+
+#[test]
+fn prop_cnn_batched_matches_naive() {
+    for seed in [31u64, 32, 33] {
+        let p = cnn_problem(seed);
+        check_against_naive(&p, CnnProblem::local_grad_naive, 1e-4, "cnn");
+    }
+}
+
+#[test]
+fn prop_softmax_lm_batched_matches_naive() {
+    for seed in [41u64, 42] {
+        let p = lm_problem(seed);
+        check_against_naive(&p, SoftmaxLmProblem::local_grad_naive, 1e-4, "softmax_lm");
+    }
+}
+
+/// Bitwise determinism of `local_grad`: repeated calls with a reused
+/// scratch, and calls with a fresh scratch, must agree exactly.
+fn check_bitwise_determinism<P: GradientSource>(problem: &P, what: &str) {
+    let d = problem.dim();
+    let theta = random_theta(d, 0xD1CE);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    let mut ws = problem.make_scratch();
+    let mut g = vec![0.0f32; d];
+    for dev in 0..problem.num_devices() {
+        let l1 = problem.local_grad(dev, &theta, &mut g, &mut ws);
+        let b1 = bits(&g);
+        // Same (now warm) scratch.
+        let l2 = problem.local_grad(dev, &theta, &mut g, &mut ws);
+        assert_eq!(l1.to_bits(), l2.to_bits(), "{what}: loss drifted on reuse");
+        assert_eq!(b1, bits(&g), "{what}: grad drifted on scratch reuse");
+        // Fresh scratch.
+        let mut fresh = problem.make_scratch();
+        let l3 = problem.local_grad(dev, &theta, &mut g, &mut fresh);
+        assert_eq!(l1.to_bits(), l3.to_bits(), "{what}: loss depends on scratch");
+        assert_eq!(b1, bits(&g), "{what}: grad depends on scratch instance");
+    }
+}
+
+#[test]
+fn prop_local_grad_bitwise_deterministic() {
+    check_bitwise_determinism(&logistic_problem(51), "logistic");
+    check_bitwise_determinism(&mlp_problem(52), "mlp");
+    check_bitwise_determinism(&cnn_problem(53), "cnn");
+    check_bitwise_determinism(&lm_problem(54), "softmax_lm");
+}
+
+/// Full-session determinism across engine thread counts on a batched
+/// (MLP) problem: per-round losses, total bits, and the final model are
+/// bit-identical for threads ∈ {1, 2, 7}.
+#[test]
+fn prop_trace_bitwise_identical_across_threads() {
+    let cfg = |threads: usize| RunConfig {
+        alpha: 0.3,
+        beta: 0.25,
+        rounds: 12,
+        eval_every: 0,
+        seed: 9,
+        threads,
+        ..RunConfig::default()
+    };
+    let problem = Arc::new(mlp_problem(61));
+    let run = |threads: usize| {
+        let mut s = Session::builder(problem.clone(), Arc::new(Aquila::new(0.25)))
+            .config(cfg(threads))
+            .build();
+        let trace = s.run();
+        let theta: Vec<u32> = s.theta().iter().map(|x| x.to_bits()).collect();
+        (trace, theta)
+    };
+    let (t1, theta1) = run(1);
+    for threads in [2usize, 7] {
+        let (t, theta) = run(threads);
+        assert_eq!(t1.total_bits(), t.total_bits(), "t={threads}");
+        for (a, b) in t1.rounds.iter().zip(&t.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "t={threads} round {}",
+                a.round
+            );
+        }
+        assert_eq!(theta1, theta, "t={threads}: θ diverged bitwise");
+    }
+}

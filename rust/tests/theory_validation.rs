@@ -223,13 +223,14 @@ fn corollary1_average_gradient_bound() {
     let mut f1 = None;
     let mut theta_diff01 = 0.0f64;
     let mut prev_theta = coord.theta().to_vec();
+    let mut ws = p.make_scratch();
     for k in 0..150 {
         // Global gradient at θᵏ before the round.
         let theta = coord.theta().to_vec();
         let mut g = vec![0.0f32; p.dim()];
         let mut total = vec![0.0f32; p.dim()];
         for dev in 0..p.num_devices() {
-            p.local_grad(dev, &theta, &mut g);
+            p.local_grad(dev, &theta, &mut g, &mut ws);
             aquila::util::vecmath::axpy(1.0 / p.num_devices() as f32, &g, &mut total);
         }
         if k >= 1 {
