@@ -1,0 +1,118 @@
+//! Transport-layer benchmarks: scenario simulation cost on the round
+//! path.
+//!
+//! The zero-copy fold (§Perf in DESIGN.md) made the server side cheap;
+//! this bench shows the `transport::scenario` subsystem (per-device
+//! links, deadline window, jitter, round-keyed fault stream) adds
+//! negligible overhead on top of it: channel transmit is measured over
+//! the ideal network vs a hostile cellular scenario, and the combined
+//! transmit→fold path is measured against the fold alone. Cases:
+//!
+//! * `transmit_ideal` — byte counting only (the pre-scenario path).
+//! * `transmit_cellular` — full simulation: link lookup, jittered
+//!   transfer times, deadline window, fault coin per upload.
+//! * `fold_only` / `transmit+fold_cellular` — the scenario's marginal
+//!   cost relative to the real per-round server work.
+
+use aquila::algorithms::ServerAgg;
+use aquila::benchkit::{black_box, Bench};
+use aquila::hetero::CapacityMask;
+use aquila::quant::midtread::quantize;
+use aquila::transport::scenario::NetworkSpec;
+use aquila::transport::wire::{upload_refs, EncodedUpload, Payload};
+use aquila::transport::{Channel, FaultSpec};
+use aquila::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let d = 262_144usize;
+    let m = 32usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+
+    // One 4-bit innovation payload per device, pre-encoded to wire
+    // bytes (what the device phase stages).
+    let staged: Vec<EncodedUpload> = (0..m)
+        .map(|dev| {
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            EncodedUpload::encode(dev, &Payload::MidtreadDelta(quantize(&v, 4)))
+        })
+        .collect();
+    let participants: Vec<usize> = (0..m).collect();
+    let model_bits = d as u64 * 32;
+
+    // Ideal network: byte counting only.
+    let mut ch_ideal = Channel::reliable();
+    let mut round = 0usize;
+    let ideal_mean = bench
+        .bench_throughput(&format!("transmit_ideal d=256k M={m} b=4"), (d * m) as u64, || {
+            let ups = upload_refs(black_box(&staged));
+            let (del, stats) = ch_ideal.transmit(round, &participants, model_bits, ups);
+            assert_eq!(del.len(), m, "ideal reliable channel delivers everything");
+            black_box(stats);
+            round += 1;
+        })
+        .mean;
+
+    // Hostile scenario: heterogeneous cellular links, finite deadline,
+    // jitter, and a 5% fault stream — the full simulation cost.
+    let spec = NetworkSpec::parse("cellular:deadline=2,policy=late,jitter=0.1")
+        .expect("bench spec is valid");
+    let mut ch_cell = Channel::with_scenario(
+        FaultSpec {
+            drop_prob: 0.05,
+            seed: 3,
+        },
+        spec.build(m, 7),
+    );
+    let mut round = 0usize;
+    let cell_mean = bench
+        .bench_throughput(
+            &format!("transmit_cellular+deadline+jitter d=256k M={m}"),
+            (d * m) as u64,
+            || {
+                let ups = upload_refs(black_box(&staged));
+                let (del, stats) = ch_cell.transmit(round, &participants, model_bits, ups);
+                black_box((del.len(), stats));
+                round += 1;
+            },
+        )
+        .mean;
+
+    // The real per-round server work, for scale: zero-copy fold alone,
+    // then transmit + fold with the scenario on.
+    let full = Arc::new(CapacityMask::full(d));
+    let masks: Vec<_> = (0..m).map(|_| full.clone()).collect();
+    let scale = 1.0 / m as f32;
+    let mut srv = ServerAgg::new(d, masks.clone());
+    let uploads = upload_refs(&staged);
+    let fold_mean = bench
+        .bench_throughput(&format!("fold_only d=256k M={m} b=4"), (d * m) as u64, || {
+            srv.accumulate(black_box(&uploads), scale);
+            black_box(&srv.direction);
+        })
+        .mean;
+    let mut srv2 = ServerAgg::new(d, masks);
+    let mut ch2 = Channel::with_scenario(FaultSpec::none(), spec.build(m, 7));
+    let mut round = 0usize;
+    let both_mean = bench
+        .bench_throughput(
+            &format!("transmit+fold_cellular d=256k M={m}"),
+            (d * m) as u64,
+            || {
+                let ups = upload_refs(black_box(&staged));
+                let (del, _) = ch2.transmit(round, &participants, model_bits, ups);
+                srv2.accumulate(&del, scale);
+                black_box(&srv2.direction);
+                round += 1;
+            },
+        )
+        .mean;
+
+    println!(
+        "scenario transmit vs ideal transmit: {:.2}x; transmit+fold vs fold alone: {:.3}x",
+        cell_mean.as_secs_f64() / ideal_mean.as_secs_f64().max(1e-12),
+        both_mean.as_secs_f64() / fold_mean.as_secs_f64().max(1e-12),
+    );
+    bench.finish();
+}

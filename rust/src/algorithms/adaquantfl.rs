@@ -25,6 +25,7 @@ pub struct AdaQuantFl {
 }
 
 impl AdaQuantFl {
+    /// AdaQuantFL starting at level `b0`, capped at `cap`.
     pub fn new(b0: u8, cap: u8) -> Self {
         assert!(b0 >= 1 && cap >= b0);
         Self { b0, cap }

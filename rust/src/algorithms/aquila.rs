@@ -38,6 +38,7 @@ pub struct Aquila {
 }
 
 impl Aquila {
+    /// AQUILA with tuning factor `β` and the adaptive level rule (eq. 19).
     pub fn new(beta: f32) -> Self {
         Self {
             fixed_level: None,

@@ -30,10 +30,12 @@ pub struct DAdaQuant {
 }
 
 impl DAdaQuant {
+    /// DAdaQuant with explicit per-device shard weights.
     pub fn new(weights: Vec<f64>, cap: u8) -> Self {
         Self { weights, cap }
     }
 
+    /// DAdaQuant with uniform shard weights.
     pub fn uniform(cap: u8) -> Self {
         Self {
             weights: Vec::new(),

@@ -21,12 +21,14 @@ use crate::util::vecmath::innovation_norms;
 pub struct LAdaQ {
     /// AdaQuantFL initial level `b₀` and cap.
     pub b0: u8,
+    /// AdaQuantFL level cap.
     pub cap: u8,
     /// Inner LAQ (provides the skip threshold).
     laq: Laq,
 }
 
 impl LAdaQ {
+    /// LAdaQ from AdaQuantFL level parameters and LAQ skip parameters.
     pub fn new(b0: u8, cap: u8, xi: f64, memory: usize) -> Self {
         Self {
             b0,

@@ -34,6 +34,7 @@ pub struct Laq {
 }
 
 impl Laq {
+    /// LAQ at fixed `bits` with skip threshold factor `ξ` over `memory` rounds.
     pub fn new(bits: u8, xi: f64, memory: usize) -> Self {
         assert!((1..=32).contains(&bits));
         assert!(memory >= 1);

@@ -28,6 +28,7 @@ pub struct Lena {
 }
 
 impl Lena {
+    /// LENA with trigger threshold factor `ξ` over `memory` rounds.
     pub fn new(xi: f64, memory: usize) -> Self {
         assert!(memory >= 1);
         Self { xi, memory }

@@ -26,6 +26,7 @@ pub struct Marina {
 }
 
 impl Marina {
+    /// MARINA at `bits` with synchronization probability `p_sync`.
     pub fn new(bits: u8, p_sync: f64) -> Self {
         assert!((1..=32).contains(&bits));
         assert!((0.0..=1.0).contains(&p_sync));

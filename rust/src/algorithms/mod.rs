@@ -108,6 +108,7 @@ impl RoundCtx {
 /// (mask-support) coordinate space of size `mask.support()`.
 #[derive(Clone, Debug)]
 pub struct DeviceState {
+    /// Device index `m`.
     pub id: usize,
     /// The algorithm's reference vector: the stored quantized gradient
     /// `q_m^{k−1}` (mid-tread lazy family), the last *uploaded* gradient
@@ -129,13 +130,16 @@ pub struct DeviceState {
     pub raw: Vec<f32>,
     /// Device-local RNG stream (stochastic quantizers).
     pub rng: Xoshiro256pp,
+    /// Rounds in which this device uploaded a payload.
     pub uploads: u64,
+    /// Rounds in which this device participated but skipped.
     pub skips: u64,
     /// HeteroFL capacity mask.
     pub mask: Arc<CapacityMask>,
 }
 
 impl DeviceState {
+    /// Fresh device state (zero reference vector, device-keyed RNG stream).
     pub fn new(id: usize, mask: Arc<CapacityMask>, seed: u64) -> Self {
         let support = mask.support();
         Self {
@@ -188,6 +192,7 @@ pub struct ClientUpload {
 }
 
 impl ClientUpload {
+    /// Skip this round without reporting a level.
     pub fn skip() -> Self {
         Self {
             payload: None,
@@ -195,6 +200,7 @@ impl ClientUpload {
         }
     }
 
+    /// Skip this round but report the level the device computed.
     pub fn skip_at_level(level: u8) -> Self {
         Self {
             payload: None,
@@ -224,6 +230,7 @@ pub struct ServerAgg {
 }
 
 impl ServerAgg {
+    /// Aggregator over `full_dim` coordinates with per-device masks.
     pub fn new(full_dim: usize, masks: Vec<Arc<CapacityMask>>) -> Self {
         let m = masks.len();
         Self {

@@ -13,6 +13,7 @@ pub struct QsgdAlgo {
 }
 
 impl QsgdAlgo {
+    /// QSGD at `bits` magnitude bits per element.
     pub fn new(bits: u8) -> Self {
         assert!((1..=31).contains(&bits));
         Self { bits }

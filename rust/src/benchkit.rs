@@ -24,11 +24,17 @@ pub fn black_box<T>(x: T) -> T {
 /// Statistics for one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Case name.
     pub name: String,
+    /// Number of timed samples collected.
     pub samples: usize,
+    /// Mean sample duration.
     pub mean: Duration,
+    /// Median sample duration.
     pub median: Duration,
+    /// Sample standard deviation.
     pub std_dev: Duration,
+    /// Fastest sample.
     pub min: Duration,
     /// Optional elements-per-iteration for throughput displays.
     pub elements: Option<u64>,
@@ -41,6 +47,7 @@ impl Stats {
             .map(|e| e as f64 / self.mean.as_secs_f64())
     }
 
+    /// One human-readable summary line (mean/median/σ/min + throughput).
     pub fn report(&self) -> String {
         let tp = match self.throughput() {
             Some(t) if t >= 1e9 => format!("  {:>8.2} Gelem/s", t / 1e9),
@@ -75,6 +82,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Runner with the default budgets (shrunk under `AQUILA_BENCH_FAST=1`).
     pub fn new() -> Self {
         // AQUILA_BENCH_FAST=1 shrinks budgets (CI smoke).
         let fast = std::env::var("AQUILA_BENCH_FAST").is_ok();

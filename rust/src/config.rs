@@ -20,6 +20,7 @@ use crate::problems::mlp::MlpProblem;
 use crate::problems::softmax_lm::SoftmaxLmProblem;
 use crate::problems::GradientSource;
 use crate::selection::SelectionSpec;
+use crate::transport::scenario::NetworkSpec;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::toml;
 use std::path::Path;
@@ -38,6 +39,7 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// Parse a dataset name (`cf10`, `cf100`, `wt2` and aliases).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "cf10" | "cifar10" | "cf-10" => Some(Self::Cf10),
@@ -47,6 +49,7 @@ impl DatasetKind {
         }
     }
 
+    /// Row label as printed in the paper's tables.
     pub fn name(&self) -> &'static str {
         match self {
             Self::Cf10 => "CF-10",
@@ -78,6 +81,7 @@ pub enum SplitKind {
 }
 
 impl SplitKind {
+    /// Parse a split name (`iid-100`, `iid`, `non-iid` and aliases).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "iid-100" | "iid-80" | "iid-large" | "iidlarge" => Some(Self::IidLarge),
@@ -87,6 +91,7 @@ impl SplitKind {
         }
     }
 
+    /// Split label as printed in the tables (device-count aware).
     pub fn name(&self, ds: DatasetKind) -> &'static str {
         match (self, ds) {
             (Self::IidLarge, DatasetKind::Wt2) => "IID-80",
@@ -101,14 +106,21 @@ impl SplitKind {
 /// hyperparameters.
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
+    /// Dataset stand-in to run on.
     pub dataset: DatasetKind,
+    /// Data split / system size.
     pub split: SplitKind,
     /// Half the devices at 50% capacity (Table III / Figure 3).
     pub hetero: bool,
+    /// Device count `M`.
     pub devices: usize,
+    /// Communication rounds `K`.
     pub rounds: usize,
+    /// Server learning rate `α`.
     pub alpha: f32,
+    /// AQUILA tuning factor `β` (eq. 8).
     pub beta: f32,
+    /// Base RNG seed (default 2023, the paper's year).
     pub seed: u64,
     /// Scale factor on default dataset sizes (CI/smoke runs use < 1).
     pub data_scale: f64,
@@ -116,12 +128,17 @@ pub struct ExperimentSpec {
     /// `--select` on the CLI; the deprecated `sample_k = K` key maps to
     /// `random-k:K`). Default: full participation.
     pub selection: SelectionSpec,
-    /// DAdaQuant time-adaptive schedule `(b₀, patience, cap)` —
-    /// `dadaquant_b0` / `dadaquant_patience` / `dadaquant_cap` in TOML,
-    /// `--dadaquant-*` on the CLI. Defaults match the paper's baseline
-    /// configuration (2, 3, 16).
+    /// Simulated network scenario (`network = "cellular:deadline=2"`
+    /// in TOML, `--network` on the CLI). Default: the ideal zero-cost
+    /// network.
+    pub network: NetworkSpec,
+    /// DAdaQuant time-adaptive schedule `b₀` — `dadaquant_b0` in TOML,
+    /// `--dadaquant-b0` on the CLI. Defaults (2, 3, 16) match the
+    /// paper's baseline configuration.
     pub dadaquant_b0: u8,
+    /// DAdaQuant schedule patience (`dadaquant_patience`).
     pub dadaquant_patience: u32,
+    /// DAdaQuant schedule level cap (`dadaquant_cap`).
     pub dadaquant_cap: u8,
 }
 
@@ -135,6 +152,8 @@ impl ExperimentSpec {
         }
     }
 
+    /// The paper's default cell for `dataset × split` (devices, rounds,
+    /// α, β per Section V).
     pub fn new(dataset: DatasetKind, split: SplitKind, hetero: bool) -> Self {
         let devices = Self::default_devices(dataset, split);
         Self {
@@ -151,6 +170,7 @@ impl ExperimentSpec {
             seed: 2023,
             data_scale: 1.0,
             selection: SelectionSpec::Full,
+            network: NetworkSpec::default(),
             dadaquant_b0: 2,
             dadaquant_patience: 3,
             dadaquant_cap: 16,
@@ -181,6 +201,7 @@ impl ExperimentSpec {
             dadaquant_b0: self.dadaquant_b0,
             dadaquant_patience: self.dadaquant_patience,
             dadaquant_cap: self.dadaquant_cap,
+            network: self.network.clone(),
             ..RunConfig::default()
         }
     }
@@ -298,6 +319,14 @@ impl ExperimentSpec {
         if let Some(v) = get("selection").and_then(|v| v.as_str()) {
             self.selection = SelectionSpec::parse(v).ok_or_else(|| {
                 anyhow::anyhow!("unknown selection spec '{v}' (try: {})", SelectionSpec::SYNTAX)
+            })?;
+        }
+        // Like `selection`, a bad network spec is a hard error —
+        // silently running the ideal network instead of the intended
+        // scenario would produce a mislabeled time-to-accuracy trace.
+        if let Some(v) = get("network").and_then(|v| v.as_str()) {
+            self.network = NetworkSpec::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown network spec '{v}' (try: {})", NetworkSpec::SYNTAX)
             })?;
         }
         Ok(())
@@ -429,6 +458,25 @@ mod tests {
 
         // An unknown spec is a hard error, not a silent full-cohort run.
         let map = toml::parse("[experiment]\nselection = \"random-k\"\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+    }
+
+    #[test]
+    fn toml_network_overrides() {
+        use crate::transport::scenario::{LinkPreset, StragglerPolicy};
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        assert!(spec.network.is_ideal());
+        let text = "[experiment]\nnetwork = \"cellular:deadline=2,policy=late\"\n";
+        let map = toml::parse(text).unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.network.preset, LinkPreset::Cellular);
+        assert_eq!(spec.network.deadline_s, 2.0);
+        assert_eq!(spec.network.policy, StragglerPolicy::AdmitLate);
+        // The spec flows into the run config.
+        assert_eq!(spec.run_config().network, spec.network);
+        // An unknown network spec is a hard error, not a silent ideal
+        // network.
+        let map = toml::parse("[experiment]\nnetwork = \"tachyon\"\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
     }
 

@@ -13,8 +13,11 @@
 //! and per-device last-loss estimates to the header, so loss-driven
 //! selection strategies (`loss-weighted`) resume on the same
 //! information the uninterrupted run had; v1/v2 checkpoints still load
-//! (with those histories empty). Written atomically (temp file +
-//! rename).
+//! (with those histories empty). Version **4** adds the simulated
+//! network accounting (cumulative `sim_time`, downlink bits, straggler
+//! count) so time-to-accuracy curves continue correctly across a
+//! resume; older versions load with those counters at zero. Written
+//! atomically (temp file + rename).
 
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
@@ -60,13 +63,20 @@ pub struct Checkpoint {
     pub device_last_loss: Vec<f64>,
     /// Cumulative uplink bits.
     pub cum_bits: u64,
-    /// Loss estimates.
+    /// Cumulative downlink (broadcast) bits (v4+; 0 for older).
+    pub bits_down: u64,
+    /// Cumulative simulated wall-clock seconds (v4+; 0 for older).
+    pub sim_time: f64,
+    /// Cumulative straggler count (v4+; 0 for older).
+    pub stragglers: u64,
+    /// `f(θ⁰)` estimate (NaN before any participant-bearing round).
     pub init_loss: f64,
+    /// `f(θ^{k−1})` estimate (NaN before any participant-bearing round).
     pub prev_loss: f64,
 }
 
 /// Current format version.
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
 
 /// Bytes of one serialized RNG record: 4×u64 state + present flag +
 /// gauss flag + gauss f64.
@@ -128,6 +138,9 @@ impl Checkpoint {
                 Json::Arr(self.device_last_loss.iter().map(|&l| loss(l)).collect()),
             ),
             ("cum_bits", Json::Num(self.cum_bits as f64)),
+            ("bits_down", Json::Num(self.bits_down as f64)),
+            ("sim_time", Json::Num(self.sim_time)),
+            ("stragglers", Json::Num(self.stragglers as f64)),
             ("init_loss", loss(self.init_loss)),
             ("prev_loss", loss(self.prev_loss)),
         ]);
@@ -257,6 +270,10 @@ impl Checkpoint {
                 .map(|v| v.as_f64().unwrap_or(f64::NAN))
                 .collect(),
             cum_bits: header.get("cum_bits").as_f64().unwrap_or(0.0) as u64,
+            // v4 network accounting; absent (zero) in older headers.
+            bits_down: header.get("bits_down").as_f64().unwrap_or(0.0) as u64,
+            sim_time: header.get("sim_time").as_f64().unwrap_or(0.0),
+            stragglers: header.get("stragglers").as_f64().unwrap_or(0.0) as u64,
             init_loss: header.get("init_loss").as_f64().unwrap_or(f64::NAN),
             prev_loss: header.get("prev_loss").as_f64().unwrap_or(f64::NAN),
         })
@@ -351,6 +368,9 @@ mod tests {
             loss_history: vec![0.8, 0.9, 1.1],
             device_last_loss: vec![0.7, f64::NAN],
             cum_bits: 123_456,
+            bits_down: 654_321,
+            sim_time: 12.5,
+            stragglers: 3,
             init_loss: 2.5,
             prev_loss: 0.75,
         }

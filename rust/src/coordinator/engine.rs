@@ -11,6 +11,7 @@ use crate::metrics::RoundRecord;
 use crate::problems::{GradScratch, GradientSource};
 use crate::quant::levels::DadaquantSchedule;
 use crate::selection::{DeviceView, Selection, SelectionStrategy, SelectionView};
+use crate::transport::scenario::NetworkScenario;
 use crate::transport::wire::{self, UploadRef};
 use crate::transport::Channel;
 use crate::util::pool::parallel_for_each_mut;
@@ -66,6 +67,15 @@ pub struct RoundEngine {
     dadaquant: DadaquantSchedule,
     threads: usize,
     cum_bits: u64,
+    /// Cumulative downlink (broadcast) bits.
+    cum_bits_down: u64,
+    /// Cumulative simulated wall-clock seconds.
+    cum_sim_time: f64,
+    /// Cumulative deadline-missing uploads.
+    cum_stragglers: u64,
+    /// Recycled buffer of this round's participant device ids
+    /// (downlink billing + per-device link lookup in the channel).
+    participant_buf: Vec<usize>,
 }
 
 impl RoundEngine {
@@ -104,12 +114,16 @@ impl RoundEngine {
         };
         let mut server = ServerAgg::new(d, masks);
         server.set_threads(threads);
+        // Per-device links are drawn from the run seed, so the fleet —
+        // like every other stochastic component — is reproducible.
+        let channel =
+            Channel::with_scenario(cfg.faults.clone(), cfg.network.build(m, cfg.seed));
         Self {
             server,
             slots,
             prev_theta: theta.clone(),
             theta,
-            channel: Channel::new(cfg.faults.clone()),
+            channel,
             diff_history: RecentWindow::new(cfg.history_depth),
             loss_history: RecentWindow::new(cfg.history_depth),
             ctx_diff_buf: Vec::with_capacity(cfg.history_depth + 1),
@@ -125,6 +139,10 @@ impl RoundEngine {
             threads,
             cfg,
             cum_bits: 0,
+            cum_bits_down: 0,
+            cum_sim_time: 0.0,
+            cum_stragglers: 0,
+            participant_buf: Vec::with_capacity(m),
         }
     }
 
@@ -142,6 +160,27 @@ impl RoundEngine {
     /// unlike the channel's own since-construction counter).
     pub fn total_bits(&self) -> u64 {
         self.cum_bits
+    }
+
+    /// Cumulative downlink (broadcast) bits so far.
+    pub fn total_bits_down(&self) -> u64 {
+        self.cum_bits_down
+    }
+
+    /// Cumulative simulated wall-clock seconds so far (0 over the
+    /// ideal network).
+    pub fn total_sim_time(&self) -> f64 {
+        self.cum_sim_time
+    }
+
+    /// Cumulative deadline-missing uploads so far.
+    pub fn total_stragglers(&self) -> u64 {
+        self.cum_stragglers
+    }
+
+    /// The simulated network scenario this engine runs over.
+    pub fn network(&self) -> &NetworkScenario {
+        self.channel.scenario()
     }
 
     /// Per-device upload/skip counters.
@@ -238,7 +277,20 @@ impl RoundEngine {
 
         // ---- transport phase ------------------------------------------
         // Uploads stay as wire bytes end to end: the channel bills and
-        // optionally drops them, the fold reads them zero-copy.
+        // optionally drops them, the fold reads them zero-copy. The
+        // channel also simulates the round's network weather: broadcast
+        // time to every participant, per-device transfer times, and the
+        // deadline window (DESIGN.md §Network).
+        let mut participant_ids = std::mem::take(&mut self.participant_buf);
+        participant_ids.clear();
+        participant_ids.extend(
+            self.slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.participated)
+                .map(|(i, _)| i),
+        );
+        let model_bits = self.theta.len() as u64 * 32;
         let staged: Vec<UploadRef<'_>> = self
             .slots
             .iter()
@@ -249,7 +301,10 @@ impl RoundEngine {
             })
             .collect();
         let upload_count = staged.len();
-        let (delivered, stats) = self.channel.transmit(staged);
+        let (delivered, stats) =
+            self.channel
+                .transmit(round, &participant_ids, model_bits, staged);
+        self.participant_buf = participant_ids;
 
         // ---- server phase ---------------------------------------------
         algo.server_fold(&mut self.server, &delivered, &ctx);
@@ -260,12 +315,19 @@ impl RoundEngine {
         self.diff_history.push(diff);
 
         // ---- metrics ----------------------------------------------------
-        let participants: Vec<&DeviceSlot> =
-            self.slots.iter().filter(|s| s.participated).collect();
-        let train_loss = if participants.is_empty() {
+        // `participant_buf` (ascending device order — the same order
+        // the old filter pass visited) already names this round's
+        // participants; reuse it rather than re-scanning the slots.
+        let participant_count = self.participant_buf.len();
+        let train_loss = if participant_count == 0 {
             self.prev_loss
         } else {
-            participants.iter().map(|s| s.loss).sum::<f64>() / participants.len() as f64
+            let sum: f64 = self
+                .participant_buf
+                .iter()
+                .map(|&i| self.slots[i].loss)
+                .sum();
+            sum / participant_count as f64
         };
         // First *observed* loss anchors f(θ⁰): with sparse selection
         // (availability schedules) round 0 may have no participants,
@@ -287,6 +349,9 @@ impl RoundEngine {
             levels.iter().map(|&b| b as f64).sum::<f64>() / levels.len() as f64
         };
         self.cum_bits += stats.uplink_bits;
+        self.cum_bits_down += stats.downlink_bits;
+        self.cum_sim_time += stats.round_time;
+        self.cum_stragglers += stats.stragglers;
         for (view, slot) in self.device_views.iter_mut().zip(&self.slots) {
             view.uploads = slot.state.uploads;
             view.skips = slot.state.skips;
@@ -309,12 +374,16 @@ impl RoundEngine {
             bits_up: stats.uplink_bits,
             cum_bits: self.cum_bits,
             uploads: upload_count,
-            skips: participants.len().saturating_sub(upload_count),
+            skips: participant_count.saturating_sub(upload_count),
             mean_level,
             train_loss,
             eval_loss,
             accuracy,
             perplexity,
+            stragglers: stats.stragglers as usize,
+            bits_down: stats.downlink_bits,
+            round_time: stats.round_time,
+            sim_time: self.cum_sim_time,
         }
     }
 
@@ -347,6 +416,9 @@ impl RoundEngine {
                 .map(|v| v.last_loss.unwrap_or(f64::NAN))
                 .collect(),
             cum_bits: self.cum_bits,
+            bits_down: self.cum_bits_down,
+            sim_time: self.cum_sim_time,
+            stragglers: self.cum_stragglers,
             init_loss: self.init_loss,
             prev_loss: self.prev_loss,
         }
@@ -411,6 +483,9 @@ impl RoundEngine {
         self.diff_history.assign(&ckpt.diff_history);
         self.loss_history.assign(&ckpt.loss_history);
         self.cum_bits = ckpt.cum_bits;
+        self.cum_bits_down = ckpt.bits_down;
+        self.cum_sim_time = ckpt.sim_time;
+        self.cum_stragglers = ckpt.stragglers;
         self.init_loss = ckpt.init_loss;
         self.prev_loss = ckpt.prev_loss;
         Ok(ckpt.round)

@@ -11,10 +11,13 @@
 //! 3. every *selected* device computes its full-batch local gradient
 //!    `∇f_m(θᵏ)` (in parallel across a thread pool), gathers it through
 //!    its HeteroFL capacity mask, and runs the algorithm's client step;
-//! 4. uploads cross the byte-counting channel (with optional fault
-//!    injection) and are decoded server-side; the algorithm's server
-//!    fold produces the step direction and the server updates
-//!    `θ^{k+1} = θᵏ − α·direction` (eq. 5 / Algorithm 1 line 14);
+//! 4. uploads cross the byte-counting channel — which also simulates
+//!    the configured network scenario: per-device link transfer times,
+//!    the round deadline's straggler window, availability traces, and
+//!    optional fault injection (`crate::transport::scenario`) — and the
+//!    algorithm's server fold produces the step direction; the server
+//!    updates `θ^{k+1} = θᵏ − α·direction` (eq. 5 / Algorithm 1
+//!    line 14);
 //! 5. metrics are recorded and streamed to every attached
 //!    [`crate::metrics::observer::RoundObserver`].
 //!
@@ -34,6 +37,7 @@ use crate::hetero::CapacityMask;
 use crate::metrics::{RoundRecord, RunTrace};
 use crate::problems::GradientSource;
 use crate::selection::{FullParticipation, RandomK, SelectionStrategy};
+use crate::transport::scenario::NetworkSpec;
 use crate::transport::FaultSpec;
 use checkpoint::Checkpoint;
 use engine::RoundEngine;
@@ -74,6 +78,10 @@ pub struct RunConfig {
     pub history_depth: usize,
     /// Uplink fault injection.
     pub faults: FaultSpec,
+    /// Simulated network scenario (per-device links, round deadline,
+    /// availability trace). Default: the ideal zero-cost network —
+    /// `sim_time` stays 0 and no upload ever straggles.
+    pub network: NetworkSpec,
 }
 
 impl Default for RunConfig {
@@ -92,6 +100,7 @@ impl Default for RunConfig {
             sample_k: None,
             history_depth: 10,
             faults: FaultSpec::none(),
+            network: NetworkSpec::default(),
         }
     }
 }
@@ -386,7 +395,7 @@ mod tests {
         let path = dir.join("t.ckpt");
         ckpt.save(&path).unwrap();
         let loaded = Checkpoint::load(&path).unwrap();
-        assert_eq!(loaded.version, 2);
+        assert_eq!(loaded.version, checkpoint::VERSION);
         assert_eq!(loaded.device_rng.len(), 5);
         let mut second = session(&p, algo, quick_cfg(16));
         let next = second.restore(&loaded).unwrap();

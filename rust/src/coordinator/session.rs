@@ -44,6 +44,8 @@ pub struct SessionBuilder {
 }
 
 impl SessionBuilder {
+    /// Builder with default config, full capacity, full participation,
+    /// and no observers.
     pub fn new(problem: Arc<dyn GradientSource>, algo: Arc<dyn Algorithm>) -> Self {
         Self {
             problem,
@@ -157,6 +159,22 @@ impl Session {
     /// Cumulative uplink bits so far.
     pub fn total_bits(&self) -> u64 {
         self.engine.total_bits()
+    }
+
+    /// Cumulative downlink (broadcast) bits so far.
+    pub fn total_bits_down(&self) -> u64 {
+        self.engine.total_bits_down()
+    }
+
+    /// Cumulative simulated wall-clock seconds so far (0 over the
+    /// ideal network).
+    pub fn total_sim_time(&self) -> f64 {
+        self.engine.total_sim_time()
+    }
+
+    /// The simulated network scenario this session runs over.
+    pub fn network(&self) -> &crate::transport::scenario::NetworkScenario {
+        self.engine.network()
     }
 
     /// Per-device upload/skip counters.

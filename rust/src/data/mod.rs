@@ -20,15 +20,19 @@ pub struct ClassificationDataset {
     pub features: Vec<f32>,
     /// `n` labels in `[0, num_classes)`.
     pub labels: Vec<usize>,
+    /// Feature dimension.
     pub dim: usize,
+    /// Number of label classes.
     pub num_classes: usize,
 }
 
 impl ClassificationDataset {
+    /// Sample count `n`.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
@@ -59,15 +63,19 @@ impl ClassificationDataset {
 /// A token-stream dataset for next-token language modelling.
 #[derive(Clone, Debug)]
 pub struct TokenDataset {
+    /// The token stream.
     pub tokens: Vec<u16>,
+    /// Vocabulary size `V`.
     pub vocab: usize,
 }
 
 impl TokenDataset {
+    /// Token count.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
 
+    /// True when the stream holds no tokens.
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }

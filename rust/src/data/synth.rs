@@ -12,7 +12,9 @@ use crate::util::rng::Xoshiro256pp;
 /// Configuration for [`gaussian_mixture`].
 #[derive(Clone, Debug)]
 pub struct MixtureSpec {
+    /// Number of mixture components / label classes.
     pub num_classes: usize,
+    /// Feature dimension.
     pub dim: usize,
     /// Total sample count (split evenly over classes, remainder to the
     /// first classes).
@@ -21,6 +23,7 @@ pub struct MixtureSpec {
     pub separation: f32,
     /// Within-class noise std.
     pub noise: f32,
+    /// Generator seed.
     pub seed: u64,
 }
 

@@ -21,10 +21,13 @@ pub struct CorpusSpec {
     /// `peakedness · N(0,1)` logits; larger = lower-entropy = lower
     /// achievable perplexity.
     pub peakedness: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 
 impl CorpusSpec {
+    /// WikiText-2-like stand-in: 64-token vocab, peakedness tuned for a
+    /// perplexity band comparable to the paper's WT-2 rows.
     pub fn wikitext2_like(length: usize, seed: u64) -> Self {
         Self {
             vocab: 64,
@@ -38,12 +41,15 @@ impl CorpusSpec {
 /// The generator: transition matrix + sampling state.
 #[derive(Clone, Debug)]
 pub struct MarkovChain {
+    /// Vocabulary size `V`.
     pub vocab: usize,
     /// Row-major `V × V` transition probabilities.
     pub trans: Vec<f64>,
 }
 
 impl MarkovChain {
+    /// Build the chain's transition matrix from `spec` (deterministic in
+    /// `spec.seed`).
     pub fn from_spec(spec: &CorpusSpec) -> Self {
         assert!(spec.vocab >= 2 && spec.vocab <= u16::MAX as usize + 1);
         let v = spec.vocab;

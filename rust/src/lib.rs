@@ -21,8 +21,10 @@
 //!   [`quant::midtread`] on the Rust hot path.
 //!
 //! See `DESIGN.md` for the architecture (Session/SelectionStrategy/
-//! RoundObserver layering in §2) and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! RoundObserver layering in §2, the network scenario model in
+//! §Network) and `EXPERIMENTS.md` for the paper-vs-measured record.
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod benchkit;

@@ -6,7 +6,7 @@
 //! repro fig2   [--out DIR]                            Figure 2 series (CSV)
 //! repro fig3   [--out DIR]                            Figure 3 series (CSV)
 //! repro ablation-beta [--dataset D]                   Figures 4–5 β sweep
-//! repro run --config FILE [--algo NAME] [--select SPEC]
+//! repro run --config FILE [--algo NAME] [--select SPEC] [--network SPEC]
 //!           [--dadaquant-b0 B] [--dadaquant-patience P] [--dadaquant-cap C]
 //!           [--out FILE.csv] [--jsonl FILE.jsonl]     single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
@@ -19,6 +19,7 @@ use aquila::metrics::bits_display;
 use aquila::metrics::observer::{CsvStream, JsonLines};
 use aquila::repro;
 use aquila::selection::SelectionSpec;
+use aquila::transport::scenario::NetworkSpec;
 use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
@@ -196,6 +197,15 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
+    if let Some(s) = args.flags.get("network") {
+        match NetworkSpec::parse(s) {
+            Some(net) => spec.network = net,
+            None => {
+                eprintln!("unknown network spec '{s}' (try: {})", NetworkSpec::SYNTAX);
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     // DAdaQuant schedule overrides (`dadaquant_*` TOML keys have the
     // same effect; the CLI wins).
     if let Some(v) = args.flags.get("dadaquant-b0") {
@@ -235,7 +245,7 @@ fn cmd_run(args: &Args) -> ExitCode {
         return ExitCode::FAILURE;
     };
     println!(
-        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={})",
+        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={})",
         algo.name(),
         spec.row_label(),
         spec.devices,
@@ -243,6 +253,7 @@ fn cmd_run(args: &Args) -> ExitCode {
         spec.alpha,
         spec.beta,
         spec.selection,
+        spec.network,
     );
     // Streaming sinks: rounds hit the files as they complete.
     let mut builder = repro::session_for(&spec, algo);
@@ -319,6 +330,10 @@ fn cmd_list() {
         "selection strategies (--select / selection = \"...\"): {}",
         SelectionSpec::SYNTAX
     );
+    println!(
+        "network scenarios (--network / network = \"...\"): {}",
+        NetworkSpec::SYNTAX
+    );
 }
 
 fn main() -> ExitCode {
@@ -336,8 +351,9 @@ fn main() -> ExitCode {
             println!("AQUILA reproduction CLI — commands:");
             println!("  table2 | table3 | fig2 | fig3 | ablation-beta | run | theory | list");
             println!("  common flags: --scale S --rounds N --seed K --out DIR");
-            println!("  run flags: --config FILE --algo NAME --select SPEC --jsonl FILE");
-            println!("             --dadaquant-b0 B --dadaquant-patience P --dadaquant-cap C");
+            println!("  run flags: --config FILE --algo NAME --select SPEC --network SPEC");
+            println!("             --jsonl FILE --dadaquant-b0 B --dadaquant-patience P");
+            println!("             --dadaquant-cap C");
         }
     }
     ExitCode::SUCCESS

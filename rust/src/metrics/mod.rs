@@ -11,9 +11,10 @@ use std::io::Write;
 use std::path::Path;
 
 /// One communication round's record (one point of the Figure 2/3
-//  series).
+/// series).
 #[derive(Clone, Debug, Default)]
 pub struct RoundRecord {
+    /// Communication round index (0-based).
     pub round: usize,
     /// Uplink bits this round (actual serialized bytes × 8).
     pub bits_up: u64,
@@ -27,22 +28,35 @@ pub struct RoundRecord {
     pub mean_level: f64,
     /// Global training loss `f(θᵏ)` (average of local losses).
     pub train_loss: f64,
-    /// Held-out metrics (sampled every `eval_every` rounds; `None`
+    /// Held-out loss (sampled every `eval_every` rounds; `None`
     /// between evaluations).
     pub eval_loss: Option<f64>,
+    /// Held-out accuracy (classification problems; same cadence).
     pub accuracy: Option<f64>,
+    /// Held-out perplexity (LM problems; same cadence).
     pub perplexity: Option<f64>,
+    /// Uploads that missed the round deadline this round (simulated
+    /// network scenarios; 0 over the ideal network).
+    pub stragglers: usize,
+    /// Downlink broadcast bits this round (model bits × participants).
+    pub bits_down: u64,
+    /// Simulated duration of this round in seconds.
+    pub round_time: f64,
+    /// Cumulative simulated wall-clock at the end of this round —
+    /// the x-axis of time-to-accuracy curves
+    /// ([`RunTrace::time_to_loss`]).
+    pub sim_time: f64,
 }
 
 impl RoundRecord {
     /// Column header matching [`RoundRecord::csv_row`].
-    pub const CSV_HEADER: &'static str =
-        "round,bits_up,cum_bits,uploads,skips,mean_level,train_loss,eval_loss,accuracy,perplexity";
+    pub const CSV_HEADER: &'static str = "round,bits_up,cum_bits,uploads,skips,mean_level,\
+         train_loss,eval_loss,accuracy,perplexity,stragglers,bits_down,round_time,sim_time";
 
     /// One CSV line (no trailing newline).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.4},{:.6},{},{},{}",
+            "{},{},{},{},{},{:.4},{:.6},{},{},{},{},{},{:.6},{:.6}",
             self.round,
             self.bits_up,
             self.cum_bits,
@@ -53,6 +67,10 @@ impl RoundRecord {
             self.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
             self.accuracy.map(|v| format!("{v:.6}")).unwrap_or_default(),
             self.perplexity.map(|v| format!("{v:.4}")).unwrap_or_default(),
+            self.stragglers,
+            self.bits_down,
+            self.round_time,
+            self.sim_time,
         )
     }
 
@@ -73,6 +91,10 @@ impl RoundRecord {
             ("eval_loss", opt(self.eval_loss)),
             ("accuracy", opt(self.accuracy)),
             ("perplexity", opt(self.perplexity)),
+            ("stragglers", Json::Num(self.stragglers as f64)),
+            ("bits_down", Json::Num(self.bits_down as f64)),
+            ("round_time", num(self.round_time)),
+            ("sim_time", num(self.sim_time)),
         ])
     }
 }
@@ -80,17 +102,39 @@ impl RoundRecord {
 /// Full trace of a run plus identifying metadata.
 #[derive(Clone, Debug, Default)]
 pub struct RunTrace {
+    /// Algorithm name (as printed in the tables).
     pub algorithm: String,
+    /// Dataset label.
     pub dataset: String,
+    /// Split label.
     pub split: String,
+    /// Per-round records, in round order.
     pub rounds: Vec<RoundRecord>,
 }
 
 impl RunTrace {
+    /// Total uplink bits across the run.
     pub fn total_bits(&self) -> u64 {
         self.rounds.last().map(|r| r.cum_bits).unwrap_or(0)
     }
 
+    /// Total downlink (broadcast) bits across the run.
+    pub fn total_bits_down(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bits_down).sum()
+    }
+
+    /// Total simulated wall-clock of the run in seconds (0 over the
+    /// ideal network).
+    pub fn total_sim_time(&self) -> f64 {
+        self.rounds.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    /// Total deadline-missing uploads across the run.
+    pub fn total_stragglers(&self) -> usize {
+        self.rounds.iter().map(|r| r.stragglers).sum()
+    }
+
+    /// Final training loss `f(θᴷ)`.
     pub fn final_train_loss(&self) -> f64 {
         self.rounds.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
     }
@@ -110,6 +154,7 @@ impl RunTrace {
         self.rounds.iter().map(|r| r.uploads).sum()
     }
 
+    /// Total skip decisions across all rounds/devices.
     pub fn total_skips(&self) -> usize {
         self.rounds.iter().map(|r| r.skips).sum()
     }
@@ -121,6 +166,16 @@ impl RunTrace {
             .iter()
             .find(|r| r.train_loss <= loss)
             .map(|r| r.cum_bits)
+    }
+
+    /// Simulated seconds needed to first reach `loss` — the
+    /// time-to-accuracy companion of [`RunTrace::bits_to_loss`]
+    /// (`None` if never reached; 0 over the ideal network).
+    pub fn time_to_loss(&self, loss: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.train_loss <= loss)
+            .map(|r| r.sim_time)
     }
 
     /// Write the trace as CSV (one row per round).
@@ -144,8 +199,11 @@ impl RunTrace {
             ("split", Json::Str(self.split.clone())),
             ("rounds", Json::Num(self.rounds.len() as f64)),
             ("total_bits", Json::Num(self.total_bits() as f64)),
+            ("total_bits_down", Json::Num(self.total_bits_down() as f64)),
             ("total_uploads", Json::Num(self.total_uploads() as f64)),
             ("total_skips", Json::Num(self.total_skips() as f64)),
+            ("total_stragglers", Json::Num(self.total_stragglers() as f64)),
+            ("sim_time", Json::Num(self.total_sim_time())),
             ("final_train_loss", Json::Num(self.final_train_loss())),
             (
                 "final_accuracy",
@@ -192,6 +250,10 @@ mod tests {
                     eval_loss: Some(2.1),
                     accuracy: Some(0.1),
                     perplexity: None,
+                    stragglers: 1,
+                    bits_down: 400,
+                    round_time: 0.5,
+                    sim_time: 0.5,
                 },
                 RoundRecord {
                     round: 1,
@@ -204,6 +266,10 @@ mod tests {
                     eval_loss: None,
                     accuracy: None,
                     perplexity: None,
+                    stragglers: 0,
+                    bits_down: 200,
+                    round_time: 0.25,
+                    sim_time: 0.75,
                 },
             ],
         }
@@ -219,6 +285,11 @@ mod tests {
         assert_eq!(t.final_accuracy(), Some(0.1)); // last observed
         assert_eq!(t.bits_to_loss(1.5), Some(150));
         assert_eq!(t.bits_to_loss(0.1), None);
+        assert_eq!(t.total_bits_down(), 600);
+        assert_eq!(t.total_stragglers(), 1);
+        assert_eq!(t.total_sim_time(), 0.75);
+        assert_eq!(t.time_to_loss(1.5), Some(0.75));
+        assert_eq!(t.time_to_loss(0.1), None);
     }
 
     #[test]

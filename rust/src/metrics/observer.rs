@@ -16,8 +16,11 @@ use std::sync::{Arc, Mutex};
 /// Run-identifying metadata delivered once at `on_run_start`.
 #[derive(Clone, Debug)]
 pub struct RunMeta {
+    /// Algorithm name.
     pub algorithm: String,
+    /// Dataset label.
     pub dataset: String,
+    /// Split label.
     pub split: String,
     /// Configured horizon `K`.
     pub rounds: usize,
@@ -46,6 +49,7 @@ pub struct TraceCollector {
 }
 
 impl TraceCollector {
+    /// Empty collector.
     pub fn new() -> Self {
         Self::default()
     }
@@ -61,6 +65,7 @@ impl TraceCollector {
         &self.trace
     }
 
+    /// Consume the collector, yielding the trace.
     pub fn into_trace(self) -> RunTrace {
         self.trace
     }
@@ -177,6 +182,7 @@ mod tests {
             eval_loss: None,
             accuracy: Some(0.5),
             perplexity: None,
+            ..RoundRecord::default()
         }
     }
 

@@ -80,6 +80,8 @@ fn im2col(data: &ClassificationDataset, side: usize, ksize: usize) -> Vec<f32> {
 }
 
 impl CnnProblem {
+    /// CNN over square inputs: `channels` conv filters of odd `ksize`,
+    /// 2×2 pooling, linear head; `l2` weight decay.
     pub fn new(
         shards: Vec<ClassificationDataset>,
         test: ClassificationDataset,

@@ -32,6 +32,8 @@ pub struct LogisticProblem {
 }
 
 impl LogisticProblem {
+    /// Multinomial logistic regression over the shards' feature space
+    /// with `l2` weight decay.
     pub fn new(
         shards: Vec<ClassificationDataset>,
         test: ClassificationDataset,

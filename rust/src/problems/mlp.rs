@@ -31,6 +31,7 @@ pub struct MlpProblem {
 }
 
 impl MlpProblem {
+    /// One-hidden-layer MLP (`hidden` tanh units) with `l2` weight decay.
     pub fn new(
         shards: Vec<ClassificationDataset>,
         test: ClassificationDataset,

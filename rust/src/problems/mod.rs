@@ -36,12 +36,14 @@ pub mod softmax_lm;
 /// computed from this.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamLayout {
+    /// Tensors in flat-vector order.
     pub entries: Vec<LayerSpec>,
 }
 
 /// One named tensor inside the flat parameter vector.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerSpec {
+    /// Tensor name (e.g. `w1`, `b1`).
     pub name: String,
     /// Tensor shape; `[rows, cols]` for matrices, `[n]` for vectors.
     pub shape: Vec<usize>,
@@ -50,6 +52,7 @@ pub struct LayerSpec {
 }
 
 impl LayerSpec {
+    /// Element count of this tensor.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }

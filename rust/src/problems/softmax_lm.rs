@@ -59,6 +59,8 @@ pub struct SoftmaxLmProblem {
 }
 
 impl SoftmaxLmProblem {
+    /// Bigram softmax LM over the shards' shared vocabulary with `l2`
+    /// weight decay.
     pub fn new(shards: Vec<TokenDataset>, test: TokenDataset, l2: f32) -> Self {
         assert!(!shards.is_empty());
         let vocab = shards[0].vocab;

@@ -113,6 +113,7 @@ impl DadaquantSchedule {
         self.level
     }
 
+    /// Current level, without observing a new loss.
     pub fn level(&self) -> u8 {
         self.level
     }

@@ -30,6 +30,7 @@ pub struct QsgdVec {
 }
 
 impl QsgdVec {
+    /// Element count `d`.
     pub fn dim(&self) -> usize {
         self.mags.len()
     }
@@ -99,6 +100,7 @@ pub fn dequantize_into(q: &QsgdVec, out: &mut [f32]) {
     }
 }
 
+/// Reconstruct `Q(v)` into a fresh vector (allocating reference path).
 pub fn dequantize(q: &QsgdVec) -> Vec<f32> {
     let mut out = vec![0.0f32; q.dim()];
     dequantize_into(q, &mut out);

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 /// One AOT-compiled model (a `variant` in `python/compile/model.py`).
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Model variant name (e.g. `txf_small`).
     pub name: String,
     /// Flat parameter dimension `d`.
     pub dim: usize,
@@ -23,9 +24,13 @@ pub struct ModelEntry {
     /// range, bits, ‖Δq‖², ‖ε‖²)` — model grad + L1 Pallas quantizer in
     /// one module.
     pub step_file: Option<PathBuf>,
+    /// Batch size the module was lowered at.
     pub batch: usize,
+    /// Sequence length the module was lowered at.
     pub seq: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Flat-parameter layout of the model's tensors.
     pub layout: ParamLayout,
 }
 
@@ -33,16 +38,22 @@ pub struct ModelEntry {
 /// fixed dimension).
 #[derive(Clone, Debug)]
 pub struct KernelEntry {
+    /// Kernel name (e.g. `aquila_quant_d65536`).
     pub name: String,
+    /// Fixed input dimension the kernel was lowered at.
     pub dim: usize,
+    /// HLO text file of the kernel.
     pub file: PathBuf,
 }
 
 /// Parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub root: PathBuf,
+    /// AOT-compiled models.
     pub models: Vec<ModelEntry>,
+    /// AOT-compiled L1 kernels.
     pub kernels: Vec<KernelEntry>,
 }
 
@@ -126,6 +137,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a model by name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .iter()
@@ -138,6 +150,7 @@ impl Manifest {
             })
     }
 
+    /// Look up a kernel by name.
     pub fn kernel(&self, name: &str) -> Result<&KernelEntry> {
         self.kernels
             .iter()

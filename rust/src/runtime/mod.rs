@@ -71,6 +71,7 @@ impl PjrtRuntime {
         Ok(Self { client })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -95,9 +96,13 @@ impl PjrtRuntime {
 /// next-token targets, flattened row-major.
 #[derive(Clone, Debug)]
 pub struct TokenBatch {
+    /// Input tokens, `batch × seq` row-major.
     pub x: Vec<i32>,
+    /// Next-token targets, `batch × seq` row-major.
     pub y: Vec<i32>,
+    /// Batch size.
     pub batch: usize,
+    /// Sequence length.
     pub seq: usize,
 }
 
@@ -244,6 +249,7 @@ impl GradientSource for HloGradientSource {
 /// and the `pjrt` quantization backend.
 pub struct HloQuantKernel {
     exe: HloExecutable,
+    /// Fixed input dimension of the kernel.
     pub dim: usize,
 }
 
@@ -251,14 +257,20 @@ pub struct HloQuantKernel {
 /// `quant::midtread::QuantizeOutcome` + the level decision).
 #[derive(Clone, Debug)]
 pub struct HloQuantResult {
+    /// Dequantized innovation `Δq`.
     pub dq: Vec<f32>,
+    /// Quantization range `R`.
     pub range: f32,
+    /// Selected level `b` (eq. 19).
     pub bits: u8,
+    /// `‖Δq‖²` (skip-rule numerator).
     pub dq_norm_sq: f64,
+    /// `‖ε‖²` quantization error norm.
     pub err_norm_sq: f64,
 }
 
 impl HloQuantKernel {
+    /// Compile the kernel's HLO artifact on `runtime`.
     pub fn load(runtime: &PjrtRuntime, entry: &KernelEntry) -> Result<Self> {
         Ok(Self {
             exe: runtime.load_hlo(&entry.file)?,

@@ -118,6 +118,7 @@ pub struct RandomK {
 }
 
 impl RandomK {
+    /// Uniform `k`-cohorts drawn from round-keyed streams of `seed`.
     pub fn new(k: usize, seed: u64) -> Self {
         assert!(k >= 1, "random-k cohort must be non-empty");
         Self { k, seed }
@@ -146,6 +147,7 @@ pub struct RoundRobin {
 }
 
 impl RoundRobin {
+    /// Rotating `k`-cohorts.
     pub fn new(k: usize) -> Self {
         assert!(k >= 1, "round-robin cohort must be non-empty");
         Self { k }
@@ -177,6 +179,8 @@ pub struct LossWeighted {
 }
 
 impl LossWeighted {
+    /// Loss-proportional `k`-cohorts drawn from round-keyed streams of
+    /// `seed`.
     pub fn new(k: usize, seed: u64) -> Self {
         assert!(k >= 1, "loss-weighted cohort must be non-empty");
         Self { k, seed }
@@ -282,6 +286,7 @@ pub struct AvailabilityAware {
 }
 
 impl AvailabilityAware {
+    /// Availability-gated selection, optionally capped at `cap` devices.
     pub fn new(schedule: AvailabilitySchedule, cap: Option<usize>, seed: u64) -> Self {
         if let Some(k) = cap {
             assert!(k >= 1, "availability cap must be non-empty");
@@ -323,11 +328,16 @@ impl SelectionStrategy for AvailabilityAware {
 /// `--select` CLI flag and the `selection = "..."` TOML key.
 #[derive(Clone, Debug, PartialEq, Eq, Default)]
 pub enum SelectionSpec {
+    /// Every device, every round.
     #[default]
     Full,
+    /// Uniform random `K`-cohort per round.
     RandomK(usize),
+    /// Deterministic rotating `K`-cohort.
     RoundRobin(usize),
+    /// `K`-cohort sampled proportional to last local loss.
     LossWeighted(usize),
+    /// Periodic per-device availability windows, optionally capped.
     Availability {
         period: usize,
         duty: usize,

@@ -6,13 +6,22 @@
 //! aggregation redesign (§Perf in DESIGN.md) the server side no longer
 //! eagerly decodes: the channel validates each upload's wire framing
 //! and hands the *bytes* through; the fold reads them via
-//! [`wire::PayloadView`] without materializing ψ vectors. The channel
-//! also supports failure injection (random device dropout) used by the
-//! robustness tests.
+//! [`wire::PayloadView`] without materializing ψ vectors.
+//!
+//! On top of byte counting the channel simulates the network itself
+//! ([`scenario`]): per-device link models, round deadlines with
+//! straggler semantics, availability traces, downlink (broadcast)
+//! accounting, and failure injection (random device dropout). All
+//! per-round randomness — fault coin flips and transfer jitter — is
+//! drawn from streams keyed by `(seed, round)`, so a checkpoint-resumed
+//! run replays exactly the drops and weather the uninterrupted run
+//! would have seen (see DESIGN.md §Network).
 
+pub mod scenario;
 pub mod wire;
 
 use crate::util::rng::Xoshiro256pp;
+use scenario::{NetworkScenario, StragglerPolicy};
 use wire::UploadRef;
 
 /// Per-round transport statistics.
@@ -20,21 +29,33 @@ use wire::UploadRef;
 pub struct LinkStats {
     /// Uplink payload bits actually transferred this round.
     pub uplink_bits: u64,
+    /// Downlink bits broadcast this round (model bits × participants).
+    pub downlink_bits: u64,
     /// Number of device uploads delivered.
     pub messages: u64,
-    /// Messages lost to injected failures.
+    /// Messages lost in transit: injected failures, unavailability
+    /// windows, and deadline-dropped stragglers.
     pub dropped: u64,
+    /// Uploads whose simulated transfer exceeded the round deadline
+    /// (dropped or admitted late per [`StragglerPolicy`]).
+    pub stragglers: u64,
+    /// Simulated duration of this round in seconds: broadcast time plus
+    /// the (deadline-capped) upload window.
+    pub round_time: f64,
 }
 
-/// Failure-injection model.
+/// Failure-injection model: a uniform per-upload drop probability.
+/// Per-device heterogeneity lives in [`scenario::NetworkSpec`].
 #[derive(Clone, Debug)]
 pub struct FaultSpec {
     /// Probability an upload is lost in transit.
     pub drop_prob: f64,
+    /// Seed of the (round-keyed) fault RNG stream.
     pub seed: u64,
 }
 
 impl FaultSpec {
+    /// No injected failures.
     pub fn none() -> Self {
         Self {
             drop_prob: 0.0,
@@ -43,65 +64,148 @@ impl FaultSpec {
     }
 }
 
-/// The simulated uplink channel: counts real wire bytes, optionally
-/// drops, and validates framing on behalf of the receiver.
+/// The round-keyed fault stream: like the selection streams, a fresh
+/// generator per `(seed, round)` rather than one free-running stream —
+/// the free-running version replayed *different* drops after a
+/// checkpoint resume (the same bug round-keying fixed for stochastic
+/// selection). Round 0 matches the old stream's start exactly.
+fn fault_stream(seed: u64, round: usize) -> Xoshiro256pp {
+    Xoshiro256pp::stream(
+        seed,
+        0xC4A7 ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// The simulated channel: counts real wire bytes both directions,
+/// applies the network scenario (links, deadline, availability),
+/// optionally drops, and validates framing on behalf of the receiver.
 pub struct Channel {
     faults: FaultSpec,
-    rng: Xoshiro256pp,
+    scenario: NetworkScenario,
     /// Cumulative uplink bits since construction.
     pub total_bits: u64,
+    /// Cumulative downlink (broadcast) bits since construction.
+    pub total_bits_down: u64,
     /// Cumulative delivered messages.
     pub total_messages: u64,
-    /// Cumulative drops.
+    /// Cumulative drops (faults + unavailability + dropped stragglers).
     pub total_dropped: u64,
+    /// Cumulative stragglers.
+    pub total_stragglers: u64,
+    /// Cumulative simulated seconds.
+    pub sim_time: f64,
 }
 
 impl Channel {
+    /// Channel with fault injection over the ideal (zero-cost) network.
     pub fn new(faults: FaultSpec) -> Self {
-        let rng = Xoshiro256pp::stream(faults.seed, 0xC4A7);
+        Self::with_scenario(faults, NetworkScenario::ideal())
+    }
+
+    /// Channel with fault injection and a simulated network scenario.
+    pub fn with_scenario(faults: FaultSpec, scenario: NetworkScenario) -> Self {
         Self {
             faults,
-            rng,
+            scenario,
             total_bits: 0,
+            total_bits_down: 0,
             total_messages: 0,
             total_dropped: 0,
+            total_stragglers: 0,
+            sim_time: 0.0,
         }
     }
 
+    /// Fault-free channel over the ideal network.
     pub fn reliable() -> Self {
         Self::new(FaultSpec::none())
     }
 
-    /// Transmit one round of encoded uploads: returns the delivered
-    /// subset (same borrowed bytes — the server folds zero-copy) and
-    /// the round's stats. Framing is validated here so every delivered
-    /// upload can be viewed infallibly downstream.
+    /// The active network scenario.
+    pub fn scenario(&self) -> &NetworkScenario {
+        &self.scenario
+    }
+
+    /// Transmit one round: broadcast accounting for `participants`
+    /// (each receives `model_bits` downlink), then the uploads. Returns
+    /// the delivered subset (same borrowed bytes — the server folds
+    /// zero-copy) and the round's stats. Framing is validated here so
+    /// every delivered upload can be viewed infallibly downstream.
     ///
     /// Dropped uploads still consumed uplink bandwidth (the bytes were
     /// sent; the loss is on the path) — consistent with how the paper
-    /// counts transmitted bits.
-    pub fn transmit<'a>(&mut self, uploads: Vec<UploadRef<'a>>) -> (Vec<UploadRef<'a>>, LinkStats) {
-        let mut stats = LinkStats::default();
+    /// counts transmitted bits. With a finite deadline, any *staged*
+    /// upload that fails to arrive (fault, unavailability, or a
+    /// dropped straggler) makes the server wait out the full deadline;
+    /// otherwise the round window closes at the last arrival. Devices
+    /// that intentionally skip (lazy-aggregation rules) are assumed to
+    /// announce it with a zero-cost beacon, so a skip round does not
+    /// block the window — only a *lost* upload is indistinguishable
+    /// from a slow one.
+    pub fn transmit<'a>(
+        &mut self,
+        round: usize,
+        participants: &[usize],
+        model_bits: u64,
+        uploads: Vec<UploadRef<'a>>,
+    ) -> (Vec<UploadRef<'a>>, LinkStats) {
+        let mut stats = LinkStats {
+            downlink_bits: model_bits * participants.len() as u64,
+            ..LinkStats::default()
+        };
+        let t_bcast = self.scenario.broadcast_time(participants, model_bits);
+        let deadline = self.scenario.deadline();
+        let mut fault_rng = fault_stream(self.faults.seed, round);
+        let mut jitter_rng = self.scenario.round_jitter_stream(round);
+        let mut window = 0.0f64;
+        let mut missing = false;
         let mut delivered = Vec::with_capacity(uploads.len());
         for up in uploads {
             wire::view(up.bytes).expect("self-encoded payload must be viewable");
             stats.uplink_bits += up.bytes.len() as u64 * 8;
-            if self.faults.drop_prob > 0.0 && self.rng.bernoulli(self.faults.drop_prob) {
+            // Fault coin first (stream parity with the pre-scenario
+            // path: one draw per staged upload when drop_prob > 0).
+            let fault_dropped =
+                self.faults.drop_prob > 0.0 && fault_rng.bernoulli(self.faults.drop_prob);
+            if fault_dropped || !self.scenario.is_up(up.device, round) {
                 stats.dropped += 1;
+                missing = true;
                 continue;
             }
+            let arrival = self
+                .scenario
+                .uplink_time(up.device, up.bytes.len() as u64 * 8, &mut jitter_rng);
+            if arrival > deadline {
+                stats.stragglers += 1;
+                if self.scenario.policy() == StragglerPolicy::Drop {
+                    stats.dropped += 1;
+                    missing = true;
+                    continue;
+                }
+            }
+            window = window.max(arrival);
             stats.messages += 1;
             delivered.push(up);
         }
+        if missing && deadline.is_finite() {
+            // The server cannot tell a lost upload from a slow one: it
+            // waits out the deadline.
+            window = window.max(deadline);
+        }
+        stats.round_time = t_bcast + window;
         self.total_bits += stats.uplink_bits;
+        self.total_bits_down += stats.downlink_bits;
         self.total_messages += stats.messages;
         self.total_dropped += stats.dropped;
+        self.total_stragglers += stats.stragglers;
+        self.sim_time += stats.round_time;
         (delivered, stats)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::scenario::NetworkSpec;
     use super::*;
     use crate::quant::midtread::quantize;
     use wire::{encode, upload_refs, EncodedUpload, Payload};
@@ -113,19 +217,30 @@ mod tests {
         let p = Payload::MidtreadFull(quantize(&v, 4));
         let expected_bits = encode(&p).len() as u64 * 8;
         let staged = vec![EncodedUpload::encode(0, &p)];
-        let (delivered, stats) = ch.transmit(upload_refs(&staged));
+        let (delivered, stats) = ch.transmit(0, &[0], 0, upload_refs(&staged));
         assert_eq!(stats.uplink_bits, expected_bits);
         assert_eq!(delivered.len(), 1);
         assert_eq!(delivered[0].view().to_owned(), p);
         assert_eq!(ch.total_bits, expected_bits);
+        // Ideal network: no simulated time elapses.
+        assert_eq!(stats.round_time, 0.0);
+        assert_eq!(stats.stragglers, 0);
     }
 
     #[test]
     fn empty_round_costs_nothing() {
         let mut ch = Channel::reliable();
-        let (delivered, stats) = ch.transmit(Vec::new());
+        let (delivered, stats) = ch.transmit(0, &[], 0, Vec::new());
         assert!(delivered.is_empty());
         assert_eq!(stats, LinkStats::default());
+    }
+
+    #[test]
+    fn downlink_billed_per_participant() {
+        let mut ch = Channel::reliable();
+        let (_, stats) = ch.transmit(0, &[0, 1, 2], 1000, Vec::new());
+        assert_eq!(stats.downlink_bits, 3000);
+        assert_eq!(ch.total_bits_down, 3000);
     }
 
     #[test]
@@ -137,7 +252,7 @@ mod tests {
         let p = Payload::RawFull(vec![1.0; 10]);
         let bits = encode(&p).len() as u64 * 8;
         let staged = vec![EncodedUpload::encode(0, &p)];
-        let (delivered, stats) = ch.transmit(upload_refs(&staged));
+        let (delivered, stats) = ch.transmit(0, &[0], 0, upload_refs(&staged));
         assert!(delivered.is_empty());
         assert_eq!(stats.dropped, 1);
         // Bits were still spent.
@@ -151,15 +266,110 @@ mod tests {
             seed: 7,
         });
         let mut delivered_total = 0;
-        for _ in 0..100 {
+        for round in 0..100 {
             let staged: Vec<EncodedUpload> = (0..10)
                 .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 4])))
                 .collect();
-            let (del, _) = ch.transmit(upload_refs(&staged));
+            let (del, _) = ch.transmit(round, &[], 0, upload_refs(&staged));
             delivered_total += del.len();
         }
         // ~500 of 1000 delivered.
         assert!((350..650).contains(&delivered_total), "{delivered_total}");
         assert_eq!(ch.total_dropped + delivered_total as u64, 1000);
+    }
+
+    #[test]
+    fn fault_draws_are_round_keyed() {
+        // Two channels, one replaying only round 7: identical verdicts.
+        let spec = FaultSpec {
+            drop_prob: 0.5,
+            seed: 11,
+        };
+        let staged: Vec<EncodedUpload> = (0..32)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 4])))
+            .collect();
+        let mut a = Channel::new(spec.clone());
+        let mut survivors_a = Vec::new();
+        for round in 0..8 {
+            let (del, _) = a.transmit(round, &[], 0, upload_refs(&staged));
+            if round == 7 {
+                survivors_a = del.iter().map(|u| u.device).collect();
+            }
+        }
+        // Fresh channel going straight to round 7 (as a resumed run
+        // does) sees the same drops.
+        let mut b = Channel::new(spec);
+        let (del, _) = b.transmit(7, &[], 0, upload_refs(&staged));
+        let survivors_b: Vec<usize> = del.iter().map(|u| u.device).collect();
+        assert_eq!(survivors_a, survivors_b);
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_and_waits() {
+        // 1 Mbps uplink at best (cellular) and a deadline far below any
+        // feasible transfer of ~4 MB: everything straggles.
+        let spec = NetworkSpec::parse("cellular:deadline=0.001").unwrap();
+        let mut ch = Channel::with_scenario(FaultSpec::none(), spec.build(4, 3));
+        let staged: Vec<EncodedUpload> = (0..4)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 1_000_000])))
+            .collect();
+        // No broadcast this round (empty participant list), so the
+        // round window is exactly the waited-out deadline.
+        let (delivered, stats) = ch.transmit(0, &[], 0, upload_refs(&staged));
+        assert!(delivered.is_empty());
+        assert_eq!(stats.stragglers, 4);
+        assert_eq!(stats.dropped, 4);
+        // The server waited out the deadline.
+        assert!((stats.round_time - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admit_late_keeps_stragglers() {
+        let spec = NetworkSpec::parse("cellular:deadline=0.001,policy=late").unwrap();
+        let mut ch = Channel::with_scenario(FaultSpec::none(), spec.build(4, 3));
+        let staged: Vec<EncodedUpload> = (0..4)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 1_000_000])))
+            .collect();
+        let (delivered, stats) = ch.transmit(0, &[0, 1, 2, 3], 0, upload_refs(&staged));
+        assert_eq!(delivered.len(), 4);
+        assert_eq!(stats.stragglers, 4);
+        assert_eq!(stats.dropped, 0);
+        // The round ran past the deadline to the slowest arrival.
+        assert!(stats.round_time > 0.001);
+    }
+
+    #[test]
+    fn availability_trace_loses_down_devices() {
+        let spec = NetworkSpec::parse("ideal:avail=2/1").unwrap();
+        let sc = spec.build(8, 5);
+        let sched = sc.availability().unwrap().clone();
+        let mut ch = Channel::with_scenario(FaultSpec::none(), sc);
+        let staged: Vec<EncodedUpload> = (0..8)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 4])))
+            .collect();
+        for round in 0..4 {
+            let (del, stats) = ch.transmit(round, &[], 0, upload_refs(&staged));
+            let up_now: Vec<usize> = (0..8).filter(|&d| sched.is_up(d, round)).collect();
+            let got: Vec<usize> = del.iter().map(|u| u.device).collect();
+            assert_eq!(got, up_now, "round {round}");
+            assert_eq!(stats.dropped as usize, 8 - up_now.len());
+        }
+    }
+
+    #[test]
+    fn infinite_deadline_never_straggles() {
+        let spec = NetworkSpec::parse("cellular").unwrap();
+        let mut ch = Channel::with_scenario(FaultSpec::none(), spec.build(4, 3));
+        let staged: Vec<EncodedUpload> = (0..4)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 100_000])))
+            .collect();
+        let (delivered, stats) = ch.transmit(0, &[0, 1, 2, 3], 32_000, upload_refs(&staged));
+        assert_eq!(delivered.len(), 4);
+        assert_eq!(stats.stragglers, 0);
+        // Time still elapses (slow links), monotone across rounds.
+        assert!(stats.round_time > 0.0);
+        let t0 = ch.sim_time;
+        ch.transmit(1, &[0], 32_000, Vec::new());
+        assert!(ch.sim_time >= t0);
     }
 }

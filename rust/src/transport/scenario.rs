@@ -1,0 +1,581 @@
+//! Simulated network scenarios: per-device link models, round
+//! deadlines, and straggler semantics.
+//!
+//! The plain [`super::FaultSpec`] models the network as one uniform
+//! drop probability — every device looks the same, so selection
+//! strategies are never stressed by the bandwidth-heterogeneous,
+//! straggler-prone conditions the FL quantization literature evaluates
+//! under. This module adds that axis:
+//!
+//! * **Per-device links** — every device gets a [`Link`] (uplink /
+//!   downlink bandwidth + latency) drawn deterministically from a
+//!   [`LinkPreset`] population (`lan`, `wan`, `cellular`, `edge-mix`,
+//!   or the `ideal` zero-cost default).
+//! * **Round deadlines** — an upload whose simulated transfer time
+//!   exceeds [`NetworkSpec::deadline_s`] is a *straggler*: dropped or
+//!   admitted late per [`StragglerPolicy`].
+//! * **Availability traces** — an optional periodic up/down schedule,
+//!   expressed with the same [`AvailabilitySchedule`] type the
+//!   selection layer uses, so the one schedule can drive *proactive*
+//!   cohort choice (`--select availability:...`) and *reactive*
+//!   transport loss (a down device's upload never arrives).
+//! * **Simulated wall-clock** — each round's duration (broadcast +
+//!   deadline-capped upload window) accumulates into the
+//!   `sim_time` column of `RoundRecord`, making time-to-accuracy a
+//!   first-class metric next to communication bits
+//!   (`RunTrace::time_to_loss`).
+//!
+//! Determinism contract: link draws are keyed by `(seed, device)`
+//! position in one stream at build time; per-round randomness (transfer
+//! jitter) is drawn from a stream keyed by `(seed, round)`, exactly
+//! like the round-keyed selection and fault streams — so a
+//! checkpoint-resumed run replays the identical network weather, and
+//! traces are bit-reproducible across thread counts (the whole
+//! transport phase is serial). See DESIGN.md §Network.
+
+use crate::selection::AvailabilitySchedule;
+use crate::util::rng::Xoshiro256pp;
+
+/// What happens to an upload whose simulated transfer would finish
+/// after the round deadline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// The server closes the round at the deadline: late uploads are
+    /// counted as stragglers and lost (bits were still spent).
+    #[default]
+    Drop,
+    /// The server waits: late uploads still fold into the round (and
+    /// are counted as stragglers), extending the round's simulated
+    /// duration past the deadline.
+    AdmitLate,
+}
+
+impl StragglerPolicy {
+    /// Parse a policy keyword: `drop` or `late` (aka `admit-late`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "drop" => Some(Self::Drop),
+            "late" | "admit-late" | "admitlate" => Some(Self::AdmitLate),
+            _ => None,
+        }
+    }
+
+    /// The keyword [`StragglerPolicy::parse`] accepts for this policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Drop => "drop",
+            Self::AdmitLate => "late",
+        }
+    }
+}
+
+/// One device's simulated network link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// Uplink bandwidth in bits/second.
+    pub up_bps: f64,
+    /// Downlink (broadcast) bandwidth in bits/second.
+    pub down_bps: f64,
+    /// One-way propagation latency in seconds (applied to both
+    /// directions).
+    pub latency_s: f64,
+}
+
+impl Link {
+    /// The zero-cost link: infinite bandwidth, zero latency. Every
+    /// transfer completes instantly, so `sim_time` stays 0 — the
+    /// pre-scenario behaviour.
+    pub const IDEAL: Link = Link {
+        up_bps: f64::INFINITY,
+        down_bps: f64::INFINITY,
+        latency_s: 0.0,
+    };
+
+    /// Seconds to upload `bits` over this link.
+    pub fn uplink_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.up_bps
+    }
+
+    /// Seconds to receive a `bits`-sized broadcast over this link.
+    pub fn downlink_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.down_bps
+    }
+}
+
+/// Named link-population presets: each draws a device's [`Link`] from a
+/// distribution characteristic of that deployment class.
+///
+/// | preset | uplink | latency | downlink |
+/// |---|---|---|---|
+/// | `ideal` | ∞ | 0 | ∞ |
+/// | `lan` | 50–200 Mbps uniform | 1–5 ms | symmetric |
+/// | `wan` | 10–50 Mbps uniform | 20–80 ms | 2× uplink |
+/// | `cellular` | 1–20 Mbps log-uniform | 50–300 ms | 4× uplink |
+/// | `edge-mix` | 20% lan / 30% wan / 50% cellular | per class | per class |
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LinkPreset {
+    /// Infinite bandwidth, zero latency (the pre-scenario behaviour).
+    #[default]
+    Ideal,
+    /// Cross-silo datacenter links: fast, symmetric, low latency.
+    Lan,
+    /// Wide-area links: moderate bandwidth, tens of ms latency.
+    Wan,
+    /// Mobile uplinks: slow, asymmetric, high latency — the classic
+    /// cross-device FL straggler regime.
+    Cellular,
+    /// Mixed edge population (20% lan, 30% wan, 50% cellular) — the
+    /// heterogeneous fleet most selection papers evaluate on.
+    EdgeMix,
+}
+
+impl LinkPreset {
+    /// Parse a preset name (`ideal`/`uniform`, `lan`, `wan`,
+    /// `cellular`, `edge-mix`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ideal" | "uniform" | "none" => Some(Self::Ideal),
+            "lan" => Some(Self::Lan),
+            "wan" => Some(Self::Wan),
+            "cellular" | "cell" | "mobile" => Some(Self::Cellular),
+            "edge-mix" | "edgemix" | "edge" | "mix" => Some(Self::EdgeMix),
+            _ => None,
+        }
+    }
+
+    /// The canonical name [`LinkPreset::parse`] accepts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Ideal => "ideal",
+            Self::Lan => "lan",
+            Self::Wan => "wan",
+            Self::Cellular => "cellular",
+            Self::EdgeMix => "edge-mix",
+        }
+    }
+
+    /// Draw one device's link from this preset's population.
+    fn sample(&self, rng: &mut Xoshiro256pp) -> Link {
+        const MBPS: f64 = 1e6;
+        match self {
+            Self::Ideal => Link::IDEAL,
+            Self::Lan => {
+                let up = rng.uniform(50.0, 200.0) * MBPS;
+                Link {
+                    up_bps: up,
+                    down_bps: up,
+                    latency_s: rng.uniform(0.001, 0.005),
+                }
+            }
+            Self::Wan => {
+                let up = rng.uniform(10.0, 50.0) * MBPS;
+                Link {
+                    up_bps: up,
+                    down_bps: 2.0 * up,
+                    latency_s: rng.uniform(0.020, 0.080),
+                }
+            }
+            Self::Cellular => {
+                // Log-uniform: bandwidth spans an order of magnitude,
+                // so the slowest devices straggle hard.
+                let up = rng.uniform(1.0f64.ln(), 20.0f64.ln()).exp() * MBPS;
+                Link {
+                    up_bps: up,
+                    down_bps: 4.0 * up,
+                    latency_s: rng.uniform(0.050, 0.300),
+                }
+            }
+            Self::EdgeMix => {
+                let class = rng.next_f64();
+                let pick = if class < 0.2 {
+                    Self::Lan
+                } else if class < 0.5 {
+                    Self::Wan
+                } else {
+                    Self::Cellular
+                };
+                pick.sample(rng)
+            }
+        }
+    }
+}
+
+/// Config-parseable description of a network scenario — the
+/// `--network` CLI flag and the `network = "..."` TOML key. Build the
+/// runtime form with [`NetworkSpec::build`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkSpec {
+    /// Link-population preset devices draw from.
+    pub preset: LinkPreset,
+    /// Round deadline in simulated seconds; `f64::INFINITY` (the
+    /// default) disables straggler semantics entirely.
+    pub deadline_s: f64,
+    /// What happens to uploads that miss the deadline.
+    pub policy: StragglerPolicy,
+    /// Fractional per-upload transfer-time jitter in `[0, 1)`: each
+    /// upload's transfer time is scaled by a factor uniform in
+    /// `[1−j, 1+j]`, drawn from a round-keyed stream. 0 = no jitter.
+    pub jitter: f64,
+    /// Optional periodic availability trace `(period, duty)` shared
+    /// with the selection layer's [`AvailabilitySchedule`]: a device
+    /// that is down in a round is unreachable — its upload is lost.
+    pub availability: Option<(usize, usize)>,
+}
+
+impl Default for NetworkSpec {
+    fn default() -> Self {
+        Self {
+            preset: LinkPreset::Ideal,
+            deadline_s: f64::INFINITY,
+            policy: StragglerPolicy::Drop,
+            jitter: 0.0,
+            availability: None,
+        }
+    }
+}
+
+impl NetworkSpec {
+    /// Accepted spec syntax, for error messages and help text.
+    pub const SYNTAX: &'static str = "ideal | lan | wan | cellular | edge-mix \
+         [:deadline=SECS,policy=drop|late,jitter=J,avail=PERIOD/DUTY]";
+
+    /// The ideal (zero-cost, no-deadline) scenario — the default.
+    pub fn ideal() -> Self {
+        Self::default()
+    }
+
+    /// Parse a spec string: a preset name optionally followed by
+    /// `:key=value,...` modifiers, e.g. `cellular`,
+    /// `wan:deadline=0.5`, `edge-mix:deadline=2,policy=late,jitter=0.1`,
+    /// `cellular:avail=8/5`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        let (head, tail) = match s.split_once(':') {
+            Some((h, t)) => (h, Some(t)),
+            None => (s, None),
+        };
+        let mut spec = NetworkSpec {
+            preset: LinkPreset::parse(head)?,
+            ..NetworkSpec::default()
+        };
+        if let Some(tail) = tail {
+            for kv in tail.split(',') {
+                let (k, v) = kv.split_once('=')?;
+                let v = v.trim();
+                match k.trim().to_ascii_lowercase().as_str() {
+                    "deadline" => {
+                        let d = v.parse::<f64>().ok()?;
+                        if d.is_nan() || d <= 0.0 {
+                            return None;
+                        }
+                        spec.deadline_s = d;
+                    }
+                    "policy" => spec.policy = StragglerPolicy::parse(v)?,
+                    "jitter" => {
+                        let j = v.parse::<f64>().ok()?;
+                        if !(0.0..1.0).contains(&j) {
+                            return None;
+                        }
+                        spec.jitter = j;
+                    }
+                    "avail" => {
+                        let (p, d) = v.split_once('/')?;
+                        let p = p.trim().parse::<usize>().ok().filter(|&x| x >= 1)?;
+                        let d = d
+                            .trim()
+                            .parse::<usize>()
+                            .ok()
+                            .filter(|&x| x >= 1 && x <= p)?;
+                        spec.availability = Some((p, d));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        Some(spec)
+    }
+
+    /// Instantiate the scenario for `num_devices` devices, drawing
+    /// per-device links deterministically from `seed`.
+    pub fn build(&self, num_devices: usize, seed: u64) -> NetworkScenario {
+        let mut rng = Xoshiro256pp::stream(seed, 0x11E7_C0DE);
+        let links = (0..num_devices).map(|_| self.preset.sample(&mut rng)).collect();
+        let availability = self
+            .availability
+            .map(|(period, duty)| AvailabilitySchedule::periodic(period, duty, num_devices, seed));
+        NetworkScenario {
+            links,
+            deadline_s: self.deadline_s,
+            policy: self.policy,
+            jitter: self.jitter,
+            availability,
+            seed,
+        }
+    }
+
+    /// True when this spec is the zero-cost default (no simulation
+    /// effects beyond byte counting).
+    pub fn is_ideal(&self) -> bool {
+        self.preset == LinkPreset::Ideal
+            && self.deadline_s.is_infinite()
+            && self.availability.is_none()
+    }
+}
+
+impl std::fmt::Display for NetworkSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.preset.name())?;
+        let mut mods: Vec<String> = Vec::new();
+        if self.deadline_s.is_finite() {
+            mods.push(format!("deadline={}", self.deadline_s));
+        }
+        if self.policy != StragglerPolicy::Drop {
+            mods.push(format!("policy={}", self.policy.name()));
+        }
+        if self.jitter > 0.0 {
+            mods.push(format!("jitter={}", self.jitter));
+        }
+        if let Some((p, d)) = self.availability {
+            mods.push(format!("avail={p}/{d}"));
+        }
+        if !mods.is_empty() {
+            write!(f, ":{}", mods.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// A built network scenario: per-device links plus the round semantics
+/// ([`NetworkSpec::build`]). Consumed by [`super::Channel`].
+#[derive(Clone, Debug)]
+pub struct NetworkScenario {
+    links: Vec<Link>,
+    deadline_s: f64,
+    policy: StragglerPolicy,
+    jitter: f64,
+    availability: Option<AvailabilitySchedule>,
+    seed: u64,
+}
+
+impl NetworkScenario {
+    /// The ideal scenario for any device count: every link is
+    /// [`Link::IDEAL`], no deadline, no availability trace.
+    pub fn ideal() -> Self {
+        NetworkSpec::default().build(0, 0)
+    }
+
+    /// The link of `device` (out-of-range devices — e.g. in tests
+    /// driving a bare channel — get the ideal link).
+    pub fn link(&self, device: usize) -> Link {
+        self.links.get(device).copied().unwrap_or(Link::IDEAL)
+    }
+
+    /// All per-device links, indexed by device id.
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Round deadline in simulated seconds (∞ = none).
+    pub fn deadline(&self) -> f64 {
+        self.deadline_s
+    }
+
+    /// Straggler handling at the deadline.
+    pub fn policy(&self) -> StragglerPolicy {
+        self.policy
+    }
+
+    /// The availability trace, if any — the same
+    /// [`AvailabilitySchedule`] type the selection layer consumes, so
+    /// an availability-aware strategy can be built over the identical
+    /// schedule the transport enforces.
+    pub fn availability(&self) -> Option<&AvailabilitySchedule> {
+        self.availability.as_ref()
+    }
+
+    /// Is `device` reachable in `round`? (Always true without an
+    /// availability trace.)
+    pub fn is_up(&self, device: usize, round: usize) -> bool {
+        match &self.availability {
+            Some(a) => a.is_up(device, round),
+            None => true,
+        }
+    }
+
+    /// The round-keyed jitter stream: like selection and fault streams,
+    /// keyed by `(seed, round)` rather than free-running, so resumed
+    /// runs replay identical network weather.
+    pub fn round_jitter_stream(&self, round: usize) -> Xoshiro256pp {
+        Xoshiro256pp::stream(
+            self.seed,
+            0x7E17_7E12 ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+    }
+
+    /// Simulated seconds for `device` to upload `bits`, with this
+    /// scenario's jitter applied from `jitter_rng` (one draw per call
+    /// when jitter is enabled; none otherwise).
+    pub fn uplink_time(&self, device: usize, bits: u64, jitter_rng: &mut Xoshiro256pp) -> f64 {
+        let base = self.link(device).uplink_time(bits);
+        if self.jitter > 0.0 {
+            base * (1.0 + self.jitter * (2.0 * jitter_rng.next_f64() - 1.0))
+        } else {
+            base
+        }
+    }
+
+    /// Simulated seconds to broadcast `bits` to every listed
+    /// participant (the slowest participant's downlink bounds it; 0
+    /// with no participants).
+    pub fn broadcast_time(&self, participants: &[usize], bits: u64) -> f64 {
+        participants
+            .iter()
+            .map(|&d| self.link(d).downlink_time(bits))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for (text, want) in [
+            ("ideal", NetworkSpec::default()),
+            (
+                "cellular",
+                NetworkSpec {
+                    preset: LinkPreset::Cellular,
+                    ..NetworkSpec::default()
+                },
+            ),
+            (
+                "wan:deadline=0.5",
+                NetworkSpec {
+                    preset: LinkPreset::Wan,
+                    deadline_s: 0.5,
+                    ..NetworkSpec::default()
+                },
+            ),
+            (
+                "edge-mix:deadline=2,policy=late,jitter=0.1",
+                NetworkSpec {
+                    preset: LinkPreset::EdgeMix,
+                    deadline_s: 2.0,
+                    policy: StragglerPolicy::AdmitLate,
+                    jitter: 0.1,
+                    ..NetworkSpec::default()
+                },
+            ),
+            (
+                "lan:avail=8/5",
+                NetworkSpec {
+                    preset: LinkPreset::Lan,
+                    availability: Some((8, 5)),
+                    ..NetworkSpec::default()
+                },
+            ),
+        ] {
+            assert_eq!(NetworkSpec::parse(text), Some(want.clone()), "{text}");
+            // Display output parses back to the same spec.
+            assert_eq!(NetworkSpec::parse(&want.to_string()), Some(want), "{text}");
+        }
+        for bad in [
+            "martian",
+            "lan:deadline=0",
+            "lan:deadline=-1",
+            "lan:jitter=1.5",
+            "lan:avail=4/9",
+            "lan:avail=0/0",
+            "lan:frobnicate=1",
+            "lan:deadline",
+        ] {
+            assert_eq!(NetworkSpec::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn ideal_links_cost_nothing() {
+        let sc = NetworkScenario::ideal();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        assert_eq!(sc.uplink_time(0, 1 << 30, &mut rng), 0.0);
+        assert_eq!(sc.broadcast_time(&[0, 1, 2], 1 << 30), 0.0);
+        assert!(sc.is_up(7, 123));
+    }
+
+    #[test]
+    fn preset_populations_in_range() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..200 {
+            let l = LinkPreset::Lan.sample(&mut rng);
+            assert!((50e6..=200e6).contains(&l.up_bps));
+            assert_eq!(l.down_bps, l.up_bps);
+            let w = LinkPreset::Wan.sample(&mut rng);
+            assert!((10e6..=50e6).contains(&w.up_bps));
+            let c = LinkPreset::Cellular.sample(&mut rng);
+            assert!((1e6 * 0.999..=20e6 * 1.001).contains(&c.up_bps));
+            assert!(c.down_bps > c.up_bps);
+            assert!((0.050..=0.300).contains(&c.latency_s));
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_and_per_device() {
+        let spec = NetworkSpec::parse("cellular:deadline=1").unwrap();
+        let a = spec.build(16, 42);
+        let b = spec.build(16, 42);
+        assert_eq!(a.links(), b.links());
+        assert_eq!(a.deadline(), 1.0);
+        // Heterogeneous: not all devices share a link.
+        let first = a.link(0);
+        assert!(a.links().iter().any(|l| l.up_bps != first.up_bps));
+        // A different seed draws a different fleet.
+        let c = spec.build(16, 43);
+        assert_ne!(a.links(), c.links());
+    }
+
+    #[test]
+    fn uplink_time_scales_with_bits_and_bandwidth() {
+        let spec = NetworkSpec::parse("wan").unwrap();
+        let sc = spec.build(4, 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let t_small = sc.uplink_time(0, 1_000_000, &mut rng);
+        let t_big = sc.uplink_time(0, 10_000_000, &mut rng);
+        assert!(t_big > t_small);
+        let l = sc.link(0);
+        let expect = l.latency_s + 1_000_000.0 / l.up_bps;
+        assert!((t_small - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_draws_are_round_keyed() {
+        let spec = NetworkSpec::parse("cellular:jitter=0.2").unwrap();
+        let sc = spec.build(4, 9);
+        let mut r5a = sc.round_jitter_stream(5);
+        let mut r5b = sc.round_jitter_stream(5);
+        let mut r6 = sc.round_jitter_stream(6);
+        let a = sc.uplink_time(1, 8_000_000, &mut r5a);
+        let b = sc.uplink_time(1, 8_000_000, &mut r5b);
+        let c = sc.uplink_time(1, 8_000_000, &mut r6);
+        assert_eq!(a.to_bits(), b.to_bits(), "same round, same weather");
+        assert_ne!(a.to_bits(), c.to_bits(), "different round, fresh weather");
+        // Jitter stays within the ±20% envelope.
+        let base = sc.link(1).uplink_time(8_000_000);
+        assert!(a >= base * 0.8 - 1e-12 && a <= base * 1.2 + 1e-12);
+    }
+
+    #[test]
+    fn availability_trace_gates_reachability() {
+        let spec = NetworkSpec::parse("ideal:avail=4/2").unwrap();
+        let sc = spec.build(8, 3);
+        let sched = sc.availability().expect("schedule built");
+        for dev in 0..8 {
+            let ups = (0..8).filter(|&r| sc.is_up(dev, r)).count();
+            assert_eq!(ups, 4, "duty 2/4 over 8 rounds");
+            for r in 0..8 {
+                assert_eq!(sc.is_up(dev, r), sched.is_up(dev, r));
+            }
+        }
+    }
+}

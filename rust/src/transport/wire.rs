@@ -54,10 +54,15 @@ pub enum Payload {
 /// Payload kind, as carried by the wire tag byte.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PayloadKind {
+    /// Mid-tread-quantized gradient innovation.
     MidtreadDelta,
+    /// Mid-tread-quantized full gradient.
     MidtreadFull,
+    /// QSGD stochastically-quantized full gradient.
     Qsgd,
+    /// Raw f32 gradient innovation.
     RawDelta,
+    /// Raw f32 full gradient.
     RawFull,
 }
 
@@ -70,10 +75,13 @@ const TAG_RAW_FULL: u8 = 5;
 /// Error from [`decode`] / [`view`].
 #[derive(Debug, thiserror::Error)]
 pub enum WireError {
+    /// Message shorter than its header/body claims.
     #[error("message truncated: need {need} bytes, have {have}")]
     Truncated { need: usize, have: usize },
+    /// Unrecognized payload kind tag.
     #[error("unknown payload tag {0}")]
     UnknownTag(u8),
+    /// Bits field outside the representable range.
     #[error("invalid bits field {0}")]
     BadBits(u8),
 }
@@ -88,6 +96,7 @@ impl Payload {
         }
     }
 
+    /// True for zero-element payloads.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -171,6 +180,7 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
 /// left packed in the wire buffer. See the module docs.
 #[derive(Clone, Copy, Debug)]
 pub struct PayloadView<'a> {
+    /// Payload kind from the wire tag.
     pub kind: PayloadKind,
     /// Quantization level (0 for raw payloads).
     pub bits: u8,
@@ -354,7 +364,9 @@ fn raw_scatter_add(
 /// time).
 #[derive(Clone, Copy, Debug)]
 pub struct UploadRef<'a> {
+    /// Originating device id.
     pub device: usize,
+    /// The validated wire bytes (header + packed body).
     pub bytes: &'a [u8],
 }
 
@@ -370,7 +382,9 @@ impl<'a> UploadRef<'a> {
 /// benches that construct server folds directly.
 #[derive(Clone, Debug)]
 pub struct EncodedUpload {
+    /// Originating device id.
     pub device: usize,
+    /// The encoded wire bytes.
     pub bytes: Vec<u8>,
 }
 

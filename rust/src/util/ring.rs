@@ -43,6 +43,7 @@ impl RecentWindow {
         self.len
     }
 
+    /// True when no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -19,10 +19,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Expander starting at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -64,6 +66,7 @@ impl Xoshiro256pp {
         }
     }
 
+    /// Next 64-bit output (xoshiro256++ scrambler).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
@@ -79,6 +82,7 @@ impl Xoshiro256pp {
         result
     }
 
+    /// Next 32-bit output (high half of [`Xoshiro256pp::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -18,14 +18,20 @@ use std::collections::BTreeMap;
 /// A TOML scalar or array value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An inline array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -33,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The integer, if this is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -49,6 +56,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -56,6 +64,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -68,7 +77,9 @@ impl Value {
 #[derive(Debug, thiserror::Error)]
 #[error("toml parse error on line {line}: {msg}")]
 pub struct TomlError {
+    /// 1-based line number of the error.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

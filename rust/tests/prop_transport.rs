@@ -1,0 +1,254 @@
+//! Network-scenario invariants through the `Session` API (in-house
+//! property harness): bit-determinism across thread counts, trace
+//! equivalence of infinite-deadline scenarios with the plain fault
+//! path, round-keyed fault-RNG resume equivalence, straggler
+//! semantics, and monotone simulated time.
+
+use aquila::algorithms::{aquila::Aquila, fedavg::FedAvg, qsgd::QsgdAlgo, Algorithm};
+use aquila::coordinator::{RunConfig, Session};
+use aquila::problems::quadratic::QuadraticProblem;
+use aquila::selection::SelectionSpec;
+use aquila::transport::scenario::NetworkSpec;
+use aquila::transport::FaultSpec;
+use std::sync::Arc;
+
+fn cfg(seed: u64, rounds: usize) -> RunConfig {
+    RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        rounds,
+        eval_every: 0,
+        seed,
+        threads: 2,
+        ..RunConfig::default()
+    }
+}
+
+fn session(p: &Arc<QuadraticProblem>, algo: Arc<dyn Algorithm>, cfg: RunConfig) -> Session {
+    Session::builder(p.clone(), algo).config(cfg).build()
+}
+
+/// Scenario simulation is bit-deterministic across engine thread
+/// counts {1, 2, 7}: the transport phase is serial and all per-round
+/// randomness is round-keyed, so the full trace — including `sim_time`
+/// and straggler counts — and the final model agree bitwise.
+#[test]
+fn prop_scenario_deterministic_across_threads() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 41));
+    let scenario = NetworkSpec::parse("cellular:deadline=0.08,jitter=0.2").unwrap();
+    let make_cfg = |threads: usize| {
+        let mut c = cfg(43, 14);
+        c.threads = threads;
+        c.network = scenario.clone();
+        c.faults = FaultSpec {
+            drop_prob: 0.2,
+            seed: 5,
+        };
+        c
+    };
+    let mut s1 = session(&p, Arc::new(Aquila::new(0.25)), make_cfg(1));
+    let t1 = s1.run();
+    let theta1: Vec<u32> = s1.theta().iter().map(|x| x.to_bits()).collect();
+    assert!(t1.total_stragglers() > 0, "scenario should straggle");
+    for threads in [2usize, 7] {
+        let mut s = session(&p, Arc::new(Aquila::new(0.25)), make_cfg(threads));
+        let t = s.run();
+        assert_eq!(t1.total_bits(), t.total_bits(), "t={threads}");
+        for (a, b) in t1.rounds.iter().zip(&t.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "t={threads} round {}",
+                a.round
+            );
+            assert_eq!(
+                a.sim_time.to_bits(),
+                b.sim_time.to_bits(),
+                "t={threads} round {} sim_time",
+                a.round
+            );
+            assert_eq!(a.stragglers, b.stragglers, "t={threads} round {}", a.round);
+            assert_eq!(a.bits_down, b.bits_down, "t={threads} round {}", a.round);
+        }
+        let theta: Vec<u32> = s.theta().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(theta1, theta, "t={threads}: θ diverged bitwise");
+    }
+}
+
+/// With `deadline = ∞` no upload is ever a straggler, so *any* link
+/// population reproduces the plain `FaultSpec` path's learning trace
+/// bit-exactly (same round-keyed fault stream, same delivered set) —
+/// only the simulated clock differs, and it is monotone.
+#[test]
+fn prop_infinite_deadline_matches_fault_path() {
+    let p = Arc::new(QuadraticProblem::new(24, 6, 0.5, 2.0, 0.5, 47));
+    let faults = FaultSpec {
+        drop_prob: 0.3,
+        seed: 7,
+    };
+    let mut base_cfg = cfg(49, 16);
+    base_cfg.faults = faults.clone();
+    let baseline = session(&p, Arc::new(QsgdAlgo::new(6)), base_cfg).run();
+    assert_eq!(baseline.total_sim_time(), 0.0, "ideal network takes no time");
+    for net in ["lan", "wan", "cellular", "edge-mix:jitter=0.3"] {
+        let mut c = cfg(49, 16);
+        c.faults = faults.clone();
+        c.network = NetworkSpec::parse(net).unwrap();
+        let t = session(&p, Arc::new(QsgdAlgo::new(6)), c).run();
+        assert_eq!(t.total_stragglers(), 0, "{net}: ∞ deadline cannot straggle");
+        assert!(t.total_sim_time() > 0.0, "{net}: slow links take time");
+        let mut prev = 0.0;
+        for (a, b) in baseline.rounds.iter().zip(&t.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{net} round {}",
+                a.round
+            );
+            assert_eq!(a.bits_up, b.bits_up, "{net} round {}", a.round);
+            assert_eq!(a.uploads, b.uploads, "{net} round {}", a.round);
+            assert!(b.sim_time >= prev, "{net} round {}: sim_time not monotone", a.round);
+            prev = b.sim_time;
+        }
+    }
+}
+
+/// The fault RNG is round-keyed: a run interrupted mid-way under
+/// nonzero `drop_prob` and restored from its checkpoint replays
+/// exactly the drops the uninterrupted run saw (the free-running
+/// stream this PR replaced diverged here — the same bug PR 2 fixed
+/// for stochastic selection).
+#[test]
+fn prop_fault_rng_resume_equivalence() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 53));
+    let algo: Arc<dyn Algorithm> = Arc::new(QsgdAlgo::new(6));
+    let make_cfg = || {
+        let mut c = cfg(55, 16);
+        c.faults = FaultSpec {
+            drop_prob: 0.3,
+            seed: 11,
+        };
+        c.network = NetworkSpec::parse("cellular:deadline=0.15,jitter=0.1").unwrap();
+        c
+    };
+
+    let mut uninterrupted = session(&p, algo.clone(), make_cfg());
+    let mut full_rounds = Vec::new();
+    for k in 0..16 {
+        full_rounds.push(uninterrupted.run_round(k));
+    }
+
+    let mut first_half = session(&p, algo.clone(), make_cfg());
+    for k in 0..8 {
+        first_half.run_round(k);
+    }
+    let ckpt = first_half.snapshot(8);
+    let mut resumed = session(&p, algo, make_cfg());
+    let next = resumed.restore(&ckpt).unwrap();
+    assert_eq!(next, 8);
+    for k in 8..16 {
+        let r = resumed.run_round(k);
+        let f = &full_rounds[k];
+        assert_eq!(
+            r.train_loss.to_bits(),
+            f.train_loss.to_bits(),
+            "round {k}: drops diverged after resume"
+        );
+        assert_eq!(r.bits_up, f.bits_up, "round {k}");
+        assert_eq!(r.uploads, f.uploads, "round {k}");
+        assert_eq!(r.stragglers, f.stragglers, "round {k}");
+        // v4 checkpoints carry the cumulative clock, so resumed
+        // time-to-accuracy curves line up exactly.
+        assert_eq!(r.sim_time.to_bits(), f.sim_time.to_bits(), "round {k}");
+    }
+    assert_eq!(resumed.theta(), uninterrupted.theta());
+    assert_eq!(resumed.total_bits(), uninterrupted.total_bits());
+    assert_eq!(resumed.total_bits_down(), uninterrupted.total_bits_down());
+}
+
+/// The acceptance scenario: a cellular fleet with a tight deadline
+/// under availability-aware selection produces nonzero straggler
+/// counts, a strictly monotone simulated clock, and still-finite
+/// training losses; `time_to_loss` is consistent with the per-round
+/// records.
+#[test]
+fn prop_cellular_deadline_produces_stragglers() {
+    let p = Arc::new(QuadraticProblem::new(24, 10, 0.5, 2.0, 0.5, 59));
+    let mut c = cfg(61, 30);
+    c.alpha = 0.1;
+    c.network = NetworkSpec::parse("cellular:deadline=0.08").unwrap();
+    let trace = Session::builder(p.clone(), Arc::new(FedAvg))
+        .config(c)
+        .selection_spec(SelectionSpec::Availability {
+            period: 4,
+            duty: 3,
+            cap: None,
+        })
+        .build()
+        .run();
+    assert!(trace.total_stragglers() > 0, "tight deadline must straggle");
+    let mut prev = 0.0;
+    for r in &trace.rounds {
+        assert!(r.sim_time >= prev, "round {}: sim_time not monotone", r.round);
+        assert!(r.round_time >= 0.0);
+        assert!(r.train_loss.is_finite(), "round {}", r.round);
+        assert!(r.stragglers <= r.uploads, "stragglers among staged uploads only");
+        prev = r.sim_time;
+    }
+    assert!(trace.total_sim_time() > 0.0);
+    // time_to_loss agrees with the cumulative clock of the first round
+    // reaching the target.
+    let target = trace.rounds[trace.rounds.len() / 2].train_loss;
+    let t = trace.time_to_loss(target).expect("target was reached");
+    let hit = trace
+        .rounds
+        .iter()
+        .find(|r| r.train_loss <= target)
+        .unwrap();
+    assert_eq!(t, hit.sim_time);
+}
+
+/// `policy=late` only stretches the clock: the delivered uploads — and
+/// therefore the whole learning trace — are bit-identical to the same
+/// scenario without a deadline; stragglers are counted but kept.
+#[test]
+fn prop_admit_late_preserves_learning_trace() {
+    let p = Arc::new(QuadraticProblem::new(24, 6, 0.5, 2.0, 0.5, 67));
+    let mut c_inf = cfg(69, 14);
+    c_inf.network = NetworkSpec::parse("cellular").unwrap();
+    let t_inf = session(&p, Arc::new(FedAvg), c_inf).run();
+
+    let mut c_late = cfg(69, 14);
+    c_late.network = NetworkSpec::parse("cellular:deadline=0.08,policy=late").unwrap();
+    let t_late = session(&p, Arc::new(FedAvg), c_late).run();
+
+    assert!(t_late.total_stragglers() > 0, "late uploads are still counted");
+    assert_eq!(t_inf.total_bits(), t_late.total_bits());
+    for (a, b) in t_inf.rounds.iter().zip(&t_late.rounds) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "round {}: admit-late must not change learning",
+            a.round
+        );
+    }
+}
+
+/// A transport-side availability trace (`avail=P/D`) bills every
+/// staged upload but loses the down devices' messages; training still
+/// converges on what arrives.
+#[test]
+fn prop_network_availability_converges() {
+    let p = Arc::new(QuadraticProblem::new(16, 8, 0.5, 2.0, 0.5, 71));
+    let mut c = cfg(73, 80);
+    c.alpha = 0.1;
+    c.network = NetworkSpec::parse("ideal:avail=4/3").unwrap();
+    let trace = session(&p, Arc::new(FedAvg), c).run();
+    // Bits are billed for every staged upload, reachable or not.
+    let mut c_ref = cfg(73, 80);
+    c_ref.alpha = 0.1;
+    let t_ref = session(&p, Arc::new(FedAvg), c_ref).run();
+    assert_eq!(trace.total_bits(), t_ref.total_bits());
+    let gap = trace.final_train_loss() - p.optimum_value();
+    assert!(gap < 0.1, "no convergence under availability trace: gap {gap}");
+}
