@@ -1,0 +1,135 @@
+//! Sectioned vs global quantization: kernel speed, measured round
+//! quantization error at equal bits, and wire header overhead, on
+//! dataset-shaped gradients (device 0's full-batch gradient of each
+//! synth problem). Run with `--json ../BENCH_quant.json` to record the
+//! trajectory; EXPERIMENTS.md §Sectioned quantization documents the
+//! columns.
+//!
+//! Like the aggregation bench, this doubles as a smoke check: it
+//! *asserts* that tensor-mode scales strictly reduce the measured
+//! error on the synth-cf10 MLP (the motivating case — bias vs weight
+//! gradient scales), never increase it meaningfully anywhere else, and
+//! that tensor-mode header overhead at d = 1M stays under 0.1% — so a
+//! sectioning regression fails CI instead of silently skewing numbers.
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::hetero::CapacityMask;
+use aquila::problems::ParamLayout;
+use aquila::quant::midtread::{dequantize, quantize_sections, quantize_sections_buf};
+use aquila::quant::{SectionSpec, Sections};
+use aquila::transport::wire::{encode, Payload};
+
+const BITS: u8 = 4;
+
+fn sq_err(v: &[f32], dq: &[f32]) -> f64 {
+    v.iter()
+        .zip(dq)
+        .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+        .sum()
+}
+
+/// Quantize `grad` under `sections`, returning (wire bytes, ‖v − Δq‖₂²).
+fn measure(grad: &[f32], sections: &Sections) -> (usize, f64) {
+    let q = quantize_sections(grad, BITS, sections);
+    let err = sq_err(grad, &dequantize(&q));
+    let bytes = encode(&Payload::MidtreadFull(q)).len();
+    (bytes, err)
+}
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let modes = [
+        SectionSpec::Global,
+        SectionSpec::Tensor,
+        SectionSpec::Fixed(1024),
+    ];
+
+    for ds in [DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2] {
+        let spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.05, 1);
+        let problem = spec.build_problem();
+        let d = problem.dim();
+        let layout = problem.layout();
+        let mask = CapacityMask::full(d);
+        let theta = problem.init_theta(spec.seed);
+        let mut grad = vec![0.0f32; d];
+        let mut ws = problem.make_scratch();
+        problem.local_grad(0, &theta, &mut grad, &mut ws);
+
+        let (global_bytes, global_err) = measure(&grad, &Sections::global(d));
+        for mode in modes {
+            let sections = mode.resolve(&layout, &mask);
+            let (bytes, err) = measure(&grad, &sections);
+            let overhead = 100.0 * (bytes as f64 - global_bytes as f64) / global_bytes as f64;
+            println!(
+                "{:<6} d={d:<7} {:<12} sq_error {err:>13.6e}  overhead {overhead:>8.4}%",
+                ds.name(),
+                mode.to_string()
+            );
+            // Smoke assertions (see module docs).
+            assert!(
+                err <= global_err * 1.02 + 1e-12,
+                "{} {mode}: sectioned error {err} exceeds global {global_err}",
+                ds.name()
+            );
+            if ds == DatasetKind::Cf10 && mode == SectionSpec::Tensor {
+                assert!(
+                    err < global_err,
+                    "tensor scales must reduce cf10 MLP error: {err} vs {global_err}"
+                );
+            }
+            // The measurements ride in the case name so the JSON
+            // artifact records them alongside the timing.
+            let label = format!(
+                "quantize {} b={BITS} {mode} err={err:.4e} overhead={overhead:.4}%",
+                ds.name()
+            );
+            let mut psi = Vec::new();
+            bench.bench_throughput(&label, d as u64, || {
+                let q =
+                    quantize_sections_buf(black_box(&grad), BITS, &sections, std::mem::take(&mut psi));
+                psi = black_box(q).psi;
+            });
+        }
+    }
+
+    // Header-overhead contract at production scale: a d ≈ 1M model with
+    // 8 tensors must pay ≤ 0.1% extra wire bytes in tensor mode.
+    let layout = ParamLayout::contiguous(&[
+        ("w1", vec![512, 1024]),
+        ("b1", vec![512]),
+        ("w2", vec![512, 512]),
+        ("b2", vec![512]),
+        ("w3", vec![256, 512]),
+        ("b3", vec![256]),
+        ("w4", vec![256, 420]),
+        ("b4", vec![256]),
+    ]);
+    let d = layout.dim();
+    let mask = CapacityMask::full(d);
+    let grad: Vec<f32> = (0..d)
+        .map(|i| ((i % 977) as f32 - 488.0) / 488.0)
+        .collect();
+    let (global_bytes, _) = measure(&grad, &Sections::global(d));
+    for mode in [SectionSpec::Tensor, SectionSpec::Fixed(1024)] {
+        let sections = mode.resolve(&layout, &mask);
+        let (bytes, _) = measure(&grad, &sections);
+        let overhead = 100.0 * (bytes as f64 - global_bytes as f64) / global_bytes as f64;
+        println!("d={d} {mode}: {bytes} wire bytes, overhead {overhead:.4}% over {global_bytes}");
+        if mode == SectionSpec::Tensor {
+            assert!(
+                overhead <= 0.1,
+                "tensor-mode header overhead {overhead}% exceeds 0.1% at d={d}"
+            );
+        }
+        let label = format!("encode d=1M b={BITS} {mode} overhead={overhead:.4}%");
+        let q = quantize_sections(&grad, BITS, &sections);
+        let p = Payload::MidtreadFull(q);
+        let mut buf = Vec::new();
+        bench.bench_throughput(&label, d as u64, || {
+            aquila::transport::wire::encode_into(black_box(&p), &mut buf);
+            black_box(&buf);
+        });
+    }
+    bench.finish();
+}

@@ -12,7 +12,6 @@
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::quant::levels::adaquantfl_level;
-use crate::quant::midtread::quantize_buf;
 use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
@@ -51,7 +50,7 @@ impl Algorithm for AdaQuantFl {
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
         let bits = self.level(ctx);
-        let q = quantize_buf(grad, bits, std::mem::take(&mut dev.psi));
+        let q = super::quantize_full_step(dev, grad, bits);
         dev.uploads += 1;
         ClientUpload {
             payload: Some(Payload::MidtreadFull(q)),

@@ -18,11 +18,10 @@
 //! Round `k = 0` bootstraps with `q_m^{−1} = 0` and always uploads
 //! (Algorithm 1 lines 2–5).
 
-use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
+use super::{Algorithm, ClientUpload, DeviceState, InnovationStats, RoundCtx, ServerAgg};
 use crate::quant::levels::aquila_level;
-use crate::quant::midtread::quantize_innovation_fused_buf;
+use crate::quant::Sections;
 use crate::transport::wire::{Payload, UploadRef};
-use crate::util::vecmath::innovation_norms;
 
 /// See module docs. `β` is carried in [`RoundCtx`] so sweeps (Figure
 /// 4/5 ablation) don't need to rebuild the algorithm.
@@ -55,6 +54,27 @@ impl Aquila {
     }
 }
 
+/// The eq. 19 level rule evaluated per quantization section: each
+/// section's innovation norms yield its own optimal
+/// `b*_s = ceil(log₂(R_s·√d_s/‖v_s‖₂ + 1))`; the upload uses
+/// `max_s b*_s` so every section meets its Lemma-1 accuracy target
+/// (the wire carries one `bits` level and one scale per section). With
+/// the default global section this is exactly the original rule.
+fn sectioned_aquila_level(stats: &InnovationStats, sections: &Sections) -> u8 {
+    if stats.per_section.is_empty() {
+        // Default global section: the original closed form, no
+        // per-section table was materialized.
+        return aquila_level(stats.l2sq.sqrt(), stats.linf, sections.total());
+    }
+    stats
+        .per_section
+        .iter()
+        .enumerate()
+        .map(|(i, &(l2sq, linf))| aquila_level(l2sq.sqrt(), linf, sections.range(i).len()))
+        .max()
+        .unwrap_or(1)
+}
+
 impl Algorithm for Aquila {
     fn name(&self) -> &'static str {
         "AQUILA"
@@ -66,18 +86,16 @@ impl Algorithm for Aquila {
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
         debug_assert_eq!(grad.len(), dev.support());
-        let d = grad.len();
-        // Step 1–2: innovation norms and optimal level (eq. 19).
-        let (l2sq, linf) = innovation_norms(grad, &dev.q_prev);
+        // Step 1–2: innovation norms (per quantization section) and the
+        // optimal level (eq. 19, evaluated per section).
+        let stats = super::innovation_stats(grad, &dev.q_prev, &dev.sections);
         let bits = self
             .fixed_level
-            .unwrap_or_else(|| aquila_level(l2sq.sqrt(), linf, d));
+            .unwrap_or_else(|| sectioned_aquila_level(&stats, &dev.sections));
         // Step 3: fused quantize (Δq into scratch, codes into the
-        // recycled per-device ψ buffer, plus both norms).
-        let mut dq = std::mem::take(&mut dev.scratch);
-        dq.resize(d, 0.0);
-        let psi = std::mem::take(&mut dev.psi);
-        let outcome = quantize_innovation_fused_buf(grad, &dev.q_prev, bits, linf, &mut dq, psi);
+        // recycled per-device ψ buffer, plus both norms — one scale per
+        // section).
+        let (dq, outcome) = super::quantize_innovation_step(dev, grad, bits, &stats);
         // Step 4: the skip criterion (eq. 8). Round 0 always uploads.
         let threshold = ctx.beta as f64 / (ctx.alpha as f64 * ctx.alpha as f64)
             * ctx.model_diff_sq;
@@ -115,6 +133,7 @@ mod tests {
     use crate::quant::levels::aquila_level_upper_bound;
     use crate::quant::midtread::quantize_innovation_fused;
     use crate::util::rng::Xoshiro256pp;
+    use crate::util::vecmath::innovation_norms;
     use std::sync::Arc;
 
     fn device(d: usize) -> DeviceState {
@@ -227,6 +246,34 @@ mod tests {
             let b = up.level.unwrap();
             assert!(b >= 1 && b <= aquila_level_upper_bound(d), "b={b}");
         }
+    }
+
+    #[test]
+    fn sectioned_device_uploads_sectioned_payload() {
+        let algo = Aquila::new(0.0);
+        let d = 64;
+        let mask = Arc::new(CapacityMask::full(d));
+        let sections = Arc::new(Sections::from_lens([48usize, 16]));
+        let mut dev = DeviceState::with_sections(0, mask, sections.clone(), 7);
+        // Hot tail section: its range differs from the head's by 100×.
+        let mut grad = random_grad(d, 12);
+        for x in grad[48..].iter_mut() {
+            *x *= 100.0;
+        }
+        let up = algo.client_step(&mut dev, &grad, &RoundCtx::bare(0, 0.1, 0.0, 0.0));
+        match up.payload.unwrap() {
+            Payload::MidtreadDelta(q) => {
+                assert!(q.is_sectioned());
+                assert_eq!(q.section_scales.len(), 2);
+                assert!(q.section_scales[1].0 > 10.0 * q.section_scales[0].0);
+            }
+            p => panic!("wrong payload {p:?}"),
+        }
+        // The level is the max of the per-section eq.-19 levels.
+        let zeros = vec![0.0f32; d];
+        let stats = super::super::innovation_stats(&grad, &zeros, &sections);
+        let expect = super::sectioned_aquila_level(&stats, &sections);
+        assert_eq!(up.level, Some(expect));
     }
 
     #[test]

@@ -16,7 +16,6 @@
 //!   transmit.
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::midtread::quantize_buf;
 use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
@@ -67,7 +66,7 @@ impl Algorithm for DAdaQuant {
             return ClientUpload::skip();
         }
         let bits = self.client_level(dev.id, ctx.dadaquant_level);
-        let q = quantize_buf(grad, bits, std::mem::take(&mut dev.psi));
+        let q = super::quantize_full_step(dev, grad, bits);
         dev.uploads += 1;
         ClientUpload {
             payload: Some(Payload::MidtreadFull(q)),

@@ -12,9 +12,7 @@
 use super::laq::Laq;
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::quant::levels::adaquantfl_level;
-use crate::quant::midtread::quantize_innovation_fused_buf;
 use crate::transport::wire::{Payload, UploadRef};
-use crate::util::vecmath::innovation_norms;
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -56,13 +54,9 @@ impl Algorithm for LAdaQ {
     }
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
-        let d = grad.len();
         let bits = self.level(ctx);
-        let (_l2sq, linf) = innovation_norms(grad, &dev.q_prev);
-        let mut dq = std::mem::take(&mut dev.scratch);
-        dq.resize(d, 0.0);
-        let psi = std::mem::take(&mut dev.psi);
-        let outcome = quantize_innovation_fused_buf(grad, &dev.q_prev, bits, linf, &mut dq, psi);
+        let stats = super::innovation_stats(grad, &dev.q_prev, &dev.sections);
+        let (dq, outcome) = super::quantize_innovation_step(dev, grad, bits, &stats);
         let skip = ctx.round > 0
             && outcome.dq_norm_sq <= self.laq.threshold(dev, outcome.err_norm_sq, ctx);
         if skip {

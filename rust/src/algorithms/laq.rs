@@ -17,9 +17,7 @@
 //! LAG-comparison remarks after Corollary 1 / Theorem 3).
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::midtread::quantize_innovation_fused_buf;
 use crate::transport::wire::{Payload, UploadRef};
-use crate::util::vecmath::innovation_norms;
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -65,13 +63,8 @@ impl Algorithm for Laq {
     }
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], ctx: &RoundCtx) -> ClientUpload {
-        let d = grad.len();
-        let (_l2sq, linf) = innovation_norms(grad, &dev.q_prev);
-        let mut dq = std::mem::take(&mut dev.scratch);
-        dq.resize(d, 0.0);
-        let psi = std::mem::take(&mut dev.psi);
-        let outcome =
-            quantize_innovation_fused_buf(grad, &dev.q_prev, self.bits, linf, &mut dq, psi);
+        let stats = super::innovation_stats(grad, &dev.q_prev, &dev.sections);
+        let (dq, outcome) = super::quantize_innovation_step(dev, grad, self.bits, &stats);
         let skip = ctx.round > 0
             && outcome.dq_norm_sq <= self.threshold(dev, outcome.err_norm_sq, ctx);
         if skip {

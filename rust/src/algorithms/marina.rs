@@ -12,9 +12,7 @@
 //! quantizer for comparability (same wire format as the lazy family).
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::midtread::quantize_innovation_fused_buf;
 use crate::transport::wire::{Payload, UploadRef};
-use crate::util::vecmath::innovation_norms;
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -56,13 +54,8 @@ impl Algorithm for Marina {
                 level: None,
             };
         }
-        let d = grad.len();
-        let (_l2, linf) = innovation_norms(grad, &dev.q_prev);
-        let mut dq = std::mem::take(&mut dev.scratch);
-        dq.resize(d, 0.0);
-        let psi = std::mem::take(&mut dev.psi);
-        let outcome =
-            quantize_innovation_fused_buf(grad, &dev.q_prev, self.bits, linf, &mut dq, psi);
+        let stats = super::innovation_stats(grad, &dev.q_prev, &dev.sections);
+        let (dq, outcome) = super::quantize_innovation_step(dev, grad, self.bits, &stats);
         // MARINA's reference is the *previous local gradient*, not the
         // quantized estimate.
         dev.q_prev.copy_from_slice(grad);

@@ -35,9 +35,15 @@ pub mod marina;
 pub mod qsgd;
 
 use crate::hetero::CapacityMask;
+use crate::quant::midtread::{
+    quantize_buf, quantize_innovation_fused_buf, quantize_innovation_fused_sections_buf,
+    quantize_sections_buf, QuantizeOutcome, QuantizedVec,
+};
+use crate::quant::Sections;
 use crate::transport::wire::{self, Payload, PayloadView, UploadRef};
 use crate::util::pool::parallel_for_shards;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::vecmath::innovation_norms;
 use std::sync::Arc;
 
 /// Everything the server broadcasts that clients may consult. The paper
@@ -136,12 +142,32 @@ pub struct DeviceState {
     pub skips: u64,
     /// HeteroFL capacity mask.
     pub mask: Arc<CapacityMask>,
+    /// Quantization sections over the gathered vector, resolved by the
+    /// engine from the problem's `ParamLayout`, the run's
+    /// `quant_sections` spec, and this device's mask
+    /// (`crate::quant::sections`). The default is the single global
+    /// section — the pre-sectioning behavior.
+    pub sections: Arc<Sections>,
 }
 
 impl DeviceState {
-    /// Fresh device state (zero reference vector, device-keyed RNG stream).
+    /// Fresh device state (zero reference vector, device-keyed RNG
+    /// stream, single global quantization section).
     pub fn new(id: usize, mask: Arc<CapacityMask>, seed: u64) -> Self {
+        let sections = Arc::new(Sections::global(mask.support()));
+        Self::with_sections(id, mask, sections, seed)
+    }
+
+    /// [`DeviceState::new`] with explicit quantization sections (must
+    /// cover the mask's support).
+    pub fn with_sections(
+        id: usize,
+        mask: Arc<CapacityMask>,
+        sections: Arc<Sections>,
+        seed: u64,
+    ) -> Self {
         let support = mask.support();
+        assert_eq!(sections.total(), support, "sections must cover the support");
         Self {
             id,
             q_prev: vec![0.0; support],
@@ -154,6 +180,7 @@ impl DeviceState {
             uploads: 0,
             skips: 0,
             mask,
+            sections,
         }
     }
 
@@ -206,6 +233,98 @@ impl ClientUpload {
             payload: None,
             level: Some(level),
         }
+    }
+}
+
+/// Innovation norms of a device's round, computed once and shared by
+/// the level rule, the skip rule, and the sectioned quantizer.
+#[derive(Clone, Debug)]
+pub struct InnovationStats {
+    /// Global `‖v‖₂²` of the innovation `v = g − q_prev`.
+    pub l2sq: f64,
+    /// Global `‖v‖_∞`.
+    pub linf: f32,
+    /// Per-section `(‖v_s‖₂², ‖v_s‖_∞)`, one entry per quantization
+    /// section. **Empty** when the device runs the default single
+    /// global section (the globals above are that section's norms) —
+    /// the default device phase stays allocation-free (§Perf).
+    pub per_section: Vec<(f64, f32)>,
+}
+
+/// Compute [`InnovationStats`] for `v = g − q_prev` over `sections`.
+/// The global (single-section) path is the exact
+/// `util::vecmath::innovation_norms` pass the pre-sectioning client
+/// steps ran — and allocates nothing — so global-mode traces stay
+/// bit-identical and the zero-alloc steady state is preserved.
+pub fn innovation_stats(g: &[f32], q_prev: &[f32], sections: &Sections) -> InnovationStats {
+    if sections.is_global() {
+        let (l2sq, linf) = innovation_norms(g, q_prev);
+        return InnovationStats {
+            l2sq,
+            linf,
+            per_section: Vec::new(),
+        };
+    }
+    let mut per_section = Vec::with_capacity(sections.count());
+    let mut l2sq = 0.0f64;
+    let mut linf = 0.0f32;
+    for r in sections.iter() {
+        let (s_l2sq, s_linf) = innovation_norms(&g[r.clone()], &q_prev[r.clone()]);
+        l2sq += s_l2sq;
+        linf = linf.max(s_linf);
+        per_section.push((s_l2sq, s_linf));
+    }
+    InnovationStats {
+        l2sq,
+        linf,
+        per_section,
+    }
+}
+
+/// Shared client-step core of the mid-tread innovation family (AQUILA,
+/// LAQ, LAdaQ, MARINA): fused-quantize the innovation `g − q_prev` at
+/// `bits` into the device's recycled `scratch`/`psi` buffers, one scale
+/// per quantization section. Returns the reconstructed `Δq` (the taken
+/// scratch buffer — hand it back to `dev.scratch` when done) and the
+/// quantize outcome whose norms feed the skip rules.
+pub(crate) fn quantize_innovation_step(
+    dev: &mut DeviceState,
+    grad: &[f32],
+    bits: u8,
+    stats: &InnovationStats,
+) -> (Vec<f32>, QuantizeOutcome) {
+    let d = grad.len();
+    let mut dq = std::mem::take(&mut dev.scratch);
+    dq.resize(d, 0.0);
+    let psi = std::mem::take(&mut dev.psi);
+    let outcome = if dev.sections.is_global() {
+        quantize_innovation_fused_buf(grad, &dev.q_prev, bits, stats.linf, &mut dq, psi)
+    } else {
+        let sections = dev.sections.clone();
+        let ranges: Vec<f32> = stats.per_section.iter().map(|&(_, li)| li).collect();
+        quantize_innovation_fused_sections_buf(
+            grad,
+            &dev.q_prev,
+            bits,
+            &ranges,
+            &sections,
+            &mut dq,
+            psi,
+        )
+    };
+    (dq, outcome)
+}
+
+/// Shared client-step core of the full-gradient mid-tread family
+/// (AdaQuantFL, DAdaQuant): quantize `grad` at `bits` into the device's
+/// recycled `psi` buffer, one scale per quantization section.
+pub(crate) fn quantize_full_step(dev: &mut DeviceState, grad: &[f32], bits: u8) -> QuantizedVec {
+    let psi = std::mem::take(&mut dev.psi);
+    if dev.sections.is_global() {
+        quantize_buf(grad, bits, psi)
+    } else {
+        let sections = dev.sections.clone();
+        quantize_sections_buf(grad, bits, &sections, psi)
     }
 }
 

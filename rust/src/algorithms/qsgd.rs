@@ -32,7 +32,12 @@ impl Algorithm for QsgdAlgo {
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], _ctx: &RoundCtx) -> ClientUpload {
         let mags = std::mem::take(&mut dev.psi);
         let signs = std::mem::take(&mut dev.signs);
-        let q = qsgd::quantize_buf(grad, self.bits, &mut dev.rng, mags, signs);
+        let q = if dev.sections.is_global() {
+            qsgd::quantize_buf(grad, self.bits, &mut dev.rng, mags, signs)
+        } else {
+            let sections = dev.sections.clone();
+            qsgd::quantize_sections_buf(grad, self.bits, &sections, &mut dev.rng, mags, signs)
+        };
         dev.uploads += 1;
         ClientUpload {
             payload: Some(Payload::Qsgd(q)),

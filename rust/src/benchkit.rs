@@ -4,11 +4,12 @@
 //! Provides warmup + timed sampling, robust statistics (mean / median /
 //! std / min), throughput reporting, a black-box sink, and
 //! machine-readable output: `--json <path>` (or `AQUILA_BENCH_JSON`)
-//! makes [`Bench::finish`] write one `{name, mean_ns, median_ns,
-//! min_ns, elements}` record per case, which is how
-//! `BENCH_aggregation.json` / `BENCH_round.json` in the repo root track
-//! the perf trajectory across PRs. All `rust/benches/*.rs` binaries are
-//! built on this.
+//! makes [`Bench::finish`] write a `{commit, generated_at, cases}`
+//! report — one `{name, mean_ns, median_ns, min_ns, elements}` record
+//! per case, stamped with the git commit hash and an ISO-8601 UTC
+//! timestamp so the committed `BENCH_*.json` trajectory in the repo
+//! root stays attributable across PRs. All `rust/benches/*.rs`
+//! binaries are built on this.
 
 use crate::util::json::{obj, Json};
 use std::hint::black_box as bb;
@@ -191,9 +192,11 @@ impl Bench {
         &self.results
     }
 
-    /// The JSON report: one record per case.
+    /// The JSON report: `{commit, generated_at, cases}` — the
+    /// provenance stamp makes every committed `BENCH_*.json`
+    /// attributable to the exact tree that produced it.
     pub fn to_json(&self) -> Json {
-        Json::Arr(
+        let cases = Json::Arr(
             self.results
                 .iter()
                 .map(|s| {
@@ -212,7 +215,12 @@ impl Bench {
                     ])
                 })
                 .collect(),
-        )
+        );
+        obj(vec![
+            ("commit", Json::Str(git_commit())),
+            ("generated_at", Json::Str(iso8601_utc_now())),
+            ("cases", cases),
+        ])
     }
 
     /// Write the JSON report to `path`.
@@ -239,6 +247,68 @@ impl Bench {
         print!("{out}");
         out
     }
+}
+
+/// The commit hash stamped into bench reports: `AQUILA_GIT_COMMIT` if
+/// set and non-blank (CI can inject it without a checkout), else
+/// `git rev-parse HEAD`, else `"unknown"`.
+fn git_commit() -> String {
+    std::env::var("AQUILA_GIT_COMMIT")
+        .ok()
+        .as_deref()
+        .and_then(nonempty_trimmed)
+        .or_else(git_head)
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Trimmed copy of `s`, or `None` if blank — the override-acceptance
+/// rule of [`git_commit`], kept pure so tests cover it without
+/// mutating the process environment (which races with parallel tests
+/// spawning subprocesses).
+fn nonempty_trimmed(s: &str) -> Option<String> {
+    let s = s.trim();
+    (!s.is_empty()).then(|| s.to_string())
+}
+
+/// `git rev-parse HEAD` of the working directory, if available.
+fn git_head() -> Option<String> {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .as_deref()
+        .and_then(nonempty_trimmed)
+}
+
+/// Current UTC time as `YYYY-MM-DDTHH:MM:SSZ` (no chrono in the
+/// offline registry; the civil-from-days conversion below is Howard
+/// Hinnant's date algorithm).
+fn iso8601_utc_now() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    iso8601_utc(secs)
+}
+
+/// Format seconds-since-epoch as ISO-8601 UTC.
+fn iso8601_utc(secs: u64) -> String {
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (hh, mm, ss) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}T{hh:02}:{mm:02}:{ss:02}Z")
 }
 
 #[cfg(test)]
@@ -294,7 +364,13 @@ mod tests {
         b.bench_throughput("tp", 128, || {});
         b.bench("plain", || {});
         let j = b.to_json();
-        let arr = j.as_arr().unwrap();
+        // Provenance stamp: commit + ISO-8601 UTC timestamp.
+        let commit = j.get("commit").as_str().expect("commit present");
+        assert!(!commit.is_empty());
+        let ts = j.get("generated_at").as_str().expect("timestamp present");
+        assert_eq!(ts.len(), 20, "not ISO-8601: {ts}");
+        assert!(ts.ends_with('Z') && ts.as_bytes()[10] == b'T', "{ts}");
+        let arr = j.get("cases").as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].get("name").as_str(), Some("tp"));
         assert_eq!(arr[0].get("elements").as_f64(), Some(128.0));
@@ -317,7 +393,34 @@ mod tests {
         b.finish();
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(text.trim()).unwrap();
-        assert_eq!(j.as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("cases").as_arr().unwrap().len(), 1);
+        assert!(j.get("commit").as_str().is_some());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn iso8601_known_instants() {
+        assert_eq!(iso8601_utc(0), "1970-01-01T00:00:00Z");
+        // 2000-02-29 (leap day) 12:34:56 UTC.
+        assert_eq!(iso8601_utc(951_827_696), "2000-02-29T12:34:56Z");
+        // 2023-01-01 00:00:00 UTC.
+        assert_eq!(iso8601_utc(1_672_531_200), "2023-01-01T00:00:00Z");
+    }
+
+    #[test]
+    fn commit_stamp_override_rule_and_fallback() {
+        // The override-acceptance rule (pure — no env mutation, which
+        // would race with parallel tests spawning subprocesses).
+        assert_eq!(
+            nonempty_trimmed(" deadbeefcafe \n").as_deref(),
+            Some("deadbeefcafe")
+        );
+        assert_eq!(nonempty_trimmed("   "), None);
+        assert_eq!(nonempty_trimmed(""), None);
+        // The composed stamp is always non-empty and trimmed, whether
+        // it came from the env, `git rev-parse`, or the sentinel.
+        let c = git_commit();
+        assert!(!c.is_empty());
+        assert_eq!(c, c.trim());
     }
 }

@@ -19,6 +19,7 @@ use crate::problems::logistic::LogisticProblem;
 use crate::problems::mlp::MlpProblem;
 use crate::problems::softmax_lm::SoftmaxLmProblem;
 use crate::problems::GradientSource;
+use crate::quant::SectionSpec;
 use crate::selection::SelectionSpec;
 use crate::transport::scenario::NetworkSpec;
 use crate::util::rng::Xoshiro256pp;
@@ -140,6 +141,11 @@ pub struct ExperimentSpec {
     pub dadaquant_patience: u32,
     /// DAdaQuant schedule level cap (`dadaquant_cap`).
     pub dadaquant_cap: u8,
+    /// Quantization sectioning (`quant_sections = "tensor"` in TOML,
+    /// `--quant-sections` on the CLI): `global` (default, the
+    /// single-scale wire format), `tensor` (one scale per model
+    /// tensor), or `fixed:N` (N-element blocks).
+    pub quant_sections: SectionSpec,
 }
 
 impl ExperimentSpec {
@@ -174,6 +180,7 @@ impl ExperimentSpec {
             dadaquant_b0: 2,
             dadaquant_patience: 3,
             dadaquant_cap: 16,
+            quant_sections: SectionSpec::Global,
         }
     }
 
@@ -202,6 +209,7 @@ impl ExperimentSpec {
             dadaquant_patience: self.dadaquant_patience,
             dadaquant_cap: self.dadaquant_cap,
             network: self.network.clone(),
+            quant_sections: self.quant_sections,
             ..RunConfig::default()
         }
     }
@@ -327,6 +335,17 @@ impl ExperimentSpec {
         if let Some(v) = get("network").and_then(|v| v.as_str()) {
             self.network = NetworkSpec::parse(v).ok_or_else(|| {
                 anyhow::anyhow!("unknown network spec '{v}' (try: {})", NetworkSpec::SYNTAX)
+            })?;
+        }
+        // A bad sectioning spec is likewise a hard error — silently
+        // quantizing with one global scale would mislabel the trace's
+        // error/overhead trade-off.
+        if let Some(v) = get("quant_sections").and_then(|v| v.as_str()) {
+            self.quant_sections = SectionSpec::parse(v).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown quant_sections spec '{v}' (try: {})",
+                    SectionSpec::SYNTAX
+                )
             })?;
         }
         Ok(())
@@ -477,6 +496,23 @@ mod tests {
         // An unknown network spec is a hard error, not a silent ideal
         // network.
         let map = toml::parse("[experiment]\nnetwork = \"tachyon\"\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+    }
+
+    #[test]
+    fn toml_quant_sections_overrides() {
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        assert_eq!(spec.quant_sections, SectionSpec::Global);
+        let map = toml::parse("[experiment]\nquant_sections = \"tensor\"\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.quant_sections, SectionSpec::Tensor);
+        let map = toml::parse("[experiment]\nquant_sections = \"fixed:1024\"\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.quant_sections, SectionSpec::Fixed(1024));
+        // The spec flows into the run config.
+        assert_eq!(spec.run_config().quant_sections, SectionSpec::Fixed(1024));
+        // An unknown spec is a hard error, not a silent global run.
+        let map = toml::parse("[experiment]\nquant_sections = \"per-bit\"\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
     }
 

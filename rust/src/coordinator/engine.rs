@@ -1,7 +1,7 @@
 //! The round engine: every piece of mutable run state plus the round
 //! protocol, independent of *how* the problem/algorithm/strategy are
-//! owned. The owned [`super::Session`] and the deprecated borrowed
-//! [`super::Coordinator`] are both thin front-ends over this type.
+//! owned. The owned [`super::Session`] is a thin front-end over this
+//! type.
 
 use super::checkpoint::{Checkpoint, RngState, VERSION};
 use super::RunConfig;
@@ -92,11 +92,33 @@ impl RoundEngine {
             assert_eq!(mask.full_dim, d);
         }
         let theta = problem.init_theta(cfg.seed);
+        // Resolve each device's quantization sections once, from the
+        // problem's layout × the run's `quant_sections` spec × the
+        // device's capacity mask. Devices sharing a mask share the
+        // resolved `Sections` (HeteroFL setups hand out two masks to M
+        // devices, not M distinct ones).
+        let layout = problem.layout();
+        let mut section_cache: Vec<(*const CapacityMask, Arc<crate::quant::Sections>)> =
+            Vec::new();
+        let mut sections_for = |mask: &Arc<CapacityMask>| {
+            let key = Arc::as_ptr(mask);
+            if let Some((_, s)) = section_cache.iter().find(|(k, _)| *k == key) {
+                return s.clone();
+            }
+            let s = Arc::new(cfg.quant_sections.resolve(&layout, mask));
+            section_cache.push((key, s.clone()));
+            s
+        };
         let slots = masks
             .iter()
             .enumerate()
             .map(|(i, mask)| DeviceSlot {
-                state: DeviceState::new(i, mask.clone(), cfg.seed),
+                state: DeviceState::with_sections(
+                    i,
+                    mask.clone(),
+                    sections_for(mask),
+                    cfg.seed,
+                ),
                 grad_full: vec![0.0; d],
                 grad_gathered: Vec::with_capacity(mask.support()),
                 scratch: problem.make_scratch(),

@@ -21,10 +21,11 @@
 //! 5. metrics are recorded and streamed to every attached
 //!    [`crate::metrics::observer::RoundObserver`].
 //!
-//! Two front-ends share the [`engine::RoundEngine`] implementing the
-//! protocol: the owned, builder-constructed [`Session`] (use this), and
-//! the deprecated lifetime-bound [`Coordinator`] kept as a shim for one
-//! release. See DESIGN.md §2 for the architecture.
+//! The round protocol is implemented once by [`engine::RoundEngine`];
+//! the owned, builder-constructed [`Session`] is its front-end. (The
+//! deprecated lifetime-bound `Coordinator<'_>` shim that also wrapped
+//! the engine was removed after its one-release grace period — migrate
+//! to `Session::builder(...)`.) See DESIGN.md §2 for the architecture.
 
 pub mod checkpoint;
 pub mod engine;
@@ -32,16 +33,10 @@ mod session;
 
 pub use session::{Session, SessionBuilder};
 
-use crate::algorithms::Algorithm;
-use crate::hetero::CapacityMask;
-use crate::metrics::{RoundRecord, RunTrace};
-use crate::problems::GradientSource;
+use crate::quant::SectionSpec;
 use crate::selection::{FullParticipation, RandomK, SelectionStrategy};
 use crate::transport::scenario::NetworkSpec;
 use crate::transport::FaultSpec;
-use checkpoint::Checkpoint;
-use engine::RoundEngine;
-use std::sync::Arc;
 
 /// Runtime configuration of one FL run.
 #[derive(Clone, Debug)]
@@ -70,9 +65,8 @@ pub struct RunConfig {
     /// DAdaQuant schedule: hard cap on the doubled level.
     pub dadaquant_cap: u8,
     /// Deprecated spelling of [`crate::selection::SelectionSpec::RandomK`]:
-    /// honored by the [`Coordinator`] shim and by [`SessionBuilder`]
-    /// when no explicit strategy/spec is given. Prefer
-    /// `SessionBuilder::selection_spec`.
+    /// honored by [`SessionBuilder`] when no explicit strategy/spec is
+    /// given. Prefer `SessionBuilder::selection_spec`.
     pub sample_k: Option<usize>,
     /// Depth of the model-difference history broadcast (LAQ/LENA `D`).
     pub history_depth: usize,
@@ -82,6 +76,12 @@ pub struct RunConfig {
     /// availability trace). Default: the ideal zero-cost network —
     /// `sim_time` stays 0 and no upload ever straggles.
     pub network: NetworkSpec,
+    /// Quantization sectioning (`crate::quant::sections`): how each
+    /// device partitions its upload into per-scale sections. The
+    /// default `global` reproduces the single-scale wire format
+    /// byte-for-byte; `tensor` gives one scale per `ParamLayout`
+    /// tensor; `fixed:N` gives `N`-element blocks.
+    pub quant_sections: SectionSpec,
 }
 
 impl Default for RunConfig {
@@ -101,12 +101,14 @@ impl Default for RunConfig {
             history_depth: 10,
             faults: FaultSpec::none(),
             network: NetworkSpec::default(),
+            quant_sections: SectionSpec::Global,
         }
     }
 }
 
-/// The deprecated `sample_k` fallback, shared by the [`Coordinator`]
-/// shim and [`SessionBuilder`] so the two front-ends cannot diverge.
+/// The deprecated `sample_k` fallback [`SessionBuilder`] applies when
+/// no explicit strategy/spec is given (kept so old configs keep
+/// working).
 pub(crate) fn strategy_from_cfg(cfg: &RunConfig) -> Box<dyn SelectionStrategy> {
     match cfg.sample_k {
         Some(k) => Box::new(RandomK::new(k.max(1), cfg.seed)),
@@ -114,105 +116,15 @@ pub(crate) fn strategy_from_cfg(cfg: &RunConfig) -> Box<dyn SelectionStrategy> {
     }
 }
 
-/// Deprecated borrowed-reference front-end over
-/// [`engine::RoundEngine`], kept for one release so downstream code
-/// migrating to [`Session`] keeps compiling. Selection is limited to
-/// full participation or `RunConfig::sample_k` random-K; there are no
-/// observers.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `Session::builder(...)` — pluggable selection strategies and metric sinks; \
-            this shim will be removed next release"
-)]
-pub struct Coordinator<'a> {
-    problem: &'a dyn GradientSource,
-    algo: &'a dyn Algorithm,
-    strategy: Box<dyn SelectionStrategy>,
-    engine: RoundEngine,
-}
-
-#[allow(deprecated)]
-impl<'a> Coordinator<'a> {
-    /// Homogeneous setup: every device holds the full model.
-    pub fn new(problem: &'a dyn GradientSource, algo: &'a dyn Algorithm, cfg: RunConfig) -> Self {
-        let d = problem.dim();
-        let m = problem.num_devices();
-        let full = Arc::new(CapacityMask::full(d));
-        Self::with_masks(problem, algo, vec![full; m], cfg)
-    }
-
-    /// Heterogeneous setup with explicit per-device capacity masks
-    /// (Table III / Figure 3; see `crate::hetero::half_half_masks`).
-    pub fn with_masks(
-        problem: &'a dyn GradientSource,
-        algo: &'a dyn Algorithm,
-        masks: Vec<Arc<CapacityMask>>,
-        cfg: RunConfig,
-    ) -> Self {
-        let strategy = strategy_from_cfg(&cfg);
-        let engine = RoundEngine::new(problem, masks, cfg);
-        Self {
-            problem,
-            algo,
-            strategy,
-            engine,
-        }
-    }
-
-    /// Current global model.
-    pub fn theta(&self) -> &[f32] {
-        self.engine.theta()
-    }
-
-    /// Cumulative uplink bits so far.
-    pub fn total_bits(&self) -> u64 {
-        self.engine.total_bits()
-    }
-
-    /// Per-device upload/skip counters.
-    pub fn device_stats(&self) -> Vec<(u64, u64)> {
-        self.engine.device_stats()
-    }
-
-    /// Snapshot the run state (resume with [`Coordinator::restore`]).
-    pub fn snapshot(&self, next_round: usize) -> Checkpoint {
-        self.engine.snapshot(next_round)
-    }
-
-    /// Restore a snapshot produced by [`Coordinator::snapshot`].
-    pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
-        self.engine.restore(ckpt)
-    }
-
-    /// Execute one communication round; returns its record.
-    pub fn run_round(&mut self, round: usize) -> RoundRecord {
-        self.engine
-            .run_round(self.problem, self.algo, self.strategy.as_mut(), round)
-    }
-
-    /// Run the full configured horizon, producing a trace.
-    pub fn run(&mut self, dataset: &str, split: &str) -> RunTrace {
-        let rounds = self.engine.config().rounds;
-        let mut trace = RunTrace {
-            algorithm: self.algo.name().to_string(),
-            dataset: dataset.to_string(),
-            split: split.to_string(),
-            rounds: Vec::with_capacity(rounds),
-        };
-        for k in 0..rounds {
-            trace.rounds.push(self.run_round(k));
-        }
-        trace
-    }
-}
-
 #[cfg(test)]
 mod tests {
+    use super::checkpoint::{self, Checkpoint};
     use super::*;
-    use crate::algorithms::{aquila::Aquila, fedavg::FedAvg, qsgd::QsgdAlgo};
+    use crate::algorithms::{aquila::Aquila, fedavg::FedAvg, qsgd::QsgdAlgo, Algorithm};
     use crate::problems::quadratic::QuadraticProblem;
     use crate::problems::GradientSource;
     use crate::selection::SelectionSpec;
+    use std::sync::Arc;
 
     fn quick_cfg(rounds: usize) -> RunConfig {
         RunConfig {
@@ -438,32 +350,41 @@ mod tests {
         );
     }
 
-    // ---- deprecated shim ------------------------------------------------
-
     #[test]
-    #[allow(deprecated)]
-    fn coordinator_shim_still_works() {
-        // The one-release compatibility guarantee: borrowed construction,
-        // identical results to the Session path.
-        let p = QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5);
-        let algo = Aquila::new(0.25);
-        let t_shim = Coordinator::new(&p, &algo, quick_cfg(20)).run("quad", "iid");
-        let arc = Arc::new(QuadraticProblem::new(16, 4, 0.5, 2.0, 0.5, 5));
-        let t_sess = session(&arc, Arc::new(Aquila::new(0.25)), quick_cfg(20)).run();
-        assert_eq!(t_shim.total_bits(), t_sess.total_bits());
-        assert_eq!(t_shim.final_train_loss(), t_sess.final_train_loss());
+    fn session_honors_deprecated_sample_k() {
+        // `RunConfig::sample_k` (the pre-Session spelling of random-K
+        // selection) must keep working through the builder fallback now
+        // that the borrowed `Coordinator<'_>` shim is gone.
+        use crate::algorithms::dadaquant::DAdaQuant;
+        let p = Arc::new(QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 8));
+        let mut cfg = quick_cfg(10);
+        cfg.sample_k = Some(3);
+        let trace = session(&p, Arc::new(DAdaQuant::uniform(16)), cfg).run();
+        assert!(trace.rounds.iter().all(|r| r.uploads <= 3));
+        assert!(trace.rounds.iter().all(|r| r.uploads >= 1));
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn coordinator_shim_honors_sample_k() {
-        use crate::algorithms::dadaquant::DAdaQuant;
-        let p = QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 8);
-        let algo = DAdaQuant::uniform(16);
-        let mut cfg = quick_cfg(10);
-        cfg.sample_k = Some(3);
-        let trace = Coordinator::new(&p, &algo, cfg).run("q", "iid");
-        assert!(trace.rounds.iter().all(|r| r.uploads <= 3));
-        assert!(trace.rounds.iter().all(|r| r.uploads >= 1));
+    fn sectioned_run_converges_and_shrinks_nothing_it_shouldnt() {
+        // `quant_sections = tensor` over a single-tensor problem
+        // resolves to one section, so the whole run must be
+        // bit-identical to the default global configuration.
+        let p = Arc::new(QuadraticProblem::new(32, 6, 0.5, 2.0, 0.5, 11));
+        let mut cfg = quick_cfg(25);
+        cfg.quant_sections = SectionSpec::Tensor;
+        let t_tensor = session(&p, Arc::new(Aquila::new(0.25)), cfg).run();
+        let t_global = session(&p, Arc::new(Aquila::new(0.25)), quick_cfg(25)).run();
+        assert_eq!(t_tensor.total_bits(), t_global.total_bits());
+        assert_eq!(
+            t_tensor.final_train_loss().to_bits(),
+            t_global.final_train_loss().to_bits()
+        );
+        // Fixed 8-element blocks: payloads grow by the section table
+        // but the run still converges.
+        let mut cfg = quick_cfg(60);
+        cfg.quant_sections = SectionSpec::Fixed(8);
+        let t_fixed = session(&p, Arc::new(Aquila::new(0.25)), cfg).run();
+        let gap = t_fixed.final_train_loss() - p.optimum_value();
+        assert!(gap < 1e-2, "sectioned run failed to converge: {gap}");
     }
 }

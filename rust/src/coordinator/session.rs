@@ -133,8 +133,8 @@ impl SessionBuilder {
 }
 
 /// An owned federated run: problem + algorithm + selection strategy +
-/// observers + mutable round state. Replaces the lifetime-bound
-/// [`super::Coordinator`].
+/// observers + mutable round state. (The lifetime-bound `Coordinator`
+/// front-end it replaced has been removed.)
 pub struct Session {
     problem: Arc<dyn GradientSource>,
     algo: Arc<dyn Algorithm>,

@@ -92,6 +92,21 @@ impl CapacityMask {
         }
     }
 
+    /// Number of support indices falling in the flat index range
+    /// `[lo, hi)` — how many elements of that slice of the full model
+    /// this device actually trains/transmits. Used to resolve
+    /// layout-aware quantization sections over the masked support
+    /// (`crate::quant::sections`).
+    pub fn support_in_range(&self, lo: usize, hi: usize) -> usize {
+        if self.is_full() {
+            hi.min(self.full_dim).saturating_sub(lo.min(self.full_dim))
+        } else {
+            let p0 = self.indices.partition_point(|&i| (i as usize) < lo);
+            let p1 = self.indices.partition_point(|&i| (i as usize) < hi);
+            p1 - p0
+        }
+    }
+
     /// Gather `src[full_dim] -> out[support]`.
     pub fn gather(&self, src: &[f32], out: &mut Vec<f32>) {
         assert_eq!(src.len(), self.full_dim);
@@ -206,6 +221,22 @@ mod tests {
         assert_eq!(masks.len(), 10);
         assert!(masks[..5].iter().all(|m| m.is_full()));
         assert!(masks[5..].iter().all(|m| !m.is_full() && m.ratio == 0.5));
+    }
+
+    #[test]
+    fn support_in_range_counts_mask_hits() {
+        let layout = mlp_layout();
+        let half = CapacityMask::from_layout(&layout, 0.5);
+        // w1 occupies flat [0, 48): the 0.5 mask keeps 4×3 = 12 of it.
+        assert_eq!(half.support_in_range(0, 48), 12);
+        // b1 occupies [48, 56): 4 kept.
+        assert_eq!(half.support_in_range(48, 56), 4);
+        // Whole vector: the full support.
+        assert_eq!(half.support_in_range(0, layout.dim()), half.support());
+        let full = CapacityMask::full(10);
+        assert_eq!(full.support_in_range(3, 7), 4);
+        assert_eq!(full.support_in_range(8, 99), 2);
+        assert_eq!(full.support_in_range(7, 3), 0);
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! repro fig3   [--out DIR]                            Figure 3 series (CSV)
 //! repro ablation-beta [--dataset D]                   Figures 4–5 β sweep
 //! repro run --config FILE [--algo NAME] [--select SPEC] [--network SPEC]
-//!           [--dadaquant-b0 B] [--dadaquant-patience P] [--dadaquant-cap C]
-//!           [--out FILE.csv] [--jsonl FILE.jsonl]     single configured run
+//!           [--quant-sections SPEC] [--dadaquant-b0 B] [--dadaquant-patience P]
+//!           [--dadaquant-cap C] [--out FILE.csv] [--jsonl FILE.jsonl]
+//!                                                     single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
 //! repro list                                          presets + algorithms + strategies
 //! ```
@@ -17,6 +18,7 @@ use aquila::algorithms::{self, Algorithm};
 use aquila::config::{table2_rows, table3_rows, DatasetKind, ExperimentSpec, SplitKind};
 use aquila::metrics::bits_display;
 use aquila::metrics::observer::{CsvStream, JsonLines};
+use aquila::quant::SectionSpec;
 use aquila::repro;
 use aquila::selection::SelectionSpec;
 use aquila::transport::scenario::NetworkSpec;
@@ -206,6 +208,18 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
+    if let Some(s) = args.flags.get("quant-sections") {
+        match SectionSpec::parse(s) {
+            Some(q) => spec.quant_sections = q,
+            None => {
+                eprintln!(
+                    "unknown quant-sections spec '{s}' (try: {})",
+                    SectionSpec::SYNTAX
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     // DAdaQuant schedule overrides (`dadaquant_*` TOML keys have the
     // same effect; the CLI wins).
     if let Some(v) = args.flags.get("dadaquant-b0") {
@@ -245,7 +259,7 @@ fn cmd_run(args: &Args) -> ExitCode {
         return ExitCode::FAILURE;
     };
     println!(
-        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={})",
+        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={}, sections={})",
         algo.name(),
         spec.row_label(),
         spec.devices,
@@ -254,6 +268,7 @@ fn cmd_run(args: &Args) -> ExitCode {
         spec.beta,
         spec.selection,
         spec.network,
+        spec.quant_sections,
     );
     // Streaming sinks: rounds hit the files as they complete.
     let mut builder = repro::session_for(&spec, algo);
@@ -334,6 +349,10 @@ fn cmd_list() {
         "network scenarios (--network / network = \"...\"): {}",
         NetworkSpec::SYNTAX
     );
+    println!(
+        "quantization sections (--quant-sections / quant_sections = \"...\"): {}",
+        SectionSpec::SYNTAX
+    );
 }
 
 fn main() -> ExitCode {
@@ -352,8 +371,8 @@ fn main() -> ExitCode {
             println!("  table2 | table3 | fig2 | fig3 | ablation-beta | run | theory | list");
             println!("  common flags: --scale S --rounds N --seed K --out DIR");
             println!("  run flags: --config FILE --algo NAME --select SPEC --network SPEC");
-            println!("             --jsonl FILE --dadaquant-b0 B --dadaquant-patience P");
-            println!("             --dadaquant-cap C");
+            println!("             --quant-sections SPEC --jsonl FILE --dadaquant-b0 B");
+            println!("             --dadaquant-patience P --dadaquant-cap C");
         }
     }
     ExitCode::SUCCESS

@@ -40,10 +40,16 @@ pub const MAX_BITS: u8 = 32;
 pub struct QuantizedVec {
     /// Quantization level `b` (bits per element), `1 ..= MAX_BITS`.
     pub bits: u8,
-    /// Quantization range `R = ‖v‖_∞` at quantization time.
+    /// Quantization range `R = ‖v‖_∞` at quantization time. For
+    /// sectioned vectors this is the *global* `‖v‖_∞` (the max section
+    /// scale), kept for metrics; reconstruction uses `section_scales`.
     pub range: f32,
     /// Integer codes, each in `[0, 2^b − 1]`.
     pub psi: Vec<u32>,
+    /// Per-section `(scale, len)` pairs (`crate::quant::sections`;
+    /// serialized as the wire v2 section table). Empty = single global
+    /// `range` — the v1 wire form.
+    pub section_scales: Vec<(f32, u32)>,
 }
 
 impl QuantizedVec {
@@ -59,12 +65,19 @@ impl QuantizedVec {
         self.psi.len()
     }
 
+    /// Whether this vector carries per-section scales (wire v2).
+    #[inline]
+    pub fn is_sectioned(&self) -> bool {
+        !self.section_scales.is_empty()
+    }
+
     /// An all-zero quantization (used for `q_m^{-1} = 0` at round 0).
     pub fn zeros(bits: u8, d: usize) -> Self {
         Self {
             bits,
             range: 0.0,
             psi: vec![0; d],
+            section_scales: Vec::new(),
         }
     }
 }
@@ -99,12 +112,27 @@ pub fn quantize_with_range(v: &[f32], bits: u8, range: f32) -> QuantizedVec {
 /// device's code buffer across rounds — §Perf).
 pub fn quantize_with_range_into(v: &[f32], bits: u8, range: f32, mut psi: Vec<u32>) -> QuantizedVec {
     assert!((1..=MAX_BITS).contains(&bits), "bits must be in 1..=32");
-    assert!(range >= 0.0 && range.is_finite(), "range must be finite ≥ 0");
     psi.clear();
     psi.reserve(v.len());
+    quantize_slice_append(v, bits, range, &mut psi);
+    QuantizedVec {
+        bits,
+        range,
+        psi,
+        section_scales: Vec::new(),
+    }
+}
+
+/// Quantize one slice at an externally supplied range, *appending* its
+/// codes to `psi` — the shared core of the global and sectioned
+/// quantizers. Arithmetic is exactly Definition 2, unchanged from the
+/// pre-sectioning implementation (so `global` wire payloads stay
+/// byte-identical).
+fn quantize_slice_append(v: &[f32], bits: u8, range: f32, psi: &mut Vec<u32>) {
+    assert!(range >= 0.0 && range.is_finite(), "range must be finite ≥ 0");
     if range == 0.0 {
-        psi.resize(v.len(), 0);
-        return QuantizedVec { bits, range, psi };
+        psi.resize(psi.len() + v.len(), 0);
+        return;
     }
     let max_code = crate::quant::max_code(bits);
     if bits <= 12 {
@@ -131,19 +159,76 @@ pub fn quantize_with_range_into(v: &[f32], bits: u8, range: f32, mut psi: Vec<u3
             psi.push(code);
         }
     }
-    QuantizedVec { bits, range, psi }
 }
 
-/// Reconstruct `Δq` per Lemma 4: `Δqᵢ = 2τR·ψᵢ − R`.
+/// Section-aware [`quantize`]: one range `R_s = ‖v_s‖_∞` per section
+/// of `sections` (Definition 2 applied per section). Codes still use
+/// one `bits` level for the whole payload; only the scales vary. A
+/// single-section partition produces the plain global form —
+/// byte-identical on the wire to [`quantize`].
+pub fn quantize_sections(v: &[f32], bits: u8, sections: &crate::quant::Sections) -> QuantizedVec {
+    quantize_sections_buf(v, bits, sections, Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize_sections`] (see
+/// [`quantize_with_range_into`] for the recycling contract).
+pub fn quantize_sections_buf(
+    v: &[f32],
+    bits: u8,
+    sections: &crate::quant::Sections,
+    mut psi: Vec<u32>,
+) -> QuantizedVec {
+    assert!((1..=MAX_BITS).contains(&bits), "bits must be in 1..=32");
+    assert_eq!(sections.total(), v.len(), "sections must cover the vector");
+    if sections.is_global() {
+        return quantize_buf(v, bits, psi);
+    }
+    psi.clear();
+    psi.reserve(v.len());
+    let mut scales = Vec::with_capacity(sections.count());
+    let mut range = 0.0f32;
+    for r in sections.iter() {
+        let slice = &v[r.clone()];
+        let rs = crate::util::vecmath::norm_inf(slice);
+        quantize_slice_append(slice, bits, rs, &mut psi);
+        scales.push((rs, r.len() as u32));
+        range = range.max(rs);
+    }
+    QuantizedVec {
+        bits,
+        range,
+        psi,
+        section_scales: scales,
+    }
+}
+
+/// Reconstruct `Δq` per Lemma 4: `Δqᵢ = 2τR·ψᵢ − R` (with the
+/// section's own `R` for sectioned vectors).
 pub fn dequantize_into(q: &QuantizedVec, out: &mut [f32]) {
     assert_eq!(q.psi.len(), out.len());
-    if q.range == 0.0 {
+    if q.is_sectioned() {
+        let mut off = 0usize;
+        for &(scale, len) in &q.section_scales {
+            let len = len as usize;
+            dequantize_slice(&q.psi[off..off + len], q.bits, scale, &mut out[off..off + len]);
+            off += len;
+        }
+        debug_assert_eq!(off, out.len());
+        return;
+    }
+    dequantize_slice(&q.psi, q.bits, q.range, out);
+}
+
+/// Lemma-4 reconstruction of one slice at one scale — shared by the
+/// global and sectioned [`dequantize_into`] paths.
+fn dequantize_slice(psi: &[u32], bits: u8, range: f32, out: &mut [f32]) {
+    if range == 0.0 {
         out.fill(0.0);
         return;
     }
-    let step = 2.0 * q.tau() * q.range as f64;
-    let r = q.range as f64;
-    for (o, &code) in out.iter_mut().zip(&q.psi) {
+    let step = 2.0 * tau(bits) * range as f64;
+    let r = range as f64;
+    for (o, &code) in out.iter_mut().zip(psi) {
         *o = (step * code as f64 - r) as f32;
     }
 }
@@ -246,22 +331,97 @@ pub fn quantize_innovation_fused_buf(
     assert_eq!(g.len(), q_prev.len());
     assert_eq!(g.len(), dq_out.len());
     assert!((1..=MAX_BITS).contains(&bits));
-    let d = g.len();
     psi.clear();
-    psi.reserve(d);
+    psi.reserve(g.len());
+    let (dq_norm_sq, err_norm_sq) =
+        fused_quantize_slice_append(g, q_prev, bits, range, dq_out, &mut psi);
+    QuantizeOutcome {
+        quantized: QuantizedVec {
+            bits,
+            range,
+            psi,
+            section_scales: Vec::new(),
+        },
+        dq_norm_sq,
+        err_norm_sq,
+    }
+}
+
+/// Section-aware [`quantize_innovation_fused_buf`]: quantize the
+/// implicit innovation `v = g − q_prev` with one externally supplied
+/// range per section (`ranges[i]` for `sections.range(i)` — usually the
+/// per-section `‖v_s‖_∞` from the fused norm pass). Returns the summed
+/// `‖Δq‖₂²` / `‖ε‖₂²` across sections, so AQUILA's eq. 8 skip rule is
+/// evaluated on the whole upload exactly as in the global case. A
+/// single-section partition delegates to the global path and produces
+/// byte-identical wire payloads.
+pub fn quantize_innovation_fused_sections_buf(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    ranges: &[f32],
+    sections: &crate::quant::Sections,
+    dq_out: &mut [f32],
+    mut psi: Vec<u32>,
+) -> QuantizeOutcome {
+    assert_eq!(g.len(), q_prev.len());
+    assert_eq!(g.len(), dq_out.len());
+    assert_eq!(sections.total(), g.len(), "sections must cover the vector");
+    assert_eq!(ranges.len(), sections.count(), "one range per section");
+    assert!((1..=MAX_BITS).contains(&bits));
+    if sections.is_global() {
+        return quantize_innovation_fused_buf(g, q_prev, bits, ranges[0], dq_out, psi);
+    }
+    psi.clear();
+    psi.reserve(g.len());
+    let mut dq_norm_sq = 0.0f64;
+    let mut err_norm_sq = 0.0f64;
+    let mut scales = Vec::with_capacity(sections.count());
+    let mut range = 0.0f32;
+    for (i, r) in sections.iter().enumerate() {
+        let (a, b) = fused_quantize_slice_append(
+            &g[r.clone()],
+            &q_prev[r.clone()],
+            bits,
+            ranges[i],
+            &mut dq_out[r.clone()],
+            &mut psi,
+        );
+        dq_norm_sq += a;
+        err_norm_sq += b;
+        scales.push((ranges[i], r.len() as u32));
+        range = range.max(ranges[i]);
+    }
+    QuantizeOutcome {
+        quantized: QuantizedVec {
+            bits,
+            range,
+            psi,
+            section_scales: scales,
+        },
+        dq_norm_sq,
+        err_norm_sq,
+    }
+}
+
+/// The fused quantize pass over one slice at one range, *appending*
+/// codes to `psi` and returning `(‖Δq‖₂², ‖ε‖₂²)` for the slice — the
+/// shared core of the global and sectioned device steps. Per-element
+/// arithmetic is unchanged from the pre-sectioning implementation.
+fn fused_quantize_slice_append(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    range: f32,
+    dq_out: &mut [f32],
+    psi: &mut Vec<u32>,
+) -> (f64, f64) {
+    let d = g.len();
     if range == 0.0 {
-        psi.resize(d, 0);
+        psi.resize(psi.len() + d, 0);
         dq_out.fill(0.0);
         // ε = v − 0 = v; with range 0 the innovation is exactly zero.
-        return QuantizeOutcome {
-            quantized: QuantizedVec {
-                bits,
-                range,
-                psi,
-            },
-            dq_norm_sq: 0.0,
-            err_norm_sq: 0.0,
-        };
+        return (0.0, 0.0);
     }
     let max_code = crate::quant::max_code(bits);
     let mut dq_norm_sq = 0.0f64;
@@ -275,8 +435,9 @@ pub fn quantize_innovation_fused_buf(
         let step = 2.0 * t32 * range;
         let inv_step = 1.0 / step;
         let maxc = max_code as f32;
-        psi.resize(d, 0);
-        let psi_s = psi.as_mut_slice();
+        let base = psi.len();
+        psi.resize(base + d, 0);
+        let psi_s = &mut psi[base..];
         // Four independent accumulator lanes break the f64-add
         // dependency chain (§Perf iteration 2: +25% on d = 1M).
         let mut dq_acc = [0.0f64; 4];
@@ -311,11 +472,7 @@ pub fn quantize_innovation_fused_buf(
             psi.push(code);
         }
     }
-    QuantizeOutcome {
-        quantized: QuantizedVec { bits, range, psi },
-        dq_norm_sq,
-        err_norm_sq,
-    }
+    (dq_norm_sq, err_norm_sq)
 }
 
 #[cfg(test)]
@@ -508,6 +665,93 @@ mod tests {
         }
         assert_eq!(out[0], 0.0);
         assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn sectioned_single_section_is_global() {
+        use crate::quant::Sections;
+        let mut rng = Xoshiro256pp::seed_from_u64(90);
+        let v: Vec<f32> = (0..129).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let global = quantize(&v, 5);
+        let sect = quantize_sections(&v, 5, &Sections::global(v.len()));
+        assert_eq!(sect, global);
+        assert!(!sect.is_sectioned());
+    }
+
+    #[test]
+    fn sectioned_scales_follow_section_ranges() {
+        use crate::quant::Sections;
+        // Two sections with wildly different magnitudes: the small
+        // section must get its own (small) scale and near-lossless
+        // reconstruction relative to the global grid.
+        let mut v = vec![0.01f32, -0.02, 0.015, 0.005];
+        v.extend_from_slice(&[100.0, -50.0, 75.0, -100.0]);
+        let sections = Sections::from_lens([4usize, 4]);
+        let q = quantize_sections(&v, 6, &sections);
+        assert!(q.is_sectioned());
+        assert_eq!(q.section_scales.len(), 2);
+        assert_eq!(q.section_scales[0], (0.02, 4));
+        assert_eq!(q.section_scales[1], (100.0, 4));
+        assert_eq!(q.range, 100.0);
+        let dq = dequantize(&q);
+        for (i, (a, b)) in v.iter().zip(&dq).enumerate() {
+            let rs = if i < 4 { 0.02 } else { 100.0 };
+            assert!(
+                ((a - b).abs() as f64) <= tau(6) * rs + 1e-6,
+                "i={i}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_sections_matches_composed_per_section() {
+        use crate::quant::Sections;
+        let mut rng = Xoshiro256pp::seed_from_u64(91);
+        let d = 257;
+        let g: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let qp: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = g.iter().zip(&qp).map(|(a, b)| a - b).collect();
+        let sections = Sections::from_lens([100usize, 57, 100]);
+        let ranges: Vec<f32> = sections
+            .iter()
+            .map(|r| crate::util::vecmath::norm_inf(&v[r]))
+            .collect();
+        let mut dq = vec![0.0f32; d];
+        let out = quantize_innovation_fused_sections_buf(
+            &g,
+            &qp,
+            6,
+            &ranges,
+            &sections,
+            &mut dq,
+            Vec::new(),
+        );
+        let composed = quantize_sections(&v, 6, &sections);
+        assert_eq!(out.quantized, composed);
+        // Summed norms consistent with the materialized reconstruction.
+        let dq_n = crate::util::vecmath::norm2_sq(&dq);
+        assert!((out.dq_norm_sq - dq_n).abs() / dq_n.max(1.0) < 1e-5);
+        let err: Vec<f32> = v.iter().zip(&dq).map(|(a, b)| a - b).collect();
+        let err_n = crate::util::vecmath::norm2_sq(&err);
+        assert!((out.err_norm_sq - err_n).abs() <= 1e-5 * err_n.max(1.0));
+        // Single-section partition delegates to the global path.
+        let gsec = Sections::global(d);
+        let (l2sq, linf) = crate::util::vecmath::l2sq_and_linf(&v);
+        let mut dq2 = vec![0.0f32; d];
+        let out2 = quantize_innovation_fused_sections_buf(
+            &g,
+            &qp,
+            6,
+            &[linf],
+            &gsec,
+            &mut dq2,
+            Vec::new(),
+        );
+        let mut dq3 = vec![0.0f32; d];
+        let out3 = quantize_innovation_fused(&g, &qp, 6, linf, &mut dq3);
+        assert_eq!(out2.quantized, out3.quantized);
+        assert_eq!(out2.dq_norm_sq.to_bits(), out3.dq_norm_sq.to_bits());
+        let _ = l2sq;
     }
 
     #[test]

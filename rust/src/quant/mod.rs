@@ -1,17 +1,20 @@
 //! Quantization: the mid-tread quantizer of Definition 2, the QSGD
 //! stochastic baseline, adaptive level rules (AQUILA eq. 19, AdaQuantFL,
-//! DAdaQuant), and the bit-packed wire encoding.
+//! DAdaQuant), layout-aware sectioning (per-tensor / fixed-block
+//! scales), and the bit-packed wire encoding.
 
 pub mod levels;
 pub mod midtread;
 pub mod packing;
 pub mod qsgd;
+pub mod sections;
 
 pub use levels::{adaquantfl_level, aquila_level, aquila_level_upper_bound, aquila_tau_star};
 pub use midtread::{
     dequantize, dequantize_into, quantize, quantize_innovation_fused, quantize_with_range,
     QuantizeOutcome, QuantizedVec, MAX_BITS,
 };
+pub use sections::{SectionSpec, Sections};
 
 /// Bit mask covering the low `bits` bits of a code word — the single
 /// source of the `(1 << b) − 1` expression previously duplicated across

@@ -21,18 +21,28 @@ use crate::util::vecmath::norm2;
 pub struct QsgdVec {
     /// Magnitude bits per element.
     pub bits: u8,
-    /// `‖v‖₂` scale.
+    /// `‖v‖₂` scale. For sectioned vectors this is the max section
+    /// norm, kept for metrics; reconstruction uses `section_scales`.
     pub norm: f32,
     /// Magnitude codes in `[0, 2^b − 1]`.
     pub mags: Vec<u32>,
     /// Sign bits (true = negative).
     pub signs: Vec<bool>,
+    /// Per-section `(‖v_s‖₂, len)` pairs (`crate::quant::sections`;
+    /// serialized as the wire v2 section table). Empty = single global
+    /// `norm` — the v1 wire form.
+    pub section_scales: Vec<(f32, u32)>,
 }
 
 impl QsgdVec {
     /// Element count `d`.
     pub fn dim(&self) -> usize {
         self.mags.len()
+    }
+
+    /// Whether this vector carries per-section norms (wire v2).
+    pub fn is_sectioned(&self) -> bool {
+        !self.section_scales.is_empty()
     }
 }
 
@@ -53,21 +63,88 @@ pub fn quantize_buf(
 ) -> QsgdVec {
     assert!((1..=31).contains(&bits), "qsgd bits must be in 1..=31");
     let norm = norm2(v) as f32;
-    let s = crate::quant::code_mask(bits) as f64;
     mags.clear();
     mags.reserve(v.len());
     signs.clear();
     signs.reserve(v.len());
-    if norm == 0.0 {
-        mags.resize(v.len(), 0);
-        signs.resize(v.len(), false);
-        return QsgdVec {
-            bits,
-            norm,
-            mags,
-            signs,
-        };
+    quantize_slice_append(v, bits, norm, rng, &mut mags, &mut signs);
+    QsgdVec {
+        bits,
+        norm,
+        mags,
+        signs,
+        section_scales: Vec::new(),
     }
+}
+
+/// Section-aware [`quantize`]: one norm `‖v_s‖₂` per section of
+/// `sections`. A single-section partition produces the plain global
+/// form — byte-identical on the wire to [`quantize`].
+pub fn quantize_sections(
+    v: &[f32],
+    bits: u8,
+    sections: &crate::quant::Sections,
+    rng: &mut Xoshiro256pp,
+) -> QsgdVec {
+    quantize_sections_buf(v, bits, sections, rng, Vec::new(), Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize_sections`] (see [`quantize_buf`]
+/// for the recycling contract).
+pub fn quantize_sections_buf(
+    v: &[f32],
+    bits: u8,
+    sections: &crate::quant::Sections,
+    rng: &mut Xoshiro256pp,
+    mut mags: Vec<u32>,
+    mut signs: Vec<bool>,
+) -> QsgdVec {
+    assert!((1..=31).contains(&bits), "qsgd bits must be in 1..=31");
+    assert_eq!(sections.total(), v.len(), "sections must cover the vector");
+    if sections.is_global() {
+        return quantize_buf(v, bits, rng, mags, signs);
+    }
+    mags.clear();
+    mags.reserve(v.len());
+    signs.clear();
+    signs.reserve(v.len());
+    let mut scales = Vec::with_capacity(sections.count());
+    let mut norm = 0.0f32;
+    for r in sections.iter() {
+        let slice = &v[r.clone()];
+        let ns = norm2(slice) as f32;
+        quantize_slice_append(slice, bits, ns, rng, &mut mags, &mut signs);
+        scales.push((ns, r.len() as u32));
+        norm = norm.max(ns);
+    }
+    QsgdVec {
+        bits,
+        norm,
+        mags,
+        signs,
+        section_scales: scales,
+    }
+}
+
+/// Stochastically quantize one slice at one norm, *appending* codes —
+/// the shared core of the global and sectioned quantizers. Per-element
+/// arithmetic (and RNG consumption order) is unchanged from the
+/// pre-sectioning implementation; a zero-norm slice consumes no
+/// randomness.
+fn quantize_slice_append(
+    v: &[f32],
+    bits: u8,
+    norm: f32,
+    rng: &mut Xoshiro256pp,
+    mags: &mut Vec<u32>,
+    signs: &mut Vec<bool>,
+) {
+    if norm == 0.0 {
+        mags.resize(mags.len() + v.len(), 0);
+        signs.resize(signs.len() + v.len(), false);
+        return;
+    }
+    let s = crate::quant::code_mask(bits) as f64;
     let inv = 1.0 / norm as f64;
     for &x in v {
         signs.push(x < 0.0);
@@ -77,26 +154,43 @@ pub fn quantize_buf(
         let code = if rng.next_f64() < p { l + 1.0 } else { l };
         mags.push(code.min(s) as u32);
     }
-    QsgdVec {
-        bits,
-        norm,
-        mags,
-        signs,
-    }
 }
 
-/// Reconstruct the (unbiased) estimate of `v`.
+/// Reconstruct the (unbiased) estimate of `v` (with the section's own
+/// norm for sectioned vectors).
 pub fn dequantize_into(q: &QsgdVec, out: &mut [f32]) {
     assert_eq!(q.mags.len(), out.len());
-    if q.norm == 0.0 {
+    if q.is_sectioned() {
+        let mut off = 0usize;
+        for &(norm, len) in &q.section_scales {
+            let len = len as usize;
+            dequantize_slice(
+                &q.mags[off..off + len],
+                &q.signs[off..off + len],
+                q.bits,
+                norm,
+                &mut out[off..off + len],
+            );
+            off += len;
+        }
+        debug_assert_eq!(off, out.len());
+        return;
+    }
+    dequantize_slice(&q.mags, &q.signs, q.bits, q.norm, out);
+}
+
+/// Reconstruction of one slice at one norm — shared by the global and
+/// sectioned [`dequantize_into`] paths.
+fn dequantize_slice(mags: &[u32], signs: &[bool], bits: u8, norm: f32, out: &mut [f32]) {
+    if norm == 0.0 {
         out.fill(0.0);
         return;
     }
-    let s = crate::quant::code_mask(q.bits) as f64;
-    let scale = q.norm as f64 / s;
+    let s = crate::quant::code_mask(bits) as f64;
+    let scale = norm as f64 / s;
     for i in 0..out.len() {
-        let mag = scale * q.mags[i] as f64;
-        out[i] = if q.signs[i] { -mag } else { mag } as f32;
+        let mag = scale * mags[i] as f64;
+        out[i] = if signs[i] { -mag } else { mag } as f32;
     }
 }
 
@@ -237,6 +331,41 @@ mod tests {
         dequantize_scatter_add(&signs, &mags, 5, q.norm, 64..d, None, 64, 0.75, hi);
         for (i, (a, b)) in out.iter().zip(&expect).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn sectioned_single_section_is_global() {
+        use crate::quant::Sections;
+        let mut rng = Xoshiro256pp::seed_from_u64(40);
+        let v: Vec<f32> = (0..65).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let mut r1 = Xoshiro256pp::seed_from_u64(41);
+        let mut r2 = Xoshiro256pp::seed_from_u64(41);
+        let global = quantize(&v, 4, &mut r1);
+        let sect = quantize_sections(&v, 4, &Sections::global(v.len()), &mut r2);
+        assert_eq!(global, sect);
+        assert!(!sect.is_sectioned());
+    }
+
+    #[test]
+    fn sectioned_norms_follow_sections() {
+        use crate::quant::Sections;
+        let mut v = vec![0.01f32, -0.01, 0.01, -0.01];
+        v.extend_from_slice(&[30.0, -40.0, 0.0, 0.0]);
+        let sections = Sections::from_lens([4usize, 4]);
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let q = quantize_sections(&v, 6, &sections, &mut rng);
+        assert!(q.is_sectioned());
+        assert_eq!(q.section_scales.len(), 2);
+        assert_eq!(q.section_scales[0].1, 4);
+        assert_eq!(q.section_scales[1], (50.0, 4)); // 3-4-5 triangle
+        // Reconstruction error of the small section is bounded by its
+        // own norm, not the global one.
+        let dq = dequantize(&q);
+        let s = crate::quant::code_mask(6) as f64;
+        for i in 0..4 {
+            let bound = q.section_scales[0].0 as f64 / s + 1e-9;
+            assert!(((v[i] - dq[i]).abs() as f64) <= bound, "i={i}");
         }
     }
 

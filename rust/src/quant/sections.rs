@@ -1,0 +1,295 @@
+//! Layout-aware sectioning of quantized uploads.
+//!
+//! AQUILA's mid-tread quantizer (Definition 2) historically used **one**
+//! range `R = ‖v‖_∞` for the whole upload, so a single outlier tensor
+//! (e.g. a bias whose gradient runs 100× hotter than the weight
+//! matrices) inflates the quantization step of every coordinate. This
+//! module partitions the flat (gathered) parameter vector into
+//! *sections*, each quantized with its own scale:
+//!
+//! * [`SectionSpec::Global`] — one section, today's behavior; wire
+//!   payloads are **byte-identical** to the pre-sectioning format.
+//! * [`SectionSpec::Tensor`] — one section per [`ParamLayout`] entry
+//!   (per named tensor), the FedFQ-style layer granularity.
+//! * [`SectionSpec::Fixed`]`(N)` — fixed `N`-element blocks, the
+//!   block-wise granularity of the quantization literature.
+//!
+//! Sections are resolved **over the device's masked support**: under a
+//! HeteroFL [`CapacityMask`] a tensor's section covers exactly the
+//! support positions that fall inside that tensor's flat index range,
+//! so heterogeneous devices quantize each (sub)tensor with its own
+//! scale too. Resolution happens once per device at engine
+//! construction; the resolved [`Sections`] ride in
+//! `algorithms::DeviceState` and in the wire v2 section table
+//! (`transport::wire`).
+
+use crate::hetero::CapacityMask;
+use crate::problems::ParamLayout;
+use std::fmt;
+
+/// Hard cap on sections per upload: the wire v2 header stores the
+/// section count as a `u16`. [`SectionSpec::resolve`] widens fixed
+/// block sizes as needed so the cap is never exceeded.
+pub const MAX_SECTIONS: usize = u16::MAX as usize;
+
+/// How to partition an upload vector into quantization sections.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SectionSpec {
+    /// One section for the whole vector (the pre-sectioning behavior;
+    /// wire payloads stay byte-identical to the v1 single-scale
+    /// encoding).
+    #[default]
+    Global,
+    /// One section per [`ParamLayout`] tensor.
+    Tensor,
+    /// Fixed-size blocks of the given element count (≥ 1).
+    Fixed(usize),
+}
+
+impl SectionSpec {
+    /// Accepted config syntax, shown by `repro list` and error messages.
+    pub const SYNTAX: &'static str = "global | tensor | fixed:N";
+
+    /// Parse a spec string: `global`, `tensor`, or `fixed:N` (N ≥ 1).
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "global" => Some(Self::Global),
+            "tensor" | "layer" => Some(Self::Tensor),
+            _ => {
+                let n = s.strip_prefix("fixed:")?.parse::<usize>().ok()?;
+                if n >= 1 {
+                    Some(Self::Fixed(n))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Resolve the spec into concrete section boundaries over a
+    /// device's gathered (mask-support) vector.
+    ///
+    /// * `Global` ignores the layout: one section of `mask.support()`.
+    /// * `Tensor` intersects each layout entry's flat index range with
+    ///   the mask's sorted support indices (empty intersections are
+    ///   dropped); requires `layout.dim() == mask.full_dim`.
+    /// * `Fixed(n)` tiles the support in `n`-element blocks, widening
+    ///   `n` if needed so the block count stays within
+    ///   [`MAX_SECTIONS`].
+    pub fn resolve(&self, layout: &ParamLayout, mask: &CapacityMask) -> Sections {
+        let support = mask.support();
+        match *self {
+            SectionSpec::Global => Sections::global(support),
+            SectionSpec::Tensor => {
+                assert_eq!(
+                    layout.dim(),
+                    mask.full_dim,
+                    "layout dim {} != mask dim {}",
+                    layout.dim(),
+                    mask.full_dim
+                );
+                assert!(
+                    layout.entries.len() <= MAX_SECTIONS,
+                    "layout has more tensors than the wire section cap"
+                );
+                let lens = layout.entries.iter().map(|e| {
+                    mask.support_in_range(e.offset, e.offset + e.numel())
+                });
+                Sections::from_lens(lens)
+            }
+            SectionSpec::Fixed(n) => {
+                // Widen the block so the count fits the u16 wire field.
+                let n = n.max(support.div_ceil(MAX_SECTIONS)).max(1);
+                let full = support / n;
+                let rem = support - full * n;
+                let lens = std::iter::repeat_n(n, full).chain((rem > 0).then_some(rem));
+                Sections::from_lens(lens)
+            }
+        }
+    }
+}
+
+impl fmt::Display for SectionSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SectionSpec::Global => write!(f, "global"),
+            SectionSpec::Tensor => write!(f, "tensor"),
+            SectionSpec::Fixed(n) => write!(f, "fixed:{n}"),
+        }
+    }
+}
+
+/// Resolved section boundaries over a vector: a partition of
+/// `0..total()` into `count()` contiguous non-empty ranges (except the
+/// degenerate empty-vector case, which has one empty section so the
+/// partition is never zero-length).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sections {
+    /// Cumulative boundaries: `bounds[0] = 0`, `bounds[i]` is the start
+    /// of section `i`, `bounds[count()] = total()`.
+    bounds: Vec<u32>,
+}
+
+impl Sections {
+    /// The single-section partition of an `n`-element vector.
+    pub fn global(n: usize) -> Self {
+        Self {
+            bounds: vec![0, u32::try_from(n).expect("vector too large for wire")],
+        }
+    }
+
+    /// Build from section lengths; zero-length sections are dropped.
+    /// An empty (or all-zero) iterator yields the degenerate
+    /// single-empty-section partition of a zero-length vector.
+    pub fn from_lens<I: IntoIterator<Item = usize>>(lens: I) -> Self {
+        let mut bounds = vec![0u32];
+        let mut acc = 0usize;
+        for len in lens {
+            if len == 0 {
+                continue;
+            }
+            acc += len;
+            bounds.push(u32::try_from(acc).expect("vector too large for wire"));
+        }
+        if bounds.len() == 1 {
+            bounds.push(0);
+        }
+        assert!(bounds.len() - 1 <= MAX_SECTIONS, "too many sections");
+        Self { bounds }
+    }
+
+    /// Number of sections (≥ 1).
+    pub fn count(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total element count covered.
+    pub fn total(&self) -> usize {
+        *self.bounds.last().unwrap() as usize
+    }
+
+    /// Whether this is the single-section (global) partition — in which
+    /// case quantizers emit the v1 single-scale wire form.
+    pub fn is_global(&self) -> bool {
+        self.count() == 1
+    }
+
+    /// Element range of section `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.bounds[i] as usize..self.bounds[i + 1] as usize
+    }
+
+    /// Iterate the section ranges in order.
+    pub fn iter(&self) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.count()).map(|i| self.range(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> ParamLayout {
+        ParamLayout::contiguous(&[("w1", vec![8, 6]), ("b1", vec![8]), ("w2", vec![4, 8])])
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for (s, spec) in [
+            ("global", SectionSpec::Global),
+            ("tensor", SectionSpec::Tensor),
+            ("fixed:1024", SectionSpec::Fixed(1024)),
+        ] {
+            assert_eq!(SectionSpec::parse(s), Some(spec));
+            assert_eq!(spec.to_string(), s);
+        }
+        assert_eq!(SectionSpec::parse("layer"), Some(SectionSpec::Tensor));
+        assert_eq!(SectionSpec::parse(" Fixed:2 "), Some(SectionSpec::Fixed(2)));
+        assert_eq!(SectionSpec::parse("fixed:0"), None);
+        assert_eq!(SectionSpec::parse("fixed:"), None);
+        assert_eq!(SectionSpec::parse("blocks"), None);
+        assert_eq!(SectionSpec::default(), SectionSpec::Global);
+    }
+
+    #[test]
+    fn global_partition() {
+        let l = layout();
+        let mask = CapacityMask::full(l.dim());
+        let s = SectionSpec::Global.resolve(&l, &mask);
+        assert!(s.is_global());
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.total(), l.dim());
+        assert_eq!(s.range(0), 0..l.dim());
+    }
+
+    #[test]
+    fn tensor_partition_full_mask() {
+        let l = layout();
+        let mask = CapacityMask::full(l.dim());
+        let s = SectionSpec::Tensor.resolve(&l, &mask);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.range(0), 0..48);
+        assert_eq!(s.range(1), 48..56);
+        assert_eq!(s.range(2), 56..88);
+        assert_eq!(s.total(), 88);
+        assert!(!s.is_global());
+    }
+
+    #[test]
+    fn tensor_partition_masked_support() {
+        let l = layout();
+        let mask = CapacityMask::from_layout(&l, 0.5);
+        let s = SectionSpec::Tensor.resolve(&l, &mask);
+        // w1: 4×3 = 12, b1: 4, w2: 2×4 = 8 (the from_layout halves).
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.range(0).len(), 12);
+        assert_eq!(s.range(1).len(), 4);
+        assert_eq!(s.range(2).len(), 8);
+        assert_eq!(s.total(), mask.support());
+    }
+
+    #[test]
+    fn fixed_partition_tiles_support() {
+        let l = layout();
+        let mask = CapacityMask::full(l.dim()); // 88 elements
+        let s = SectionSpec::Fixed(32).resolve(&l, &mask);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.range(0).len(), 32);
+        assert_eq!(s.range(1).len(), 32);
+        assert_eq!(s.range(2).len(), 24);
+        assert_eq!(s.total(), 88);
+        // A block size larger than the vector degenerates to global.
+        assert!(SectionSpec::Fixed(1000).resolve(&l, &mask).is_global());
+    }
+
+    #[test]
+    fn fixed_partition_respects_section_cap() {
+        let l = ParamLayout::contiguous(&[("theta", vec![1_000_000])]);
+        let mask = CapacityMask::full(l.dim());
+        let s = SectionSpec::Fixed(1).resolve(&l, &mask);
+        assert!(s.count() <= MAX_SECTIONS);
+        assert_eq!(s.total(), 1_000_000);
+    }
+
+    #[test]
+    fn empty_support_degenerates_to_one_empty_section() {
+        let s = Sections::global(0);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.total(), 0);
+        assert!(s.is_global());
+        let s2 = Sections::from_lens([0usize, 0, 0]);
+        assert_eq!(s2.count(), 1);
+        assert_eq!(s2.total(), 0);
+    }
+
+    #[test]
+    fn from_lens_drops_empty_sections() {
+        let s = Sections::from_lens([3usize, 0, 5]);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.range(0), 0..3);
+        assert_eq!(s.range(1), 3..8);
+        let ranges: Vec<_> = s.iter().collect();
+        assert_eq!(ranges, vec![0..3, 3..8]);
+    }
+}

@@ -2,11 +2,13 @@
 //!
 //! Every device upload is actually serialized ([`wire`]), its length
 //! counted — the bit totals in Tables II/III are sums of real
-//! `bytes.len() × 8`, not analytic estimates. Since the zero-copy
-//! aggregation redesign (§Perf in DESIGN.md) the server side no longer
-//! eagerly decodes: the channel validates each upload's wire framing
-//! and hands the *bytes* through; the fold reads them via
-//! [`wire::PayloadView`] without materializing ψ vectors.
+//! `bytes.len() × 8`, not analytic estimates (including the v2
+//! sectioned encoding's per-section scale table, so layout-aware
+//! quantization pays for its header honestly — DESIGN.md §Wire v2).
+//! Since the zero-copy aggregation redesign (§Perf in DESIGN.md) the
+//! server side no longer eagerly decodes: the channel validates each
+//! upload's wire framing and hands the *bytes* through; the fold reads
+//! them via [`wire::PayloadView`] without materializing ψ vectors.
 //!
 //! On top of byte counting the channel simulates the network itself
 //! ([`scenario`]): per-device link models, round deadlines with

@@ -4,7 +4,8 @@
 //! uploads round-trip through this encoding in the simulator: the client
 //! encodes, the transport counts `bytes.len()`, the server decodes.
 //!
-//! Layout (little-endian):
+//! Layout (little-endian). The v1 **global** encoding — one scale for
+//! the whole payload — is unchanged byte-for-byte:
 //!
 //! ```text
 //! [0]      tag: u8       payload kind
@@ -13,6 +14,22 @@
 //! [6..10]  len: u32      element count d (or |support| under HeteroFL)
 //! [10..]   body          packed codes / sign bitmap + codes / raw f32
 //! ```
+//!
+//! The v2 **sectioned** encoding (distinct tags) carries one scale per
+//! quantization section (`crate::quant::sections`, DESIGN.md §Wire v2):
+//!
+//! ```text
+//! [0]      tag: u8            sectioned payload kind
+//! [1]      bits: u8           quantization level (shared by sections)
+//! [2..4]   n_sections: u16    section count S ≥ 1
+//! [4..4+8S] S × {scale: f32, len: u32}   per-section scale + length
+//! [..]     body               packed codes (one continuous stream)
+//! ```
+//!
+//! The body is a single continuous bit-packed stream across sections
+//! (codes stay `O(1)`-addressable by global element index), so the
+//! shard-parallel fold only has to intersect shard ranges with section
+//! ranges to pick the right scale per sub-range.
 //!
 //! Two server-side representations exist:
 //!
@@ -30,8 +47,15 @@ use crate::quant::midtread::{self, QuantizedVec};
 use crate::quant::packing;
 use crate::quant::qsgd::{self, QsgdVec};
 
-/// Header size in bytes (tag + bits + scale + len).
+/// v1 (global) header size in bytes (tag + bits + scale + len).
 pub const HEADER_BYTES: usize = 10;
+
+/// v2 (sectioned) fixed header size in bytes (tag + bits + n_sections),
+/// before the section table.
+pub const SECTION_HEADER_BYTES: usize = 4;
+
+/// Bytes per section-table entry (scale f32 + len u32).
+pub const SECTION_ENTRY_BYTES: usize = 8;
 
 /// A device upload.
 #[derive(Clone, Debug, PartialEq)]
@@ -71,6 +95,11 @@ const TAG_MT_FULL: u8 = 2;
 const TAG_QSGD: u8 = 3;
 const TAG_RAW_DELTA: u8 = 4;
 const TAG_RAW_FULL: u8 = 5;
+// v2 sectioned variants (per-section scales; raw payloads carry no
+// scale, so they have no sectioned form).
+const TAG_MT_DELTA_S: u8 = 6;
+const TAG_MT_FULL_S: u8 = 7;
+const TAG_QSGD_S: u8 = 8;
 
 /// Error from [`decode`] / [`view`].
 #[derive(Debug, thiserror::Error)]
@@ -84,6 +113,9 @@ pub enum WireError {
     /// Bits field outside the representable range.
     #[error("invalid bits field {0}")]
     BadBits(u8),
+    /// Malformed v2 section table.
+    #[error("invalid section table: {0}")]
+    BadSections(&'static str),
 }
 
 impl Payload {
@@ -131,6 +163,15 @@ fn header_of(p: &Payload) -> (PayloadKind, u8, f32, usize) {
     }
 }
 
+/// The payload's per-section `(scale, len)` table; empty = v1 global.
+fn section_scales_of(p: &Payload) -> &[(f32, u32)] {
+    match p {
+        Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => &q.section_scales,
+        Payload::Qsgd(q) => &q.section_scales,
+        Payload::RawDelta(_) | Payload::RawFull(_) => &[],
+    }
+}
+
 impl PayloadKind {
     const fn tag(self) -> u8 {
         match self {
@@ -139,6 +180,18 @@ impl PayloadKind {
             PayloadKind::Qsgd => TAG_QSGD,
             PayloadKind::RawDelta => TAG_RAW_DELTA,
             PayloadKind::RawFull => TAG_RAW_FULL,
+        }
+    }
+
+    /// The v2 sectioned tag for this kind (raw payloads have none).
+    const fn sectioned_tag(self) -> u8 {
+        match self {
+            PayloadKind::MidtreadDelta => TAG_MT_DELTA_S,
+            PayloadKind::MidtreadFull => TAG_MT_FULL_S,
+            PayloadKind::Qsgd => TAG_QSGD_S,
+            // Raw payloads carry no scale; encode asserts this is
+            // unreachable.
+            PayloadKind::RawDelta | PayloadKind::RawFull => 0,
         }
     }
 }
@@ -152,14 +205,42 @@ pub fn encode(p: &Payload) -> Vec<u8> {
 
 /// Serialize a payload into `out` (cleared first; capacity is kept so
 /// per-device wire buffers stop allocating after the first round).
+/// Payloads without section scales use the v1 global layout —
+/// byte-identical to the pre-sectioning format; payloads carrying
+/// `section_scales` use the v2 sectioned layout.
 pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
     out.clear();
     let (kind, bits, scale, n) = header_of(p);
-    out.reserve(HEADER_BYTES + body_len(kind, bits, n));
-    out.push(kind.tag());
-    out.push(bits);
-    out.extend_from_slice(&scale.to_le_bytes());
-    out.extend_from_slice(&(n as u32).to_le_bytes());
+    let sects = section_scales_of(p);
+    if sects.is_empty() {
+        out.reserve(HEADER_BYTES + body_len(kind, bits, n));
+        out.push(kind.tag());
+        out.push(bits);
+        out.extend_from_slice(&scale.to_le_bytes());
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+    } else {
+        debug_assert_eq!(
+            sects.iter().map(|&(_, l)| l as usize).sum::<usize>(),
+            n,
+            "section lengths must cover the payload"
+        );
+        assert!(
+            sects.len() <= u16::MAX as usize,
+            "section count exceeds the wire u16 field"
+        );
+        out.reserve(
+            SECTION_HEADER_BYTES + SECTION_ENTRY_BYTES * sects.len() + body_len(kind, bits, n),
+        );
+        let tag = kind.sectioned_tag();
+        assert!(tag != 0, "raw payloads cannot be sectioned");
+        out.push(tag);
+        out.push(bits);
+        out.extend_from_slice(&(sects.len() as u16).to_le_bytes());
+        for &(s, l) in sects {
+            out.extend_from_slice(&s.to_le_bytes());
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+    }
     match p {
         Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
             packing::pack_into(&q.psi, q.bits, out);
@@ -176,6 +257,59 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
     }
 }
 
+/// Zero-copy view of a v2 section table: the raw `(scale, len)` entry
+/// bytes stay in the received buffer; entries are decoded on access.
+#[derive(Clone, Copy, Debug)]
+pub struct SectionTable<'a> {
+    /// Raw little-endian entry bytes, exactly `count × 8` long.
+    entries: &'a [u8],
+    /// Section count `S ≥ 1`.
+    count: usize,
+}
+
+impl<'a> SectionTable<'a> {
+    /// Number of sections.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Scale of section `i`.
+    pub fn scale(&self, i: usize) -> f32 {
+        let o = i * SECTION_ENTRY_BYTES;
+        f32::from_le_bytes(self.entries[o..o + 4].try_into().unwrap())
+    }
+
+    /// Element count of section `i`.
+    pub fn len(&self, i: usize) -> usize {
+        let o = i * SECTION_ENTRY_BYTES + 4;
+        u32::from_le_bytes(self.entries[o..o + 4].try_into().unwrap()) as usize
+    }
+
+    /// Whether the table is empty (never true for a valid v2 payload).
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Iterate `(scale, element_range)` per section, with a running
+    /// offset over the payload's element index space.
+    pub fn iter(&self) -> impl Iterator<Item = (f32, std::ops::Range<usize>)> + 'a {
+        let table = *self;
+        let mut off = 0usize;
+        (0..table.count).map(move |i| {
+            let r = off..off + table.len(i);
+            off = r.end;
+            (table.scale(i), r)
+        })
+    }
+
+    /// Materialize the `(scale, len)` pairs (owned decode path).
+    pub fn to_vec(&self) -> Vec<(f32, u32)> {
+        (0..self.count)
+            .map(|i| (self.scale(i), self.len(i) as u32))
+            .collect()
+    }
+}
+
 /// Borrowed zero-copy view of an encoded upload: header parsed, body
 /// left packed in the wire buffer. See the module docs.
 #[derive(Clone, Copy, Debug)]
@@ -184,31 +318,47 @@ pub struct PayloadView<'a> {
     pub kind: PayloadKind,
     /// Quantization level (0 for raw payloads).
     pub bits: u8,
-    /// Range `R` (mid-tread) or `‖v‖₂` (QSGD); 0 for raw payloads.
+    /// Range `R` (mid-tread) or `‖v‖₂` (QSGD); 0 for raw payloads. For
+    /// sectioned payloads this is the max section scale (metrics only —
+    /// the fold reads per-section scales from `sections`).
     pub scale: f32,
-    /// Element count.
+    /// Total element count.
     pub len: usize,
+    /// v2 per-section scale table (`None` for v1 global payloads).
+    pub sections: Option<SectionTable<'a>>,
     /// Packed body, exactly `body_len` bytes.
     pub body: &'a [u8],
 }
 
 /// Parse the header of `bytes` and borrow the body — the zero-copy
-/// counterpart of [`decode`]. Validates tag, bits, and body length.
+/// counterpart of [`decode`]. Validates tag, bits, the v2 section
+/// table, and body length; never panics or over-reads on malformed
+/// input (property-tested in `rust/tests/prop_wire.rs`).
 pub fn view(bytes: &[u8]) -> Result<PayloadView<'_>, WireError> {
-    if bytes.len() < HEADER_BYTES {
+    if bytes.is_empty() {
         return Err(WireError::Truncated {
-            need: HEADER_BYTES,
+            need: SECTION_HEADER_BYTES.min(HEADER_BYTES),
+            have: 0,
+        });
+    }
+    let (kind, sectioned) = match bytes[0] {
+        TAG_MT_DELTA => (PayloadKind::MidtreadDelta, false),
+        TAG_MT_FULL => (PayloadKind::MidtreadFull, false),
+        TAG_QSGD => (PayloadKind::Qsgd, false),
+        TAG_RAW_DELTA => (PayloadKind::RawDelta, false),
+        TAG_RAW_FULL => (PayloadKind::RawFull, false),
+        TAG_MT_DELTA_S => (PayloadKind::MidtreadDelta, true),
+        TAG_MT_FULL_S => (PayloadKind::MidtreadFull, true),
+        TAG_QSGD_S => (PayloadKind::Qsgd, true),
+        t => return Err(WireError::UnknownTag(t)),
+    };
+    let header = if sectioned { SECTION_HEADER_BYTES } else { HEADER_BYTES };
+    if bytes.len() < header {
+        return Err(WireError::Truncated {
+            need: header,
             have: bytes.len(),
         });
     }
-    let kind = match bytes[0] {
-        TAG_MT_DELTA => PayloadKind::MidtreadDelta,
-        TAG_MT_FULL => PayloadKind::MidtreadFull,
-        TAG_QSGD => PayloadKind::Qsgd,
-        TAG_RAW_DELTA => PayloadKind::RawDelta,
-        TAG_RAW_FULL => PayloadKind::RawFull,
-        t => return Err(WireError::UnknownTag(t)),
-    };
     let bits = bytes[1];
     match kind {
         PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull if !(1..=32).contains(&bits) => {
@@ -219,12 +369,54 @@ pub fn view(bytes: &[u8]) -> Result<PayloadView<'_>, WireError> {
         }
         _ => {}
     }
-    let scale = f32::from_le_bytes(bytes[2..6].try_into().unwrap());
-    let len = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let (scale, len, sections, body_start) = if sectioned {
+        let count = u16::from_le_bytes(bytes[2..4].try_into().unwrap()) as usize;
+        if count == 0 {
+            return Err(WireError::BadSections("zero sections"));
+        }
+        let table_end = SECTION_HEADER_BYTES + count * SECTION_ENTRY_BYTES;
+        if bytes.len() < table_end {
+            return Err(WireError::Truncated {
+                need: table_end,
+                have: bytes.len(),
+            });
+        }
+        let table = SectionTable {
+            entries: &bytes[SECTION_HEADER_BYTES..table_end],
+            count,
+        };
+        let mut total = 0usize;
+        let mut max_scale = 0.0f32;
+        for i in 0..count {
+            let l = table.len(i);
+            if l == 0 && count > 1 {
+                return Err(WireError::BadSections("zero-length section"));
+            }
+            total = total
+                .checked_add(l)
+                .ok_or(WireError::BadSections("length overflow"))?;
+            let s = table.scale(i);
+            if !s.is_finite() || s < 0.0 {
+                return Err(WireError::BadSections("non-finite or negative scale"));
+            }
+            max_scale = max_scale.max(s);
+        }
+        if total > u32::MAX as usize {
+            return Err(WireError::BadSections("length overflow"));
+        }
+        (max_scale, total, Some(table), table_end)
+    } else {
+        let scale = f32::from_le_bytes(bytes[2..6].try_into().unwrap());
+        let len = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+        (scale, len, None, HEADER_BYTES)
+    };
     let need = body_len(kind, bits, len);
-    if bytes.len() < HEADER_BYTES + need {
+    let total_need = body_start
+        .checked_add(need)
+        .ok_or(WireError::BadSections("length overflow"))?;
+    if bytes.len() < total_need {
         return Err(WireError::Truncated {
-            need: HEADER_BYTES + need,
+            need: total_need,
             have: bytes.len(),
         });
     }
@@ -233,7 +425,8 @@ pub fn view(bytes: &[u8]) -> Result<PayloadView<'_>, WireError> {
         bits,
         scale,
         len,
-        body: &bytes[HEADER_BYTES..HEADER_BYTES + need],
+        sections,
+        body: &bytes[body_start..total_need],
     })
 }
 
@@ -250,12 +443,17 @@ impl PayloadView<'_> {
 
     /// Materialize an owned [`Payload`] (tests, legacy callers).
     pub fn to_owned(&self) -> Payload {
+        let section_scales = self
+            .sections
+            .map(|t| t.to_vec())
+            .unwrap_or_default();
         match self.kind {
             PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull => {
                 let q = QuantizedVec {
                     bits: self.bits,
                     range: self.scale,
                     psi: packing::unpack(self.body, self.bits, self.len),
+                    section_scales,
                 };
                 if self.kind == PayloadKind::MidtreadDelta {
                     Payload::MidtreadDelta(q)
@@ -270,6 +468,7 @@ impl PayloadView<'_> {
                     norm: self.scale,
                     signs: packing::unpack_signs(&self.body[..sign_bytes], self.len),
                     mags: packing::unpack(&self.body[sign_bytes..], self.bits, self.len),
+                    section_scales,
                 })
             }
             PayloadKind::RawDelta | PayloadKind::RawFull => {
@@ -310,6 +509,48 @@ impl PayloadView<'_> {
             (p0..p1, Some(idx))
         };
         if codes.is_empty() {
+            return;
+        }
+        if let Some(table) = self.sections {
+            // Sectioned payload: intersect the shard's code range with
+            // each section's element range and fold that sub-range at
+            // the section's own scale. Per-element arithmetic is
+            // independent of both shard and section boundaries, so the
+            // shard-parallel fold stays bit-identical to the serial one
+            // (property-tested in `rust/tests/prop_sections.rs`).
+            let sign_bytes = self.len.div_ceil(8);
+            for (sect_scale, sect_range) in table.iter() {
+                if sect_range.start >= codes.end {
+                    break;
+                }
+                let lo = codes.start.max(sect_range.start);
+                let hi = codes.end.min(sect_range.end);
+                if lo >= hi {
+                    continue;
+                }
+                match self.kind {
+                    PayloadKind::MidtreadDelta | PayloadKind::MidtreadFull => {
+                        midtread::dequantize_scatter_add(
+                            self.body, self.bits, sect_scale, lo..hi, targets, base, scale, out,
+                        );
+                    }
+                    PayloadKind::Qsgd => {
+                        qsgd::dequantize_scatter_add(
+                            &self.body[..sign_bytes],
+                            &self.body[sign_bytes..],
+                            self.bits,
+                            sect_scale,
+                            lo..hi,
+                            targets,
+                            base,
+                            scale,
+                            out,
+                        );
+                    }
+                    // view() never yields a sectioned raw payload.
+                    PayloadKind::RawDelta | PayloadKind::RawFull => unreachable!(),
+                }
+            }
             return;
         }
         match self.kind {
@@ -420,7 +661,13 @@ pub fn decode(bytes: &[u8]) -> Result<Payload, WireError> {
 /// fast-path accounting; must agree with `encode(p).len() * 8` — tested).
 pub fn wire_bits(p: &Payload) -> u64 {
     let (kind, bits, _, n) = header_of(p);
-    ((HEADER_BYTES + body_len(kind, bits, n)) * 8) as u64
+    let sects = section_scales_of(p);
+    let header = if sects.is_empty() {
+        HEADER_BYTES
+    } else {
+        SECTION_HEADER_BYTES + SECTION_ENTRY_BYTES * sects.len()
+    };
+    ((header + body_len(kind, bits, n)) * 8) as u64
 }
 
 #[cfg(test)]
@@ -540,6 +787,122 @@ mod tests {
             let in_mask = mask.indices.contains(&(i as u32));
             assert_eq!(x != 0.0, in_mask, "index {i}");
         }
+    }
+
+    #[test]
+    fn sectioned_roundtrip_and_header_size() {
+        use crate::quant::midtread::quantize_sections;
+        use crate::quant::qsgd::quantize_sections as qsgd_quantize_sections;
+        use crate::quant::Sections;
+        let v = sample_vec(300, 21);
+        let sections = Sections::from_lens([100usize, 80, 120]);
+        let q = quantize_sections(&v, 5, &sections);
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let qs = qsgd_quantize_sections(&v, 5, &sections, &mut rng);
+        for p in [
+            Payload::MidtreadDelta(q.clone()),
+            Payload::MidtreadFull(q.clone()),
+            Payload::Qsgd(qs.clone()),
+        ] {
+            let enc = encode(&p);
+            assert_eq!(enc.len() as u64 * 8, wire_bits(&p));
+            assert_eq!(decode(&enc).unwrap(), p);
+            let view = view(&enc).unwrap();
+            assert_eq!(view.len, 300);
+            let table = view.sections.expect("sectioned payload has a table");
+            assert_eq!(table.count(), 3);
+            assert!(!table.is_empty());
+            assert_eq!(table.len(0), 100);
+            assert_eq!(table.len(2), 120);
+            let ranges: Vec<_> = table.iter().map(|(_, r)| r).collect();
+            assert_eq!(ranges, vec![0..100, 100..180, 180..300]);
+            // v2 header = 4 + 8·S bytes (v1 is 10).
+            let body = crate::quant::packing::packed_len(300, 5)
+                + if matches!(p, Payload::Qsgd(_)) { 300usize.div_ceil(8) } else { 0 };
+            assert_eq!(enc.len(), 4 + 8 * 3 + body);
+        }
+    }
+
+    #[test]
+    fn single_section_quantize_is_byte_identical_to_global() {
+        use crate::quant::midtread::quantize_sections;
+        use crate::quant::Sections;
+        let v = sample_vec(257, 23);
+        let global = encode(&Payload::MidtreadFull(quantize(&v, 7)));
+        let single = encode(&Payload::MidtreadFull(quantize_sections(
+            &v,
+            7,
+            &Sections::global(v.len()),
+        )));
+        assert_eq!(global, single);
+        assert_eq!(global[0], 2); // v1 tag, not a sectioned one
+    }
+
+    #[test]
+    fn sectioned_scatter_matches_dense_dequantize() {
+        use crate::hetero::CapacityMask;
+        use crate::quant::midtread::{dequantize_into as mt_deq, quantize_sections};
+        use crate::quant::Sections;
+        let d = 513;
+        let v = sample_vec(d, 24);
+        let sections = Sections::from_lens([200usize, 13, 300]);
+        let p = Payload::MidtreadDelta(quantize_sections(&v, 4, &sections));
+        let enc = encode(&p);
+        let view = view(&enc).unwrap();
+        // Dense reference.
+        let q = match &p {
+            Payload::MidtreadDelta(q) => q,
+            _ => unreachable!(),
+        };
+        let mut dense = vec![0.0f32; d];
+        mt_deq(q, &mut dense);
+        let mut expect = vec![0.0f32; d];
+        for (e, x) in expect.iter_mut().zip(&dense) {
+            *e += 0.5 * x;
+        }
+        // Fused over three uneven shards (boundaries straddle
+        // sections): bit-identical.
+        let mask = CapacityMask::full(d);
+        let mut out = vec![0.0f32; d];
+        let (a, rest) = out.split_at_mut(150);
+        let (b, c) = rest.split_at_mut(100);
+        view.scatter_add_shard(&mask, 0.5, 0, a);
+        view.scatter_add_shard(&mask, 0.5, 150, b);
+        view.scatter_add_shard(&mask, 0.5, 250, c);
+        for (i, (x, y)) in out.iter().zip(&expect).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn sectioned_rejects_malformed_tables() {
+        use crate::quant::midtread::quantize_sections;
+        use crate::quant::Sections;
+        let v = sample_vec(64, 25);
+        let sections = Sections::from_lens([32usize, 32]);
+        let enc = encode(&Payload::MidtreadFull(quantize_sections(&v, 6, &sections)));
+        // Zero section count.
+        let mut bad = enc.clone();
+        bad[2] = 0;
+        bad[3] = 0;
+        assert!(matches!(decode(&bad), Err(WireError::BadSections(_))));
+        // Oversized count → table truncated.
+        let mut bad = enc.clone();
+        bad[2] = 0xFF;
+        bad[3] = 0xFF;
+        assert!(matches!(decode(&bad), Err(WireError::Truncated { .. })));
+        // Oversized section len → body truncated.
+        let mut bad = enc.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&bad).is_err());
+        // Truncated body.
+        let mut bad = enc.clone();
+        bad.truncate(enc.len() - 1);
+        assert!(matches!(decode(&bad), Err(WireError::Truncated { .. })));
+        // Non-finite scale.
+        let mut bad = enc;
+        bad[4..8].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(WireError::BadSections(_))));
     }
 
     #[test]

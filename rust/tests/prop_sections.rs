@@ -1,0 +1,262 @@
+//! Properties of layout-aware sectioned quantization (ISSUE 5):
+//!
+//! * **global-mode invariance** — the default `quant_sections =
+//!   "global"` run is bit-identical to any configuration that resolves
+//!   to a single section (`fixed:huge`, `tensor` over a single-tensor
+//!   layout), on all three synth datasets: the sectioned machinery is
+//!   provably dormant by default;
+//! * **per-section error dominance** — with per-section scales, each
+//!   section's quantization error is no worse than under the single
+//!   global scale (equal for the range-dominant section, strictly
+//!   smaller for the others when scales are heterogeneous);
+//! * **fold determinism** — the shard-parallel fold over sectioned
+//!   payloads is bit-identical across thread counts {1, 2, 7} and
+//!   under HeteroFL capacity masks.
+
+use aquila::algorithms::aquila::Aquila;
+use aquila::algorithms::qsgd::QsgdAlgo;
+use aquila::algorithms::{Algorithm, ServerAgg};
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::hetero::{half_half_masks, CapacityMask};
+use aquila::metrics::RunTrace;
+use aquila::problems::ParamLayout;
+use aquila::quant::midtread::{
+    dequantize_into as mt_dequantize_into, quantize, quantize_sections,
+};
+use aquila::quant::qsgd;
+use aquila::quant::{SectionSpec, Sections};
+use aquila::repro::session_for;
+use aquila::transport::wire::{decode, upload_refs, EncodedUpload, Payload};
+use aquila::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+fn assert_traces_bit_equal(a: &RunTrace, b: &RunTrace, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.round, y.round, "{what}");
+        assert_eq!(x.bits_up, y.bits_up, "{what} round {}", x.round);
+        assert_eq!(x.cum_bits, y.cum_bits, "{what} round {}", x.round);
+        assert_eq!(x.uploads, y.uploads, "{what} round {}", x.round);
+        assert_eq!(x.skips, y.skips, "{what} round {}", x.round);
+        assert_eq!(
+            x.mean_level.to_bits(),
+            y.mean_level.to_bits(),
+            "{what} round {}",
+            x.round
+        );
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{what} round {}",
+            x.round
+        );
+        assert_eq!(
+            x.eval_loss.map(f64::to_bits),
+            y.eval_loss.map(f64::to_bits),
+            "{what} round {}",
+            x.round
+        );
+        assert_eq!(
+            x.accuracy.map(f64::to_bits),
+            y.accuracy.map(f64::to_bits),
+            "{what} round {}",
+            x.round
+        );
+    }
+}
+
+/// Global mode is the default and resolves identically to any
+/// single-section configuration: traces must match bit-for-bit on all
+/// three datasets (the "global is byte-identical to pre-sectioning"
+/// pin — the single-section code path *is* the pre-PR path).
+#[test]
+fn prop_global_mode_traces_bit_equal_on_all_datasets() {
+    for ds in [DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2] {
+        let mut spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.05, 8);
+        spec.devices = 6;
+        assert_eq!(spec.quant_sections, SectionSpec::Global);
+        let t_default = session_for(&spec, Arc::new(Aquila::new(spec.beta)))
+            .build()
+            .run();
+        // fixed:N with N ≥ d resolves to one section — must be the
+        // exact same run, wire bytes included.
+        let mut spec_one = spec.clone();
+        spec_one.quant_sections = SectionSpec::Fixed(1 << 30);
+        let t_one = session_for(&spec_one, Arc::new(Aquila::new(spec.beta)))
+            .build()
+            .run();
+        assert_traces_bit_equal(&t_default, &t_one, ds.name());
+    }
+    // `tensor` over a single-tensor layout (WT-2's bigram LM) likewise
+    // degenerates to the global run.
+    let mut spec = ExperimentSpec::new(DatasetKind::Wt2, SplitKind::Iid, false).scaled(0.05, 6);
+    spec.devices = 4;
+    let t_global = session_for(&spec, Arc::new(Aquila::new(spec.beta)))
+        .build()
+        .run();
+    let mut spec_t = spec.clone();
+    spec_t.quant_sections = SectionSpec::Tensor;
+    let t_tensor = session_for(&spec_t, Arc::new(Aquila::new(spec.beta)))
+        .build()
+        .run();
+    assert_traces_bit_equal(&t_global, &t_tensor, "wt2 tensor≡global");
+}
+
+/// Per-section quantization error under per-section scales is no worse
+/// than under the global scale, section by section — equal on the
+/// section owning the global range, strictly smaller on sections whose
+/// own range is far below it.
+#[test]
+fn prop_per_section_error_dominates_global() {
+    let mut rng = Xoshiro256pp::seed_from_u64(8200);
+    for case in 0..20 {
+        // 3–6 sections with scales spread over ~3 orders of magnitude.
+        let n_sections = 3 + (case % 4);
+        let lens: Vec<usize> = (0..n_sections)
+            .map(|_| 50 + rng.next_bounded(200) as usize)
+            .collect();
+        let sections = Sections::from_lens(lens.iter().copied());
+        let mut v = Vec::new();
+        for (i, &len) in lens.iter().enumerate() {
+            let scale = 10f32.powi(i as i32 % 4) * 0.05;
+            v.extend((0..len).map(|_| rng.gaussian_f32(0.0, scale)));
+        }
+        for bits in [2u8, 4, 8] {
+            let q_global = quantize(&v, bits);
+            let q_sect = quantize_sections(&v, bits, &sections);
+            let mut dq_global = vec![0.0f32; v.len()];
+            mt_dequantize_into(&q_global, &mut dq_global);
+            let mut dq_sect = vec![0.0f32; v.len()];
+            mt_dequantize_into(&q_sect, &mut dq_sect);
+            let mut total_g = 0.0f64;
+            let mut total_s = 0.0f64;
+            for (s, r) in sections.iter().enumerate() {
+                let err = |dq: &[f32]| -> f64 {
+                    v[r.clone()]
+                        .iter()
+                        .zip(&dq[r.clone()])
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum()
+                };
+                let e_g = err(&dq_global);
+                let e_s = err(&dq_sect);
+                total_g += e_g;
+                total_s += e_s;
+                assert!(
+                    e_s <= e_g * (1.0 + 1e-9) + 1e-12,
+                    "case {case} bits={bits} section {s}: sectioned {e_s} > global {e_g}"
+                );
+            }
+            // And strictly better in aggregate for heterogeneous scales.
+            assert!(
+                total_s < total_g,
+                "case {case} bits={bits}: no aggregate improvement ({total_s} vs {total_g})"
+            );
+        }
+    }
+}
+
+/// Materializing reference fold for sectioned payloads: decode each
+/// upload, dequantize (section-aware) into a dense gathered vector,
+/// scatter-add through its mask.
+fn reference_fold(
+    dim: usize,
+    masks: &[Arc<CapacityMask>],
+    staged: &[EncodedUpload],
+    scale: f32,
+) -> Vec<f32> {
+    let mut direction = vec![0.0f32; dim];
+    for up in staged {
+        let p = decode(&up.bytes).unwrap();
+        let mask = &masks[up.device];
+        let mut scratch = vec![0.0f32; p.len()];
+        match &p {
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => {
+                mt_dequantize_into(q, &mut scratch)
+            }
+            Payload::Qsgd(q) => qsgd::dequantize_into(q, &mut scratch),
+            Payload::RawDelta(v) | Payload::RawFull(v) => scratch.copy_from_slice(v),
+        }
+        mask.scatter_add(&scratch, scale, &mut direction);
+    }
+    direction
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Shard-parallel fold over sectioned payloads ≡ serial fold, bitwise,
+/// for 1/2/7 threads, across tensor and fixed sectioning, full and
+/// HeteroFL half-capacity masks. d = 60 000 keeps the 7-thread fold
+/// genuinely multi-shard (shard floor is 8192).
+#[test]
+fn prop_sectioned_fold_bit_identical_across_threads_and_masks() {
+    let mut rng = Xoshiro256pp::seed_from_u64(8300);
+    // An MLP-shaped layout summing to 60 000 parameters.
+    let layout = ParamLayout::contiguous(&[
+        ("w1", vec![100, 500]),
+        ("b1", vec![100]),
+        ("w2", vec![19, 500]),
+        ("b2", vec![400]),
+    ]);
+    let d = layout.dim();
+    assert_eq!(d, 60_000);
+    let m = 6;
+    let masks = half_half_masks(&layout, m, 0.5);
+    for spec in [SectionSpec::Tensor, SectionSpec::Fixed(777)] {
+        let staged: Vec<EncodedUpload> = (0..m)
+            .map(|dev| {
+                let sections = spec.resolve(&layout, &masks[dev]);
+                let v: Vec<f32> = (0..masks[dev].support())
+                    .map(|_| rng.gaussian_f32(0.0, 1.5))
+                    .collect();
+                let p = match dev % 3 {
+                    0 => Payload::MidtreadDelta(quantize_sections(&v, 4, &sections)),
+                    1 => Payload::MidtreadFull(quantize_sections(&v, 9, &sections)),
+                    _ => Payload::Qsgd(qsgd::quantize_sections(&v, 5, &sections, &mut rng)),
+                };
+                EncodedUpload::encode(dev, &p)
+            })
+            .collect();
+        let scale = 1.0 / m as f32;
+        let reference = reference_fold(d, &masks, &staged, scale);
+        for threads in [1usize, 2, 7] {
+            let mut srv = ServerAgg::new(d, masks.clone());
+            srv.set_threads(threads);
+            srv.accumulate(&upload_refs(&staged), scale);
+            assert_bits_eq(
+                &srv.direction,
+                &reference,
+                &format!("{spec} threads={threads}"),
+            );
+        }
+    }
+}
+
+/// End-to-end sectioned runs under HeteroFL masks stay bit-identical
+/// across engine thread counts, for both the deterministic mid-tread
+/// family (AQUILA) and the stochastic QSGD baseline.
+#[test]
+fn prop_sectioned_runs_thread_invariant_under_hetero_masks() {
+    let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, true).scaled(0.05, 6);
+    spec.devices = 6;
+    spec.quant_sections = SectionSpec::Tensor;
+    let algos: Vec<Arc<dyn Algorithm>> =
+        vec![Arc::new(Aquila::new(spec.beta)), Arc::new(QsgdAlgo::new(5))];
+    for algo in algos {
+        let mut traces = Vec::new();
+        for threads in [1usize, 2, 7] {
+            let mut builder = session_for(&spec, algo.clone());
+            let mut cfg = spec.run_config();
+            cfg.threads = threads;
+            builder = builder.config(cfg);
+            traces.push(builder.build().run());
+        }
+        assert_traces_bit_equal(&traces[0], &traces[1], algo.name());
+        assert_traces_bit_equal(&traces[0], &traces[2], algo.name());
+    }
+}

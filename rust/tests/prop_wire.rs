@@ -1,0 +1,178 @@
+//! Hardened wire decoding (ISSUE 5): randomized corruption of valid
+//! encodings — truncation, bad tags, out-of-range bits, oversized
+//! length fields, malformed v2 section tables, short bodies, and
+//! arbitrary byte flips. Every malformed buffer must come back as a
+//! `WireError`; `decode`/`view` must never panic or over-read.
+
+use aquila::quant::midtread::{quantize, quantize_sections};
+use aquila::quant::qsgd;
+use aquila::quant::Sections;
+use aquila::transport::wire::{decode, encode, view, Payload, WireError};
+use aquila::util::rng::Xoshiro256pp;
+
+fn random_vec(rng: &mut Xoshiro256pp, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.gaussian_f32(0.0, 1.5)).collect()
+}
+
+/// One payload of every wire form (v1 global and v2 sectioned).
+fn payload_suite(rng: &mut Xoshiro256pp, d: usize) -> Vec<Payload> {
+    let v = random_vec(rng, d);
+    let sections = Sections::from_lens([d / 3, d / 4, d - d / 3 - d / 4]);
+    vec![
+        Payload::MidtreadDelta(quantize(&v, 4)),
+        Payload::MidtreadFull(quantize(&v, 9)),
+        Payload::Qsgd(qsgd::quantize(&v, 5, rng)),
+        Payload::RawDelta(v.clone()),
+        Payload::RawFull(v.clone()),
+        Payload::MidtreadDelta(quantize_sections(&v, 4, &sections)),
+        Payload::MidtreadFull(quantize_sections(&v, 11, &sections)),
+        Payload::Qsgd(qsgd::quantize_sections(&v, 6, &sections, rng)),
+    ]
+}
+
+/// Every strict prefix of a valid encoding is rejected; the full
+/// buffer round-trips.
+#[test]
+fn prop_truncation_always_rejected() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7100);
+    for d in [24usize, 97, 256] {
+        for p in payload_suite(&mut rng, d) {
+            let enc = encode(&p);
+            assert_eq!(decode(&enc).unwrap(), p);
+            // Every prefix length, not just a sample: truncation must
+            // never parse (the body length is exact, so any strict
+            // prefix is short).
+            for cut in 0..enc.len() {
+                let pre = &enc[..cut];
+                assert!(decode(pre).is_err(), "prefix {cut}/{} parsed", enc.len());
+                assert!(view(pre).is_err());
+            }
+        }
+    }
+}
+
+/// Unknown tag bytes are rejected with `UnknownTag`.
+#[test]
+fn prop_unknown_tags_rejected() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7101);
+    let enc = encode(&payload_suite(&mut rng, 64).remove(0));
+    for tag in [0u8, 9, 10, 42, 127, 200, 255] {
+        let mut bad = enc.clone();
+        bad[0] = tag;
+        match decode(&bad) {
+            Err(WireError::UnknownTag(t)) => assert_eq!(t, tag),
+            other => panic!("tag {tag}: expected UnknownTag, got {other:?}"),
+        }
+    }
+}
+
+/// Out-of-range bits fields are rejected for every quantized form.
+#[test]
+fn prop_bad_bits_rejected() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7102);
+    for p in payload_suite(&mut rng, 48) {
+        let enc = encode(&p);
+        let quantized = !matches!(p, Payload::RawDelta(_) | Payload::RawFull(_));
+        if !quantized {
+            continue;
+        }
+        for bits in [0u8, 33, 64, 255] {
+            let mut bad = enc.clone();
+            bad[1] = bits;
+            assert!(
+                matches!(decode(&bad), Err(WireError::BadBits(_))),
+                "bits={bits} accepted for {p:?}"
+            );
+        }
+        // 32 magnitude bits are invalid for QSGD specifically.
+        if matches!(p, Payload::Qsgd(_)) {
+            let mut bad = enc.clone();
+            bad[1] = 32;
+            assert!(matches!(decode(&bad), Err(WireError::BadBits(32))));
+        }
+    }
+}
+
+/// Oversized length fields (v1 len and v2 per-section lens) make the
+/// body requirement exceed the buffer: rejected, never over-read.
+#[test]
+fn prop_oversized_len_rejected() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7103);
+    for p in payload_suite(&mut rng, 80) {
+        let enc = encode(&p);
+        let sectioned = matches!(
+            &p,
+            Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) if q.is_sectioned()
+        ) || matches!(&p, Payload::Qsgd(q) if q.is_sectioned());
+        let mut bad = enc.clone();
+        if sectioned {
+            // First section's len field lives at [8..12].
+            bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        } else {
+            // v1 len field lives at [6..10].
+            bad[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(decode(&bad).is_err(), "oversized len parsed for {p:?}");
+        assert!(view(&bad).is_err());
+    }
+}
+
+/// Malformed v2 section tables: zero count, zero-length sections,
+/// truncated tables, non-finite scales.
+#[test]
+fn prop_bad_section_tables_rejected() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7104);
+    let v = random_vec(&mut rng, 60);
+    let sections = Sections::from_lens([20usize, 20, 20]);
+    let enc = encode(&Payload::MidtreadFull(quantize_sections(&v, 6, &sections)));
+    // Zero section count.
+    let mut bad = enc.clone();
+    bad[2] = 0;
+    bad[3] = 0;
+    assert!(matches!(decode(&bad), Err(WireError::BadSections(_))));
+    // Zero-length middle section (count > 1).
+    let mut bad = enc.clone();
+    bad[16..20].copy_from_slice(&0u32.to_le_bytes());
+    assert!(decode(&bad).is_err());
+    // Count larger than the table actually present.
+    let mut bad = enc.clone();
+    bad[2..4].copy_from_slice(&u16::MAX.to_le_bytes());
+    assert!(matches!(decode(&bad), Err(WireError::Truncated { .. })));
+    // NaN / negative / infinite scales.
+    for scale in [f32::NAN, f32::INFINITY, -1.0f32] {
+        let mut bad = enc.clone();
+        bad[4..8].copy_from_slice(&scale.to_le_bytes());
+        assert!(
+            matches!(decode(&bad), Err(WireError::BadSections(_))),
+            "scale {scale} accepted"
+        );
+    }
+}
+
+/// Arbitrary single-byte flips and random buffers must never panic —
+/// they either decode to *something* or return an error, but the
+/// decoder must not over-read or crash.
+#[test]
+fn prop_random_corruption_never_panics() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7105);
+    for d in [16usize, 130] {
+        for p in payload_suite(&mut rng, d) {
+            let enc = encode(&p);
+            for _ in 0..300 {
+                let mut bad = enc.clone();
+                let i = rng.next_bounded(bad.len() as u64) as usize;
+                bad[i] ^= 1 << (rng.next_bounded(8) as u32);
+                // Must return, not panic; a successful decode is fine
+                // (the flip may have landed in a scale or code).
+                let _ = decode(&bad);
+                let _ = view(&bad);
+            }
+        }
+    }
+    // Fully random buffers of many lengths.
+    for len in 0..200usize {
+        let buf: Vec<u8> = (0..len).map(|_| rng.next_bounded(256) as u8).collect();
+        let _ = decode(&buf);
+        let _ = view(&buf);
+    }
+}
