@@ -1,0 +1,198 @@
+//! Coordinator-as-a-service, end to end: the same seeded run executed
+//! three ways.
+//!
+//! ```bash
+//! cargo run --release --example service            # `verify` (loopback)
+//! cargo run --release --example service tcp        # multi-process TCP
+//! ```
+//!
+//! * `verify` (default, what CI runs) — executes the run in-process,
+//!   then again through [`aquila::protocol::CoordinatorService`] over
+//!   the in-process loopback transport with two client threads, and
+//!   asserts the two [`RunTrace`]s are **bit-identical** (compared via
+//!   their full `Debug` rendering, which prints every float exactly).
+//!   On mismatch both traces are written to
+//!   `service_trace_{inproc,loopback}.txt` and the process exits 1.
+//! * `tcp` — binds a real TCP coordinator and spawns two child
+//!   processes of this same binary (`client` mode) over localhost; one
+//!   child goes silent after the first round, so the run must finish
+//!   with ≥ 1 straggler detected through heartbeat expiry.
+//! * `client <addr> [silent-after-N]` — the child role for `tcp`.
+
+use aquila::algorithms::aquila::Aquila;
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::metrics::RunTrace;
+use aquila::problems::GradientSource;
+use aquila::protocol::{
+    CoordinatorService, DeviceClient, LoopbackHub, ServeSpec, TcpConnection, TcpTransport,
+};
+use aquila::repro;
+use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The shared experiment cell — every mode (and every spawned child)
+/// reconstructs the identical problem from this spec.
+fn spec() -> ExperimentSpec {
+    let mut s = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false).scaled(0.02, 8);
+    s.devices = 4;
+    s
+}
+
+fn serve_spec() -> ServeSpec {
+    ServeSpec {
+        clients: 2,
+        heartbeat_ms: 50,
+        heartbeat_timeout_ms: 1_000,
+        round_timeout_ms: 30_000,
+        accept_timeout_ms: 30_000,
+        ..ServeSpec::default()
+    }
+}
+
+/// Serve the spec's session over an in-process loopback hub with
+/// `clients` client threads dialing it.
+fn run_served(clients: usize) -> RunTrace {
+    let s = spec();
+    let mut service = CoordinatorService::new(
+        repro::session_for(&s, Arc::new(Aquila::new(s.beta))).build(),
+        ServeSpec { clients, ..serve_spec() },
+    );
+    let mut hub = LoopbackHub::new();
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let dialer = hub.dialer();
+        let s = s.clone();
+        handles.push(std::thread::spawn(move || {
+            let problem: Arc<dyn GradientSource> = s.build_problem().into();
+            let masks = repro::masks_for(&s, problem.as_ref());
+            let algo = Arc::new(Aquila::new(s.beta));
+            let client = DeviceClient::new(problem, algo, s.run_config(), masks).heartbeat_ms(50);
+            let mut conn = dialer.connect();
+            client.run(&mut conn).expect("loopback client");
+        }));
+    }
+    let trace = service.run(&mut hub).expect("service run");
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    trace
+}
+
+fn cmd_verify() -> ExitCode {
+    let s = spec();
+    println!(
+        "verify: {} — {} devices, {} rounds, in-process vs loopback service",
+        s.row_label(),
+        s.devices,
+        s.rounds
+    );
+    let inproc = repro::session_for(&s, Arc::new(Aquila::new(s.beta))).build().run();
+    let served = run_served(2);
+    let a = format!("{:#?}", inproc.rounds);
+    let b = format!("{:#?}", served.rounds);
+    if a == b {
+        println!(
+            "OK: {} rounds bit-identical ({} uplink bits, final loss {})",
+            inproc.rounds.len(),
+            inproc.total_bits(),
+            inproc.final_train_loss()
+        );
+        ExitCode::SUCCESS
+    } else {
+        std::fs::write("service_trace_inproc.txt", &a).expect("write artifact");
+        std::fs::write("service_trace_loopback.txt", &b).expect("write artifact");
+        eprintln!(
+            "MISMATCH: traces differ; wrote service_trace_inproc.txt / \
+             service_trace_loopback.txt"
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_tcp() -> ExitCode {
+    let s = spec();
+    let mut transport = TcpTransport::bind("127.0.0.1:0").expect("bind");
+    let addr = transport.local_addr().expect("local addr").to_string();
+    println!("tcp: coordinator on {addr}, spawning 2 client processes (one goes silent)");
+    let exe = std::env::current_exe().expect("current exe");
+    let healthy = std::process::Command::new(&exe)
+        .args(["client", &addr])
+        .spawn()
+        .expect("spawn healthy client");
+    let silent = std::process::Command::new(&exe)
+        .args(["client", &addr, "silent-after-1"])
+        .spawn()
+        .expect("spawn silent client");
+
+    let mut service = CoordinatorService::new(
+        repro::session_for(&s, Arc::new(Aquila::new(s.beta))).build(),
+        serve_spec(),
+    );
+    let trace = service.run(&mut transport).expect("service run");
+    let healthy = healthy.wait().expect("wait healthy");
+    let silent = silent.wait().expect("wait silent");
+    println!(
+        "run complete: {} rounds, {} stragglers, client exits {healthy} / {silent}",
+        trace.rounds.len(),
+        trace.total_stragglers()
+    );
+    if trace.total_stragglers() == 0 {
+        eprintln!("FAIL: the silent client should have been detected via heartbeat expiry");
+        return ExitCode::FAILURE;
+    }
+    if !healthy.success() || !silent.success() {
+        eprintln!("FAIL: a client process exited nonzero");
+        return ExitCode::FAILURE;
+    }
+    println!("OK: silent client's devices became stragglers; run still completed");
+    ExitCode::SUCCESS
+}
+
+fn cmd_client(addr: &str, silent_after: Option<usize>) -> ExitCode {
+    let s = spec();
+    let problem: Arc<dyn GradientSource> = s.build_problem().into();
+    let masks = repro::masks_for(&s, problem.as_ref());
+    let algo = Arc::new(Aquila::new(s.beta));
+    let mut client = DeviceClient::new(problem, algo, s.run_config(), masks).heartbeat_ms(50);
+    if let Some(n) = silent_after {
+        client = client.silent_after(n);
+    }
+    let mut conn = TcpConnection::connect(addr, Duration::from_secs(10)).expect("connect");
+    match client.run(&mut conn) {
+        Ok(rep) => {
+            println!(
+                "client {}: devices {}..{}, {} round(s) served",
+                rep.client_id, rep.devices.start, rep.devices.end, rep.rounds_served
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("client failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        None | Some("verify") => cmd_verify(),
+        Some("tcp") => cmd_tcp(),
+        Some("client") => {
+            let Some(addr) = args.get(1) else {
+                eprintln!("usage: service client ADDR [silent-after-N]");
+                return ExitCode::FAILURE;
+            };
+            let silent = match args.get(2) {
+                Some(a) => a.strip_prefix("silent-after-").and_then(|n| n.parse().ok()),
+                None => None,
+            };
+            cmd_client(addr, silent)
+        }
+        Some(other) => {
+            eprintln!("unknown mode '{other}' (expected: verify | tcp | client)");
+            ExitCode::FAILURE
+        }
+    }
+}

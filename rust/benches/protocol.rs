@@ -1,0 +1,112 @@
+//! Protocol bench (ISSUE 6 satellite): what a served round adds on top
+//! of the in-process transport phase.
+//!
+//! * `transmit_direct` — the baseline: staged wire bytes straight into
+//!   `Channel::transmit`, exactly what `RoundEngine::finish_round`
+//!   does in-process.
+//! * `loopback_round` — the same round's uploads as framed
+//!   `RoundResult` messages through a loopback connection pair,
+//!   decoded (including wire-payload validation) and then fed to the
+//!   same channel transmit — the coordinator-service data path minus
+//!   threads.
+//!
+//! The closing ratio is the per-round protocol overhead; it should be
+//! small relative to the transmit itself (framing is one header per
+//! message and payload bytes are never re-encoded).
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::protocol::messages::RoundResult;
+use aquila::protocol::transport::LoopbackConnection;
+use aquila::protocol::{Connection, Message};
+use aquila::quant::midtread::quantize;
+use aquila::transport::wire::{self, Payload, UploadRef};
+use aquila::transport::Channel;
+use aquila::util::rng::Xoshiro256pp;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let d = 65_536usize;
+    let m = 32usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(17);
+
+    // One 4-bit innovation payload per device, pre-encoded to wire
+    // bytes (what the device phase stages on either side).
+    let payloads: Vec<Vec<u8>> = (0..m)
+        .map(|_| {
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            wire::encode(&Payload::MidtreadDelta(quantize(&v, 4)))
+        })
+        .collect();
+    let participants: Vec<usize> = (0..m).collect();
+    let model_bits = d as u64 * 32;
+
+    let mut ch = Channel::reliable();
+    let mut round = 0usize;
+    let direct_mean = bench
+        .bench_throughput(&format!("transmit_direct d=64k M={m} b=4"), (d * m) as u64, || {
+            let ups: Vec<UploadRef<'_>> = payloads
+                .iter()
+                .enumerate()
+                .map(|(dev, bytes)| UploadRef { device: dev, bytes })
+                .collect();
+            let (del, stats) = ch.transmit(round, &participants, model_bits, ups);
+            assert_eq!(del.len(), m, "reliable channel delivers everything");
+            black_box(stats);
+            round += 1;
+        })
+        .mean;
+
+    let msgs: Vec<Message> = payloads
+        .iter()
+        .enumerate()
+        .map(|(dev, bytes)| {
+            Message::RoundResult(RoundResult {
+                round: 0,
+                device: dev as u32,
+                loss: 0.5,
+                level: Some(4),
+                uploads: 1,
+                skips: 0,
+                payload: Some(bytes.clone()),
+            })
+        })
+        .collect();
+    let (mut tx, mut rx) = LoopbackConnection::pair();
+    let mut ch2 = Channel::reliable();
+    let mut round = 0usize;
+    let served_mean = bench
+        .bench_throughput(
+            &format!("loopback_round frame+decode+transmit d=64k M={m}"),
+            (d * m) as u64,
+            || {
+                for msg in &msgs {
+                    tx.send(msg).expect("loopback send");
+                }
+                let mut arrived: Vec<(usize, Vec<u8>)> = Vec::with_capacity(m);
+                for _ in 0..m {
+                    match rx.recv(Duration::from_secs(1)).expect("loopback recv") {
+                        Message::RoundResult(r) => {
+                            arrived.push((r.device as usize, r.payload.expect("payload")));
+                        }
+                        other => panic!("unexpected message: {other:?}"),
+                    }
+                }
+                let ups: Vec<UploadRef<'_>> = arrived
+                    .iter()
+                    .map(|(dev, bytes)| UploadRef { device: *dev, bytes })
+                    .collect();
+                let (del, stats) = ch2.transmit(round, &participants, model_bits, ups);
+                assert_eq!(del.len(), m, "every framed upload arrives");
+                black_box(stats);
+                round += 1;
+            },
+        )
+        .mean;
+
+    println!(
+        "protocol overhead (framing + loopback + decode) vs direct transmit: {:.2}x",
+        served_mean.as_secs_f64() / direct_mean.as_secs_f64().max(1e-12),
+    );
+    bench.finish();
+}

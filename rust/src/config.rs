@@ -19,6 +19,7 @@ use crate::problems::logistic::LogisticProblem;
 use crate::problems::mlp::MlpProblem;
 use crate::problems::softmax_lm::SoftmaxLmProblem;
 use crate::problems::GradientSource;
+use crate::protocol::ServeSpec;
 use crate::quant::SectionSpec;
 use crate::selection::SelectionSpec;
 use crate::transport::scenario::NetworkSpec;
@@ -146,6 +147,10 @@ pub struct ExperimentSpec {
     /// single-scale wire format), `tensor` (one scale per model
     /// tensor), or `fixed:N` (N-element blocks).
     pub quant_sections: SectionSpec,
+    /// Coordinator-as-a-service settings (the TOML `[serve]` table,
+    /// the `--serve`/`--connect` CLI flags). Ignored by in-process
+    /// runs.
+    pub serve: ServeSpec,
 }
 
 impl ExperimentSpec {
@@ -181,6 +186,7 @@ impl ExperimentSpec {
             dadaquant_patience: 3,
             dadaquant_cap: 16,
             quant_sections: SectionSpec::Global,
+            serve: ServeSpec::default(),
         }
     }
 
@@ -347,6 +353,27 @@ impl ExperimentSpec {
                     SectionSpec::SYNTAX
                 )
             })?;
+        }
+        // The [serve] table configures the protocol coordinator
+        // service; like the schedule keys, out-of-range values are
+        // hard errors rather than silent clamps.
+        if let Some(v) = map.get("serve.addr").and_then(|v| v.as_str()) {
+            self.serve.addr = v.to_string();
+        }
+        if let Some(v) = map.get("serve.clients").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v >= 1, "serve.clients must be >= 1, got {v}");
+            self.serve.clients = v as usize;
+        }
+        for (key, slot) in [
+            ("serve.heartbeat_ms", &mut self.serve.heartbeat_ms),
+            ("serve.heartbeat_timeout_ms", &mut self.serve.heartbeat_timeout_ms),
+            ("serve.round_timeout_ms", &mut self.serve.round_timeout_ms),
+            ("serve.accept_timeout_ms", &mut self.serve.accept_timeout_ms),
+        ] {
+            if let Some(v) = map.get(key).and_then(|v| v.as_i64()) {
+                anyhow::ensure!(v >= 1, "{key} must be >= 1, got {v}");
+                *slot = v as u64;
+            }
         }
         Ok(())
     }
@@ -536,6 +563,28 @@ mod tests {
         let map = toml::parse("[experiment]\ndadaquant_cap = 99\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
         let map = toml::parse("[experiment]\ndadaquant_patience = 0\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+    }
+
+    #[test]
+    fn toml_serve_overrides() {
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        assert_eq!(spec.serve, ServeSpec::default());
+        let text = "[serve]\naddr = \"0.0.0.0:9000\"\nclients = 4\nheartbeat_ms = 100\n\
+                    heartbeat_timeout_ms = 800\nround_timeout_ms = 5000\n\
+                    accept_timeout_ms = 3000\n";
+        let map = toml::parse(text).unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.serve.addr, "0.0.0.0:9000");
+        assert_eq!(spec.serve.clients, 4);
+        assert_eq!(spec.serve.heartbeat_ms, 100);
+        assert_eq!(spec.serve.heartbeat_timeout_ms, 800);
+        assert_eq!(spec.serve.round_timeout_ms, 5000);
+        assert_eq!(spec.serve.accept_timeout_ms, 3000);
+        // Out-of-range values are hard errors, not silent clamps.
+        let map = toml::parse("[serve]\nclients = 0\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+        let map = toml::parse("[serve]\nheartbeat_timeout_ms = 0\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
     }
 

@@ -259,6 +259,14 @@ impl RoundEngine {
     }
 
     /// Execute one communication round; returns its record.
+    ///
+    /// Equivalent to [`RoundEngine::begin_round`] →
+    /// [`RoundEngine::local_device_phase`] →
+    /// [`RoundEngine::finish_round`]; remote front-ends (the
+    /// [`crate::protocol`] coordinator service) replace the local device
+    /// phase with [`RoundEngine::stage_reset`] +
+    /// [`RoundEngine::stage_remote`] injections and produce the same
+    /// record bit for bit.
     pub fn run_round(
         &mut self,
         problem: &dyn GradientSource,
@@ -266,14 +274,40 @@ impl RoundEngine {
         strategy: &mut dyn SelectionStrategy,
         round: usize,
     ) -> RoundRecord {
-        let mut ctx = self.build_ctx(round, strategy);
-        let theta = &self.theta;
+        let ctx = self.begin_round(round, strategy);
+        self.local_device_phase(problem, algo, &ctx);
+        self.finish_round(problem, algo, ctx)
+    }
 
-        // ---- device phase (parallel) ---------------------------------
-        // Each selected device computes its gradient, runs the client
-        // rule, and *serializes* its upload into the slot's persistent
-        // wire buffer; payload code buffers are recycled back into the
-        // device state so steady-state rounds allocate nothing.
+    /// Number of devices this engine coordinates.
+    pub fn num_devices(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Begin round `round`: run device selection and assemble the round
+    /// context every client rule will see. The context is pure data —
+    /// a remote coordinator serializes it verbatim into its start-round
+    /// broadcast so remote clients reconstruct it bit-exactly.
+    pub fn begin_round(
+        &mut self,
+        round: usize,
+        strategy: &mut dyn SelectionStrategy,
+    ) -> RoundCtx {
+        self.build_ctx(round, strategy)
+    }
+
+    /// Run the in-process device phase for every selected device
+    /// (parallel): each computes its gradient, runs the client rule,
+    /// and *serializes* its upload into the slot's persistent wire
+    /// buffer; payload code buffers are recycled back into the device
+    /// state so steady-state rounds allocate nothing.
+    pub fn local_device_phase(
+        &mut self,
+        problem: &dyn GradientSource,
+        algo: &dyn Algorithm,
+        ctx: &RoundCtx,
+    ) {
+        let theta = &self.theta;
         parallel_for_each_mut(&mut self.slots, self.threads, |i, slot| {
             slot.staged = false;
             slot.staged_level = None;
@@ -288,7 +322,7 @@ impl RoundEngine {
             slot.loss = problem.local_grad(i, theta, &mut slot.grad_full, &mut slot.scratch);
             slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
             let ClientUpload { payload, level } =
-                algo.client_step(&mut slot.state, &slot.grad_gathered, &ctx);
+                algo.client_step(&mut slot.state, &slot.grad_gathered, ctx);
             slot.staged_level = level;
             if let Some(p) = payload {
                 wire::encode_into(&p, &mut slot.wire_buf);
@@ -296,7 +330,73 @@ impl RoundEngine {
                 slot.state.recycle(p);
             }
         });
+    }
 
+    /// Reset per-round staging for a round driven by *remote* clients:
+    /// marks participation from the context and clears every slot's
+    /// staged upload and loss (`NaN` = not yet reported). Follow with
+    /// [`RoundEngine::stage_remote`] per result, then
+    /// [`RoundEngine::finish_round`]. Devices whose results never
+    /// arrive are folded as skips; the metrics layer averages only the
+    /// losses that did arrive.
+    pub fn stage_reset(&mut self, ctx: &RoundCtx) {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            slot.staged = false;
+            slot.staged_level = None;
+            slot.participated = ctx.is_selected(i);
+            slot.loss = f64::NAN;
+        }
+    }
+
+    /// Inject one remote device's round result (what its
+    /// `Algorithm::client_step` produced on the client side):
+    /// serialized wire payload (if it uploaded), reported level, local
+    /// loss, and the device's cumulative upload/skip counters (the
+    /// selection view mirrors them). Returns `false` — without
+    /// panicking — if `device` is out of range or was not selected this
+    /// round, so a misbehaving client cannot corrupt the round.
+    pub fn stage_remote(
+        &mut self,
+        device: usize,
+        loss: f64,
+        level: Option<u8>,
+        payload: Option<&[u8]>,
+        counters: (u64, u64),
+    ) -> bool {
+        let Some(slot) = self.slots.get_mut(device) else {
+            return false;
+        };
+        if !slot.participated {
+            return false;
+        }
+        slot.loss = loss;
+        slot.staged_level = level;
+        if let Some(bytes) = payload {
+            slot.wire_buf.clear();
+            slot.wire_buf.extend_from_slice(bytes);
+            slot.staged = true;
+        }
+        slot.state.uploads = counters.0;
+        slot.state.skips = counters.1;
+        true
+    }
+
+    /// Record `n` stragglers detected outside the channel simulation
+    /// (heartbeat-expired protocol clients) in the cumulative counter.
+    pub fn note_stragglers(&mut self, n: u64) {
+        self.cum_stragglers += n;
+    }
+
+    /// Complete the round from whatever is staged: transport, server
+    /// fold, model update, and metrics. Consumes the context built by
+    /// [`RoundEngine::begin_round`] (its history buffer is recycled).
+    pub fn finish_round(
+        &mut self,
+        problem: &dyn GradientSource,
+        algo: &dyn Algorithm,
+        mut ctx: RoundCtx,
+    ) -> RoundRecord {
+        let round = ctx.round;
         // ---- transport phase ------------------------------------------
         // Uploads stay as wire bytes end to end: the channel bills and
         // optionally drops them, the fold reads them zero-copy. The
@@ -341,15 +441,24 @@ impl RoundEngine {
         // the old filter pass visited) already names this round's
         // participants; reuse it rather than re-scanning the slots.
         let participant_count = self.participant_buf.len();
-        let train_loss = if participant_count == 0 {
+        // Average over the losses actually reported: in-process every
+        // participant's loss is finite so this is the plain mean, while
+        // a remote round leaves `NaN` in the slots of devices whose
+        // clients died mid-round (`stage_reset`) and they must not
+        // poison the global estimate.
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for &i in &self.participant_buf {
+            let l = self.slots[i].loss;
+            if l.is_finite() {
+                loss_sum += l;
+                loss_n += 1;
+            }
+        }
+        let train_loss = if loss_n == 0 {
             self.prev_loss
         } else {
-            let sum: f64 = self
-                .participant_buf
-                .iter()
-                .map(|&i| self.slots[i].loss)
-                .sum();
-            sum / participant_count as f64
+            loss_sum / loss_n as f64
         };
         // First *observed* loss anchors f(θ⁰): with sparse selection
         // (availability schedules) round 0 may have no participants,
@@ -377,7 +486,9 @@ impl RoundEngine {
         for (view, slot) in self.device_views.iter_mut().zip(&self.slots) {
             view.uploads = slot.state.uploads;
             view.skips = slot.state.skips;
-            if slot.participated {
+            // A remote participant whose result never arrived keeps its
+            // previous loss estimate (its slot holds the `NaN` sentinel).
+            if slot.participated && slot.loss.is_finite() {
                 view.last_loss = Some(slot.loss);
             }
         }

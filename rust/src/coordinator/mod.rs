@@ -33,6 +33,8 @@ mod session;
 
 pub use session::{Session, SessionBuilder};
 
+pub(crate) use session::SessionParts;
+
 use crate::quant::SectionSpec;
 use crate::selection::{FullParticipation, RandomK, SelectionStrategy};
 use crate::transport::scenario::NetworkSpec;

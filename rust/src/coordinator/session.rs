@@ -145,10 +145,43 @@ pub struct Session {
     split: String,
 }
 
+/// Simultaneous borrows of a [`Session`]'s components, so a front-end
+/// that owns a session (the [`crate::protocol`] coordinator service)
+/// can drive the engine with the problem/algorithm/strategy/observers
+/// alongside it.
+pub(crate) struct SessionParts<'a> {
+    pub engine: &'a mut RoundEngine,
+    pub problem: &'a dyn GradientSource,
+    pub algo: &'a dyn Algorithm,
+    pub strategy: &'a mut dyn SelectionStrategy,
+    pub observers: &'a mut Vec<Box<dyn RoundObserver>>,
+}
+
 impl Session {
     /// Start building a session.
     pub fn builder(problem: Arc<dyn GradientSource>, algo: Arc<dyn Algorithm>) -> SessionBuilder {
         SessionBuilder::new(problem, algo)
+    }
+
+    /// Borrow every component at once (disjoint fields, one call).
+    pub(crate) fn parts(&mut self) -> SessionParts<'_> {
+        SessionParts {
+            engine: &mut self.engine,
+            problem: self.problem.as_ref(),
+            algo: self.algo.as_ref(),
+            strategy: self.strategy.as_mut(),
+            observers: &mut self.observers,
+        }
+    }
+
+    /// The run metadata observers receive at run start.
+    pub fn meta(&self) -> RunMeta {
+        RunMeta {
+            algorithm: self.algo.name().to_string(),
+            dataset: self.dataset.clone(),
+            split: self.split.clone(),
+            rounds: self.engine.config().rounds,
+        }
     }
 
     /// Current global model.

@@ -13,7 +13,8 @@
 //!   [`metrics::observer::RoundObserver`] sinks; seven baseline
 //!   algorithms, honest byte-accounted transport, datasets,
 //!   partitioners, metrics, theory calculators and the table/figure
-//!   reproduction harness.
+//!   reproduction harness; the [`protocol`] module serves a session to
+//!   remote device clients over TCP or an in-process loopback.
 //! * **L2** — JAX neural models (`python/compile/model.py`) lowered AOT
 //!   to HLO text artifacts executed through PJRT (`runtime`).
 //! * **L1** — the fused Pallas quantization kernel
@@ -34,6 +35,7 @@ pub mod data;
 pub mod hetero;
 pub mod metrics;
 pub mod problems;
+pub mod protocol;
 pub mod quant;
 pub mod repro;
 #[cfg(feature = "xla")]

@@ -9,6 +9,7 @@
 //! repro run --config FILE [--algo NAME] [--select SPEC] [--network SPEC]
 //!           [--quant-sections SPEC] [--dadaquant-b0 B] [--dadaquant-patience P]
 //!           [--dadaquant-cap C] [--out FILE.csv] [--jsonl FILE.jsonl]
+//!           [--serve [ADDR] | --connect ADDR]
 //!                                                     single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
 //! repro list                                          presets + algorithms + strategies
@@ -18,6 +19,8 @@ use aquila::algorithms::{self, Algorithm};
 use aquila::config::{table2_rows, table3_rows, DatasetKind, ExperimentSpec, SplitKind};
 use aquila::metrics::bits_display;
 use aquila::metrics::observer::{CsvStream, JsonLines};
+use aquila::problems::GradientSource;
+use aquila::protocol::{CoordinatorService, DeviceClient, TcpConnection, TcpTransport};
 use aquila::quant::SectionSpec;
 use aquila::repro;
 use aquila::selection::SelectionSpec;
@@ -258,6 +261,18 @@ fn cmd_run(args: &Args) -> ExitCode {
         eprintln!("unknown algorithm '{algo_name}'");
         return ExitCode::FAILURE;
     };
+    // Protocol roles: `--connect ADDR` turns this process into a device
+    // client of a remote coordinator; `--serve [ADDR]` serves the run
+    // over TCP instead of executing the device phase in-process.
+    if let Some(addr) = args.flags.get("connect") {
+        return cmd_connect(&spec, algo, addr);
+    }
+    if let Some(v) = args.flags.get("serve") {
+        // Bare `--serve` listens on the config's serve.addr.
+        if v != "true" {
+            spec.serve.addr = v.clone();
+        }
+    }
     println!(
         "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={}, sections={})",
         algo.name(),
@@ -290,7 +305,28 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
-    let trace = builder.build().run();
+    let trace = if args.flags.contains_key("serve") {
+        let mut transport = match TcpTransport::bind(&spec.serve.addr) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot bind {}: {e}", spec.serve.addr);
+                return ExitCode::FAILURE;
+            }
+        };
+        if let Ok(addr) = transport.local_addr() {
+            println!("serving on {addr}, waiting for {} client(s)", spec.serve.clients);
+        }
+        let mut service = CoordinatorService::new(builder.build(), spec.serve.clone());
+        match service.run(&mut transport) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("serve failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        builder.build().run()
+    };
     println!("{}", trace.summary_json());
     if let Some(out) = args.flags.get("out") {
         println!("trace streamed to {out}");
@@ -299,6 +335,37 @@ fn cmd_run(args: &Args) -> ExitCode {
         println!("json-lines streamed to {path}");
     }
     ExitCode::SUCCESS
+}
+
+/// `repro run --connect ADDR`: serve a device range for a remote
+/// coordinator, constructing the identical problem/masks/config from
+/// the shared experiment file.
+fn cmd_connect(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>, addr: &str) -> ExitCode {
+    println!("connecting to coordinator at {addr} as a device client");
+    let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+    let masks = repro::masks_for(spec, problem.as_ref());
+    let client = DeviceClient::new(problem, algo, spec.run_config(), masks)
+        .heartbeat_ms(spec.serve.heartbeat_ms);
+    let mut conn = match TcpConnection::connect(addr, std::time::Duration::from_secs(10)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot connect to {addr}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match client.run(&mut conn) {
+        Ok(rep) => {
+            println!(
+                "client {} served devices {}..{} for {} round(s)",
+                rep.client_id, rep.devices.start, rep.devices.end, rep.rounds_served
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("client failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
 }
 
 fn cmd_theory() {
@@ -353,6 +420,21 @@ fn cmd_list() {
         "quantization sections (--quant-sections / quant_sections = \"...\"): {}",
         SectionSpec::SYNTAX
     );
+    println!(
+        "serve config ([serve] TOML table): addr clients heartbeat_ms heartbeat_timeout_ms \
+         round_timeout_ms accept_timeout_ms"
+    );
+    println!("flags per command:");
+    println!("  table2 | table3 | fig2 | fig3   --scale S --rounds N --seed K --out DIR");
+    println!("  ablation-beta                   --betas B1,B2,.. --dataset D --scale S");
+    println!("                                  --rounds N --out DIR");
+    println!("  run                             --config FILE --algo NAME --select SPEC");
+    println!("                                  --network SPEC --quant-sections SPEC");
+    println!("                                  --dadaquant-b0 B --dadaquant-patience P");
+    println!("                                  --dadaquant-cap C --out FILE.csv");
+    println!("                                  --jsonl FILE.jsonl");
+    println!("                                  --serve [ADDR]   coordinator service");
+    println!("                                  --connect ADDR   device client");
 }
 
 fn main() -> ExitCode {
@@ -373,6 +455,8 @@ fn main() -> ExitCode {
             println!("  run flags: --config FILE --algo NAME --select SPEC --network SPEC");
             println!("             --quant-sections SPEC --jsonl FILE --dadaquant-b0 B");
             println!("             --dadaquant-patience P --dadaquant-cap C");
+            println!("             --serve [ADDR] (coordinator) | --connect ADDR (client)");
+            println!("  `repro list` prints the full flag surface and spec syntaxes");
         }
     }
     ExitCode::SUCCESS

@@ -1,0 +1,221 @@
+//! The device side of the protocol: a thin client that runs the
+//! *existing* device phase — gradient, capacity-mask gather,
+//! `Algorithm::client_step`, wire-v2 encode — behind a [`Connection`].
+//!
+//! [`DeviceClient`] owns the same problem/algorithm/config the
+//! coordinator was built from (both sides construct their state from
+//! the shared seed; the rendezvous cross-checks it), claims a device
+//! range at rendezvous, and then serves rounds: on every
+//! [`Message::StartRound`] it computes each owned selected device and
+//! reports a [`Message::RoundResult`] per device. Between rounds it
+//! heartbeats so the coordinator can tell "slow" from "gone".
+
+use super::messages::{Message, RoundResult};
+use super::transport::Connection;
+use super::{CoordinatorState, ProtocolError, PROTOCOL_VERSION};
+use crate::algorithms::{Algorithm, ClientUpload, DeviceState};
+use crate::coordinator::RunConfig;
+use crate::hetero::CapacityMask;
+use crate::problems::{GradScratch, GradientSource};
+use crate::transport::wire;
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How long the client waits for the coordinator's welcome after
+/// sending its rendezvous (the coordinator may be waiting on other
+/// clients before it answers anyone's round traffic, but welcomes are
+/// sent immediately).
+const WELCOME_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Receive slice while deliberately silent (failure-injection mode):
+/// short enough to notice the coordinator hanging up promptly.
+const SILENT_SLICE: Duration = Duration::from_millis(500);
+
+/// One owned device's replicated engine-side state and buffers.
+struct DeviceUnit {
+    state: DeviceState,
+    grad_full: Vec<f32>,
+    grad_gathered: Vec<f32>,
+    scratch: GradScratch,
+    wire_buf: Vec<u8>,
+}
+
+/// What a finished client run reports back to its caller.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientReport {
+    /// The id the coordinator assigned at rendezvous.
+    pub client_id: u32,
+    /// The contiguous device range this client computed.
+    pub devices: Range<usize>,
+    /// Rounds in which this client computed and reported results.
+    pub rounds_served: usize,
+}
+
+/// A protocol client serving a range of devices over one connection.
+pub struct DeviceClient {
+    problem: Arc<dyn GradientSource>,
+    algo: Arc<dyn Algorithm>,
+    cfg: RunConfig,
+    masks: Vec<Arc<CapacityMask>>,
+    heartbeat: Duration,
+    silent_after: Option<usize>,
+}
+
+impl DeviceClient {
+    /// Build a client from the same problem/algorithm/config/masks the
+    /// coordinator's session was built from — determinism depends on
+    /// both sides agreeing, and the rendezvous verifies the seed and
+    /// device count.
+    ///
+    /// # Panics
+    /// If `masks` does not provide exactly one mask per device.
+    pub fn new(
+        problem: Arc<dyn GradientSource>,
+        algo: Arc<dyn Algorithm>,
+        cfg: RunConfig,
+        masks: Vec<Arc<CapacityMask>>,
+    ) -> Self {
+        assert_eq!(masks.len(), problem.num_devices(), "need one mask per device");
+        Self {
+            problem,
+            algo,
+            cfg,
+            masks,
+            heartbeat: Duration::from_millis(200),
+            silent_after: None,
+        }
+    }
+
+    /// Heartbeat interval (must be well under the coordinator's
+    /// `serve.heartbeat_timeout_ms`). Default 200 ms.
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.heartbeat = Duration::from_millis(ms.max(1));
+        self
+    }
+
+    /// Failure injection for tests and the service example: after
+    /// serving this many rounds the client goes silent — it stops
+    /// reporting *and* heartbeating but keeps the connection open, so
+    /// the coordinator can only detect it through heartbeat expiry.
+    pub fn silent_after(mut self, rounds: usize) -> Self {
+        self.silent_after = Some(rounds);
+        self
+    }
+
+    /// Rendezvous over `conn` and serve rounds until the coordinator
+    /// finishes (or hangs up).
+    pub fn run(&self, conn: &mut dyn Connection) -> Result<ClientReport, ProtocolError> {
+        conn.send(&Message::Rendezvous {
+            version: PROTOCOL_VERSION,
+            want: 0,
+        })?;
+        let welcome = match conn.recv(WELCOME_TIMEOUT)? {
+            Message::Welcome(w) => w,
+            _ => return Err(ProtocolError::Violation("expected a welcome")),
+        };
+        let m = self.problem.num_devices();
+        if welcome.num_devices as usize != m || welcome.seed != self.cfg.seed {
+            return Err(ProtocolError::Violation("coordinator/client config mismatch"));
+        }
+        let lo = welcome.device_lo as usize;
+        let count = welcome.device_count as usize;
+        if lo + count > m {
+            return Err(ProtocolError::Violation("assigned device range out of bounds"));
+        }
+
+        // Replicate the engine's per-device construction (same mask,
+        // same resolved sections, same seed-derived RNG stream) so the
+        // client-side `client_step` is bit-identical to the in-process
+        // device phase.
+        let d = self.problem.dim();
+        let layout = self.problem.layout();
+        let mut units: Vec<DeviceUnit> = (lo..lo + count)
+            .map(|i| {
+                let mask = self.masks[i].clone();
+                let sections = Arc::new(self.cfg.quant_sections.resolve(&layout, &mask));
+                DeviceUnit {
+                    state: DeviceState::with_sections(i, mask.clone(), sections, self.cfg.seed),
+                    grad_full: vec![0.0; d],
+                    grad_gathered: Vec::with_capacity(mask.support()),
+                    scratch: self.problem.make_scratch(),
+                    wire_buf: Vec::new(),
+                }
+            })
+            .collect();
+
+        let mut report = ClientReport {
+            client_id: welcome.client_id,
+            devices: lo..lo + count,
+            rounds_served: 0,
+        };
+        let mut silent = false;
+        loop {
+            if silent {
+                match conn.recv(SILENT_SLICE) {
+                    Err(ProtocolError::Timeout) => continue,
+                    Err(_) => break,
+                    Ok(Message::EndRound {
+                        state: CoordinatorState::Finished,
+                        ..
+                    }) => break,
+                    Ok(_) => continue,
+                }
+            }
+            match conn.recv(self.heartbeat) {
+                Err(ProtocolError::Timeout) => conn.send(&Message::Heartbeat)?,
+                Err(ProtocolError::Closed) => break,
+                Err(e) => return Err(e),
+                Ok(Message::StartRound(sr)) => {
+                    if sr.theta.len() != d {
+                        return Err(ProtocolError::Violation("broadcast model has wrong dim"));
+                    }
+                    for unit in units.iter_mut() {
+                        let i = unit.state.id;
+                        if !sr.ctx.is_selected(i) {
+                            continue;
+                        }
+                        let loss = self.problem.local_grad(
+                            i,
+                            &sr.theta,
+                            &mut unit.grad_full,
+                            &mut unit.scratch,
+                        );
+                        unit.state.mask.gather(&unit.grad_full, &mut unit.grad_gathered);
+                        let ClientUpload { payload, level } =
+                            self.algo.client_step(&mut unit.state, &unit.grad_gathered, &sr.ctx);
+                        let bytes = payload.map(|p| {
+                            wire::encode_into(&p, &mut unit.wire_buf);
+                            unit.state.recycle(p);
+                            unit.wire_buf.clone()
+                        });
+                        conn.send(&Message::RoundResult(RoundResult {
+                            round: sr.ctx.round as u32,
+                            device: i as u32,
+                            loss,
+                            level,
+                            uploads: unit.state.uploads,
+                            skips: unit.state.skips,
+                            payload: bytes,
+                        }))?;
+                    }
+                    report.rounds_served += 1;
+                    if let Some(n) = self.silent_after {
+                        if report.rounds_served >= n {
+                            silent = true;
+                        }
+                    }
+                }
+                Ok(Message::EndRound {
+                    state: CoordinatorState::Finished,
+                    ..
+                }) => break,
+                Ok(Message::State(CoordinatorState::Finished)) => break,
+                // Other traffic (heartbeat replies, non-final
+                // end-rounds) carries no work.
+                Ok(_) => {}
+            }
+        }
+        Ok(report)
+    }
+}

@@ -1,0 +1,214 @@
+//! Length-prefixed framing: the byte layer under every protocol
+//! message.
+//!
+//! A frame is `len: u32 LE | kind: u8 | body[len]`. The length covers
+//! the body only, is capped at [`MAX_FRAME_BYTES`] (so a garbage
+//! header cannot provoke an unbounded allocation), and the kind byte
+//! selects the [`super::messages`] decoder. Wire-v2 payloads ride
+//! inside round-result bodies verbatim — framing never re-encodes
+//! them.
+
+use super::ProtocolError;
+
+/// Bytes in a frame header (`u32` length + kind byte).
+pub const HEADER_BYTES: usize = 5;
+
+/// Hard cap on a frame body. Generous enough for a full model
+/// broadcast (64 Mi parameters) while bounding what a malformed or
+/// hostile header can make the receiver allocate.
+pub const MAX_FRAME_BYTES: u32 = 256 << 20;
+
+/// One decoded frame: a message kind plus its undecoded body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// Message kind byte (see [`super::messages`]).
+    pub kind: u8,
+    /// Message body, still encoded.
+    pub body: Vec<u8>,
+}
+
+/// Append the frame for (`kind`, `body`) to `out`.
+///
+/// # Panics
+/// If `body` exceeds [`MAX_FRAME_BYTES`] — senders construct bodies
+/// from bounded model state, so an oversized body is a programming
+/// error, not a peer failure.
+pub fn encode_frame(kind: u8, body: &[u8], out: &mut Vec<u8>) {
+    assert!(
+        body.len() <= MAX_FRAME_BYTES as usize,
+        "frame body {} exceeds MAX_FRAME_BYTES",
+        body.len()
+    );
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(body);
+}
+
+/// Decode one frame from the front of `bytes`; returns the frame and
+/// the number of bytes it consumed. Never panics on malformed input:
+/// a short buffer is [`ProtocolError::Truncated`], an oversized
+/// length is [`ProtocolError::FrameTooLarge`].
+pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), ProtocolError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(ProtocolError::Truncated {
+            need: HEADER_BYTES,
+            have: bytes.len(),
+        });
+    }
+    let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(ProtocolError::FrameTooLarge {
+            len,
+            max: MAX_FRAME_BYTES,
+        });
+    }
+    let kind = bytes[4];
+    let total = HEADER_BYTES + len as usize;
+    if bytes.len() < total {
+        return Err(ProtocolError::Truncated {
+            need: total,
+            have: bytes.len(),
+        });
+    }
+    Ok((
+        Frame {
+            kind,
+            body: bytes[HEADER_BYTES..total].to_vec(),
+        },
+        total,
+    ))
+}
+
+/// Incremental frame assembler for byte-stream transports.
+///
+/// Feed it reads of any size; it buffers a partial header or body
+/// across calls, so a read timeout mid-frame never desynchronizes the
+/// stream — the next [`FrameReader::consume`] resumes exactly where
+/// the last one stopped.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    header: [u8; HEADER_BYTES],
+    have_header: usize,
+    body: Vec<u8>,
+    body_len: usize,
+    in_body: bool,
+}
+
+impl FrameReader {
+    /// Fresh reader at a frame boundary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// How many more bytes the current frame needs (header bytes while
+    /// the header is incomplete, then body bytes).
+    pub fn wanted(&self) -> usize {
+        if self.in_body {
+            self.body_len - self.body.len()
+        } else {
+            HEADER_BYTES - self.have_header
+        }
+    }
+
+    /// Push `chunk` (the bytes just read from the stream; callers read
+    /// at most [`FrameReader::wanted`] at a time so a chunk never
+    /// spans a frame boundary). Returns the completed frame, if this
+    /// chunk finished one.
+    pub fn consume(&mut self, chunk: &[u8]) -> Result<Option<Frame>, ProtocolError> {
+        debug_assert!(chunk.len() <= self.wanted());
+        if !self.in_body {
+            let n = chunk.len().min(HEADER_BYTES - self.have_header);
+            self.header[self.have_header..self.have_header + n].copy_from_slice(&chunk[..n]);
+            self.have_header += n;
+            if self.have_header < HEADER_BYTES {
+                return Ok(None);
+            }
+            let len = u32::from_le_bytes([
+                self.header[0],
+                self.header[1],
+                self.header[2],
+                self.header[3],
+            ]);
+            if len > MAX_FRAME_BYTES {
+                return Err(ProtocolError::FrameTooLarge {
+                    len,
+                    max: MAX_FRAME_BYTES,
+                });
+            }
+            self.body_len = len as usize;
+            self.body.clear();
+            self.in_body = true;
+        } else {
+            self.body.extend_from_slice(chunk);
+        }
+        if self.body.len() < self.body_len {
+            return Ok(None);
+        }
+        let frame = Frame {
+            kind: self.header[4],
+            body: std::mem::take(&mut self.body),
+        };
+        self.have_header = 0;
+        self.body_len = 0;
+        self.in_body = false;
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let mut buf = Vec::new();
+        encode_frame(0x03, b"hello", &mut buf);
+        let (frame, used) = decode_frame(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(frame.kind, 0x03);
+        assert_eq!(frame.body, b"hello");
+    }
+
+    #[test]
+    fn truncated_and_oversized() {
+        assert!(matches!(decode_frame(&[1, 0]), Err(ProtocolError::Truncated { .. })));
+        let mut buf = Vec::new();
+        encode_frame(0x01, &[9; 16], &mut buf);
+        buf.truncate(10);
+        assert!(matches!(decode_frame(&buf), Err(ProtocolError::Truncated { .. })));
+        let huge = (MAX_FRAME_BYTES + 1).to_le_bytes();
+        let bytes = [huge[0], huge[1], huge[2], huge[3], 0x01];
+        assert!(matches!(decode_frame(&bytes), Err(ProtocolError::FrameTooLarge { .. })));
+    }
+
+    #[test]
+    fn incremental_reassembly_byte_at_a_time() {
+        let mut buf = Vec::new();
+        encode_frame(0x42, &[7, 8, 9], &mut buf);
+        let mut reader = FrameReader::new();
+        let mut out = None;
+        for &b in &buf {
+            assert!(reader.wanted() > 0);
+            if let Some(f) = reader.consume(&[b]).unwrap() {
+                out = Some(f);
+            }
+        }
+        let f = out.expect("frame completes on the last byte");
+        assert_eq!(f.kind, 0x42);
+        assert_eq!(f.body, vec![7, 8, 9]);
+        // The reader is back at a frame boundary.
+        assert_eq!(reader.wanted(), HEADER_BYTES);
+    }
+
+    #[test]
+    fn empty_body_frame() {
+        let mut buf = Vec::new();
+        encode_frame(0x02, &[], &mut buf);
+        assert_eq!(buf.len(), HEADER_BYTES);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        assert!(frame.body.is_empty());
+        let mut reader = FrameReader::new();
+        let f = reader.consume(&buf).unwrap().expect("complete");
+        assert_eq!(f.kind, 0x02);
+    }
+}

@@ -1,0 +1,576 @@
+//! The protocol message set and its byte codec.
+//!
+//! Client → coordinator: [`Message::Rendezvous`], [`Message::Heartbeat`],
+//! [`Message::RoundResult`]. Coordinator → client: [`Message::Welcome`],
+//! [`Message::State`], [`Message::StartRound`], [`Message::EndRound`].
+//!
+//! Every numeric field is little-endian and floats travel as raw IEEE
+//! bit patterns (`to_le_bytes`/`from_le_bytes`), so a decoded
+//! [`RoundCtx`] is bit-identical to the one the coordinator built —
+//! the determinism guarantee rests on this. Decoding is total: any
+//! byte body yields `Ok` or a typed [`ProtocolError`], never a panic.
+//! An embedded upload is validated against the wire-v2 codec at decode
+//! time, so wire failures surface as composed protocol errors at the
+//! message boundary.
+
+use super::{CoordinatorState, ProtocolError};
+use crate::algorithms::RoundCtx;
+use crate::transport::wire;
+
+/// Frame kind bytes, one per message.
+pub mod kind {
+    /// [`super::Message::Rendezvous`].
+    pub const RENDEZVOUS: u8 = 0x01;
+    /// [`super::Message::Heartbeat`].
+    pub const HEARTBEAT: u8 = 0x02;
+    /// [`super::Message::RoundResult`].
+    pub const ROUND_RESULT: u8 = 0x03;
+    /// [`super::Message::Welcome`].
+    pub const WELCOME: u8 = 0x11;
+    /// [`super::Message::State`].
+    pub const STATE: u8 = 0x12;
+    /// [`super::Message::StartRound`].
+    pub const START_ROUND: u8 = 0x13;
+    /// [`super::Message::EndRound`].
+    pub const END_ROUND: u8 = 0x14;
+}
+
+/// The coordinator's reply to a successful rendezvous: which devices
+/// the client now serves, plus the run parameters it must match.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Welcome {
+    /// Coordinator-assigned client index (0-based).
+    pub client_id: u32,
+    /// First device id in the client's contiguous range.
+    pub device_lo: u32,
+    /// Number of devices in the range.
+    pub device_count: u32,
+    /// Total device count `M` of the run (cross-checked against the
+    /// client's locally built problem).
+    pub num_devices: u32,
+    /// Configured horizon `K`.
+    pub rounds: u32,
+    /// Run seed (cross-checked so both sides derive identical device
+    /// RNG streams).
+    pub seed: u64,
+}
+
+/// The start-round broadcast: the full [`RoundCtx`] every client rule
+/// will see this round plus the current global model.
+#[derive(Clone, Debug)]
+pub struct StartRound {
+    /// Round context, reconstructed bit-exactly on the client.
+    pub ctx: RoundCtx,
+    /// Current global model θᵏ.
+    pub theta: Vec<f32>,
+}
+
+/// One device's round outcome, reported by the client that serves it:
+/// what `Algorithm::client_step` produced (upload bytes or a skip)
+/// plus the bookkeeping the coordinator's selection view mirrors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundResult {
+    /// Round this result belongs to.
+    pub round: u32,
+    /// Reporting device id.
+    pub device: u32,
+    /// Local loss at θᵏ.
+    pub loss: f64,
+    /// Quantization level the client rule chose (upload or skip
+    /// beacon), if any.
+    pub level: Option<u8>,
+    /// Device's cumulative upload count after this round.
+    pub uploads: u64,
+    /// Device's cumulative skip count after this round.
+    pub skips: u64,
+    /// Serialized wire-v2 upload, absent when the device skipped.
+    pub payload: Option<Vec<u8>>,
+}
+
+/// One protocol message (see the module docs for direction and flow).
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Client hello: claim a device range.
+    Rendezvous {
+        /// Must equal [`super::PROTOCOL_VERSION`].
+        version: u16,
+        /// Devices requested; 0 = accept the coordinator's share.
+        want: u32,
+    },
+    /// Liveness beacon; the coordinator answers with [`Message::State`].
+    Heartbeat,
+    /// Per-device round outcome.
+    RoundResult(RoundResult),
+    /// Rendezvous accepted; device range assigned.
+    Welcome(Welcome),
+    /// Heartbeat reply carrying the coordinator state.
+    State(CoordinatorState),
+    /// Round begins: context + model broadcast.
+    StartRound(Box<StartRound>),
+    /// Round complete; announces the next state.
+    EndRound {
+        /// The round that just completed.
+        round: u32,
+        /// Its global training loss (diagnostic; clients display it).
+        train_loss: f64,
+        /// State the coordinator moves to.
+        state: CoordinatorState,
+    },
+}
+
+impl Message {
+    /// This message's frame kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Message::Rendezvous { .. } => kind::RENDEZVOUS,
+            Message::Heartbeat => kind::HEARTBEAT,
+            Message::RoundResult(_) => kind::ROUND_RESULT,
+            Message::Welcome(_) => kind::WELCOME,
+            Message::State(_) => kind::STATE,
+            Message::StartRound(_) => kind::START_ROUND,
+            Message::EndRound { .. } => kind::END_ROUND,
+        }
+    }
+
+    /// Serialize the message body (frame kind excluded) into `out`,
+    /// which is cleared first.
+    pub fn encode_body(&self, out: &mut Vec<u8>) {
+        out.clear();
+        match self {
+            Message::Rendezvous { version, want } => {
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&want.to_le_bytes());
+            }
+            Message::Heartbeat => {}
+            Message::RoundResult(r) => {
+                out.extend_from_slice(&r.round.to_le_bytes());
+                out.extend_from_slice(&r.device.to_le_bytes());
+                out.extend_from_slice(&r.loss.to_le_bytes());
+                out.push(u8::from(r.level.is_some()));
+                out.push(r.level.unwrap_or(0));
+                out.extend_from_slice(&r.uploads.to_le_bytes());
+                out.extend_from_slice(&r.skips.to_le_bytes());
+                match &r.payload {
+                    Some(bytes) => {
+                        out.push(1);
+                        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                        out.extend_from_slice(bytes);
+                    }
+                    None => out.push(0),
+                }
+            }
+            Message::Welcome(w) => {
+                out.extend_from_slice(&w.client_id.to_le_bytes());
+                out.extend_from_slice(&w.device_lo.to_le_bytes());
+                out.extend_from_slice(&w.device_count.to_le_bytes());
+                out.extend_from_slice(&w.num_devices.to_le_bytes());
+                out.extend_from_slice(&w.rounds.to_le_bytes());
+                out.extend_from_slice(&w.seed.to_le_bytes());
+            }
+            Message::State(s) => encode_state(*s, out),
+            Message::StartRound(sr) => {
+                let ctx = &sr.ctx;
+                out.extend_from_slice(&(ctx.round as u32).to_le_bytes());
+                out.extend_from_slice(&(ctx.num_devices as u32).to_le_bytes());
+                out.extend_from_slice(&ctx.alpha.to_le_bytes());
+                out.extend_from_slice(&ctx.beta.to_le_bytes());
+                out.extend_from_slice(&ctx.model_diff_sq.to_le_bytes());
+                out.extend_from_slice(&ctx.init_loss.to_le_bytes());
+                out.extend_from_slice(&ctx.prev_loss.to_le_bytes());
+                let flags = u8::from(ctx.marina_sync) | (u8::from(ctx.selected.is_some()) << 1);
+                out.push(flags);
+                out.push(ctx.dadaquant_level);
+                out.extend_from_slice(&(ctx.model_diff_history.len() as u32).to_le_bytes());
+                for &h in &ctx.model_diff_history {
+                    out.extend_from_slice(&h.to_le_bytes());
+                }
+                if let Some(sel) = &ctx.selected {
+                    out.extend_from_slice(&(sel.len() as u32).to_le_bytes());
+                    for &i in sel {
+                        out.extend_from_slice(&(i as u32).to_le_bytes());
+                    }
+                }
+                out.extend_from_slice(&(sr.theta.len() as u32).to_le_bytes());
+                for &t in &sr.theta {
+                    out.extend_from_slice(&t.to_le_bytes());
+                }
+            }
+            Message::EndRound {
+                round,
+                train_loss,
+                state,
+            } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&train_loss.to_le_bytes());
+                encode_state(*state, out);
+            }
+        }
+    }
+
+    /// Decode a message from a frame's kind byte and body. Total:
+    /// malformed input yields a typed error, never a panic, and
+    /// trailing bytes are rejected (a length-confused peer must not
+    /// half-parse).
+    pub fn decode(kind_byte: u8, body: &[u8]) -> Result<Message, ProtocolError> {
+        let mut r = Reader::new(body);
+        let msg = match kind_byte {
+            kind::RENDEZVOUS => Message::Rendezvous {
+                version: r.u16()?,
+                want: r.u32()?,
+            },
+            kind::HEARTBEAT => Message::Heartbeat,
+            kind::ROUND_RESULT => {
+                let round = r.u32()?;
+                let device = r.u32()?;
+                let loss = r.f64()?;
+                let has_level = r.flag()?;
+                let level_byte = r.u8()?;
+                let level = has_level.then_some(level_byte);
+                let uploads = r.u64()?;
+                let skips = r.u64()?;
+                let payload = if r.flag()? {
+                    let len = r.u32()? as usize;
+                    let bytes = r.bytes(len)?.to_vec();
+                    // Validate the embedded upload now, composing wire
+                    // failures into the protocol error at the message
+                    // boundary — downstream folding may then trust it.
+                    wire::view(&bytes)?;
+                    Some(bytes)
+                } else {
+                    None
+                };
+                Message::RoundResult(RoundResult {
+                    round,
+                    device,
+                    loss,
+                    level,
+                    uploads,
+                    skips,
+                    payload,
+                })
+            }
+            kind::WELCOME => Message::Welcome(Welcome {
+                client_id: r.u32()?,
+                device_lo: r.u32()?,
+                device_count: r.u32()?,
+                num_devices: r.u32()?,
+                rounds: r.u32()?,
+                seed: r.u64()?,
+            }),
+            kind::STATE => Message::State(decode_state(&mut r)?),
+            kind::START_ROUND => {
+                let round = r.u32()? as usize;
+                let num_devices = r.u32()? as usize;
+                let alpha = r.f32()?;
+                let beta = r.f32()?;
+                let model_diff_sq = r.f64()?;
+                let init_loss = r.f64()?;
+                let prev_loss = r.f64()?;
+                let flags = r.u8()?;
+                if flags & !0b11 != 0 {
+                    return Err(ProtocolError::Malformed("start-round flags"));
+                }
+                let dadaquant_level = r.u8()?;
+                let hist_len = r.checked_len("diff history")?;
+                let mut model_diff_history = Vec::with_capacity(hist_len);
+                for _ in 0..hist_len {
+                    model_diff_history.push(r.f64()?);
+                }
+                let selected = if flags & 0b10 != 0 {
+                    let n = r.checked_len("selection list")?;
+                    let mut sel = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        sel.push(r.u32()? as usize);
+                    }
+                    Some(sel)
+                } else {
+                    None
+                };
+                let theta_len = r.checked_len("theta")?;
+                let mut theta = Vec::with_capacity(theta_len);
+                for _ in 0..theta_len {
+                    theta.push(r.f32()?);
+                }
+                Message::StartRound(Box::new(StartRound {
+                    ctx: RoundCtx {
+                        round,
+                        num_devices,
+                        alpha,
+                        beta,
+                        model_diff_sq,
+                        model_diff_history,
+                        init_loss,
+                        prev_loss,
+                        marina_sync: flags & 0b01 != 0,
+                        selected,
+                        dadaquant_level,
+                    },
+                    theta,
+                }))
+            }
+            kind::END_ROUND => Message::EndRound {
+                round: r.u32()?,
+                train_loss: r.f64()?,
+                state: decode_state(&mut r)?,
+            },
+            other => return Err(ProtocolError::UnknownKind(other)),
+        };
+        if r.remaining() != 0 {
+            return Err(ProtocolError::Malformed("trailing bytes"));
+        }
+        Ok(msg)
+    }
+}
+
+fn encode_state(s: CoordinatorState, out: &mut Vec<u8>) {
+    let (tag, round) = match s {
+        CoordinatorState::Standby => (0u8, 0u32),
+        CoordinatorState::Round(k) => (1, k),
+        CoordinatorState::Finished => (2, 0),
+    };
+    out.push(tag);
+    out.extend_from_slice(&round.to_le_bytes());
+}
+
+fn decode_state(r: &mut Reader<'_>) -> Result<CoordinatorState, ProtocolError> {
+    let tag = r.u8()?;
+    let round = r.u32()?;
+    match tag {
+        0 => Ok(CoordinatorState::Standby),
+        1 => Ok(CoordinatorState::Round(round)),
+        2 => Ok(CoordinatorState::Finished),
+        _ => Err(ProtocolError::Malformed("state tag")),
+    }
+}
+
+/// Bounds-checked little-endian reader over a message body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.remaining() < n {
+            return Err(ProtocolError::Truncated {
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    /// A 0/1 boolean byte; anything else is malformed (a corrupted
+    /// flag must not silently decode as `true`).
+    fn flag(&mut self) -> Result<bool, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(ProtocolError::Malformed("flag byte")),
+        }
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtocolError> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtocolError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtocolError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A `u32` element count that must be coverable by the bytes still
+    /// in the body (each element is at least one byte), so a hostile
+    /// length cannot drive `Vec::with_capacity` beyond the frame size.
+    fn checked_len(&mut self, what: &'static str) -> Result<usize, ProtocolError> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() {
+            return Err(ProtocolError::Malformed(what));
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: &Message) -> Message {
+        let mut body = Vec::new();
+        msg.encode_body(&mut body);
+        Message::decode(msg.kind(), &body).expect("round trip decodes")
+    }
+
+    #[test]
+    fn rendezvous_and_heartbeat() {
+        match round_trip(&Message::Rendezvous { version: 1, want: 4 }) {
+            Message::Rendezvous { version, want } => {
+                assert_eq!((version, want), (1, 4));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        assert!(matches!(round_trip(&Message::Heartbeat), Message::Heartbeat));
+    }
+
+    #[test]
+    fn round_result_with_payload() {
+        use crate::quant::midtread::quantize;
+        use crate::transport::wire::Payload;
+        let p = Payload::MidtreadDelta(quantize(&[0.5, -1.0, 2.0, 0.0], 4));
+        let bytes = wire::encode(&p);
+        let msg = Message::RoundResult(RoundResult {
+            round: 3,
+            device: 7,
+            loss: 0.125,
+            level: Some(4),
+            uploads: 2,
+            skips: 1,
+            payload: Some(bytes.clone()),
+        });
+        match round_trip(&msg) {
+            Message::RoundResult(r) => {
+                assert_eq!(r.payload.as_deref(), Some(bytes.as_slice()));
+                assert_eq!((r.round, r.device, r.level), (3, 7, Some(4)));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_result_rejects_bad_embedded_payload() {
+        let msg = Message::RoundResult(RoundResult {
+            round: 0,
+            device: 0,
+            loss: 0.0,
+            level: None,
+            uploads: 0,
+            skips: 0,
+            payload: Some(vec![0xFF; 12]),
+        });
+        let mut body = Vec::new();
+        msg.encode_body(&mut body);
+        let err = Message::decode(kind::ROUND_RESULT, &body);
+        assert!(matches!(err, Err(ProtocolError::Wire(_))));
+    }
+
+    #[test]
+    fn start_round_ctx_is_bit_exact() {
+        let ctx = RoundCtx {
+            round: 5,
+            num_devices: 10,
+            alpha: 0.1,
+            beta: 0.25,
+            model_diff_sq: 1.5e-3,
+            model_diff_history: vec![1.0, 0.5, 0.25],
+            init_loss: 2.3,
+            prev_loss: 1.1,
+            marina_sync: true,
+            selected: Some(vec![1, 4, 9]),
+            dadaquant_level: 6,
+        };
+        let msg = Message::StartRound(Box::new(StartRound {
+            ctx: ctx.clone(),
+            theta: vec![0.25, -0.5, f32::MIN_POSITIVE],
+        }));
+        match round_trip(&msg) {
+            Message::StartRound(sr) => {
+                assert_eq!(sr.ctx.round, ctx.round);
+                assert_eq!(sr.ctx.selected, ctx.selected);
+                assert_eq!(sr.ctx.marina_sync, ctx.marina_sync);
+                assert_eq!(sr.ctx.model_diff_sq.to_bits(), ctx.model_diff_sq.to_bits());
+                assert_eq!(sr.ctx.model_diff_history, ctx.model_diff_history);
+                assert_eq!(sr.theta[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn state_and_end_round() {
+        for s in [
+            CoordinatorState::Standby,
+            CoordinatorState::Round(17),
+            CoordinatorState::Finished,
+        ] {
+            match round_trip(&Message::State(s)) {
+                Message::State(got) => assert_eq!(got, s),
+                other => panic!("wrong decode: {other:?}"),
+            }
+        }
+        match round_trip(&Message::EndRound {
+            round: 9,
+            train_loss: 0.75,
+            state: CoordinatorState::Finished,
+        }) {
+            Message::EndRound { round, state, .. } => {
+                assert_eq!(round, 9);
+                assert_eq!(state, CoordinatorState::Finished);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_never_panics_on_garbage() {
+        let kinds = [
+            kind::RENDEZVOUS,
+            kind::HEARTBEAT,
+            kind::ROUND_RESULT,
+            kind::WELCOME,
+            kind::STATE,
+            kind::START_ROUND,
+            kind::END_ROUND,
+            0x00,
+            0x7F,
+            0xFF,
+        ];
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(11);
+        for k in kinds {
+            for len in [0usize, 1, 4, 17, 64, 257] {
+                let body: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+                let _ = Message::decode(k, &body);
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut body = Vec::new();
+        Message::Heartbeat.encode_body(&mut body);
+        body.push(0);
+        assert!(matches!(
+            Message::decode(kind::HEARTBEAT, &body),
+            Err(ProtocolError::Malformed("trailing bytes"))
+        ));
+    }
+}

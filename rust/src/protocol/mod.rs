@@ -1,0 +1,144 @@
+//! Coordinator-as-a-service: a transport-agnostic FL protocol over
+//! wire v2.
+//!
+//! The in-process [`crate::coordinator::RoundEngine`] treats the
+//! device exchange as a function call; this module makes it a real
+//! protocol (DESIGN.md §Protocol). An explicit coordinator state
+//! machine
+//!
+//! ```text
+//! Standby ──all devices claimed──▶ Round(0) ─▶ … ─▶ Round(K−1) ─▶ Finished
+//! ```
+//!
+//! exchanges framed messages — rendezvous / heartbeat / start-round
+//! (model broadcast + selection + quantization schedule) / upload /
+//! end-round — over a length-prefixed [`frame`] layer that carries the
+//! existing wire-v2 payload encoding verbatim. Two transports sit
+//! behind the one [`Transport`] trait: a std-only TCP server
+//! (thread-per-connection, read/write timeouts) and an in-process
+//! duplex [`LoopbackHub`] so every protocol test runs deterministically
+//! in CI. A thin [`DeviceClient`] drives the existing
+//! [`crate::algorithms::DeviceState`]/quantize path on the far side;
+//! heartbeat-based liveness maps dead clients onto the existing
+//! [`crate::transport::scenario::StragglerPolicy`].
+//!
+//! Determinism guarantee: a seeded run driven through
+//! [`CoordinatorService`] produces a [`crate::metrics::RunTrace`]
+//! bit-identical to the same run executed in-process, over either
+//! transport, regardless of client count or message arrival order —
+//! results are staged into per-device slots and folded in device-id
+//! order, and every `RoundCtx` field round-trips losslessly through
+//! the start-round broadcast.
+
+use crate::transport::wire::WireError;
+
+pub mod client;
+pub mod frame;
+pub mod messages;
+pub mod service;
+pub mod transport;
+
+pub use client::{ClientReport, DeviceClient};
+pub use frame::Frame;
+pub use messages::Message;
+pub use service::CoordinatorService;
+pub use transport::{Connection, LoopbackHub, TcpConnection, TcpTransport, Transport};
+
+/// Protocol revision carried in every rendezvous; bumped on any frame
+/// or message layout change.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Typed failure for every protocol layer — framing, message codec,
+/// transport i/o, and state machine — composing with the wire codec's
+/// [`WireError`] so protocol and payload failures propagate through
+/// one `?` chain without stringly matching.
+#[derive(Debug, thiserror::Error)]
+pub enum ProtocolError {
+    /// Underlying socket/stream failure.
+    #[error("i/o: {0}")]
+    Io(#[from] std::io::Error),
+    /// No complete frame arrived within the allotted window.
+    #[error("timed out waiting for a frame")]
+    Timeout,
+    /// The peer closed the connection.
+    #[error("connection closed by peer")]
+    Closed,
+    /// A frame header announced a body larger than the hard cap.
+    #[error("frame of {len} bytes exceeds the {max}-byte limit")]
+    FrameTooLarge {
+        /// Announced body length.
+        len: u32,
+        /// The [`frame::MAX_FRAME_BYTES`] cap.
+        max: u32,
+    },
+    /// A message body ended before a fixed-size field.
+    #[error("message truncated: need {need} bytes, have {have}")]
+    Truncated {
+        /// Bytes the decoder needed.
+        need: usize,
+        /// Bytes remaining in the body.
+        have: usize,
+    },
+    /// A frame carried a kind byte no message decodes from.
+    #[error("unknown message kind {0:#04x}")]
+    UnknownKind(u8),
+    /// A structurally invalid message body (bad flag, trailing bytes,
+    /// inconsistent lengths).
+    #[error("malformed message: {0}")]
+    Malformed(&'static str),
+    /// An embedded wire-v2 payload failed to decode.
+    #[error(transparent)]
+    Wire(#[from] WireError),
+    /// A well-formed message arrived in a state that forbids it.
+    #[error("protocol violation: {0}")]
+    Violation(&'static str),
+}
+
+/// The coordinator's externally visible state, echoed to clients in
+/// heartbeat replies and end-round notices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoordinatorState {
+    /// Waiting for clients to rendezvous and claim devices.
+    Standby,
+    /// Executing the given communication round.
+    Round(u32),
+    /// The configured horizon completed; clients may disconnect.
+    Finished,
+}
+
+/// Configuration for the coordinator service and its clients — the
+/// TOML `[serve]` block (`serve.addr`, `serve.clients`, ...) and the
+/// `--serve` / `--connect` CLI flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// TCP listen address for `--serve` (`serve.addr`).
+    pub addr: String,
+    /// Number of clients the coordinator waits for in standby before
+    /// starting round 0; devices are split into that many contiguous
+    /// ranges (`serve.clients`).
+    pub clients: usize,
+    /// Client heartbeat interval in milliseconds (`serve.heartbeat_ms`).
+    pub heartbeat_ms: u64,
+    /// Server-side liveness window: a client silent this long is
+    /// declared dead and its unreported devices become stragglers
+    /// (`serve.heartbeat_timeout_ms`).
+    pub heartbeat_timeout_ms: u64,
+    /// Per-round collection deadline (`serve.round_timeout_ms`).
+    pub round_timeout_ms: u64,
+    /// Standby window for all clients to rendezvous
+    /// (`serve.accept_timeout_ms`).
+    pub accept_timeout_ms: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            clients: 1,
+            heartbeat_ms: 200,
+            heartbeat_timeout_ms: 2_000,
+            round_timeout_ms: 30_000,
+            accept_timeout_ms: 10_000,
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! The coordinator side of the protocol: an owned
+//! [`crate::coordinator::Session`] driven over a [`Transport`].
+//!
+//! [`CoordinatorService::run`] walks the coordinator state machine:
+//! standby (accept + rendezvous until every device range is claimed),
+//! then one `Round(k)` per configured round — broadcast
+//! [`Message::StartRound`], collect [`Message::RoundResult`]s into the
+//! engine's staging slots, close the round — then `Finished`.
+//!
+//! Liveness is heartbeat-based: each client gets a reader thread whose
+//! receive timeout is the heartbeat window, so a client silent that
+//! long (crashed, hung, or partitioned) is declared dead and its
+//! unreported devices are folded as skips and counted as stragglers —
+//! the protocol analogue of the channel simulation's deadline
+//! stragglers, steered by the same
+//! [`crate::transport::scenario::StragglerPolicy`]: `AdmitLate` grants
+//! one extra heartbeat window past the round deadline, `Drop` does not.
+//!
+//! Determinism: results are staged per device id and folded in device
+//! order by the engine, so message arrival order, client count, and
+//! transport choice cannot perturb the trace (see the module docs of
+//! [`crate::protocol`]).
+
+use super::messages::{Message, RoundResult, StartRound, Welcome};
+use super::transport::{Connection, Transport};
+use super::{CoordinatorState, ProtocolError, ServeSpec, PROTOCOL_VERSION};
+use crate::coordinator::engine::RoundEngine;
+use crate::coordinator::{Session, SessionParts};
+use crate::metrics::RunTrace;
+use crate::transport::scenario::StragglerPolicy;
+use std::collections::BTreeSet;
+use std::ops::Range;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One connected client: the writer half of its connection plus the
+/// contiguous device range it computes. (The reader half lives in a
+/// per-client thread feeding the service's event queue.)
+struct ClientSlot {
+    conn: Box<dyn Connection>,
+    devices: Range<usize>,
+    alive: bool,
+}
+
+/// What the per-client reader threads feed the service loop.
+enum Event {
+    /// A message from client `client_id`.
+    Msg(usize, Message),
+    /// The client's reader saw an error or heartbeat-window silence.
+    Dead(usize),
+}
+
+/// Mark a client dead and move its still-pending devices to the
+/// round's missing count.
+fn retire(c: &mut ClientSlot, pending: &mut BTreeSet<usize>, missing: &mut usize) {
+    if !c.alive {
+        return;
+    }
+    c.alive = false;
+    for d in c.devices.clone() {
+        if pending.remove(&d) {
+            *missing += 1;
+        }
+    }
+}
+
+/// Complete one rendezvous on a fresh connection: tolerate heartbeats,
+/// require a version-matched [`Message::Rendezvous`], answer with
+/// `welcome`. Returns `false` (drop the connection, do not consume the
+/// device range) on anything else.
+fn handshake(
+    conn: &mut dyn Connection,
+    welcome: &Welcome,
+    deadline: Instant,
+    step: Duration,
+) -> bool {
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return false;
+        }
+        match conn.recv(remaining.min(step)) {
+            Ok(Message::Heartbeat) => {
+                if conn.send(&Message::State(CoordinatorState::Standby)).is_err() {
+                    return false;
+                }
+            }
+            Ok(Message::Rendezvous { version, .. }) => {
+                return version == PROTOCOL_VERSION
+                    && conn.send(&Message::Welcome(welcome.clone())).is_ok();
+            }
+            Ok(_) => return false,
+            Err(ProtocolError::Timeout) => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// A [`Session`] served over a transport: the remote counterpart of
+/// [`Session::run`], producing the identical [`RunTrace`] for the same
+/// seed and configuration.
+pub struct CoordinatorService {
+    session: Session,
+    serve: ServeSpec,
+}
+
+impl CoordinatorService {
+    /// Wrap a built session in the service front-end.
+    pub fn new(session: Session, serve: ServeSpec) -> Self {
+        Self { session, serve }
+    }
+
+    /// The serve configuration this service runs under.
+    pub fn serve_spec(&self) -> &ServeSpec {
+        &self.serve
+    }
+
+    /// Read-only access to the underlying session (model, counters).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Drive the full run over `transport`. Blocks until the horizon
+    /// completes (or standby times out) and returns the trace.
+    ///
+    /// Client failures after rendezvous never abort the run: a dead
+    /// client's devices simply stop reporting and are folded as skips,
+    /// counted as stragglers. Only transport-level failures during
+    /// standby (nobody claims a device range in time) are errors.
+    pub fn run(&mut self, transport: &mut dyn Transport) -> Result<RunTrace, ProtocolError> {
+        let meta = self.session.meta();
+        let rounds = meta.rounds;
+        let m = self.session.parts().engine.num_devices();
+        let seed = self.session.config().seed;
+        let n_clients = self.serve.clients.max(1);
+        let hb_timeout = Duration::from_millis(self.serve.heartbeat_timeout_ms.max(1));
+        let round_timeout = Duration::from_millis(self.serve.round_timeout_ms.max(1));
+        let accept_timeout = Duration::from_millis(self.serve.accept_timeout_ms.max(1));
+
+        // ---- standby: accept until every device range is claimed ----
+        let (tx, events) = mpsc::channel::<Event>();
+        let mut clients: Vec<ClientSlot> = Vec::with_capacity(n_clients);
+        let mut readers = Vec::with_capacity(n_clients);
+        let deadline = Instant::now() + accept_timeout;
+        while clients.len() < n_clients {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ProtocolError::Timeout);
+            }
+            let mut conn = transport.accept(remaining)?;
+            let id = clients.len();
+            let devices = id * m / n_clients..(id + 1) * m / n_clients;
+            let welcome = Welcome {
+                client_id: id as u32,
+                device_lo: devices.start as u32,
+                device_count: devices.len() as u32,
+                num_devices: m as u32,
+                rounds: rounds as u32,
+                seed,
+            };
+            if !handshake(conn.as_mut(), &welcome, deadline, hb_timeout) {
+                continue;
+            }
+            let mut rd = conn.try_clone()?;
+            let tx = tx.clone();
+            readers.push(std::thread::spawn(move || loop {
+                match rd.recv(hb_timeout) {
+                    Ok(msg) => {
+                        if tx.send(Event::Msg(id, msg)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        let _ = tx.send(Event::Dead(id));
+                        return;
+                    }
+                }
+            }));
+            clients.push(ClientSlot {
+                conn,
+                devices,
+                alive: true,
+            });
+        }
+
+        // Device -> client index (total: the ranges partition 0..m).
+        let mut owner = vec![0usize; m];
+        for (ci, c) in clients.iter().enumerate() {
+            for d in c.devices.clone() {
+                owner[d] = ci;
+            }
+        }
+
+        let SessionParts {
+            engine,
+            problem,
+            algo,
+            strategy,
+            observers,
+        } = self.session.parts();
+        let grace = match engine.network().policy() {
+            StragglerPolicy::AdmitLate => hb_timeout,
+            StragglerPolicy::Drop => Duration::ZERO,
+        };
+
+        for obs in observers.iter_mut() {
+            obs.on_run_start(&meta);
+        }
+        let mut trace = RunTrace {
+            algorithm: meta.algorithm.clone(),
+            dataset: meta.dataset.clone(),
+            split: meta.split.clone(),
+            rounds: Vec::with_capacity(rounds),
+        };
+
+        for k in 0..rounds {
+            // ---- Round(k): broadcast context + model ----------------
+            let ctx = engine.begin_round(k, &mut *strategy);
+            engine.stage_reset(&ctx);
+            let start = Message::StartRound(Box::new(StartRound {
+                ctx: ctx.clone(),
+                theta: engine.theta().to_vec(),
+            }));
+            let state_now = CoordinatorState::Round(k as u32);
+            let mut pending = BTreeSet::new();
+            let mut missing = 0usize;
+            for c in clients.iter_mut() {
+                if c.alive && c.conn.send(&start).is_err() {
+                    c.alive = false;
+                }
+            }
+            for d in 0..m {
+                if !ctx.is_selected(d) {
+                    continue;
+                }
+                if clients[owner[d]].alive {
+                    pending.insert(d);
+                } else {
+                    missing += 1;
+                }
+            }
+
+            // ---- collect results until done or deadline -------------
+            let deadline = Instant::now() + round_timeout + grace;
+            while !pending.is_empty() {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                let Ok(ev) = events.recv_timeout(remaining) else {
+                    break;
+                };
+                match ev {
+                    Event::Dead(ci) => retire(&mut clients[ci], &mut pending, &mut missing),
+                    Event::Msg(ci, Message::Heartbeat) => {
+                        let c = &mut clients[ci];
+                        if c.alive && c.conn.send(&Message::State(state_now)).is_err() {
+                            retire(c, &mut pending, &mut missing);
+                        }
+                    }
+                    Event::Msg(ci, Message::RoundResult(r)) => {
+                        stage(engine, &clients[ci].devices, k, &mut pending, r);
+                    }
+                    // Anything else out of order (a late rendezvous, a
+                    // stale result) is tolerated and ignored.
+                    Event::Msg(_, _) => {}
+                }
+            }
+            missing += pending.len();
+
+            // ---- close the round ------------------------------------
+            let mut rec = engine.finish_round(problem, algo, ctx);
+            rec.stragglers += missing;
+            engine.note_stragglers(missing as u64);
+            for obs in observers.iter_mut() {
+                obs.on_round(&rec);
+            }
+            let next = if k + 1 == rounds {
+                CoordinatorState::Finished
+            } else {
+                CoordinatorState::Round(k as u32 + 1)
+            };
+            let end = Message::EndRound {
+                round: k as u32,
+                train_loss: rec.train_loss,
+                state: next,
+            };
+            for c in clients.iter_mut() {
+                if c.alive && c.conn.send(&end).is_err() {
+                    c.alive = false;
+                }
+            }
+            trace.rounds.push(rec);
+        }
+
+        for obs in observers.iter_mut() {
+            obs.on_run_end();
+        }
+        // Closing the writer halves wakes every client; each reader
+        // thread then exits within one heartbeat window at most.
+        drop(clients);
+        drop(tx);
+        for h in readers {
+            let _ = h.join();
+        }
+        Ok(trace)
+    }
+}
+
+/// Stage one remote result if it belongs to this round and to the
+/// sending client's device range (a misbehaving client cannot write
+/// outside its assignment or replay an old round).
+fn stage(
+    engine: &mut RoundEngine,
+    devices: &Range<usize>,
+    round: usize,
+    pending: &mut BTreeSet<usize>,
+    r: RoundResult,
+) {
+    let d = r.device as usize;
+    if r.round as usize != round || !devices.contains(&d) || !pending.remove(&d) {
+        return;
+    }
+    engine.stage_remote(d, r.loss, r.level, r.payload.as_deref(), (r.uploads, r.skips));
+}

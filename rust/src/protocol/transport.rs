@@ -1,0 +1,482 @@
+//! Protocol transports: one [`Transport`] trait, two carriers.
+//!
+//! * [`TcpTransport`] / [`TcpConnection`] — std-only TCP with
+//!   per-message read/write timeouts. The receive path assembles
+//!   frames incrementally ([`super::frame::FrameReader`]), so a read
+//!   timeout mid-frame never desynchronizes the stream.
+//! * [`LoopbackHub`] / [`LoopbackConnection`] — an in-process duplex
+//!   pair over `Mutex<VecDeque>` + `Condvar` queues, so every protocol
+//!   test (and the CI service example) runs deterministically with no
+//!   sockets at all. The loopback carries the same [`Frame`]s the TCP
+//!   byte stream does — tests can inject raw malformed frames with
+//!   [`LoopbackConnection::send_raw`].
+//!
+//! Connections are split across threads with [`Connection::try_clone`]:
+//! the coordinator gives each client a reader thread (blocking `recv`)
+//! while the service loop keeps the writer half. One clone must own
+//! each direction — the trait does not arbitrate concurrent readers.
+
+use super::frame::{self, Frame, FrameReader};
+use super::messages::Message;
+use super::ProtocolError;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One end of a protocol conversation: framed, typed, timeout-bounded.
+pub trait Connection: Send {
+    /// Send one message (blocking, bounded by the transport's write
+    /// timeout).
+    fn send(&mut self, msg: &Message) -> Result<(), ProtocolError>;
+
+    /// Receive the next message, waiting at most `timeout`. Returns
+    /// [`ProtocolError::Timeout`] if none arrives in the window — the
+    /// connection stays usable and a partially received frame resumes
+    /// on the next call.
+    fn recv(&mut self, timeout: Duration) -> Result<Message, ProtocolError>;
+
+    /// A second handle on the same connection, for splitting the read
+    /// and write directions across threads.
+    fn try_clone(&self) -> Result<Box<dyn Connection>, ProtocolError>;
+}
+
+/// Server side of a transport: yields one [`Connection`] per client.
+pub trait Transport: Send {
+    /// Accept the next incoming connection, waiting at most `timeout`.
+    fn accept(&mut self, timeout: Duration) -> Result<Box<dyn Connection>, ProtocolError>;
+}
+
+// ---------------------------------------------------------------- TCP
+
+/// Map an i/o failure from a timed read/write: `WouldBlock`/`TimedOut`
+/// become the typed [`ProtocolError::Timeout`], everything else stays
+/// an i/o error.
+fn io_err(e: std::io::Error) -> ProtocolError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ProtocolError::Timeout,
+        _ => ProtocolError::Io(e),
+    }
+}
+
+/// TCP listener implementing [`Transport`].
+pub struct TcpTransport {
+    listener: TcpListener,
+}
+
+impl TcpTransport {
+    /// Bind the listener (non-blocking accept; [`Transport::accept`]
+    /// polls it against its timeout).
+    pub fn bind(addr: &str) -> Result<Self, ProtocolError> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Self { listener })
+    }
+
+    /// The bound address (port 0 binds resolve to a real port).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr, ProtocolError> {
+        Ok(self.listener.local_addr()?)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn accept(&mut self, timeout: Duration) -> Result<Box<dyn Connection>, ProtocolError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => return Ok(Box::new(TcpConnection::from_stream(stream)?)),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(ProtocolError::Timeout);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(ProtocolError::Io(e)),
+            }
+        }
+    }
+}
+
+/// A framed TCP connection with per-message timeouts.
+pub struct TcpConnection {
+    stream: TcpStream,
+    reader: FrameReader,
+    write_buf: Vec<u8>,
+    body_buf: Vec<u8>,
+    write_timeout: Duration,
+}
+
+impl TcpConnection {
+    /// Default bound on a single blocking send.
+    const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+    /// Connect to a coordinator at `addr`, waiting at most `timeout`
+    /// for the TCP handshake.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Self, ProtocolError> {
+        use std::net::ToSocketAddrs;
+        let sock = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or(ProtocolError::Malformed("address resolves to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)?;
+        Self::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Self, ProtocolError> {
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(Self::WRITE_TIMEOUT))?;
+        Ok(Self {
+            stream,
+            reader: FrameReader::new(),
+            write_buf: Vec::new(),
+            body_buf: Vec::new(),
+            write_timeout: Self::WRITE_TIMEOUT,
+        })
+    }
+}
+
+impl Connection for TcpConnection {
+    fn send(&mut self, msg: &Message) -> Result<(), ProtocolError> {
+        msg.encode_body(&mut self.body_buf);
+        self.write_buf.clear();
+        frame::encode_frame(msg.kind(), &self.body_buf, &mut self.write_buf);
+        self.stream.set_write_timeout(Some(self.write_timeout))?;
+        self.stream.write_all(&self.write_buf).map_err(io_err)?;
+        self.stream.flush().map_err(io_err)
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Message, ProtocolError> {
+        let deadline = Instant::now() + timeout;
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            // Read at most what the current frame still needs, so a
+            // chunk never crosses a frame boundary and no bytes are
+            // buffered outside the assembler.
+            let want = self.reader.wanted().min(chunk.len());
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            // A zero read timeout means "no timeout" to the OS; clamp
+            // so an expired deadline still gets one short poll.
+            self.stream
+                .set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+            match self.stream.read(&mut chunk[..want]) {
+                Ok(0) => return Err(ProtocolError::Closed),
+                Ok(n) => {
+                    if let Some(f) = self.reader.consume(&chunk[..n])? {
+                        return Message::decode(f.kind, &f.body);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    let e = io_err(e);
+                    if !matches!(e, ProtocolError::Timeout) || Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    fn try_clone(&self) -> Result<Box<dyn Connection>, ProtocolError> {
+        Ok(Box::new(Self {
+            stream: self.stream.try_clone()?,
+            reader: FrameReader::new(),
+            write_buf: Vec::new(),
+            body_buf: Vec::new(),
+            write_timeout: self.write_timeout,
+        }))
+    }
+}
+
+// ----------------------------------------------------------- loopback
+
+/// One direction of a loopback pair: a closable frame queue.
+struct FrameQueue {
+    state: Mutex<(VecDeque<Frame>, bool)>,
+    cv: Condvar,
+}
+
+impl FrameQueue {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn push(&self, frame: Frame) -> Result<(), ProtocolError> {
+        let mut st = self.state.lock().expect("loopback queue poisoned");
+        if st.1 {
+            return Err(ProtocolError::Closed);
+        }
+        st.0.push_back(frame);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn pop(&self, timeout: Duration) -> Result<Frame, ProtocolError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("loopback queue poisoned");
+        loop {
+            if let Some(f) = st.0.pop_front() {
+                return Ok(f);
+            }
+            if st.1 {
+                return Err(ProtocolError::Closed);
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ProtocolError::Timeout);
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, remaining)
+                .expect("loopback queue poisoned");
+            st = guard;
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().expect("loopback queue poisoned");
+        st.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Closes both queue directions when the last clone of *one* end
+/// drops, so a peer blocked in `recv` drains what was already queued
+/// and then wakes with [`ProtocolError::Closed`] instead of waiting
+/// out its timeout. Each end of a pair owns its own token.
+struct CloseToken {
+    a: Arc<FrameQueue>,
+    b: Arc<FrameQueue>,
+}
+
+impl Drop for CloseToken {
+    fn drop(&mut self) {
+        self.a.close();
+        self.b.close();
+    }
+}
+
+/// In-process duplex connection end (see [`LoopbackHub`]).
+pub struct LoopbackConnection {
+    tx: Arc<FrameQueue>,
+    rx: Arc<FrameQueue>,
+    body_buf: Vec<u8>,
+    _token: Arc<CloseToken>,
+}
+
+impl LoopbackConnection {
+    /// A connected pair of ends (no hub involved — direct tests).
+    pub fn pair() -> (Self, Self) {
+        let ab = FrameQueue::new();
+        let ba = FrameQueue::new();
+        let left = Self {
+            tx: ab.clone(),
+            rx: ba.clone(),
+            body_buf: Vec::new(),
+            _token: Arc::new(CloseToken {
+                a: ab.clone(),
+                b: ba.clone(),
+            }),
+        };
+        let right = Self {
+            tx: ba.clone(),
+            rx: ab.clone(),
+            body_buf: Vec::new(),
+            _token: Arc::new(CloseToken { a: ab, b: ba }),
+        };
+        (left, right)
+    }
+
+    /// Inject a raw frame, bypassing the message encoder — the
+    /// conformance suite uses this to feed the coordinator malformed
+    /// and unknown-kind frames.
+    pub fn send_raw(&self, kind: u8, body: Vec<u8>) -> Result<(), ProtocolError> {
+        self.tx.push(Frame { kind, body })
+    }
+}
+
+impl Connection for LoopbackConnection {
+    fn send(&mut self, msg: &Message) -> Result<(), ProtocolError> {
+        msg.encode_body(&mut self.body_buf);
+        self.tx.push(Frame {
+            kind: msg.kind(),
+            body: self.body_buf.clone(),
+        })
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Message, ProtocolError> {
+        let f = self.rx.pop(timeout)?;
+        Message::decode(f.kind, &f.body)
+    }
+
+    fn try_clone(&self) -> Result<Box<dyn Connection>, ProtocolError> {
+        Ok(Box::new(Self {
+            tx: self.tx.clone(),
+            rx: self.rx.clone(),
+            body_buf: Vec::new(),
+            _token: self._token.clone(),
+        }))
+    }
+}
+
+/// In-process transport: clients dial the hub, the coordinator
+/// accepts — same protocol flow as TCP, zero sockets, fully
+/// deterministic for CI.
+pub struct LoopbackHub {
+    pending: Arc<(Mutex<VecDeque<LoopbackConnection>>, Condvar)>,
+}
+
+impl LoopbackHub {
+    /// An empty hub.
+    pub fn new() -> Self {
+        Self {
+            pending: Arc::new((Mutex::new(VecDeque::new()), Condvar::new())),
+        }
+    }
+
+    /// A dialer handle for client threads.
+    pub fn dialer(&self) -> LoopbackDialer {
+        LoopbackDialer {
+            pending: self.pending.clone(),
+        }
+    }
+}
+
+impl Default for LoopbackHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for LoopbackHub {
+    fn accept(&mut self, timeout: Duration) -> Result<Box<dyn Connection>, ProtocolError> {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = &*self.pending;
+        let mut q = lock.lock().expect("loopback hub poisoned");
+        loop {
+            if let Some(conn) = q.pop_front() {
+                return Ok(Box::new(conn));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ProtocolError::Timeout);
+            }
+            let (guard, _) = cv
+                .wait_timeout(q, remaining)
+                .expect("loopback hub poisoned");
+            q = guard;
+        }
+    }
+}
+
+/// Client-side handle on a [`LoopbackHub`].
+#[derive(Clone)]
+pub struct LoopbackDialer {
+    pending: Arc<(Mutex<VecDeque<LoopbackConnection>>, Condvar)>,
+}
+
+impl LoopbackDialer {
+    /// Open a new connection to the hub's coordinator.
+    pub fn connect(&self) -> LoopbackConnection {
+        let (client, server) = LoopbackConnection::pair();
+        let (lock, cv) = &*self.pending;
+        lock.lock().expect("loopback hub poisoned").push_back(server);
+        cv.notify_all();
+        client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_round_trip_and_close() {
+        let (mut a, mut b) = LoopbackConnection::pair();
+        a.send(&Message::Heartbeat).unwrap();
+        assert!(matches!(
+            b.recv(Duration::from_millis(100)).unwrap(),
+            Message::Heartbeat
+        ));
+        assert!(matches!(
+            b.recv(Duration::from_millis(10)),
+            Err(ProtocolError::Timeout)
+        ));
+        drop(a);
+        assert!(matches!(
+            b.recv(Duration::from_millis(10)),
+            Err(ProtocolError::Closed)
+        ));
+    }
+
+    #[test]
+    fn loopback_raw_injection_decodes_as_error() {
+        let (a, mut b) = LoopbackConnection::pair();
+        a.send_raw(0xEE, vec![1, 2, 3]).unwrap();
+        assert!(matches!(
+            b.recv(Duration::from_millis(100)),
+            Err(ProtocolError::UnknownKind(0xEE))
+        ));
+    }
+
+    #[test]
+    fn hub_accepts_dialed_connections() {
+        let mut hub = LoopbackHub::new();
+        let dialer = hub.dialer();
+        assert!(matches!(
+            hub.accept(Duration::from_millis(10)),
+            Err(ProtocolError::Timeout)
+        ));
+        let mut client = dialer.connect();
+        let mut server = hub.accept(Duration::from_millis(100)).unwrap();
+        client
+            .send(&Message::Rendezvous { version: 1, want: 0 })
+            .unwrap();
+        assert!(matches!(
+            server.recv(Duration::from_millis(100)).unwrap(),
+            Message::Rendezvous { version: 1, want: 0 }
+        ));
+        server.send(&Message::Heartbeat).unwrap();
+        assert!(matches!(
+            client.recv(Duration::from_millis(100)).unwrap(),
+            Message::Heartbeat
+        ));
+    }
+
+    #[test]
+    fn tcp_round_trip_with_timeouts() {
+        let mut transport = TcpTransport::bind("127.0.0.1:0").expect("bind");
+        let addr = transport.local_addr().expect("addr").to_string();
+        let handle = std::thread::spawn(move || {
+            let mut client =
+                TcpConnection::connect(&addr, Duration::from_secs(5)).expect("connect");
+            client
+                .send(&Message::Rendezvous { version: 1, want: 2 })
+                .unwrap();
+            match client.recv(Duration::from_secs(5)).unwrap() {
+                Message::State(s) => s,
+                other => panic!("wrong reply: {other:?}"),
+            }
+        });
+        let mut server = transport.accept(Duration::from_secs(5)).expect("accept");
+        assert!(matches!(
+            server.recv(Duration::from_secs(5)).unwrap(),
+            Message::Rendezvous { version: 1, want: 2 }
+        ));
+        // No second message in flight: recv times out cleanly...
+        assert!(matches!(
+            server.recv(Duration::from_millis(20)),
+            Err(ProtocolError::Timeout)
+        ));
+        // ...and the stream still carries the next frame intact.
+        server
+            .send(&Message::State(super::super::CoordinatorState::Standby))
+            .unwrap();
+        let got = handle.join().expect("client thread");
+        assert_eq!(got, super::super::CoordinatorState::Standby);
+    }
+}

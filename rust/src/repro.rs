@@ -5,29 +5,36 @@
 use crate::algorithms::{self, Algorithm};
 use crate::config::ExperimentSpec;
 use crate::coordinator::{Session, SessionBuilder};
-use crate::hetero::half_half_masks;
+use crate::hetero::{half_half_masks, CapacityMask};
 use crate::metrics::{bits_display, RunTrace};
 use crate::problems::GradientSource;
 use std::path::Path;
 use std::sync::Arc;
 
+/// The per-device capacity masks an experiment cell runs with: the
+/// Table III half-half split when `hetero`, full capacity everywhere
+/// otherwise. Shared by [`session_for`] and the protocol's
+/// [`crate::protocol::DeviceClient`], so both sides of a served run
+/// construct identical device states.
+pub fn masks_for(spec: &ExperimentSpec, problem: &dyn GradientSource) -> Vec<Arc<CapacityMask>> {
+    if spec.hetero {
+        half_half_masks(&problem.layout(), problem.num_devices(), 0.5)
+    } else {
+        vec![Arc::new(CapacityMask::full(problem.dim())); problem.num_devices()]
+    }
+}
+
 /// A configured [`SessionBuilder`] for one experiment cell — attach
 /// observers or override the selection strategy before `build()`.
 pub fn session_for(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> SessionBuilder {
     let problem: Arc<dyn GradientSource> = spec.build_problem().into();
-    let mut builder = Session::builder(problem.clone(), algo)
+    let masks = masks_for(spec, problem.as_ref());
+    Session::builder(problem, algo)
         .config(spec.run_config())
         .selection_spec(spec.selection.clone())
         .dataset(spec.dataset.name())
-        .split(spec.split.name(spec.dataset));
-    if spec.hetero {
-        builder = builder.masks(half_half_masks(
-            &problem.layout(),
-            problem.num_devices(),
-            0.5,
-        ));
-    }
-    builder
+        .split(spec.split.name(spec.dataset))
+        .masks(masks)
 }
 
 /// Run one experiment cell (dataset × split × algorithm).

@@ -1,0 +1,300 @@
+//! Protocol conformance suite (ISSUE 6 satellite): the coordinator
+//! survives malformed, truncated, and out-of-order traffic without
+//! panicking; heartbeat expiry maps silent clients onto stragglers;
+//! and a seeded run served over loopback or TCP reproduces the
+//! in-process `RunTrace` bit for bit.
+
+use aquila::algorithms::aquila::Aquila;
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::Session;
+use aquila::metrics::RunTrace;
+use aquila::problems::GradientSource;
+use aquila::protocol::frame::{decode_frame, encode_frame, FrameReader};
+use aquila::protocol::messages::{kind, RoundResult};
+use aquila::protocol::transport::LoopbackDialer;
+use aquila::protocol::{
+    ClientReport, Connection, CoordinatorService, CoordinatorState, DeviceClient, Frame,
+    LoopbackHub, Message, ProtocolError, ServeSpec, TcpConnection, TcpTransport,
+    PROTOCOL_VERSION,
+};
+use aquila::repro;
+use aquila::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn tiny(rounds: usize) -> ExperimentSpec {
+    let base = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+    let mut s = base.scaled(0.02, rounds);
+    s.devices = 4;
+    s
+}
+
+fn serve(clients: usize) -> ServeSpec {
+    ServeSpec {
+        clients,
+        heartbeat_ms: 25,
+        heartbeat_timeout_ms: 2_000,
+        round_timeout_ms: 10_000,
+        accept_timeout_ms: 10_000,
+        ..ServeSpec::default()
+    }
+}
+
+fn session_of(spec: &ExperimentSpec) -> Session {
+    repro::session_for(spec, Arc::new(Aquila::new(spec.beta))).build()
+}
+
+fn inprocess(spec: &ExperimentSpec) -> (RunTrace, Vec<u32>) {
+    let mut s = session_of(spec);
+    let trace = s.run();
+    let theta = s.theta().iter().map(|x| x.to_bits()).collect();
+    (trace, theta)
+}
+
+/// A well-behaved device client serving its assigned range over the
+/// loopback hub.
+fn loop_client(spec: ExperimentSpec, dialer: LoopbackDialer) -> JoinHandle<ClientReport> {
+    std::thread::spawn(move || {
+        let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+        let masks = repro::masks_for(&spec, problem.as_ref());
+        let algo = Arc::new(Aquila::new(spec.beta));
+        let client = DeviceClient::new(problem, algo, spec.run_config(), masks).heartbeat_ms(25);
+        let mut conn = dialer.connect();
+        client.run(&mut conn).expect("loopback client")
+    })
+}
+
+/// The same client over a real TCP connection.
+fn tcp_client(spec: ExperimentSpec, addr: String) -> JoinHandle<ClientReport> {
+    std::thread::spawn(move || {
+        let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+        let masks = repro::masks_for(&spec, problem.as_ref());
+        let algo = Arc::new(Aquila::new(spec.beta));
+        let client = DeviceClient::new(problem, algo, spec.run_config(), masks).heartbeat_ms(25);
+        let mut conn = TcpConnection::connect(&addr, Duration::from_secs(10)).expect("connect");
+        client.run(&mut conn).expect("tcp client")
+    })
+}
+
+/// The codec layers are total: random bytes through `decode_frame` and
+/// `Message::decode` yield typed errors, never panics, and a valid
+/// multi-frame stream reassembles correctly across every chunk split.
+#[test]
+fn prop_codec_total_on_garbage() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF00D);
+    for _ in 0..200 {
+        let len = (rng.next_u64() % 64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = decode_frame(&bytes);
+        let _ = Message::decode(rng.next_u64() as u8, &bytes);
+    }
+
+    fn feed(reader: &mut FrameReader, mut rest: &[u8], frames: &mut Vec<Frame>) {
+        while !rest.is_empty() {
+            let take = reader.wanted().min(rest.len());
+            if let Some(f) = reader.consume(&rest[..take]).expect("valid stream") {
+                frames.push(f);
+            }
+            rest = &rest[take..];
+        }
+    }
+    let mut stream = Vec::new();
+    let mut body = Vec::new();
+    Message::Heartbeat.encode_body(&mut body);
+    encode_frame(kind::HEARTBEAT, &body, &mut stream);
+    let rdv = Message::Rendezvous { version: PROTOCOL_VERSION, want: 3 };
+    rdv.encode_body(&mut body);
+    encode_frame(kind::RENDEZVOUS, &body, &mut stream);
+    for split in 1..stream.len() {
+        let mut reader = FrameReader::new();
+        let mut frames = Vec::new();
+        feed(&mut reader, &stream[..split], &mut frames);
+        feed(&mut reader, &stream[split..], &mut frames);
+        assert_eq!(frames.len(), 2, "split at {split}");
+        assert_eq!(frames[0].kind, kind::HEARTBEAT);
+        assert_eq!(frames[1].kind, kind::RENDEZVOUS);
+    }
+}
+
+/// Garbage connections during standby — unknown kinds, truncated
+/// bodies, a wrong-version rendezvous — are rejected without consuming
+/// a device range, and the eventual run is bit-identical to the
+/// in-process trace.
+#[test]
+fn prop_standby_garbage_does_not_perturb_run() {
+    let spec = tiny(6);
+    let (want, _) = inprocess(&spec);
+
+    let mut hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let garbage = dialer.connect();
+    garbage.send_raw(0xEE, vec![0xAA; 9]).expect("inject");
+    garbage.send_raw(kind::ROUND_RESULT, vec![1, 2, 3]).expect("inject");
+    let mut badver = dialer.connect();
+    badver.send(&Message::Rendezvous { version: 0, want: 0 }).expect("inject");
+    let clients: Vec<_> = (0..2).map(|_| loop_client(spec.clone(), dialer.clone())).collect();
+    let mut service = CoordinatorService::new(session_of(&spec), serve(2));
+    let got = service.run(&mut hub).expect("service run");
+    for h in clients {
+        h.join().expect("client");
+    }
+    drop(garbage);
+    drop(badver);
+    assert_eq!(
+        format!("{:?}", want.rounds),
+        format!("{:?}", got.rounds),
+        "standby garbage perturbed the trace"
+    );
+}
+
+/// An admitted hostile client that reports stale rounds, devices it
+/// does not own, and out-of-range ids — but never its real assignment —
+/// cannot corrupt the other clients' results. Its own devices are
+/// simply stragglers and the run completes.
+#[test]
+fn prop_hostile_results_cannot_corrupt_other_clients() {
+    let spec = tiny(3);
+    let mut hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let evil = std::thread::spawn({
+        let dialer = dialer.clone();
+        move || {
+            let mut conn = dialer.connect();
+            let rdv = Message::Rendezvous { version: PROTOCOL_VERSION, want: 0 };
+            conn.send(&rdv).expect("rendezvous");
+            let w = match conn.recv(Duration::from_secs(10)).expect("welcome") {
+                Message::Welcome(w) => w,
+                other => panic!("expected welcome, got {other:?}"),
+            };
+            let poison = |round: u32, device: u32| {
+                Message::RoundResult(RoundResult {
+                    round,
+                    device,
+                    loss: 1.0e9,
+                    level: Some(32),
+                    uploads: 99,
+                    skips: 99,
+                    payload: None,
+                })
+            };
+            loop {
+                match conn.recv(Duration::from_millis(20)) {
+                    Ok(Message::StartRound(sr)) => {
+                        let k = sr.ctx.round as u32;
+                        // Stale round, foreign device, out-of-range id,
+                        // and an out-of-order rendezvous — all ignored.
+                        conn.send(&poison(k + 1_000, w.device_lo)).expect("send");
+                        conn.send(&poison(k, w.device_lo + w.device_count)).expect("send");
+                        conn.send(&poison(k, 10_000)).expect("send");
+                        conn.send(&rdv).expect("send");
+                    }
+                    Ok(Message::EndRound { state: CoordinatorState::Finished, .. }) => break,
+                    Ok(_) => {}
+                    Err(ProtocolError::Timeout) => {
+                        if conn.send(&Message::Heartbeat).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    });
+    let honest = loop_client(spec.clone(), dialer);
+    let mut service = CoordinatorService::new(
+        session_of(&spec),
+        ServeSpec { round_timeout_ms: 300, ..serve(2) },
+    );
+    let trace = service.run(&mut hub).expect("service run");
+    evil.join().expect("evil client");
+    let rep = honest.join().expect("honest client");
+
+    assert_eq!(trace.rounds.len(), 3);
+    assert_eq!(rep.rounds_served, 3);
+    for r in &trace.rounds {
+        assert!(r.train_loss.is_finite(), "round {}: poisoned loss", r.round);
+        assert!(r.train_loss < 1.0e6, "round {}: poisoned loss folded in", r.round);
+        // The hostile client's two devices miss every round's deadline.
+        assert_eq!(r.stragglers, 2, "round {}", r.round);
+    }
+}
+
+/// A client that goes silent (no results, no heartbeats, socket held
+/// open) is detected through heartbeat expiry: its devices become
+/// stragglers, the run completes the full horizon, and the healthy
+/// client keeps serving.
+#[test]
+fn prop_heartbeat_expiry_marks_stragglers() {
+    let spec = tiny(3);
+    let mut hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let silent = std::thread::spawn({
+        let spec = spec.clone();
+        let dialer = dialer.clone();
+        move || {
+            let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+            let masks = repro::masks_for(&spec, problem.as_ref());
+            let algo = Arc::new(Aquila::new(spec.beta));
+            let client = DeviceClient::new(problem, algo, spec.run_config(), masks)
+                .heartbeat_ms(25)
+                .silent_after(1);
+            let mut conn = dialer.connect();
+            client.run(&mut conn).expect("silent client exits cleanly")
+        }
+    });
+    let honest = loop_client(spec.clone(), dialer);
+    let mut service = CoordinatorService::new(
+        session_of(&spec),
+        ServeSpec { heartbeat_timeout_ms: 250, ..serve(2) },
+    );
+    let trace = service.run(&mut hub).expect("service run");
+    let silent_rep = silent.join().expect("silent client");
+    let honest_rep = honest.join().expect("honest client");
+
+    assert_eq!(trace.rounds.len(), 3);
+    assert_eq!(trace.rounds[0].stragglers, 0, "round 0 is fully served");
+    // The silent client's two devices miss rounds 1 and 2.
+    assert_eq!(trace.total_stragglers(), 4, "heartbeat expiry must mark stragglers");
+    assert_eq!(silent_rep.rounds_served, 1);
+    assert_eq!(honest_rep.rounds_served, 3);
+}
+
+/// The determinism acceptance: one seeded run executed in-process,
+/// served over the loopback hub, and served over real TCP — all three
+/// traces (and the final model) agree bit for bit.
+#[test]
+fn prop_service_trace_matches_inprocess_over_both_transports() {
+    let spec = tiny(5);
+    let (want, theta_want) = inprocess(&spec);
+
+    let mut hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let clients: Vec<_> = (0..2).map(|_| loop_client(spec.clone(), dialer.clone())).collect();
+    let mut service = CoordinatorService::new(session_of(&spec), serve(2));
+    let loopback = service.run(&mut hub).expect("loopback run");
+    for h in clients {
+        h.join().expect("client");
+    }
+    let theta_loop: Vec<u32> = service.session().theta().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(
+        format!("{:?}", want.rounds),
+        format!("{:?}", loopback.rounds),
+        "loopback service diverged from the in-process run"
+    );
+    assert_eq!(theta_want, theta_loop, "θ diverged bitwise over loopback");
+
+    let mut transport = TcpTransport::bind("127.0.0.1:0").expect("bind");
+    let addr = transport.local_addr().expect("addr").to_string();
+    let clients: Vec<_> = (0..2).map(|_| tcp_client(spec.clone(), addr.clone())).collect();
+    let mut service = CoordinatorService::new(session_of(&spec), serve(2));
+    let tcp = service.run(&mut transport).expect("tcp run");
+    for h in clients {
+        h.join().expect("client");
+    }
+    assert_eq!(
+        format!("{:?}", loopback.rounds),
+        format!("{:?}", tcp.rounds),
+        "TCP service diverged from the loopback run"
+    );
+}
