@@ -1,0 +1,308 @@
+//! Chaos-hardened serving, end to end: the seeded run must survive
+//! injected transport faults and a coordinator kill without changing
+//! a single bit of the trace.
+//!
+//! ```bash
+//! cargo run --release --example chaos           # `verify` (loopback chaos)
+//! cargo run --release --example chaos kill      # multi-process kill+resume
+//! ```
+//!
+//! * `verify` (default, CI-gated) — executes the run in-process, then
+//!   again through [`aquila::protocol::CoordinatorService`] over the
+//!   loopback transport wrapped in a [`aquila::protocol::ChaosTransport`]
+//!   injecting *every* fault kind at once (drops, stalls, partial
+//!   frames, corruption, duplicates, accept failures), with two
+//!   reconnecting client threads. The two `RunTrace`s must be
+//!   **bit-identical**; on mismatch both are written to
+//!   `chaos_trace_{inproc,served}.txt` and the process exits 1.
+//! * `kill` (CI-gated) — spawns a real coordinator process over TCP
+//!   that checkpoints every round and dies after round 2, plus two
+//!   reconnecting client processes. A second coordinator process is
+//!   then started with `--resume` semantics on the same address; the
+//!   clients rejoin it, and the stitched head+tail trace must equal
+//!   the uninterrupted in-process run bit for bit, with zero
+//!   stragglers in the resumed rounds. Mismatches land in
+//!   `chaos_trace_{expected,got}.txt`.
+//! * `coord <addr> <ckpt> <out> [halt-after-N | resume]` and
+//!   `client <addr>` — the child roles for `kill`.
+
+use aquila::algorithms::aquila::Aquila;
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::checkpoint::Checkpoint;
+use aquila::protocol::{
+    ChaosSpec, CoordinatorService, DeviceClient, LoopbackHub, ServeSpec, TcpDialer, TcpTransport,
+};
+use aquila::repro;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The round the pre-kill coordinator dies after (it serves rounds
+/// `0..=HALT`; the resumed one serves `HALT + 1..`).
+const HALT: usize = 2;
+
+/// The shared experiment cell — every mode (and every spawned child)
+/// reconstructs the identical problem from this spec.
+fn spec() -> ExperimentSpec {
+    let mut s = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false).scaled(0.02, 8);
+    s.devices = 4;
+    s
+}
+
+fn serve_spec() -> ServeSpec {
+    ServeSpec {
+        clients: 2,
+        heartbeat_ms: 50,
+        heartbeat_timeout_ms: 1_000,
+        round_timeout_ms: 10_000,
+        accept_timeout_ms: 30_000,
+        ..ServeSpec::default()
+    }
+}
+
+/// Every fault kind at once — the stress mix the verify mode runs
+/// under. Recovery must finish inside the round deadline for each.
+fn chaos_mix() -> ChaosSpec {
+    let s = "drop=0.06,stall=0.2,stall_ms=3,partial=0.03,corrupt=0.04,dup=0.15,accept=0.3,seed=24";
+    ChaosSpec::parse(s).expect("chaos grammar")
+}
+
+/// A client that treats a lost connection as a rejoin, not a failure.
+fn resilient_client(s: &ExperimentSpec) -> DeviceClient {
+    repro::client_for(s, Arc::new(Aquila::new(s.beta)))
+        .heartbeat_ms(50)
+        .reconnect(60, 10, 200)
+        .idle_timeout_ms(750)
+}
+
+fn inprocess(s: &ExperimentSpec) -> aquila::metrics::RunTrace {
+    repro::session_for(s, Arc::new(Aquila::new(s.beta))).build().run()
+}
+
+fn cmd_verify() -> ExitCode {
+    let s = spec();
+    let chaos = chaos_mix();
+    println!(
+        "verify: {} — {} rounds in-process vs chaos-served loopback ({chaos})",
+        s.row_label(),
+        s.rounds
+    );
+    let inproc = inprocess(&s);
+    let hub = LoopbackHub::new();
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let dialer = hub.dialer();
+        let s = s.clone();
+        handles.push(std::thread::spawn(move || {
+            resilient_client(&s).run_with(&dialer).expect("resilient loopback client");
+        }));
+    }
+    let mut service = CoordinatorService::new(
+        repro::session_for(&s, Arc::new(Aquila::new(s.beta))).build(),
+        serve_spec(),
+    );
+    let mut transport = chaos.wrap_transport(Box::new(hub));
+    let served = service.run(&mut transport).expect("chaos-served run");
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let a = format!("{:#?}", inproc.rounds);
+    let b = format!("{:#?}", served.rounds);
+    if a == b {
+        println!(
+            "OK: {} rounds bit-identical under chaos ({} uplink bits, final loss {})",
+            inproc.rounds.len(),
+            inproc.total_bits(),
+            inproc.final_train_loss()
+        );
+        ExitCode::SUCCESS
+    } else {
+        std::fs::write("chaos_trace_inproc.txt", &a).expect("write artifact");
+        std::fs::write("chaos_trace_served.txt", &b).expect("write artifact");
+        eprintln!("MISMATCH: traces differ; wrote chaos_trace_inproc.txt / chaos_trace_served.txt");
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_kill() -> ExitCode {
+    let s = spec();
+    let want = inprocess(&s);
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let ckpt = tmp.join(format!("chaos_kill_{pid}.ckpt"));
+    let head_out = tmp.join(format!("chaos_kill_{pid}_head.txt"));
+    let tail_out = tmp.join(format!("chaos_kill_{pid}_tail.txt"));
+    let exe = std::env::current_exe().expect("current exe");
+    println!(
+        "kill: coordinator serves {} rounds over TCP, dies after round {HALT}, resumes from \
+         its checkpoint",
+        s.rounds
+    );
+
+    let mut coord = std::process::Command::new(&exe)
+        .args(["coord", "127.0.0.1:0"])
+        .arg(&ckpt)
+        .arg(&head_out)
+        .arg(format!("halt-after-{HALT}"))
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn coordinator");
+    let mut reader = BufReader::new(coord.stdout.take().expect("coordinator stdout"));
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read coordinator addr");
+    let addr = line
+        .trim()
+        .strip_prefix("ADDR ")
+        .expect("coordinator prints ADDR first")
+        .to_string();
+    // Keep draining the pipe so the child never blocks on a full buffer.
+    std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+        print!("{rest}");
+    });
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            std::process::Command::new(&exe)
+                .args(["client", &addr])
+                .spawn()
+                .expect("spawn client")
+        })
+        .collect();
+
+    let st1 = coord.wait().expect("wait coordinator");
+    if !st1.success() {
+        eprintln!("FAIL: pre-kill coordinator exited nonzero");
+        return ExitCode::FAILURE;
+    }
+    println!("coordinator died after round {HALT}; restarting on {addr} with --resume");
+    let mut coord2 = std::process::Command::new(&exe)
+        .args(["coord", &addr])
+        .arg(&ckpt)
+        .arg(&tail_out)
+        .arg("resume")
+        .spawn()
+        .expect("spawn resumed coordinator");
+    let st2 = coord2.wait().expect("wait resumed coordinator");
+    let mut ok = st2.success();
+    for c in clients {
+        ok &= c.wait().expect("wait client").success();
+    }
+    if !ok {
+        eprintln!("FAIL: a child process exited nonzero");
+        return ExitCode::FAILURE;
+    }
+
+    let head = std::fs::read_to_string(&head_out).expect("head trace");
+    let tail = std::fs::read_to_string(&tail_out).expect("tail trace");
+    let want_head = format!("start=0\n{:#?}", &want.rounds[..HALT + 1]);
+    let want_tail = format!("start={}\n{:#?}", HALT + 1, &want.rounds[HALT + 1..]);
+    for p in [&ckpt, &head_out, &tail_out] {
+        let _ = std::fs::remove_file(p);
+    }
+    if head != want_head || tail != want_tail {
+        std::fs::write("chaos_trace_expected.txt", format!("{want_head}\n---\n{want_tail}"))
+            .expect("write artifact");
+        std::fs::write("chaos_trace_got.txt", format!("{head}\n---\n{tail}"))
+            .expect("write artifact");
+        eprintln!("MISMATCH: stitched trace differs; wrote chaos_trace_{{expected,got}}.txt");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "OK: head ({} rounds) + resumed tail ({} rounds) bit-identical to the uninterrupted run",
+        HALT + 1,
+        want.rounds.len() - HALT - 1
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_coord(addr: &str, ckpt: &Path, out: &Path, mode: Option<&str>) -> ExitCode {
+    let s = spec();
+    let mut service = CoordinatorService::new(
+        repro::session_for(&s, Arc::new(Aquila::new(s.beta))).build(),
+        serve_spec(),
+    )
+    .checkpoint_to(ckpt.to_path_buf(), 1);
+    let mut start = 0usize;
+    match mode {
+        Some(m) if m.starts_with("halt-after-") => {
+            let n: usize = m["halt-after-".len()..].parse().expect("halt round");
+            service = service.halt_after_round(n);
+        }
+        Some("resume") => {
+            let c = Checkpoint::load(ckpt).expect("load checkpoint");
+            start = service.resume_from(&c).expect("resume from checkpoint");
+        }
+        Some(other) => {
+            eprintln!("unknown coord mode '{other}' (expected: halt-after-N | resume)");
+            return ExitCode::FAILURE;
+        }
+        None => {}
+    }
+    let mut transport = TcpTransport::bind(addr).expect("bind");
+    println!("ADDR {}", transport.local_addr().expect("local addr"));
+    let trace = match service.run(&mut transport) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("coordinator failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    std::fs::write(out, format!("start={start}\n{:#?}", trace.rounds)).expect("write trace");
+    if start > 0 && trace.rounds.iter().any(|r| r.stragglers != 0) {
+        eprintln!("FAIL: resumed run manufactured stragglers");
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_client(addr: &str) -> ExitCode {
+    let s = spec();
+    let dialer = TcpDialer::new(addr, Duration::from_secs(5));
+    match resilient_client(&s).run_with(&dialer) {
+        Ok(rep) => {
+            println!(
+                "client {}: devices {}..{}, {} round(s) served",
+                rep.client_id, rep.devices.start, rep.devices.end, rep.rounds_served
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("client failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        None | Some("verify") => cmd_verify(),
+        Some("kill") => cmd_kill(),
+        Some("coord") => {
+            if args.len() < 4 {
+                eprintln!("usage: chaos coord ADDR CKPT OUT [halt-after-N | resume]");
+                return ExitCode::FAILURE;
+            }
+            cmd_coord(
+                &args[1],
+                Path::new(&args[2]),
+                Path::new(&args[3]),
+                args.get(4).map(|s| s.as_str()),
+            )
+        }
+        Some("client") => {
+            let Some(addr) = args.get(1) else {
+                eprintln!("usage: chaos client ADDR");
+                return ExitCode::FAILURE;
+            };
+            cmd_client(addr)
+        }
+        Some(other) => {
+            eprintln!("unknown mode '{other}' (expected: verify | kill | coord | client)");
+            ExitCode::FAILURE
+        }
+    }
+}

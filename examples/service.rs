@@ -44,7 +44,10 @@ fn serve_spec() -> ServeSpec {
         clients: 2,
         heartbeat_ms: 50,
         heartbeat_timeout_ms: 1_000,
-        round_timeout_ms: 30_000,
+        // Short round deadline: the rejoin-aware collect loop waits for
+        // a dead client's devices until the deadline, and the `tcp`
+        // mode's silent client never comes back.
+        round_timeout_ms: 2_000,
         accept_timeout_ms: 30_000,
         ..ServeSpec::default()
     }

@@ -1,0 +1,90 @@
+//! Chaos-decorator overhead: wrapping a connection in a disabled
+//! [`ChaosConnection`] must be free.
+//!
+//! The serve path always constructs through the decorator-capable
+//! code, so the pass-through cost of a disabled [`ChaosSpec`] is paid
+//! by every production run. `ChaosSpec::roll` returns before building
+//! any RNG when a probability is zero, so the disabled decorator adds
+//! a handful of branches per op — this bench measures a send→recv
+//! round-trip over a bare loopback pair vs the same pair behind a
+//! disabled decorator and **asserts the overhead stays under 5%**. An
+//! enabled mix (detectable corruption) is reported for scale but not
+//! gated: injecting faults is allowed to cost whatever it costs.
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::protocol::transport::LoopbackConnection;
+use aquila::protocol::{ChaosConnection, ChaosSpec, Connection, Message, ProtocolError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Send→recv round-trips per timed sample, amortizing timer noise.
+const BATCH: usize = 512;
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let timeout = Duration::from_secs(1);
+
+    let (mut tx, mut rx) = LoopbackConnection::pair();
+    let bare = bench
+        .bench_throughput(&format!("loopback_bare batch={BATCH}"), BATCH as u64, || {
+            for _ in 0..BATCH {
+                tx.send(black_box(&Message::Heartbeat)).expect("send");
+                black_box(rx.recv(timeout).expect("recv"));
+            }
+        })
+        .mean;
+
+    let (a, mut rx) = LoopbackConnection::pair();
+    let mut tx = ChaosConnection::new(Box::new(a), Arc::new(ChaosSpec::default()), 1);
+    let disabled = bench
+        .bench_throughput(
+            &format!("loopback_chaos_disabled batch={BATCH}"),
+            BATCH as u64,
+            || {
+                for _ in 0..BATCH {
+                    tx.send(black_box(&Message::Heartbeat)).expect("send");
+                    black_box(rx.recv(timeout).expect("recv"));
+                }
+            },
+        )
+        .mean;
+
+    // Enabled chaos, for scale: corruption is detectable (the peer sees
+    // `UnknownKind`) and leaves the loopback pair usable, so the same
+    // loop runs with faults actually firing.
+    let spec = ChaosSpec {
+        corrupt_p: 0.2,
+        seed: 7,
+        ..ChaosSpec::default()
+    };
+    let (a, mut rx) = LoopbackConnection::pair();
+    let mut tx = ChaosConnection::new(Box::new(a), Arc::new(spec), 2);
+    let mut corrupted = 0u64;
+    bench.bench_throughput(
+        &format!("loopback_chaos_corrupt20 batch={BATCH}"),
+        BATCH as u64,
+        || {
+            for _ in 0..BATCH {
+                tx.send(black_box(&Message::Heartbeat)).expect("send");
+                match rx.recv(timeout) {
+                    Ok(m) => {
+                        black_box(m);
+                    }
+                    Err(ProtocolError::UnknownKind(_)) => corrupted += 1,
+                    Err(e) => panic!("unexpected recv error: {e}"),
+                }
+            }
+        },
+    );
+
+    let ratio = disabled.as_secs_f64() / bare.as_secs_f64().max(1e-12);
+    println!(
+        "disabled-chaos decorator: {ratio:.3}x bare loopback \
+         ({corrupted} frames corrupted in the enabled case)"
+    );
+    assert!(
+        ratio < 1.05,
+        "disabled chaos decorator must cost < 5% over bare loopback, measured {ratio:.3}x"
+    );
+    bench.finish();
+}

@@ -19,7 +19,7 @@ use crate::problems::logistic::LogisticProblem;
 use crate::problems::mlp::MlpProblem;
 use crate::problems::softmax_lm::SoftmaxLmProblem;
 use crate::problems::GradientSource;
-use crate::protocol::ServeSpec;
+use crate::protocol::{ChaosSpec, ServeSpec};
 use crate::quant::SectionSpec;
 use crate::selection::SelectionSpec;
 use crate::transport::scenario::NetworkSpec;
@@ -151,6 +151,10 @@ pub struct ExperimentSpec {
     /// the `--serve`/`--connect` CLI flags). Ignored by in-process
     /// runs.
     pub serve: ServeSpec,
+    /// Deterministic fault injection for served runs (the TOML
+    /// `[chaos]` table, `--chaos` on the CLI). Default: disabled.
+    /// Ignored by in-process runs.
+    pub chaos: ChaosSpec,
 }
 
 impl ExperimentSpec {
@@ -187,6 +191,7 @@ impl ExperimentSpec {
             dadaquant_cap: 16,
             quant_sections: SectionSpec::Global,
             serve: ServeSpec::default(),
+            chaos: ChaosSpec::default(),
         }
     }
 
@@ -374,6 +379,32 @@ impl ExperimentSpec {
                 anyhow::ensure!(v >= 1, "{key} must be >= 1, got {v}");
                 *slot = v as u64;
             }
+        }
+        // The [chaos] table configures fault injection for served
+        // runs. Out-of-range probabilities are hard errors — silently
+        // clamping would run a different fault mix than the file says.
+        for (key, slot) in [
+            ("chaos.drop", &mut self.chaos.drop_p),
+            ("chaos.stall", &mut self.chaos.stall_p),
+            ("chaos.partial", &mut self.chaos.partial_p),
+            ("chaos.corrupt", &mut self.chaos.corrupt_p),
+            ("chaos.dup", &mut self.chaos.dup_p),
+            ("chaos.accept", &mut self.chaos.accept_p),
+        ] {
+            if let Some(v) = map.get(key).and_then(|v| v.as_f64()) {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&v),
+                    "{key} must be a probability in [0, 1], got {v}"
+                );
+                *slot = v;
+            }
+        }
+        if let Some(v) = map.get("chaos.stall_ms").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v >= 1, "chaos.stall_ms must be >= 1, got {v}");
+            self.chaos.stall_ms = v as u64;
+        }
+        if let Some(v) = map.get("chaos.seed").and_then(|v| v.as_i64()) {
+            self.chaos.seed = v as u64;
         }
         Ok(())
     }
@@ -585,6 +616,28 @@ mod tests {
         let map = toml::parse("[serve]\nclients = 0\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
         let map = toml::parse("[serve]\nheartbeat_timeout_ms = 0\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+    }
+
+    #[test]
+    fn toml_chaos_overrides() {
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        assert!(!spec.chaos.is_enabled());
+        let text = "[chaos]\ndrop = 0.1\ncorrupt = 0.05\nstall = 0.2\nstall_ms = 7\nseed = 99\n";
+        let map = toml::parse(text).unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert!(spec.chaos.is_enabled());
+        assert_eq!(spec.chaos.drop_p, 0.1);
+        assert_eq!(spec.chaos.corrupt_p, 0.05);
+        assert_eq!(spec.chaos.stall_p, 0.2);
+        assert_eq!(spec.chaos.stall_ms, 7);
+        assert_eq!(spec.chaos.seed, 99);
+        // Untouched kinds keep their defaults.
+        assert_eq!(spec.chaos.dup_p, 0.0);
+        // A probability outside [0, 1] is a hard error, not a clamp.
+        let map = toml::parse("[chaos]\ndrop = 1.5\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+        let map = toml::parse("[chaos]\nstall_ms = 0\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
     }
 

@@ -16,8 +16,14 @@
 //! (with those histories empty). Version **4** adds the simulated
 //! network accounting (cumulative `sim_time`, downlink bits, straggler
 //! count) so time-to-accuracy curves continue correctly across a
-//! resume; older versions load with those counters at zero. Written
-//! atomically (temp file + rename).
+//! resume; older versions load with those counters at zero. Version
+//! **5** adds an optional nested `serve` header object — the
+//! coordinator service's serve-state (expected client count, staged
+//! device ids at snapshot time) — so a killed `--serve` process
+//! restarted with `--resume` re-enters the same round with the same
+//! client topology; checkpoints without it (all older versions, and
+//! in-process runs) load with no serve-state. Written atomically
+//! (temp file + rename).
 
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
@@ -73,10 +79,28 @@ pub struct Checkpoint {
     pub init_loss: f64,
     /// `f(θ^{k−1})` estimate (NaN before any participant-bearing round).
     pub prev_loss: f64,
+    /// Coordinator-service serve-state (v5+; `None` for in-process
+    /// runs and older checkpoints).
+    pub serve_state: Option<ServeState>,
+}
+
+/// Serve-state carried by checkpoints written from a
+/// [`crate::protocol::CoordinatorService`] run: what a restarted
+/// `--serve --resume` needs beyond the engine state itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeState {
+    /// Client count the run was configured with; the device ranges a
+    /// resumed coordinator assigns are a pure function of this, so
+    /// rejoining clients land on their original ranges.
+    pub clients: usize,
+    /// Device ids whose results were staged in the round that
+    /// completed just before the snapshot (forensic: snapshots are
+    /// written at round boundaries, after the fold).
+    pub staged: Vec<u32>,
 }
 
 /// Current format version.
-pub const VERSION: u32 = 4;
+pub const VERSION: u32 = 5;
 
 /// Bytes of one serialized RNG record: 4×u64 state + present flag +
 /// gauss flag + gauss f64.
@@ -96,7 +120,7 @@ impl Checkpoint {
         // participant-bearing round); bare `NaN` is not JSON, so write
         // null and let `load` map it back to NaN.
         let loss = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
-        let header = obj(vec![
+        let mut fields = vec![
             ("version", Json::Num(version as f64)),
             ("round", Json::Num(self.round as f64)),
             ("dim", Json::Num(self.theta.len() as f64)),
@@ -143,7 +167,18 @@ impl Checkpoint {
             ("stragglers", Json::Num(self.stragglers as f64)),
             ("init_loss", loss(self.init_loss)),
             ("prev_loss", loss(self.prev_loss)),
-        ]);
+        ];
+        if let Some(ss) = &self.serve_state {
+            let staged = ss.staged.iter().map(|&d| Json::Num(d as f64)).collect();
+            fields.push((
+                "serve",
+                obj(vec![
+                    ("clients", Json::Num(ss.clients as f64)),
+                    ("staged", Json::Arr(staged)),
+                ]),
+            ));
+        }
+        let header = obj(fields);
         let tmp = path.with_extension("tmp");
         {
             let mut f = std::fs::File::create(&tmp)?;
@@ -223,6 +258,25 @@ impl Checkpoint {
         if !body.is_empty() {
             bail!("trailing bytes in checkpoint");
         }
+        // v5 serve-state; absent (None) for older versions and for
+        // in-process runs that never served.
+        let serve_state = match header.get("serve") {
+            Json::Obj(_) => {
+                let s = header.get("serve");
+                Some(ServeState {
+                    clients: s.get("clients").as_usize().unwrap_or(1),
+                    staged: s
+                        .get("staged")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_f64())
+                        .map(|v| v as u32)
+                        .collect(),
+                })
+            }
+            _ => None,
+        };
         let device_stats = header
             .get("stats")
             .as_arr()
@@ -276,6 +330,7 @@ impl Checkpoint {
             stragglers: header.get("stragglers").as_f64().unwrap_or(0.0) as u64,
             init_loss: header.get("init_loss").as_f64().unwrap_or(f64::NAN),
             prev_loss: header.get("prev_loss").as_f64().unwrap_or(f64::NAN),
+            serve_state,
         })
     }
 }
@@ -373,6 +428,10 @@ mod tests {
             stragglers: 3,
             init_loss: 2.5,
             prev_loss: 0.75,
+            serve_state: Some(ServeState {
+                clients: 2,
+                staged: vec![0, 1],
+            }),
         }
     }
 
@@ -466,6 +525,22 @@ mod tests {
         assert!(loaded.init_loss.is_nan());
         assert!(loaded.prev_loss.is_nan());
         assert_eq!(loaded.theta, c.theta);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_state_is_optional() {
+        // In-process runs never set it; the header simply has no
+        // `serve` key and loads back as None.
+        let dir = std::env::temp_dir().join("aquila_ckpt_serve_none");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.serve_state = None;
+        c.device_last_loss = vec![0.7, 0.6];
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.serve_state, None);
+        assert_eq!(loaded, c);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -381,6 +381,26 @@ impl RoundEngine {
         true
     }
 
+    /// Clear one device's staged result — the inverse of
+    /// [`RoundEngine::stage_remote`]. The coordinator service calls
+    /// this when the client serving `device` dies mid-round, so a
+    /// half-round upload can never leak into the fold: the device
+    /// returns to "not reported" (`NaN` loss, nothing staged) and
+    /// either its owner rejoins and re-stages the identical result, or
+    /// the round folds it as a straggler. Cumulative upload/skip
+    /// counters are left as the dead client reported them (a rejoin
+    /// rewrites them verbatim). Returns `false` if `device` is out of
+    /// range.
+    pub fn unstage(&mut self, device: usize) -> bool {
+        let Some(slot) = self.slots.get_mut(device) else {
+            return false;
+        };
+        slot.staged = false;
+        slot.staged_level = None;
+        slot.loss = f64::NAN;
+        true
+    }
+
     /// Record `n` stragglers detected outside the channel simulation
     /// (heartbeat-expired protocol clients) in the cumulative counter.
     pub fn note_stragglers(&mut self, n: u64) {
@@ -554,6 +574,9 @@ impl RoundEngine {
             stragglers: self.cum_stragglers,
             init_loss: self.init_loss,
             prev_loss: self.prev_loss,
+            // The engine knows nothing about serving; the coordinator
+            // service stamps its serve-state onto the snapshot.
+            serve_state: None,
         }
     }
 

@@ -28,6 +28,7 @@ use crate::metrics::observer::{RoundObserver, RunMeta};
 use crate::metrics::{RoundRecord, RunTrace};
 use crate::problems::GradientSource;
 use crate::selection::{SelectionSpec, SelectionStrategy};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Builder for [`Session`]. Construct via [`Session::builder`].
@@ -128,6 +129,7 @@ impl SessionBuilder {
             engine,
             dataset: self.dataset,
             split: self.split,
+            checkpoint: None,
         }
     }
 }
@@ -143,6 +145,7 @@ pub struct Session {
     engine: RoundEngine,
     dataset: String,
     split: String,
+    checkpoint: Option<(PathBuf, usize)>,
 }
 
 /// Simultaneous borrows of a [`Session`]'s components, so a front-end
@@ -242,6 +245,14 @@ impl Session {
     /// Run the full configured horizon, producing a trace. Observers
     /// see `on_run_start` / every round / `on_run_end`.
     pub fn run(&mut self) -> RunTrace {
+        self.run_from(0)
+    }
+
+    /// Run rounds `start..rounds` — resuming a restored checkpoint picks
+    /// up exactly where the snapshot left off. Observers still see
+    /// `on_run_start` / `on_run_end`, and the trace holds only the
+    /// rounds executed by this call.
+    pub fn run_from(&mut self, start: usize) -> RunTrace {
         let rounds = self.engine.config().rounds;
         let meta = RunMeta {
             algorithm: self.algo.name().to_string(),
@@ -256,15 +267,34 @@ impl Session {
             algorithm: meta.algorithm.clone(),
             dataset: meta.dataset.clone(),
             split: meta.split.clone(),
-            rounds: Vec::with_capacity(rounds),
+            rounds: Vec::with_capacity(rounds.saturating_sub(start)),
         };
-        for k in 0..rounds {
+        for k in start..rounds {
             trace.rounds.push(self.run_round(k));
+            self.maybe_checkpoint(k + 1, rounds);
         }
         for obs in &mut self.observers {
             obs.on_run_end();
         }
         trace
+    }
+
+    /// Write a periodic checkpoint after each round (every `every`
+    /// rounds and always after the final one) so a killed run can be
+    /// resumed with `--resume`.
+    pub fn checkpoint_to(&mut self, path: PathBuf, every: usize) {
+        self.checkpoint = Some((path, every.max(1)));
+    }
+
+    fn maybe_checkpoint(&mut self, next_round: usize, rounds: usize) {
+        let Some((path, every)) = self.checkpoint.clone() else {
+            return;
+        };
+        if next_round % every == 0 || next_round == rounds {
+            if let Err(e) = self.snapshot(next_round).save(&path) {
+                eprintln!("warning: checkpoint to {} failed: {e}", path.display());
+            }
+        }
     }
 
     /// Snapshot the run state (resume with [`Session::restore`]).

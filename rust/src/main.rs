@@ -9,7 +9,8 @@
 //! repro run --config FILE [--algo NAME] [--select SPEC] [--network SPEC]
 //!           [--quant-sections SPEC] [--dadaquant-b0 B] [--dadaquant-patience P]
 //!           [--dadaquant-cap C] [--out FILE.csv] [--jsonl FILE.jsonl]
-//!           [--serve [ADDR] | --connect ADDR]
+//!           [--serve [ADDR] | --connect ADDR] [--chaos SPEC]
+//!           [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
 //!                                                     single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
 //! repro list                                          presets + algorithms + strategies
@@ -17,10 +18,13 @@
 
 use aquila::algorithms::{self, Algorithm};
 use aquila::config::{table2_rows, table3_rows, DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::checkpoint::Checkpoint;
 use aquila::metrics::bits_display;
 use aquila::metrics::observer::{CsvStream, JsonLines};
 use aquila::problems::GradientSource;
-use aquila::protocol::{CoordinatorService, DeviceClient, TcpConnection, TcpTransport};
+use aquila::protocol::{
+    ChaosSpec, CoordinatorService, DeviceClient, Dial, TcpDialer, TcpTransport, Transport,
+};
 use aquila::quant::SectionSpec;
 use aquila::repro;
 use aquila::selection::SelectionSpec;
@@ -223,6 +227,15 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
+    if let Some(s) = args.flags.get("chaos") {
+        match ChaosSpec::parse(s) {
+            Some(c) => spec.chaos = c,
+            None => {
+                eprintln!("bad chaos spec '{s}' (try: {})", ChaosSpec::SYNTAX);
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     // DAdaQuant schedule overrides (`dadaquant_*` TOML keys have the
     // same effect; the CLI wins).
     if let Some(v) = args.flags.get("dadaquant-b0") {
@@ -273,6 +286,29 @@ fn cmd_run(args: &Args) -> ExitCode {
             spec.serve.addr = v.clone();
         }
     }
+    // Crash-recovery flags: periodic checkpoints out, a restored
+    // snapshot in. Both work for in-process and served runs.
+    let checkpoint = args.flags.get("checkpoint").map(PathBuf::from);
+    let ckpt_every = match args.flags.get("checkpoint-every") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("--checkpoint-every must be a positive integer, got '{v}'");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => 1,
+    };
+    let resume = match args.flags.get("resume") {
+        Some(p) => match Checkpoint::load(std::path::Path::new(p)) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("cannot load --resume {p}: {e}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
+    };
     println!(
         "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={}, sections={})",
         algo.name(),
@@ -306,18 +342,38 @@ fn cmd_run(args: &Args) -> ExitCode {
         }
     }
     let trace = if args.flags.contains_key("serve") {
-        let mut transport = match TcpTransport::bind(&spec.serve.addr) {
+        let mut service = CoordinatorService::new(builder.build(), spec.serve.clone());
+        if let Some(path) = &checkpoint {
+            service = service.checkpoint_to(path.clone(), ckpt_every);
+        }
+        if let Some(ckpt) = &resume {
+            match service.resume_from(ckpt) {
+                Ok(next) => println!("resumed from checkpoint, continuing at round {next}"),
+                Err(e) => {
+                    eprintln!("cannot resume: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        let tcp = match TcpTransport::bind(&spec.serve.addr) {
             Ok(t) => t,
             Err(e) => {
                 eprintln!("cannot bind {}: {e}", spec.serve.addr);
                 return ExitCode::FAILURE;
             }
         };
-        if let Ok(addr) = transport.local_addr() {
-            println!("serving on {addr}, waiting for {} client(s)", spec.serve.clients);
+        if let Ok(addr) = tcp.local_addr() {
+            println!(
+                "serving on {addr}, waiting for {} client(s)",
+                service.serve_spec().clients
+            );
         }
-        let mut service = CoordinatorService::new(builder.build(), spec.serve.clone());
-        match service.run(&mut transport) {
+        let mut transport: Box<dyn Transport> = Box::new(tcp);
+        if spec.chaos.is_enabled() {
+            println!("chaos enabled on the coordinator transport: {}", spec.chaos);
+            transport = Box::new(spec.chaos.clone().wrap_transport(transport));
+        }
+        match service.run(transport.as_mut()) {
             Ok(t) => t,
             Err(e) => {
                 eprintln!("serve failed: {e}");
@@ -325,7 +381,24 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     } else {
-        builder.build().run()
+        let mut session = builder.build();
+        let start = match &resume {
+            Some(ckpt) => match session.restore(ckpt) {
+                Ok(next) => {
+                    println!("resumed from checkpoint, continuing at round {next}");
+                    next
+                }
+                Err(e) => {
+                    eprintln!("cannot resume: {e}");
+                    return ExitCode::FAILURE;
+                }
+            },
+            None => 0,
+        };
+        if let Some(path) = checkpoint.clone() {
+            session.checkpoint_to(path, ckpt_every);
+        }
+        session.run_from(start)
     };
     println!("{}", trace.summary_json());
     if let Some(out) = args.flags.get("out") {
@@ -345,15 +418,17 @@ fn cmd_connect(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>, addr: &str) -> E
     let problem: Arc<dyn GradientSource> = spec.build_problem().into();
     let masks = repro::masks_for(spec, problem.as_ref());
     let client = DeviceClient::new(problem, algo, spec.run_config(), masks)
-        .heartbeat_ms(spec.serve.heartbeat_ms);
-    let mut conn = match TcpConnection::connect(addr, std::time::Duration::from_secs(10)) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("cannot connect to {addr}: {e}");
-            return ExitCode::FAILURE;
-        }
+        .heartbeat_ms(spec.serve.heartbeat_ms)
+        .reconnect(10, 50, 2_000)
+        .idle_timeout_ms(spec.serve.round_timeout_ms.saturating_mul(2).max(1_000));
+    let tcp = TcpDialer::new(addr, std::time::Duration::from_secs(10));
+    let dialer: Box<dyn Dial> = if spec.chaos.is_enabled() {
+        println!("chaos enabled on client dials: {}", spec.chaos);
+        Box::new(spec.chaos.clone().wrap_dial(Box::new(tcp), 1))
+    } else {
+        Box::new(tcp)
     };
-    match client.run(&mut conn) {
+    match client.run_with(dialer.as_ref()) {
         Ok(rep) => {
             println!(
                 "client {} served devices {}..{} for {} round(s)",
@@ -424,6 +499,10 @@ fn cmd_list() {
         "serve config ([serve] TOML table): addr clients heartbeat_ms heartbeat_timeout_ms \
          round_timeout_ms accept_timeout_ms"
     );
+    println!(
+        "chaos injection ([chaos] TOML table / --chaos): {}",
+        ChaosSpec::SYNTAX
+    );
     println!("flags per command:");
     println!("  table2 | table3 | fig2 | fig3   --scale S --rounds N --seed K --out DIR");
     println!("  ablation-beta                   --betas B1,B2,.. --dataset D --scale S");
@@ -435,6 +514,9 @@ fn cmd_list() {
     println!("                                  --jsonl FILE.jsonl");
     println!("                                  --serve [ADDR]   coordinator service");
     println!("                                  --connect ADDR   device client");
+    println!("                                  --chaos SPEC     fault injection (served runs)");
+    println!("                                  --checkpoint FILE [--checkpoint-every N]");
+    println!("                                  --resume FILE    restart from a checkpoint");
 }
 
 fn main() -> ExitCode {
@@ -456,6 +538,8 @@ fn main() -> ExitCode {
             println!("             --quant-sections SPEC --jsonl FILE --dadaquant-b0 B");
             println!("             --dadaquant-patience P --dadaquant-cap C");
             println!("             --serve [ADDR] (coordinator) | --connect ADDR (client)");
+            println!("             --chaos SPEC --checkpoint FILE [--checkpoint-every N]");
+            println!("             --resume FILE");
             println!("  `repro list` prints the full flag surface and spec syntaxes");
         }
     }

@@ -1,0 +1,520 @@
+//! Deterministic fault injection for the protocol stack.
+//!
+//! [`ChaosTransport`] / [`ChaosConnection`] / [`ChaosDialer`] are
+//! decorators over any [`Transport`] / [`Connection`] / [`Dial`] that
+//! inject the failure modes a served run must survive: connection
+//! drops, send/recv stalls, partial frames followed by hangup, byte
+//! corruption, duplicate delivery, and coordinator-side accept
+//! failure. Probabilities and the chaos seed come from a [`ChaosSpec`]
+//! (TOML `[chaos]` table or the `--chaos` CLI grammar).
+//!
+//! Every fault decision is drawn from a *fresh* RNG stream keyed on
+//! `(chaos seed, fault kind, connection id, lane, op index)` — there
+//! is no free-running fault stream anywhere (the PR 4 channel-fault
+//! lesson), so a replay with the same seed and the same connection
+//! history injects exactly the same faults, and a disabled probability
+//! short-circuits before any RNG is built (the pass-through overhead
+//! bench relies on this).
+//!
+//! Fault semantics are chosen so that *every* injected fault is
+//! detectable by the peer: corruption flips the frame kind's high bit
+//! (no kind uses it, so decode fails as `UnknownKind`), a partial
+//! frame truncates the body and then kills the connection (decode
+//! fails as `Truncated`/`Malformed`), and drops kill both directions
+//! of the connection. The frame layer carries no checksum, so an
+//! *undetectable* payload flip would silently poison the fold — chaos
+//! therefore models detectable corruption, which is what the
+//! reconnect/rejoin machinery can actually recover from.
+
+use super::messages::Message;
+use super::transport::{Connection, Dial, Transport};
+use super::ProtocolError;
+use crate::util::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Fault-kind salts for the per-decision RNG streams.
+const SALT_DROP: u64 = 0xD209_0000_0000_0001;
+const SALT_STALL: u64 = 0xD209_0000_0000_0002;
+const SALT_PARTIAL: u64 = 0xD209_0000_0000_0003;
+const SALT_CORRUPT: u64 = 0xD209_0000_0000_0004;
+const SALT_DUP: u64 = 0xD209_0000_0000_0005;
+const SALT_ACCEPT: u64 = 0xD209_0000_0000_0006;
+
+/// Golden-ratio mixers separating the id axes in the stream key.
+const PHI: u64 = 0x9E37_79B9_7F4A_7C15;
+const PHI2: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// Fault-injection configuration: per-fault probabilities plus the
+/// chaos seed. All-zero probabilities (the default) mean chaos is
+/// off and the decorators pass messages through untouched.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// Probability an op kills the connection (both directions).
+    pub drop_p: f64,
+    /// Probability an op stalls for [`ChaosSpec::stall_ms`] first.
+    pub stall_p: f64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Probability a send emits only half the frame and then hangs up.
+    pub partial_p: f64,
+    /// Probability a send is corrupted (detectably — see module docs).
+    pub corrupt_p: f64,
+    /// Probability a sent message is delivered twice.
+    pub dup_p: f64,
+    /// Probability the coordinator drops a freshly accepted
+    /// connection before reading anything from it.
+    pub accept_p: f64,
+    /// Seed for every fault decision stream.
+    pub seed: u64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        Self {
+            drop_p: 0.0,
+            stall_p: 0.0,
+            stall_ms: 20,
+            partial_p: 0.0,
+            corrupt_p: 0.0,
+            dup_p: 0.0,
+            accept_p: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// The `--chaos` grammar, echoed in parse errors and `repro list`.
+    pub const SYNTAX: &'static str =
+        "off | KEY=V[,KEY=V...] with keys drop|stall|partial|corrupt|dup|accept (prob in [0,1]), stall_ms, seed";
+
+    /// Parse the CLI grammar: `off`, or comma-separated `key=value`
+    /// pairs, e.g. `drop=0.05,dup=0.02,seed=7`. Probabilities must lie
+    /// in `[0,1]`. Returns `None` on any unknown key or bad value.
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut spec = Self::default();
+        let s = s.trim();
+        if s.is_empty() {
+            return None;
+        }
+        if s == "off" {
+            return Some(spec);
+        }
+        for item in s.split(',') {
+            let (key, val) = item.split_once('=')?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "stall_ms" => spec.stall_ms = val.parse::<u64>().ok()?,
+                "seed" => spec.seed = val.parse::<u64>().ok()?,
+                _ => {
+                    let p = val.parse::<f64>().ok()?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return None;
+                    }
+                    match key {
+                        "drop" => spec.drop_p = p,
+                        "stall" => spec.stall_p = p,
+                        "partial" => spec.partial_p = p,
+                        "corrupt" => spec.corrupt_p = p,
+                        "dup" => spec.dup_p = p,
+                        "accept" => spec.accept_p = p,
+                        _ => return None,
+                    }
+                }
+            }
+        }
+        Some(spec)
+    }
+
+    /// Whether any fault has a nonzero probability.
+    pub fn is_enabled(&self) -> bool {
+        self.drop_p > 0.0
+            || self.stall_p > 0.0
+            || self.partial_p > 0.0
+            || self.corrupt_p > 0.0
+            || self.dup_p > 0.0
+            || self.accept_p > 0.0
+    }
+
+    /// Wrap a server-side transport; accepted connections get chaos
+    /// injected and the accept path itself can fail.
+    pub fn wrap_transport(self, inner: Box<dyn Transport>) -> ChaosTransport {
+        ChaosTransport {
+            inner,
+            spec: Arc::new(self),
+            accepted: 0,
+        }
+    }
+
+    /// Wrap a client-side dialer. `actor` distinguishes concurrent
+    /// clients sharing one spec so their fault streams never collide
+    /// (connection ids become `actor << 32 | dial index`).
+    pub fn wrap_dial(self, inner: Box<dyn Dial>, actor: u64) -> ChaosDialer {
+        ChaosDialer {
+            inner,
+            spec: Arc::new(self),
+            actor,
+            dialed: AtomicU64::new(0),
+        }
+    }
+
+    /// One fault decision, keyed on `(seed, salt, conn, lane, op)`.
+    /// Builds no RNG when the probability is zero — the disabled path
+    /// is a handful of branches.
+    fn roll(&self, salt: u64, conn: u64, lane: u64, op: u64, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let key = salt ^ conn.wrapping_mul(PHI) ^ lane.rotate_left(17) ^ op.wrapping_mul(PHI2);
+        Xoshiro256pp::stream(self.seed, key).bernoulli(p)
+    }
+}
+
+impl std::fmt::Display for ChaosSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.is_enabled() {
+            return write!(f, "off");
+        }
+        let mut parts: Vec<String> = Vec::new();
+        for (key, p) in [
+            ("drop", self.drop_p),
+            ("stall", self.stall_p),
+            ("partial", self.partial_p),
+            ("corrupt", self.corrupt_p),
+            ("dup", self.dup_p),
+            ("accept", self.accept_p),
+        ] {
+            if p > 0.0 {
+                parts.push(format!("{key}={p}"));
+            }
+        }
+        if self.stall_p > 0.0 {
+            parts.push(format!("stall_ms={}", self.stall_ms));
+        }
+        parts.push(format!("seed={}", self.seed));
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+/// Fault-injecting [`Connection`] decorator. Clones share the dead
+/// flag (a drop kills both directions, like a real socket) but each
+/// clone rolls faults on its own lane, so the reader and writer halves
+/// have independent, fully deterministic fault sequences regardless of
+/// thread interleaving.
+pub struct ChaosConnection {
+    inner: Box<dyn Connection>,
+    spec: Arc<ChaosSpec>,
+    conn_id: u64,
+    lane: u64,
+    next_lane: Arc<AtomicU64>,
+    ops: u64,
+    dead: Arc<AtomicBool>,
+    body_buf: Vec<u8>,
+}
+
+impl ChaosConnection {
+    /// Wrap `inner`, keying this connection's fault streams on
+    /// `conn_id`.
+    pub fn new(inner: Box<dyn Connection>, spec: Arc<ChaosSpec>, conn_id: u64) -> Self {
+        Self {
+            inner,
+            spec,
+            conn_id,
+            lane: 0,
+            next_lane: Arc::new(AtomicU64::new(1)),
+            ops: 0,
+            dead: Arc::new(AtomicBool::new(false)),
+            body_buf: Vec::new(),
+        }
+    }
+
+    fn roll(&self, salt: u64, op: u64, p: f64) -> bool {
+        self.spec.roll(salt, self.conn_id, self.lane, op, p)
+    }
+
+    fn kill(&self) -> ProtocolError {
+        self.dead.store(true, Ordering::Relaxed);
+        ProtocolError::Closed
+    }
+}
+
+impl Connection for ChaosConnection {
+    fn send(&mut self, msg: &Message) -> Result<(), ProtocolError> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(ProtocolError::Closed);
+        }
+        let op = self.ops;
+        self.ops += 1;
+        if self.roll(SALT_DROP, op, self.spec.drop_p) {
+            return Err(self.kill());
+        }
+        if self.roll(SALT_STALL, op, self.spec.stall_p) {
+            std::thread::sleep(Duration::from_millis(self.spec.stall_ms));
+        }
+        if self.roll(SALT_PARTIAL, op, self.spec.partial_p) {
+            // Half the frame, then hangup: the peer's decoder sees a
+            // truncated body and retires the connection.
+            msg.encode_body(&mut self.body_buf);
+            let half = self.body_buf.len() / 2;
+            let body = std::mem::take(&mut self.body_buf);
+            let res = self.inner.send_raw_frame(msg.kind(), &body[..half]);
+            self.body_buf = body;
+            res?;
+            return Err(self.kill());
+        }
+        if self.roll(SALT_CORRUPT, op, self.spec.corrupt_p) {
+            // Detectable corruption: no kind byte uses the high bit,
+            // so the peer decodes `UnknownKind` and retires the
+            // connection (see module docs for why the flip must be
+            // detectable).
+            msg.encode_body(&mut self.body_buf);
+            let body = std::mem::take(&mut self.body_buf);
+            let res = self.inner.send_raw_frame(msg.kind() | 0x80, &body);
+            self.body_buf = body;
+            return res;
+        }
+        self.inner.send(msg)?;
+        if self.roll(SALT_DUP, op, self.spec.dup_p) {
+            self.inner.send(msg)?;
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Message, ProtocolError> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(ProtocolError::Closed);
+        }
+        let op = self.ops;
+        self.ops += 1;
+        if self.roll(SALT_DROP, op, self.spec.drop_p) {
+            return Err(self.kill());
+        }
+        if self.roll(SALT_STALL, op, self.spec.stall_p) {
+            std::thread::sleep(Duration::from_millis(self.spec.stall_ms));
+        }
+        self.inner.recv(timeout)
+    }
+
+    fn try_clone(&self) -> Result<Box<dyn Connection>, ProtocolError> {
+        Ok(Box::new(Self {
+            inner: self.inner.try_clone()?,
+            spec: self.spec.clone(),
+            conn_id: self.conn_id,
+            lane: self.next_lane.fetch_add(1, Ordering::Relaxed),
+            next_lane: self.next_lane.clone(),
+            ops: 0,
+            dead: self.dead.clone(),
+            body_buf: Vec::new(),
+        }))
+    }
+
+    fn send_raw_frame(&mut self, kind: u8, body: &[u8]) -> Result<(), ProtocolError> {
+        // Raw injection is a test instrument; chaos does not re-fault it.
+        self.inner.send_raw_frame(kind, body)
+    }
+}
+
+/// Fault-injecting [`Transport`] decorator: accepted connections are
+/// wrapped in [`ChaosConnection`]s (connection id = accept index), and
+/// with probability `accept_p` a freshly accepted connection is
+/// dropped on the floor before the handshake — the client sees an
+/// immediate close and must redial.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    spec: Arc<ChaosSpec>,
+    accepted: u64,
+}
+
+impl Transport for ChaosTransport {
+    fn accept(&mut self, timeout: Duration) -> Result<Box<dyn Connection>, ProtocolError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ProtocolError::Timeout);
+            }
+            let conn = self.inner.accept(remaining)?;
+            let id = self.accepted;
+            self.accepted += 1;
+            if self.spec.roll(SALT_ACCEPT, id, 0, 0, self.spec.accept_p) {
+                drop(conn);
+                continue;
+            }
+            return Ok(Box::new(ChaosConnection::new(conn, self.spec.clone(), id)));
+        }
+    }
+}
+
+/// Fault-injecting [`Dial`] decorator for the client side; each dialed
+/// connection gets its own chaos stream (`actor << 32 | dial index`).
+pub struct ChaosDialer {
+    inner: Box<dyn Dial>,
+    spec: Arc<ChaosSpec>,
+    actor: u64,
+    dialed: AtomicU64,
+}
+
+impl Dial for ChaosDialer {
+    fn dial(&self) -> Result<Box<dyn Connection>, ProtocolError> {
+        let n = self.dialed.fetch_add(1, Ordering::Relaxed);
+        let conn = self.inner.dial()?;
+        Ok(Box::new(ChaosConnection::new(
+            conn,
+            self.spec.clone(),
+            (self.actor << 32) | (n & 0xFFFF_FFFF),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::transport::{LoopbackConnection, LoopbackHub};
+
+    fn wrap_pair(spec: ChaosSpec) -> (ChaosConnection, LoopbackConnection) {
+        let (a, b) = LoopbackConnection::pair();
+        (ChaosConnection::new(Box::new(a), Arc::new(spec), 1), b)
+    }
+
+    #[test]
+    fn parse_grammar_and_display() {
+        assert_eq!(ChaosSpec::parse("off"), Some(ChaosSpec::default()));
+        let spec = ChaosSpec::parse("drop=0.1,dup=0.25,stall=0.5,stall_ms=7,seed=42")
+            .expect("valid grammar");
+        assert_eq!(spec.drop_p, 0.1);
+        assert_eq!(spec.dup_p, 0.25);
+        assert_eq!((spec.stall_p, spec.stall_ms, spec.seed), (0.5, 7, 42));
+        assert!(spec.is_enabled());
+        let shown = spec.to_string();
+        assert_eq!(ChaosSpec::parse(&shown), Some(spec), "display re-parses");
+        assert_eq!(ChaosSpec::parse("drop=1.5"), None, "prob out of range");
+        assert_eq!(ChaosSpec::parse("bogus=0.5"), None, "unknown key");
+        assert_eq!(ChaosSpec::parse(""), None, "empty spec");
+        assert!(!ChaosSpec::default().is_enabled());
+        assert_eq!(ChaosSpec::default().to_string(), "off");
+    }
+
+    #[test]
+    fn decisions_are_seed_keyed_and_reproducible() {
+        let spec = ChaosSpec {
+            drop_p: 0.5,
+            seed: 9,
+            ..ChaosSpec::default()
+        };
+        for op in 0..64u64 {
+            let a = spec.roll(SALT_DROP, 3, 0, op, spec.drop_p);
+            let b = spec.roll(SALT_DROP, 3, 0, op, spec.drop_p);
+            assert_eq!(a, b, "same key, same decision");
+        }
+        let flips: Vec<bool> = (0..64)
+            .map(|op| spec.roll(SALT_DROP, 3, 0, op, spec.drop_p))
+            .collect();
+        assert!(flips.iter().any(|&f| f) && flips.iter().any(|&f| !f));
+        let other_seed = ChaosSpec { seed: 10, ..spec };
+        let flips2: Vec<bool> = (0..64)
+            .map(|op| other_seed.roll(SALT_DROP, 3, 0, op, other_seed.drop_p))
+            .collect();
+        assert_ne!(flips, flips2, "seed changes the fault pattern");
+    }
+
+    #[test]
+    fn disabled_spec_passes_through_untouched() {
+        let (mut tx, mut rx) = wrap_pair(ChaosSpec::default());
+        for _ in 0..32 {
+            tx.send(&Message::Heartbeat).unwrap();
+            assert!(matches!(
+                rx.recv(Duration::from_millis(100)).unwrap(),
+                Message::Heartbeat
+            ));
+        }
+    }
+
+    #[test]
+    fn drop_kills_both_directions() {
+        let spec = ChaosSpec {
+            drop_p: 1.0,
+            ..ChaosSpec::default()
+        };
+        let (mut tx, _rx) = wrap_pair(spec);
+        let mut reader = tx.try_clone().unwrap();
+        assert!(matches!(
+            tx.send(&Message::Heartbeat),
+            Err(ProtocolError::Closed)
+        ));
+        assert!(matches!(
+            reader.recv(Duration::from_millis(10)),
+            Err(ProtocolError::Closed)
+        ));
+    }
+
+    #[test]
+    fn corrupt_is_always_detectable() {
+        let spec = ChaosSpec {
+            corrupt_p: 1.0,
+            ..ChaosSpec::default()
+        };
+        let (mut tx, mut rx) = wrap_pair(spec);
+        tx.send(&Message::Heartbeat).unwrap();
+        assert!(matches!(
+            rx.recv(Duration::from_millis(100)),
+            Err(ProtocolError::UnknownKind(_))
+        ));
+    }
+
+    #[test]
+    fn partial_truncates_then_hangs_up() {
+        let spec = ChaosSpec {
+            partial_p: 1.0,
+            ..ChaosSpec::default()
+        };
+        let (mut tx, mut rx) = wrap_pair(spec);
+        let err = tx.send(&Message::Rendezvous { version: 1, want: 0 });
+        assert!(matches!(err, Err(ProtocolError::Closed)));
+        // The peer got half a rendezvous body: decode must fail.
+        assert!(rx.recv(Duration::from_millis(100)).is_err());
+    }
+
+    #[test]
+    fn dup_delivers_twice() {
+        let spec = ChaosSpec {
+            dup_p: 1.0,
+            ..ChaosSpec::default()
+        };
+        let (mut tx, mut rx) = wrap_pair(spec);
+        tx.send(&Message::Heartbeat).unwrap();
+        for _ in 0..2 {
+            assert!(matches!(
+                rx.recv(Duration::from_millis(100)).unwrap(),
+                Message::Heartbeat
+            ));
+        }
+        assert!(matches!(
+            rx.recv(Duration::from_millis(10)),
+            Err(ProtocolError::Timeout)
+        ));
+    }
+
+    #[test]
+    fn accept_failure_drops_the_connection() {
+        let spec = ChaosSpec {
+            accept_p: 1.0,
+            ..ChaosSpec::default()
+        };
+        let hub = LoopbackHub::new();
+        let dialer = hub.dialer();
+        let mut transport = spec.wrap_transport(Box::new(hub));
+        let mut client = dialer.connect();
+        // The only pending connection is dropped on accept, so the
+        // accept call times out and the client sees a dead peer.
+        assert!(matches!(
+            transport.accept(Duration::from_millis(50)),
+            Err(ProtocolError::Timeout)
+        ));
+        assert!(matches!(
+            client.recv(Duration::from_millis(10)),
+            Err(ProtocolError::Closed)
+        ));
+    }
+}

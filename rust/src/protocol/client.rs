@@ -9,28 +9,49 @@
 //! [`Message::StartRound`] it computes each owned selected device and
 //! reports a [`Message::RoundResult`] per device. Between rounds it
 //! heartbeats so the coordinator can tell "slow" from "gone".
+//!
+//! Failure handling (DESIGN.md §Fault model):
+//! [`DeviceClient::run_with`] dials through a [`Dial`] factory and
+//! survives connection loss — it redials with capped exponential
+//! backoff (deterministically jittered from the run seed) and resumes
+//! through the rejoin handshake. Every computed [`RoundResult`] is
+//! cached for the duration of its round, so a reconnecting client
+//! *resends* byte-identical results instead of recomputing them — the
+//! device RNG advances exactly once per computed round no matter how
+//! many times the connection dies, which is what keeps a chaos-ridden
+//! run's trace bit-identical to a fault-free one. What is *not*
+//! supported is a client process that crashes and restarts from
+//! scratch mid-run: its rebuilt device state would re-advance RNG
+//! streams the run already consumed. Reconnection is same-process
+//! only; a restarted *coordinator* is fine (that state checkpoints).
 
 use super::messages::{Message, RoundResult};
-use super::transport::Connection;
+use super::transport::{Connection, Dial};
 use super::{CoordinatorState, ProtocolError, PROTOCOL_VERSION};
 use crate::algorithms::{Algorithm, ClientUpload, DeviceState};
 use crate::coordinator::RunConfig;
 use crate::hetero::CapacityMask;
 use crate::problems::{GradScratch, GradientSource};
 use crate::transport::wire;
+use crate::util::rng::Xoshiro256pp;
+use std::collections::BTreeSet;
 use std::ops::Range;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// How long the client waits for the coordinator's welcome after
-/// sending its rendezvous (the coordinator may be waiting on other
-/// clients before it answers anyone's round traffic, but welcomes are
-/// sent immediately).
+/// How long the client waits for the coordinator's welcome or rejoin
+/// ack after sending its hello (the coordinator may be waiting on
+/// other clients before it answers anyone's round traffic, but
+/// welcomes and acks are sent immediately).
 const WELCOME_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Receive slice while deliberately silent (failure-injection mode):
 /// short enough to notice the coordinator hanging up promptly.
 const SILENT_SLICE: Duration = Duration::from_millis(500);
+
+/// Stream id salt for the backoff jitter RNG (seeded from the run
+/// seed, keyed by attempt — no free-running stream).
+const BACKOFF_SALT: u64 = 0x00BA_C0FF;
 
 /// One owned device's replicated engine-side state and buffers.
 struct DeviceUnit {
@@ -39,6 +60,27 @@ struct DeviceUnit {
     grad_gathered: Vec<f32>,
     scratch: GradScratch,
     wire_buf: Vec<u8>,
+}
+
+/// The live state a client carries *across* connections: its identity,
+/// its device units (whose RNG streams must advance exactly once per
+/// computed round), the per-round result cache the rejoin handshake
+/// digests, and the resend hint from the last rejoin ack.
+struct ClientCore {
+    client_id: u32,
+    lo: usize,
+    units: Vec<DeviceUnit>,
+    /// Cached results for `cache_round`, indexed like `units`; resent
+    /// verbatim after a reconnect instead of recomputed.
+    cache: Vec<Option<RoundResult>>,
+    cache_round: Option<u32>,
+    /// Devices the coordinator said are already staged for
+    /// `hint_round` — must not be resent.
+    hint: BTreeSet<u32>,
+    hint_round: Option<u32>,
+    rounds_served: usize,
+    counted_round: Option<u32>,
+    silent: bool,
 }
 
 /// What a finished client run reports back to its caller.
@@ -52,7 +94,9 @@ pub struct ClientReport {
     pub rounds_served: usize,
 }
 
-/// A protocol client serving a range of devices over one connection.
+/// A protocol client serving a range of devices — over one fixed
+/// connection ([`DeviceClient::run`]) or resiliently through a dialer
+/// with reconnect/resume ([`DeviceClient::run_with`]).
 pub struct DeviceClient {
     problem: Arc<dyn GradientSource>,
     algo: Arc<dyn Algorithm>,
@@ -60,6 +104,10 @@ pub struct DeviceClient {
     masks: Vec<Arc<CapacityMask>>,
     heartbeat: Duration,
     silent_after: Option<usize>,
+    idle_timeout: Duration,
+    retry_max: u32,
+    retry_base: Duration,
+    retry_cap: Duration,
 }
 
 impl DeviceClient {
@@ -84,6 +132,10 @@ impl DeviceClient {
             masks,
             heartbeat: Duration::from_millis(200),
             silent_after: None,
+            idle_timeout: Duration::from_secs(30),
+            retry_max: 10,
+            retry_base: Duration::from_millis(50),
+            retry_cap: Duration::from_secs(2),
         }
     }
 
@@ -103,9 +155,38 @@ impl DeviceClient {
         self
     }
 
-    /// Rendezvous over `conn` and serve rounds until the coordinator
-    /// finishes (or hangs up).
-    pub fn run(&self, conn: &mut dyn Connection) -> Result<ClientReport, ProtocolError> {
+    /// Reconnect policy for [`DeviceClient::run_with`]: give up after
+    /// `max_attempts` consecutive failures; sleep an exponentially
+    /// growing backoff between attempts, starting at `base_ms` and
+    /// capped at `cap_ms`. Defaults: 10 attempts, 50 ms, 2 s.
+    pub fn reconnect(mut self, max_attempts: u32, base_ms: u64, cap_ms: u64) -> Self {
+        self.retry_max = max_attempts;
+        self.retry_base = Duration::from_millis(base_ms.max(1));
+        self.retry_cap = Duration::from_millis(cap_ms.max(base_ms.max(1)));
+        self
+    }
+
+    /// How long the coordinator may stay completely silent (no round
+    /// traffic, no heartbeat replies) before the connection is
+    /// declared dead and redialed. Default 30 s.
+    pub fn idle_timeout_ms(mut self, ms: u64) -> Self {
+        self.idle_timeout = Duration::from_millis(ms.max(1));
+        self
+    }
+
+    /// Backoff before reconnect attempt `attempt` (1-based): capped
+    /// exponential, jittered into `[0.5, 1.0]`× by a seed+attempt
+    /// keyed RNG stream so concurrent clients don't thundering-herd
+    /// yet every run schedules identically.
+    fn backoff(&self, attempt: u32) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16);
+        let raw = self.retry_base.saturating_mul(1 << exp).min(self.retry_cap);
+        let mut rng = Xoshiro256pp::stream(self.cfg.seed, BACKOFF_SALT ^ u64::from(attempt));
+        raw.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
+
+    /// Rendezvous on a fresh connection and build the per-device state.
+    fn hello(&self, conn: &mut dyn Connection) -> Result<ClientCore, ProtocolError> {
         conn.send(&Message::Rendezvous {
             version: PROTOCOL_VERSION,
             want: 0,
@@ -130,7 +211,7 @@ impl DeviceClient {
         // device phase.
         let d = self.problem.dim();
         let layout = self.problem.layout();
-        let mut units: Vec<DeviceUnit> = (lo..lo + count)
+        let units: Vec<DeviceUnit> = (lo..lo + count)
             .map(|i| {
                 let mask = self.masks[i].clone();
                 let sections = Arc::new(self.cfg.quant_sections.resolve(&layout, &mask));
@@ -143,79 +224,265 @@ impl DeviceClient {
                 }
             })
             .collect();
-
-        let mut report = ClientReport {
+        let cache = vec![None; count];
+        Ok(ClientCore {
             client_id: welcome.client_id,
-            devices: lo..lo + count,
+            lo,
+            units,
+            cache,
+            cache_round: None,
+            hint: BTreeSet::new(),
+            hint_round: None,
             rounds_served: 0,
-        };
-        let mut silent = false;
+            counted_round: None,
+            silent: false,
+        })
+    }
+
+    /// Reclaim this client's slot on a fresh connection: offer the XOR
+    /// fold of the cached result digests so the coordinator can dedupe
+    /// what already arrived, and record its staged-device hint.
+    fn rejoin(
+        &self,
+        core: &mut ClientCore,
+        conn: &mut dyn Connection,
+    ) -> Result<(), ProtocolError> {
+        let digest = core.cache.iter().flatten().fold(0u64, |acc, r| acc ^ r.digest());
+        conn.send(&Message::Rejoin {
+            client_id: core.client_id,
+            round: core.cache_round.unwrap_or(0),
+            result_digest: digest,
+        })?;
+        let deadline = Instant::now() + WELCOME_TIMEOUT;
         loop {
-            if silent {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ProtocolError::Timeout);
+            }
+            match conn.recv(remaining) {
+                Ok(Message::RejoinAck(ack)) => {
+                    if ack.client_id != core.client_id
+                        || ack.device_lo as usize != core.lo
+                        || ack.device_count as usize != core.units.len()
+                    {
+                        return Err(ProtocolError::Violation("rejoin ack names a different slot"));
+                    }
+                    core.hint_round = Some(ack.round);
+                    core.hint = ack.staged.into_iter().collect();
+                    return Ok(());
+                }
+                // Stale round traffic can precede the ack; skip it.
+                Ok(_) => {}
+                Err(ProtocolError::Timeout) => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Serve rounds on an established connection. `Ok(())` means the
+    /// coordinator announced `Finished`; any error means the
+    /// connection is unusable (the resilient path redials, the
+    /// single-connection path gives up).
+    fn serve_loop(
+        &self,
+        core: &mut ClientCore,
+        conn: &mut dyn Connection,
+    ) -> Result<(), ProtocolError> {
+        let d = self.problem.dim();
+        let mut last_rx = Instant::now();
+        loop {
+            if core.silent {
                 match conn.recv(SILENT_SLICE) {
                     Err(ProtocolError::Timeout) => continue,
-                    Err(_) => break,
+                    // Silent mode deliberately plays dead; treat any
+                    // hangup as the end of this client's run.
+                    Err(_) => return Ok(()),
                     Ok(Message::EndRound {
                         state: CoordinatorState::Finished,
                         ..
-                    }) => break,
+                    }) => return Ok(()),
                     Ok(_) => continue,
                 }
             }
             match conn.recv(self.heartbeat) {
-                Err(ProtocolError::Timeout) => conn.send(&Message::Heartbeat)?,
-                Err(ProtocolError::Closed) => break,
+                Err(ProtocolError::Timeout) => {
+                    if last_rx.elapsed() >= self.idle_timeout {
+                        return Err(ProtocolError::Timeout);
+                    }
+                    conn.send(&Message::Heartbeat)?;
+                }
                 Err(e) => return Err(e),
-                Ok(Message::StartRound(sr)) => {
-                    if sr.theta.len() != d {
-                        return Err(ProtocolError::Violation("broadcast model has wrong dim"));
-                    }
-                    for unit in units.iter_mut() {
-                        let i = unit.state.id;
-                        if !sr.ctx.is_selected(i) {
-                            continue;
+                Ok(msg) => {
+                    last_rx = Instant::now();
+                    match msg {
+                        Message::StartRound(sr) => {
+                            if sr.theta.len() != d {
+                                return Err(ProtocolError::Violation(
+                                    "broadcast model has wrong dim",
+                                ));
+                            }
+                            self.serve_round(core, conn, &sr)?;
                         }
-                        let loss = self.problem.local_grad(
-                            i,
-                            &sr.theta,
-                            &mut unit.grad_full,
-                            &mut unit.scratch,
-                        );
-                        unit.state.mask.gather(&unit.grad_full, &mut unit.grad_gathered);
-                        let ClientUpload { payload, level } =
-                            self.algo.client_step(&mut unit.state, &unit.grad_gathered, &sr.ctx);
-                        let bytes = payload.map(|p| {
-                            wire::encode_into(&p, &mut unit.wire_buf);
-                            unit.state.recycle(p);
-                            unit.wire_buf.clone()
-                        });
-                        conn.send(&Message::RoundResult(RoundResult {
-                            round: sr.ctx.round as u32,
-                            device: i as u32,
-                            loss,
-                            level,
-                            uploads: unit.state.uploads,
-                            skips: unit.state.skips,
-                            payload: bytes,
-                        }))?;
-                    }
-                    report.rounds_served += 1;
-                    if let Some(n) = self.silent_after {
-                        if report.rounds_served >= n {
-                            silent = true;
-                        }
+                        Message::EndRound {
+                            state: CoordinatorState::Finished,
+                            ..
+                        } => return Ok(()),
+                        Message::State(CoordinatorState::Finished) => return Ok(()),
+                        // Other traffic (heartbeat replies, non-final
+                        // end-rounds) carries no work.
+                        _ => {}
                     }
                 }
-                Ok(Message::EndRound {
-                    state: CoordinatorState::Finished,
-                    ..
-                }) => break,
-                Ok(Message::State(CoordinatorState::Finished)) => break,
-                // Other traffic (heartbeat replies, non-final
-                // end-rounds) carries no work.
-                Ok(_) => {}
             }
         }
-        Ok(report)
+    }
+
+    /// Compute-or-resend every owned selected device for one start
+    /// round. A round seen for the first time clears the cache and
+    /// computes (advancing device RNG streams); a replayed start round
+    /// — after a reconnect, or duplicated by a fault — resends the
+    /// cached bytes verbatim, minus whatever the rejoin ack said is
+    /// already staged.
+    fn serve_round(
+        &self,
+        core: &mut ClientCore,
+        conn: &mut dyn Connection,
+        sr: &super::messages::StartRound,
+    ) -> Result<(), ProtocolError> {
+        let k = sr.ctx.round as u32;
+        if core.cache_round != Some(k) {
+            core.cache_round = Some(k);
+            core.cache.iter_mut().for_each(|s| *s = None);
+        }
+        let hinted = core.hint_round == Some(k);
+        for idx in 0..core.units.len() {
+            let unit = &mut core.units[idx];
+            let i = unit.state.id;
+            if !sr.ctx.is_selected(i) {
+                continue;
+            }
+            if hinted && core.hint.contains(&(i as u32)) {
+                continue;
+            }
+            if core.cache[idx].is_none() {
+                let loss = self.problem.local_grad(
+                    i,
+                    &sr.theta,
+                    &mut unit.grad_full,
+                    &mut unit.scratch,
+                );
+                unit.state.mask.gather(&unit.grad_full, &mut unit.grad_gathered);
+                let ClientUpload { payload, level } =
+                    self.algo.client_step(&mut unit.state, &unit.grad_gathered, &sr.ctx);
+                let bytes = payload.map(|p| {
+                    wire::encode_into(&p, &mut unit.wire_buf);
+                    unit.state.recycle(p);
+                    unit.wire_buf.clone()
+                });
+                core.cache[idx] = Some(RoundResult {
+                    round: k,
+                    device: i as u32,
+                    loss,
+                    level,
+                    uploads: unit.state.uploads,
+                    skips: unit.state.skips,
+                    payload: bytes,
+                });
+            }
+            let r = core.cache[idx].clone().expect("just cached");
+            conn.send(&Message::RoundResult(r))?;
+        }
+        if core.counted_round != Some(k) {
+            core.counted_round = Some(k);
+            core.rounds_served += 1;
+        }
+        if let Some(n) = self.silent_after {
+            if core.rounds_served >= n {
+                core.silent = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the report for whatever `core` has served so far.
+    fn report(core: &ClientCore) -> ClientReport {
+        ClientReport {
+            client_id: core.client_id,
+            devices: core.lo..core.lo + core.units.len(),
+            rounds_served: core.rounds_served,
+        }
+    }
+
+    /// Rendezvous over one fixed `conn` and serve rounds until the
+    /// coordinator finishes (or hangs up). No reconnection: a dead
+    /// connection ends the run (cleanly, as legacy callers expect).
+    pub fn run(&self, conn: &mut dyn Connection) -> Result<ClientReport, ProtocolError> {
+        let mut core = self.hello(conn)?;
+        match self.serve_loop(&mut core, conn) {
+            Ok(()) | Err(ProtocolError::Closed) => Ok(Self::report(&core)),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Serve resiliently through `dial`: every connection loss —
+    /// including the very first dial finding nobody listening — is
+    /// retried with capped exponential backoff, and each new
+    /// connection resumes via the rejoin handshake. Returns once the
+    /// coordinator announces the run finished, or with the last error
+    /// after `retry_max` consecutive failures. Protocol violations
+    /// (config mismatch, foreign ack) are never retried.
+    pub fn run_with(&self, dial: &dyn Dial) -> Result<ClientReport, ProtocolError> {
+        let mut core: Option<ClientCore> = None;
+        let mut failures: u32 = 0;
+        loop {
+            let mut conn = match dial.dial() {
+                Ok(c) => c,
+                Err(e) => {
+                    failures += 1;
+                    if failures >= self.retry_max {
+                        return Err(e);
+                    }
+                    std::thread::sleep(self.backoff(failures));
+                    continue;
+                }
+            };
+            let admitted = if let Some(c) = core.as_mut() {
+                self.rejoin(c, conn.as_mut())
+            } else {
+                match self.hello(conn.as_mut()) {
+                    Ok(c) => {
+                        core = Some(c);
+                        Ok(())
+                    }
+                    Err(e) => Err(e),
+                }
+            };
+            if let Err(e) = admitted {
+                if matches!(e, ProtocolError::Violation(_)) {
+                    return Err(e);
+                }
+                failures += 1;
+                if failures >= self.retry_max {
+                    return Err(e);
+                }
+                std::thread::sleep(self.backoff(failures));
+                continue;
+            }
+            failures = 0;
+            let c = core.as_mut().expect("admission populated the core");
+            match self.serve_loop(c, conn.as_mut()) {
+                Ok(()) => return Ok(Self::report(c)),
+                Err(e) => {
+                    if matches!(e, ProtocolError::Violation(_)) {
+                        return Err(e);
+                    }
+                    failures += 1;
+                    if failures >= self.retry_max {
+                        return Err(e);
+                    }
+                    std::thread::sleep(self.backoff(failures));
+                }
+            }
+        }
     }
 }

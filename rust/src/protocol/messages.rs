@@ -1,8 +1,9 @@
 //! The protocol message set and its byte codec.
 //!
 //! Client → coordinator: [`Message::Rendezvous`], [`Message::Heartbeat`],
-//! [`Message::RoundResult`]. Coordinator → client: [`Message::Welcome`],
-//! [`Message::State`], [`Message::StartRound`], [`Message::EndRound`].
+//! [`Message::RoundResult`], [`Message::Rejoin`]. Coordinator → client:
+//! [`Message::Welcome`], [`Message::State`], [`Message::StartRound`],
+//! [`Message::EndRound`], [`Message::RejoinAck`].
 //!
 //! Every numeric field is little-endian and floats travel as raw IEEE
 //! bit patterns (`to_le_bytes`/`from_le_bytes`), so a decoded
@@ -25,6 +26,8 @@ pub mod kind {
     pub const HEARTBEAT: u8 = 0x02;
     /// [`super::Message::RoundResult`].
     pub const ROUND_RESULT: u8 = 0x03;
+    /// [`super::Message::Rejoin`].
+    pub const REJOIN: u8 = 0x04;
     /// [`super::Message::Welcome`].
     pub const WELCOME: u8 = 0x11;
     /// [`super::Message::State`].
@@ -33,6 +36,8 @@ pub mod kind {
     pub const START_ROUND: u8 = 0x13;
     /// [`super::Message::EndRound`].
     pub const END_ROUND: u8 = 0x14;
+    /// [`super::Message::RejoinAck`].
+    pub const REJOIN_ACK: u8 = 0x15;
 }
 
 /// The coordinator's reply to a successful rendezvous: which devices
@@ -87,6 +92,63 @@ pub struct RoundResult {
     pub payload: Option<Vec<u8>>,
 }
 
+impl RoundResult {
+    /// Content digest (FNV-1a 64 over the encoded body) used by the
+    /// rejoin handshake: a reconnecting client XOR-folds the digests of
+    /// its cached results so the coordinator can tell whether what it
+    /// already staged matches what the client would resend. XOR makes
+    /// the fold order-independent, matching the per-device staging
+    /// model where arrival order never matters.
+    pub fn digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        // Same canonical field order as `encode_body`, so the digest is
+        // a pure function of the bytes that travel.
+        eat(&self.round.to_le_bytes());
+        eat(&self.device.to_le_bytes());
+        eat(&self.loss.to_le_bytes());
+        eat(&[u8::from(self.level.is_some()), self.level.unwrap_or(0)]);
+        eat(&self.uploads.to_le_bytes());
+        eat(&self.skips.to_le_bytes());
+        match &self.payload {
+            Some(bytes) => {
+                eat(&[1]);
+                eat(&(bytes.len() as u32).to_le_bytes());
+                eat(bytes);
+            }
+            None => eat(&[0]),
+        }
+        h
+    }
+}
+
+/// The coordinator's reply to a [`Message::Rejoin`]: the range the
+/// client holds, the round the run is currently in, and which of the
+/// client's devices already have a staged result this round (so the
+/// client resends only what is missing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RejoinAck {
+    /// The client index being re-admitted (echoes the rejoin).
+    pub client_id: u32,
+    /// First device id in the client's contiguous range.
+    pub device_lo: u32,
+    /// Number of devices in the range.
+    pub device_count: u32,
+    /// The coordinator's current round (the horizon `K` itself when
+    /// the run already finished).
+    pub round: u32,
+    /// Device ids in the client's range whose round results are
+    /// already staged for `round`; the client must not resend these.
+    pub staged: Vec<u32>,
+}
+
 /// One protocol message (see the module docs for direction and flow).
 #[derive(Clone, Debug)]
 pub enum Message {
@@ -101,6 +163,20 @@ pub enum Message {
     Heartbeat,
     /// Per-device round outcome.
     RoundResult(RoundResult),
+    /// Reconnect hello: a client that already holds live device state
+    /// for this run reclaims its range and offers a digest of the
+    /// results it cached for `round`, so the coordinator can dedupe
+    /// replays instead of double-counting.
+    Rejoin {
+        /// The client index originally assigned by [`Welcome`].
+        client_id: u32,
+        /// The round the client's cached results belong to (0 when it
+        /// has none).
+        round: u32,
+        /// XOR fold of [`RoundResult::digest`] over the cached
+        /// results (0 when none).
+        result_digest: u64,
+    },
     /// Rendezvous accepted; device range assigned.
     Welcome(Welcome),
     /// Heartbeat reply carrying the coordinator state.
@@ -116,6 +192,9 @@ pub enum Message {
         /// State the coordinator moves to.
         state: CoordinatorState,
     },
+    /// Rejoin accepted; tells the client where the run is and what it
+    /// must not resend.
+    RejoinAck(RejoinAck),
 }
 
 impl Message {
@@ -125,10 +204,12 @@ impl Message {
             Message::Rendezvous { .. } => kind::RENDEZVOUS,
             Message::Heartbeat => kind::HEARTBEAT,
             Message::RoundResult(_) => kind::ROUND_RESULT,
+            Message::Rejoin { .. } => kind::REJOIN,
             Message::Welcome(_) => kind::WELCOME,
             Message::State(_) => kind::STATE,
             Message::StartRound(_) => kind::START_ROUND,
             Message::EndRound { .. } => kind::END_ROUND,
+            Message::RejoinAck(_) => kind::REJOIN_ACK,
         }
     }
 
@@ -158,6 +239,15 @@ impl Message {
                     }
                     None => out.push(0),
                 }
+            }
+            Message::Rejoin {
+                client_id,
+                round,
+                result_digest,
+            } => {
+                out.extend_from_slice(&client_id.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&result_digest.to_le_bytes());
             }
             Message::Welcome(w) => {
                 out.extend_from_slice(&w.client_id.to_le_bytes());
@@ -204,6 +294,16 @@ impl Message {
                 out.extend_from_slice(&train_loss.to_le_bytes());
                 encode_state(*state, out);
             }
+            Message::RejoinAck(a) => {
+                out.extend_from_slice(&a.client_id.to_le_bytes());
+                out.extend_from_slice(&a.device_lo.to_le_bytes());
+                out.extend_from_slice(&a.device_count.to_le_bytes());
+                out.extend_from_slice(&a.round.to_le_bytes());
+                out.extend_from_slice(&(a.staged.len() as u32).to_le_bytes());
+                for &d in &a.staged {
+                    out.extend_from_slice(&d.to_le_bytes());
+                }
+            }
         }
     }
 
@@ -249,6 +349,11 @@ impl Message {
                     payload,
                 })
             }
+            kind::REJOIN => Message::Rejoin {
+                client_id: r.u32()?,
+                round: r.u32()?,
+                result_digest: r.u64()?,
+            },
             kind::WELCOME => Message::Welcome(Welcome {
                 client_id: r.u32()?,
                 device_lo: r.u32()?,
@@ -313,6 +418,24 @@ impl Message {
                 train_loss: r.f64()?,
                 state: decode_state(&mut r)?,
             },
+            kind::REJOIN_ACK => {
+                let client_id = r.u32()?;
+                let device_lo = r.u32()?;
+                let device_count = r.u32()?;
+                let round = r.u32()?;
+                let n = r.checked_len("staged list")?;
+                let mut staged = Vec::with_capacity(n);
+                for _ in 0..n {
+                    staged.push(r.u32()?);
+                }
+                Message::RejoinAck(RejoinAck {
+                    client_id,
+                    device_lo,
+                    device_count,
+                    round,
+                    staged,
+                })
+            }
             other => return Err(ProtocolError::UnknownKind(other)),
         };
         if r.remaining() != 0 {
@@ -550,6 +673,8 @@ mod tests {
             kind::STATE,
             kind::START_ROUND,
             kind::END_ROUND,
+            kind::REJOIN,
+            kind::REJOIN_ACK,
             0x00,
             0x7F,
             0xFF,
@@ -561,6 +686,63 @@ mod tests {
                 let _ = Message::decode(k, &body);
             }
         }
+    }
+
+    #[test]
+    fn rejoin_round_trips() {
+        match round_trip(&Message::Rejoin {
+            client_id: 2,
+            round: 5,
+            result_digest: 0xDEAD_BEEF_0123_4567,
+        }) {
+            Message::Rejoin {
+                client_id,
+                round,
+                result_digest,
+            } => {
+                assert_eq!(
+                    (client_id, round, result_digest),
+                    (2, 5, 0xDEAD_BEEF_0123_4567)
+                );
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        let ack = RejoinAck {
+            client_id: 1,
+            device_lo: 2,
+            device_count: 2,
+            round: 7,
+            staged: vec![2, 3],
+        };
+        match round_trip(&Message::RejoinAck(ack.clone())) {
+            Message::RejoinAck(got) => assert_eq!(got, ack),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn digest_tracks_content_and_is_order_free_under_xor() {
+        let base = RoundResult {
+            round: 3,
+            device: 7,
+            loss: 0.125,
+            level: Some(4),
+            uploads: 2,
+            skips: 1,
+            payload: None,
+        };
+        let mut other = base.clone();
+        other.device = 8;
+        assert_eq!(base.digest(), base.clone().digest());
+        assert_ne!(base.digest(), other.digest(), "digest sees the device id");
+        let mut tweaked = base.clone();
+        tweaked.loss = 0.25;
+        assert_ne!(base.digest(), tweaked.digest(), "digest sees the loss bits");
+        // XOR-fold is arrival-order independent, like staging itself.
+        let digests = [base.digest(), other.digest(), tweaked.digest()];
+        let fwd = digests.iter().fold(0u64, |acc, d| acc ^ d);
+        let rev = digests.iter().rev().fold(0u64, |acc, d| acc ^ d);
+        assert_eq!(fwd, rev, "xor fold ignores arrival order");
     }
 
     #[test]

@@ -29,24 +29,41 @@
 //! results are staged into per-device slots and folded in device-id
 //! order, and every `RoundCtx` field round-trips losslessly through
 //! the start-round broadcast.
+//!
+//! Failure is a first-class condition (DESIGN.md §Fault model): the
+//! [`chaos`] decorators inject deterministic seed-keyed faults into
+//! any transport, clients reconnect with capped exponential backoff
+//! and resume mid-round through the rejoin handshake
+//! ([`Message::Rejoin`] / [`messages::RejoinAck`]) without
+//! double-counting (per-round staged-result digests dedupe replays,
+//! and a dying client's half-round staging is cleared), and the
+//! coordinator checkpoints serve-state each round so a killed process
+//! restarted with `--serve --resume` re-enters `Round(n)` with the
+//! trace still bit-identical to an uninterrupted run.
 
 use crate::transport::wire::WireError;
 
+pub mod chaos;
 pub mod client;
 pub mod frame;
 pub mod messages;
 pub mod service;
 pub mod transport;
 
+pub use chaos::{ChaosConnection, ChaosDialer, ChaosSpec, ChaosTransport};
 pub use client::{ClientReport, DeviceClient};
 pub use frame::Frame;
 pub use messages::Message;
 pub use service::CoordinatorService;
-pub use transport::{Connection, LoopbackHub, TcpConnection, TcpTransport, Transport};
+pub use transport::{
+    Connection, Dial, LoopbackDialer, LoopbackHub, TcpConnection, TcpDialer, TcpTransport,
+    Transport,
+};
 
 /// Protocol revision carried in every rendezvous; bumped on any frame
-/// or message layout change.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// or message layout change. Version 2 adds the rejoin/rejoin-ack
+/// reconnection handshake.
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// Typed failure for every protocol layer — framing, message codec,
 /// transport i/o, and state machine — composing with the wire codec's

@@ -16,98 +16,468 @@
 //! [`crate::transport::scenario::StragglerPolicy`]: `AdmitLate` grants
 //! one extra heartbeat window past the round deadline, `Drop` does not.
 //!
+//! Failure is recoverable, not just tolerated (DESIGN.md §Fault
+//! model). While any slot is dead the service polls `accept` for
+//! reconnecting clients; a [`Message::Rejoin`] mid-round reclaims the
+//! client's slot, and the per-round digest book decides whether what
+//! is already staged matches what the client would resend (keep it)
+//! or must be unstaged and collected again (resync) — either way no
+//! result is ever folded twice. A client that dies mid-round has its
+//! staged partial uploads cleared on retirement, so a later rejoin
+//! cannot leave a stale half-round in the fold. With
+//! [`CoordinatorService::checkpoint_to`] the service stamps its
+//! serve-state onto periodic engine snapshots; a killed coordinator
+//! restarted with [`CoordinatorService::resume_from`] re-enters
+//! `Round(n)` and waiting clients rejoin in standby.
+//!
 //! Determinism: results are staged per device id and folded in device
 //! order by the engine, so message arrival order, client count, and
 //! transport choice cannot perturb the trace (see the module docs of
-//! [`crate::protocol`]).
+//! [`crate::protocol`]). Rejoined clients resend byte-identical cached
+//! results, so reconnection preserves the guarantee.
 
-use super::messages::{Message, RoundResult, StartRound, Welcome};
+use super::messages::{Message, RejoinAck, RoundResult, StartRound, Welcome};
 use super::transport::{Connection, Transport};
 use super::{CoordinatorState, ProtocolError, ServeSpec, PROTOCOL_VERSION};
+use crate::coordinator::checkpoint::{Checkpoint, ServeState};
 use crate::coordinator::engine::RoundEngine;
 use crate::coordinator::{Session, SessionParts};
 use crate::metrics::RunTrace;
 use crate::transport::scenario::StragglerPolicy;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::ops::Range;
+use std::path::PathBuf;
 use std::sync::mpsc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One connected client: the writer half of its connection plus the
-/// contiguous device range it computes. (The reader half lives in a
-/// per-client thread feeding the service's event queue.)
+/// Accept-poll slice while a round is degraded (at least one dead
+/// slot) and during standby, so heartbeats keep being answered between
+/// polls.
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+
+/// Accept-poll slice inside the round collect loop — short, because
+/// pending results should keep draining while we watch for rejoiners.
+const REJOIN_POLL: Duration = Duration::from_millis(5);
+
+/// Event-queue wait slice while a round is degraded; bounds how long a
+/// freshly dialed rejoiner waits before the next accept poll.
+const EVENT_POLL: Duration = Duration::from_millis(20);
+
+/// Budget for a freshly accepted connection to identify itself
+/// (rendezvous or rejoin) before it is dropped.
+const HELLO_WINDOW: Duration = Duration::from_millis(1_000);
+
+/// One client slot: the writer half of its current connection (if
+/// any) plus the contiguous device range it computes. (The reader half
+/// lives in a per-connection thread feeding the service's event
+/// queue.) `gen` counts installed connections so events from a
+/// superseded reader thread can be told apart from the current one.
 struct ClientSlot {
-    conn: Box<dyn Connection>,
+    conn: Option<Box<dyn Connection>>,
     devices: Range<usize>,
     alive: bool,
+    gen: u64,
 }
 
-/// What the per-client reader threads feed the service loop.
+impl ClientSlot {
+    /// Send on the live connection; `false` when there is none or the
+    /// send fails (the caller retires the slot).
+    fn send(&mut self, msg: &Message) -> bool {
+        match &mut self.conn {
+            Some(conn) => conn.send(msg).is_ok(),
+            None => false,
+        }
+    }
+}
+
+/// What the per-connection reader threads feed the service loop.
 enum Event {
     /// A message from client `client_id`.
     Msg(usize, Message),
-    /// The client's reader saw an error or heartbeat-window silence.
-    Dead(usize),
+    /// The reader of connection generation `gen` saw an error or
+    /// heartbeat-window silence.
+    Dead(usize, u64),
 }
 
-/// Mark a client dead and move its still-pending devices to the
-/// round's missing count.
-fn retire(c: &mut ClientSlot, pending: &mut BTreeSet<usize>, missing: &mut usize) {
+/// Everything one round's collection tracks: which selected devices
+/// still owe a result, which are currently unreachable (owner dead,
+/// waiting for a rejoin), and the digest of every result staged so far
+/// (the replay-dedup ledger the rejoin handshake checks against).
+struct RoundBook {
+    round: usize,
+    pending: BTreeSet<usize>,
+    lost: BTreeSet<usize>,
+    staged: BTreeMap<usize, u64>,
+}
+
+/// Shared wiring every admission path needs: the event channel, the
+/// reader-thread handles, and the reader liveness window.
+struct Wiring<'a> {
+    tx: &'a mpsc::Sender<Event>,
+    readers: &'a mut Vec<JoinHandle<()>>,
+    hb_timeout: Duration,
+}
+
+/// What standby tells a fresh client about the run.
+struct HelloInfo {
+    num_devices: usize,
+    rounds: usize,
+    seed: u64,
+    start_round: usize,
+}
+
+/// Mark a client dead and release its connection. With a round book,
+/// its pending devices move to `lost` (a rejoin can still rescue them
+/// before the deadline) and its already-staged partial results are
+/// cleared from the engine — a dead client's half-round must never
+/// linger in the fold, or a later rejoin would double-count.
+fn retire(c: &mut ClientSlot, engine: &mut RoundEngine, book: Option<&mut RoundBook>) {
     if !c.alive {
         return;
     }
     c.alive = false;
+    c.conn = None;
+    let Some(book) = book else { return };
     for d in c.devices.clone() {
-        if pending.remove(&d) {
-            *missing += 1;
+        if book.pending.remove(&d) {
+            book.lost.insert(d);
+        }
+        if book.staged.remove(&d).is_some() {
+            engine.unstage(d);
+            book.lost.insert(d);
         }
     }
 }
 
-/// Complete one rendezvous on a fresh connection: tolerate heartbeats,
-/// require a version-matched [`Message::Rendezvous`], answer with
-/// `welcome`. Returns `false` (drop the connection, do not consume the
-/// device range) on anything else.
-fn handshake(
-    conn: &mut dyn Connection,
-    welcome: &Welcome,
-    deadline: Instant,
-    step: Duration,
-) -> bool {
-    loop {
+/// Install a fresh connection into a slot: bump the generation, spawn
+/// its reader thread, and mark the slot alive.
+fn install(
+    c: &mut ClientSlot,
+    ci: usize,
+    conn: Box<dyn Connection>,
+    w: &mut Wiring<'_>,
+) -> Result<(), ProtocolError> {
+    let mut rd = conn.try_clone()?;
+    c.gen += 1;
+    let gen = c.gen;
+    let tx = w.tx.clone();
+    let hb_timeout = w.hb_timeout;
+    w.readers.push(std::thread::spawn(move || loop {
+        match rd.recv(hb_timeout) {
+            Ok(msg) => {
+                if tx.send(Event::Msg(ci, msg)).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(Event::Dead(ci, gen));
+                return;
+            }
+        }
+    }));
+    c.conn = Some(conn);
+    c.alive = true;
+    Ok(())
+}
+
+/// Stage one remote result if it belongs to this round, to the sending
+/// client's device range, and is still owed (a misbehaving client
+/// cannot write outside its assignment, replay an old round, or
+/// double-report a device). The digest of what was folded is recorded
+/// for the rejoin handshake.
+fn stage(engine: &mut RoundEngine, devices: &Range<usize>, book: &mut RoundBook, r: RoundResult) {
+    let d = r.device as usize;
+    if r.round as usize != book.round || !devices.contains(&d) || !book.pending.remove(&d) {
+        return;
+    }
+    let digest = r.digest();
+    if engine.stage_remote(d, r.loss, r.level, r.payload.as_deref(), (r.uploads, r.skips)) {
+        book.staged.insert(d, digest);
+    }
+}
+
+/// Fold one reader-thread event into the current round.
+fn handle_event(
+    ev: Event,
+    clients: &mut [ClientSlot],
+    engine: &mut RoundEngine,
+    book: &mut RoundBook,
+) {
+    match ev {
+        Event::Dead(ci, gen) => {
+            if clients[ci].gen == gen {
+                retire(&mut clients[ci], engine, Some(book));
+            }
+        }
+        Event::Msg(ci, Message::Heartbeat) => {
+            let state = Message::State(CoordinatorState::Round(book.round as u32));
+            let c = &mut clients[ci];
+            if c.alive && !c.send(&state) {
+                retire(c, engine, Some(book));
+            }
+        }
+        Event::Msg(ci, Message::RoundResult(r)) => {
+            stage(engine, &clients[ci].devices, book, r);
+        }
+        // Anything else out of order (a late rendezvous, a stale
+        // result, a rejoin on an established connection) is ignored.
+        Event::Msg(..) => {}
+    }
+}
+
+/// Complete one standby admission on a fresh connection: tolerate
+/// heartbeats, then either welcome a version-matched rendezvous into
+/// the lowest free slot or re-admit a rejoining client into the slot
+/// it names (a resumed coordinator's standby is all rejoins). Anything
+/// else drops the connection without consuming a slot.
+fn admit_standby(
+    mut conn: Box<dyn Connection>,
+    clients: &mut [ClientSlot],
+    hello: &HelloInfo,
+    w: &mut Wiring<'_>,
+) {
+    let deadline = Instant::now() + HELLO_WINDOW;
+    let claim = loop {
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
-            return false;
+            return;
         }
-        match conn.recv(remaining.min(step)) {
+        match conn.recv(remaining) {
             Ok(Message::Heartbeat) => {
                 if conn.send(&Message::State(CoordinatorState::Standby)).is_err() {
-                    return false;
+                    return;
                 }
             }
             Ok(Message::Rendezvous { version, .. }) => {
-                return version == PROTOCOL_VERSION
-                    && conn.send(&Message::Welcome(welcome.clone())).is_ok();
+                if version != PROTOCOL_VERSION {
+                    return;
+                }
+                break None;
             }
-            Ok(_) => return false,
+            Ok(Message::Rejoin { client_id, .. }) => break Some(client_id as usize),
             Err(ProtocolError::Timeout) => {}
-            Err(_) => return false,
+            Ok(_) | Err(_) => return,
+        }
+    };
+    let ci = match claim {
+        Some(id) if id < clients.len() => id,
+        Some(_) => return,
+        None => match clients.iter().position(|c| !c.alive) {
+            Some(id) => id,
+            None => return,
+        },
+    };
+    let c = &mut clients[ci];
+    let reply = match claim {
+        None => Message::Welcome(Welcome {
+            client_id: ci as u32,
+            device_lo: c.devices.start as u32,
+            device_count: c.devices.len() as u32,
+            num_devices: hello.num_devices as u32,
+            rounds: hello.rounds as u32,
+            seed: hello.seed,
+        }),
+        // Nothing is staged in standby: the client resends its cached
+        // results (byte-identical) once the round starts.
+        Some(_) => Message::RejoinAck(RejoinAck {
+            client_id: ci as u32,
+            device_lo: c.devices.start as u32,
+            device_count: c.devices.len() as u32,
+            round: hello.start_round as u32,
+            staged: Vec::new(),
+        }),
+    };
+    if conn.send(&reply).is_err() {
+        return;
+    }
+    // Supersede any half-dead previous connection: the old reader's
+    // events carry a stale generation and are ignored.
+    c.alive = false;
+    c.conn = None;
+    let _ = install(c, ci, conn, w);
+}
+
+/// Admit a mid-round reconnection. The client offers the XOR fold of
+/// its cached result digests; if it matches what this round already
+/// staged from its range, the staging is kept and the ack lists those
+/// devices so the client skips resending them. On any mismatch (stale
+/// round, partial arrival) the range is unstaged and collected afresh
+/// — the client resends byte-identical cached results, so either path
+/// folds the same bytes exactly once. The current start-round message
+/// is replayed after the ack so a client that never saw it can begin.
+fn admit_rejoin(
+    mut conn: Box<dyn Connection>,
+    clients: &mut [ClientSlot],
+    engine: &mut RoundEngine,
+    book: &mut RoundBook,
+    start: &Message,
+    w: &mut Wiring<'_>,
+) {
+    let state_now = Message::State(CoordinatorState::Round(book.round as u32));
+    let deadline = Instant::now() + HELLO_WINDOW;
+    let (client_id, round, digest) = loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return;
+        }
+        match conn.recv(remaining) {
+            Ok(Message::Heartbeat) => {
+                if conn.send(&state_now).is_err() {
+                    return;
+                }
+            }
+            Ok(Message::Rejoin {
+                client_id,
+                round,
+                result_digest,
+            }) => break (client_id as usize, round as usize, result_digest),
+            Err(ProtocolError::Timeout) => {}
+            // A fresh mid-run rendezvous (or garbage) cannot join an
+            // in-flight run; drop it.
+            Ok(_) | Err(_) => return,
+        }
+    };
+    if client_id >= clients.len() {
+        return;
+    }
+    let range = clients[client_id].devices.clone();
+    let mut staged_in_range = Vec::new();
+    let mut server_digest = 0u64;
+    for (&d, &h) in book.staged.range(range.clone()) {
+        staged_in_range.push(d);
+        server_digest ^= h;
+    }
+    let replay_safe = round == book.round && digest == server_digest;
+    let ack = Message::RejoinAck(RejoinAck {
+        client_id: client_id as u32,
+        device_lo: range.start as u32,
+        device_count: range.len() as u32,
+        round: book.round as u32,
+        staged: if replay_safe {
+            staged_in_range.iter().map(|&d| d as u32).collect()
+        } else {
+            Vec::new()
+        },
+    });
+    if conn.send(&ack).is_err() || conn.send(start).is_err() {
+        return;
+    }
+    let c = &mut clients[client_id];
+    c.alive = false;
+    c.conn = None;
+    if !replay_safe {
+        for d in staged_in_range {
+            book.staged.remove(&d);
+            engine.unstage(d);
+            book.pending.insert(d);
+        }
+    }
+    for d in range {
+        if book.lost.remove(&d) {
+            book.pending.insert(d);
+        }
+    }
+    let _ = install(c, client_id, conn, w);
+}
+
+/// Answer a connection that dials in after the horizon completed: a
+/// rejoining client is told the run is over (ack round = the horizon
+/// itself) and handed the final end-round notice, so a client that
+/// lost the original `Finished` broadcast to a fault still terminates
+/// cleanly instead of redialing forever.
+fn farewell(mut conn: Box<dyn Connection>, clients: &[ClientSlot], rounds: usize, last_loss: f64) {
+    let deadline = Instant::now() + HELLO_WINDOW;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return;
+        }
+        match conn.recv(remaining) {
+            Ok(Message::Heartbeat) => {
+                if conn.send(&Message::State(CoordinatorState::Finished)).is_err() {
+                    return;
+                }
+            }
+            Ok(Message::Rejoin { client_id, .. }) => {
+                let Some(c) = clients.get(client_id as usize) else {
+                    return;
+                };
+                let ack = Message::RejoinAck(RejoinAck {
+                    client_id,
+                    device_lo: c.devices.start as u32,
+                    device_count: c.devices.len() as u32,
+                    round: rounds as u32,
+                    staged: Vec::new(),
+                });
+                let end = Message::EndRound {
+                    round: rounds.saturating_sub(1) as u32,
+                    train_loss: last_loss,
+                    state: CoordinatorState::Finished,
+                };
+                let _ = conn.send(&ack).and_then(|_| conn.send(&end));
+                return;
+            }
+            Err(ProtocolError::Timeout) => {}
+            Ok(_) | Err(_) => return,
         }
     }
 }
 
 /// A [`Session`] served over a transport: the remote counterpart of
 /// [`Session::run`], producing the identical [`RunTrace`] for the same
-/// seed and configuration.
+/// seed and configuration — including under injected faults, as long
+/// as every disconnected client rejoins before the round deadline.
 pub struct CoordinatorService {
     session: Session,
     serve: ServeSpec,
+    checkpoint: Option<(PathBuf, usize)>,
+    halt_after: Option<usize>,
+    start_round: usize,
 }
 
 impl CoordinatorService {
     /// Wrap a built session in the service front-end.
     pub fn new(session: Session, serve: ServeSpec) -> Self {
-        Self { session, serve }
+        Self {
+            session,
+            serve,
+            checkpoint: None,
+            halt_after: None,
+            start_round: 0,
+        }
+    }
+
+    /// Write a checkpoint (engine snapshot + serve-state) to `path`
+    /// every `every` rounds and after the final one, so a killed
+    /// coordinator can be restarted with `--serve --resume`.
+    pub fn checkpoint_to(mut self, path: impl Into<PathBuf>, every: usize) -> Self {
+        self.checkpoint = Some((path.into(), every.max(1)));
+        self
+    }
+
+    /// Test hook: return from [`CoordinatorService::run`] right after
+    /// checkpointing round `round`, *without* the end-round broadcast
+    /// or run-end teardown — the observable behavior of a coordinator
+    /// killed at that point. Clients see their connections close and
+    /// enter their reconnect loops.
+    pub fn halt_after_round(mut self, round: usize) -> Self {
+        self.halt_after = Some(round);
+        self
+    }
+
+    /// Restore a checkpoint produced by a previous serve run: the
+    /// engine state is restored, the run re-enters the recorded round,
+    /// and the serve-state (client count, hence device ranges) is
+    /// adopted so rejoining clients land in their original slots.
+    /// Returns the round the resumed run starts at.
+    pub fn resume_from(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
+        let next = self.session.restore(ckpt)?;
+        self.start_round = next;
+        if let Some(ss) = &ckpt.serve_state {
+            self.serve.clients = ss.clients;
+        }
+        Ok(next)
     }
 
     /// The serve configuration this service runs under.
@@ -121,66 +491,85 @@ impl CoordinatorService {
     }
 
     /// Drive the full run over `transport`. Blocks until the horizon
-    /// completes (or standby times out) and returns the trace.
+    /// completes (or standby times out) and returns the trace (only
+    /// the rounds executed by this call when resuming).
     ///
     /// Client failures after rendezvous never abort the run: a dead
-    /// client's devices simply stop reporting and are folded as skips,
-    /// counted as stragglers. Only transport-level failures during
+    /// client's devices stop reporting and are folded as skips and
+    /// counted as stragglers — unless the client rejoins before the
+    /// round deadline, in which case the round completes as if the
+    /// fault never happened. Only transport-level failures during
     /// standby (nobody claims a device range in time) are errors.
     pub fn run(&mut self, transport: &mut dyn Transport) -> Result<RunTrace, ProtocolError> {
         let meta = self.session.meta();
         let rounds = meta.rounds;
-        let m = self.session.parts().engine.num_devices();
         let seed = self.session.config().seed;
+        let start_round = self.start_round;
         let n_clients = self.serve.clients.max(1);
         let hb_timeout = Duration::from_millis(self.serve.heartbeat_timeout_ms.max(1));
         let round_timeout = Duration::from_millis(self.serve.round_timeout_ms.max(1));
         let accept_timeout = Duration::from_millis(self.serve.accept_timeout_ms.max(1));
 
+        let SessionParts {
+            engine,
+            problem,
+            algo,
+            strategy,
+            observers,
+        } = self.session.parts();
+        let m = engine.num_devices();
+        let hello = HelloInfo {
+            num_devices: m,
+            rounds,
+            seed,
+            start_round,
+        };
+
         // ---- standby: accept until every device range is claimed ----
         let (tx, events) = mpsc::channel::<Event>();
-        let mut clients: Vec<ClientSlot> = Vec::with_capacity(n_clients);
-        let mut readers = Vec::with_capacity(n_clients);
+        let mut readers: Vec<JoinHandle<()>> = Vec::new();
+        let mut wiring = Wiring {
+            tx: &tx,
+            readers: &mut readers,
+            hb_timeout,
+        };
+        let mut clients: Vec<ClientSlot> = (0..n_clients)
+            .map(|id| ClientSlot {
+                conn: None,
+                devices: id * m / n_clients..(id + 1) * m / n_clients,
+                alive: false,
+                gen: 0,
+            })
+            .collect();
         let deadline = Instant::now() + accept_timeout;
-        while clients.len() < n_clients {
+        while clients.iter().any(|c| !c.alive) {
+            // Keep answering heartbeats of already-admitted clients so
+            // they do not give up on a slow standby.
+            while let Ok(ev) = events.try_recv() {
+                match ev {
+                    Event::Dead(ci, gen) => {
+                        if clients[ci].gen == gen {
+                            retire(&mut clients[ci], engine, None);
+                        }
+                    }
+                    Event::Msg(ci, Message::Heartbeat) => {
+                        let c = &mut clients[ci];
+                        if c.alive && !c.send(&Message::State(CoordinatorState::Standby)) {
+                            retire(c, engine, None);
+                        }
+                    }
+                    Event::Msg(..) => {}
+                }
+            }
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 return Err(ProtocolError::Timeout);
             }
-            let mut conn = transport.accept(remaining)?;
-            let id = clients.len();
-            let devices = id * m / n_clients..(id + 1) * m / n_clients;
-            let welcome = Welcome {
-                client_id: id as u32,
-                device_lo: devices.start as u32,
-                device_count: devices.len() as u32,
-                num_devices: m as u32,
-                rounds: rounds as u32,
-                seed,
-            };
-            if !handshake(conn.as_mut(), &welcome, deadline, hb_timeout) {
-                continue;
+            match transport.accept(remaining.min(ACCEPT_POLL)) {
+                Ok(conn) => admit_standby(conn, &mut clients, &hello, &mut wiring),
+                Err(ProtocolError::Timeout) => {}
+                Err(e) => return Err(e),
             }
-            let mut rd = conn.try_clone()?;
-            let tx = tx.clone();
-            readers.push(std::thread::spawn(move || loop {
-                match rd.recv(hb_timeout) {
-                    Ok(msg) => {
-                        if tx.send(Event::Msg(id, msg)).is_err() {
-                            return;
-                        }
-                    }
-                    Err(_) => {
-                        let _ = tx.send(Event::Dead(id));
-                        return;
-                    }
-                }
-            }));
-            clients.push(ClientSlot {
-                conn,
-                devices,
-                alive: true,
-            });
         }
 
         // Device -> client index (total: the ranges partition 0..m).
@@ -191,13 +580,6 @@ impl CoordinatorService {
             }
         }
 
-        let SessionParts {
-            engine,
-            problem,
-            algo,
-            strategy,
-            observers,
-        } = self.session.parts();
         let grace = match engine.network().policy() {
             StragglerPolicy::AdmitLate => hb_timeout,
             StragglerPolicy::Drop => Duration::ZERO,
@@ -210,10 +592,10 @@ impl CoordinatorService {
             algorithm: meta.algorithm.clone(),
             dataset: meta.dataset.clone(),
             split: meta.split.clone(),
-            rounds: Vec::with_capacity(rounds),
+            rounds: Vec::with_capacity(rounds.saturating_sub(start_round)),
         };
 
-        for k in 0..rounds {
+        for k in start_round..rounds {
             // ---- Round(k): broadcast context + model ----------------
             let ctx = engine.begin_round(k, &mut *strategy);
             engine.stage_reset(&ctx);
@@ -221,12 +603,15 @@ impl CoordinatorService {
                 ctx: ctx.clone(),
                 theta: engine.theta().to_vec(),
             }));
-            let state_now = CoordinatorState::Round(k as u32);
-            let mut pending = BTreeSet::new();
-            let mut missing = 0usize;
+            let mut book = RoundBook {
+                round: k,
+                pending: BTreeSet::new(),
+                lost: BTreeSet::new(),
+                staged: BTreeMap::new(),
+            };
             for c in clients.iter_mut() {
-                if c.alive && c.conn.send(&start).is_err() {
-                    c.alive = false;
+                if c.alive && !c.send(&start) {
+                    retire(c, engine, None);
                 }
             }
             for d in 0..m {
@@ -234,39 +619,42 @@ impl CoordinatorService {
                     continue;
                 }
                 if clients[owner[d]].alive {
-                    pending.insert(d);
+                    book.pending.insert(d);
                 } else {
-                    missing += 1;
+                    book.lost.insert(d);
                 }
             }
 
             // ---- collect results until done or deadline -------------
+            // `lost` devices keep the loop open too: their client may
+            // still rejoin and deliver before the deadline.
             let deadline = Instant::now() + round_timeout + grace;
-            while !pending.is_empty() {
+            while !book.pending.is_empty() || !book.lost.is_empty() {
                 let remaining = deadline.saturating_duration_since(Instant::now());
                 if remaining.is_zero() {
                     break;
                 }
-                let Ok(ev) = events.recv_timeout(remaining) else {
-                    break;
-                };
-                match ev {
-                    Event::Dead(ci) => retire(&mut clients[ci], &mut pending, &mut missing),
-                    Event::Msg(ci, Message::Heartbeat) => {
-                        let c = &mut clients[ci];
-                        if c.alive && c.conn.send(&Message::State(state_now)).is_err() {
-                            retire(c, &mut pending, &mut missing);
-                        }
+                let mut drained = false;
+                while let Ok(ev) = events.try_recv() {
+                    drained = true;
+                    handle_event(ev, &mut clients, engine, &mut book);
+                }
+                if drained {
+                    continue; // re-check completion before blocking
+                }
+                let degraded = clients.iter().any(|c| !c.alive);
+                if degraded {
+                    if let Ok(conn) = transport.accept(remaining.min(REJOIN_POLL)) {
+                        admit_rejoin(conn, &mut clients, engine, &mut book, &start, &mut wiring);
+                        continue;
                     }
-                    Event::Msg(ci, Message::RoundResult(r)) => {
-                        stage(engine, &clients[ci].devices, k, &mut pending, r);
-                    }
-                    // Anything else out of order (a late rendezvous, a
-                    // stale result) is tolerated and ignored.
-                    Event::Msg(_, _) => {}
+                }
+                let step = if degraded { EVENT_POLL } else { remaining };
+                if let Ok(ev) = events.recv_timeout(remaining.min(step)) {
+                    handle_event(ev, &mut clients, engine, &mut book);
                 }
             }
-            missing += pending.len();
+            let missing = book.pending.len() + book.lost.len();
 
             // ---- close the round ------------------------------------
             let mut rec = engine.finish_round(problem, algo, ctx);
@@ -275,6 +663,32 @@ impl CoordinatorService {
             for obs in observers.iter_mut() {
                 obs.on_round(&rec);
             }
+            if let Some((path, every)) = &self.checkpoint {
+                if (k + 1) % every == 0 || k + 1 == rounds {
+                    let mut ckpt = engine.snapshot(k + 1);
+                    ckpt.serve_state = Some(ServeState {
+                        clients: n_clients,
+                        staged: book.staged.keys().map(|&d| d as u32).collect(),
+                    });
+                    if let Err(e) = ckpt.save(path) {
+                        eprintln!("warning: checkpoint to {} failed: {e}", path.display());
+                    }
+                }
+            }
+            let train_loss = rec.train_loss;
+            trace.rounds.push(rec);
+            if self.halt_after == Some(k) {
+                // Simulated crash: no end-round broadcast, no run-end
+                // teardown — just vanish. Dropping the connections is
+                // what the clients observe.
+                drop(clients);
+                drop(wiring);
+                drop(tx);
+                for h in readers {
+                    let _ = h.join();
+                }
+                return Ok(trace);
+            }
             let next = if k + 1 == rounds {
                 CoordinatorState::Finished
             } else {
@@ -282,44 +696,63 @@ impl CoordinatorService {
             };
             let end = Message::EndRound {
                 round: k as u32,
-                train_loss: rec.train_loss,
+                train_loss,
                 state: next,
             };
             for c in clients.iter_mut() {
-                if c.alive && c.conn.send(&end).is_err() {
-                    c.alive = false;
+                if c.alive && !c.send(&end) {
+                    retire(c, engine, None);
                 }
             }
-            trace.rounds.push(rec);
         }
 
         for obs in observers.iter_mut() {
             obs.on_run_end();
         }
+
+        // ---- finish linger --------------------------------------
+        // If any fault occurred, a client may have lost the Finished
+        // notice and be mid-reconnect; keep the door open for one
+        // liveness window so it learns the run is over.
+        let faulted = clients.iter().any(|c| c.gen != 1 || !c.alive);
+        if faulted && rounds > start_round {
+            let last_loss = trace.rounds.last().map_or(f64::NAN, |r| r.train_loss);
+            let deadline = Instant::now() + hb_timeout;
+            loop {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                while let Ok(ev) = events.try_recv() {
+                    match ev {
+                        Event::Dead(ci, gen) => {
+                            if clients[ci].gen == gen {
+                                retire(&mut clients[ci], engine, None);
+                            }
+                        }
+                        Event::Msg(ci, Message::Heartbeat) => {
+                            let c = &mut clients[ci];
+                            if c.alive && !c.send(&Message::State(CoordinatorState::Finished)) {
+                                retire(c, engine, None);
+                            }
+                        }
+                        Event::Msg(..) => {}
+                    }
+                }
+                if let Ok(conn) = transport.accept(remaining.min(ACCEPT_POLL)) {
+                    farewell(conn, &clients, rounds, last_loss);
+                }
+            }
+        }
+
         // Closing the writer halves wakes every client; each reader
         // thread then exits within one heartbeat window at most.
         drop(clients);
+        drop(wiring);
         drop(tx);
         for h in readers {
             let _ = h.join();
         }
         Ok(trace)
     }
-}
-
-/// Stage one remote result if it belongs to this round and to the
-/// sending client's device range (a misbehaving client cannot write
-/// outside its assignment or replay an old round).
-fn stage(
-    engine: &mut RoundEngine,
-    devices: &Range<usize>,
-    round: usize,
-    pending: &mut BTreeSet<usize>,
-    r: RoundResult,
-) {
-    let d = r.device as usize;
-    if r.round as usize != round || !devices.contains(&d) || !pending.remove(&d) {
-        return;
-    }
-    engine.stage_remote(d, r.loss, r.level, r.payload.as_deref(), (r.uploads, r.skips));
 }

@@ -40,6 +40,22 @@ pub trait Connection: Send {
     /// A second handle on the same connection, for splitting the read
     /// and write directions across threads.
     fn try_clone(&self) -> Result<Box<dyn Connection>, ProtocolError>;
+
+    /// Send one raw frame (kind byte + body verbatim), bypassing the
+    /// message encoder. The fault-injection layer
+    /// ([`super::chaos::ChaosConnection`]) uses this to put corrupted
+    /// or truncated frames on the wire; ordinary protocol code never
+    /// needs it.
+    fn send_raw_frame(&mut self, kind: u8, body: &[u8]) -> Result<(), ProtocolError>;
+}
+
+/// Client side of a transport: a factory for fresh connections to one
+/// coordinator. This is the unit of reconnection —
+/// [`super::DeviceClient::run_with`] redials through it after a
+/// connection dies.
+pub trait Dial: Send + Sync {
+    /// Open a new connection to the coordinator.
+    fn dial(&self) -> Result<Box<dyn Connection>, ProtocolError>;
 }
 
 /// Server side of a transport: yields one [`Connection`] per client.
@@ -58,6 +74,18 @@ fn io_err(e: std::io::Error) -> ProtocolError {
         std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ProtocolError::Timeout,
         _ => ProtocolError::Io(e),
     }
+}
+
+/// Dial failures worth retrying while the connect window is open: the
+/// listener may not have bound yet, or the accept backlog hiccuped.
+fn dial_retryable(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::ConnectionRefused
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::Interrupted
+    )
 }
 
 /// TCP listener implementing [`Transport`].
@@ -113,14 +141,35 @@ impl TcpConnection {
 
     /// Connect to a coordinator at `addr`, waiting at most `timeout`
     /// for the TCP handshake.
+    ///
+    /// A refused or reset dial retries with a short growing backoff
+    /// inside the `timeout` window instead of failing permanently —
+    /// the listener may simply not be up yet (a client started before
+    /// the coordinator binds still rendezvouses). Only when the window
+    /// closes does the attempt surface as [`ProtocolError::Timeout`].
     pub fn connect(addr: &str, timeout: Duration) -> Result<Self, ProtocolError> {
         use std::net::ToSocketAddrs;
         let sock = addr
             .to_socket_addrs()?
             .next()
             .ok_or(ProtocolError::Malformed("address resolves to nothing"))?;
-        let stream = TcpStream::connect_timeout(&sock, timeout)?;
-        Self::from_stream(stream)
+        let deadline = Instant::now() + timeout;
+        let mut pause = Duration::from_millis(10);
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ProtocolError::Timeout);
+            }
+            match TcpStream::connect_timeout(&sock, remaining) {
+                Ok(stream) => return Self::from_stream(stream),
+                Err(e) if dial_retryable(e.kind()) => {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    std::thread::sleep(pause.min(remaining));
+                    pause = (pause * 2).min(Duration::from_millis(500));
+                }
+                Err(e) => return Err(io_err(e)),
+            }
+        }
     }
 
     fn from_stream(stream: TcpStream) -> Result<Self, ProtocolError> {
@@ -186,6 +235,36 @@ impl Connection for TcpConnection {
             body_buf: Vec::new(),
             write_timeout: self.write_timeout,
         }))
+    }
+
+    fn send_raw_frame(&mut self, kind: u8, body: &[u8]) -> Result<(), ProtocolError> {
+        self.write_buf.clear();
+        frame::encode_frame(kind, body, &mut self.write_buf);
+        self.stream.set_write_timeout(Some(self.write_timeout))?;
+        self.stream.write_all(&self.write_buf).map_err(io_err)?;
+        self.stream.flush().map_err(io_err)
+    }
+}
+
+/// Client-side factory for [`TcpConnection`]s — [`Dial`] over TCP.
+pub struct TcpDialer {
+    addr: String,
+    timeout: Duration,
+}
+
+impl TcpDialer {
+    /// A dialer for `addr`, bounding each dial attempt by `timeout`.
+    pub fn new(addr: impl Into<String>, timeout: Duration) -> Self {
+        Self {
+            addr: addr.into(),
+            timeout,
+        }
+    }
+}
+
+impl Dial for TcpDialer {
+    fn dial(&self) -> Result<Box<dyn Connection>, ProtocolError> {
+        Ok(Box::new(TcpConnection::connect(&self.addr, self.timeout)?))
     }
 }
 
@@ -321,6 +400,13 @@ impl Connection for LoopbackConnection {
             _token: self._token.clone(),
         }))
     }
+
+    fn send_raw_frame(&mut self, kind: u8, body: &[u8]) -> Result<(), ProtocolError> {
+        self.tx.push(Frame {
+            kind,
+            body: body.to_vec(),
+        })
+    }
 }
 
 /// In-process transport: clients dial the hub, the coordinator
@@ -390,6 +476,12 @@ impl LoopbackDialer {
     }
 }
 
+impl Dial for LoopbackDialer {
+    fn dial(&self) -> Result<Box<dyn Connection>, ProtocolError> {
+        Ok(Box::new(self.connect()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -445,6 +537,62 @@ mod tests {
             client.recv(Duration::from_millis(100)).unwrap(),
             Message::Heartbeat
         ));
+    }
+
+    #[test]
+    fn send_raw_frame_matches_inherent_injection() {
+        let (mut a, mut b) = LoopbackConnection::pair();
+        Connection::send_raw_frame(&mut a, 0xEE, &[1, 2, 3]).unwrap();
+        assert!(matches!(
+            b.recv(Duration::from_millis(100)),
+            Err(ProtocolError::UnknownKind(0xEE))
+        ));
+    }
+
+    #[test]
+    fn loopback_dialer_implements_dial() {
+        let mut hub = LoopbackHub::new();
+        let dialer = hub.dialer();
+        let mut client = dialer.dial().expect("loopback dial cannot fail");
+        let mut server = hub.accept(Duration::from_millis(100)).unwrap();
+        client.send(&Message::Heartbeat).unwrap();
+        assert!(matches!(
+            server.recv(Duration::from_millis(100)).unwrap(),
+            Message::Heartbeat
+        ));
+    }
+
+    #[test]
+    fn tcp_connect_retries_until_listener_binds() {
+        // Reserve a port, free it, and bind it back only after the
+        // client has already started dialing: the refused dials must
+        // retry inside the timeout window instead of failing outright.
+        let probe = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        let addr = probe.local_addr().expect("probe addr").to_string();
+        drop(probe);
+        let dial_addr = addr.clone();
+        let handle = std::thread::spawn(move || {
+            TcpConnection::connect(&dial_addr, Duration::from_secs(10)).map(|_| ())
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        let mut transport = TcpTransport::bind(&addr).expect("late bind");
+        let accepted = transport.accept(Duration::from_secs(10));
+        assert!(accepted.is_ok(), "late-bound listener sees the dial");
+        handle
+            .join()
+            .expect("dial thread")
+            .expect("dial succeeds after listener appears");
+    }
+
+    #[test]
+    fn tcp_connect_times_out_when_nothing_binds() {
+        let probe = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        let addr = probe.local_addr().expect("probe addr").to_string();
+        drop(probe);
+        let t0 = Instant::now();
+        let err = TcpConnection::connect(&addr, Duration::from_millis(200));
+        assert!(matches!(err, Err(ProtocolError::Timeout)));
+        assert!(t0.elapsed() >= Duration::from_millis(150), "window honored");
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::coordinator::{Session, SessionBuilder};
 use crate::hetero::{half_half_masks, CapacityMask};
 use crate::metrics::{bits_display, RunTrace};
 use crate::problems::GradientSource;
+use crate::protocol::DeviceClient;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -40,6 +41,17 @@ pub fn session_for(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> SessionBu
 /// Run one experiment cell (dataset × split × algorithm).
 pub fn run_cell(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> RunTrace {
     session_for(spec, algo).build().run()
+}
+
+/// A [`crate::protocol::DeviceClient`] for one experiment cell,
+/// constructed from the same problem/masks/config as [`session_for`]
+/// so the client's device states mirror the coordinator's bit for
+/// bit. Serve-spec heartbeat cadence is pre-applied; chain
+/// [`crate::protocol::DeviceClient::reconnect`] etc. for resilience.
+pub fn client_for(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> DeviceClient {
+    let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+    let masks = masks_for(spec, problem.as_ref());
+    DeviceClient::new(problem, algo, spec.run_config(), masks).heartbeat_ms(spec.serve.heartbeat_ms)
 }
 
 /// Format the headline metric (accuracy % for classification,

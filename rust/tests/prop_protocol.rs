@@ -3,15 +3,24 @@
 //! panicking; heartbeat expiry maps silent clients onto stragglers;
 //! and a seeded run served over loopback or TCP reproduces the
 //! in-process `RunTrace` bit for bit.
+//!
+//! The chaos matrix (ISSUE 7) extends the determinism acceptance to
+//! faulted runs: every injected fault kind, over both transports, must
+//! recover inside the round deadline and leave the trace bit-identical
+//! to the fault-free in-process run; and a coordinator killed
+//! mid-horizon must resume from its checkpoint with the remaining
+//! rounds bit-identical to the uninterrupted run.
 
 use aquila::algorithms::aquila::Aquila;
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::checkpoint::Checkpoint;
 use aquila::coordinator::Session;
 use aquila::metrics::RunTrace;
 use aquila::problems::GradientSource;
 use aquila::protocol::frame::{decode_frame, encode_frame, FrameReader};
 use aquila::protocol::messages::{kind, RoundResult};
 use aquila::protocol::transport::LoopbackDialer;
+use aquila::protocol::{ChaosSpec, TcpDialer};
 use aquila::protocol::{
     ClientReport, Connection, CoordinatorService, CoordinatorState, DeviceClient, Frame,
     LoopbackHub, Message, ProtocolError, ServeSpec, TcpConnection, TcpTransport,
@@ -23,11 +32,15 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-fn tiny(rounds: usize) -> ExperimentSpec {
-    let base = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+fn tiny_on(ds: DatasetKind, rounds: usize) -> ExperimentSpec {
+    let base = ExperimentSpec::new(ds, SplitKind::Iid, false);
     let mut s = base.scaled(0.02, rounds);
     s.devices = 4;
     s
+}
+
+fn tiny(rounds: usize) -> ExperimentSpec {
+    tiny_on(DatasetKind::Cf10, rounds)
 }
 
 fn serve(clients: usize) -> ServeSpec {
@@ -74,6 +87,33 @@ fn tcp_client(spec: ExperimentSpec, addr: String) -> JoinHandle<ClientReport> {
         let client = DeviceClient::new(problem, algo, spec.run_config(), masks).heartbeat_ms(25);
         let mut conn = TcpConnection::connect(&addr, Duration::from_secs(10)).expect("connect");
         client.run(&mut conn).expect("tcp client")
+    })
+}
+
+/// A fault-tolerant client: dials through the `Dial` abstraction and
+/// reconnects with backoff whenever chaos kills its connection, so an
+/// injected fault costs a rejoin, never the run.
+fn resilient_client(spec: &ExperimentSpec) -> DeviceClient {
+    repro::client_for(spec, Arc::new(Aquila::new(spec.beta)))
+        .heartbeat_ms(25)
+        .reconnect(40, 10, 100)
+        .idle_timeout_ms(500)
+}
+
+fn resilient_loop_client(spec: ExperimentSpec, dialer: LoopbackDialer) -> JoinHandle<ClientReport> {
+    std::thread::spawn(move || {
+        resilient_client(&spec)
+            .run_with(&dialer)
+            .expect("resilient loopback client")
+    })
+}
+
+fn resilient_tcp_client(spec: ExperimentSpec, addr: String) -> JoinHandle<ClientReport> {
+    std::thread::spawn(move || {
+        let dialer = TcpDialer::new(addr, Duration::from_secs(5));
+        resilient_client(&spec)
+            .run_with(&dialer)
+            .expect("resilient tcp client")
     })
 }
 
@@ -244,9 +284,11 @@ fn prop_heartbeat_expiry_marks_stragglers() {
         }
     });
     let honest = loop_client(spec.clone(), dialer);
+    // A short round timeout: the rejoin-aware collect loop waits for
+    // lost devices until the deadline, and this client never comes back.
     let mut service = CoordinatorService::new(
         session_of(&spec),
-        ServeSpec { heartbeat_timeout_ms: 250, ..serve(2) },
+        ServeSpec { heartbeat_timeout_ms: 250, round_timeout_ms: 800, ..serve(2) },
     );
     let trace = service.run(&mut hub).expect("service run");
     let silent_rep = silent.join().expect("silent client");
@@ -297,4 +339,147 @@ fn prop_service_trace_matches_inprocess_over_both_transports() {
         format!("{:?}", tcp.rounds),
         "TCP service diverged from the loopback run"
     );
+}
+
+/// One chaos case per fault kind. Seeds differ so each case exercises
+/// its own deterministic fault pattern.
+fn chaos_cases() -> Vec<ChaosSpec> {
+    [
+        "drop=0.08,seed=11",
+        "stall=0.3,stall_ms=5,seed=12",
+        "partial=0.05,seed=13",
+        "corrupt=0.05,seed=14",
+        "dup=0.2,seed=15",
+        "accept=0.4,seed=16",
+    ]
+    .iter()
+    .map(|s| ChaosSpec::parse(s).expect("chaos grammar"))
+    .collect()
+}
+
+/// The chaos matrix over loopback: for every fault kind, a served run
+/// with a fault-injecting coordinator transport and reconnecting
+/// clients produces a trace bit-identical to the fault-free in-process
+/// run — every fault recovers inside the round deadline, so no device
+/// result is lost, duplicated, or folded twice.
+#[test]
+fn prop_chaos_matrix_loopback_trace_identical() {
+    let spec = tiny(4);
+    let (want, _) = inprocess(&spec);
+    for chaos in chaos_cases() {
+        let label = chaos.to_string();
+        let mut hub = LoopbackHub::new();
+        let dialer = hub.dialer();
+        let clients: Vec<_> =
+            (0..2).map(|_| resilient_loop_client(spec.clone(), dialer.clone())).collect();
+        let mut service = CoordinatorService::new(session_of(&spec), serve(2));
+        let mut transport = chaos.wrap_transport(Box::new(hub));
+        let got = service.run(&mut transport).expect("chaos run completes");
+        for h in clients {
+            h.join().expect("client");
+        }
+        assert_eq!(
+            format!("{:?}", want.rounds),
+            format!("{:?}", got.rounds),
+            "chaos '{label}' diverged over loopback"
+        );
+    }
+}
+
+/// The same matrix over real TCP sockets.
+#[test]
+fn prop_chaos_matrix_tcp_trace_identical() {
+    let spec = tiny(4);
+    let (want, _) = inprocess(&spec);
+    for chaos in chaos_cases() {
+        let label = chaos.to_string();
+        let tcp = TcpTransport::bind("127.0.0.1:0").expect("bind");
+        let addr = tcp.local_addr().expect("addr").to_string();
+        let clients: Vec<_> =
+            (0..2).map(|_| resilient_tcp_client(spec.clone(), addr.clone())).collect();
+        let mut service = CoordinatorService::new(session_of(&spec), serve(2));
+        let mut transport = chaos.wrap_transport(Box::new(tcp));
+        let got = service.run(&mut transport).expect("chaos run completes");
+        for h in clients {
+            h.join().expect("client");
+        }
+        assert_eq!(
+            format!("{:?}", want.rounds),
+            format!("{:?}", got.rounds),
+            "chaos '{label}' diverged over TCP"
+        );
+    }
+}
+
+/// Kill-and-restart acceptance: a coordinator that dies right after
+/// checkpointing a round is restarted with `--serve --resume`
+/// semantics; the surviving clients reconnect into their original
+/// slots and the stitched trace (head before the kill, tail after) is
+/// bit-identical to the uninterrupted run, with zero stragglers
+/// manufactured by the restart.
+fn kill_and_resume_matches(ds: DatasetKind) {
+    let spec = tiny_on(ds, 5);
+    let (want, theta_want) = inprocess(&spec);
+    let path = std::env::temp_dir().join(format!(
+        "aquila_resume_{}_{}.ckpt",
+        std::process::id(),
+        ds.name()
+    ));
+
+    let mut hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let clients: Vec<_> =
+        (0..2).map(|_| resilient_loop_client(spec.clone(), dialer.clone())).collect();
+    // Phase 1: checkpoint every round, die right after round 1 — no
+    // end-of-round broadcast, no teardown, exactly like a kill.
+    let mut first = CoordinatorService::new(session_of(&spec), serve(2))
+        .checkpoint_to(path.clone(), 1)
+        .halt_after_round(1);
+    let head = first.run(&mut hub).expect("halted run");
+    assert_eq!(head.rounds.len(), 2, "halt_after_round(1) serves rounds 0..=1");
+    drop(first);
+
+    // Phase 2: a fresh coordinator restores the checkpoint and serves
+    // the remaining horizon to the same (reconnecting) clients.
+    let ckpt = Checkpoint::load(&path).expect("checkpoint readable");
+    let mut second = CoordinatorService::new(session_of(&spec), serve(2));
+    assert_eq!(second.resume_from(&ckpt).expect("resume"), 2);
+    let tail = second.run(&mut hub).expect("resumed run");
+    for h in clients {
+        h.join().expect("client");
+    }
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(head.rounds.len() + tail.rounds.len(), want.rounds.len());
+    assert_eq!(
+        format!("{:?}", &want.rounds[..2]),
+        format!("{:?}", head.rounds),
+        "pre-kill rounds diverged"
+    );
+    assert_eq!(
+        format!("{:?}", &want.rounds[2..]),
+        format!("{:?}", tail.rounds),
+        "resumed rounds diverged from the uninterrupted run"
+    );
+    assert!(
+        tail.rounds.iter().all(|r| r.stragglers == 0),
+        "resume must not manufacture stragglers"
+    );
+    let theta: Vec<u32> = second.session().theta().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(theta_want, theta, "θ diverged bitwise across the kill/restart");
+}
+
+#[test]
+fn prop_kill_and_resume_matches_uninterrupted_cf10() {
+    kill_and_resume_matches(DatasetKind::Cf10);
+}
+
+#[test]
+fn prop_kill_and_resume_matches_uninterrupted_cf100() {
+    kill_and_resume_matches(DatasetKind::Cf100);
+}
+
+#[test]
+fn prop_kill_and_resume_matches_uninterrupted_wt2() {
+    kill_and_resume_matches(DatasetKind::Wt2);
 }
