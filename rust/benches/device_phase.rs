@@ -1,0 +1,259 @@
+//! Device-phase fusion bench at wide d (DESIGN.md §Perf "device
+//! phase"): isolated quantize→pack and the full stats+quantize+pack
+//! device phase, three ways each —
+//!
+//! * `baseline3` — the pre-fusion three-pass pipeline: legacy fused
+//!   quantize (materializes `psi: Vec<u32>`) followed by `pack_into`;
+//! * `fused` — the serial fused kernel (`quantize_innovation_packed_buf`,
+//!   the one the engine's device phase runs per device);
+//! * `fused_par` — the always-blocked thread-parallel kernel
+//!   (`quantize_innovation_packed_par`), for single wide vectors.
+//!
+//! Run with `--json ../BENCH_round.json`-style paths to record the
+//! trajectory; EXPERIMENTS.md §Wide-model device phase documents the
+//! sweep. Under `AQUILA_BENCH_FAST=1` (CI smoke) only the CI-sized d
+//! runs, and the bench *asserts* the fusion speedups hold (min
+//! timings): fused_par ≥ 1.5× baseline3 on the full device phase and
+//! ≥ 2× on isolated quantize→pack — so a fusion regression fails CI
+//! instead of silently decaying. The assertions are skipped with a
+//! notice when only one hardware thread is available.
+
+use aquila::benchkit::{black_box, Bench};
+use aquila::quant::midtread::{
+    quantize_innovation_fused_buf, quantize_innovation_packed_buf, quantize_innovation_packed_par,
+};
+use aquila::quant::packing::{pack_into, packed_len};
+use aquila::util::pool::default_threads;
+use aquila::util::rng::Xoshiro256pp;
+use std::time::Duration;
+
+const BITS: u8 = 4;
+
+/// `‖g − q_prev‖_∞` — the stats pass every device step pays before
+/// quantizing (the range the mid-tread quantizer needs).
+fn innovation_linf(g: &[f32], q_prev: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for (&a, &b) in g.iter().zip(q_prev) {
+        m = m.max((a - b).abs());
+    }
+    m
+}
+
+struct CaseTimings {
+    baseline3: Duration,
+    fused: Duration,
+    fused_par: Duration,
+}
+
+/// Bench one width; returns min timings of the three *device-phase*
+/// cases plus the two isolated quantize→pack extremes for the CI gate.
+fn bench_width(bench: &mut Bench, d: usize, threads: usize) -> (CaseTimings, Duration, Duration) {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xDEC1CE ^ d as u64);
+    let g: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+    let q_prev: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+    let mut dq = vec![0.0f32; d];
+    let range = innovation_linf(&g, &q_prev);
+    let label_d = if d >= 1_000_000 {
+        format!("d={}M", d / 1_000_000)
+    } else {
+        format!("d={}k", d / 1_000)
+    };
+    // Traffic per call (bytes): quantize reads g+q_prev (8d), writes dq
+    // (4d); the baseline additionally writes+rereads psi (8d); packing
+    // writes d·b/8 body bytes.
+    let body_bytes = packed_len(d, BITS) as u64;
+    let quant_bytes = 12 * d as u64;
+    let psi_bytes = 8 * d as u64;
+    let stats_bytes = 8 * d as u64;
+
+    // ---- isolated quantize→pack -----------------------------------
+    let mut psi: Vec<u32> = Vec::new();
+    let mut body: Vec<u8> = Vec::new();
+    let iso_base = bench
+        .bench_gbps(
+            &format!("quantize+pack {label_d} b={BITS} baseline3"),
+            d as u64,
+            quant_bytes + psi_bytes + body_bytes,
+            || {
+                let out = quantize_innovation_fused_buf(
+                    black_box(&g),
+                    &q_prev,
+                    BITS,
+                    range,
+                    &mut dq,
+                    std::mem::take(&mut psi),
+                );
+                body.clear();
+                pack_into(&out.quantized.psi, BITS, &mut body);
+                black_box(&body);
+                psi = out.quantized.psi;
+            },
+        )
+        .min;
+    let iso_fused = bench
+        .bench_gbps(
+            &format!("quantize+pack {label_d} b={BITS} fused"),
+            d as u64,
+            quant_bytes + body_bytes,
+            || {
+                let out = quantize_innovation_packed_buf(
+                    black_box(&g),
+                    &q_prev,
+                    BITS,
+                    range,
+                    &mut dq,
+                    std::mem::take(&mut body),
+                );
+                body = black_box(out).packed.body;
+            },
+        )
+        .min;
+    let iso_par = bench
+        .bench_gbps(
+            &format!("quantize+pack {label_d} b={BITS} fused_par t={threads}"),
+            d as u64,
+            quant_bytes + body_bytes,
+            || {
+                let out = quantize_innovation_packed_par(
+                    black_box(&g),
+                    &q_prev,
+                    BITS,
+                    range,
+                    &mut dq,
+                    std::mem::take(&mut body),
+                    threads,
+                );
+                body = black_box(out).packed.body;
+            },
+        )
+        .min;
+    println!(
+        "  isolated speedup: fused {:.2}x  fused_par {:.2}x",
+        iso_base.as_secs_f64() / iso_fused.as_secs_f64(),
+        iso_base.as_secs_f64() / iso_par.as_secs_f64()
+    );
+
+    // ---- full device phase (stats + quantize + pack) ---------------
+    let phase_base = bench
+        .bench_gbps(
+            &format!("device phase {label_d} b={BITS} baseline3"),
+            d as u64,
+            stats_bytes + quant_bytes + psi_bytes + body_bytes,
+            || {
+                let r = innovation_linf(black_box(&g), &q_prev);
+                let out = quantize_innovation_fused_buf(
+                    &g,
+                    &q_prev,
+                    BITS,
+                    r,
+                    &mut dq,
+                    std::mem::take(&mut psi),
+                );
+                body.clear();
+                pack_into(&out.quantized.psi, BITS, &mut body);
+                black_box(&body);
+                psi = out.quantized.psi;
+            },
+        )
+        .min;
+    let phase_fused = bench
+        .bench_gbps(
+            &format!("device phase {label_d} b={BITS} fused"),
+            d as u64,
+            stats_bytes + quant_bytes + body_bytes,
+            || {
+                let r = innovation_linf(black_box(&g), &q_prev);
+                let out = quantize_innovation_packed_buf(
+                    &g,
+                    &q_prev,
+                    BITS,
+                    r,
+                    &mut dq,
+                    std::mem::take(&mut body),
+                );
+                body = black_box(out).packed.body;
+            },
+        )
+        .min;
+    let phase_par = bench
+        .bench_gbps(
+            &format!("device phase {label_d} b={BITS} fused_par t={threads}"),
+            d as u64,
+            stats_bytes + quant_bytes + body_bytes,
+            || {
+                let r = innovation_linf(black_box(&g), &q_prev);
+                let out = quantize_innovation_packed_par(
+                    &g,
+                    &q_prev,
+                    BITS,
+                    r,
+                    &mut dq,
+                    std::mem::take(&mut body),
+                    threads,
+                );
+                body = black_box(out).packed.body;
+            },
+        )
+        .min;
+    println!(
+        "  device-phase speedup: fused {:.2}x  fused_par {:.2}x",
+        phase_base.as_secs_f64() / phase_fused.as_secs_f64(),
+        phase_base.as_secs_f64() / phase_par.as_secs_f64()
+    );
+    (
+        CaseTimings {
+            baseline3: phase_base,
+            fused: phase_fused,
+            fused_par: phase_par,
+        },
+        iso_base,
+        iso_par,
+    )
+}
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let fast = std::env::var("AQUILA_BENCH_FAST").is_ok();
+    let threads = default_threads();
+    // CI-sized width first (the gated one), then the wide-model sweep.
+    let widths: &[usize] = if fast {
+        &[1_000_000]
+    } else {
+        &[1_000_000, 10_000_000, 100_000_000]
+    };
+    let mut gate: Option<(CaseTimings, Duration, Duration)> = None;
+    for &d in widths {
+        let r = bench_width(&mut bench, d, threads);
+        if gate.is_none() {
+            gate = Some(r);
+        }
+    }
+
+    // ---- CI gate: fusion speedups at the CI-sized width ------------
+    let (phase, iso_base, iso_par) = gate.expect("at least one width ran");
+    // The serial fused kernel must never lose to the three-pass
+    // pipeline it replaced (it strictly removes traffic; 10% slack
+    // absorbs timer noise on loaded runners).
+    assert!(
+        phase.fused.as_secs_f64() <= phase.baseline3.as_secs_f64() * 1.1,
+        "serial fused device phase regressed: {:?} vs baseline {:?}",
+        phase.fused,
+        phase.baseline3
+    );
+    if threads >= 2 {
+        let phase_speedup = phase.baseline3.as_secs_f64() / phase.fused_par.as_secs_f64();
+        assert!(
+            phase_speedup >= 1.5,
+            "fused_par device phase speedup {phase_speedup:.2}x < 1.5x over baseline3 \
+             (t={threads})"
+        );
+        let iso_speedup = iso_base.as_secs_f64() / iso_par.as_secs_f64();
+        assert!(
+            iso_speedup >= 2.0,
+            "fused_par quantize+pack speedup {iso_speedup:.2}x < 2x over baseline3 (t={threads})"
+        );
+    } else {
+        println!("single hardware thread: skipping fused_par speedup gates");
+    }
+    bench.finish();
+}

@@ -16,7 +16,10 @@ use aquila::benchkit::{black_box, Bench};
 use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
 use aquila::hetero::CapacityMask;
 use aquila::problems::ParamLayout;
-use aquila::quant::midtread::{dequantize, quantize_sections, quantize_sections_buf};
+use aquila::quant::midtread::{
+    dequantize, quantize_sections, quantize_sections_buf, quantize_sections_packed_buf,
+};
+use aquila::quant::packing::packed_len;
 use aquila::quant::{SectionSpec, Sections};
 use aquila::transport::wire::{encode, Payload};
 
@@ -90,6 +93,24 @@ fn main() {
                     quantize_sections_buf(black_box(&grad), BITS, &sections, std::mem::take(&mut psi));
                 psi = black_box(q).psi;
             });
+            // Fused quantize→pack counterpart: same scales, straight
+            // to the packed little-endian wire body (no psi vector).
+            let packed_label = format!("quantize_packed {} b={BITS} {mode}", ds.name());
+            let mut body = Vec::new();
+            bench.bench_gbps(
+                &packed_label,
+                d as u64,
+                4 * d as u64 + packed_len(d, BITS) as u64,
+                || {
+                    let q = quantize_sections_packed_buf(
+                        black_box(&grad),
+                        BITS,
+                        &sections,
+                        std::mem::take(&mut body),
+                    );
+                    body = black_box(q).body;
+                },
+            );
         }
     }
 

@@ -23,8 +23,11 @@ fn main() {
                 .build();
             session.run_round(0);
             let mut k = 1usize;
-            bench.bench(
+            // One round touches every device's full-length gradient.
+            let elements = (problem.num_devices() * problem.dim()) as u64;
+            bench.bench_throughput(
                 &format!("{} hetero round [{}]", spec.row_label(), algo.name()),
+                elements,
                 || {
                     black_box(session.run_round(k));
                     k += 1;

@@ -53,7 +53,7 @@ impl Algorithm for AdaQuantFl {
         let q = super::quantize_full_step(dev, grad, bits);
         dev.uploads += 1;
         ClientUpload {
-            payload: Some(Payload::MidtreadFull(q)),
+            payload: Some(Payload::MidtreadFullPacked(q)),
             level: Some(bits),
         }
     }

@@ -92,9 +92,9 @@ impl Algorithm for Aquila {
         let bits = self
             .fixed_level
             .unwrap_or_else(|| sectioned_aquila_level(&stats, &dev.sections));
-        // Step 3: fused quantize (Δq into scratch, codes into the
-        // recycled per-device ψ buffer, plus both norms — one scale per
-        // section).
+        // Step 3: fused quantize→pack (Δq into scratch, packed wire
+        // bytes into the recycled per-device body buffer, plus both
+        // norms — one scale per section).
         let (dq, outcome) = super::quantize_innovation_step(dev, grad, bits, &stats);
         // Step 4: the skip criterion (eq. 8). Round 0 always uploads.
         let threshold = ctx.beta as f64 / (ctx.alpha as f64 * ctx.alpha as f64)
@@ -105,7 +105,7 @@ impl Algorithm for Aquila {
             dev.skips += 1;
             dev.prev_err_sq = outcome.err_norm_sq;
             dev.scratch = dq;
-            dev.psi = outcome.quantized.psi;
+            dev.body = outcome.packed.body;
             return ClientUpload::skip_at_level(bits);
         }
         // Step 5: upload; device stores its new quantized gradient.
@@ -116,7 +116,7 @@ impl Algorithm for Aquila {
         dev.prev_err_sq = outcome.err_norm_sq;
         dev.scratch = dq;
         ClientUpload {
-            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            payload: Some(Payload::MidtreadDeltaPacked(outcome.packed)),
             level: Some(bits),
         }
     }
@@ -262,7 +262,7 @@ mod tests {
         }
         let up = algo.client_step(&mut dev, &grad, &RoundCtx::bare(0, 0.1, 0.0, 0.0));
         match up.payload.unwrap() {
-            Payload::MidtreadDelta(q) => {
+            Payload::MidtreadDeltaPacked(q) => {
                 assert!(q.is_sectioned());
                 assert_eq!(q.section_scales.len(), 2);
                 assert!(q.section_scales[1].0 > 10.0 * q.section_scales[0].0);

@@ -69,7 +69,7 @@ impl Algorithm for DAdaQuant {
         let q = super::quantize_full_step(dev, grad, bits);
         dev.uploads += 1;
         ClientUpload {
-            payload: Some(Payload::MidtreadFull(q)),
+            payload: Some(Payload::MidtreadFullPacked(q)),
             level: Some(bits),
         }
     }

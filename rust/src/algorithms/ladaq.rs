@@ -62,7 +62,7 @@ impl Algorithm for LAdaQ {
         if skip {
             dev.skips += 1;
             dev.scratch = dq;
-            dev.psi = outcome.quantized.psi;
+            dev.body = outcome.packed.body;
             return ClientUpload::skip_at_level(bits);
         }
         for (q, &delta) in dev.q_prev.iter_mut().zip(dq.iter()) {
@@ -72,7 +72,7 @@ impl Algorithm for LAdaQ {
         dev.prev_err_sq = outcome.err_norm_sq;
         dev.scratch = dq;
         ClientUpload {
-            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            payload: Some(Payload::MidtreadDeltaPacked(outcome.packed)),
             level: Some(bits),
         }
     }

@@ -62,7 +62,7 @@ impl Algorithm for Marina {
         dev.prev_err_sq = outcome.err_norm_sq;
         dev.scratch = dq;
         ClientUpload {
-            payload: Some(Payload::MidtreadDelta(outcome.quantized)),
+            payload: Some(Payload::MidtreadDeltaPacked(outcome.packed)),
             level: Some(self.bits),
         }
     }
@@ -115,7 +115,7 @@ mod tests {
         let mut c1 = RoundCtx::bare(1, 0.1, 0.0, 1.0);
         c1.marina_sync = false;
         let up = algo.client_step(&mut dev, &g1, &c1);
-        assert!(matches!(up.payload, Some(Payload::MidtreadDelta(_))));
+        assert!(matches!(up.payload, Some(Payload::MidtreadDeltaPacked(_))));
         assert_eq!(up.level, Some(8));
         // Reference tracks the raw gradient.
         assert_eq!(dev.q_prev, g1);

@@ -36,10 +36,10 @@ pub mod qsgd;
 
 use crate::hetero::CapacityMask;
 use crate::quant::midtread::{
-    quantize_buf, quantize_innovation_fused_buf, quantize_innovation_fused_sections_buf,
-    quantize_sections_buf, QuantizeOutcome, QuantizedVec,
+    quantize_innovation_packed_buf, quantize_innovation_packed_sections_buf, quantize_packed_buf,
+    quantize_sections_packed_buf, PackedOutcome,
 };
-use crate::quant::Sections;
+use crate::quant::{PackedVec, Sections};
 use crate::transport::wire::{self, Payload, PayloadView, UploadRef};
 use crate::util::pool::parallel_for_shards;
 use crate::util::rng::Xoshiro256pp;
@@ -124,10 +124,14 @@ pub struct DeviceState {
     pub prev_err_sq: f64,
     /// Scratch for dequantized innovations (avoids per-round allocation).
     pub scratch: Vec<f32>,
-    /// Recycled ψ/magnitude code buffer: client steps take it
-    /// (`std::mem::take`), hand it to the `_buf` quantizers, and the
-    /// coordinator returns it via [`DeviceState::recycle`] after the
-    /// payload is serialized — so steady-state rounds allocate nothing.
+    /// Recycled packed wire-body buffer: the fused quantize→pack client
+    /// steps take it (`std::mem::take`), hand it to the `_packed_buf`
+    /// kernels, and the coordinator returns it via
+    /// [`DeviceState::recycle`] after the payload is serialized — so
+    /// steady-state rounds allocate nothing.
+    pub body: Vec<u8>,
+    /// Recycled ψ/magnitude code buffer for the unpacked payload forms
+    /// (tests and legacy callers; the fused client steps use `body`).
     pub psi: Vec<u32>,
     /// Recycled QSGD sign buffer (see `psi`).
     pub signs: Vec<bool>,
@@ -173,6 +177,7 @@ impl DeviceState {
             q_prev: vec![0.0; support],
             prev_err_sq: 0.0,
             scratch: vec![0.0; support],
+            body: Vec::new(),
             psi: Vec::new(),
             signs: Vec::new(),
             raw: Vec::new(),
@@ -203,6 +208,11 @@ impl DeviceState {
             }
             Payload::RawDelta(v) | Payload::RawFull(v) => {
                 self.raw = v;
+            }
+            Payload::MidtreadDeltaPacked(p)
+            | Payload::MidtreadFullPacked(p)
+            | Payload::QsgdPacked(p) => {
+                self.body = p.body;
             }
         }
     }
@@ -283,48 +293,65 @@ pub fn innovation_stats(g: &[f32], q_prev: &[f32], sections: &Sections) -> Innov
 
 /// Shared client-step core of the mid-tread innovation family (AQUILA,
 /// LAQ, LAdaQ, MARINA): fused-quantize the innovation `g − q_prev` at
-/// `bits` into the device's recycled `scratch`/`psi` buffers, one scale
-/// per quantization section. Returns the reconstructed `Δq` (the taken
-/// scratch buffer — hand it back to `dev.scratch` when done) and the
-/// quantize outcome whose norms feed the skip rules.
+/// `bits` into the device's recycled `scratch`/`body` buffers, one scale
+/// per quantization section, emitting the packed wire body directly
+/// (§Perf — the codes `Vec<u32>` never exists). Returns the
+/// reconstructed `Δq` (the taken scratch buffer — hand it back to
+/// `dev.scratch` when done) and the packed outcome whose norms feed the
+/// skip rules; the arithmetic and norms are bit-identical to the
+/// pre-fusion unpacked path.
 pub(crate) fn quantize_innovation_step(
     dev: &mut DeviceState,
     grad: &[f32],
     bits: u8,
     stats: &InnovationStats,
-) -> (Vec<f32>, QuantizeOutcome) {
+) -> (Vec<f32>, PackedOutcome) {
     let d = grad.len();
     let mut dq = std::mem::take(&mut dev.scratch);
     dq.resize(d, 0.0);
-    let psi = std::mem::take(&mut dev.psi);
+    let body = std::mem::take(&mut dev.body);
     let outcome = if dev.sections.is_global() {
-        quantize_innovation_fused_buf(grad, &dev.q_prev, bits, stats.linf, &mut dq, psi)
+        quantize_innovation_packed_buf(grad, &dev.q_prev, bits, stats.linf, &mut dq, body)
     } else {
         let sections = dev.sections.clone();
         let ranges: Vec<f32> = stats.per_section.iter().map(|&(_, li)| li).collect();
-        quantize_innovation_fused_sections_buf(
+        quantize_innovation_packed_sections_buf(
             grad,
             &dev.q_prev,
             bits,
             &ranges,
             &sections,
             &mut dq,
-            psi,
+            body,
         )
     };
     (dq, outcome)
 }
 
 /// Shared client-step core of the full-gradient mid-tread family
-/// (AdaQuantFL, DAdaQuant): quantize `grad` at `bits` into the device's
-/// recycled `psi` buffer, one scale per quantization section.
-pub(crate) fn quantize_full_step(dev: &mut DeviceState, grad: &[f32], bits: u8) -> QuantizedVec {
-    let psi = std::mem::take(&mut dev.psi);
+/// (AdaQuantFL, DAdaQuant): fused-quantize `grad` at `bits` into the
+/// device's recycled `body` buffer, one scale per quantization section.
+pub(crate) fn quantize_full_step(dev: &mut DeviceState, grad: &[f32], bits: u8) -> PackedVec {
+    let body = std::mem::take(&mut dev.body);
     if dev.sections.is_global() {
-        quantize_buf(grad, bits, psi)
+        quantize_packed_buf(grad, bits, body)
     } else {
         let sections = dev.sections.clone();
-        quantize_sections_buf(grad, bits, &sections, psi)
+        quantize_sections_packed_buf(grad, bits, &sections, body)
+    }
+}
+
+/// Shared client-step core of the QSGD baseline: fused stochastic
+/// quantize→pack of `grad` at `bits` into the device's recycled `body`
+/// buffer, drawing from the device RNG stream in the exact order of the
+/// unpacked path (so seeded traces are unchanged).
+pub(crate) fn quantize_qsgd_step(dev: &mut DeviceState, grad: &[f32], bits: u8) -> PackedVec {
+    let body = std::mem::take(&mut dev.body);
+    if dev.sections.is_global() {
+        crate::quant::qsgd::quantize_packed_buf(grad, bits, &mut dev.rng, body)
+    } else {
+        let sections = dev.sections.clone();
+        crate::quant::qsgd::quantize_sections_packed_buf(grad, bits, &sections, &mut dev.rng, body)
     }
 }
 
@@ -550,6 +577,10 @@ mod tests {
         assert_eq!(dev.psi.len(), 4);
         dev.recycle(Payload::RawFull(vec![1.0; 4]));
         assert_eq!(dev.raw.len(), 4);
+        let packed = crate::quant::midtread::quantize_packed_buf(&[1.0, 2.0, 3.0, 4.0], 4, Vec::new());
+        let body_len = packed.body.len();
+        dev.recycle(Payload::MidtreadFullPacked(packed));
+        assert_eq!(dev.body.len(), body_len);
     }
 
     #[test]

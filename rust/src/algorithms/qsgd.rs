@@ -2,7 +2,6 @@
 //! gradient, transmitted every round (no device selection).
 
 use super::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::quant::qsgd;
 use crate::transport::wire::{Payload, UploadRef};
 
 /// See module docs.
@@ -30,17 +29,10 @@ impl Algorithm for QsgdAlgo {
     }
 
     fn client_step(&self, dev: &mut DeviceState, grad: &[f32], _ctx: &RoundCtx) -> ClientUpload {
-        let mags = std::mem::take(&mut dev.psi);
-        let signs = std::mem::take(&mut dev.signs);
-        let q = if dev.sections.is_global() {
-            qsgd::quantize_buf(grad, self.bits, &mut dev.rng, mags, signs)
-        } else {
-            let sections = dev.sections.clone();
-            qsgd::quantize_sections_buf(grad, self.bits, &sections, &mut dev.rng, mags, signs)
-        };
+        let q = super::quantize_qsgd_step(dev, grad, self.bits);
         dev.uploads += 1;
         ClientUpload {
-            payload: Some(Payload::Qsgd(q)),
+            payload: Some(Payload::QsgdPacked(q)),
             level: Some(self.bits),
         }
     }

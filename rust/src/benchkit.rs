@@ -5,8 +5,10 @@
 //! std / min), throughput reporting, a black-box sink, and
 //! machine-readable output: `--json <path>` (or `AQUILA_BENCH_JSON`)
 //! makes [`Bench::finish`] write a `{commit, generated_at, cases}`
-//! report — one `{name, mean_ns, median_ns, min_ns, elements}` record
-//! per case, stamped with the git commit hash and an ISO-8601 UTC
+//! report — one `{name, mean_ns, median_ns, min_ns, elements,
+//! elem_per_s, bytes, gb_per_s}` record per case (throughput fields
+//! derived from the mean; `Null` when the case declared no element or
+//! byte volume), stamped with the git commit hash and an ISO-8601 UTC
 //! timestamp so the committed `BENCH_*.json` trajectory in the repo
 //! root stays attributable across PRs. All `rust/benches/*.rs`
 //! binaries are built on this.
@@ -39,6 +41,10 @@ pub struct Stats {
     pub min: Duration,
     /// Optional elements-per-iteration for throughput displays.
     pub elements: Option<u64>,
+    /// Optional bytes-per-iteration for bandwidth (GB/s) displays —
+    /// the bytes the case actually moves (reads + writes), so
+    /// bandwidth-bound kernels report against the memory wall.
+    pub bytes: Option<u64>,
 }
 
 impl Stats {
@@ -46,6 +52,14 @@ impl Stats {
     pub fn throughput(&self) -> Option<f64> {
         self.elements
             .map(|e| e as f64 / self.mean.as_secs_f64())
+            .filter(|t| t.is_finite())
+    }
+
+    /// Bandwidth in GB/s (when `bytes` is set), from the mean sample.
+    pub fn gb_per_s(&self) -> Option<f64> {
+        self.bytes
+            .map(|b| b as f64 / self.mean.as_secs_f64() / 1e9)
+            .filter(|g| g.is_finite())
     }
 
     /// One human-readable summary line (mean/median/σ/min + throughput).
@@ -56,8 +70,12 @@ impl Stats {
             Some(t) => format!("  {:>8.0} elem/s", t),
             None => String::new(),
         };
+        let bw = match self.gb_per_s() {
+            Some(g) => format!("  {g:>7.2} GB/s"),
+            None => String::new(),
+        };
         format!(
-            "{:<44} mean {:>12?}  median {:>12?}  σ {:>10?}  min {:>12?}{tp}",
+            "{:<44} mean {:>12?}  median {:>12?}  σ {:>10?}  min {:>12?}{tp}{bw}",
             self.name, self.mean, self.median, self.std_dev, self.min
         )
     }
@@ -131,15 +149,35 @@ impl Bench {
 
     /// Time `f` repeatedly; one sample = one call.
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Stats {
-        self.bench_elements(name, None, &mut f)
+        self.bench_elements(name, None, None, &mut f)
     }
 
     /// Time `f`, reporting throughput as `elements` per call.
     pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, elements: u64, mut f: F) -> &Stats {
-        self.bench_elements(name, Some(elements), &mut f)
+        self.bench_elements(name, Some(elements), None, &mut f)
     }
 
-    fn bench_elements(&mut self, name: &str, elements: Option<u64>, f: &mut dyn FnMut()) -> &Stats {
+    /// Time `f`, reporting element throughput *and* memory bandwidth:
+    /// `bytes` is the traffic one call moves (reads + writes), so the
+    /// JSON report carries a `gb_per_s` figure comparable against the
+    /// machine's memory bandwidth.
+    pub fn bench_gbps<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        bytes: u64,
+        mut f: F,
+    ) -> &Stats {
+        self.bench_elements(name, Some(elements), Some(bytes), &mut f)
+    }
+
+    fn bench_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        bytes: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &Stats {
         // Warmup.
         let start = Instant::now();
         while start.elapsed() < self.warmup {
@@ -181,6 +219,7 @@ impl Bench {
             std_dev: Duration::from_secs_f64(var.sqrt()),
             min,
             elements,
+            bytes,
         };
         println!("{}", stats.report());
         self.results.push(stats);
@@ -209,6 +248,27 @@ impl Bench {
                             "elements",
                             match s.elements {
                                 Some(e) => Json::Num(e as f64),
+                                None => Json::Null,
+                            },
+                        ),
+                        (
+                            "elem_per_s",
+                            match s.throughput() {
+                                Some(t) => Json::Num(t),
+                                None => Json::Null,
+                            },
+                        ),
+                        (
+                            "bytes",
+                            match s.bytes {
+                                Some(b) => Json::Num(b as f64),
+                                None => Json::Null,
+                            },
+                        ),
+                        (
+                            "gb_per_s",
+                            match s.gb_per_s() {
+                                Some(g) => Json::Num(g),
                                 None => Json::Null,
                             },
                         ),
@@ -363,6 +423,7 @@ mod tests {
         let mut b = fast_bench();
         b.bench_throughput("tp", 128, || {});
         b.bench("plain", || {});
+        b.bench_gbps("bw", 256, 1024, || {});
         let j = b.to_json();
         // Provenance stamp: commit + ISO-8601 UTC timestamp.
         let commit = j.get("commit").as_str().expect("commit present");
@@ -371,13 +432,23 @@ mod tests {
         assert_eq!(ts.len(), 20, "not ISO-8601: {ts}");
         assert!(ts.ends_with('Z') && ts.as_bytes()[10] == b'T', "{ts}");
         let arr = j.get("cases").as_arr().unwrap();
-        assert_eq!(arr.len(), 2);
+        assert_eq!(arr.len(), 3);
         assert_eq!(arr[0].get("name").as_str(), Some("tp"));
         assert_eq!(arr[0].get("elements").as_f64(), Some(128.0));
         assert!(arr[0].get("mean_ns").as_f64().is_some());
         assert!(arr[0].get("median_ns").as_f64().is_some());
         assert!(arr[0].get("min_ns").as_f64().is_some());
+        // Element throughput derives from mean; no byte volume ⇒ no
+        // bandwidth figure.
+        assert!(arr[0].get("elem_per_s").as_f64().unwrap() > 0.0);
+        assert_eq!(arr[0].get("bytes"), &Json::Null);
+        assert_eq!(arr[0].get("gb_per_s"), &Json::Null);
         assert_eq!(arr[1].get("elements"), &Json::Null);
+        assert_eq!(arr[1].get("elem_per_s"), &Json::Null);
+        // Byte-throughput case carries all four volume fields.
+        assert_eq!(arr[2].get("elements").as_f64(), Some(256.0));
+        assert_eq!(arr[2].get("bytes").as_f64(), Some(1024.0));
+        assert!(arr[2].get("gb_per_s").as_f64().unwrap() > 0.0);
         // Round-trips through the parser.
         let text = j.to_string();
         assert_eq!(Json::parse(&text).unwrap(), j);

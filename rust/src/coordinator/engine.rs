@@ -14,22 +14,19 @@ use crate::selection::{DeviceView, Selection, SelectionStrategy, SelectionView};
 use crate::transport::scenario::NetworkScenario;
 use crate::transport::wire::{self, UploadRef};
 use crate::transport::Channel;
-use crate::util::pool::parallel_for_each_mut;
+use crate::util::pool::parallel_for_cohort;
 use crate::util::ring::RecentWindow;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::vecmath::{axpy, diff_norm2_sq};
 use std::sync::Arc;
 
-/// Per-device slot: algorithm state + reusable buffers + per-round
-/// staging, kept together so one thread owns the whole cache line set.
+/// Per-device slot: algorithm state + per-round staging, kept together
+/// so one thread owns the whole cache line set. Gradient working
+/// buffers live in [`WorkerScratch`] (one per worker thread, not one
+/// per device), so engine memory is O(threads·d) + per-device state
+/// instead of O(M·d) of scratch.
 struct DeviceSlot {
     state: DeviceState,
-    grad_full: Vec<f32>,
-    grad_gathered: Vec<f32>,
-    /// Gradient workspace (activations, deltas, softmax staging) owned
-    /// by the slot so the batched `local_grad` passes allocate nothing
-    /// in steady state.
-    scratch: GradScratch,
     /// This round's serialized upload (valid when `staged`); encoded in
     /// the parallel device phase and read zero-copy by the server fold.
     /// Persists across rounds so encoding stops allocating after round 0.
@@ -40,12 +37,28 @@ struct DeviceSlot {
     participated: bool,
 }
 
+/// Gradient working set owned by one device-phase worker thread and
+/// reused across the devices in its cohort chunk (and across rounds).
+/// Every buffer is fully overwritten per device (`local_grad` fills the
+/// whole gradient, `gather` clears before extending), so sharing scratch
+/// across devices cannot change any device's result.
+struct WorkerScratch {
+    grad_full: Vec<f32>,
+    grad_gathered: Vec<f32>,
+    /// Gradient workspace (activations, deltas, softmax staging) owned
+    /// by the worker so the batched `local_grad` passes allocate nothing
+    /// in steady state.
+    scratch: GradScratch,
+}
+
 /// Mutable run state + the round protocol (steps 1–5 of the module docs
 /// in `crate::coordinator`). Problem, algorithm, and selection strategy
 /// are passed per call so front-ends may own them however they like.
 pub struct RoundEngine {
     cfg: RunConfig,
     slots: Vec<DeviceSlot>,
+    /// One gradient working set per worker thread (see [`WorkerScratch`]).
+    workers: Vec<WorkerScratch>,
     server: ServerAgg,
     theta: Vec<f32>,
     prev_theta: Vec<f32>,
@@ -65,7 +78,6 @@ pub struct RoundEngine {
     prev_loss: f64,
     coin_rng: Xoshiro256pp,
     dadaquant: DadaquantSchedule,
-    threads: usize,
     cum_bits: u64,
     /// Cumulative downlink (broadcast) bits.
     cum_bits_down: u64,
@@ -119,9 +131,6 @@ impl RoundEngine {
                     sections_for(mask),
                     cfg.seed,
                 ),
-                grad_full: vec![0.0; d],
-                grad_gathered: Vec::with_capacity(mask.support()),
-                scratch: problem.make_scratch(),
                 wire_buf: Vec::new(),
                 staged: false,
                 staged_level: None,
@@ -134,6 +143,13 @@ impl RoundEngine {
         } else {
             cfg.threads
         };
+        let workers = (0..threads.max(1).min(m.max(1)))
+            .map(|_| WorkerScratch {
+                grad_full: vec![0.0; d],
+                grad_gathered: Vec::new(),
+                scratch: problem.make_scratch(),
+            })
+            .collect();
         let mut server = ServerAgg::new(d, masks);
         server.set_threads(threads);
         // Per-device links are drawn from the run seed, so the fleet —
@@ -143,6 +159,7 @@ impl RoundEngine {
         Self {
             server,
             slots,
+            workers,
             prev_theta: theta.clone(),
             theta,
             channel,
@@ -158,7 +175,6 @@ impl RoundEngine {
                 cfg.dadaquant_patience,
                 cfg.dadaquant_cap,
             ),
-            threads,
             cfg,
             cum_bits: 0,
             cum_bits_down: 0,
@@ -296,11 +312,15 @@ impl RoundEngine {
         self.build_ctx(round, strategy)
     }
 
-    /// Run the in-process device phase for every selected device
-    /// (parallel): each computes its gradient, runs the client rule,
-    /// and *serializes* its upload into the slot's persistent wire
-    /// buffer; payload code buffers are recycled back into the device
-    /// state so steady-state rounds allocate nothing.
+    /// Run the in-process device phase, parallel over the *selected
+    /// cohort* (one [`WorkerScratch`] per worker thread): each selected
+    /// device computes its gradient, runs the client rule, and
+    /// *serializes* its upload into the slot's persistent wire buffer;
+    /// payload body buffers are recycled back into the device state so
+    /// steady-state rounds allocate nothing. Per-device work depends
+    /// only on the device's own state and the broadcast context, never
+    /// on the cohort partition, so results — theta trace and wire bytes
+    /// — are bit-identical at every thread count.
     pub fn local_device_phase(
         &mut self,
         problem: &dyn GradientSource,
@@ -308,21 +328,27 @@ impl RoundEngine {
         ctx: &RoundCtx,
     ) {
         let theta = &self.theta;
-        parallel_for_each_mut(&mut self.slots, self.threads, |i, slot| {
+        // Serial flag pass over all slots; collects the selected cohort
+        // (ascending device ids, as `parallel_for_cohort` requires).
+        let mut cohort = std::mem::take(&mut self.participant_buf);
+        cohort.clear();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
             slot.staged = false;
             slot.staged_level = None;
             slot.participated = ctx.is_selected(i);
-            if !slot.participated {
-                // Unselected devices neither compute nor consult the
-                // algorithm: participation is the engine's concern,
-                // not part of the `Algorithm` client contract (most
-                // client rules assume a full-length gradient).
-                return;
+            // Unselected devices neither compute nor consult the
+            // algorithm: participation is the engine's concern, not
+            // part of the `Algorithm` client contract (most client
+            // rules assume a full-length gradient).
+            if slot.participated {
+                cohort.push(i);
             }
-            slot.loss = problem.local_grad(i, theta, &mut slot.grad_full, &mut slot.scratch);
-            slot.state.mask.gather(&slot.grad_full, &mut slot.grad_gathered);
+        }
+        parallel_for_cohort(&mut self.slots, &cohort, &mut self.workers, |w, i, slot| {
+            slot.loss = problem.local_grad(i, theta, &mut w.grad_full, &mut w.scratch);
+            slot.state.mask.gather(&w.grad_full, &mut w.grad_gathered);
             let ClientUpload { payload, level } =
-                algo.client_step(&mut slot.state, &slot.grad_gathered, ctx);
+                algo.client_step(&mut slot.state, &w.grad_gathered, ctx);
             slot.staged_level = level;
             if let Some(p) = payload {
                 wire::encode_into(&p, &mut slot.wire_buf);
@@ -330,6 +356,7 @@ impl RoundEngine {
                 slot.state.recycle(p);
             }
         });
+        self.participant_buf = cohort;
     }
 
     /// Reset per-round staging for a round driven by *remote* clients:

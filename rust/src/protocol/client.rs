@@ -337,12 +337,58 @@ impl DeviceClient {
         }
     }
 
+    /// Compute one owned device's round result into its cache slot, if
+    /// it is selected, not hinted as already staged, and not already
+    /// cached. Touches only the unit's own state/buffers and its cache
+    /// slot, so disjoint units compute concurrently without changing
+    /// any result.
+    fn compute_unit(
+        &self,
+        sr: &super::messages::StartRound,
+        hinted: bool,
+        hint: &BTreeSet<u32>,
+        unit: &mut DeviceUnit,
+        slot: &mut Option<RoundResult>,
+    ) {
+        let i = unit.state.id;
+        if !sr.ctx.is_selected(i) || (hinted && hint.contains(&(i as u32))) || slot.is_some() {
+            return;
+        }
+        let loss = self
+            .problem
+            .local_grad(i, &sr.theta, &mut unit.grad_full, &mut unit.scratch);
+        unit.state.mask.gather(&unit.grad_full, &mut unit.grad_gathered);
+        let ClientUpload { payload, level } =
+            self.algo.client_step(&mut unit.state, &unit.grad_gathered, &sr.ctx);
+        let bytes = payload.map(|p| {
+            wire::encode_into(&p, &mut unit.wire_buf);
+            unit.state.recycle(p);
+            unit.wire_buf.clone()
+        });
+        *slot = Some(RoundResult {
+            round: sr.ctx.round as u32,
+            device: i as u32,
+            loss,
+            level,
+            uploads: unit.state.uploads,
+            skips: unit.state.skips,
+            payload: bytes,
+        });
+    }
+
     /// Compute-or-resend every owned selected device for one start
     /// round. A round seen for the first time clears the cache and
     /// computes (advancing device RNG streams); a replayed start round
     /// — after a reconnect, or duplicated by a fault — resends the
     /// cached bytes verbatim, minus whatever the rejoin ack said is
     /// already staged.
+    ///
+    /// Computation runs in parallel over the owned units (each worker
+    /// owns a disjoint units/cache chunk pair; per-device work depends
+    /// only on that device's own state and the broadcast context), then
+    /// results are sent serially in ascending device order — so a
+    /// served run's wire traffic is bit-identical to the in-process
+    /// device phase at every thread count.
     fn serve_round(
         &self,
         core: &mut ClientCore,
@@ -355,8 +401,38 @@ impl DeviceClient {
             core.cache.iter_mut().for_each(|s| *s = None);
         }
         let hinted = core.hint_round == Some(k);
-        for idx in 0..core.units.len() {
-            let unit = &mut core.units[idx];
+
+        // ---- compute phase (parallel over owned units) -------------
+        let n = core.units.len();
+        let threads = if self.cfg.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.cfg.threads
+        }
+        .max(1)
+        .min(n.max(1));
+        if threads <= 1 || n <= 1 {
+            for (unit, slot) in core.units.iter_mut().zip(core.cache.iter_mut()) {
+                self.compute_unit(sr, hinted, &core.hint, unit, slot);
+            }
+        } else {
+            let chunk = n.div_ceil(threads);
+            let hint = &core.hint;
+            std::thread::scope(|scope| {
+                for (units, cache) in
+                    core.units.chunks_mut(chunk).zip(core.cache.chunks_mut(chunk))
+                {
+                    scope.spawn(move || {
+                        for (unit, slot) in units.iter_mut().zip(cache.iter_mut()) {
+                            self.compute_unit(sr, hinted, hint, unit, slot);
+                        }
+                    });
+                }
+            });
+        }
+
+        // ---- send phase (serial, ascending device order) -----------
+        for (unit, slot) in core.units.iter().zip(core.cache.iter()) {
             let i = unit.state.id;
             if !sr.ctx.is_selected(i) {
                 continue;
@@ -364,32 +440,7 @@ impl DeviceClient {
             if hinted && core.hint.contains(&(i as u32)) {
                 continue;
             }
-            if core.cache[idx].is_none() {
-                let loss = self.problem.local_grad(
-                    i,
-                    &sr.theta,
-                    &mut unit.grad_full,
-                    &mut unit.scratch,
-                );
-                unit.state.mask.gather(&unit.grad_full, &mut unit.grad_gathered);
-                let ClientUpload { payload, level } =
-                    self.algo.client_step(&mut unit.state, &unit.grad_gathered, &sr.ctx);
-                let bytes = payload.map(|p| {
-                    wire::encode_into(&p, &mut unit.wire_buf);
-                    unit.state.recycle(p);
-                    unit.wire_buf.clone()
-                });
-                core.cache[idx] = Some(RoundResult {
-                    round: k,
-                    device: i as u32,
-                    loss,
-                    level,
-                    uploads: unit.state.uploads,
-                    skips: unit.state.skips,
-                    payload: bytes,
-                });
-            }
-            let r = core.cache[idx].clone().expect("just cached");
+            let r = slot.clone().expect("computed above");
             conn.send(&Message::RoundResult(r))?;
         }
         if core.counted_round != Some(k) {

@@ -123,15 +123,58 @@ pub fn quantize_with_range_into(v: &[f32], bits: u8, range: f32, mut psi: Vec<u3
     }
 }
 
+/// Destination for quantized codes: either the legacy `psi: Vec<u32>`
+/// or a word-streaming [`crate::quant::packing::PackWriter`]. The
+/// quantize cores are generic over this, so the unpacked and the fused
+/// quantize→pack paths share one arithmetic path and are bit-identical
+/// by construction (the dedup point of the former `quantize*_append`
+/// wrapper ladder).
+trait CodeSink {
+    fn put(&mut self, code: u32);
+    fn put_zeros(&mut self, n: usize);
+}
+
+impl CodeSink for Vec<u32> {
+    #[inline(always)]
+    fn put(&mut self, code: u32) {
+        self.push(code);
+    }
+
+    #[inline]
+    fn put_zeros(&mut self, n: usize) {
+        self.resize(self.len() + n, 0);
+    }
+}
+
+impl CodeSink for crate::quant::packing::PackWriter<'_> {
+    #[inline(always)]
+    fn put(&mut self, code: u32) {
+        self.push(code);
+    }
+
+    #[inline]
+    fn put_zeros(&mut self, n: usize) {
+        for _ in 0..n {
+            self.push(0);
+        }
+    }
+}
+
 /// Quantize one slice at an externally supplied range, *appending* its
 /// codes to `psi` — the shared core of the global and sectioned
 /// quantizers. Arithmetic is exactly Definition 2, unchanged from the
 /// pre-sectioning implementation (so `global` wire payloads stay
 /// byte-identical).
 fn quantize_slice_append(v: &[f32], bits: u8, range: f32, psi: &mut Vec<u32>) {
+    quantize_slice_sink(v, bits, range, psi);
+}
+
+/// Sink-generic core of [`quantize_slice_append`]; the fused packed
+/// quantizers call it with a [`crate::quant::packing::PackWriter`].
+fn quantize_slice_sink<S: CodeSink>(v: &[f32], bits: u8, range: f32, sink: &mut S) {
     assert!(range >= 0.0 && range.is_finite(), "range must be finite ≥ 0");
     if range == 0.0 {
-        psi.resize(psi.len() + v.len(), 0);
+        sink.put_zeros(v.len());
         return;
     }
     let max_code = crate::quant::max_code(bits);
@@ -143,7 +186,7 @@ fn quantize_slice_append(v: &[f32], bits: u8, range: f32, psi: &mut Vec<u32>) {
         let maxc = max_code as f32;
         for &x in v {
             let code = ((x + range) * inv_step + 0.5).floor().clamp(0.0, maxc);
-            psi.push(code as u32);
+            sink.put(code as u32);
         }
     } else {
         let t = tau(bits);
@@ -156,7 +199,7 @@ fn quantize_slice_append(v: &[f32], bits: u8, range: f32, psi: &mut Vec<u32>) {
             // due to an externally supplied range; with R = ‖v‖_∞ it
             // never fires.
             let code = code.clamp(0.0, max_code as f64) as u32;
-            psi.push(code);
+            sink.put(code);
         }
     }
 }
@@ -416,9 +459,26 @@ fn fused_quantize_slice_append(
     dq_out: &mut [f32],
     psi: &mut Vec<u32>,
 ) -> (f64, f64) {
+    fused_quantize_slice_sink(g, q_prev, bits, range, dq_out, psi)
+}
+
+/// Sink-generic core of [`fused_quantize_slice_append`]: one traversal
+/// computes codes, reconstructs `Δq`, and accumulates the two skip-rule
+/// norms, emitting codes into either a `psi` vector or a word-streaming
+/// [`crate::quant::packing::PackWriter`]. One arithmetic path for both
+/// sinks means the packed and unpacked forms agree bitwise (codes,
+/// norms, `dq_out`) by construction.
+fn fused_quantize_slice_sink<S: CodeSink>(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    range: f32,
+    dq_out: &mut [f32],
+    sink: &mut S,
+) -> (f64, f64) {
     let d = g.len();
     if range == 0.0 {
-        psi.resize(psi.len() + d, 0);
+        sink.put_zeros(d);
         dq_out.fill(0.0);
         // ε = v − 0 = v; with range 0 the innovation is exactly zero.
         return (0.0, 0.0);
@@ -435,9 +495,6 @@ fn fused_quantize_slice_append(
         let step = 2.0 * t32 * range;
         let inv_step = 1.0 / step;
         let maxc = max_code as f32;
-        let base = psi.len();
-        psi.resize(base + d, 0);
-        let psi_s = &mut psi[base..];
         // Four independent accumulator lanes break the f64-add
         // dependency chain (§Perf iteration 2: +25% on d = 1M).
         let mut dq_acc = [0.0f64; 4];
@@ -451,7 +508,7 @@ fn fused_quantize_slice_append(
             dq_acc[lane] += (dq as f64) * (dq as f64);
             err_acc[lane] += (err as f64) * (err as f64);
             dq_out[i] = dq;
-            psi_s[i] = code as u32;
+            sink.put(code as u32);
         }
         dq_norm_sq = dq_acc.iter().sum();
         err_norm_sq = err_acc.iter().sum();
@@ -469,10 +526,315 @@ fn fused_quantize_slice_append(
             dq_norm_sq += dq * dq;
             err_norm_sq += err * err;
             dq_out[i] = dq as f32;
-            psi.push(code);
+            sink.put(code);
         }
     }
     (dq_norm_sq, err_norm_sq)
+}
+
+/// Result of the fused quantize→pack device kernels: the packed wire
+/// form of the innovation plus the two norms the skip rule needs.
+#[derive(Clone, Debug)]
+pub struct PackedOutcome {
+    /// Packed wire representation of the innovation.
+    pub packed: crate::quant::PackedVec,
+    /// `‖Δq‖₂²` — LHS term 1 of the skip criterion (eq. 8).
+    pub dq_norm_sq: f64,
+    /// `‖ε‖₂² = ‖v − Δq‖₂²` — LHS term 2 of the skip criterion.
+    pub err_norm_sq: f64,
+}
+
+/// Fused quantize→pack device step (§Perf): quantize the implicit
+/// innovation `v = g − q_prev`, reconstruct `Δq` into `dq_out`,
+/// accumulate the two skip-rule norms, and emit the packed
+/// little-endian wire body — all in one traversal, with no intermediate
+/// `codes: Vec<u32>`. It shares its per-element arithmetic and
+/// norm-accumulation order with [`quantize_innovation_fused`] (one
+/// sink-generic core), so norms and `dq_out` agree *bitwise* with the
+/// unpacked path and the body bytes equal
+/// `packing::pack_into(&psi, bits, ..)` over the unpacked codes.
+pub fn quantize_innovation_packed(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    range: f32,
+    dq_out: &mut [f32],
+) -> PackedOutcome {
+    quantize_innovation_packed_buf(g, q_prev, bits, range, dq_out, Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize_innovation_packed`]: `body` is
+/// cleared and refilled (keeping its capacity) and ends up owned by the
+/// returned [`crate::quant::PackedVec`], so the device hot path
+/// performs zero allocations in steady state.
+pub fn quantize_innovation_packed_buf(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    range: f32,
+    dq_out: &mut [f32],
+    mut body: Vec<u8>,
+) -> PackedOutcome {
+    assert_eq!(g.len(), q_prev.len());
+    assert_eq!(g.len(), dq_out.len());
+    assert!((1..=MAX_BITS).contains(&bits));
+    body.clear();
+    body.reserve(crate::quant::packing::packed_len(g.len(), bits));
+    let mut w = crate::quant::packing::PackWriter::new(&mut body, bits);
+    let (dq_norm_sq, err_norm_sq) = fused_quantize_slice_sink(g, q_prev, bits, range, dq_out, &mut w);
+    w.finish();
+    debug_assert_eq!(body.len(), crate::quant::packing::packed_len(g.len(), bits));
+    PackedOutcome {
+        packed: crate::quant::PackedVec {
+            bits,
+            scale: range,
+            len: u32::try_from(g.len()).expect("vector too large for wire"),
+            body,
+            section_scales: Vec::new(),
+        },
+        dq_norm_sq,
+        err_norm_sq,
+    }
+}
+
+/// Section-aware [`quantize_innovation_packed_buf`]: one externally
+/// supplied range per section, one continuous packed bit stream across
+/// sections (exactly what `pack_into` over the concatenated ψ would
+/// produce), and summed skip-rule norms. A single-section partition
+/// delegates to the global path — byte-identical v1 wire form.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_innovation_packed_sections_buf(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    ranges: &[f32],
+    sections: &crate::quant::Sections,
+    dq_out: &mut [f32],
+    mut body: Vec<u8>,
+) -> PackedOutcome {
+    assert_eq!(g.len(), q_prev.len());
+    assert_eq!(g.len(), dq_out.len());
+    assert_eq!(sections.total(), g.len(), "sections must cover the vector");
+    assert_eq!(ranges.len(), sections.count(), "one range per section");
+    assert!((1..=MAX_BITS).contains(&bits));
+    if sections.is_global() {
+        return quantize_innovation_packed_buf(g, q_prev, bits, ranges[0], dq_out, body);
+    }
+    body.clear();
+    body.reserve(crate::quant::packing::packed_len(g.len(), bits));
+    let mut dq_norm_sq = 0.0f64;
+    let mut err_norm_sq = 0.0f64;
+    let mut scales = Vec::with_capacity(sections.count());
+    let mut range = 0.0f32;
+    let mut w = crate::quant::packing::PackWriter::new(&mut body, bits);
+    for (i, r) in sections.iter().enumerate() {
+        let (a, b) = fused_quantize_slice_sink(
+            &g[r.clone()],
+            &q_prev[r.clone()],
+            bits,
+            ranges[i],
+            &mut dq_out[r.clone()],
+            &mut w,
+        );
+        dq_norm_sq += a;
+        err_norm_sq += b;
+        scales.push((ranges[i], r.len() as u32));
+        range = range.max(ranges[i]);
+    }
+    w.finish();
+    PackedOutcome {
+        packed: crate::quant::PackedVec {
+            bits,
+            scale: range,
+            len: u32::try_from(g.len()).expect("vector too large for wire"),
+            body,
+            section_scales: scales,
+        },
+        dq_norm_sq,
+        err_norm_sq,
+    }
+}
+
+/// Fused quantize→pack of a *full* vector at `R = ‖v‖_∞` — the packed
+/// counterpart of [`quantize_buf`], used by the full-gradient
+/// algorithms (AdaQuantFL, DAdaQuant).
+pub fn quantize_packed_buf(v: &[f32], bits: u8, body: Vec<u8>) -> crate::quant::PackedVec {
+    let range = crate::util::vecmath::norm_inf(v);
+    quantize_with_range_packed_buf(v, bits, range, body)
+}
+
+/// Packed counterpart of [`quantize_with_range_into`].
+pub fn quantize_with_range_packed_buf(
+    v: &[f32],
+    bits: u8,
+    range: f32,
+    mut body: Vec<u8>,
+) -> crate::quant::PackedVec {
+    assert!((1..=MAX_BITS).contains(&bits), "bits must be in 1..=32");
+    body.clear();
+    body.reserve(crate::quant::packing::packed_len(v.len(), bits));
+    let mut w = crate::quant::packing::PackWriter::new(&mut body, bits);
+    quantize_slice_sink(v, bits, range, &mut w);
+    w.finish();
+    crate::quant::PackedVec {
+        bits,
+        scale: range,
+        len: u32::try_from(v.len()).expect("vector too large for wire"),
+        body,
+        section_scales: Vec::new(),
+    }
+}
+
+/// Packed counterpart of [`quantize_sections_buf`]: per-section
+/// `R_s = ‖v_s‖_∞` scales, one continuous packed stream. A
+/// single-section partition delegates to [`quantize_packed_buf`].
+pub fn quantize_sections_packed_buf(
+    v: &[f32],
+    bits: u8,
+    sections: &crate::quant::Sections,
+    mut body: Vec<u8>,
+) -> crate::quant::PackedVec {
+    assert!((1..=MAX_BITS).contains(&bits), "bits must be in 1..=32");
+    assert_eq!(sections.total(), v.len(), "sections must cover the vector");
+    if sections.is_global() {
+        return quantize_packed_buf(v, bits, body);
+    }
+    body.clear();
+    body.reserve(crate::quant::packing::packed_len(v.len(), bits));
+    let mut scales = Vec::with_capacity(sections.count());
+    let mut range = 0.0f32;
+    let mut w = crate::quant::packing::PackWriter::new(&mut body, bits);
+    for r in sections.iter() {
+        let slice = &v[r.clone()];
+        let rs = crate::util::vecmath::norm_inf(slice);
+        quantize_slice_sink(slice, bits, rs, &mut w);
+        scales.push((rs, r.len() as u32));
+        range = range.max(rs);
+    }
+    w.finish();
+    crate::quant::PackedVec {
+        bits,
+        scale: range,
+        len: u32::try_from(v.len()).expect("vector too large for wire"),
+        body,
+        section_scales: scales,
+    }
+}
+
+/// Element-block size of [`quantize_innovation_packed_par`], chosen so a
+/// full block's packed size is a whole number of little-endian `u64`
+/// words for *every* level `b`: `65536·b` bits = `1024·b` words. The
+/// streaming packer's carry accumulator is therefore exactly empty at
+/// every block boundary, so blocks packed independently concatenate to
+/// the serial byte stream — the word-level analogue of the fixed shard
+/// grid that makes `parallel_for_shards` / `util::gemm` reductions
+/// thread-invariant.
+pub const FUSED_BLOCK: usize = 65536;
+
+/// Thread-parallel form of [`quantize_innovation_packed_buf`] for wide
+/// models (global single-scale payloads only; sectioned payloads use
+/// the serial kernel). The vector is cut on the fixed [`FUSED_BLOCK`]
+/// grid regardless of `threads`:
+///
+/// * **bytes** — each full block packs into a disjoint whole-word byte
+///   range, so the packed body is *byte-identical* to the serial kernel
+///   (and to quantize-then-`pack_into`) at any thread count;
+/// * **norms** — per-block partial sums are reduced in block order, so
+///   `dq_norm_sq` / `err_norm_sq` are bit-identical at any thread
+///   count. They equal the serial kernel's norms bitwise whenever
+///   `d ≤ FUSED_BLOCK` (one block ⇒ same accumulation grouping); above
+///   that the fixed block grid regroups the f64 additions, which is why
+///   the *engine* device phase parallelizes across the cohort with the
+///   serial kernel per device instead of using this one.
+pub fn quantize_innovation_packed_par(
+    g: &[f32],
+    q_prev: &[f32],
+    bits: u8,
+    range: f32,
+    dq_out: &mut [f32],
+    mut body: Vec<u8>,
+    threads: usize,
+) -> PackedOutcome {
+    assert_eq!(g.len(), q_prev.len());
+    assert_eq!(g.len(), dq_out.len());
+    assert!((1..=MAX_BITS).contains(&bits));
+    let d = g.len();
+    let n_blocks = d.div_ceil(FUSED_BLOCK).max(1);
+    let threads = threads.clamp(1, n_blocks);
+    body.clear();
+    body.resize(crate::quant::packing::packed_len(d, bits), 0);
+    let block_bytes = crate::quant::packing::packed_len(FUSED_BLOCK, bits);
+    let mut partials = vec![(0.0f64, 0.0f64); n_blocks];
+    // One worker packs a contiguous run of blocks: per block, pack into
+    // a reused scratch and copy into the block's disjoint byte range.
+    let work = |parts: &mut [(f64, f64)],
+                gs: &[f32],
+                qs: &[f32],
+                dqs: &mut [f32],
+                bys: &mut [u8]| {
+        let mut scratch: Vec<u8> = Vec::with_capacity(block_bytes);
+        for (j, p) in parts.iter_mut().enumerate() {
+            let lo = j * FUSED_BLOCK;
+            let hi = (lo + FUSED_BLOCK).min(gs.len());
+            scratch.clear();
+            let mut w = crate::quant::packing::PackWriter::new(&mut scratch, bits);
+            *p = fused_quantize_slice_sink(&gs[lo..hi], &qs[lo..hi], bits, range, &mut dqs[lo..hi], &mut w);
+            w.finish();
+            let byte0 = j * block_bytes;
+            bys[byte0..byte0 + scratch.len()].copy_from_slice(&scratch);
+        }
+    };
+    if threads <= 1 {
+        work(&mut partials, g, q_prev, dq_out, &mut body);
+    } else {
+        let per = n_blocks.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut parts_rest = partials.as_mut_slice();
+            let mut dq_rest = &mut *dq_out;
+            let mut body_rest = body.as_mut_slice();
+            let mut blk0 = 0usize;
+            while blk0 < n_blocks {
+                let nb = per.min(n_blocks - blk0);
+                let (parts, pr) = parts_rest.split_at_mut(nb);
+                parts_rest = pr;
+                let elem0 = blk0 * FUSED_BLOCK;
+                let elems = (nb * FUSED_BLOCK).min(d - elem0);
+                let (dqs, dr) = dq_rest.split_at_mut(elems);
+                dq_rest = dr;
+                let bytes = if blk0 + nb == n_blocks {
+                    body_rest.len()
+                } else {
+                    nb * block_bytes
+                };
+                let (bys, br) = body_rest.split_at_mut(bytes);
+                body_rest = br;
+                let gs = &g[elem0..elem0 + elems];
+                let qs = &q_prev[elem0..elem0 + elems];
+                let work = &work;
+                scope.spawn(move || work(parts, gs, qs, dqs, bys));
+                blk0 += nb;
+            }
+        });
+    }
+    // Fixed reduction: per-block partials summed in block order —
+    // invariant to the thread count.
+    let mut dq_norm_sq = 0.0f64;
+    let mut err_norm_sq = 0.0f64;
+    for &(a, b) in &partials {
+        dq_norm_sq += a;
+        err_norm_sq += b;
+    }
+    PackedOutcome {
+        packed: crate::quant::PackedVec {
+            bits,
+            scale: range,
+            len: u32::try_from(d).expect("vector too large for wire"),
+            body,
+            section_scales: Vec::new(),
+        },
+        dq_norm_sq,
+        err_norm_sq,
+    }
 }
 
 #[cfg(test)]
@@ -760,5 +1122,167 @@ mod tests {
         dequantize_scatter_add(&[], 4, 0.0, 0..4, None, 0, 1.0, &mut out);
         dequantize_scatter_add(&[0xFF], 4, 1.0, 2..2, None, 0, 1.0, &mut out);
         assert_eq!(out, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn packed_matches_fused_then_pack() {
+        use crate::quant::packing::pack;
+        let mut rng = Xoshiro256pp::seed_from_u64(101);
+        for bits in [1u8, 4, 6, 12, 13, 16] {
+            let d = 517;
+            let g: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            let qp: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = g.iter().zip(&qp).map(|(a, b)| a - b).collect();
+            let linf = crate::util::vecmath::norm_inf(&v);
+            let mut dq1 = vec![0.0f32; d];
+            let legacy = quantize_innovation_fused(&g, &qp, bits, linf, &mut dq1);
+            let mut dq2 = vec![0.0f32; d];
+            let out = quantize_innovation_packed(&g, &qp, bits, linf, &mut dq2);
+            assert_eq!(out.packed.body, pack(&legacy.quantized.psi, bits), "bits={bits}");
+            assert_eq!(out.packed.scale, linf);
+            assert_eq!(out.packed.dim(), d);
+            assert_eq!(out.dq_norm_sq.to_bits(), legacy.dq_norm_sq.to_bits());
+            assert_eq!(out.err_norm_sq.to_bits(), legacy.err_norm_sq.to_bits());
+            for (a, b) in dq1.iter().zip(&dq2) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sections_matches_fused_then_pack() {
+        use crate::quant::packing::pack;
+        use crate::quant::Sections;
+        let mut rng = Xoshiro256pp::seed_from_u64(102);
+        let d = 301;
+        let g: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let qp: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = g.iter().zip(&qp).map(|(a, b)| a - b).collect();
+        let sections = Sections::from_lens([120usize, 64, 117]);
+        let ranges: Vec<f32> = sections
+            .iter()
+            .map(|r| crate::util::vecmath::norm_inf(&v[r]))
+            .collect();
+        let mut dq1 = vec![0.0f32; d];
+        let legacy = quantize_innovation_fused_sections_buf(
+            &g,
+            &qp,
+            5,
+            &ranges,
+            &sections,
+            &mut dq1,
+            Vec::new(),
+        );
+        let mut dq2 = vec![0.0f32; d];
+        let out = quantize_innovation_packed_sections_buf(
+            &g,
+            &qp,
+            5,
+            &ranges,
+            &sections,
+            &mut dq2,
+            Vec::new(),
+        );
+        assert_eq!(out.packed.body, pack(&legacy.quantized.psi, 5));
+        assert_eq!(out.packed.section_scales, legacy.quantized.section_scales);
+        assert_eq!(out.dq_norm_sq.to_bits(), legacy.dq_norm_sq.to_bits());
+        assert_eq!(out.err_norm_sq.to_bits(), legacy.err_norm_sq.to_bits());
+        // Single-section partition delegates to the (v1) global path.
+        let out2 = quantize_innovation_packed_sections_buf(
+            &g,
+            &qp,
+            5,
+            &[crate::util::vecmath::norm_inf(&v)],
+            &Sections::global(d),
+            &mut dq2,
+            Vec::new(),
+        );
+        assert!(!out2.packed.is_sectioned());
+    }
+
+    #[test]
+    fn packed_full_matches_quantize_then_pack() {
+        use crate::quant::packing::pack;
+        use crate::quant::Sections;
+        let mut rng = Xoshiro256pp::seed_from_u64(103);
+        let v: Vec<f32> = (0..273).map(|_| rng.gaussian_f32(0.0, 2.0)).collect();
+        let q = quantize(&v, 7);
+        let p = quantize_packed_buf(&v, 7, Vec::new());
+        assert_eq!(p.body, pack(&q.psi, 7));
+        assert_eq!(p.scale, q.range);
+        let sections = Sections::from_lens([100usize, 173]);
+        let qs = quantize_sections(&v, 7, &sections);
+        let ps = quantize_sections_packed_buf(&v, 7, &sections, Vec::new());
+        assert_eq!(ps.body, pack(&qs.psi, 7));
+        assert_eq!(ps.section_scales, qs.section_scales);
+        assert_eq!(ps.scale, qs.range);
+    }
+
+    #[test]
+    fn packed_buf_reuses_capacity() {
+        let g = [1.0f32, -2.0, 0.5];
+        let qp = [0.0f32; 3];
+        let mut dq = [0.0f32; 3];
+        let body = Vec::with_capacity(64);
+        let cap_ptr = body.as_ptr();
+        let out = quantize_innovation_packed_buf(&g, &qp, 4, 2.0, &mut dq, body);
+        assert_eq!(out.packed.body.as_ptr(), cap_ptr, "buffer not reused");
+        // Stale bytes from a previous (larger) round must not leak.
+        let mut stale = out.packed.body;
+        stale.extend_from_slice(&[0xAB; 32]);
+        let out2 = quantize_innovation_packed_buf(&g, &qp, 4, 2.0, &mut dq, stale);
+        let fresh = quantize_innovation_packed_buf(&g, &qp, 4, 2.0, &mut dq, Vec::new());
+        assert_eq!(out2.packed, fresh.packed);
+    }
+
+    #[test]
+    fn packed_par_thread_invariant_and_matches_serial() {
+        let mut rng = Xoshiro256pp::seed_from_u64(104);
+        // Spans several FUSED_BLOCK blocks with a partial tail.
+        let d = 2 * FUSED_BLOCK + 12_345;
+        let g: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let qp: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = g.iter().zip(&qp).map(|(a, b)| a - b).collect();
+        let linf = crate::util::vecmath::norm_inf(&v);
+        for bits in [3u8, 4, 13] {
+            let mut dq_s = vec![0.0f32; d];
+            let serial = quantize_innovation_packed(&g, &qp, bits, linf, &mut dq_s);
+            let mut ref_out: Option<PackedOutcome> = None;
+            for threads in [1usize, 2, 7] {
+                let mut dq_p = vec![0.0f32; d];
+                let par = quantize_innovation_packed_par(
+                    &g,
+                    &qp,
+                    bits,
+                    linf,
+                    &mut dq_p,
+                    Vec::new(),
+                    threads,
+                );
+                // Bytes identical to the serial kernel at any thread count.
+                assert_eq!(par.packed, serial.packed, "bits={bits} threads={threads}");
+                for (a, b) in dq_s.iter().zip(&dq_p) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                // Norms thread-invariant (block-ordered reduction).
+                if let Some(r) = &ref_out {
+                    assert_eq!(par.dq_norm_sq.to_bits(), r.dq_norm_sq.to_bits());
+                    assert_eq!(par.err_norm_sq.to_bits(), r.err_norm_sq.to_bits());
+                } else {
+                    ref_out = Some(par);
+                }
+            }
+        }
+        // At d ≤ FUSED_BLOCK (one block) the par norms equal the serial
+        // kernel's bitwise, not just the bytes.
+        let d2 = 10_000;
+        let mut dq_a = vec![0.0f32; d2];
+        let mut dq_b = vec![0.0f32; d2];
+        let linf2 = crate::util::vecmath::norm_inf(&v[..d2]);
+        let a = quantize_innovation_packed(&g[..d2], &qp[..d2], 4, linf2, &mut dq_a);
+        let b = quantize_innovation_packed_par(&g[..d2], &qp[..d2], 4, linf2, &mut dq_b, Vec::new(), 7);
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(a.dq_norm_sq.to_bits(), b.dq_norm_sq.to_bits());
+        assert_eq!(a.err_norm_sq.to_bits(), b.err_norm_sq.to_bits());
     }
 }

@@ -11,10 +11,50 @@ pub mod sections;
 
 pub use levels::{adaquantfl_level, aquila_level, aquila_level_upper_bound, aquila_tau_star};
 pub use midtread::{
-    dequantize, dequantize_into, quantize, quantize_innovation_fused, quantize_with_range,
-    QuantizeOutcome, QuantizedVec, MAX_BITS,
+    dequantize, dequantize_into, quantize, quantize_innovation_fused, quantize_innovation_packed,
+    quantize_with_range, PackedOutcome, QuantizeOutcome, QuantizedVec, MAX_BITS,
 };
 pub use sections::{SectionSpec, Sections};
+
+/// A quantized vector whose codes are already bit-packed into the wire
+/// body — the output of the fused quantize→pack kernels
+/// ([`midtread::quantize_innovation_packed_buf`],
+/// [`qsgd::quantize_packed_buf`]). Compared to [`QuantizedVec`] /
+/// [`qsgd::QsgdVec`] the intermediate `codes: Vec<u32>` never exists:
+/// `body` holds exactly the bytes the unpacked form would serialize to
+/// (mid-tread: `packing::pack_into(&psi, bits, ..)`; QSGD: sign bitmap
+/// followed by the packed magnitudes), so `transport::wire::encode`
+/// appends it verbatim and the wire stream stays byte-identical to the
+/// unpacked path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedVec {
+    /// Quantization level `b` (bits per element).
+    pub bits: u8,
+    /// Wire header scale — mid-tread: range `R = ‖v‖_∞` (the max
+    /// section scale when sectioned); QSGD: `‖v‖₂`.
+    pub scale: f32,
+    /// Element count of the underlying vector.
+    pub len: u32,
+    /// Packed wire body bytes.
+    pub body: Vec<u8>,
+    /// Per-section `(scale, len)` pairs (wire v2 section table). Empty
+    /// = single global scale — the v1 wire form.
+    pub section_scales: Vec<(f32, u32)>,
+}
+
+impl PackedVec {
+    /// Dimension of the underlying vector.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.len as usize
+    }
+
+    /// Whether this vector carries per-section scales (wire v2).
+    #[inline]
+    pub fn is_sectioned(&self) -> bool {
+        !self.section_scales.is_empty()
+    }
+}
 
 /// Bit mask covering the low `bits` bits of a code word — the single
 /// source of the `(1 << b) − 1` expression previously duplicated across

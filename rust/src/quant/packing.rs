@@ -35,34 +35,74 @@ pub fn pack(codes: &[u32], bits: u8) -> Vec<u8> {
 /// form of [`pack`]; the device hot path packs into a per-device wire
 /// buffer that persists across rounds).
 ///
-/// The accumulator flushes whole little-endian `u64` words; only the
-/// final partial word is written byte-wise.
+/// Thin wrapper over [`PackWriter`]: the accumulator flushes whole
+/// little-endian `u64` words; only the final partial word is written
+/// byte-wise.
 pub fn pack_into(codes: &[u32], bits: u8, out: &mut Vec<u8>) {
-    assert!((1..=32).contains(&bits));
     out.reserve(packed_len(codes.len(), bits));
-    let b = bits as u32;
-    let mask = code_mask(bits);
-    let mut acc: u64 = 0;
-    let mut acc_bits: u32 = 0;
+    let mut w = PackWriter::new(out, bits);
     for &c in codes {
-        debug_assert!((c as u64) <= mask, "code {c} exceeds {bits} bits");
-        let c = (c as u64) & mask;
-        acc |= c << acc_bits;
-        let filled = acc_bits + b;
+        w.push(c);
+    }
+    w.finish();
+}
+
+/// Word-streaming bit-packer: codes are pushed one at a time and whole
+/// little-endian `u64` words are flushed to the output buffer as they
+/// fill, so fused quantize kernels can emit packed bytes directly with
+/// no intermediate `codes: Vec<u32>`.
+///
+/// The produced bytes are exactly those of [`pack_into`] (which is a
+/// thin wrapper over this type). Dropping a writer without calling
+/// [`PackWriter::finish`] loses the buffered partial word.
+pub struct PackWriter<'a> {
+    out: &'a mut Vec<u8>,
+    b: u32,
+    mask: u64,
+    acc: u64,
+    acc_bits: u32,
+}
+
+impl<'a> PackWriter<'a> {
+    /// Start a packed stream appending to `out` at `bits` per code.
+    #[inline]
+    pub fn new(out: &'a mut Vec<u8>, bits: u8) -> Self {
+        assert!((1..=32).contains(&bits));
+        Self {
+            out,
+            b: bits as u32,
+            mask: code_mask(bits),
+            acc: 0,
+            acc_bits: 0,
+        }
+    }
+
+    /// Append one code to the stream.
+    #[inline]
+    pub fn push(&mut self, c: u32) {
+        debug_assert!((c as u64) <= self.mask, "code {c} exceeds {} bits", self.b);
+        let c = (c as u64) & self.mask;
+        self.acc |= c << self.acc_bits;
+        let filled = self.acc_bits + self.b;
         if filled >= 64 {
-            out.extend_from_slice(&acc.to_le_bytes());
-            acc_bits = filled - 64;
+            self.out.extend_from_slice(&self.acc.to_le_bytes());
+            self.acc_bits = filled - 64;
             // The high `acc_bits` bits of `c` did not fit in the flushed
             // word; `c >> b` is 0 when the code ended exactly on the
             // word boundary.
-            acc = c >> (b - acc_bits);
+            self.acc = c >> (self.b - self.acc_bits);
         } else {
-            acc_bits = filled;
+            self.acc_bits = filled;
         }
     }
-    if acc_bits > 0 {
-        let tail = (acc_bits as usize).div_ceil(8);
-        out.extend_from_slice(&acc.to_le_bytes()[..tail]);
+
+    /// Flush the final partial word (if any) and end the stream.
+    #[inline]
+    pub fn finish(self) {
+        if self.acc_bits > 0 {
+            let tail = (self.acc_bits as usize).div_ceil(8);
+            self.out.extend_from_slice(&self.acc.to_le_bytes()[..tail]);
+        }
     }
 }
 

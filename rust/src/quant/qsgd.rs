@@ -126,6 +126,160 @@ pub fn quantize_sections_buf(
     }
 }
 
+/// Fused quantize→pack form of [`quantize`] (§Perf): emits the wire
+/// body — the sign bitmap followed by the packed magnitude words —
+/// directly, so the intermediate `mags: Vec<u32>` / `signs: Vec<bool>`
+/// never exist. Per-element arithmetic and RNG consumption order are
+/// identical to [`quantize`], so the produced bytes are exactly
+/// `pack_signs(&q.signs)` followed by `pack(&q.mags, bits)`.
+pub fn quantize_packed(v: &[f32], bits: u8, rng: &mut Xoshiro256pp) -> crate::quant::PackedVec {
+    quantize_packed_buf(v, bits, rng, Vec::new())
+}
+
+/// Buffer-reusing form of [`quantize_packed`]: `body` is cleared and
+/// refilled keeping its capacity, then owned by the returned
+/// [`crate::quant::PackedVec`].
+pub fn quantize_packed_buf(
+    v: &[f32],
+    bits: u8,
+    rng: &mut Xoshiro256pp,
+    mut body: Vec<u8>,
+) -> crate::quant::PackedVec {
+    assert!((1..=31).contains(&bits), "qsgd bits must be in 1..=31");
+    let norm = norm2(v) as f32;
+    let mut w = BodyWriter::start(&mut body, v.len(), bits);
+    w.quantize_slice(v, norm, rng);
+    w.finish();
+    debug_assert_eq!(
+        body.len(),
+        v.len().div_ceil(8) + crate::quant::packing::packed_len(v.len(), bits)
+    );
+    crate::quant::PackedVec {
+        bits,
+        scale: norm,
+        len: v.len() as u32,
+        body,
+        section_scales: Vec::new(),
+    }
+}
+
+/// Section-aware fused quantize→pack (see [`quantize_sections_buf`]).
+/// The magnitude stream is continuous across sections — the word
+/// accumulator carries over section boundaries — so the body is
+/// byte-identical to packing the sectioned codes in one call. A
+/// single-section partition delegates to [`quantize_packed_buf`].
+pub fn quantize_sections_packed_buf(
+    v: &[f32],
+    bits: u8,
+    sections: &crate::quant::Sections,
+    rng: &mut Xoshiro256pp,
+    mut body: Vec<u8>,
+) -> crate::quant::PackedVec {
+    assert!((1..=31).contains(&bits), "qsgd bits must be in 1..=31");
+    assert_eq!(sections.total(), v.len(), "sections must cover the vector");
+    if sections.is_global() {
+        return quantize_packed_buf(v, bits, rng, body);
+    }
+    let mut scales = Vec::with_capacity(sections.count());
+    let mut norm = 0.0f32;
+    let mut w = BodyWriter::start(&mut body, v.len(), bits);
+    for r in sections.iter() {
+        let slice = &v[r.clone()];
+        let ns = norm2(slice) as f32;
+        w.quantize_slice(slice, ns, rng);
+        scales.push((ns, r.len() as u32));
+        norm = norm.max(ns);
+    }
+    w.finish();
+    crate::quant::PackedVec {
+        bits,
+        scale: norm,
+        len: v.len() as u32,
+        body,
+        section_scales: scales,
+    }
+}
+
+/// Streaming writer for the QSGD wire body. The sign bitmap (1 bit per
+/// element, pre-zeroed) occupies the front of the buffer and is written
+/// in place; magnitude codes are packed through a local little-endian
+/// `u64` accumulator (same flush discipline as
+/// [`crate::quant::packing::PackWriter`], inlined here because the
+/// bitmap region and the magnitude stream share one buffer).
+struct BodyWriter<'a> {
+    body: &'a mut Vec<u8>,
+    b: u32,
+    mask: u64,
+    acc: u64,
+    acc_bits: u32,
+    /// Global element index — addresses the sign bitmap.
+    elem: usize,
+}
+
+impl<'a> BodyWriter<'a> {
+    fn start(body: &'a mut Vec<u8>, n: usize, bits: u8) -> Self {
+        body.clear();
+        let sign_bytes = n.div_ceil(8);
+        body.reserve(sign_bytes + crate::quant::packing::packed_len(n, bits));
+        body.resize(sign_bytes, 0);
+        Self {
+            body,
+            b: bits as u32,
+            mask: crate::quant::code_mask(bits),
+            acc: 0,
+            acc_bits: 0,
+            elem: 0,
+        }
+    }
+
+    #[inline]
+    fn push_mag(&mut self, c: u32) {
+        let c = (c as u64) & self.mask;
+        self.acc |= c << self.acc_bits;
+        let filled = self.acc_bits + self.b;
+        if filled >= 64 {
+            self.body.extend_from_slice(&self.acc.to_le_bytes());
+            self.acc_bits = filled - 64;
+            self.acc = c >> (self.b - self.acc_bits);
+        } else {
+            self.acc_bits = filled;
+        }
+    }
+
+    /// One slice at one norm — per-element arithmetic and RNG
+    /// consumption order identical to [`quantize_slice_append`]; a
+    /// zero-norm slice consumes no randomness.
+    fn quantize_slice(&mut self, v: &[f32], norm: f32, rng: &mut Xoshiro256pp) {
+        if norm == 0.0 {
+            for _ in 0..v.len() {
+                self.push_mag(0);
+            }
+            self.elem += v.len();
+            return;
+        }
+        let s = self.mask as f64;
+        let inv = 1.0 / norm as f64;
+        for &x in v {
+            if x < 0.0 {
+                self.body[self.elem / 8] |= 1 << (self.elem % 8);
+            }
+            self.elem += 1;
+            let a = (x.abs() as f64 * inv * s).min(s);
+            let l = a.floor();
+            let p = a - l;
+            let code = if rng.next_f64() < p { l + 1.0 } else { l };
+            self.push_mag(code.min(s) as u32);
+        }
+    }
+
+    fn finish(self) {
+        if self.acc_bits > 0 {
+            let tail = (self.acc_bits as usize).div_ceil(8);
+            self.body.extend_from_slice(&self.acc.to_le_bytes()[..tail]);
+        }
+    }
+}
+
 /// Stochastically quantize one slice at one norm, *appending* codes —
 /// the shared core of the global and sectioned quantizers. Per-element
 /// arithmetic (and RNG consumption order) is unchanged from the
@@ -367,6 +521,74 @@ mod tests {
             let bound = q.section_scales[0].0 as f64 / s + 1e-9;
             assert!(((v[i] - dq[i]).abs() as f64) <= bound, "i={i}");
         }
+    }
+
+    #[test]
+    fn packed_matches_quantize_then_pack() {
+        use crate::quant::packing::{pack_into, pack_signs_into};
+        let mut rng = Xoshiro256pp::seed_from_u64(50);
+        let d = 517;
+        let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.5)).collect();
+        for bits in [1u8, 4, 6, 12, 13, 16] {
+            let mut r1 = Xoshiro256pp::seed_from_u64(51);
+            let mut r2 = Xoshiro256pp::seed_from_u64(51);
+            let q = quantize(&v, bits, &mut r1);
+            let mut expect = Vec::new();
+            pack_signs_into(&q.signs, &mut expect);
+            pack_into(&q.mags, bits, &mut expect);
+            let p = quantize_packed(&v, bits, &mut r2);
+            assert_eq!(p.body, expect, "bits={bits}");
+            assert_eq!(p.scale.to_bits(), q.norm.to_bits());
+            assert_eq!(p.dim(), d);
+            assert!(!p.is_sectioned());
+            // Both paths consumed the same randomness.
+            assert_eq!(r1.next_u64(), r2.next_u64(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_sections_matches_compose_and_zero_norm_skips_rng() {
+        use crate::quant::packing::{pack_into, pack_signs_into};
+        use crate::quant::Sections;
+        let mut rng = Xoshiro256pp::seed_from_u64(52);
+        let mut v: Vec<f32> = (0..120).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        v.extend(std::iter::repeat(0.0f32).take(64)); // zero-norm section
+        v.extend((0..117).map(|_| rng.gaussian_f32(0.0, 3.0)));
+        let sections = Sections::from_lens([120usize, 64, 117]);
+        let mut r1 = Xoshiro256pp::seed_from_u64(53);
+        let mut r2 = Xoshiro256pp::seed_from_u64(53);
+        let q = quantize_sections(&v, 5, &sections, &mut r1);
+        let mut expect = Vec::new();
+        pack_signs_into(&q.signs, &mut expect);
+        pack_into(&q.mags, 5, &mut expect);
+        let p = quantize_sections_packed_buf(&v, 5, &sections, &mut r2, Vec::new());
+        assert_eq!(p.body, expect);
+        assert_eq!(p.section_scales, q.section_scales);
+        assert_eq!(p.scale.to_bits(), q.norm.to_bits());
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // Single-section partitions delegate to the global form.
+        let mut r3 = Xoshiro256pp::seed_from_u64(53);
+        let g = quantize_sections_packed_buf(&v, 5, &Sections::global(v.len()), &mut r3, Vec::new());
+        assert!(!g.is_sectioned());
+    }
+
+    #[test]
+    fn packed_buf_reuses_capacity_without_stale_bytes() {
+        let mut rng = Xoshiro256pp::seed_from_u64(54);
+        let v: Vec<f32> = (0..300).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let mut r = Xoshiro256pp::seed_from_u64(55);
+        let p = quantize_packed_buf(&v, 4, &mut r, Vec::with_capacity(4096));
+        let ptr = p.body.as_ptr();
+        // Poison the buffer, re-quantize a shorter vector: stale bytes
+        // must not leak into the sign bitmap or the packed magnitudes.
+        let mut body = p.body;
+        body.resize(4096, 0xFF);
+        let mut r1 = Xoshiro256pp::seed_from_u64(56);
+        let mut r2 = Xoshiro256pp::seed_from_u64(56);
+        let p2 = quantize_packed_buf(&v[..100], 4, &mut r1, body);
+        let fresh = quantize_packed_buf(&v[..100], 4, &mut r2, Vec::new());
+        assert_eq!(p2.body, fresh.body);
+        assert_eq!(p2.body.as_ptr(), ptr);
     }
 
     #[test]

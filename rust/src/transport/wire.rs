@@ -46,6 +46,7 @@ use crate::hetero::CapacityMask;
 use crate::quant::midtread::{self, QuantizedVec};
 use crate::quant::packing;
 use crate::quant::qsgd::{self, QsgdVec};
+use crate::quant::PackedVec;
 
 /// v1 (global) header size in bytes (tag + bits + scale + len).
 pub const HEADER_BYTES: usize = 10;
@@ -73,6 +74,17 @@ pub enum Payload {
     RawDelta(Vec<f32>),
     /// Raw f32 full gradient (FedAvg baseline, MARINA sync rounds).
     RawFull(Vec<f32>),
+    /// Mid-tread innovation already in packed wire form — the output of
+    /// the fused quantize→pack kernels (§Perf). Same wire tag and bytes
+    /// as [`Payload::MidtreadDelta`]; [`decode`] always yields the
+    /// unpacked form.
+    MidtreadDeltaPacked(PackedVec),
+    /// Mid-tread full gradient in packed wire form (see
+    /// [`Payload::MidtreadDeltaPacked`]).
+    MidtreadFullPacked(PackedVec),
+    /// QSGD upload in packed wire form: sign bitmap + packed magnitudes
+    /// (see [`Payload::MidtreadDeltaPacked`]).
+    QsgdPacked(PackedVec),
 }
 
 /// Payload kind, as carried by the wire tag byte.
@@ -125,6 +137,9 @@ impl Payload {
             Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => q.dim(),
             Payload::Qsgd(q) => q.dim(),
             Payload::RawDelta(v) | Payload::RawFull(v) => v.len(),
+            Payload::MidtreadDeltaPacked(p)
+            | Payload::MidtreadFullPacked(p)
+            | Payload::QsgdPacked(p) => p.dim(),
         }
     }
 
@@ -138,6 +153,9 @@ impl Payload {
         match self {
             Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => Some(q.bits),
             Payload::Qsgd(q) => Some(q.bits),
+            Payload::MidtreadDeltaPacked(p)
+            | Payload::MidtreadFullPacked(p)
+            | Payload::QsgdPacked(p) => Some(p.bits),
             _ => None,
         }
     }
@@ -160,6 +178,9 @@ fn header_of(p: &Payload) -> (PayloadKind, u8, f32, usize) {
         Payload::Qsgd(q) => (PayloadKind::Qsgd, q.bits, q.norm, q.dim()),
         Payload::RawDelta(v) => (PayloadKind::RawDelta, 0, 0.0, v.len()),
         Payload::RawFull(v) => (PayloadKind::RawFull, 0, 0.0, v.len()),
+        Payload::MidtreadDeltaPacked(p) => (PayloadKind::MidtreadDelta, p.bits, p.scale, p.dim()),
+        Payload::MidtreadFullPacked(p) => (PayloadKind::MidtreadFull, p.bits, p.scale, p.dim()),
+        Payload::QsgdPacked(p) => (PayloadKind::Qsgd, p.bits, p.scale, p.dim()),
     }
 }
 
@@ -169,6 +190,9 @@ fn section_scales_of(p: &Payload) -> &[(f32, u32)] {
         Payload::MidtreadDelta(q) | Payload::MidtreadFull(q) => &q.section_scales,
         Payload::Qsgd(q) => &q.section_scales,
         Payload::RawDelta(_) | Payload::RawFull(_) => &[],
+        Payload::MidtreadDeltaPacked(p)
+        | Payload::MidtreadFullPacked(p)
+        | Payload::QsgdPacked(p) => &p.section_scales,
     }
 }
 
@@ -253,6 +277,16 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
             for x in v {
                 out.extend_from_slice(&x.to_le_bytes());
             }
+        }
+        Payload::MidtreadDeltaPacked(p)
+        | Payload::MidtreadFullPacked(p)
+        | Payload::QsgdPacked(p) => {
+            debug_assert_eq!(
+                p.body.len(),
+                body_len(kind, p.bits, p.dim()),
+                "packed body length disagrees with the wire layout"
+            );
+            out.extend_from_slice(&p.body);
         }
     }
 }
@@ -903,6 +937,55 @@ mod tests {
         let mut bad = enc;
         bad[4..8].copy_from_slice(&f32::NAN.to_le_bytes());
         assert!(matches!(decode(&bad), Err(WireError::BadSections(_))));
+    }
+
+    #[test]
+    fn packed_payloads_encode_byte_identical_and_decode_unpacked() {
+        use crate::quant::Sections;
+        let v = sample_vec(300, 30);
+        let sections = Sections::from_lens([100usize, 80, 120]);
+        // Mid-tread, global: full and delta wrappers over one PackedVec.
+        let q = quantize(&v, 5);
+        let qp = midtread::quantize_packed_buf(&v, 5, Vec::new());
+        for (packed, plain) in [
+            (
+                Payload::MidtreadFullPacked(qp.clone()),
+                Payload::MidtreadFull(q.clone()),
+            ),
+            (
+                Payload::MidtreadDeltaPacked(qp.clone()),
+                Payload::MidtreadDelta(q.clone()),
+            ),
+        ] {
+            let enc = encode(&packed);
+            assert_eq!(enc, encode(&plain));
+            assert_eq!(enc.len() as u64 * 8, wire_bits(&packed));
+            assert_eq!(packed.level(), plain.level());
+            assert_eq!(packed.len(), plain.len());
+            // Decode always yields the unpacked form.
+            assert_eq!(decode(&enc).unwrap(), plain);
+        }
+        // Mid-tread, sectioned.
+        let qs = midtread::quantize_sections(&v, 5, &sections);
+        let qsp = midtread::quantize_sections_packed_buf(&v, 5, &sections, Vec::new());
+        let enc = encode(&Payload::MidtreadFullPacked(qsp));
+        assert_eq!(enc, encode(&Payload::MidtreadFull(qs)));
+        // QSGD, global and sectioned (same seed → same stochastic draw).
+        let mut r1 = Xoshiro256pp::seed_from_u64(31);
+        let mut r2 = Xoshiro256pp::seed_from_u64(31);
+        let g = qsgd_quant::quantize(&v, 4, &mut r1);
+        let gp = qsgd_quant::quantize_packed(&v, 4, &mut r2);
+        let p = Payload::QsgdPacked(gp);
+        let enc = encode(&p);
+        assert_eq!(enc, encode(&Payload::Qsgd(g.clone())));
+        assert_eq!(enc.len() as u64 * 8, wire_bits(&p));
+        assert_eq!(decode(&enc).unwrap(), Payload::Qsgd(g));
+        let mut r1 = Xoshiro256pp::seed_from_u64(32);
+        let mut r2 = Xoshiro256pp::seed_from_u64(32);
+        let gs = qsgd_quant::quantize_sections(&v, 4, &sections, &mut r1);
+        let gsp = qsgd_quant::quantize_sections_packed_buf(&v, 4, &sections, &mut r2, Vec::new());
+        let enc = encode(&Payload::QsgdPacked(gsp));
+        assert_eq!(enc, encode(&Payload::Qsgd(gs)));
     }
 
     #[test]

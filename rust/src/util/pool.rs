@@ -123,6 +123,85 @@ where
     });
 }
 
+/// Run `f(worker_state, id, &mut items[id])` for every id in `cohort`
+/// (a strictly-increasing index list into `items`), splitting the
+/// cohort into at most `workers.len().min(threads)` contiguous chunks —
+/// one worker state per chunk.
+///
+/// This is the device-phase counterpart of [`parallel_for_each_mut`]
+/// for *sparse* selections: a round typically touches only the selected
+/// cohort, so chunking the cohort (not the full item slice) keeps the
+/// per-thread work balanced, and handing each chunk a dedicated
+/// `&mut W` scratch lets callers keep O(threads·d) working memory
+/// instead of O(M·d).
+///
+/// Determinism: each item is visited by exactly one worker, chunk
+/// boundaries never change per-item inputs, and each worker owns an
+/// exclusive sub-slice of `items` (progressive `split_at_mut` at the
+/// chunk's id range). As long as `f`'s per-item work depends only on
+/// `(id, item, state-after-reset)` — true for the device phase, which
+/// fully overwrites its scratch buffers per device — results are
+/// bit-identical for every thread count.
+///
+/// # Panics
+///
+/// Panics if `cohort` is not strictly increasing, an id is out of
+/// bounds, or `workers` is empty while `cohort` is not.
+pub fn parallel_for_cohort<T, W, F>(items: &mut [T], cohort: &[usize], workers: &mut [W], f: F)
+where
+    T: Send,
+    W: Send,
+    F: Fn(&mut W, usize, &mut T) + Sync,
+{
+    let k = cohort.len();
+    if k == 0 {
+        return;
+    }
+    assert!(
+        cohort.windows(2).all(|w| w[0] < w[1]),
+        "cohort ids must be strictly increasing"
+    );
+    assert!(
+        *cohort.last().expect("non-empty cohort") < items.len(),
+        "cohort id out of bounds"
+    );
+    assert!(!workers.is_empty(), "need at least one worker state");
+    let threads = workers.len().min(k);
+    if threads <= 1 {
+        let w = &mut workers[0];
+        for &id in cohort {
+            f(w, id, &mut items[id]);
+        }
+        return;
+    }
+    let chunk = k.div_ceil(threads);
+    std::thread::scope(|scope| {
+        // Progressively split `items` so each chunk owns the exclusive
+        // sub-slice covering its id range [ids[0], ids[last]].
+        let mut rest = items;
+        let mut base = 0usize; // global index where `rest` starts
+        let mut free = &mut workers[..];
+        for ids in cohort.chunks(chunk) {
+            let lo = ids[0];
+            let hi = ids[ids.len() - 1] + 1;
+            let tail = std::mem::take(&mut rest);
+            let (_, tail) = tail.split_at_mut(lo - base);
+            let (mine, tail) = tail.split_at_mut(hi - lo);
+            rest = tail;
+            base = hi;
+            let (w, wrest) = std::mem::take(&mut free).split_at_mut(1);
+            free = wrest;
+            let w = &mut w[0];
+            let f = &f;
+            scope.spawn(move || {
+                for &id in ids {
+                    f(w, id, &mut mine[id - lo]);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +286,62 @@ mod tests {
     fn empty_output_is_noop() {
         let mut out: Vec<f32> = Vec::new();
         parallel_for_shards(&mut out, 4, 16, |_, _| panic!("no shard expected"));
+    }
+
+    #[test]
+    fn cohort_visits_each_selected_exactly_once() {
+        for nworkers in [1usize, 2, 3, 7, 16] {
+            let mut xs = vec![0usize; 100];
+            let cohort: Vec<usize> = (0..100).filter(|i| i % 3 == 0).collect();
+            let mut workers = vec![0usize; nworkers];
+            parallel_for_cohort(&mut xs, &cohort, &mut workers, |w, id, x| {
+                *w += 1;
+                *x += id + 1;
+            });
+            for (i, x) in xs.iter().enumerate() {
+                let want = if i % 3 == 0 { i + 1 } else { 0 };
+                assert_eq!(*x, want, "workers={nworkers} i={i}");
+            }
+            let total: usize = workers.iter().sum();
+            assert_eq!(total, cohort.len(), "workers={nworkers}");
+        }
+    }
+
+    #[test]
+    fn cohort_results_thread_invariant() {
+        let cohort = vec![1usize, 4, 5, 9, 17, 30, 31];
+        let run = |nworkers: usize| {
+            let mut xs = vec![0u64; 32];
+            let mut workers = vec![(); nworkers];
+            parallel_for_cohort(&mut xs, &cohort, &mut workers, |_, id, x| {
+                *x = (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            });
+            xs
+        };
+        let serial = run(1);
+        for n in [2usize, 3, 7] {
+            assert_eq!(run(n), serial, "workers={n}");
+        }
+    }
+
+    #[test]
+    fn cohort_empty_and_edges() {
+        let mut xs = vec![0u8; 4];
+        let mut workers = vec![(); 2];
+        parallel_for_cohort(&mut xs, &[], &mut workers, |_, _, _| {
+            panic!("no work expected")
+        });
+        // First and last items selectable.
+        parallel_for_cohort(&mut xs, &[0, 3], &mut workers, |_, _, x| *x = 1);
+        assert_eq!(xs, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn cohort_rejects_unsorted() {
+        let mut xs = vec![0u8; 4];
+        let mut workers = vec![(); 2];
+        parallel_for_cohort(&mut xs, &[2, 1], &mut workers, |_, _, _| {});
     }
 
     #[test]

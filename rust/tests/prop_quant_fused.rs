@@ -1,0 +1,314 @@
+//! Property tests for the fused quantize→pack device kernels (in-house
+//! seeded-case harness; the offline registry has no proptest — see
+//! DESIGN.md §18): the packed kernels must be *byte-identical* to
+//! quantize-then-`pack_into` for every (bits, section spec, capacity
+//! mask), bit-identical across thread counts, and immune to stale
+//! bytes in recycled scratch buffers.
+
+use aquila::hetero::CapacityMask;
+use aquila::problems::ParamLayout;
+use aquila::quant::midtread::{
+    quantize_innovation_fused_sections_buf, quantize_innovation_packed_buf,
+    quantize_innovation_packed_par, quantize_innovation_packed_sections_buf, quantize_sections,
+    FUSED_BLOCK,
+};
+use aquila::quant::packing::pack;
+use aquila::quant::qsgd;
+use aquila::quant::SectionSpec;
+use aquila::transport::wire::{encode, Payload};
+use aquila::util::rng::Xoshiro256pp;
+
+fn random_vec(rng: &mut Xoshiro256pp, d: usize, scale: f32) -> Vec<f32> {
+    (0..d).map(|_| rng.gaussian_f32(0.0, scale)).collect()
+}
+
+/// A small multi-tensor layout whose dimension varies with the case.
+fn random_layout(rng: &mut Xoshiro256pp) -> ParamLayout {
+    let a = 8 + rng.next_bounded(64) as usize;
+    let b = 4 + rng.next_bounded(32) as usize;
+    let c = 1 + rng.next_bounded(96) as usize;
+    ParamLayout::contiguous(&[
+        ("w1", vec![a, b]),
+        ("b1", vec![a]),
+        ("w2", vec![c, a]),
+        ("b2", vec![c]),
+    ])
+}
+
+fn specs() -> [SectionSpec; 3] {
+    [SectionSpec::Global, SectionSpec::Tensor, SectionSpec::Fixed(64)]
+}
+
+/// Per-section `‖g − q_prev‖_∞` — what `innovation_stats` feeds the
+/// sectioned quantizers.
+fn section_ranges(g: &[f32], q_prev: &[f32], sections: &aquila::quant::Sections) -> Vec<f32> {
+    sections
+        .iter()
+        .map(|r| {
+            g[r.clone()]
+                .iter()
+                .zip(&q_prev[r])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        })
+        .collect()
+}
+
+/// Fused packed innovation kernel ≡ legacy fused quantize + `pack`,
+/// byte for byte and bit for bit (norms, Δq, scales), over bits 1..=16
+/// × section specs × random capacity masks.
+#[test]
+fn prop_innovation_packed_equals_quantize_then_pack() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7000);
+    for case in 0..200 {
+        let layout = random_layout(&mut rng);
+        let ratio = [1.0f32, 0.75, 0.5, 0.3][case % 4];
+        let mask = if ratio >= 1.0 {
+            CapacityMask::full(layout.dim())
+        } else {
+            CapacityMask::from_layout(&layout, ratio)
+        };
+        let bits = 1 + (case % 16) as u8;
+        for spec in specs() {
+            let sections = spec.resolve(&layout, &mask);
+            let n = sections.total();
+            assert_eq!(n, mask.support());
+            let g = random_vec(&mut rng, n, 1.0);
+            let q_prev = random_vec(&mut rng, n, 0.5);
+            let ranges = section_ranges(&g, &q_prev, &sections);
+            let mut dq_ref = vec![0.0f32; n];
+            let mut dq_packed = vec![0.0f32; n];
+            let reference = quantize_innovation_fused_sections_buf(
+                &g,
+                &q_prev,
+                bits,
+                &ranges,
+                &sections,
+                &mut dq_ref,
+                Vec::new(),
+            );
+            let packed = quantize_innovation_packed_sections_buf(
+                &g,
+                &q_prev,
+                bits,
+                &ranges,
+                &sections,
+                &mut dq_packed,
+                Vec::new(),
+            );
+            let tag = format!("case {case} b={bits} {spec} ratio={ratio}");
+            assert_eq!(
+                packed.packed.body,
+                pack(&reference.quantized.psi, bits),
+                "{tag}: packed body != pack(psi)"
+            );
+            assert_eq!(packed.packed.bits, reference.quantized.bits, "{tag}");
+            assert_eq!(
+                packed.packed.scale.to_bits(),
+                reference.quantized.range.to_bits(),
+                "{tag}: scale"
+            );
+            assert_eq!(
+                packed.packed.section_scales, reference.quantized.section_scales,
+                "{tag}: section scales"
+            );
+            assert_eq!(packed.packed.dim(), n, "{tag}: dim");
+            assert_eq!(
+                packed.dq_norm_sq.to_bits(),
+                reference.dq_norm_sq.to_bits(),
+                "{tag}: dq norm"
+            );
+            assert_eq!(
+                packed.err_norm_sq.to_bits(),
+                reference.err_norm_sq.to_bits(),
+                "{tag}: err norm"
+            );
+            for (i, (a, b)) in dq_ref.iter().zip(&dq_packed).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dq[{i}]");
+            }
+        }
+    }
+}
+
+/// Full-gradient packed payloads (midtread and QSGD) encode to the
+/// same wire bytes as their unpacked forms, across specs and masks —
+/// the invariant that lets the engine swap payload forms without
+/// perturbing any recorded trace.
+#[test]
+fn prop_packed_payload_wire_bytes_identical() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7001);
+    for case in 0..150 {
+        let layout = random_layout(&mut rng);
+        let ratio = [1.0f32, 0.5, 0.3][case % 3];
+        let mask = if ratio >= 1.0 {
+            CapacityMask::full(layout.dim())
+        } else {
+            CapacityMask::from_layout(&layout, ratio)
+        };
+        let bits = 1 + (case % 12) as u8;
+        for spec in specs() {
+            let sections = spec.resolve(&layout, &mask);
+            let v = random_vec(&mut rng, sections.total(), 2.0);
+            let tag = format!("case {case} b={bits} {spec} ratio={ratio}");
+
+            // Mid-tread full gradient.
+            let unpacked = quantize_sections(&v, bits, &sections);
+            let packed = aquila::quant::midtread::quantize_sections_packed_buf(
+                &v,
+                bits,
+                &sections,
+                Vec::new(),
+            );
+            assert_eq!(
+                encode(&Payload::MidtreadFull(unpacked.clone())),
+                encode(&Payload::MidtreadFullPacked(packed.clone())),
+                "{tag}: midtread full wire bytes"
+            );
+            assert_eq!(
+                encode(&Payload::MidtreadDelta(unpacked)),
+                encode(&Payload::MidtreadDeltaPacked(packed)),
+                "{tag}: midtread delta wire bytes"
+            );
+
+            // QSGD (stochastic: drive both paths from identically
+            // seeded rng streams and require the streams to stay in
+            // lockstep afterwards).
+            let seed = 9000 + case as u64;
+            let mut r1 = Xoshiro256pp::seed_from_u64(seed);
+            let mut r2 = Xoshiro256pp::seed_from_u64(seed);
+            let q_unpacked = qsgd::quantize_sections(&v, bits, &sections, &mut r1);
+            let q_packed = qsgd::quantize_sections_packed_buf(&v, bits, &sections, &mut r2, Vec::new());
+            assert_eq!(
+                encode(&Payload::Qsgd(q_unpacked)),
+                encode(&Payload::QsgdPacked(q_packed)),
+                "{tag}: qsgd wire bytes"
+            );
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{tag}: qsgd rng streams diverged");
+        }
+    }
+}
+
+/// The always-blocked parallel kernel is bitwise thread-invariant
+/// (body bytes, Δq, norms across {1, 2, 7} threads), its bytes always
+/// equal the serial kernel's, and at `d ≤ FUSED_BLOCK` its norms equal
+/// the serial kernel's bitwise (single block ⇒ same accumulation
+/// grouping).
+#[test]
+fn prop_packed_par_thread_invariant() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7002);
+    let dims = [
+        1usize,
+        4097,
+        FUSED_BLOCK - 1,
+        FUSED_BLOCK,
+        FUSED_BLOCK + 1,
+        3 * FUSED_BLOCK + 1234,
+    ];
+    for (case, &d) in dims.iter().enumerate() {
+        let bits = [1u8, 3, 4, 7, 12, 16][case % 6];
+        let g = random_vec(&mut rng, d, 1.0);
+        let q_prev = random_vec(&mut rng, d, 0.5);
+        let range = g
+            .iter()
+            .zip(&q_prev)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let mut dq_serial = vec![0.0f32; d];
+        let serial =
+            quantize_innovation_packed_buf(&g, &q_prev, bits, range, &mut dq_serial, Vec::new());
+        let mut first: Option<(Vec<u8>, u64, u64)> = None;
+        for threads in [1usize, 2, 7] {
+            let mut dq = vec![0.0f32; d];
+            let out = quantize_innovation_packed_par(
+                &g,
+                &q_prev,
+                bits,
+                range,
+                &mut dq,
+                Vec::new(),
+                threads,
+            );
+            let tag = format!("d={d} b={bits} t={threads}");
+            // Bytes match the serial kernel at every thread count.
+            assert_eq!(out.packed.body, serial.packed.body, "{tag}: body vs serial");
+            assert_eq!(out.packed.scale.to_bits(), serial.packed.scale.to_bits(), "{tag}");
+            // Δq is per-element and partition-independent.
+            for (i, (a, b)) in dq_serial.iter().zip(&dq).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dq[{i}]");
+            }
+            // Norms are thread-invariant (fixed block grid).
+            let sig = (
+                out.packed.body.clone(),
+                out.dq_norm_sq.to_bits(),
+                out.err_norm_sq.to_bits(),
+            );
+            match &first {
+                None => first = Some(sig),
+                Some(f) => {
+                    assert_eq!(f.1, sig.1, "{tag}: dq_norm_sq not thread-invariant");
+                    assert_eq!(f.2, sig.2, "{tag}: err_norm_sq not thread-invariant");
+                    assert_eq!(f.0, sig.0, "{tag}: body not thread-invariant");
+                }
+            }
+            if d <= FUSED_BLOCK {
+                assert_eq!(
+                    out.dq_norm_sq.to_bits(),
+                    serial.dq_norm_sq.to_bits(),
+                    "{tag}: single-block norms must equal serial"
+                );
+                assert_eq!(
+                    out.err_norm_sq.to_bits(),
+                    serial.err_norm_sq.to_bits(),
+                    "{tag}: single-block norms must equal serial"
+                );
+            }
+        }
+    }
+}
+
+/// Recycled scratch buffers never leak stale bytes: quantizing into a
+/// poisoned, larger-capacity `body`/`dq` yields results identical to
+/// fresh allocations, across shrinking sizes and repeated reuse.
+#[test]
+fn prop_scratch_reuse_no_stale_leakage() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7003);
+    // Start with a large case so recycled buffers carry plenty of
+    // stale capacity into the smaller ones.
+    let mut body = vec![0xFFu8; 64 * 1024];
+    body.clear();
+    for case in 0..50 {
+        let d = 1 + rng.next_bounded(2000) as usize;
+        let bits = 1 + rng.next_bounded(16) as u8;
+        let g = random_vec(&mut rng, d, 1.0);
+        let q_prev = random_vec(&mut rng, d, 0.5);
+        let range = g
+            .iter()
+            .zip(&q_prev)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // Poison the recycled buffer's spare capacity.
+        let poison = body.capacity().min(4096);
+        body.clear();
+        body.resize(poison, 0xAB);
+        let mut dq_fresh = vec![0.0f32; d];
+        let mut dq_reused = vec![0.0f32; d];
+        let fresh =
+            quantize_innovation_packed_buf(&g, &q_prev, bits, range, &mut dq_fresh, Vec::new());
+        let reused = quantize_innovation_packed_buf(
+            &g,
+            &q_prev,
+            bits,
+            range,
+            &mut dq_reused,
+            std::mem::take(&mut body),
+        );
+        let tag = format!("case {case} d={d} b={bits}");
+        assert_eq!(fresh.packed.body, reused.packed.body, "{tag}: stale bytes leaked");
+        assert_eq!(fresh.dq_norm_sq.to_bits(), reused.dq_norm_sq.to_bits(), "{tag}");
+        assert_eq!(fresh.err_norm_sq.to_bits(), reused.err_norm_sq.to_bits(), "{tag}");
+        for (a, b) in dq_fresh.iter().zip(&dq_reused) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}");
+        }
+        body = reused.packed.body;
+    }
+}
