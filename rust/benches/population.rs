@@ -1,0 +1,125 @@
+//! Population-virtualization bench (DESIGN.md §Population): per-round
+//! wall-clock and resident slot counts as the population N grows at a
+//! fixed cohort K — the lazy, spec-backed device store's contract is
+//! that both stay flat in N (memory O(cache + K + d), round time
+//! O(K·d), never O(N)).
+//!
+//! Each case drives a virtualized AQUILA run over the streamed
+//! quadratic with random-K selection and a bounded slot cache, timing
+//! steady-state rounds (round 0's bootstrap stays outside the timed
+//! region). Under `AQUILA_BENCH_FAST=1` (CI smoke) the sweep runs
+//! N ∈ {10k, 1M} and the bench *asserts* the contract (min timings):
+//! peak resident slots never exceed cache + K, and the N=1M round is
+//! within 1.25× of the N=10k round — so an accidental O(N) scan on the
+//! round path fails CI instead of silently decaying. The full sweep
+//! adds N=10M.
+
+use aquila::algorithms::aquila::Aquila;
+use aquila::benchkit::{black_box, Bench};
+use aquila::coordinator::{RunConfig, Session, SlotPolicy};
+use aquila::problems::quadratic::StreamedQuadratic;
+use aquila::problems::GradientSource;
+use aquila::selection::SelectionSpec;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Cohort size per round (the paper-scale K for million-device runs).
+const K: usize = 1000;
+/// Live-slot cache capacity — a couple of cohorts.
+const CACHE: usize = 2048;
+/// Model dimension of the streamed quadratic.
+const DIM: usize = 256;
+
+fn pop_label(n: usize) -> String {
+    if n >= 1_000_000 {
+        format!("N={}M", n / 1_000_000)
+    } else {
+        format!("N={}k", n / 1_000)
+    }
+}
+
+/// Bench steady-state rounds at population `n`; returns the min round
+/// time and the session's peak resident slot count.
+fn bench_population(bench: &mut Bench, n: usize) -> (Duration, usize) {
+    let label = pop_label(n);
+    let problem: Arc<dyn GradientSource> =
+        Arc::new(StreamedQuadratic::new(DIM, n, 0.5, 2.0, 0.5, 0xA11A));
+    let cfg = RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        // Far beyond what the time budget reaches, so the final-round
+        // evaluation never lands inside a timed sample.
+        rounds: 1_000_000,
+        eval_every: 0,
+        seed: 7,
+        threads: 0,
+        slots: SlotPolicy::Lazy { cache: CACHE },
+        ..RunConfig::default()
+    };
+    let mut session = Session::builder(problem, Arc::new(Aquila::new(0.25)))
+        .config(cfg)
+        .selection_spec(SelectionSpec::RandomK(K))
+        .build();
+    // Bootstrap round (first cohort materialization) outside the timed
+    // region — steady state is what must be flat in N.
+    session.run_round(0);
+    let mut k = 1usize;
+    let min = bench
+        .bench_throughput(
+            &format!("virtualized round {label} K={K} cache={CACHE}"),
+            (K * DIM) as u64,
+            || {
+                black_box(session.run_round(k));
+                k += 1;
+            },
+        )
+        .min;
+    let resident = session.resident_slots();
+    let peak = session.peak_resident_slots();
+    println!("  {label}: {} rounds, resident slots {resident}, peak {peak}", k);
+    // Memory gate: residency is bounded by the cache plus one
+    // in-flight cohort, at every population size.
+    assert!(
+        peak <= CACHE + K,
+        "{label}: peak resident slots {peak} exceed cache {CACHE} + cohort {K}"
+    );
+    assert!(
+        resident <= CACHE,
+        "{label}: {resident} live slots exceed the cache {CACHE} between rounds"
+    );
+    (min, peak)
+}
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let fast = std::env::var("AQUILA_BENCH_FAST").is_ok();
+    let pops: &[usize] = if fast {
+        &[10_000, 1_000_000]
+    } else {
+        &[10_000, 1_000_000, 10_000_000]
+    };
+    let mut timings = Vec::new();
+    for &n in pops {
+        let (min, _) = bench_population(&mut bench, n);
+        timings.push((n, min));
+    }
+
+    // ---- CI gate: round time flat in N -----------------------------
+    let t_at = |n: usize| {
+        timings
+            .iter()
+            .find(|&&(pop, _)| pop == n)
+            .map(|&(_, t)| t)
+            .expect("population was benched")
+    };
+    let t_small = t_at(10_000);
+    let t_large = t_at(1_000_000);
+    let ratio = t_large.as_secs_f64() / t_small.as_secs_f64();
+    println!("round-time ratio N=1M / N=10k: {ratio:.3}x (gate: <= 1.25x)");
+    assert!(
+        ratio <= 1.25,
+        "virtualized round time grew {ratio:.2}x from N=10k to N=1M — an O(N) scan \
+         leaked onto the round path ({t_small:?} -> {t_large:?})"
+    );
+    bench.finish();
+}

@@ -34,7 +34,7 @@ pub mod lena;
 pub mod marina;
 pub mod qsgd;
 
-use crate::hetero::CapacityMask;
+use crate::hetero::{CapacityMask, MaskTable};
 use crate::quant::midtread::{
     quantize_innovation_packed_buf, quantize_innovation_packed_sections_buf, quantize_packed_buf,
     quantize_sections_packed_buf, PackedOutcome,
@@ -181,12 +181,19 @@ impl DeviceState {
             psi: Vec::new(),
             signs: Vec::new(),
             raw: Vec::new(),
-            rng: Xoshiro256pp::stream(seed, 0xDE_u64 << 32 | id as u64),
+            rng: Self::rng_stream(id, seed),
             uploads: 0,
             skips: 0,
             mask,
             sections,
         }
+    }
+
+    /// The id-keyed RNG stream a fresh device starts from. Exposed so
+    /// checkpoint restore of RNG-less (v1) snapshots and the population
+    /// spec agree on the derivation without duplicating the key.
+    pub fn rng_stream(id: usize, seed: u64) -> Xoshiro256pp {
+        Xoshiro256pp::stream(seed, 0xDE_u64 << 32 | id as u64)
     }
 
     /// Gathered dimension.
@@ -367,8 +374,10 @@ pub struct ServerAgg {
     /// line 14–15 and persists across rounds; reset-style algorithms
     /// clear it each round.
     pub direction: Vec<f32>,
-    /// Per-device capacity masks (scatter targets).
-    pub masks: Vec<Arc<CapacityMask>>,
+    /// Per-device capacity masks (scatter targets). A [`MaskTable`]
+    /// rather than a dense vector so million-device populations sharing
+    /// a couple of distinct masks cost O(distinct), not O(M).
+    pub masks: MaskTable,
     /// Total device count `M`.
     pub m: usize,
     /// Worker threads for the shard-parallel fold (1 = serial).
@@ -376,9 +385,17 @@ pub struct ServerAgg {
 }
 
 impl ServerAgg {
-    /// Aggregator over `full_dim` coordinates with per-device masks.
+    /// Aggregator over `full_dim` coordinates with a dense per-device
+    /// mask vector (convenience wrapper over
+    /// [`ServerAgg::with_table`]).
     pub fn new(full_dim: usize, masks: Vec<Arc<CapacityMask>>) -> Self {
-        let m = masks.len();
+        Self::with_table(full_dim, MaskTable::from(masks))
+    }
+
+    /// Aggregator over `full_dim` coordinates with a compact mask
+    /// table.
+    pub fn with_table(full_dim: usize, masks: MaskTable) -> Self {
+        let m = masks.num_devices();
         Self {
             direction: vec![0.0; full_dim],
             masks,
@@ -419,7 +436,7 @@ impl ServerAgg {
             .iter()
             .map(|up| {
                 let view = up.view();
-                let mask = self.masks[up.device].as_ref();
+                let mask = self.masks.get(up.device).as_ref();
                 assert_eq!(
                     view.len,
                     mask.support(),

@@ -11,12 +11,13 @@
 //! * β per dataset as selected in Section V-D: 0.1 (CF-10), 0.25
 //!   (CF-100), 1.25 (WT-2).
 
-use crate::coordinator::RunConfig;
+use crate::coordinator::{RunConfig, SlotPolicy};
 use crate::data::partition::{iid_partition, label_limited_partition};
 use crate::data::synth::{gaussian_mixture, MixtureSpec};
 use crate::data::text::{markov_corpus, shard_corpus, CorpusSpec};
 use crate::problems::logistic::LogisticProblem;
 use crate::problems::mlp::MlpProblem;
+use crate::problems::quadratic::StreamedQuadratic;
 use crate::problems::softmax_lm::SoftmaxLmProblem;
 use crate::problems::GradientSource;
 use crate::protocol::{ChaosSpec, ServeSpec};
@@ -155,7 +156,26 @@ pub struct ExperimentSpec {
     /// `[chaos]` table, `--chaos` on the CLI). Default: disabled.
     /// Ignored by in-process runs.
     pub chaos: ChaosSpec,
+    /// Virtualized population size (`population = 1000000` in TOML,
+    /// `--population` on the CLI). When set, the dataset problem is
+    /// replaced by an on-the-fly [`StreamedQuadratic`] with this many
+    /// devices and the run defaults to a lazy slot store
+    /// (EXPERIMENTS.md, "Million-device cookbook"). Default: off —
+    /// the dataset's own device count.
+    pub population: Option<usize>,
+    /// Live-slot cache capacity for the lazy slot store (`slot_cache`
+    /// in TOML, `--slot-cache` on the CLI; 0 = lazy but unbounded).
+    /// Setting it forces [`SlotPolicy::Lazy`] even without
+    /// `population`; unset, virtualized runs default to a cache of
+    /// 8192 and dataset runs stay eager.
+    pub slot_cache: Option<usize>,
 }
+
+/// Model dimension of the [`StreamedQuadratic`] problem virtualized
+/// (`population`) runs train: large enough that quantized uploads
+/// exercise the real packing path, small enough that a 1M-device
+/// round's cohort fits comfortably in memory.
+const STREAMED_POPULATION_DIM: usize = 256;
 
 impl ExperimentSpec {
     /// Device count per the paper's setup.
@@ -192,6 +212,8 @@ impl ExperimentSpec {
             quant_sections: SectionSpec::Global,
             serve: ServeSpec::default(),
             chaos: ChaosSpec::default(),
+            population: None,
+            slot_cache: None,
         }
     }
 
@@ -205,6 +227,25 @@ impl ExperimentSpec {
         self.data_scale = data_scale;
         self.rounds = rounds;
         self
+    }
+
+    /// Device count the run actually simulates: `population` when set
+    /// (virtualized run), the dataset's device count otherwise.
+    pub fn effective_devices(&self) -> usize {
+        self.population.unwrap_or(self.devices)
+    }
+
+    /// Slot-store policy implied by `population`/`slot_cache` (see
+    /// those fields' docs): an explicit `slot_cache` forces a lazy
+    /// store with that capacity, a bare `population` defaults to a
+    /// lazy store with an 8192-slot cache, and plain dataset runs stay
+    /// eager.
+    pub fn slot_policy(&self) -> SlotPolicy {
+        match (self.slot_cache, self.population) {
+            (Some(cache), _) => SlotPolicy::Lazy { cache },
+            (None, Some(_)) => SlotPolicy::Lazy { cache: 8192 },
+            (None, None) => SlotPolicy::Eager,
+        }
     }
 
     /// The coordinator run-config for this experiment.
@@ -221,12 +262,27 @@ impl ExperimentSpec {
             dadaquant_cap: self.dadaquant_cap,
             network: self.network.clone(),
             quant_sections: self.quant_sections,
+            slots: self.slot_policy(),
             ..RunConfig::default()
         }
     }
 
     /// Construct the federated problem (datasets, shards, model).
+    /// With `population` set this is an on-the-fly
+    /// [`StreamedQuadratic`] — per-device data is regenerated from
+    /// `(seed, device_id)` inside every gradient call, so a 10⁷-device
+    /// problem costs O(1) memory (DESIGN.md §Population).
     pub fn build_problem(&self) -> Box<dyn GradientSource> {
+        if let Some(m) = self.population {
+            return Box::new(StreamedQuadratic::new(
+                STREAMED_POPULATION_DIM,
+                m,
+                0.5,
+                2.0,
+                0.5,
+                self.seed,
+            ));
+        }
         let scale = |n: usize| ((n as f64 * self.data_scale) as usize).max(self.devices * 4);
         let mut rng = Xoshiro256pp::stream(self.seed, 0x5917);
         match self.dataset {
@@ -405,6 +461,16 @@ impl ExperimentSpec {
         }
         if let Some(v) = map.get("chaos.seed").and_then(|v| v.as_i64()) {
             self.chaos.seed = v as u64;
+        }
+        // Population virtualization keys. A non-positive population is
+        // a hard error — it would silently run the dataset problem.
+        if let Some(v) = get("population").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v >= 1, "population must be >= 1, got {v}");
+            self.population = Some(v as usize);
+        }
+        if let Some(v) = get("slot_cache").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v >= 0, "slot_cache must be >= 0, got {v}");
+            self.slot_cache = Some(v as usize);
         }
         Ok(())
     }
@@ -645,5 +711,29 @@ mod tests {
     fn row_labels() {
         let s = ExperimentSpec::new(DatasetKind::Wt2, SplitKind::IidLarge, false);
         assert_eq!(s.row_label(), "WT-2 IID-80");
+    }
+
+    #[test]
+    fn toml_population_overrides() {
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        assert_eq!(spec.slot_policy(), SlotPolicy::Eager);
+        assert_eq!(spec.effective_devices(), 10);
+        let map = toml::parse("[experiment]\npopulation = 100000\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.population, Some(100_000));
+        assert_eq!(spec.effective_devices(), 100_000);
+        // A bare population defaults to the bounded lazy store...
+        assert_eq!(spec.slot_policy(), SlotPolicy::Lazy { cache: 8192 });
+        // ...and an explicit slot_cache overrides the capacity.
+        let map = toml::parse("[experiment]\nslot_cache = 64\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.slot_policy(), SlotPolicy::Lazy { cache: 64 });
+        assert_eq!(spec.run_config().slots, SlotPolicy::Lazy { cache: 64 });
+        // The virtualized problem streams the requested device count.
+        let p = spec.build_problem();
+        assert_eq!(p.num_devices(), 100_000);
+        // A non-positive population is a hard error.
+        let map = toml::parse("[experiment]\npopulation = 0\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
     }
 }

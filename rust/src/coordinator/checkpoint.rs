@@ -22,8 +22,14 @@
 //! device ids at snapshot time) — so a killed `--serve` process
 //! restarted with `--resume` re-enters the same round with the same
 //! client topology; checkpoints without it (all older versions, and
-//! in-process runs) load with no serve-state. Written atomically
-//! (temp file + rename).
+//! in-process runs) load with no serve-state. Version **6** makes the
+//! per-device sections *sparse*: the header's `devices` count is the
+//! total simulated population and a new `ids` array names the devices
+//! whose state the snapshot actually tracks (the ones a virtualized
+//! run ever materialized — see DESIGN.md §Population), so a 1M-device
+//! run checkpoints O(touched), not O(population). v1–v5 checkpoints
+//! (no `ids` key) still load, with every device tracked. Written
+//! atomically (temp file + rename).
 
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
@@ -46,6 +52,15 @@ pub struct Checkpoint {
     pub version: u32,
     /// Next round index to execute.
     pub round: usize,
+    /// Total simulated population `M` (v6+; equal to the tracked-device
+    /// count when loaded from older versions).
+    pub population: usize,
+    /// Ids of the devices this snapshot tracks, ascending. May be a
+    /// sparse subset of the population (v6+, virtualized runs); older
+    /// versions load with every device tracked. The per-device sections
+    /// (`device_q`, `device_stats`, `device_rng`, `device_last_loss`)
+    /// are indexed positionally by this list.
+    pub device_ids: Vec<usize>,
     /// Global model `θ`.
     pub theta: Vec<f32>,
     /// Previous-round model (for `‖θᵏ − θ^{k−1}‖²`).
@@ -100,7 +115,7 @@ pub struct ServeState {
 }
 
 /// Current format version.
-pub const VERSION: u32 = 5;
+pub const VERSION: u32 = 6;
 
 /// Bytes of one serialized RNG record: 4×u64 state + present flag +
 /// gauss flag + gauss f64.
@@ -124,7 +139,18 @@ impl Checkpoint {
             ("version", Json::Num(version as f64)),
             ("round", Json::Num(self.round as f64)),
             ("dim", Json::Num(self.theta.len() as f64)),
-            ("devices", Json::Num(self.device_q.len() as f64)),
+            // Since v6 `devices` is the total population; `ids` names
+            // the tracked subset the binary sections cover.
+            ("devices", Json::Num(self.population as f64)),
+            (
+                "ids",
+                Json::Arr(
+                    self.device_ids
+                        .iter()
+                        .map(|&i| Json::Num(i as f64))
+                        .collect(),
+                ),
+            ),
             (
                 "supports",
                 Json::Arr(
@@ -227,6 +253,16 @@ impl Checkpoint {
         }
         let dim = header.get("dim").as_usize().context("dim")?;
         let devices = header.get("devices").as_usize().context("devices")?;
+        // v6 tracks a (possibly sparse) id subset; earlier versions are
+        // dense, so the tracked set is the whole population.
+        let device_ids: Vec<usize> = match header.get("ids").as_arr() {
+            Some(arr) => arr
+                .iter()
+                .map(|v| v.as_usize().context("ids"))
+                .collect::<Result<_>>()?,
+            None => (0..devices).collect(),
+        };
+        let tracked = device_ids.len();
         let supports: Vec<usize> = header
             .get("supports")
             .as_arr()
@@ -234,21 +270,21 @@ impl Checkpoint {
             .iter()
             .map(|v| v.as_usize().unwrap_or(0))
             .collect();
-        if supports.len() != devices {
-            bail!("supports/devices mismatch");
+        if supports.len() != tracked {
+            bail!("supports/ids mismatch");
         }
         let mut body = &all[nl + 1..];
         let theta = take_f32s(&mut body, dim)?;
         let prev_theta = take_f32s(&mut body, dim)?;
         let direction = take_f32s(&mut body, dim)?;
-        let mut device_q = Vec::with_capacity(devices);
+        let mut device_q = Vec::with_capacity(tracked);
         for &s in &supports {
             device_q.push(take_f32s(&mut body, s)?);
         }
         let mut device_rng = Vec::new();
         let mut coin_rng = None;
         if version >= 2 {
-            for _ in 0..devices {
+            for _ in 0..tracked {
                 device_rng.push(
                     take_rng(&mut body)?.context("device RNG record marked absent")?,
                 );
@@ -293,6 +329,8 @@ impl Checkpoint {
         Ok(Checkpoint {
             version,
             round: header.get("round").as_usize().context("round")?,
+            population: devices,
+            device_ids,
             theta,
             prev_theta,
             direction,
@@ -400,6 +438,8 @@ mod tests {
         Checkpoint {
             version: VERSION,
             round: 42,
+            population: 2,
+            device_ids: vec![0, 1],
             theta: vec![1.0, -2.5, 3.25],
             prev_theta: vec![0.5, -2.0, 3.0],
             direction: vec![0.1, 0.2, 0.3],
@@ -478,6 +518,7 @@ mod tests {
         if let crate::util::json::Json::Obj(m) = &mut j {
             m.remove("loss_history");
             m.remove("device_last_loss");
+            m.remove("ids");
             m.insert("version".into(), crate::util::json::Json::Num(2.0));
         }
         let mut rewritten = j.to_string().into_bytes();
@@ -488,8 +529,62 @@ mod tests {
         assert_eq!(loaded.version, 2);
         assert!(loaded.loss_history.is_empty());
         assert!(loaded.device_last_loss.is_empty());
+        // Pre-v6 headers have no `ids`: every device is tracked.
+        assert_eq!(loaded.device_ids, vec![0, 1]);
+        assert_eq!(loaded.population, 2);
         assert_eq!(loaded.theta, c.theta);
         assert_eq!(loaded.device_rng, c.device_rng);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v5_dense_header_loads_all_tracked() {
+        // A v5 checkpoint is exactly a v6 one minus the `ids` key, with
+        // `devices` meaning the tracked count: the dense→sparse
+        // migration must track device 0..devices.
+        let dir = std::env::temp_dir().join("aquila_ckpt_v5compat");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.device_last_loss = vec![0.1, 0.2];
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = String::from_utf8(bytes[..nl].to_vec()).unwrap();
+        let mut j = crate::util::json::Json::parse(&header).unwrap();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("ids");
+            m.insert("version".into(), crate::util::json::Json::Num(5.0));
+        }
+        let mut rewritten = j.to_string().into_bytes();
+        rewritten.push(b'\n');
+        rewritten.extend_from_slice(&bytes[nl + 1..]);
+        std::fs::write(&path, rewritten).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.version, 5);
+        assert_eq!(loaded.population, 2);
+        assert_eq!(loaded.device_ids, vec![0, 1]);
+        assert_eq!(loaded.device_q, c.device_q);
+        assert_eq!(loaded.device_rng, c.device_rng);
+        assert_eq!(loaded.serve_state, c.serve_state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparse_ids_roundtrip() {
+        // A virtualized run tracks only the devices it materialized:
+        // the id list, not the population size, keys the binary
+        // sections.
+        let dir = std::env::temp_dir().join("aquila_ckpt_sparse");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.population = 100;
+        c.device_ids = vec![3, 17];
+        c.device_last_loss = vec![0.7, 0.6];
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, c);
+        assert_eq!(loaded.population, 100);
+        assert_eq!(loaded.device_ids, vec![3, 17]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

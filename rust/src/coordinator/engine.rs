@@ -2,29 +2,43 @@
 //! protocol, independent of *how* the problem/algorithm/strategy are
 //! owned. The owned [`super::Session`] is a thin front-end over this
 //! type.
+//!
+//! Since the population-virtualization redesign (DESIGN.md §Population)
+//! the engine no longer keeps a `DeviceSlot` per simulated device.
+//! Device identity lives in a [`PopulationSpec`] — a deterministic
+//! derivation of each device's mask/sections/RNG from
+//! `(seed, device_id)` — and full slot state is materialized lazily for
+//! the selected cohort only, then returned to a bounded live cache
+//! ([`SlotPolicy`]). Evicted devices park their persistent algorithm
+//! state (`q_prev`, error norm, counters, RNG stream) in a compact
+//! [`ParkedState`] and are rebuilt bit-identically on re-selection, so
+//! a 1M-device run with K=1000 costs O(K + d) memory, and traces are
+//! byte-identical to the eager engine (pinned by
+//! `tests/prop_population.rs`).
 
 use super::checkpoint::{Checkpoint, RngState, VERSION};
-use super::RunConfig;
+use super::population::PopulationSpec;
+use super::{RunConfig, SlotPolicy};
 use crate::algorithms::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
-use crate::hetero::CapacityMask;
+use crate::hetero::MaskTable;
 use crate::metrics::RoundRecord;
 use crate::problems::{GradScratch, GradientSource};
 use crate::quant::levels::DadaquantSchedule;
-use crate::selection::{DeviceView, Selection, SelectionStrategy, SelectionView};
+use crate::selection::{DeviceStats, Selection, SelectionStrategy, SelectionView};
 use crate::transport::scenario::NetworkScenario;
 use crate::transport::wire::{self, UploadRef};
 use crate::transport::Channel;
-use crate::util::pool::parallel_for_cohort;
+use crate::util::pool::parallel_for_pairs;
 use crate::util::ring::RecentWindow;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::vecmath::{axpy, diff_norm2_sq};
-use std::sync::Arc;
+use std::collections::BTreeMap;
 
 /// Per-device slot: algorithm state + per-round staging, kept together
 /// so one thread owns the whole cache line set. Gradient working
 /// buffers live in [`WorkerScratch`] (one per worker thread, not one
-/// per device), so engine memory is O(threads·d) + per-device state
-/// instead of O(M·d) of scratch.
+/// per device), so engine memory is O(threads·d) + resident device
+/// state instead of O(M·d) of scratch.
 struct DeviceSlot {
     state: DeviceState,
     /// This round's serialized upload (valid when `staged`); encoded in
@@ -34,7 +48,66 @@ struct DeviceSlot {
     staged: bool,
     staged_level: Option<u8>,
     loss: f64,
-    participated: bool,
+    /// Round this slot last participated in — the LRU eviction key
+    /// (ties break toward evicting lower device ids).
+    last_used: usize,
+}
+
+/// The persistent algorithm state of an evicted device — everything a
+/// re-materialized slot cannot rederive from the [`PopulationSpec`].
+/// Scratch/staging buffers (`scratch`, `body`, `psi`, `signs`, `raw`,
+/// `wire_buf`) are dropped: every client step fully overwrites them
+/// before reading, so shedding them cannot change any device's result
+/// (the eviction tests in `tests/prop_population.rs` pin this).
+struct ParkedState {
+    /// Stored reference vector `q_m` (gathered space), moved — not
+    /// copied — out of the slot.
+    q_prev: Vec<f32>,
+    prev_err_sq: f64,
+    uploads: u64,
+    skips: u64,
+    /// Device RNG stream snapshot (stochastic quantizers must resume
+    /// mid-stream, in lockstep with the never-evicted run).
+    rng: ([u64; 4], Option<f64>),
+}
+
+impl ParkedState {
+    fn from_slot(slot: DeviceSlot) -> Self {
+        let state = slot.state;
+        Self {
+            q_prev: state.q_prev,
+            prev_err_sq: state.prev_err_sq,
+            uploads: state.uploads,
+            skips: state.skips,
+            rng: state.rng.snapshot(),
+        }
+    }
+}
+
+/// A slot exactly as the eager engine would have built it at
+/// construction time (see `PopulationSpec::fresh_state`).
+fn fresh_slot(population: &PopulationSpec, id: usize) -> DeviceSlot {
+    DeviceSlot {
+        state: population.fresh_state(id),
+        wire_buf: Vec::new(),
+        staged: false,
+        staged_level: None,
+        loss: f64::NAN,
+        last_used: 0,
+    }
+}
+
+/// Rebuild an evicted device's slot: fresh derived state from the spec,
+/// persistent algorithm state restored from the parked record.
+fn unpark(population: &PopulationSpec, id: usize, p: ParkedState) -> DeviceSlot {
+    let mut slot = fresh_slot(population, id);
+    debug_assert_eq!(slot.state.q_prev.len(), p.q_prev.len());
+    slot.state.q_prev = p.q_prev;
+    slot.state.prev_err_sq = p.prev_err_sq;
+    slot.state.uploads = p.uploads;
+    slot.state.skips = p.skips;
+    slot.state.rng = Xoshiro256pp::from_snapshot(p.rng.0, p.rng.1);
+    slot
 }
 
 /// Gradient working set owned by one device-phase worker thread and
@@ -56,7 +129,23 @@ struct WorkerScratch {
 /// are passed per call so front-ends may own them however they like.
 pub struct RoundEngine {
     cfg: RunConfig,
-    slots: Vec<DeviceSlot>,
+    /// Deterministic per-device derivation (mask, sections, RNG seed).
+    population: PopulationSpec,
+    /// Total device count `M` (cached from the population).
+    m: usize,
+    /// Materialized slots not currently checked out to a round, keyed
+    /// by device id (`BTreeMap` so iteration is deterministic).
+    live: BTreeMap<usize, DeviceSlot>,
+    /// Evicted devices' persistent algorithm state ([`SlotPolicy::Lazy`]
+    /// with a bounded cache).
+    parked: BTreeMap<usize, ParkedState>,
+    /// The in-flight round's cohort slots, ascending by device id;
+    /// empty between rounds.
+    round_cohort: Vec<(usize, DeviceSlot)>,
+    /// Peak simultaneous fully-materialized slots (live + cohort) —
+    /// the CI memory gate reads this through
+    /// [`RoundEngine::peak_resident_slots`].
+    max_live: usize,
     /// One gradient working set per worker thread (see [`WorkerScratch`]).
     workers: Vec<WorkerScratch>,
     server: ServerAgg,
@@ -72,8 +161,9 @@ pub struct RoundEngine {
     /// Recycled buffer for `RoundCtx::model_diff_history` (the context
     /// hands it back at the end of every round — no per-round allocation).
     ctx_diff_buf: Vec<f64>,
-    /// Per-device statistics exposed to selection strategies.
-    device_views: Vec<DeviceView>,
+    /// Sparse per-device statistics exposed to selection strategies;
+    /// devices that never participated read as the documented default.
+    stats: DeviceStats,
     init_loss: f64,
     prev_loss: f64,
     coin_rng: Xoshiro256pp,
@@ -91,53 +181,27 @@ pub struct RoundEngine {
 }
 
 impl RoundEngine {
-    /// Build the engine for `problem` with explicit per-device masks.
+    /// Build the engine for `problem` with explicit per-device masks —
+    /// a [`MaskTable`] or (via `Into`) a dense `Vec<Arc<CapacityMask>>`.
     pub fn new(
         problem: &dyn GradientSource,
-        masks: Vec<Arc<CapacityMask>>,
+        masks: impl Into<MaskTable>,
         cfg: RunConfig,
     ) -> Self {
         let d = problem.dim();
         let m = problem.num_devices();
-        assert_eq!(masks.len(), m, "need one mask per device");
-        for mask in &masks {
+        let masks = masks.into();
+        assert_eq!(masks.num_devices(), m, "need one mask per device");
+        for mask in masks.distinct_masks() {
             assert_eq!(mask.full_dim, d);
         }
         let theta = problem.init_theta(cfg.seed);
-        // Resolve each device's quantization sections once, from the
-        // problem's layout × the run's `quant_sections` spec × the
-        // device's capacity mask. Devices sharing a mask share the
-        // resolved `Sections` (HeteroFL setups hand out two masks to M
-        // devices, not M distinct ones).
-        let layout = problem.layout();
-        let mut section_cache: Vec<(*const CapacityMask, Arc<crate::quant::Sections>)> =
-            Vec::new();
-        let mut sections_for = |mask: &Arc<CapacityMask>| {
-            let key = Arc::as_ptr(mask);
-            if let Some((_, s)) = section_cache.iter().find(|(k, _)| *k == key) {
-                return s.clone();
-            }
-            let s = Arc::new(cfg.quant_sections.resolve(&layout, mask));
-            section_cache.push((key, s.clone()));
-            s
-        };
-        let slots = masks
-            .iter()
-            .enumerate()
-            .map(|(i, mask)| DeviceSlot {
-                state: DeviceState::with_sections(
-                    i,
-                    mask.clone(),
-                    sections_for(mask),
-                    cfg.seed,
-                ),
-                wire_buf: Vec::new(),
-                staged: false,
-                staged_level: None,
-                loss: 0.0,
-                participated: false,
-            })
-            .collect();
+        // Resolve quantization sections once per *distinct* mask, from
+        // the problem's layout × the run's `quant_sections` spec × the
+        // mask — the population spec owns the result (devices sharing a
+        // mask share the resolved `Sections`).
+        let population =
+            PopulationSpec::new(&problem.layout(), masks, &cfg.quant_sections, cfg.seed);
         let threads = if cfg.threads == 0 {
             crate::util::pool::default_threads()
         } else {
@@ -150,15 +214,30 @@ impl RoundEngine {
                 scratch: problem.make_scratch(),
             })
             .collect();
-        let mut server = ServerAgg::new(d, masks);
+        let mut server = ServerAgg::with_table(d, population.masks().clone());
         server.set_threads(threads);
         // Per-device links are drawn from the run seed, so the fleet —
         // like every other stochastic component — is reproducible.
         let channel =
             Channel::with_scenario(cfg.faults.clone(), cfg.network.build(m, cfg.seed));
+        // Eager policy: prematerialize every slot, exactly the
+        // pre-virtualization engine. Lazy: slots are built on first
+        // selection.
+        let mut live = BTreeMap::new();
+        if cfg.slots == SlotPolicy::Eager {
+            for id in 0..m {
+                live.insert(id, fresh_slot(&population, id));
+            }
+        }
+        let max_live = live.len();
         Self {
             server,
-            slots,
+            population,
+            m,
+            live,
+            parked: BTreeMap::new(),
+            round_cohort: Vec::new(),
+            max_live,
             workers,
             prev_theta: theta.clone(),
             theta,
@@ -166,7 +245,7 @@ impl RoundEngine {
             diff_history: RecentWindow::new(cfg.history_depth),
             loss_history: RecentWindow::new(cfg.history_depth),
             ctx_diff_buf: Vec::with_capacity(cfg.history_depth + 1),
-            device_views: vec![DeviceView::default(); m],
+            stats: DeviceStats::new(),
             init_loss: f64::NAN,
             prev_loss: f64::NAN,
             coin_rng: Xoshiro256pp::stream(cfg.seed, 0xC011),
@@ -180,7 +259,7 @@ impl RoundEngine {
             cum_bits_down: 0,
             cum_sim_time: 0.0,
             cum_stragglers: 0,
-            participant_buf: Vec::with_capacity(m),
+            participant_buf: Vec::new(),
         }
     }
 
@@ -221,21 +300,54 @@ impl RoundEngine {
         self.channel.scenario()
     }
 
-    /// Per-device upload/skip counters.
+    /// The population spec this engine derives device slots from.
+    pub fn population(&self) -> &PopulationSpec {
+        &self.population
+    }
+
+    /// Fully-materialized slots right now (live cache + in-flight
+    /// cohort). Parked records are not counted: they hold O(support)
+    /// state but no staging/scratch buffers.
+    pub fn resident_slots(&self) -> usize {
+        self.live.len() + self.round_cohort.len()
+    }
+
+    /// Peak simultaneous fully-materialized slots over the engine's
+    /// lifetime — the CI population-bench gate asserts this stays ≤
+    /// cache capacity + cohort size under [`SlotPolicy::Lazy`].
+    pub fn peak_resident_slots(&self) -> usize {
+        self.max_live
+    }
+
+    /// Devices currently evicted to parked (compact) state.
+    pub fn parked_slots(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Sparse per-device statistics (uploads/skips/last loss for every
+    /// device that ever participated) — what selection strategies see.
+    pub fn selection_stats(&self) -> &DeviceStats {
+        &self.stats
+    }
+
+    /// Per-device upload/skip counters, densely indexed by device id.
+    /// O(M) — million-device callers should prefer
+    /// [`RoundEngine::selection_stats`].
     pub fn device_stats(&self) -> Vec<(u64, u64)> {
-        self.slots
-            .iter()
-            .map(|s| (s.state.uploads, s.state.skips))
-            .collect()
+        let mut out = vec![(0, 0); self.m];
+        for (id, v) in self.stats.observed() {
+            out[id] = (v.uploads, v.skips);
+        }
+        out
     }
 
     fn build_ctx(&mut self, round: usize, strategy: &mut dyn SelectionStrategy) -> RoundCtx {
-        let m = self.slots.len();
+        let m = self.m;
         let model_diff_sq = self.diff_history.latest().unwrap_or(0.0);
         let view = SelectionView {
             round,
             num_devices: m,
-            devices: &self.device_views,
+            stats: &self.stats,
             init_loss: self.init_loss,
             prev_loss: self.prev_loss,
             loss_history: self.loss_history.as_slice(),
@@ -297,7 +409,7 @@ impl RoundEngine {
 
     /// Number of devices this engine coordinates.
     pub fn num_devices(&self) -> usize {
-        self.slots.len()
+        self.m
     }
 
     /// Begin round `round`: run device selection and assemble the round
@@ -310,6 +422,52 @@ impl RoundEngine {
         strategy: &mut dyn SelectionStrategy,
     ) -> RoundCtx {
         self.build_ctx(round, strategy)
+    }
+
+    /// Check one device's slot out of the live cache — rebuilding it
+    /// from parked state or the population spec if absent — reset for a
+    /// new round.
+    fn stage_slot(&mut self, id: usize, round: usize) {
+        let mut slot = if let Some(s) = self.live.remove(&id) {
+            s
+        } else if let Some(p) = self.parked.remove(&id) {
+            unpark(&self.population, id, p)
+        } else {
+            fresh_slot(&self.population, id)
+        };
+        slot.staged = false;
+        slot.staged_level = None;
+        // `NaN` = not yet reported; the in-process device phase
+        // overwrites it, the remote path leaves it for devices whose
+        // results never arrive (folded as stragglers).
+        slot.loss = f64::NAN;
+        slot.last_used = round;
+        self.round_cohort.push((id, slot));
+    }
+
+    /// Materialize the round's cohort (ascending device ids — the
+    /// normalized `ctx.selected` order) into `round_cohort`. Unselected
+    /// devices are never touched: their slots (or parked records) stay
+    /// exactly as the previous round left them, which is what makes
+    /// lazy materialization trace-equivalent to the eager engine.
+    fn take_cohort_slots(&mut self, ctx: &RoundCtx) {
+        debug_assert!(
+            self.round_cohort.is_empty(),
+            "round already in flight (finish_round not called?)"
+        );
+        match &ctx.selected {
+            Some(ids) => {
+                for &id in ids {
+                    self.stage_slot(id, ctx.round);
+                }
+            }
+            None => {
+                for id in 0..self.m {
+                    self.stage_slot(id, ctx.round);
+                }
+            }
+        }
+        self.max_live = self.max_live.max(self.live.len() + self.round_cohort.len());
     }
 
     /// Run the in-process device phase, parallel over the *selected
@@ -327,24 +485,9 @@ impl RoundEngine {
         algo: &dyn Algorithm,
         ctx: &RoundCtx,
     ) {
+        self.take_cohort_slots(ctx);
         let theta = &self.theta;
-        // Serial flag pass over all slots; collects the selected cohort
-        // (ascending device ids, as `parallel_for_cohort` requires).
-        let mut cohort = std::mem::take(&mut self.participant_buf);
-        cohort.clear();
-        for (i, slot) in self.slots.iter_mut().enumerate() {
-            slot.staged = false;
-            slot.staged_level = None;
-            slot.participated = ctx.is_selected(i);
-            // Unselected devices neither compute nor consult the
-            // algorithm: participation is the engine's concern, not
-            // part of the `Algorithm` client contract (most client
-            // rules assume a full-length gradient).
-            if slot.participated {
-                cohort.push(i);
-            }
-        }
-        parallel_for_cohort(&mut self.slots, &cohort, &mut self.workers, |w, i, slot| {
+        parallel_for_pairs(&mut self.round_cohort, &mut self.workers, |w, i, slot| {
             slot.loss = problem.local_grad(i, theta, &mut w.grad_full, &mut w.scratch);
             slot.state.mask.gather(&w.grad_full, &mut w.grad_gathered);
             let ClientUpload { payload, level } =
@@ -356,23 +499,17 @@ impl RoundEngine {
                 slot.state.recycle(p);
             }
         });
-        self.participant_buf = cohort;
     }
 
-    /// Reset per-round staging for a round driven by *remote* clients:
-    /// marks participation from the context and clears every slot's
-    /// staged upload and loss (`NaN` = not yet reported). Follow with
+    /// Materialize the cohort for a round driven by *remote* clients:
+    /// every selected device's slot is checked out with nothing staged
+    /// and a `NaN` (= not yet reported) loss. Follow with
     /// [`RoundEngine::stage_remote`] per result, then
     /// [`RoundEngine::finish_round`]. Devices whose results never
     /// arrive are folded as skips; the metrics layer averages only the
     /// losses that did arrive.
     pub fn stage_reset(&mut self, ctx: &RoundCtx) {
-        for (i, slot) in self.slots.iter_mut().enumerate() {
-            slot.staged = false;
-            slot.staged_level = None;
-            slot.participated = ctx.is_selected(i);
-            slot.loss = f64::NAN;
-        }
+        self.take_cohort_slots(ctx);
     }
 
     /// Inject one remote device's round result (what its
@@ -390,12 +527,13 @@ impl RoundEngine {
         payload: Option<&[u8]>,
         counters: (u64, u64),
     ) -> bool {
-        let Some(slot) = self.slots.get_mut(device) else {
+        let Ok(pos) = self
+            .round_cohort
+            .binary_search_by_key(&device, |&(id, _)| id)
+        else {
             return false;
         };
-        if !slot.participated {
-            return false;
-        }
+        let slot = &mut self.round_cohort[pos].1;
         slot.loss = loss;
         slot.staged_level = level;
         if let Some(bytes) = payload {
@@ -417,11 +555,15 @@ impl RoundEngine {
     /// the round folds it as a straggler. Cumulative upload/skip
     /// counters are left as the dead client reported them (a rejoin
     /// rewrites them verbatim). Returns `false` if `device` is out of
-    /// range.
+    /// range or not part of the in-flight cohort.
     pub fn unstage(&mut self, device: usize) -> bool {
-        let Some(slot) = self.slots.get_mut(device) else {
+        let Ok(pos) = self
+            .round_cohort
+            .binary_search_by_key(&device, |&(id, _)| id)
+        else {
             return false;
         };
+        let slot = &mut self.round_cohort[pos].1;
         slot.staged = false;
         slot.staged_level = None;
         slot.loss = f64::NAN;
@@ -435,8 +577,10 @@ impl RoundEngine {
     }
 
     /// Complete the round from whatever is staged: transport, server
-    /// fold, model update, and metrics. Consumes the context built by
-    /// [`RoundEngine::begin_round`] (its history buffer is recycled).
+    /// fold, model update, metrics, and slot-cache maintenance (cohort
+    /// slots return to the live cache; the LRU overflow is parked).
+    /// Consumes the context built by [`RoundEngine::begin_round`] (its
+    /// history buffer is recycled).
     pub fn finish_round(
         &mut self,
         problem: &dyn GradientSource,
@@ -452,20 +596,14 @@ impl RoundEngine {
         // deadline window (DESIGN.md §Network).
         let mut participant_ids = std::mem::take(&mut self.participant_buf);
         participant_ids.clear();
-        participant_ids.extend(
-            self.slots
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.participated)
-                .map(|(i, _)| i),
-        );
+        participant_ids.extend(self.round_cohort.iter().map(|&(id, _)| id));
         let model_bits = self.theta.len() as u64 * 32;
         let staged: Vec<UploadRef<'_>> = self
-            .slots
+            .round_cohort
             .iter()
-            .filter(|s| s.staged)
-            .map(|s| UploadRef {
-                device: s.state.id,
+            .filter(|(_, s)| s.staged)
+            .map(|(id, s)| UploadRef {
+                device: *id,
                 bytes: &s.wire_buf,
             })
             .collect();
@@ -484,10 +622,7 @@ impl RoundEngine {
         self.diff_history.push(diff);
 
         // ---- metrics ----------------------------------------------------
-        // `participant_buf` (ascending device order — the same order
-        // the old filter pass visited) already names this round's
-        // participants; reuse it rather than re-scanning the slots.
-        let participant_count = self.participant_buf.len();
+        let participant_count = self.round_cohort.len();
         // Average over the losses actually reported: in-process every
         // participant's loss is finite so this is the plain mean, while
         // a remote round leaves `NaN` in the slots of devices whose
@@ -495,10 +630,9 @@ impl RoundEngine {
         // poison the global estimate.
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
-        for &i in &self.participant_buf {
-            let l = self.slots[i].loss;
-            if l.is_finite() {
-                loss_sum += l;
+        for (_, slot) in &self.round_cohort {
+            if slot.loss.is_finite() {
+                loss_sum += slot.loss;
                 loss_n += 1;
             }
         }
@@ -516,27 +650,34 @@ impl RoundEngine {
         }
         self.prev_loss = train_loss;
         self.loss_history.push(train_loss);
-        let levels: Vec<u8> = self
-            .slots
-            .iter()
-            .filter_map(|s| s.staged_level)
-            .collect();
-        let mean_level = if levels.is_empty() {
+        let mut level_sum = 0u64;
+        let mut level_n = 0usize;
+        for (_, slot) in &self.round_cohort {
+            if let Some(l) = slot.staged_level {
+                level_sum += l as u64;
+                level_n += 1;
+            }
+        }
+        let mean_level = if level_n == 0 {
             0.0
         } else {
-            levels.iter().map(|&b| b as f64).sum::<f64>() / levels.len() as f64
+            level_sum as f64 / level_n as f64
         };
         self.cum_bits += stats.uplink_bits;
         self.cum_bits_down += stats.downlink_bits;
         self.cum_sim_time += stats.round_time;
         self.cum_stragglers += stats.stragglers;
-        for (view, slot) in self.device_views.iter_mut().zip(&self.slots) {
-            view.uploads = slot.state.uploads;
-            view.skips = slot.state.skips;
+        // Sparse statistics update: only cohort members can have changed
+        // counters or observed a loss this round, so touching just them
+        // is exactly the old dense per-device pass.
+        for (id, slot) in &self.round_cohort {
+            let v = self.stats.entry(*id);
+            v.uploads = slot.state.uploads;
+            v.skips = slot.state.skips;
             // A remote participant whose result never arrived keeps its
             // previous loss estimate (its slot holds the `NaN` sentinel).
-            if slot.participated && slot.loss.is_finite() {
-                view.last_loss = Some(slot.loss);
+            if slot.loss.is_finite() {
+                v.last_loss = Some(slot.loss);
             }
         }
         let do_eval = (self.cfg.eval_every > 0 && round.is_multiple_of(self.cfg.eval_every))
@@ -547,6 +688,28 @@ impl RoundEngine {
         } else {
             (None, None, None)
         };
+        // ---- slot-cache maintenance ------------------------------------
+        // Cohort slots return to the live cache; under a bounded lazy
+        // policy the least-recently-used overflow (ties toward lower
+        // ids) is parked to compact state.
+        for (id, slot) in self.round_cohort.drain(..) {
+            self.live.insert(id, slot);
+        }
+        if let SlotPolicy::Lazy { cache } = self.cfg.slots {
+            if cache > 0 && self.live.len() > cache {
+                let excess = self.live.len() - cache;
+                let mut order: Vec<(usize, usize)> = self
+                    .live
+                    .iter()
+                    .map(|(&id, s)| (s.last_used, id))
+                    .collect();
+                order.sort_unstable();
+                for &(_, id) in order.iter().take(excess) {
+                    let slot = self.live.remove(&id).expect("listed from live");
+                    self.parked.insert(id, ParkedState::from_slot(slot));
+                }
+            }
+        }
         // Hand the context's history buffer back for the next round.
         self.ctx_diff_buf = std::mem::take(&mut ctx.model_diff_history);
         RoundRecord {
@@ -569,32 +732,58 @@ impl RoundEngine {
 
     /// Snapshot the run state (resume with [`RoundEngine::restore`]).
     /// `next_round` is the index of the first round not yet executed.
+    /// Since checkpoint v6 the snapshot is *sparse*: it records state
+    /// for the devices this run ever materialized (live + parked), not
+    /// the whole population — an eager engine therefore still writes
+    /// every device, exactly the old dense format.
     pub fn snapshot(&self, next_round: usize) -> Checkpoint {
+        debug_assert!(
+            self.round_cohort.is_empty(),
+            "snapshot mid-round (finish_round not called?)"
+        );
         let rng_state = |rng: &Xoshiro256pp| {
             let (s, gauss_cache) = rng.snapshot();
             RngState { s, gauss_cache }
         };
+        let mut device_ids: Vec<usize> =
+            self.live.keys().chain(self.parked.keys()).copied().collect();
+        device_ids.sort_unstable();
+        let n = device_ids.len();
+        let mut device_q = Vec::with_capacity(n);
+        let mut device_stats = Vec::with_capacity(n);
+        let mut device_rng = Vec::with_capacity(n);
+        let mut device_last_loss = Vec::with_capacity(n);
+        for &id in &device_ids {
+            if let Some(slot) = self.live.get(&id) {
+                device_q.push(slot.state.q_prev.clone());
+                device_stats.push((slot.state.uploads, slot.state.skips, slot.state.prev_err_sq));
+                device_rng.push(rng_state(&slot.state.rng));
+            } else {
+                let p = &self.parked[&id];
+                device_q.push(p.q_prev.clone());
+                device_stats.push((p.uploads, p.skips, p.prev_err_sq));
+                device_rng.push(RngState {
+                    s: p.rng.0,
+                    gauss_cache: p.rng.1,
+                });
+            }
+            device_last_loss.push(self.stats.get(id).last_loss.unwrap_or(f64::NAN));
+        }
         Checkpoint {
             version: VERSION,
             round: next_round,
+            population: self.m,
+            device_ids,
             theta: self.theta.clone(),
             prev_theta: self.prev_theta.clone(),
             direction: self.server.direction.clone(),
-            device_q: self.slots.iter().map(|s| s.state.q_prev.clone()).collect(),
-            device_stats: self
-                .slots
-                .iter()
-                .map(|s| (s.state.uploads, s.state.skips, s.state.prev_err_sq))
-                .collect(),
-            device_rng: self.slots.iter().map(|s| rng_state(&s.state.rng)).collect(),
+            device_q,
+            device_stats,
+            device_rng,
             coin_rng: Some(rng_state(&self.coin_rng)),
             diff_history: self.diff_history.to_vec(),
             loss_history: self.loss_history.to_vec(),
-            device_last_loss: self
-                .device_views
-                .iter()
-                .map(|v| v.last_loss.unwrap_or(f64::NAN))
-                .collect(),
+            device_last_loss,
             cum_bits: self.cum_bits,
             bits_down: self.cum_bits_down,
             sim_time: self.cum_sim_time,
@@ -609,7 +798,9 @@ impl RoundEngine {
 
     /// Restore a snapshot produced by [`RoundEngine::snapshot`] on an
     /// engine built with the same problem/masks/config. Returns the
-    /// next round index to execute.
+    /// next round index to execute. v1–v5 checkpoints (dense per-device
+    /// state) migrate into the sparse store: their tracked set is the
+    /// whole population.
     pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<usize> {
         anyhow::ensure!(
             ckpt.theta.len() == self.theta.len(),
@@ -618,50 +809,75 @@ impl RoundEngine {
             self.theta.len()
         );
         anyhow::ensure!(
-            ckpt.device_q.len() == self.slots.len(),
+            ckpt.population == self.m,
             "checkpoint device count mismatch"
         );
-        for (slot, q) in self.slots.iter().zip(&ckpt.device_q) {
+        anyhow::ensure!(
+            ckpt.device_ids.len() == ckpt.device_q.len()
+                && ckpt.device_ids.len() == ckpt.device_stats.len(),
+            "checkpoint tracked-device sections disagree"
+        );
+        for (&id, q) in ckpt.device_ids.iter().zip(&ckpt.device_q) {
+            anyhow::ensure!(id < self.m, "checkpoint device {id} out of range");
             anyhow::ensure!(
-                slot.state.q_prev.len() == q.len(),
-                "device {} support mismatch",
-                slot.state.id
+                self.population.mask_of(id).support() == q.len(),
+                "device {id} support mismatch"
             );
         }
         self.theta.copy_from_slice(&ckpt.theta);
         self.prev_theta.copy_from_slice(&ckpt.prev_theta);
         self.server.direction.copy_from_slice(&ckpt.direction);
-        for (slot, (q, &(u, s, e))) in self
-            .slots
-            .iter_mut()
-            .zip(ckpt.device_q.iter().zip(&ckpt.device_stats))
-        {
-            slot.state.q_prev.copy_from_slice(q);
-            slot.state.uploads = u;
-            slot.state.skips = s;
-            slot.state.prev_err_sq = e;
-        }
-        // RNG streams (v2 checkpoints; v1 keeps fresh streams and
-        // `Checkpoint::load` already warned).
-        if ckpt.device_rng.len() == self.slots.len() {
-            for (slot, rng) in self.slots.iter_mut().zip(&ckpt.device_rng) {
-                slot.state.rng = Xoshiro256pp::from_snapshot(rng.s, rng.gauss_cache);
-            }
-        }
-        if let Some(coin) = &ckpt.coin_rng {
-            self.coin_rng = Xoshiro256pp::from_snapshot(coin.s, coin.gauss_cache);
-        }
-        for (i, (view, slot)) in self.device_views.iter_mut().zip(&self.slots).enumerate() {
-            view.uploads = slot.state.uploads;
-            view.skips = slot.state.skips;
+        self.live.clear();
+        self.parked.clear();
+        self.round_cohort.clear();
+        self.stats.clear();
+        // RNG streams are present since v2; a v1 checkpoint resumes
+        // with fresh id-keyed streams (`Checkpoint::load` already
+        // warned).
+        let with_rng = ckpt.device_rng.len() == ckpt.device_q.len();
+        for (idx, &id) in ckpt.device_ids.iter().enumerate() {
+            let (u, s, e) = ckpt.device_stats[idx];
+            let rng = if with_rng {
+                (ckpt.device_rng[idx].s, ckpt.device_rng[idx].gauss_cache)
+            } else {
+                DeviceState::rng_stream(id, self.population.seed()).snapshot()
+            };
+            self.parked.insert(
+                id,
+                ParkedState {
+                    q_prev: ckpt.device_q[idx].clone(),
+                    prev_err_sq: e,
+                    uploads: u,
+                    skips: s,
+                    rng,
+                },
+            );
+            let v = self.stats.entry(id);
+            v.uploads = u;
+            v.skips = s;
             // v3 checkpoints carry the per-device loss estimates that
             // loss-weighted selection samples from; older versions
             // leave them unobserved.
-            view.last_loss = ckpt
+            v.last_loss = ckpt
                 .device_last_loss
-                .get(i)
+                .get(idx)
                 .copied()
                 .filter(|l| l.is_finite());
+        }
+        // Eager engines materialize the whole population up front;
+        // restored (tracked) devices unpark, the rest are fresh.
+        if self.cfg.slots == SlotPolicy::Eager {
+            for id in 0..self.m {
+                let slot = match self.parked.remove(&id) {
+                    Some(p) => unpark(&self.population, id, p),
+                    None => fresh_slot(&self.population, id),
+                };
+                self.live.insert(id, slot);
+            }
+        }
+        self.max_live = self.max_live.max(self.live.len());
+        if let Some(coin) = &ckpt.coin_rng {
+            self.coin_rng = Xoshiro256pp::from_snapshot(coin.s, coin.gauss_cache);
         }
         self.diff_history.assign(&ckpt.diff_history);
         self.loss_history.assign(&ckpt.loss_history);

@@ -29,8 +29,10 @@
 
 pub mod checkpoint;
 pub mod engine;
+pub mod population;
 mod session;
 
+pub use population::PopulationSpec;
 pub use session::{Session, SessionBuilder};
 
 pub(crate) use session::SessionParts;
@@ -39,6 +41,26 @@ use crate::quant::SectionSpec;
 use crate::selection::{FullParticipation, RandomK, SelectionStrategy};
 use crate::transport::scenario::NetworkSpec;
 use crate::transport::FaultSpec;
+
+/// How the engine stores per-device slot state (DESIGN.md §Population).
+///
+/// Both policies produce byte-identical traces (pinned by
+/// `tests/prop_population.rs`); the policy only trades memory for slot
+/// rebuild work on re-selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotPolicy {
+    /// Materialize every device's slot at construction — the
+    /// pre-virtualization behavior; O(population) memory.
+    Eager,
+    /// Materialize slots lazily for selected cohorts only, keeping at
+    /// most `cache` materialized slots between rounds (least recently
+    /// selected devices are parked to compact state; `cache = 0` means
+    /// unbounded). Memory is O(cache + cohort + d).
+    Lazy {
+        /// Live-slot cache capacity (0 = unbounded).
+        cache: usize,
+    },
+}
 
 /// Runtime configuration of one FL run.
 #[derive(Clone, Debug)]
@@ -84,6 +106,11 @@ pub struct RunConfig {
     /// byte-for-byte; `tensor` gives one scale per `ParamLayout`
     /// tensor; `fixed:N` gives `N`-element blocks.
     pub quant_sections: SectionSpec,
+    /// Device-slot storage policy. The default [`SlotPolicy::Eager`]
+    /// keeps every device materialized (fine up to ~10⁵ devices);
+    /// million-device populations should run [`SlotPolicy::Lazy`] with
+    /// a cache a few times the cohort size.
+    pub slots: SlotPolicy,
 }
 
 impl Default for RunConfig {
@@ -104,6 +131,7 @@ impl Default for RunConfig {
             faults: FaultSpec::none(),
             network: NetworkSpec::default(),
             quant_sections: SectionSpec::Global,
+            slots: SlotPolicy::Eager,
         }
     }
 }

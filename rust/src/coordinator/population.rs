@@ -1,0 +1,189 @@
+//! The device population as a *spec*, not a vector of live slots.
+//!
+//! AQUILA's premise is that only a selected cohort of K devices uploads
+//! each round, yet the pre-virtualization engine materialized a
+//! `DeviceSlot` for every simulated device — O(population) memory and
+//! per-round flag passes even when K ≪ N. A [`PopulationSpec`] instead
+//! derives everything a device slot is *born with* — its capacity mask,
+//! its resolved quantization sections, and its id-keyed RNG stream —
+//! deterministically from `(seed, device_id)`, so the engine can
+//! materialize full slot state lazily for just the selected cohort
+//! (DESIGN.md §Population).
+//!
+//! Determinism argument: a fresh [`crate::algorithms::DeviceState`] is a
+//! pure function of `(seed, id, mask, sections)`, and the mask/section
+//! tables here are pure functions of `(layout, spec, id)`. Materializing
+//! device `id` on round 40 therefore yields bit-identical state to
+//! having materialized it on round 0 and never touched it — which is
+//! exactly what the eager engine did. The equivalence is pinned by
+//! `tests/prop_population.rs`.
+
+use crate::algorithms::DeviceState;
+use crate::hetero::{CapacityMask, MaskTable};
+use crate::problems::ParamLayout;
+use crate::quant::{SectionSpec, Sections};
+use std::sync::Arc;
+
+/// Deterministic derivation of per-device slot ingredients from
+/// `(seed, device_id)`: capacity mask, resolved quantization sections,
+/// and the device-keyed RNG stream seed. See the module docs.
+#[derive(Clone, Debug)]
+pub struct PopulationSpec {
+    seed: u64,
+    num_devices: usize,
+    masks: MaskTable,
+    /// Sections resolved once per *distinct* mask and keyed by mask
+    /// identity (HeteroFL setups hand out two masks to M devices, not
+    /// M distinct ones), so resolution cost is O(distinct masks) — not
+    /// O(population).
+    sections: Vec<(Arc<CapacityMask>, Arc<Sections>)>,
+}
+
+impl PopulationSpec {
+    /// Resolve the spec for a population wearing `masks`, partitioning
+    /// each device's upload per `section_spec` over `layout`.
+    pub fn new(
+        layout: &ParamLayout,
+        masks: MaskTable,
+        section_spec: &SectionSpec,
+        seed: u64,
+    ) -> Self {
+        let sections = masks
+            .distinct_masks()
+            .into_iter()
+            .map(|mask| {
+                let s = Arc::new(section_spec.resolve(layout, &mask));
+                (mask, s)
+            })
+            .collect();
+        Self {
+            seed,
+            num_devices: masks.num_devices(),
+            masks,
+            sections,
+        }
+    }
+
+    /// Total device count `M`.
+    pub fn num_devices(&self) -> usize {
+        self.num_devices
+    }
+
+    /// The run seed device RNG streams are keyed from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The population's capacity-mask table.
+    pub fn masks(&self) -> &MaskTable {
+        &self.masks
+    }
+
+    /// Capacity mask of `device` (panics out of range).
+    pub fn mask_of(&self, device: usize) -> &Arc<CapacityMask> {
+        self.masks.get(device)
+    }
+
+    /// Resolved quantization sections of `device` (panics out of
+    /// range).
+    pub fn sections_of(&self, device: usize) -> &Arc<Sections> {
+        let key = Arc::as_ptr(self.masks.get(device));
+        self.sections
+            .iter()
+            .find(|(m, _)| Arc::as_ptr(m) == key)
+            .map(|(_, s)| s)
+            .expect("every table mask is registered at construction")
+    }
+
+    /// Materialize device `device`'s algorithm state exactly as the
+    /// eager engine would have at construction: zero reference vector,
+    /// id-keyed RNG stream, the device's mask and sections.
+    pub fn fresh_state(&self, device: usize) -> DeviceState {
+        assert!(device < self.num_devices, "device {device} out of range");
+        DeviceState::with_sections(
+            device,
+            self.mask_of(device).clone(),
+            self.sections_of(device).clone(),
+            self.seed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::half_half_masks;
+
+    fn layout(d: usize) -> ParamLayout {
+        ParamLayout::contiguous(&[("theta", vec![d])])
+    }
+
+    #[test]
+    fn fresh_state_matches_eager_construction() {
+        // The eager engine built every DeviceState up front from the
+        // dense mask vector; the spec must produce bit-identical state
+        // on demand, in any materialization order.
+        let l = layout(10);
+        let masks = half_half_masks(&l, 4, 0.5);
+        let spec = PopulationSpec::new(
+            &l,
+            MaskTable::from(masks.clone()),
+            &SectionSpec::Global,
+            17,
+        );
+        for id in [3usize, 0, 2, 1] {
+            let lazy = spec.fresh_state(id);
+            let eager = DeviceState::with_sections(
+                id,
+                masks[id].clone(),
+                Arc::new(SectionSpec::Global.resolve(&l, &masks[id])),
+                17,
+            );
+            assert_eq!(lazy.id, eager.id);
+            assert_eq!(lazy.q_prev, eager.q_prev);
+            assert_eq!(lazy.mask.support(), eager.mask.support());
+            assert_eq!(lazy.sections.total(), eager.sections.total());
+            assert_eq!(lazy.rng.snapshot(), eager.rng.snapshot());
+        }
+    }
+
+    #[test]
+    fn sections_resolved_once_per_distinct_mask() {
+        let l = layout(8);
+        let spec = PopulationSpec::new(
+            &l,
+            MaskTable::half_half(&l, 1000, 0.5),
+            &SectionSpec::Global,
+            1,
+        );
+        assert_eq!(spec.sections.len(), 2);
+        // Devices sharing a mask share the resolved sections object.
+        assert!(Arc::ptr_eq(spec.sections_of(0), spec.sections_of(1)));
+        assert!(Arc::ptr_eq(spec.sections_of(500), spec.sections_of(999)));
+        assert!(!Arc::ptr_eq(spec.sections_of(0), spec.sections_of(999)));
+    }
+
+    #[test]
+    fn million_device_spec_is_cheap_and_total() {
+        let l = layout(16);
+        let spec = PopulationSpec::new(
+            &l,
+            MaskTable::uniform_full(16, 1_000_000),
+            &SectionSpec::Global,
+            7,
+        );
+        assert_eq!(spec.num_devices(), 1_000_000);
+        let s = spec.fresh_state(999_999);
+        assert_eq!(s.id, 999_999);
+        assert_eq!(s.support(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn fresh_state_rejects_out_of_range() {
+        let l = layout(4);
+        let spec =
+            PopulationSpec::new(&l, MaskTable::uniform_full(4, 3), &SectionSpec::Global, 1);
+        spec.fresh_state(3);
+    }
+}

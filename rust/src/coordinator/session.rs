@@ -23,7 +23,7 @@ use super::checkpoint::Checkpoint;
 use super::engine::RoundEngine;
 use super::RunConfig;
 use crate::algorithms::Algorithm;
-use crate::hetero::CapacityMask;
+use crate::hetero::{CapacityMask, MaskTable};
 use crate::metrics::observer::{RoundObserver, RunMeta};
 use crate::metrics::{RoundRecord, RunTrace};
 use crate::problems::GradientSource;
@@ -36,7 +36,7 @@ pub struct SessionBuilder {
     problem: Arc<dyn GradientSource>,
     algo: Arc<dyn Algorithm>,
     cfg: RunConfig,
-    masks: Option<Vec<Arc<CapacityMask>>>,
+    masks: Option<MaskTable>,
     strategy: Option<Box<dyn SelectionStrategy>>,
     spec: Option<SelectionSpec>,
     observers: Vec<Box<dyn RoundObserver>>,
@@ -70,6 +70,14 @@ impl SessionBuilder {
     /// Explicit per-device capacity masks (heterogeneous runs); default
     /// is full capacity everywhere.
     pub fn masks(mut self, masks: Vec<Arc<CapacityMask>>) -> Self {
+        self.masks = Some(MaskTable::from(masks));
+        self
+    }
+
+    /// Capacity masks as a compact [`MaskTable`] — the only sensible
+    /// spelling for million-device populations, where a dense mask
+    /// vector would itself be O(M).
+    pub fn mask_table(mut self, masks: MaskTable) -> Self {
         self.masks = Some(masks);
         self
     }
@@ -112,9 +120,7 @@ impl SessionBuilder {
     pub fn build(self) -> Session {
         let m = self.problem.num_devices();
         let d = self.problem.dim();
-        let masks = self
-            .masks
-            .unwrap_or_else(|| vec![Arc::new(CapacityMask::full(d)); m]);
+        let masks = self.masks.unwrap_or_else(|| MaskTable::uniform_full(d, m));
         let strategy: Box<dyn SelectionStrategy> = match (self.strategy, self.spec) {
             (Some(s), _) => s,
             (None, Some(spec)) => spec.build(m, self.cfg.seed),
@@ -213,9 +219,24 @@ impl Session {
         self.engine.network()
     }
 
-    /// Per-device upload/skip counters.
+    /// Per-device upload/skip counters (dense, O(M) — million-device
+    /// callers should prefer
+    /// [`RoundEngine::selection_stats`][super::engine::RoundEngine::selection_stats]
+    /// via the engine).
     pub fn device_stats(&self) -> Vec<(u64, u64)> {
         self.engine.device_stats()
+    }
+
+    /// Fully-materialized device slots right now (live cache +
+    /// in-flight cohort).
+    pub fn resident_slots(&self) -> usize {
+        self.engine.resident_slots()
+    }
+
+    /// Peak simultaneous fully-materialized device slots over the
+    /// run's lifetime.
+    pub fn peak_resident_slots(&self) -> usize {
+        self.engine.peak_resident_slots()
     }
 
     /// The run configuration.

@@ -140,6 +140,116 @@ pub fn half_half_masks(layout: &ParamLayout, m: usize, ratio: f32) -> Vec<Arc<Ca
         .collect()
 }
 
+/// Per-device capacity assignment for an arbitrarily large population.
+///
+/// The dense `Vec<Arc<CapacityMask>>` form costs O(population) memory
+/// even when every device shares one mask — the exact overhead the
+/// million-device population spec (DESIGN.md §Population) removes. A
+/// `MaskTable` answers "which mask does device `i` hold?" from O(1)
+/// state for the shared-mask populations, while still admitting the
+/// fully explicit per-device form for small heterogeneous fleets.
+///
+/// The mapping is positional and deterministic, so the coordinator and
+/// a served [`crate::protocol::DeviceClient`] derive identical masks
+/// from the same table description.
+#[derive(Clone, Debug)]
+pub enum MaskTable {
+    /// Every device shares one mask (O(1) memory at any population).
+    Uniform {
+        /// The shared mask.
+        mask: Arc<CapacityMask>,
+        /// Population size.
+        m: usize,
+    },
+    /// The paper's 100%–50% split derived positionally: devices
+    /// `0..m/2` hold the full model, the rest the reduced mask —
+    /// O(1) memory at any population size.
+    HalfHalf {
+        /// Mask of the full-capacity half (`0..m/2`).
+        full: Arc<CapacityMask>,
+        /// Mask of the reduced-capacity half (`m/2..m`).
+        reduced: Arc<CapacityMask>,
+        /// Population size.
+        m: usize,
+    },
+    /// One explicit mask per device (the dense legacy form).
+    PerDevice(Vec<Arc<CapacityMask>>),
+}
+
+impl MaskTable {
+    /// The uniform full-capacity table — every device trains the whole
+    /// `d`-dimensional model.
+    pub fn uniform_full(d: usize, m: usize) -> Self {
+        Self::Uniform {
+            mask: Arc::new(CapacityMask::full(d)),
+            m,
+        }
+    }
+
+    /// The paper's 100%–50% split as an O(1) table (the spec-derived
+    /// counterpart of [`half_half_masks`]): devices `0..m/2` full,
+    /// `m/2..m` at `ratio`.
+    pub fn half_half(layout: &ParamLayout, m: usize, ratio: f32) -> Self {
+        Self::HalfHalf {
+            full: Arc::new(CapacityMask::full(layout.dim())),
+            reduced: Arc::new(CapacityMask::from_layout(layout, ratio)),
+            m,
+        }
+    }
+
+    /// Population size this table covers.
+    pub fn num_devices(&self) -> usize {
+        match self {
+            Self::Uniform { m, .. } | Self::HalfHalf { m, .. } => *m,
+            Self::PerDevice(v) => v.len(),
+        }
+    }
+
+    /// The mask device `device` holds. Panics when out of range.
+    pub fn get(&self, device: usize) -> &Arc<CapacityMask> {
+        match self {
+            Self::Uniform { mask, m } => {
+                assert!(device < *m, "device {device} out of range (m = {m})");
+                mask
+            }
+            Self::HalfHalf { full, reduced, m } => {
+                assert!(device < *m, "device {device} out of range (m = {m})");
+                if device < m / 2 {
+                    full
+                } else {
+                    reduced
+                }
+            }
+            Self::PerDevice(v) => &v[device],
+        }
+    }
+
+    /// The distinct masks in this table (deduplicated by allocation for
+    /// the dense form) — what section resolution iterates instead of
+    /// the population.
+    pub fn distinct_masks(&self) -> Vec<Arc<CapacityMask>> {
+        match self {
+            Self::Uniform { mask, .. } => vec![mask.clone()],
+            Self::HalfHalf { full, reduced, .. } => vec![full.clone(), reduced.clone()],
+            Self::PerDevice(v) => {
+                let mut out: Vec<Arc<CapacityMask>> = Vec::new();
+                for m in v {
+                    if !out.iter().any(|o| Arc::ptr_eq(o, m)) {
+                        out.push(m.clone());
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+impl From<Vec<Arc<CapacityMask>>> for MaskTable {
+    fn from(v: Vec<Arc<CapacityMask>>) -> Self {
+        Self::PerDevice(v)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,5 +360,38 @@ mod tests {
     #[should_panic]
     fn rejects_zero_ratio() {
         CapacityMask::from_layout(&mlp_layout(), 0.0);
+    }
+
+    #[test]
+    fn mask_table_matches_dense_forms() {
+        let layout = mlp_layout();
+        // Half-half: positional table ≡ the dense helper, at any m.
+        for m in [1usize, 2, 9, 10] {
+            let dense = half_half_masks(&layout, m, 0.5);
+            let table = MaskTable::half_half(&layout, m, 0.5);
+            assert_eq!(table.num_devices(), m);
+            for (i, want) in dense.iter().enumerate() {
+                assert_eq!(table.get(i).indices, want.indices, "m={m} i={i}");
+            }
+            assert_eq!(table.distinct_masks().len(), 2);
+        }
+        // Uniform-full: every device sees the identity mask.
+        let t = MaskTable::uniform_full(layout.dim(), 1_000_000);
+        assert_eq!(t.num_devices(), 1_000_000);
+        assert!(t.get(999_999).is_full());
+        assert_eq!(t.distinct_masks().len(), 1);
+        // Dense round-trip dedupes shared allocations.
+        let dense = half_half_masks(&layout, 6, 0.5);
+        let t = MaskTable::from(dense.clone());
+        for (i, want) in dense.iter().enumerate() {
+            assert!(Arc::ptr_eq(t.get(i), want));
+        }
+        assert_eq!(t.distinct_masks().len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mask_table_uniform_rejects_out_of_range() {
+        MaskTable::uniform_full(4, 8).get(8);
     }
 }

@@ -11,7 +11,7 @@
 //!           [--dadaquant-cap C] [--out FILE.csv] [--jsonl FILE.jsonl]
 //!           [--serve [ADDR] | --connect ADDR] [--chaos SPEC]
 //!           [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
-//!                                                     single configured run
+//!           [--population N] [--slot-cache C]          single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
 //! repro list                                          presets + algorithms + strategies
 //! ```
@@ -265,6 +265,27 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
+    // Population virtualization: `--population N` swaps in the streamed
+    // N-device quadratic with a lazy slot store; `--slot-cache C`
+    // bounds (or, with 0, unbounds) the live-slot cache.
+    if let Some(v) = args.flags.get("population") {
+        match v.parse::<usize>() {
+            Ok(n) if n >= 1 => spec.population = Some(n),
+            _ => {
+                eprintln!("--population must be a positive integer, got '{v}'");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if let Some(v) = args.flags.get("slot-cache") {
+        match v.parse::<usize>() {
+            Ok(c) => spec.slot_cache = Some(c),
+            _ => {
+                eprintln!("--slot-cache must be a non-negative integer, got '{v}'");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     let algo_name = args
         .flags
         .get("algo")
@@ -312,8 +333,12 @@ fn cmd_run(args: &Args) -> ExitCode {
     println!(
         "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={}, sections={})",
         algo.name(),
-        spec.row_label(),
-        spec.devices,
+        if spec.population.is_some() {
+            "virtualized population".to_string()
+        } else {
+            spec.row_label()
+        },
+        spec.effective_devices(),
         spec.rounds,
         spec.alpha,
         spec.beta,
@@ -416,8 +441,8 @@ fn cmd_run(args: &Args) -> ExitCode {
 fn cmd_connect(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>, addr: &str) -> ExitCode {
     println!("connecting to coordinator at {addr} as a device client");
     let problem: Arc<dyn GradientSource> = spec.build_problem().into();
-    let masks = repro::masks_for(spec, problem.as_ref());
-    let client = DeviceClient::new(problem, algo, spec.run_config(), masks)
+    let masks = repro::mask_table_for(spec, problem.as_ref());
+    let client = DeviceClient::with_mask_table(problem, algo, spec.run_config(), masks)
         .heartbeat_ms(spec.serve.heartbeat_ms)
         .reconnect(10, 50, 2_000)
         .idle_timeout_ms(spec.serve.round_timeout_ms.saturating_mul(2).max(1_000));
@@ -517,6 +542,10 @@ fn cmd_list() {
     println!("                                  --chaos SPEC     fault injection (served runs)");
     println!("                                  --checkpoint FILE [--checkpoint-every N]");
     println!("                                  --resume FILE    restart from a checkpoint");
+    println!("                                  --population N   virtualized N-device run");
+    println!("                                                   (streamed quadratic, lazy slots)");
+    println!("                                  --slot-cache C   live-slot cache capacity");
+    println!("                                                   (0 = lazy but unbounded)");
 }
 
 fn main() -> ExitCode {
@@ -539,7 +568,7 @@ fn main() -> ExitCode {
             println!("             --dadaquant-patience P --dadaquant-cap C");
             println!("             --serve [ADDR] (coordinator) | --connect ADDR (client)");
             println!("             --chaos SPEC --checkpoint FILE [--checkpoint-every N]");
-            println!("             --resume FILE");
+            println!("             --resume FILE --population N --slot-cache C");
             println!("  `repro list` prints the full flag surface and spec syntaxes");
         }
     }

@@ -156,6 +156,128 @@ impl GradientSource for QuadraticProblem {
     }
 }
 
+/// A quadratic population generated *on the fly*: device `m`'s
+/// curvatures/center are regenerated from an id-keyed RNG stream inside
+/// every [`GradientSource::local_grad`] call, so the problem costs O(1)
+/// memory regardless of the device count — the substrate for the
+/// million-device virtualized runs (DESIGN.md §Population).
+///
+/// Not bit-compatible with [`QuadraticProblem`] at the same seed: the
+/// dense constructor draws all devices from one sequential stream whose
+/// Box–Muller pair cache spans device boundaries, which an id-keyed
+/// stream cannot reproduce. Virtualization equivalence tests therefore
+/// compare lazy vs eager *engines over the same problem instance*, never
+/// streamed vs dense problems.
+#[derive(Clone, Debug)]
+pub struct StreamedQuadratic {
+    dim: usize,
+    m: usize,
+    log_lo: f64,
+    log_hi: f64,
+    spread: f32,
+    seed: u64,
+}
+
+/// Devices sampled by [`StreamedQuadratic::eval`]'s global-loss
+/// estimate (the exact mean is O(M·d) — unpayable at M = 10⁶ every
+/// eval round).
+const STREAMED_EVAL_DEVICES: usize = 64;
+
+impl StreamedQuadratic {
+    /// Spec-only constructor: O(1) memory and time. Parameters mirror
+    /// [`QuadraticProblem::new`].
+    pub fn new(dim: usize, m: usize, a_min: f32, a_max: f32, spread: f32, seed: u64) -> Self {
+        assert!(a_min > 0.0 && a_max >= a_min);
+        Self {
+            dim,
+            m,
+            log_lo: (a_min as f64).ln(),
+            log_hi: (a_max as f64).ln(),
+            spread,
+            seed,
+        }
+    }
+
+    /// The id-keyed stream device `device`'s parameters are drawn from.
+    fn device_rng(&self, device: usize) -> Xoshiro256pp {
+        let tag = 0x9AAD ^ (device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Xoshiro256pp::stream(self.seed, tag)
+    }
+}
+
+impl GradientSource for StreamedQuadratic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_devices(&self) -> usize {
+        self.m
+    }
+
+    fn local_grad(
+        &self,
+        device: usize,
+        theta: &[f32],
+        grad: &mut [f32],
+        _scratch: &mut GradScratch,
+    ) -> f64 {
+        assert!(device < self.m, "device {device} out of range");
+        assert_eq!(theta.len(), self.dim);
+        assert_eq!(grad.len(), self.dim);
+        // Same per-device draw order as the dense constructor: one
+        // offset, then (curvature, center) per coordinate.
+        let mut rng = self.device_rng(device);
+        let dev_offset: f32 = rng.gaussian_f32(0.0, self.spread);
+        let mut loss = 0.0f64;
+        for i in 0..self.dim {
+            let a = rng.uniform(self.log_lo, self.log_hi).exp() as f32;
+            let c = rng.gaussian_f32(dev_offset, 1.0);
+            let diff = theta[i] - c;
+            grad[i] = a * diff;
+            loss += 0.5 * a as f64 * diff as f64 * diff as f64;
+        }
+        loss
+    }
+
+    /// Sampled global-loss *estimate*: the mean local loss over the
+    /// first `min(M, 64)` devices, not all `M`. Deterministic and
+    /// comparable across rounds of one run, but not the exact global
+    /// objective — million-device runs report it as a tracking metric
+    /// only.
+    fn global_loss(&self, theta: &[f32]) -> f64 {
+        let n = self.m.min(STREAMED_EVAL_DEVICES);
+        if n == 0 {
+            return 0.0;
+        }
+        let mut scratch = self.make_scratch();
+        let mut grad = vec![0.0f32; self.dim];
+        let mut total = 0.0f64;
+        for device in 0..n {
+            total += self.local_grad(device, theta, &mut grad, &mut scratch);
+        }
+        total / n as f64
+    }
+
+    fn eval(&self, theta: &[f32]) -> EvalMetrics {
+        EvalMetrics {
+            loss: self.global_loss(theta),
+            accuracy: None,
+            perplexity: None,
+        }
+    }
+
+    fn init_theta(&self, seed: u64) -> Vec<f32> {
+        // Identical to the dense problem: θ⁰ depends on the run seed
+        // only, never on the population size.
+        let mut rng = Xoshiro256pp::stream(seed, 0x717A);
+        (0..self.dim).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    fn layout(&self) -> ParamLayout {
+        ParamLayout::contiguous(&[("theta", vec![self.dim])])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,5 +383,46 @@ mod tests {
         let b = QuadraticProblem::new(8, 3, 0.5, 2.0, 0.1, 9);
         assert_eq!(a.a, b.a);
         assert_eq!(a.c, b.c);
+    }
+
+    #[test]
+    fn streamed_gradient_matches_finite_differences() {
+        let p = StreamedQuadratic::new(16, 5, 0.5, 2.0, 0.5, 42);
+        let theta = p.init_theta(1);
+        check_gradient(&p, 2, &theta, &[0, 7, 15], 1e-3);
+    }
+
+    #[test]
+    fn streamed_local_grad_is_pure() {
+        // Regenerating device parameters per call must be a pure
+        // function of (device, θ): two calls agree bitwise, and calls
+        // to *other* devices in between change nothing.
+        let p = StreamedQuadratic::new(8, 1_000_000, 0.5, 2.0, 0.5, 7);
+        let theta = p.init_theta(3);
+        let mut ws = p.make_scratch();
+        let mut g1 = vec![0.0f32; 8];
+        let mut g2 = vec![0.0f32; 8];
+        let l1 = p.local_grad(999_999, &theta, &mut g1, &mut ws);
+        p.local_grad(123, &theta, &mut g2, &mut ws);
+        let l2 = p.local_grad(999_999, &theta, &mut g2, &mut ws);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn streamed_devices_differ_and_eval_is_finite() {
+        let p = StreamedQuadratic::new(8, 100, 0.5, 2.0, 0.5, 7);
+        let theta = p.init_theta(3);
+        let mut ws = p.make_scratch();
+        let mut ga = vec![0.0f32; 8];
+        let mut gb = vec![0.0f32; 8];
+        p.local_grad(0, &theta, &mut ga, &mut ws);
+        p.local_grad(1, &theta, &mut gb, &mut ws);
+        assert_ne!(ga, gb, "distinct devices should draw distinct data");
+        let ev = p.eval(&theta);
+        assert!(ev.loss.is_finite() && ev.loss > 0.0);
+        // Same init as the dense problem: θ⁰ is population-size-free.
+        let dense = QuadraticProblem::new(8, 4, 0.5, 2.0, 0.5, 7);
+        assert_eq!(p.init_theta(11), dense.init_theta(11));
     }
 }

@@ -29,8 +29,8 @@ use super::messages::{Message, RoundResult};
 use super::transport::{Connection, Dial};
 use super::{CoordinatorState, ProtocolError, PROTOCOL_VERSION};
 use crate::algorithms::{Algorithm, ClientUpload, DeviceState};
-use crate::coordinator::RunConfig;
-use crate::hetero::CapacityMask;
+use crate::coordinator::{PopulationSpec, RunConfig};
+use crate::hetero::{CapacityMask, MaskTable};
 use crate::problems::{GradScratch, GradientSource};
 use crate::transport::wire;
 use crate::util::rng::Xoshiro256pp;
@@ -101,7 +101,7 @@ pub struct DeviceClient {
     problem: Arc<dyn GradientSource>,
     algo: Arc<dyn Algorithm>,
     cfg: RunConfig,
-    masks: Vec<Arc<CapacityMask>>,
+    masks: MaskTable,
     heartbeat: Duration,
     silent_after: Option<usize>,
     idle_timeout: Duration,
@@ -124,7 +124,27 @@ impl DeviceClient {
         cfg: RunConfig,
         masks: Vec<Arc<CapacityMask>>,
     ) -> Self {
-        assert_eq!(masks.len(), problem.num_devices(), "need one mask per device");
+        Self::with_mask_table(problem, algo, cfg, MaskTable::from(masks))
+    }
+
+    /// [`DeviceClient::new`] with a compact [`MaskTable`] — what a
+    /// client serving a slice of a virtualized million-device
+    /// population passes (a dense mask vector would be O(M) on its
+    /// own).
+    ///
+    /// # Panics
+    /// If `masks` does not cover exactly one mask per device.
+    pub fn with_mask_table(
+        problem: Arc<dyn GradientSource>,
+        algo: Arc<dyn Algorithm>,
+        cfg: RunConfig,
+        masks: MaskTable,
+    ) -> Self {
+        assert_eq!(
+            masks.num_devices(),
+            problem.num_devices(),
+            "need one mask per device"
+        );
         Self {
             problem,
             algo,
@@ -205,20 +225,25 @@ impl DeviceClient {
             return Err(ProtocolError::Violation("assigned device range out of bounds"));
         }
 
-        // Replicate the engine's per-device construction (same mask,
-        // same resolved sections, same seed-derived RNG stream) so the
-        // client-side `client_step` is bit-identical to the in-process
-        // device phase.
+        // Replicate the engine's per-device construction through the
+        // same population spec the coordinator derives slots from
+        // (same mask, same resolved sections, same seed-derived RNG
+        // stream) so the client-side `client_step` is bit-identical to
+        // the in-process device phase.
         let d = self.problem.dim();
-        let layout = self.problem.layout();
+        let population = PopulationSpec::new(
+            &self.problem.layout(),
+            self.masks.clone(),
+            &self.cfg.quant_sections,
+            self.cfg.seed,
+        );
         let units: Vec<DeviceUnit> = (lo..lo + count)
             .map(|i| {
-                let mask = self.masks[i].clone();
-                let sections = Arc::new(self.cfg.quant_sections.resolve(&layout, &mask));
+                let support = population.mask_of(i).support();
                 DeviceUnit {
-                    state: DeviceState::with_sections(i, mask.clone(), sections, self.cfg.seed),
+                    state: population.fresh_state(i),
                     grad_full: vec![0.0; d],
-                    grad_gathered: Vec::with_capacity(mask.support()),
+                    grad_gathered: Vec::with_capacity(support),
                     scratch: self.problem.make_scratch(),
                     wire_buf: Vec::new(),
                 }

@@ -5,7 +5,7 @@
 use crate::algorithms::{self, Algorithm};
 use crate::config::ExperimentSpec;
 use crate::coordinator::{Session, SessionBuilder};
-use crate::hetero::{half_half_masks, CapacityMask};
+use crate::hetero::{half_half_masks, CapacityMask, MaskTable};
 use crate::metrics::{bits_display, RunTrace};
 use crate::problems::GradientSource;
 use crate::protocol::DeviceClient;
@@ -25,17 +25,29 @@ pub fn masks_for(spec: &ExperimentSpec, problem: &dyn GradientSource) -> Vec<Arc
     }
 }
 
+/// [`masks_for`] as a compact [`MaskTable`] — O(1) regardless of the
+/// device count, which is what virtualized (`--population`) runs must
+/// use: a dense mask vector for 10⁷ devices would be O(population) on
+/// its own.
+pub fn mask_table_for(spec: &ExperimentSpec, problem: &dyn GradientSource) -> MaskTable {
+    if spec.hetero {
+        MaskTable::half_half(&problem.layout(), problem.num_devices(), 0.5)
+    } else {
+        MaskTable::uniform_full(problem.dim(), problem.num_devices())
+    }
+}
+
 /// A configured [`SessionBuilder`] for one experiment cell — attach
 /// observers or override the selection strategy before `build()`.
 pub fn session_for(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> SessionBuilder {
     let problem: Arc<dyn GradientSource> = spec.build_problem().into();
-    let masks = masks_for(spec, problem.as_ref());
+    let masks = mask_table_for(spec, problem.as_ref());
     Session::builder(problem, algo)
         .config(spec.run_config())
         .selection_spec(spec.selection.clone())
         .dataset(spec.dataset.name())
         .split(spec.split.name(spec.dataset))
-        .masks(masks)
+        .mask_table(masks)
 }
 
 /// Run one experiment cell (dataset × split × algorithm).
@@ -50,8 +62,9 @@ pub fn run_cell(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> RunTrace {
 /// [`crate::protocol::DeviceClient::reconnect`] etc. for resilience.
 pub fn client_for(spec: &ExperimentSpec, algo: Arc<dyn Algorithm>) -> DeviceClient {
     let problem: Arc<dyn GradientSource> = spec.build_problem().into();
-    let masks = masks_for(spec, problem.as_ref());
-    DeviceClient::new(problem, algo, spec.run_config(), masks).heartbeat_ms(spec.serve.heartbeat_ms)
+    let masks = mask_table_for(spec, problem.as_ref());
+    DeviceClient::with_mask_table(problem, algo, spec.run_config(), masks)
+        .heartbeat_ms(spec.serve.heartbeat_ms)
 }
 
 /// Format the headline metric (accuracy % for classification,

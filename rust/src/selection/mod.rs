@@ -28,8 +28,21 @@
 //! bit-reproducible across runs and thread counts *and* a
 //! checkpoint-resumed run selects exactly the cohorts the uninterrupted
 //! run would have (no strategy state needs checkpointing).
+//!
+//! Since the population-virtualization redesign (DESIGN.md
+//! §Population) strategies read per-device statistics through a
+//! *sparse* [`DeviceStats`] map instead of a dense `&[DeviceView]`:
+//! never-selected devices take the documented
+//! [`DeviceView::default()`] (zero uploads/skips, no recorded loss), so
+//! a million-device population costs O(devices touched) — not
+//! O(population) — per round. The stochastic cohort samplers are O(K)
+//! too: [`RandomK`] draws via Floyd's algorithm
+//! ([`Xoshiro256pp::sample_floyd`]) and [`LossWeighted`] samples the
+//! unobserved mass in closed form instead of materializing a weight
+//! per device.
 
 use crate::util::rng::Xoshiro256pp;
+use std::collections::BTreeMap;
 
 /// Derive the per-round RNG stream of a stochastic strategy: a fresh
 /// stream keyed by `(seed, tag, round)`. Round-keying (rather than one
@@ -54,6 +67,72 @@ pub struct DeviceView {
     pub last_loss: Option<f64>,
 }
 
+/// Sparse per-device statistics: the coordinator records a
+/// [`DeviceView`] only for devices that have participated at least
+/// once.
+///
+/// **Default for unseen devices**: a device with no entry reads as
+/// [`DeviceView::default()`] — zero uploads, zero skips, `last_loss =
+/// None` — exactly what a dense per-device vector held for it before
+/// the population redesign, so strategies behave identically over the
+/// sparse map and its dense reconstruction (pinned by
+/// `tests/prop_population.rs`). Backed by a `BTreeMap` so iteration is
+/// in ascending device id — selection must stay deterministic, and
+/// hash-map iteration order is not.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStats {
+    observed: BTreeMap<usize, DeviceView>,
+}
+
+impl DeviceStats {
+    /// Empty map: every device reads as the documented default.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a dense per-device vector (index = device id) — the
+    /// legacy representation, used by tests and the dense-path
+    /// regression suite.
+    pub fn from_dense(views: &[DeviceView]) -> Self {
+        Self {
+            observed: views.iter().cloned().enumerate().collect(),
+        }
+    }
+
+    /// The statistics of `device`: its recorded entry, or the
+    /// documented default when it has never been touched.
+    pub fn get(&self, device: usize) -> DeviceView {
+        self.observed.get(&device).cloned().unwrap_or_default()
+    }
+
+    /// Mutable entry for `device`, inserting the default on first
+    /// touch. Only the coordinator calls this — a device gets an entry
+    /// exactly when it first participates.
+    pub fn entry(&mut self, device: usize) -> &mut DeviceView {
+        self.observed.entry(device).or_default()
+    }
+
+    /// Iterate the recorded entries in ascending device id.
+    pub fn observed(&self) -> impl Iterator<Item = (usize, &DeviceView)> {
+        self.observed.iter().map(|(&id, v)| (id, v))
+    }
+
+    /// Number of devices with a recorded entry.
+    pub fn observed_len(&self) -> usize {
+        self.observed.len()
+    }
+
+    /// Replace the entry for `device` wholesale (checkpoint restore).
+    pub fn insert(&mut self, device: usize, view: DeviceView) {
+        self.observed.insert(device, view);
+    }
+
+    /// Drop every entry (checkpoint restore into a fresh run).
+    pub fn clear(&mut self) {
+        self.observed.clear();
+    }
+}
+
 /// Read-only snapshot of the run state a strategy may consult when
 /// choosing a cohort.
 #[derive(Clone, Debug)]
@@ -62,8 +141,9 @@ pub struct SelectionView<'a> {
     pub round: usize,
     /// Total device count `M`.
     pub num_devices: usize,
-    /// Per-device statistics, indexed by device id.
-    pub devices: &'a [DeviceView],
+    /// Sparse per-device statistics; devices without an entry read as
+    /// the documented [`DeviceView::default()`].
+    pub stats: &'a DeviceStats,
     /// `f(θ⁰)` estimate (NaN before round 0 completes).
     pub init_loss: f64,
     /// `f(θ^{k−1})` estimate (NaN before round 0 completes).
@@ -133,7 +213,13 @@ impl SelectionStrategy for RandomK {
     fn select(&mut self, view: &SelectionView) -> Selection {
         let k = self.k.min(view.num_devices);
         let mut rng = round_stream(self.seed, 0x5E1E_C715, view.round);
-        Selection::Devices(rng.sample_indices(view.num_devices, k))
+        // Floyd's algorithm: O(k) memory at any population size. One
+        // sampler for every N is what keeps the lazy million-device
+        // path and the eager path cohort-identical. (Draw sequence
+        // differs from the pre-population partial Fisher–Yates, so
+        // seeded random-k traces shifted once at that redesign — same
+        // licence as the round-keying change in PR 2.)
+        Selection::Devices(rng.sample_floyd(view.num_devices, k))
     }
 }
 
@@ -195,41 +281,72 @@ impl SelectionStrategy for LossWeighted {
     fn select(&mut self, view: &SelectionView) -> Selection {
         let m = view.num_devices;
         let k = self.k.min(m);
-        // Unobserved devices weigh as much as the worst observed one
-        // (uniform when nothing has been observed yet).
-        let max_seen = view
-            .devices
-            .iter()
-            .filter_map(|d| d.last_loss)
-            .filter(|l| l.is_finite())
-            .fold(f64::NEG_INFINITY, f64::max);
-        let default_w = if max_seen.is_finite() { max_seen } else { 1.0 };
-        let weights: Vec<f64> = (0..m)
-            .map(|i| {
-                let w = view
-                    .devices
-                    .get(i)
-                    .and_then(|d| d.last_loss)
+        // Observed = devices with a finite recorded loss. Every other
+        // device — never selected, or no finite loss yet — takes the
+        // *default weight*: the worst observed loss (1.0 before any
+        // observation), so unexplored devices are sampled at least as
+        // often as the worst straggler and everyone is eventually
+        // heard from. The unobserved mass is handled in closed form
+        // (`unseen · default_w` plus a rank lookup), so a round costs
+        // O(observed + k²), never O(population).
+        let mut obs: Vec<(usize, f64)> = view
+            .stats
+            .observed()
+            .filter_map(|(id, d)| {
+                d.last_loss
                     .filter(|l| l.is_finite())
-                    .unwrap_or(default_w);
-                w.max(1e-12)
+                    .map(|l| (id, l.max(1e-12)))
             })
             .collect();
+        let default_w = obs
+            .iter()
+            .map(|&(_, w)| w)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let default_w = if default_w.is_finite() { default_w } else { 1.0 };
+        // `excluded` = ids absent from the unseen pool: every observed
+        // id plus any unseen id already chosen. Kept sorted so the
+        // rank → id mapping below is a single ascending scan.
+        let mut excluded: Vec<usize> = obs.iter().map(|&(id, _)| id).collect();
+        let mut obs_total: f64 = obs.iter().map(|&(_, w)| w).sum();
+        let mut unseen = m - excluded.len();
         let mut rng = round_stream(self.seed, 0x1055_3E1E, view.round);
-        let mut avail: Vec<usize> = (0..m).collect();
         let mut chosen = Vec::with_capacity(k);
         for _ in 0..k {
-            let total: f64 = avail.iter().map(|&i| weights[i]).sum();
-            let mut t = rng.next_f64() * total;
-            let mut pick = avail.len() - 1;
-            for (pos, &i) in avail.iter().enumerate() {
-                t -= weights[i];
-                if t <= 0.0 {
-                    pick = pos;
-                    break;
+            let total = obs_total + unseen as f64 * default_w;
+            let t = rng.next_f64() * total;
+            if (t < obs_total || unseen == 0) && !obs.is_empty() {
+                // Subtraction scan over the observed list in ascending
+                // id order (floating-point slack lands on the last
+                // observed entry).
+                let mut acc = t.min(obs_total);
+                let mut pos = obs.len() - 1;
+                for (p, &(_, w)) in obs.iter().enumerate() {
+                    acc -= w;
+                    if acc <= 0.0 {
+                        pos = p;
+                        break;
+                    }
                 }
+                let (id, w) = obs.remove(pos);
+                obs_total -= w;
+                chosen.push(id);
+            } else {
+                // The draw landed in the unobserved mass: map its rank
+                // to the rank-th id not in `excluded`.
+                let rank = (((t - obs_total) / default_w) as usize).min(unseen - 1);
+                let mut id = rank;
+                for &e in &excluded {
+                    if e <= id {
+                        id += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let ins = excluded.partition_point(|&e| e < id);
+                excluded.insert(ins, id);
+                unseen -= 1;
+                chosen.push(id);
             }
-            chosen.push(avail.swap_remove(pick));
         }
         Selection::Devices(chosen)
     }
@@ -434,11 +551,11 @@ impl std::fmt::Display for SelectionSpec {
 mod tests {
     use super::*;
 
-    fn view(round: usize, m: usize, devices: &[DeviceView]) -> SelectionView<'_> {
+    fn view(round: usize, m: usize, stats: &DeviceStats) -> SelectionView<'_> {
         SelectionView {
             round,
             num_devices: m,
-            devices,
+            stats,
             init_loss: 1.0,
             prev_loss: 1.0,
             loss_history: &[],
@@ -447,19 +564,19 @@ mod tests {
 
     #[test]
     fn full_selects_all() {
-        let devs = vec![DeviceView::default(); 4];
+        let stats = DeviceStats::new();
         let mut s = FullParticipation;
-        assert_eq!(s.select(&view(0, 4, &devs)), Selection::All);
+        assert_eq!(s.select(&view(0, 4, &stats)), Selection::All);
     }
 
     #[test]
     fn random_k_bounds_and_determinism() {
-        let devs = vec![DeviceView::default(); 10];
+        let stats = DeviceStats::new();
         let mut a = RandomK::new(3, 7);
         let mut b = RandomK::new(3, 7);
         for r in 0..20 {
-            let sa = a.select(&view(r, 10, &devs));
-            let sb = b.select(&view(r, 10, &devs));
+            let sa = a.select(&view(r, 10, &stats));
+            let sb = b.select(&view(r, 10, &stats));
             assert_eq!(sa, sb, "round {r}");
             let Selection::Devices(ids) = sa else {
                 panic!("random-k must return an explicit cohort");
@@ -471,11 +588,11 @@ mod tests {
 
     #[test]
     fn round_robin_covers_everyone() {
-        let devs = vec![DeviceView::default(); 7];
+        let stats = DeviceStats::new();
         let mut s = RoundRobin::new(2);
         let mut hit = vec![false; 7];
         for r in 0..7 {
-            let Selection::Devices(ids) = s.select(&view(r, 7, &devs)) else {
+            let Selection::Devices(ids) = s.select(&view(r, 7, &stats)) else {
                 panic!("round-robin returns cohorts");
             };
             assert_eq!(ids.len(), 2);
@@ -495,10 +612,11 @@ mod tests {
                 d.last_loss = Some(0.01);
             }
         }
+        let stats = DeviceStats::from_dense(&devs);
         let mut s = LossWeighted::new(1, 3);
         let mut count2 = 0;
         for r in 0..200 {
-            let Selection::Devices(ids) = s.select(&view(r, 4, &devs)) else {
+            let Selection::Devices(ids) = s.select(&view(r, 4, &stats)) else {
                 panic!()
             };
             assert_eq!(ids.len(), 1);
@@ -510,6 +628,76 @@ mod tests {
     }
 
     #[test]
+    fn loss_weighted_cohort_distinct_in_range() {
+        // Mixed observed/unseen pool: cohorts must stay distinct and
+        // in range whichever branch each pick lands in.
+        let mut stats = DeviceStats::new();
+        for (id, loss) in [(1usize, 5.0f64), (4, 0.5), (7, 2.0)] {
+            stats.entry(id).last_loss = Some(loss);
+        }
+        let mut s = LossWeighted::new(6, 11);
+        for r in 0..50 {
+            let Selection::Devices(ids) = s.select(&view(r, 9, &stats)) else {
+                panic!()
+            };
+            assert_eq!(ids.len(), 6, "round {r}");
+            assert!(ids.iter().all(|&i| i < 9), "round {r}: {ids:?}");
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 6, "round {r}: duplicate in {ids:?}");
+        }
+        // All-observed pool: closed-form unseen mass is empty.
+        let mut s = LossWeighted::new(3, 11);
+        let all = DeviceStats::from_dense(&[
+            DeviceView {
+                last_loss: Some(1.0),
+                ..DeviceView::default()
+            },
+            DeviceView {
+                last_loss: Some(2.0),
+                ..DeviceView::default()
+            },
+            DeviceView {
+                last_loss: Some(3.0),
+                ..DeviceView::default()
+            },
+        ]);
+        for r in 0..20 {
+            let Selection::Devices(mut ids) = s.select(&view(r, 3, &all)) else {
+                panic!()
+            };
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 1, 2], "round {r}");
+        }
+    }
+
+    #[test]
+    fn device_stats_default_for_unseen() {
+        let mut stats = DeviceStats::new();
+        stats.entry(3).uploads = 7;
+        // Unseen device reads as the documented default.
+        let d = stats.get(999);
+        assert_eq!(d.uploads, 0);
+        assert_eq!(d.skips, 0);
+        assert!(d.last_loss.is_none());
+        assert_eq!(stats.get(3).uploads, 7);
+        assert_eq!(stats.observed_len(), 1);
+        // Dense reconstruction round-trips.
+        let dense = vec![
+            DeviceView {
+                uploads: 1,
+                skips: 2,
+                last_loss: Some(0.5),
+            },
+            DeviceView::default(),
+        ];
+        let s = DeviceStats::from_dense(&dense);
+        assert_eq!(s.get(0).uploads, 1);
+        assert_eq!(s.get(1).uploads, 0);
+    }
+
+    #[test]
     fn availability_respects_schedule() {
         let sched = AvailabilitySchedule {
             period: 4,
@@ -517,9 +705,9 @@ mod tests {
             phases: vec![0, 1, 2, 3],
         };
         let mut s = AvailabilityAware::new(sched.clone(), None, 5);
-        let devs = vec![DeviceView::default(); 4];
+        let stats = DeviceStats::new();
         for r in 0..8 {
-            let Selection::Devices(ids) = s.select(&view(r, 4, &devs)) else {
+            let Selection::Devices(ids) = s.select(&view(r, 4, &stats)) else {
                 panic!()
             };
             for i in 0..4 {
@@ -532,9 +720,9 @@ mod tests {
     fn availability_cap_limits_cohort() {
         let sched = AvailabilitySchedule::periodic(2, 2, 8, 1); // always up
         let mut s = AvailabilityAware::new(sched, Some(3), 5);
-        let devs = vec![DeviceView::default(); 8];
+        let stats = DeviceStats::new();
         for r in 0..10 {
-            let Selection::Devices(ids) = s.select(&view(r, 8, &devs)) else {
+            let Selection::Devices(ids) = s.select(&view(r, 8, &stats)) else {
                 panic!()
             };
             assert_eq!(ids.len(), 3);

@@ -202,6 +202,67 @@ where
     });
 }
 
+/// Run `f(worker_state, id, &mut item)` for every `(id, item)` pair,
+/// splitting the pair slice into at most `workers.len()` contiguous
+/// chunks — one worker state per chunk.
+///
+/// This is [`parallel_for_cohort`] for a cohort that has been
+/// *materialized out* of its population: the lazy engine owns only the
+/// selected `(device_id, DeviceSlot)` pairs, not a dense `items`
+/// slice, so the chunking is over the pair vector itself. Ids must be
+/// strictly increasing (the engine's sorted-cohort invariant), which
+/// makes the chunk partition — and therefore the visit order within
+/// each worker — a pure function of the cohort, not of thread timing.
+///
+/// Determinism: each pair is visited by exactly one worker and chunk
+/// boundaries never change per-item inputs; as long as `f`'s per-item
+/// work depends only on `(id, item, state-after-reset)` (true for the
+/// device phase), results are bit-identical for every worker count.
+///
+/// # Panics
+///
+/// Panics if ids are not strictly increasing, or `workers` is empty
+/// while `pairs` is not.
+pub fn parallel_for_pairs<T, W, F>(pairs: &mut [(usize, T)], workers: &mut [W], f: F)
+where
+    T: Send,
+    W: Send,
+    F: Fn(&mut W, usize, &mut T) + Sync,
+{
+    let k = pairs.len();
+    if k == 0 {
+        return;
+    }
+    assert!(
+        pairs.windows(2).all(|w| w[0].0 < w[1].0),
+        "pair ids must be strictly increasing"
+    );
+    assert!(!workers.is_empty(), "need at least one worker state");
+    let threads = workers.len().min(k);
+    if threads <= 1 {
+        let w = &mut workers[0];
+        for (id, item) in pairs.iter_mut() {
+            f(w, *id, item);
+        }
+        return;
+    }
+    let chunk = k.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut free = &mut workers[..];
+        for part in pairs.chunks_mut(chunk) {
+            let (w, wrest) = std::mem::take(&mut free).split_at_mut(1);
+            free = wrest;
+            let w = &mut w[0];
+            let f = &f;
+            scope.spawn(move || {
+                for (id, item) in part.iter_mut() {
+                    f(w, *id, item);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,6 +403,43 @@ mod tests {
         let mut xs = vec![0u8; 4];
         let mut workers = vec![(); 2];
         parallel_for_cohort(&mut xs, &[2, 1], &mut workers, |_, _, _| {});
+    }
+
+    #[test]
+    fn pairs_visit_each_exactly_once_and_thread_invariant() {
+        let ids = [1usize, 4, 5, 9, 17, 30, 31];
+        let run = |nworkers: usize| {
+            let mut pairs: Vec<(usize, u64)> = ids.iter().map(|&i| (i, 0)).collect();
+            let mut workers = vec![0usize; nworkers];
+            parallel_for_pairs(&mut pairs, &mut workers, |w, id, x| {
+                *w += 1;
+                *x = (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            });
+            let visits: usize = workers.iter().sum();
+            assert_eq!(visits, ids.len(), "workers={nworkers}");
+            pairs
+        };
+        let serial = run(1);
+        for n in [2usize, 3, 7, 16] {
+            assert_eq!(run(n), serial, "workers={n}");
+        }
+    }
+
+    #[test]
+    fn pairs_empty_is_noop() {
+        let mut pairs: Vec<(usize, u8)> = Vec::new();
+        let mut workers = vec![(); 2];
+        parallel_for_pairs(&mut pairs, &mut workers, |_, _, _| {
+            panic!("no work expected")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn pairs_reject_unsorted() {
+        let mut pairs = vec![(2usize, 0u8), (1, 0)];
+        let mut workers = vec![(); 2];
+        parallel_for_pairs(&mut pairs, &mut workers, |_, _, _| {});
     }
 
     #[test]

@@ -164,6 +164,28 @@ impl Xoshiro256pp {
         idx
     }
 
+    /// Sample `k` distinct indices from `[0, n)` in **O(k)** memory and
+    /// expected O(k log k) time (Floyd's algorithm), returned sorted
+    /// ascending.
+    ///
+    /// The million-device selection path uses this instead of
+    /// [`Xoshiro256pp::sample_indices`], whose partial Fisher–Yates
+    /// allocates the whole `(0..n)` index vector — O(population) per
+    /// round. The two algorithms consume different draw sequences, so
+    /// they are *not* interchangeable mid-run; a strategy picks one and
+    /// keeps it at every population size.
+    pub fn sample_floyd(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.next_bounded(j as u64 + 1) as usize;
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+
     /// Bernoulli trial.
     #[inline]
     pub fn bernoulli(&mut self, p: f64) -> bool {
@@ -283,5 +305,50 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 20);
         assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn sample_floyd_distinct_sorted_deterministic() {
+        let mut r = Xoshiro256pp::seed_from_u64(9);
+        let idx = r.sample_floyd(50, 20);
+        assert_eq!(idx.len(), 20);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+        assert!(idx.iter().all(|&i| i < 50));
+        // Same seed, same cohort — the draw sequence is a pure function
+        // of (state, n, k).
+        let mut r2 = Xoshiro256pp::seed_from_u64(9);
+        assert_eq!(r2.sample_floyd(50, 20), idx);
+        // Edge cases: full range and empty sample.
+        let mut r3 = Xoshiro256pp::seed_from_u64(1);
+        assert_eq!(r3.sample_floyd(5, 5), vec![0, 1, 2, 3, 4]);
+        assert!(r3.sample_floyd(5, 0).is_empty());
+        // k = n at scale would overflow a Fisher–Yates clone; Floyd
+        // touches only the chosen set.
+        let mut r4 = Xoshiro256pp::seed_from_u64(2);
+        let big = r4.sample_floyd(1_000_000, 100);
+        assert_eq!(big.len(), 100);
+        assert!(big.iter().all(|&i| i < 1_000_000));
+    }
+
+    #[test]
+    fn sample_floyd_is_roughly_uniform() {
+        // Each index of [0, n) should appear in ~k/n of the samples.
+        let n = 40;
+        let k = 10;
+        let trials = 4_000;
+        let mut counts = vec![0u32; n];
+        let mut r = Xoshiro256pp::seed_from_u64(77);
+        for _ in 0..trials {
+            for i in r.sample_floyd(n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64; // 1000
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.8 && (c as f64) < expect * 1.2,
+                "index {i} hit {c} times, expected ≈{expect}"
+            );
+        }
     }
 }

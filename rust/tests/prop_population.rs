@@ -1,0 +1,535 @@
+//! Population-virtualization equivalence properties (DESIGN.md
+//! §Population): the lazy, spec-backed device store must be
+//! *bit-identical* to the eager pre-virtualization path — across every
+//! selection strategy, thread count, capacity-mask shape, cache bound
+//! (including caches tiny enough to force mid-run eviction and
+//! rematerialization), and checkpoint interruption — while keeping
+//! resident slot counts bounded by the cache at million-device
+//! populations.
+
+use aquila::algorithms::{aquila::Aquila, qsgd::QsgdAlgo, Algorithm};
+use aquila::coordinator::checkpoint::{self, Checkpoint};
+use aquila::coordinator::{RunConfig, Session, SlotPolicy};
+use aquila::hetero::half_half_masks;
+use aquila::metrics::RoundRecord;
+use aquila::problems::quadratic::{QuadraticProblem, StreamedQuadratic};
+use aquila::problems::GradientSource;
+use aquila::selection::{
+    DeviceStats, DeviceView, LossWeighted, RandomK, Selection, SelectionSpec, SelectionStrategy,
+    SelectionView,
+};
+use std::sync::Arc;
+
+fn cfg(seed: u64, rounds: usize, threads: usize, slots: SlotPolicy) -> RunConfig {
+    RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        rounds,
+        eval_every: 4,
+        seed,
+        threads,
+        slots,
+        ..RunConfig::default()
+    }
+}
+
+fn build(
+    p: &Arc<dyn GradientSource>,
+    algo: Arc<dyn Algorithm>,
+    spec: &SelectionSpec,
+    hetero: bool,
+    cfg: RunConfig,
+) -> Session {
+    let mut b = Session::builder(p.clone(), algo)
+        .config(cfg)
+        .selection_spec(spec.clone());
+    if hetero {
+        b = b.masks(half_half_masks(&p.layout(), p.num_devices(), 0.5));
+    }
+    b.build()
+}
+
+fn theta_bits(s: &Session) -> Vec<u32> {
+    s.theta().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Field-by-field bitwise comparison of round records (`RoundRecord`
+/// deliberately has no `PartialEq` — float fields must be compared as
+/// bits, not approximately).
+fn assert_rounds_identical(a: &[RoundRecord], b: &[RoundRecord], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let k = x.round;
+        assert_eq!(x.round, y.round, "{tag} round {k}: index");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{tag} round {k}: train_loss"
+        );
+        assert_eq!(x.bits_up, y.bits_up, "{tag} round {k}: bits_up");
+        assert_eq!(x.cum_bits, y.cum_bits, "{tag} round {k}: cum_bits");
+        assert_eq!(x.uploads, y.uploads, "{tag} round {k}: uploads");
+        assert_eq!(x.skips, y.skips, "{tag} round {k}: skips");
+        assert_eq!(
+            x.mean_level.to_bits(),
+            y.mean_level.to_bits(),
+            "{tag} round {k}: mean_level"
+        );
+        assert_eq!(
+            x.eval_loss.map(f64::to_bits),
+            y.eval_loss.map(f64::to_bits),
+            "{tag} round {k}: eval_loss"
+        );
+        assert_eq!(x.bits_down, y.bits_down, "{tag} round {k}: bits_down");
+        assert_eq!(x.stragglers, y.stragglers, "{tag} round {k}: stragglers");
+    }
+}
+
+fn strategy_specs() -> Vec<SelectionSpec> {
+    vec![
+        SelectionSpec::Full,
+        SelectionSpec::RandomK(3),
+        SelectionSpec::RoundRobin(2),
+        SelectionSpec::LossWeighted(3),
+        SelectionSpec::Availability {
+            period: 4,
+            duty: 3,
+            cap: Some(3),
+        },
+    ]
+}
+
+/// The tentpole invariant: a lazily-materialized run is bit-identical
+/// to the eager path — for every shipped selection strategy, across
+/// thread counts 1/2/7, uniform and half-half capacity masks, and
+/// unbounded / roomy / tight slot caches.
+#[test]
+fn prop_lazy_matches_eager_across_strategies_threads_masks() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 41));
+    for spec in strategy_specs() {
+        for hetero in [false, true] {
+            let mut base = build(
+                &p,
+                Arc::new(Aquila::new(0.25)),
+                &spec,
+                hetero,
+                cfg(43, 12, 1, SlotPolicy::Eager),
+            );
+            let base_trace = base.run();
+            let base_theta = theta_bits(&base);
+            let base_stats = base.device_stats();
+            for threads in [1usize, 2, 7] {
+                for cache in [0usize, 5, 2] {
+                    let tag = format!("{spec} hetero={hetero} t={threads} cache={cache}");
+                    let mut s = build(
+                        &p,
+                        Arc::new(Aquila::new(0.25)),
+                        &spec,
+                        hetero,
+                        cfg(43, 12, threads, SlotPolicy::Lazy { cache }),
+                    );
+                    let t = s.run();
+                    assert_rounds_identical(&base_trace.rounds, &t.rounds, &tag);
+                    assert_eq!(base_theta, theta_bits(&s), "{tag}: θ diverged bitwise");
+                    assert_eq!(base_stats, s.device_stats(), "{tag}: device stats diverged");
+                }
+            }
+        }
+    }
+}
+
+/// A cache far smaller than the population forces every round to evict
+/// and rematerialize slots mid-run; the rebuilt slots must resume the
+/// parked algorithm state (`q_prev`, error norms, QSGD RNG stream) so
+/// traces and the model stay byte-identical to the unbounded cache —
+/// no stale state leaks, no RNG desync. QSGD pins the stochastic
+/// quantizer's RNG lockstep; AQUILA pins the lazy-family `dq`/loss
+/// carry-over.
+#[test]
+fn prop_tiny_cache_eviction_rematerializes_identically() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(20, 4, 0.5, 2.0, 0.5, 47));
+    let algos: Vec<Arc<dyn Algorithm>> =
+        vec![Arc::new(QsgdAlgo::new(6)), Arc::new(Aquila::new(0.25))];
+    for algo in &algos {
+        let name = algo.name();
+        let mut unbounded = build(
+            &p,
+            algo.clone(),
+            &SelectionSpec::Full,
+            false,
+            cfg(49, 10, 2, SlotPolicy::Lazy { cache: 0 }),
+        );
+        let t_unbounded = unbounded.run();
+        for cache in [1usize, 2] {
+            let tag = format!("{name} cache={cache}");
+            let mut s = build(
+                &p,
+                algo.clone(),
+                &SelectionSpec::Full,
+                false,
+                cfg(49, 10, 2, SlotPolicy::Lazy { cache }),
+            );
+            let t = s.run();
+            assert_rounds_identical(&t_unbounded.rounds, &t.rounds, &tag);
+            assert_eq!(
+                theta_bits(&unbounded),
+                theta_bits(&s),
+                "{tag}: θ diverged bitwise"
+            );
+            assert_eq!(unbounded.device_stats(), s.device_stats(), "{tag}: stats");
+            // The bound held: after a round the live cache is trimmed
+            // to capacity, and mid-round residency never exceeded
+            // cache + cohort.
+            assert!(s.resident_slots() <= cache, "{tag}: {} live", s.resident_slots());
+            assert!(
+                s.peak_resident_slots() <= cache + p.num_devices(),
+                "{tag}: peak {}",
+                s.peak_resident_slots()
+            );
+        }
+    }
+}
+
+/// Random cohorts revisit evicted devices across a longer horizon:
+/// every revisit must rebuild exactly the state the device was parked
+/// with (the LRU churn path, as opposed to the every-round eviction
+/// above).
+#[test]
+fn prop_random_revisit_after_eviction_is_exact() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(16, 6, 0.5, 2.0, 0.5, 51));
+    let algo: Arc<dyn Algorithm> = Arc::new(QsgdAlgo::new(6));
+    let spec = SelectionSpec::RandomK(2);
+    let mut unbounded = build(
+        &p,
+        algo.clone(),
+        &spec,
+        false,
+        cfg(53, 24, 3, SlotPolicy::Lazy { cache: 0 }),
+    );
+    let t_unbounded = unbounded.run();
+    let mut tight = build(
+        &p,
+        algo,
+        &spec,
+        false,
+        cfg(53, 24, 3, SlotPolicy::Lazy { cache: 2 }),
+    );
+    let t_tight = tight.run();
+    assert_rounds_identical(&t_unbounded.rounds, &t_tight.rounds, "qsgd revisit");
+    assert_eq!(theta_bits(&unbounded), theta_bits(&tight));
+    assert_eq!(unbounded.device_stats(), tight.device_stats());
+}
+
+/// Checkpoint v6 round-trip under virtualization: interrupting a lazy
+/// run mid-sequence, saving to disk, and restoring into a fresh
+/// session — lazy *or* eager — reproduces the uninterrupted trace
+/// bit-for-bit.
+#[test]
+fn prop_virtualized_checkpoint_resume_is_exact() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 55));
+    let algo: Arc<dyn Algorithm> = Arc::new(Aquila::new(0.25));
+    let spec = SelectionSpec::RandomK(3);
+    let lazy = SlotPolicy::Lazy { cache: 3 };
+
+    let mut full = build(&p, algo.clone(), &spec, false, cfg(57, 16, 2, lazy));
+    let mut full_rounds = Vec::new();
+    for k in 0..16 {
+        full_rounds.push(full.run_round(k));
+    }
+
+    let mut first = build(&p, algo.clone(), &spec, false, cfg(57, 16, 2, lazy));
+    for k in 0..8 {
+        first.run_round(k);
+    }
+    let ckpt = first.snapshot(8);
+    assert_eq!(ckpt.version, checkpoint::VERSION);
+    assert_eq!(ckpt.population, 8);
+    assert!(
+        ckpt.device_ids.windows(2).all(|w| w[0] < w[1]),
+        "tracked ids must be sorted: {:?}",
+        ckpt.device_ids
+    );
+
+    let dir = std::env::temp_dir().join("aquila_pop_ckpt");
+    let path = dir.join("t.ckpt");
+    ckpt.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(loaded.device_ids, ckpt.device_ids);
+
+    for policy in [lazy, SlotPolicy::Eager] {
+        let mut resumed = build(&p, algo.clone(), &spec, false, cfg(57, 16, 2, policy));
+        let next = resumed.restore(&loaded).unwrap();
+        assert_eq!(next, 8);
+        for k in 8..16 {
+            let rec = resumed.run_round(k);
+            let f = &full_rounds[k];
+            assert_eq!(
+                rec.train_loss.to_bits(),
+                f.train_loss.to_bits(),
+                "{policy:?} round {k}: loss diverged after resume"
+            );
+            assert_eq!(rec.bits_up, f.bits_up, "{policy:?} round {k}: bits");
+            assert_eq!(rec.uploads, f.uploads, "{policy:?} round {k}: cohort");
+            assert_eq!(rec.skips, f.skips, "{policy:?} round {k}: skips");
+        }
+        assert_eq!(theta_bits(&resumed), theta_bits(&full), "{policy:?}: θ diverged");
+    }
+}
+
+/// The dense→sparse migration direction: a checkpoint taken from an
+/// eager (all-devices-tracked) run restores into a lazy session and
+/// continues identically — old dense snapshots keep working after the
+/// population redesign.
+#[test]
+fn prop_eager_checkpoint_restores_into_lazy_session() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(20, 6, 0.5, 2.0, 0.5, 59));
+    let algo: Arc<dyn Algorithm> = Arc::new(QsgdAlgo::new(6));
+    let spec = SelectionSpec::RoundRobin(2);
+
+    let mut full = build(&p, algo.clone(), &spec, false, cfg(61, 14, 2, SlotPolicy::Eager));
+    let mut full_rounds = Vec::new();
+    for k in 0..14 {
+        full_rounds.push(full.run_round(k));
+    }
+
+    let mut first = build(&p, algo.clone(), &spec, false, cfg(61, 14, 2, SlotPolicy::Eager));
+    for k in 0..7 {
+        first.run_round(k);
+    }
+    let ckpt = first.snapshot(7);
+    // Eager tracks the whole population, like pre-v6 dense snapshots.
+    assert_eq!(ckpt.device_ids, (0..6).collect::<Vec<_>>());
+
+    let mut resumed = build(
+        &p,
+        algo,
+        &spec,
+        false,
+        cfg(61, 14, 2, SlotPolicy::Lazy { cache: 2 }),
+    );
+    assert_eq!(resumed.restore(&ckpt).unwrap(), 7);
+    for k in 7..14 {
+        let rec = resumed.run_round(k);
+        let f = &full_rounds[k];
+        assert_eq!(rec.train_loss.to_bits(), f.train_loss.to_bits(), "round {k}");
+        assert_eq!(rec.bits_up, f.bits_up, "round {k}");
+    }
+    assert_eq!(theta_bits(&resumed), theta_bits(&full));
+}
+
+/// Lazy checkpoints are sparse: only devices that ever materialized
+/// are tracked, the header still records the full population size, and
+/// the sparse snapshot resumes exactly.
+#[test]
+fn prop_lazy_checkpoint_tracks_only_touched_devices() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(16, 12, 0.5, 2.0, 0.5, 63));
+    let algo: Arc<dyn Algorithm> = Arc::new(Aquila::new(0.25));
+    let spec = SelectionSpec::RandomK(2);
+    let lazy = SlotPolicy::Lazy { cache: 2 };
+
+    let mut full = build(&p, algo.clone(), &spec, false, cfg(65, 8, 1, lazy));
+    let mut full_rounds = Vec::new();
+    for k in 0..8 {
+        full_rounds.push(full.run_round(k));
+    }
+
+    let mut first = build(&p, algo.clone(), &spec, false, cfg(65, 8, 1, lazy));
+    for k in 0..4 {
+        first.run_round(k);
+    }
+    let ckpt = first.snapshot(4);
+    assert_eq!(ckpt.population, 12);
+    // 4 rounds × K=2 touch at most 8 of the 12 devices.
+    assert!(
+        ckpt.device_ids.len() <= 8,
+        "tracked {} devices",
+        ckpt.device_ids.len()
+    );
+    assert!(ckpt.device_ids.iter().all(|&id| id < 12));
+
+    let mut resumed = build(&p, algo, &spec, false, cfg(65, 8, 1, lazy));
+    assert_eq!(resumed.restore(&ckpt).unwrap(), 4);
+    for k in 4..8 {
+        let rec = resumed.run_round(k);
+        let f = &full_rounds[k];
+        assert_eq!(rec.train_loss.to_bits(), f.train_loss.to_bits(), "round {k}");
+        assert_eq!(rec.bits_up, f.bits_up, "round {k}");
+    }
+    assert_eq!(theta_bits(&resumed), theta_bits(&full));
+}
+
+/// The dense `device_stats()` reconstruction of the sparse per-device
+/// map: untouched devices read as the documented default (zero
+/// uploads, zero skips) and the participation totals balance.
+#[test]
+fn prop_dense_stats_reconstruction_defaults_unseen() {
+    let p: Arc<dyn GradientSource> = Arc::new(QuadraticProblem::new(16, 10, 0.5, 2.0, 0.5, 67));
+    let mut s = build(
+        &p,
+        Arc::new(Aquila::new(0.25)),
+        &SelectionSpec::RandomK(3),
+        false,
+        cfg(69, 5, 2, SlotPolicy::Lazy { cache: 3 }),
+    );
+    let trace = s.run();
+    let dense = s.device_stats();
+    assert_eq!(dense.len(), 10, "dense reconstruction covers the population");
+    let participants: u64 = trace
+        .rounds
+        .iter()
+        .map(|r| (r.uploads + r.skips) as u64)
+        .sum();
+    assert_eq!(
+        dense.iter().map(|&(u, sk)| u + sk).sum::<u64>(),
+        participants,
+        "participation totals must balance"
+    );
+    // 5 rounds × K=3 touch at most 15 slots over 10 devices; at least
+    // 10 - 15 < 10 means some device may remain untouched — whichever
+    // are untouched must read exactly (0, 0).
+    for (id, &(u, sk)) in dense.iter().enumerate() {
+        assert!(u + sk <= 5, "device {id} participated {} times in 5 rounds", u + sk);
+    }
+}
+
+/// Strategies read identical statistics through the sparse map and its
+/// dense padding: cohorts match round for round on the overlap, and at
+/// a million-device population the O(K) samplers still produce
+/// exact-size, distinct, in-range cohorts.
+#[test]
+fn prop_selection_sparse_equals_dense_and_scales_to_millions() {
+    let observed = [(3usize, 2.5f64, 4u64), (17, 0.7, 2), (40, 9.0, 1)];
+    let mut sparse = DeviceStats::new();
+    let mut dense = vec![DeviceView::default(); 64];
+    for &(id, loss, ups) in &observed {
+        let v = DeviceView {
+            uploads: ups,
+            skips: 1,
+            last_loss: Some(loss),
+        };
+        sparse.insert(id, v.clone());
+        dense[id] = v;
+    }
+    let dense = DeviceStats::from_dense(&dense);
+    // Equality on the overlap, for the stats-driven strategy.
+    for k in [1usize, 5, 16] {
+        let mut a = LossWeighted::new(k, 7);
+        let mut b = LossWeighted::new(k, 7);
+        for round in 0..30 {
+            let sa = {
+                let v = SelectionView {
+                    round,
+                    num_devices: 64,
+                    stats: &sparse,
+                    init_loss: 1.0,
+                    prev_loss: 1.0,
+                    loss_history: &[],
+                };
+                a.select(&v)
+            };
+            let sb = {
+                let v = SelectionView {
+                    round,
+                    num_devices: 64,
+                    stats: &dense,
+                    init_loss: 1.0,
+                    prev_loss: 1.0,
+                    loss_history: &[],
+                };
+                b.select(&v)
+            };
+            assert_eq!(sa, sb, "k={k} round {round}: sparse vs dense cohorts");
+        }
+    }
+    // Million-device scaling: exact-size, distinct, in-range cohorts
+    // without touching O(population) state.
+    let m = 1_000_000usize;
+    let mut lw = LossWeighted::new(1000, 9);
+    let mut rk = RandomK::new(1000, 9);
+    for round in 0..3 {
+        let v = SelectionView {
+            round,
+            num_devices: m,
+            stats: &sparse,
+            init_loss: 1.0,
+            prev_loss: 1.0,
+            loss_history: &[],
+        };
+        for (name, sel) in [("loss-weighted", lw.select(&v)), ("random-k", rk.select(&v))] {
+            let Selection::Devices(mut ids) = sel else {
+                panic!("{name} must return an explicit cohort");
+            };
+            assert_eq!(ids.len(), 1000, "{name} round {round}");
+            assert!(ids.iter().all(|&i| i < m), "{name} round {round}: out of range");
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 1000, "{name} round {round}: duplicates");
+        }
+    }
+}
+
+/// The streamed (virtualizable) problem behaves like any other
+/// `GradientSource`: lazy and eager runs over it agree bitwise.
+#[test]
+fn prop_streamed_problem_lazy_matches_eager() {
+    let p: Arc<dyn GradientSource> = Arc::new(StreamedQuadratic::new(16, 40, 0.5, 2.0, 0.5, 71));
+    let algos: Vec<Arc<dyn Algorithm>> =
+        vec![Arc::new(QsgdAlgo::new(6)), Arc::new(Aquila::new(0.25))];
+    for algo in &algos {
+        let name = algo.name();
+        let spec = SelectionSpec::RandomK(8);
+        let mut eager = build(&p, algo.clone(), &spec, false, cfg(73, 10, 2, SlotPolicy::Eager));
+        let t_eager = eager.run();
+        let mut lazy = build(
+            &p,
+            algo.clone(),
+            &spec,
+            false,
+            cfg(73, 10, 7, SlotPolicy::Lazy { cache: 3 }),
+        );
+        let t_lazy = lazy.run();
+        assert_rounds_identical(&t_eager.rounds, &t_lazy.rounds, name);
+        assert_eq!(theta_bits(&eager), theta_bits(&lazy), "{name}: θ diverged");
+    }
+}
+
+/// A seeded million-device virtualized round sequence completes with
+/// resident slots bounded by the cache (+ in-flight cohort) — the
+/// memory contract behind `benches/population.rs`.
+#[test]
+fn prop_million_device_session_is_bounded() {
+    let m = 1_000_000usize;
+    let cache = 2048usize;
+    let p: Arc<dyn GradientSource> = Arc::new(StreamedQuadratic::new(64, m, 0.5, 2.0, 0.5, 75));
+    let run_cfg = RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        rounds: 1000,
+        eval_every: 0,
+        seed: 77,
+        threads: 4,
+        slots: SlotPolicy::Lazy { cache },
+        ..RunConfig::default()
+    };
+    let mut s = Session::builder(p, Arc::new(Aquila::new(0.25)))
+        .config(run_cfg)
+        .selection_spec(SelectionSpec::RandomK(1000))
+        .build();
+    for k in 0..3 {
+        let rec = s.run_round(k);
+        assert!(rec.uploads + rec.skips <= 1000, "round {k} cohort too big");
+        assert!(rec.train_loss.is_finite(), "round {k} loss not finite");
+        assert!(
+            s.resident_slots() <= cache,
+            "round {k}: {} live slots exceed the cache",
+            s.resident_slots()
+        );
+    }
+    assert!(
+        s.peak_resident_slots() <= cache + 1000,
+        "peak residency {} exceeds cache + cohort",
+        s.peak_resident_slots()
+    );
+    assert!(s.total_bits() > 0);
+}
