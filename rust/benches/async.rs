@@ -1,0 +1,143 @@
+//! Buffered-async vs synchronous aggregation (DESIGN.md §Async):
+//! wall-clock engine overhead per committed model version, plus the
+//! acceptance gate — on the heavy-tailed `edge-mix` preset the
+//! buffered engine must reach the sync run's target training loss in
+//! **≤ 0.8× the simulated seconds** (≥ 1.25× better simulated
+//! time-to-target-loss) **at comparable uploaded bits**. The sync
+//! barrier pays the slowest of K uploads every round; the buffered
+//! engine commits after the m fastest arrivals across overlapping
+//! cohorts, so the straggler tail stops pacing learning. Both gates
+//! run in the `AQUILA_BENCH_FAST=1` CI smoke, so a regression that
+//! slows the event engine's simulated clock fails CI outright. A
+//! polynomial-staleness configuration is reported alongside (target
+//! reached, clock ≤ sync) without the tight bits gate — staleness
+//! down-weighting trades some upload efficiency for robustness.
+
+use aquila::algorithms::qsgd::QsgdAlgo;
+use aquila::benchkit::{black_box, Bench};
+use aquila::coordinator::{AggregationMode, RunConfig, Session, StalenessPolicy};
+use aquila::problems::quadratic::QuadraticProblem;
+use aquila::transport::scenario::NetworkSpec;
+use std::sync::Arc;
+
+/// Model dimension of the quadratic problem.
+const DIM: usize = 48;
+/// Device count (full participation: the sync cohort is all of them).
+const DEVICES: usize = 10;
+/// Buffered commit size: arrivals folded per model version.
+const M: usize = 5;
+
+fn cfg(aggregation: AggregationMode, rounds: usize) -> RunConfig {
+    RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        rounds,
+        eval_every: 0,
+        seed: 11,
+        threads: 0,
+        network: NetworkSpec::parse("edge-mix:jitter=0.3").unwrap(),
+        aggregation,
+        ..RunConfig::default()
+    }
+}
+
+fn buffered(staleness: StalenessPolicy) -> AggregationMode {
+    AggregationMode::Buffered {
+        m: M,
+        staleness,
+        max_inflight: 3 * DEVICES,
+    }
+}
+
+fn session(aggregation: AggregationMode, rounds: usize) -> Session {
+    let problem = Arc::new(QuadraticProblem::new(DIM, DEVICES, 0.5, 2.0, 0.5, 0xA5));
+    Session::builder(problem, Arc::new(QsgdAlgo::new(6)))
+        .config(cfg(aggregation, rounds))
+        .build()
+}
+
+/// Simulated seconds and uploaded bits at the first record reaching
+/// `target` training loss.
+fn hit(trace: &aquila::metrics::RunTrace, target: f64) -> Option<(f64, u64)> {
+    trace
+        .rounds
+        .iter()
+        .find(|r| r.train_loss <= target)
+        .map(|r| (r.sim_time, r.cum_bits))
+}
+
+fn main() {
+    let mut bench = Bench::from_env_args();
+    let fast = std::env::var("AQUILA_BENCH_FAST").is_ok();
+
+    // ---- Wall-clock: event-loop overhead per commit ----------------
+    // Horizons far beyond the time budget so the final-round eval
+    // never lands in a timed sample.
+    let mut s_sync = session(AggregationMode::Sync, 1_000_000);
+    let mut k = 0usize;
+    bench.bench_throughput(
+        &format!("sync round edge-mix K={DEVICES}"),
+        (DEVICES * DIM) as u64,
+        || {
+            black_box(s_sync.run_round(k));
+            k += 1;
+        },
+    );
+    let mut s_buf = session(buffered(StalenessPolicy::Constant(1.0)), 1_000_000);
+    let mut k = 0usize;
+    bench.bench_throughput(
+        &format!("buffered commit edge-mix m={M} inflight={}", 3 * DEVICES),
+        (M * DIM) as u64,
+        || {
+            black_box(s_buf.run_round(k));
+            k += 1;
+        },
+    );
+
+    // ---- CI gate: simulated time-to-target-loss --------------------
+    let sync_rounds = if fast { 40 } else { 120 };
+    let t_sync = session(AggregationMode::Sync, sync_rounds).run();
+    // Target: the loss the sync run reaches at 3/4 of its horizon —
+    // deep enough to be meaningful, shallow enough that the buffered
+    // runs reach it well inside their commit budget.
+    let target = t_sync.rounds[sync_rounds * 3 / 4].train_loss;
+    let (sync_time, sync_bits) = hit(&t_sync, target).expect("sync run contains its own target");
+    // Equal upload budget: m·commits = K·rounds, plus headroom so the
+    // gate measures the clock, not the horizon cutoff.
+    let commits = 2 * sync_rounds * DEVICES / M;
+
+    let t_buf = session(buffered(StalenessPolicy::Constant(1.0)), commits).run();
+    let (buf_time, buf_bits) =
+        hit(&t_buf, target).expect("buffered run never reached the sync target loss");
+    let time_ratio = buf_time / sync_time;
+    let bits_ratio = buf_bits as f64 / sync_bits as f64;
+    println!(
+        "time-to-loss {target:.6}: sync {sync_time:.3}s / buffered {buf_time:.3}s \
+         = {time_ratio:.3}x (gate: <= 0.8x), uploaded bits {bits_ratio:.3}x (gate: <= 1.25x)"
+    );
+    assert!(
+        time_ratio <= 0.8,
+        "buffered aggregation reached the target loss in {time_ratio:.2}x the sync \
+         simulated time (gate: <= 0.8x) — the event engine lost its straggler advantage"
+    );
+    assert!(
+        bits_ratio <= 1.25,
+        "buffered aggregation spent {bits_ratio:.2}x the sync uploaded bits to reach \
+         the target (gate: <= 1.25x) — the time win is not at comparable bits"
+    );
+
+    // ---- Reported (not bits-gated): polynomial staleness -----------
+    let t_poly = session(buffered(StalenessPolicy::Poly(0.5)), commits).run();
+    let (poly_time, poly_bits) =
+        hit(&t_poly, target).expect("poly-staleness run never reached the sync target loss");
+    println!(
+        "poly:0.5 staleness: {:.3}x sync time, {:.3}x sync bits",
+        poly_time / sync_time,
+        poly_bits as f64 / sync_bits as f64
+    );
+    assert!(
+        poly_time <= sync_time,
+        "poly-staleness buffered run was slower than the sync barrier on simulated time"
+    );
+    bench.finish();
+}

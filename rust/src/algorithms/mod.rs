@@ -382,6 +382,10 @@ pub struct ServerAgg {
     pub m: usize,
     /// Worker threads for the shard-parallel fold (1 = serial).
     threads: usize,
+    /// Positional per-upload weights staged for the next
+    /// [`ServerAgg::accumulate`] call (buffered-async staleness
+    /// weighting); consumed — and cleared — by that call.
+    upload_weights: Vec<f32>,
 }
 
 impl ServerAgg {
@@ -401,6 +405,7 @@ impl ServerAgg {
             masks,
             m,
             threads: 1,
+            upload_weights: Vec::new(),
         }
     }
 
@@ -415,6 +420,19 @@ impl ServerAgg {
         self.direction.fill(0.0);
     }
 
+    /// Stage positional per-upload weights for the *next*
+    /// [`ServerAgg::accumulate`] call: upload `i`'s effective scale
+    /// becomes `scale · weights[i]`. The buffered-async engine uses
+    /// this to apply staleness decay through every algorithm's
+    /// existing fold rule (each of which makes exactly one
+    /// `accumulate` call per fold) without the `Algorithm` trait
+    /// growing a weighted variant. The staged vector is consumed by
+    /// the next call — weighted or not, it never leaks into a later
+    /// fold.
+    pub fn stage_upload_weights(&mut self, weights: Vec<f32>) {
+        self.upload_weights = weights;
+    }
+
     /// The shared fold core every algorithm routes through (§Perf):
     /// `direction += scale · Σ decode(p)` computed zero-copy — each
     /// upload's packed wire body is dequantize–scatter-added into
@@ -427,14 +445,27 @@ impl ServerAgg {
     /// results are bit-identical for any thread count (property-tested
     /// in `rust/tests/prop_fold.rs`).
     pub fn accumulate(&mut self, uploads: &[UploadRef<'_>], scale: f32) {
+        // Staged weights apply to exactly this call, even if it folds
+        // nothing.
+        let weights = std::mem::take(&mut self.upload_weights);
         if uploads.is_empty() {
             return;
         }
+        assert!(
+            weights.is_empty() || weights.len() == uploads.len(),
+            "staged {} upload weights for {} uploads",
+            weights.len(),
+            uploads.len()
+        );
         // Parse headers and resolve masks once, not once per shard.
+        // With no weights staged each upload's scale is the caller's
+        // `scale` verbatim, so the unweighted path stays bit-identical
+        // to the pre-weighting fold.
         let dim = self.direction.len();
-        let staged: Vec<(PayloadView<'_>, &CapacityMask)> = uploads
+        let staged: Vec<(PayloadView<'_>, &CapacityMask, f32)> = uploads
             .iter()
-            .map(|up| {
+            .enumerate()
+            .map(|(i, up)| {
                 let view = up.view();
                 let mask = self.masks.get(up.device).as_ref();
                 assert_eq!(
@@ -453,7 +484,8 @@ impl ServerAgg {
                     "device {} mask dim {} != direction dim {dim}",
                     up.device, mask.full_dim
                 );
-                (view, mask)
+                let w = weights.get(i).map_or(scale, |w| scale * w);
+                (view, mask, w)
             })
             .collect();
         parallel_for_shards(
@@ -461,8 +493,8 @@ impl ServerAgg {
             self.threads,
             FOLD_SHARD_MIN,
             |base, shard| {
-                for (view, mask) in &staged {
-                    view.scatter_add_shard(mask, scale, base, shard);
+                for (view, mask, w) in &staged {
+                    view.scatter_add_shard(mask, *w, base, shard);
                 }
             },
         );

@@ -11,7 +11,7 @@
 //! * β per dataset as selected in Section V-D: 0.1 (CF-10), 0.25
 //!   (CF-100), 1.25 (WT-2).
 
-use crate::coordinator::{RunConfig, SlotPolicy};
+use crate::coordinator::{AggregationMode, RunConfig, SlotPolicy, StalenessPolicy};
 use crate::data::partition::{iid_partition, label_limited_partition};
 use crate::data::synth::{gaussian_mixture, MixtureSpec};
 use crate::data::text::{markov_corpus, shard_corpus, CorpusSpec};
@@ -169,6 +169,11 @@ pub struct ExperimentSpec {
     /// `population`; unset, virtualized runs default to a cache of
     /// 8192 and dataset runs stay eager.
     pub slot_cache: Option<usize>,
+    /// Aggregation mode (`aggregation = "buffered:m=32,..."` or a
+    /// `[aggregation]` table in TOML, `--aggregation` on the CLI):
+    /// the default synchronous barrier or the buffered-async event
+    /// engine (DESIGN.md §Async).
+    pub aggregation: AggregationMode,
 }
 
 /// Model dimension of the [`StreamedQuadratic`] problem virtualized
@@ -214,6 +219,7 @@ impl ExperimentSpec {
             chaos: ChaosSpec::default(),
             population: None,
             slot_cache: None,
+            aggregation: AggregationMode::Sync,
         }
     }
 
@@ -263,6 +269,7 @@ impl ExperimentSpec {
             network: self.network.clone(),
             quant_sections: self.quant_sections,
             slots: self.slot_policy(),
+            aggregation: self.aggregation.clone(),
             ..RunConfig::default()
         }
     }
@@ -472,6 +479,61 @@ impl ExperimentSpec {
             anyhow::ensure!(v >= 0, "slot_cache must be >= 0, got {v}");
             self.slot_cache = Some(v as usize);
         }
+        // Aggregation mode: a compact spec string (`aggregation =
+        // "buffered:m=32,staleness=poly:0.5"`) or an `[aggregation]`
+        // table. Like `network`, a bad spec is a hard error — silently
+        // running the sync barrier would mislabel the trace's
+        // time-to-accuracy axis.
+        if let Some(v) = get("aggregation").and_then(|v| v.as_str()) {
+            self.aggregation = AggregationMode::parse(v).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown aggregation spec '{v}' (try: {})",
+                    AggregationMode::SYNTAX
+                )
+            })?;
+        }
+        let agg_mode = map.get("aggregation.mode").and_then(|v| v.as_str());
+        let agg_m = map.get("aggregation.m").and_then(|v| v.as_i64());
+        let agg_staleness = map.get("aggregation.staleness").and_then(|v| v.as_str());
+        let agg_inflight = map.get("aggregation.inflight").and_then(|v| v.as_i64());
+        if agg_mode.is_some()
+            || agg_m.is_some()
+            || agg_staleness.is_some()
+            || agg_inflight.is_some()
+        {
+            match agg_mode.unwrap_or("buffered") {
+                "sync" => self.aggregation = AggregationMode::Sync,
+                "buffered" => {
+                    let m = agg_m
+                        .ok_or_else(|| anyhow::anyhow!("[aggregation] buffered mode requires m"))?;
+                    anyhow::ensure!(m >= 1, "aggregation.m must be >= 1, got {m}");
+                    let staleness = match agg_staleness {
+                        Some(s) => StalenessPolicy::parse(s).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown aggregation.staleness spec '{s}' (try: {})",
+                                StalenessPolicy::SYNTAX
+                            )
+                        })?,
+                        None => StalenessPolicy::Constant(1.0),
+                    };
+                    let max_inflight = match agg_inflight {
+                        Some(v) => {
+                            anyhow::ensure!(v >= 1, "aggregation.inflight must be >= 1, got {v}");
+                            v as usize
+                        }
+                        None => 2 * m as usize,
+                    };
+                    self.aggregation = AggregationMode::Buffered {
+                        m: m as usize,
+                        staleness,
+                        max_inflight,
+                    };
+                }
+                other => anyhow::bail!(
+                    "unknown aggregation.mode '{other}' (expected sync or buffered)"
+                ),
+            }
+        }
         Ok(())
     }
 
@@ -499,6 +561,36 @@ pub fn table2_rows() -> Vec<ExperimentSpec> {
         ExperimentSpec::new(DatasetKind::Wt2, SplitKind::Iid, false),
     ]
 }
+
+/// The canonical `repro run` flag surface: every CLI flag the `run`
+/// command parses, the TOML key or table with the same effect (`None`
+/// for CLI-only flags), and a one-line help string. `repro list`
+/// prints its `run` rows from this table, and unit tests diff it
+/// against the flags `main.rs` actually parses, the keys
+/// [`ExperimentSpec::apply_toml`] actually consumes, and the flags
+/// README.md documents — so the surfaces cannot drift apart silently
+/// (a new flag without a row here fails CI).
+pub const RUN_FLAG_SURFACE: &[(&str, Option<&str>, &str)] = &[
+    ("config", None, "experiment TOML file (required)"),
+    ("algo", None, "algorithm name (see the list above)"),
+    ("select", Some("selection"), "device-selection spec"),
+    ("network", Some("network"), "simulated network spec"),
+    ("quant-sections", Some("quant_sections"), "quantization sectioning spec"),
+    ("aggregation", Some("aggregation"), "sync barrier | buffered-async engine"),
+    ("dadaquant-b0", Some("dadaquant_b0"), "DAdaQuant schedule b0 (1..=32)"),
+    ("dadaquant-patience", Some("dadaquant_patience"), "DAdaQuant schedule patience"),
+    ("dadaquant-cap", Some("dadaquant_cap"), "DAdaQuant level cap (1..=32)"),
+    ("population", Some("population"), "virtualized N-device run (lazy slots)"),
+    ("slot-cache", Some("slot_cache"), "live-slot cache capacity (0 = unbounded)"),
+    ("out", None, "stream per-round CSV to FILE"),
+    ("jsonl", None, "stream JSON-lines to FILE"),
+    ("serve", Some("serve"), "serve the run over TCP (coordinator)"),
+    ("connect", None, "join a served run as a device client"),
+    ("chaos", Some("chaos"), "deterministic fault injection"),
+    ("checkpoint", None, "periodic checkpoint FILE"),
+    ("checkpoint-every", None, "checkpoint cadence in rounds"),
+    ("resume", None, "restart from a checkpoint FILE"),
+];
 
 /// The five rows of Table III (heterogeneous 100%–50%).
 pub fn table3_rows() -> Vec<ExperimentSpec> {
@@ -708,6 +800,59 @@ mod tests {
     }
 
     #[test]
+    fn flag_surface_toml_keys_are_consumed_by_apply_toml() {
+        // Forward drift gate: every TOML counterpart the canonical
+        // table advertises must actually be read by apply_toml —
+        // either directly (`get("key")`) or as a nested table
+        // (`"key.…"`).
+        let src = include_str!("config.rs");
+        for (flag, toml_key, _) in RUN_FLAG_SURFACE {
+            if let Some(key) = toml_key {
+                let direct = format!("get(\"{key}\")");
+                let table = format!("\"{key}.");
+                assert!(
+                    src.contains(&direct) || src.contains(&table),
+                    "--{flag}: advertised TOML key '{key}' is never consumed by apply_toml"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn apply_toml_keys_are_documented_in_flag_surface() {
+        // Reverse drift gate: every key apply_toml consumes must be
+        // either the TOML counterpart of a CLI flag (canonical table)
+        // or a known file-only experiment key. Adding a key to
+        // apply_toml without updating one of the two lists fails here.
+        let surfaced: std::collections::BTreeSet<&str> =
+            RUN_FLAG_SURFACE.iter().filter_map(|(_, k, _)| *k).collect();
+        let toml_only = [
+            "dataset", "split", "hetero", "devices", "rounds", "alpha", "beta", "seed",
+            "data_scale", "sample_k",
+        ];
+        let src = include_str!("config.rs");
+        let body = src
+            .split("fn apply_toml")
+            .nth(1)
+            .and_then(|rest| rest.split("fn from_file").next())
+            .expect("apply_toml body");
+        let mut checked = 0;
+        for part in body.split("get(\"").skip(1) {
+            let key = part.split('"').next().unwrap_or("");
+            let covered = surfaced.contains(key)
+                || toml_only.contains(&key)
+                || key.split('.').next().is_some_and(|table| surfaced.contains(table));
+            assert!(
+                covered,
+                "apply_toml consumes '{key}' but neither RUN_FLAG_SURFACE nor the \
+                 file-only key list documents it"
+            );
+            checked += 1;
+        }
+        assert!(checked > 20, "scrape found too few keys ({checked}) — pattern rot?");
+    }
+
+    #[test]
     fn row_labels() {
         let s = ExperimentSpec::new(DatasetKind::Wt2, SplitKind::IidLarge, false);
         assert_eq!(s.row_label(), "WT-2 IID-80");
@@ -734,6 +879,49 @@ mod tests {
         assert_eq!(p.num_devices(), 100_000);
         // A non-positive population is a hard error.
         let map = toml::parse("[experiment]\npopulation = 0\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+    }
+
+    #[test]
+    fn toml_aggregation_overrides() {
+        let mut spec = ExperimentSpec::new(DatasetKind::Cf10, SplitKind::Iid, false);
+        assert_eq!(spec.aggregation, AggregationMode::Sync);
+        // Compact spec string under [experiment].
+        let map =
+            toml::parse("[experiment]\naggregation = \"buffered:m=32,staleness=poly:0.5\"\n")
+                .unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(
+            spec.aggregation,
+            AggregationMode::Buffered {
+                m: 32,
+                staleness: StalenessPolicy::Poly(0.5),
+                max_inflight: 64,
+            }
+        );
+        // The spec flows into the run config.
+        assert_eq!(spec.run_config().aggregation, spec.aggregation);
+        // [aggregation] table spelling, with defaults filled in.
+        let map = toml::parse("[aggregation]\nm = 8\ninflight = 40\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(
+            spec.aggregation,
+            AggregationMode::Buffered {
+                m: 8,
+                staleness: StalenessPolicy::Constant(1.0),
+                max_inflight: 40,
+            }
+        );
+        // mode = "sync" switches back.
+        let map = toml::parse("[aggregation]\nmode = \"sync\"\n").unwrap();
+        spec.apply_toml(&map).unwrap();
+        assert_eq!(spec.aggregation, AggregationMode::Sync);
+        // Bad specs are hard errors, not silent sync runs.
+        let map = toml::parse("[experiment]\naggregation = \"buffered:m=0\"\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err());
+        let map = toml::parse("[aggregation]\nstaleness = \"poly:0.5\"\n").unwrap();
+        assert!(spec.apply_toml(&map).is_err(), "buffered table without m must error");
+        let map = toml::parse("[aggregation]\nmode = \"eventual\"\n").unwrap();
         assert!(spec.apply_toml(&map).is_err());
     }
 }

@@ -1,0 +1,230 @@
+//! Aggregation-mode spec: the synchronous round barrier vs the
+//! buffered-async (FedBuff-style) event engine.
+//!
+//! The sync engine closes a round only when every surviving upload of
+//! the cohort has arrived; the buffered engine folds each upload the
+//! moment it lands on the simulated clock, commits a model version
+//! after every `m` arrivals, scales stale contributions down by a
+//! [`StalenessPolicy`], and keeps up to `max_inflight` uploads in
+//! flight across overlapping cohorts. DESIGN.md §Async carries the
+//! determinism argument; `tests/prop_async.rs` pins the degenerate
+//! equivalence (`m = K`, `constant:1`, `inflight ≥ K` ⇒ bit-identical
+//! to sync).
+
+use std::fmt;
+
+/// Staleness weighting applied to a buffered fold: the upload's
+/// contribution is scaled by `weight(version_now − version_sent)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StalenessPolicy {
+    /// Constant weight `c` regardless of staleness (FedBuff's
+    /// unweighted buffer at `c = 1`).
+    Constant(f32),
+    /// Polynomial decay `(1 + s)^(−a)` on staleness `s` — fresh
+    /// uploads (`s = 0`) keep weight 1, stale ones decay smoothly.
+    Poly(f32),
+}
+
+impl StalenessPolicy {
+    /// Spec grammar accepted by [`StalenessPolicy::parse`].
+    pub const SYNTAX: &'static str = "constant[:C] | poly:A";
+
+    /// Parse a staleness spec: `constant` (weight 1), `constant:C`,
+    /// or `poly:A`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        match s.split_once(':') {
+            None if s.eq_ignore_ascii_case("constant") => Some(Self::Constant(1.0)),
+            Some((kind, arg)) => {
+                let v: f32 = arg.trim().parse().ok()?;
+                if !v.is_finite() || v < 0.0 {
+                    return None;
+                }
+                match kind.trim().to_ascii_lowercase().as_str() {
+                    "constant" => Some(Self::Constant(v)),
+                    "poly" => Some(Self::Poly(v)),
+                    _ => None,
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Fold weight for an upload that is `staleness` commits old.
+    pub fn weight(&self, staleness: usize) -> f32 {
+        match *self {
+            Self::Constant(c) => c,
+            Self::Poly(a) => (1.0 + staleness as f32).powf(-a),
+        }
+    }
+}
+
+impl fmt::Display for StalenessPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Constant(c) => write!(f, "constant:{c}"),
+            Self::Poly(a) => write!(f, "poly:{a}"),
+        }
+    }
+}
+
+/// How the engine folds a cohort's uploads into a model step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AggregationMode {
+    /// The classic barrier: wait for the whole cohort, fold once.
+    Sync,
+    /// Buffered-async: fold uploads as they arrive on the simulated
+    /// clock, commit a version every `m` arrivals, dispatch the next
+    /// cohort while stale uploads are still in flight.
+    Buffered {
+        /// Buffer size: arrivals per committed model version.
+        m: usize,
+        /// Staleness weighting applied to each buffered fold.
+        staleness: StalenessPolicy,
+        /// Upper bound on uploads concurrently in flight; dispatching
+        /// pauses at the bound and resumes as arrivals drain it.
+        max_inflight: usize,
+    },
+}
+
+impl AggregationMode {
+    /// Spec grammar accepted by [`AggregationMode::parse`] (the CLI
+    /// `--aggregation` flag and the TOML `aggregation` key).
+    pub const SYNTAX: &'static str =
+        "sync | buffered:m=M[,staleness=constant:C|poly:A][,inflight=N]";
+
+    /// Parse an aggregation spec. `staleness` defaults to
+    /// `constant:1`, `inflight` to `2·m`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("sync") {
+            return Some(Self::Sync);
+        }
+        let rest = s.strip_prefix("buffered")?;
+        let rest = if rest.is_empty() { "" } else { rest.strip_prefix(':')? };
+        let mut m = None;
+        let mut staleness = StalenessPolicy::Constant(1.0);
+        let mut inflight = None;
+        for part in rest.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part.split_once('=')?;
+            match k.trim().to_ascii_lowercase().as_str() {
+                "m" => m = Some(v.trim().parse::<usize>().ok().filter(|&m| m >= 1)?),
+                "staleness" => staleness = StalenessPolicy::parse(v)?,
+                "inflight" => {
+                    inflight = Some(v.trim().parse::<usize>().ok().filter(|&n| n >= 1)?)
+                }
+                _ => return None,
+            }
+        }
+        let m = m?;
+        Some(Self::Buffered {
+            m,
+            staleness,
+            max_inflight: inflight.unwrap_or(2 * m),
+        })
+    }
+
+    /// Whether this is the synchronous barrier mode.
+    pub fn is_sync(&self) -> bool {
+        matches!(self, Self::Sync)
+    }
+}
+
+impl Default for AggregationMode {
+    fn default() -> Self {
+        Self::Sync
+    }
+}
+
+impl fmt::Display for AggregationMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Sync => write!(f, "sync"),
+            Self::Buffered { m, staleness, max_inflight } => {
+                write!(f, "buffered:m={m},staleness={staleness},inflight={max_inflight}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sync() {
+        assert_eq!(AggregationMode::parse("sync"), Some(AggregationMode::Sync));
+        assert_eq!(AggregationMode::parse(" SYNC "), Some(AggregationMode::Sync));
+    }
+
+    #[test]
+    fn parse_buffered_full() {
+        assert_eq!(
+            AggregationMode::parse("buffered:m=32,staleness=poly:0.5,inflight=200"),
+            Some(AggregationMode::Buffered {
+                m: 32,
+                staleness: StalenessPolicy::Poly(0.5),
+                max_inflight: 200,
+            })
+        );
+    }
+
+    #[test]
+    fn parse_buffered_defaults() {
+        // staleness defaults to constant:1, inflight to 2·m.
+        assert_eq!(
+            AggregationMode::parse("buffered:m=8"),
+            Some(AggregationMode::Buffered {
+                m: 8,
+                staleness: StalenessPolicy::Constant(1.0),
+                max_inflight: 16,
+            })
+        );
+        assert_eq!(
+            AggregationMode::parse("buffered:m=4,staleness=constant:0.5"),
+            Some(AggregationMode::Buffered {
+                m: 4,
+                staleness: StalenessPolicy::Constant(0.5),
+                max_inflight: 8,
+            })
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        // m is required; unknown keys, kinds, and ranges are errors.
+        assert_eq!(AggregationMode::parse("buffered"), None);
+        assert_eq!(AggregationMode::parse("buffered:inflight=4"), None);
+        assert_eq!(AggregationMode::parse("buffered:m=0"), None);
+        assert_eq!(AggregationMode::parse("buffered:m=4,inflight=0"), None);
+        assert_eq!(AggregationMode::parse("buffered:m=4,stale=poly:1"), None);
+        assert_eq!(AggregationMode::parse("buffered:m=4,staleness=exp:1"), None);
+        assert_eq!(AggregationMode::parse("buffered:m=4,staleness=poly:-1"), None);
+        assert_eq!(AggregationMode::parse("banana"), None);
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for spec in [
+            "sync",
+            "buffered:m=32,staleness=poly:0.5,inflight=200",
+            "buffered:m=8,staleness=constant:1,inflight=16",
+        ] {
+            let mode = AggregationMode::parse(spec).unwrap();
+            assert_eq!(AggregationMode::parse(&mode.to_string()), Some(mode));
+        }
+    }
+
+    #[test]
+    fn staleness_weights() {
+        // Fresh uploads keep weight 1 under both policies.
+        assert_eq!(StalenessPolicy::Constant(1.0).weight(0), 1.0);
+        assert_eq!(StalenessPolicy::Poly(0.5).weight(0), 1.0);
+        // Constant ignores staleness; poly decays monotonically.
+        assert_eq!(StalenessPolicy::Constant(0.25).weight(7), 0.25);
+        let p = StalenessPolicy::Poly(0.5);
+        assert!(p.weight(1) < p.weight(0));
+        assert!(p.weight(10) < p.weight(1));
+        assert!((p.weight(3) - 0.5).abs() < 1e-6); // (1+3)^(−1/2) = 1/2
+    }
+}

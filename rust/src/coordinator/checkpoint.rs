@@ -28,8 +28,18 @@
 //! whose state the snapshot actually tracks (the ones a virtualized
 //! run ever materialized — see DESIGN.md §Population), so a 1M-device
 //! run checkpoints O(touched), not O(population). v1–v5 checkpoints
-//! (no `ids` key) still load, with every device tracked. Written
-//! atomically (temp file + rename).
+//! (no `ids` key) still load, with every device tracked. Version **7**
+//! adds an optional nested `async` header object plus a trailing
+//! binary section — the buffered-async event engine's state
+//! (DESIGN.md §Async): the simulated clock, in-flight upload events
+//! with their arrival times and wire bytes, the partial commit buffer,
+//! the dispatched-member pool, and the retained fold context — so a
+//! buffered run resumes mid-buffer byte-identically. Clock and
+//! arrival times live in the binary section as raw little-endian
+//! `f64`, never as JSON text, so the resume is bit-exact by
+//! construction. Sync runs and older checkpoints carry no `async`
+//! section and load with it absent. Written atomically (temp file +
+//! rename).
 
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
@@ -97,6 +107,69 @@ pub struct Checkpoint {
     /// Coordinator-service serve-state (v5+; `None` for in-process
     /// runs and older checkpoints).
     pub serve_state: Option<ServeState>,
+    /// Buffered-async event-engine state (v7+; `None` for sync runs
+    /// and older checkpoints).
+    pub async_state: Option<AsyncState>,
+}
+
+/// One in-flight or buffered upload as checkpoint v7 serializes it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncUpload {
+    /// Originating device id.
+    pub device: usize,
+    /// Model version (commit count) the upload was computed against.
+    pub version: usize,
+    /// Absolute simulated arrival time; 0 for already-delivered
+    /// uploads sitting in the commit buffer.
+    pub arrival: f64,
+    /// The validated wire bytes.
+    pub bytes: Vec<u8>,
+}
+
+/// One dispatched cohort member awaiting its commit (checkpoint v7).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncMember {
+    /// Device id.
+    pub device: usize,
+    /// Model version the member trained against.
+    pub version: usize,
+    /// Local loss the member reported (`NaN` = never reported).
+    pub loss: f64,
+    /// Quantization level the member staged, if it uploaded one.
+    pub level: Option<u8>,
+    /// Whether the member staged an upload at dispatch.
+    pub staged: bool,
+}
+
+/// Buffered-async engine state carried by v7 checkpoints: everything
+/// the event loop needs to resume mid-buffer bit-exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncState {
+    /// Next dispatch index (selection / fault / jitter stream key).
+    pub next_dispatch: usize,
+    /// Committed model versions so far.
+    pub commits: usize,
+    /// The simulated clock (≥ the cumulative `sim_time` mid-commit).
+    pub clock: f64,
+    /// Cohort size of the latest dispatch (admission estimate).
+    pub last_cohort: usize,
+    /// `RoundCtx::round` of the latest dispatch (all the context a
+    /// server fold may read, with `fold_marina_sync`).
+    pub fold_round: usize,
+    /// `RoundCtx::marina_sync` of the latest dispatch.
+    pub fold_marina_sync: bool,
+    /// Uplink bits accumulated since the last commit.
+    pub pending_bits_up: u64,
+    /// Downlink bits accumulated since the last commit.
+    pub pending_bits_down: u64,
+    /// Stragglers accumulated since the last commit.
+    pub pending_stragglers: u64,
+    /// In-flight uploads, in the engine's queue order.
+    pub events: Vec<AsyncUpload>,
+    /// Arrived uploads awaiting the next commit (`arrival` = 0).
+    pub buffer: Vec<AsyncUpload>,
+    /// Dispatched members awaiting the next commit.
+    pub pool: Vec<AsyncMember>,
 }
 
 /// Serve-state carried by checkpoints written from a
@@ -115,7 +188,7 @@ pub struct ServeState {
 }
 
 /// Current format version.
-pub const VERSION: u32 = 6;
+pub const VERSION: u32 = 7;
 
 /// Bytes of one serialized RNG record: 4×u64 state + present flag +
 /// gauss flag + gauss f64.
@@ -204,6 +277,60 @@ impl Checkpoint {
                 ]),
             ));
         }
+        // v7 buffered-async state: metadata in the header, clock /
+        // arrival times / wire bytes in a trailing binary section (raw
+        // little-endian, bit-exact). Only current-version snapshots
+        // carry it — a v1 re-save has no reader for the extra bytes.
+        let async_state = self.async_state.as_ref().filter(|_| with_rng);
+        if let Some(a) = async_state {
+            let upload_meta = |u: &AsyncUpload| {
+                Json::Arr(vec![
+                    Json::Num(u.device as f64),
+                    Json::Num(u.version as f64),
+                    Json::Num(u.bytes.len() as f64),
+                ])
+            };
+            fields.push((
+                "async",
+                obj(vec![
+                    ("next_dispatch", Json::Num(a.next_dispatch as f64)),
+                    ("commits", Json::Num(a.commits as f64)),
+                    ("last_cohort", Json::Num(a.last_cohort as f64)),
+                    ("fold_round", Json::Num(a.fold_round as f64)),
+                    (
+                        "fold_sync",
+                        Json::Num(if a.fold_marina_sync { 1.0 } else { 0.0 }),
+                    ),
+                    ("pending_up", Json::Num(a.pending_bits_up as f64)),
+                    ("pending_down", Json::Num(a.pending_bits_down as f64)),
+                    (
+                        "pending_stragglers",
+                        Json::Num(a.pending_stragglers as f64),
+                    ),
+                    ("events", Json::Arr(a.events.iter().map(upload_meta).collect())),
+                    ("buffer", Json::Arr(a.buffer.iter().map(upload_meta).collect())),
+                    (
+                        "pool",
+                        Json::Arr(
+                            a.pool
+                                .iter()
+                                .map(|p| {
+                                    Json::Arr(vec![
+                                        Json::Num(p.device as f64),
+                                        Json::Num(p.version as f64),
+                                        loss(p.loss),
+                                        Json::Num(
+                                            p.level.map_or(-1.0, |l| l as f64),
+                                        ),
+                                        Json::Num(if p.staged { 1.0 } else { 0.0 }),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
         let header = obj(fields);
         let tmp = path.with_extension("tmp");
         {
@@ -220,6 +347,19 @@ impl Checkpoint {
                     write_rng(&mut f, Some(rng))?;
                 }
                 write_rng(&mut f, self.coin_rng.as_ref())?;
+            }
+            // v7 async binary tail: clock, then each event's arrival +
+            // wire bytes, then each buffered upload's wire bytes, in
+            // header order.
+            if let Some(a) = async_state {
+                f.write_all(&a.clock.to_le_bytes())?;
+                for u in &a.events {
+                    f.write_all(&u.arrival.to_le_bytes())?;
+                    f.write_all(&u.bytes)?;
+                }
+                for u in &a.buffer {
+                    f.write_all(&u.bytes)?;
+                }
             }
             f.flush()?;
         }
@@ -291,6 +431,78 @@ impl Checkpoint {
             }
             coin_rng = take_rng(&mut body)?;
         }
+        // v7 buffered-async section: header metadata names the uploads
+        // and their byte lengths; the binary tail carries the clock,
+        // arrival times, and wire bytes (consumed here, before the
+        // trailing-bytes check).
+        let async_state = match header.get("async") {
+            a @ Json::Obj(_) if version >= 7 => {
+                let clock = take_f64(&mut body)?;
+                let meta = |v: &Json| -> Result<(usize, usize, usize)> {
+                    Ok((
+                        v.at(0).as_usize().context("async upload device")?,
+                        v.at(1).as_usize().context("async upload version")?,
+                        v.at(2).as_usize().context("async upload length")?,
+                    ))
+                };
+                let mut events = Vec::new();
+                for v in a.get("events").as_arr().unwrap_or(&[]) {
+                    let (device, ver, len) = meta(v)?;
+                    let arrival = take_f64(&mut body)?;
+                    events.push(AsyncUpload {
+                        device,
+                        version: ver,
+                        arrival,
+                        bytes: take_bytes(&mut body, len)?.to_vec(),
+                    });
+                }
+                let mut buffer = Vec::new();
+                for v in a.get("buffer").as_arr().unwrap_or(&[]) {
+                    let (device, ver, len) = meta(v)?;
+                    buffer.push(AsyncUpload {
+                        device,
+                        version: ver,
+                        arrival: 0.0,
+                        bytes: take_bytes(&mut body, len)?.to_vec(),
+                    });
+                }
+                let pool = a
+                    .get("pool")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| {
+                        let level = v.at(3).as_f64().unwrap_or(-1.0);
+                        AsyncMember {
+                            device: v.at(0).as_usize().unwrap_or(0),
+                            version: v.at(1).as_usize().unwrap_or(0),
+                            loss: v.at(2).as_f64().unwrap_or(f64::NAN),
+                            level: if level < 0.0 { None } else { Some(level as u8) },
+                            staged: v.at(4).as_f64().unwrap_or(0.0) != 0.0,
+                        }
+                    })
+                    .collect();
+                Some(AsyncState {
+                    next_dispatch: a.get("next_dispatch").as_usize().context("async")?,
+                    commits: a.get("commits").as_usize().context("async commits")?,
+                    clock,
+                    last_cohort: a.get("last_cohort").as_usize().unwrap_or(0),
+                    fold_round: a.get("fold_round").as_usize().unwrap_or(0),
+                    fold_marina_sync: a.get("fold_sync").as_f64().unwrap_or(1.0) != 0.0,
+                    pending_bits_up: a.get("pending_up").as_f64().unwrap_or(0.0) as u64,
+                    pending_bits_down: a.get("pending_down").as_f64().unwrap_or(0.0)
+                        as u64,
+                    pending_stragglers: a
+                        .get("pending_stragglers")
+                        .as_f64()
+                        .unwrap_or(0.0) as u64,
+                    events,
+                    buffer,
+                    pool,
+                })
+            }
+            _ => None,
+        };
         if !body.is_empty() {
             bail!("trailing bytes in checkpoint");
         }
@@ -369,6 +581,7 @@ impl Checkpoint {
             init_loss: header.get("init_loss").as_f64().unwrap_or(f64::NAN),
             prev_loss: header.get("prev_loss").as_f64().unwrap_or(f64::NAN),
             serve_state,
+            async_state,
         })
     }
 }
@@ -410,6 +623,12 @@ fn take_f32s(body: &mut &[u8], n: usize) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect())
+}
+
+/// Read one raw little-endian `f64` (v7 async section: clock and
+/// arrival times travel as bits, never as JSON text).
+fn take_f64(body: &mut &[u8]) -> Result<f64> {
+    Ok(f64::from_le_bytes(take_bytes(body, 8)?.try_into().unwrap()))
 }
 
 /// Read one RNG record; `Ok(None)` for an absent-marked record.
@@ -472,6 +691,57 @@ mod tests {
                 clients: 2,
                 staged: vec![0, 1],
             }),
+            async_state: None,
+        }
+    }
+
+    fn sample_async() -> AsyncState {
+        AsyncState {
+            next_dispatch: 5,
+            commits: 3,
+            clock: 17.25f64.powi(3) / 7.0, // not exactly representable in short decimal
+            last_cohort: 2,
+            fold_round: 4,
+            fold_marina_sync: false,
+            pending_bits_up: 1_024,
+            pending_bits_down: 4_096,
+            pending_stragglers: 1,
+            events: vec![
+                AsyncUpload {
+                    device: 1,
+                    version: 4,
+                    arrival: 19.5 + f64::EPSILON,
+                    bytes: vec![1, 2, 3, 4, 5],
+                },
+                AsyncUpload {
+                    device: 0,
+                    version: 3,
+                    arrival: 18.0,
+                    bytes: vec![9, 8],
+                },
+            ],
+            buffer: vec![AsyncUpload {
+                device: 1,
+                version: 3,
+                arrival: 0.0,
+                bytes: vec![7; 11],
+            }],
+            pool: vec![
+                AsyncMember {
+                    device: 0,
+                    version: 3,
+                    loss: 0.5,
+                    level: Some(4),
+                    staged: true,
+                },
+                AsyncMember {
+                    device: 1,
+                    version: 4,
+                    loss: 0.25,
+                    level: None,
+                    staged: false,
+                },
+            ],
         }
     }
 
@@ -636,6 +906,63 @@ mod tests {
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded.serve_state, None);
         assert_eq!(loaded, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_state_roundtrips_bit_exact() {
+        // v7: events (with their wire bytes and arrival-time bits),
+        // the partial buffer, the member pool, and the retained fold
+        // context all survive a save/load cycle exactly.
+        let dir = std::env::temp_dir().join("aquila_ckpt_async");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.device_last_loss = vec![0.7, 0.6];
+        c.async_state = Some(sample_async());
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, c);
+        let a = loaded.async_state.unwrap();
+        let b = sample_async();
+        assert_eq!(a.clock.to_bits(), b.clock.to_bits());
+        assert_eq!(a.events[0].arrival.to_bits(), b.events[0].arrival.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_pool_nan_loss_roundtrips() {
+        // A pool member that never reported (remote path) carries a
+        // NaN loss; it must survive as NaN, not poison the header.
+        let dir = std::env::temp_dir().join("aquila_ckpt_async_nan");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        let mut a = sample_async();
+        a.pool[1].loss = f64::NAN;
+        c.async_state = Some(a);
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        let a = loaded.async_state.unwrap();
+        assert!(a.pool[1].loss.is_nan());
+        assert_eq!(a.pool[0].loss, 0.5);
+        assert_eq!(a.pool[1].level, None);
+        assert_eq!(a.pool[0].level, Some(4));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sync_checkpoints_have_no_async_section() {
+        // The sync path never materializes buffered state; the header
+        // has no `async` key and loads back as None (as do all pre-v7
+        // checkpoints, which cannot contain one).
+        let dir = std::env::temp_dir().join("aquila_ckpt_async_none");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.device_last_loss = vec![0.7, 0.6];
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        assert!(!String::from_utf8_lossy(&bytes[..nl]).contains("\"async\""));
+        assert_eq!(Checkpoint::load(&path).unwrap().async_state, None);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -16,9 +16,9 @@
 //! byte-identical to the eager engine (pinned by
 //! `tests/prop_population.rs`).
 
-use super::checkpoint::{Checkpoint, RngState, VERSION};
+use super::checkpoint::{AsyncMember, AsyncState, AsyncUpload, Checkpoint, RngState, VERSION};
 use super::population::PopulationSpec;
-use super::{RunConfig, SlotPolicy};
+use super::{AggregationMode, RunConfig, SlotPolicy, StalenessPolicy};
 use crate::algorithms::{Algorithm, ClientUpload, DeviceState, RoundCtx, ServerAgg};
 use crate::hetero::MaskTable;
 use crate::metrics::RoundRecord;
@@ -26,7 +26,7 @@ use crate::problems::{GradScratch, GradientSource};
 use crate::quant::levels::DadaquantSchedule;
 use crate::selection::{DeviceStats, Selection, SelectionStrategy, SelectionView};
 use crate::transport::scenario::NetworkScenario;
-use crate::transport::wire::{self, UploadRef};
+use crate::transport::wire::{self, EncodedUpload, UploadRef};
 use crate::transport::Channel;
 use crate::util::pool::parallel_for_pairs;
 use crate::util::ring::RecentWindow;
@@ -124,6 +124,196 @@ struct WorkerScratch {
     scratch: GradScratch,
 }
 
+/// One upload in flight on the buffered-async path: scheduled by a
+/// dispatch, delivered by the event loop at `arrival`.
+struct PendingUpload {
+    /// Absolute simulated arrival time (seconds since run start).
+    arrival: f64,
+    /// Model version (commit count) the upload was computed against.
+    version: usize,
+    /// Originating device id.
+    device: usize,
+    /// Validated wire bytes, owned until the fold consumes them.
+    bytes: Vec<u8>,
+}
+
+/// An arrived upload parked in the server buffer until the next commit.
+struct BufferedUpload {
+    version: usize,
+    device: usize,
+    bytes: Vec<u8>,
+}
+
+/// Per-dispatch accounting for one cohort member, drained by the next
+/// commit (loss / level / upload-vs-skip columns of the round record).
+struct MemberRecord {
+    version: usize,
+    device: usize,
+    loss: f64,
+    level: Option<u8>,
+    staged: bool,
+}
+
+/// Mutable state of the buffered-async event engine
+/// ([`AggregationMode::Buffered`], DESIGN.md §Async). Materialized on
+/// the engine once the first buffered round runs; checkpoint v7
+/// serializes it so a mid-buffer resume is byte-identical to the
+/// uninterrupted run.
+struct BufferedState {
+    /// In-flight uploads, sorted *descending* by
+    /// `(arrival, version, device)` so `pop()` yields the earliest
+    /// event in O(1); `total_cmp` plus the integer tie-breaks make the
+    /// order total and deterministic.
+    events: Vec<PendingUpload>,
+    /// Arrived uploads awaiting the next commit.
+    buffer: Vec<BufferedUpload>,
+    /// Dispatched-member accounting awaiting the next commit.
+    pool: Vec<MemberRecord>,
+    /// Next dispatch index — the selection / fault / jitter stream key,
+    /// the buffered analogue of the sync round number.
+    next_dispatch: usize,
+    /// Committed model versions so far (= the engine's round counter).
+    commits: usize,
+    /// The simulated clock: the maximum of every processed arrival and
+    /// broadcast floor so far; runs ahead of the engine's cumulative
+    /// sim-time between commits.
+    clock: f64,
+    /// Cohort size of the latest dispatch — the admission estimate for
+    /// the next one.
+    last_cohort: usize,
+    /// `RoundCtx::round` of the latest dispatch. Server folds
+    /// contractually read only `round` and `marina_sync` from the
+    /// context (MARINA's periodic full-sync branch), so these two are
+    /// all a commit — even one resumed from a checkpoint — must carry.
+    fold_round: usize,
+    /// `RoundCtx::marina_sync` of the latest dispatch.
+    fold_marina_sync: bool,
+    /// Transport accounting accumulated per dispatch, flushed into the
+    /// engine's cumulative counters at the next commit.
+    pending_bits_up: u64,
+    pending_bits_down: u64,
+    pending_stragglers: u64,
+}
+
+impl BufferedState {
+    fn new() -> Self {
+        Self {
+            events: Vec::new(),
+            buffer: Vec::new(),
+            pool: Vec::new(),
+            next_dispatch: 0,
+            commits: 0,
+            clock: 0.0,
+            last_cohort: 0,
+            fold_round: 0,
+            fold_marina_sync: true,
+            pending_bits_up: 0,
+            pending_bits_down: 0,
+            pending_stragglers: 0,
+        }
+    }
+
+    /// Re-establish the descending `(arrival, version, device)` order
+    /// after a dispatch batch-inserts its scheduled arrivals.
+    fn sort_events(&mut self) {
+        self.events.sort_unstable_by(|a, b| {
+            b.arrival
+                .total_cmp(&a.arrival)
+                .then_with(|| b.version.cmp(&a.version))
+                .then_with(|| b.device.cmp(&a.device))
+        });
+    }
+
+    fn to_checkpoint(&self) -> AsyncState {
+        AsyncState {
+            next_dispatch: self.next_dispatch,
+            commits: self.commits,
+            clock: self.clock,
+            last_cohort: self.last_cohort,
+            fold_round: self.fold_round,
+            fold_marina_sync: self.fold_marina_sync,
+            pending_bits_up: self.pending_bits_up,
+            pending_bits_down: self.pending_bits_down,
+            pending_stragglers: self.pending_stragglers,
+            events: self
+                .events
+                .iter()
+                .map(|u| AsyncUpload {
+                    device: u.device,
+                    version: u.version,
+                    arrival: u.arrival,
+                    bytes: u.bytes.clone(),
+                })
+                .collect(),
+            buffer: self
+                .buffer
+                .iter()
+                .map(|u| AsyncUpload {
+                    device: u.device,
+                    version: u.version,
+                    arrival: 0.0,
+                    bytes: u.bytes.clone(),
+                })
+                .collect(),
+            pool: self
+                .pool
+                .iter()
+                .map(|p| AsyncMember {
+                    device: p.device,
+                    version: p.version,
+                    loss: p.loss,
+                    level: p.level,
+                    staged: p.staged,
+                })
+                .collect(),
+        }
+    }
+
+    fn from_checkpoint(st: &AsyncState) -> Self {
+        Self {
+            events: st
+                .events
+                .iter()
+                .map(|u| PendingUpload {
+                    arrival: u.arrival,
+                    version: u.version,
+                    device: u.device,
+                    bytes: u.bytes.clone(),
+                })
+                .collect(),
+            buffer: st
+                .buffer
+                .iter()
+                .map(|u| BufferedUpload {
+                    version: u.version,
+                    device: u.device,
+                    bytes: u.bytes.clone(),
+                })
+                .collect(),
+            pool: st
+                .pool
+                .iter()
+                .map(|p| MemberRecord {
+                    version: p.version,
+                    device: p.device,
+                    loss: p.loss,
+                    level: p.level,
+                    staged: p.staged,
+                })
+                .collect(),
+            next_dispatch: st.next_dispatch,
+            commits: st.commits,
+            clock: st.clock,
+            last_cohort: st.last_cohort,
+            fold_round: st.fold_round,
+            fold_marina_sync: st.fold_marina_sync,
+            pending_bits_up: st.pending_bits_up,
+            pending_bits_down: st.pending_bits_down,
+            pending_stragglers: st.pending_stragglers,
+        }
+    }
+}
+
 /// Mutable run state + the round protocol (steps 1–5 of the module docs
 /// in `crate::coordinator`). Problem, algorithm, and selection strategy
 /// are passed per call so front-ends may own them however they like.
@@ -178,6 +368,10 @@ pub struct RoundEngine {
     /// Recycled buffer of this round's participant device ids
     /// (downlink billing + per-device link lookup in the channel).
     participant_buf: Vec<usize>,
+    /// Buffered-async event state ([`AggregationMode::Buffered`]);
+    /// `None` until the first buffered round runs (and always `None`
+    /// on the sync path).
+    buffered: Option<BufferedState>,
 }
 
 impl RoundEngine {
@@ -260,6 +454,7 @@ impl RoundEngine {
             cum_sim_time: 0.0,
             cum_stragglers: 0,
             participant_buf: Vec::new(),
+            buffered: None,
         }
     }
 
@@ -665,7 +860,13 @@ impl RoundEngine {
         };
         self.cum_bits += stats.uplink_bits;
         self.cum_bits_down += stats.downlink_bits;
+        // Record the round's wall-clock cost as the *difference of
+        // cumulative times* — the same arithmetic the buffered engine
+        // uses between commits, so the degenerate buffered
+        // configuration reproduces this column bit for bit.
+        let prev_sim_time = self.cum_sim_time;
         self.cum_sim_time += stats.round_time;
+        let round_time = self.cum_sim_time - prev_sim_time;
         self.cum_stragglers += stats.stragglers;
         // Sparse statistics update: only cohort members can have changed
         // counters or observed a loss this round, so touching just them
@@ -688,10 +889,34 @@ impl RoundEngine {
         } else {
             (None, None, None)
         };
-        // ---- slot-cache maintenance ------------------------------------
-        // Cohort slots return to the live cache; under a bounded lazy
-        // policy the least-recently-used overflow (ties toward lower
-        // ids) is parked to compact state.
+        self.return_cohort();
+        // Hand the context's history buffer back for the next round.
+        self.ctx_diff_buf = std::mem::take(&mut ctx.model_diff_history);
+        RoundRecord {
+            round,
+            bits_up: stats.uplink_bits,
+            cum_bits: self.cum_bits,
+            uploads: upload_count,
+            skips: participant_count.saturating_sub(upload_count),
+            mean_level,
+            train_loss,
+            eval_loss,
+            accuracy,
+            perplexity,
+            stragglers: stats.stragglers as usize,
+            bits_down: stats.downlink_bits,
+            round_time,
+            sim_time: self.cum_sim_time,
+            mean_staleness: 0.0,
+            max_staleness: 0,
+            inflight: 0,
+        }
+    }
+
+    /// Return the in-flight cohort's slots to the live cache; under a
+    /// bounded lazy policy the least-recently-used overflow (ties
+    /// toward lower ids) is parked to compact state.
+    fn return_cohort(&mut self) {
         for (id, slot) in self.round_cohort.drain(..) {
             self.live.insert(id, slot);
         }
@@ -710,11 +935,275 @@ impl RoundEngine {
                 }
             }
         }
-        // Hand the context's history buffer back for the next round.
+    }
+
+    /// Execute one buffered-async *commit* (DESIGN.md §Async): drive
+    /// the event loop — dispatching cohorts and delivering uploads at
+    /// their link-derived arrival times — until `m` uploads have
+    /// buffered (or the queue runs dry), then fold the buffer with
+    /// staleness weights and commit model version `commit`. The
+    /// returned record is keyed by commit: `round_time` is the
+    /// simulated time between commits, `inflight` counts uploads still
+    /// traveling when the version committed.
+    ///
+    /// Requires [`RunConfig::aggregation`] to be
+    /// [`AggregationMode::Buffered`]; commits must be driven in order,
+    /// exactly like [`RoundEngine::run_round`]'s rounds.
+    pub fn run_buffered_round(
+        &mut self,
+        problem: &dyn GradientSource,
+        algo: &dyn Algorithm,
+        strategy: &mut dyn SelectionStrategy,
+        commit: usize,
+    ) -> RoundRecord {
+        let AggregationMode::Buffered {
+            m,
+            staleness,
+            max_inflight,
+        } = self.cfg.aggregation.clone()
+        else {
+            panic!("run_buffered_round requires AggregationMode::Buffered");
+        };
+        let mut st = self.buffered.take().unwrap_or_else(BufferedState::new);
+        debug_assert_eq!(st.commits, commit, "buffered commits must be driven in order");
+        let record = loop {
+            // A full buffer commits before anything else — in
+            // particular before the next dispatch, so selection at
+            // dispatch d always observes every commit whose arrivals
+            // the clock has already passed.
+            if st.buffer.len() >= m {
+                break self.buffered_commit(problem, algo, staleness, &mut st);
+            }
+            if st.events.is_empty() {
+                if !st.buffer.is_empty() || !st.pool.is_empty() {
+                    // The queue ran dry mid-buffer: flush what arrived
+                    // (the buffered analogue of the sync engine closing
+                    // a fault-thinned round on its survivors).
+                    break self.buffered_commit(problem, algo, staleness, &mut st);
+                }
+                // Idle (cold start or post-commit drain): dispatch.
+                self.buffered_dispatch(problem, algo, strategy, &mut st);
+                if st.events.is_empty() && st.pool.is_empty() {
+                    // An empty cohort — commit the empty round, exactly
+                    // as the sync engine records an empty selection.
+                    break self.buffered_commit(problem, algo, staleness, &mut st);
+                }
+                continue;
+            }
+            // Overlap: admit the next cohort while uploads are still in
+            // flight when the bound allows, at most one dispatch per
+            // delivered arrival — dispatching can never outrun the
+            // network, so the queue and member pool stay bounded.
+            if st.events.len() + st.last_cohort.max(1) <= max_inflight {
+                self.buffered_dispatch(problem, algo, strategy, &mut st);
+            }
+            let ev = st.events.pop().expect("event queue checked non-empty");
+            st.clock = st.clock.max(ev.arrival);
+            st.buffer.push(BufferedUpload {
+                version: ev.version,
+                device: ev.device,
+                bytes: ev.bytes,
+            });
+        };
+        self.buffered = Some(st);
+        record
+    }
+
+    /// Dispatch one cohort on the buffered path: select, run the local
+    /// device phase against the current model, hand the staged uploads
+    /// to the link layer, and schedule their arrival events. The clock
+    /// advances to the broadcast completion (no upload can start before
+    /// the model reaches its device); slots return to the cache right
+    /// away, so devices with uploads still in flight are re-selected
+    /// deterministically by later dispatches.
+    fn buffered_dispatch(
+        &mut self,
+        problem: &dyn GradientSource,
+        algo: &dyn Algorithm,
+        strategy: &mut dyn SelectionStrategy,
+        st: &mut BufferedState,
+    ) {
+        let dispatch = st.next_dispatch;
+        let mut ctx = self.build_ctx(dispatch, strategy);
+        st.fold_round = ctx.round;
+        st.fold_marina_sync = ctx.marina_sync;
+        self.local_device_phase(problem, algo, &ctx);
         self.ctx_diff_buf = std::mem::take(&mut ctx.model_diff_history);
+        let mut participant_ids = std::mem::take(&mut self.participant_buf);
+        participant_ids.clear();
+        participant_ids.extend(self.round_cohort.iter().map(|&(id, _)| id));
+        let model_bits = self.theta.len() as u64 * 32;
+        let mut uploads = Vec::new();
+        for (id, slot) in &mut self.round_cohort {
+            st.pool.push(MemberRecord {
+                version: st.commits,
+                device: *id,
+                loss: slot.loss,
+                level: slot.staged_level,
+                staged: slot.staged,
+            });
+            if slot.staged {
+                // Move the wire bytes out — the event owns them until
+                // the fold; the slot's buffer regrows on next upload.
+                uploads.push(EncodedUpload {
+                    device: *id,
+                    bytes: std::mem::take(&mut slot.wire_buf),
+                });
+            }
+        }
+        let (events, stats) =
+            self.channel
+                .transmit_async(dispatch, &participant_ids, model_bits, uploads);
+        self.participant_buf = participant_ids;
+        st.pending_bits_up += stats.uplink_bits;
+        st.pending_bits_down += stats.downlink_bits;
+        st.pending_stragglers += stats.stragglers;
+        let t0 = st.clock;
+        for e in events {
+            st.events.push(PendingUpload {
+                arrival: t0 + e.offset,
+                version: st.commits,
+                device: e.device,
+                bytes: e.bytes,
+            });
+        }
+        st.sort_events();
+        // Broadcast floor: even if every upload is dropped the clock
+        // cannot pass under the model transfer (`stats.round_time` is
+        // the broadcast time on the async path).
+        st.clock = st.clock.max(t0 + stats.round_time);
+        // Cohort bookkeeping runs at dispatch so later overlapping
+        // dispatches observe it; in the degenerate sync-equivalent
+        // schedule this is exactly the state the sync engine exposes
+        // to round d+1.
+        for (id, slot) in &self.round_cohort {
+            let v = self.stats.entry(*id);
+            v.uploads = slot.state.uploads;
+            v.skips = slot.state.skips;
+            if slot.loss.is_finite() {
+                v.last_loss = Some(slot.loss);
+            }
+        }
+        st.last_cohort = self.round_cohort.len();
+        self.return_cohort();
+        st.next_dispatch += 1;
+    }
+
+    /// Fold the arrived buffer into model version `st.commits`, apply
+    /// the staleness weights, advance the model, and emit the
+    /// commit-keyed record. Uploads fold in `(version, device)` order —
+    /// the dispatch order — so the shard fold accumulates in the same
+    /// sequence the sync engine would.
+    fn buffered_commit(
+        &mut self,
+        problem: &dyn GradientSource,
+        algo: &dyn Algorithm,
+        staleness: StalenessPolicy,
+        st: &mut BufferedState,
+    ) -> RoundRecord {
+        let commit = st.commits;
+        st.buffer.sort_unstable_by_key(|u| (u.version, u.device));
+        let staged: Vec<UploadRef<'_>> = st
+            .buffer
+            .iter()
+            .map(|u| UploadRef {
+                device: u.device,
+                bytes: &u.bytes,
+            })
+            .collect();
+        let mut staleness_sum = 0usize;
+        let mut max_staleness = 0usize;
+        let mut weights = Vec::with_capacity(staged.len());
+        for u in &st.buffer {
+            let s = commit - u.version;
+            staleness_sum += s;
+            max_staleness = max_staleness.max(s);
+            weights.push(staleness.weight(s));
+        }
+        let mean_staleness = if st.buffer.is_empty() {
+            0.0
+        } else {
+            staleness_sum as f64 / st.buffer.len() as f64
+        };
+        // Stage the weights only when they can change the fold: an
+        // all-ones weight vector must leave the accumulate path — and
+        // its float arithmetic — bit-identical to the unweighted sync
+        // fold (and `fold_average`'s empty early-return must not leave
+        // weights staged for a later call).
+        let one = 1.0f32.to_bits();
+        if !staged.is_empty() && weights.iter().any(|w| w.to_bits() != one) {
+            self.server.stage_upload_weights(weights);
+        }
+        let mut ctx = self.fold_ctx(st.fold_round, st.fold_marina_sync);
+        algo.server_fold(&mut self.server, &staged, &ctx);
+        drop(staged);
+        self.ctx_diff_buf = std::mem::take(&mut ctx.model_diff_history);
+        self.prev_theta.copy_from_slice(&self.theta);
+        axpy(-self.cfg.alpha, &self.server.direction, &mut self.theta);
+        let diff = diff_norm2_sq(&self.theta, &self.prev_theta);
+        self.diff_history.push(diff);
+
+        // ---- metrics: drain the member pool ---------------------------
+        st.pool.sort_unstable_by_key(|p| (p.version, p.device));
+        let participant_count = st.pool.len();
+        let mut upload_count = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut level_sum = 0u64;
+        let mut level_n = 0usize;
+        for p in &st.pool {
+            if p.staged {
+                upload_count += 1;
+            }
+            if p.loss.is_finite() {
+                loss_sum += p.loss;
+                loss_n += 1;
+            }
+            if let Some(l) = p.level {
+                level_sum += l as u64;
+                level_n += 1;
+            }
+        }
+        let train_loss = if loss_n == 0 {
+            self.prev_loss
+        } else {
+            loss_sum / loss_n as f64
+        };
+        if self.init_loss.is_nan() && train_loss.is_finite() {
+            self.init_loss = train_loss;
+        }
+        self.prev_loss = train_loss;
+        self.loss_history.push(train_loss);
+        let mean_level = if level_n == 0 {
+            0.0
+        } else {
+            level_sum as f64 / level_n as f64
+        };
+        let bits_up = std::mem::take(&mut st.pending_bits_up);
+        let bits_down = std::mem::take(&mut st.pending_bits_down);
+        let stragglers = std::mem::take(&mut st.pending_stragglers);
+        self.cum_bits += bits_up;
+        self.cum_bits_down += bits_down;
+        self.cum_stragglers += stragglers;
+        // The commit's wall-clock cost is the clock advance since the
+        // previous commit — a difference of cumulative times, the same
+        // arithmetic the sync path records.
+        let round_time = st.clock - self.cum_sim_time;
+        self.cum_sim_time = st.clock;
+        let do_eval = (self.cfg.eval_every > 0 && commit.is_multiple_of(self.cfg.eval_every))
+            || commit + 1 == self.cfg.rounds;
+        let (eval_loss, accuracy, perplexity) = if do_eval {
+            let ev = problem.eval(&self.theta);
+            (Some(ev.loss), ev.accuracy, ev.perplexity)
+        } else {
+            (None, None, None)
+        };
+        st.buffer.clear();
+        st.pool.clear();
+        st.commits += 1;
         RoundRecord {
-            round,
-            bits_up: stats.uplink_bits,
+            round: commit,
+            bits_up,
             cum_bits: self.cum_bits,
             uploads: upload_count,
             skips: participant_count.saturating_sub(upload_count),
@@ -723,10 +1212,38 @@ impl RoundEngine {
             eval_loss,
             accuracy,
             perplexity,
-            stragglers: stats.stragglers as usize,
-            bits_down: stats.downlink_bits,
-            round_time: stats.round_time,
+            stragglers: stragglers as usize,
+            bits_down,
+            round_time,
             sim_time: self.cum_sim_time,
+            mean_staleness,
+            max_staleness,
+            inflight: st.events.len(),
+        }
+    }
+
+    /// Assemble the server-fold context for a buffered commit. Server
+    /// folds contractually read only `round` and `marina_sync` from
+    /// their context (MARINA's periodic full-sync branch; the
+    /// degenerate-equivalence gate in `tests/prop_async.rs` would trip
+    /// on any new dependency) — those two come from the dispatch that
+    /// most recently ran, everything else is engine-current.
+    fn fold_ctx(&mut self, round: usize, marina_sync: bool) -> RoundCtx {
+        let mut model_diff_history = std::mem::take(&mut self.ctx_diff_buf);
+        model_diff_history.clear();
+        model_diff_history.extend_from_slice(self.diff_history.as_slice());
+        RoundCtx {
+            round,
+            num_devices: self.m,
+            alpha: self.cfg.alpha,
+            beta: self.cfg.beta,
+            model_diff_sq: self.diff_history.latest().unwrap_or(0.0),
+            model_diff_history,
+            init_loss: if self.init_loss.is_nan() { 1.0 } else { self.init_loss },
+            prev_loss: if self.prev_loss.is_nan() { 1.0 } else { self.prev_loss },
+            marina_sync,
+            selected: None,
+            dadaquant_level: self.dadaquant.level(),
         }
     }
 
@@ -793,6 +1310,7 @@ impl RoundEngine {
             // The engine knows nothing about serving; the coordinator
             // service stamps its serve-state onto the snapshot.
             serve_state: None,
+            async_state: self.buffered.as_ref().map(BufferedState::to_checkpoint),
         }
     }
 
@@ -887,6 +1405,11 @@ impl RoundEngine {
         self.cum_stragglers = ckpt.stragglers;
         self.init_loss = ckpt.init_loss;
         self.prev_loss = ckpt.prev_loss;
+        // Buffered-async event state (checkpoint v7): in-flight
+        // uploads, the partial buffer, and the member pool resume
+        // exactly where the snapshot left them; older checkpoints (and
+        // sync runs) carry none.
+        self.buffered = ckpt.async_state.as_ref().map(BufferedState::from_checkpoint);
         Ok(ckpt.round)
     }
 }

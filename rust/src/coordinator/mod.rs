@@ -27,11 +27,13 @@
 //! the engine was removed after its one-release grace period — migrate
 //! to `Session::builder(...)`.) See DESIGN.md §2 for the architecture.
 
+pub mod aggregation;
 pub mod checkpoint;
 pub mod engine;
 pub mod population;
 mod session;
 
+pub use aggregation::{AggregationMode, StalenessPolicy};
 pub use population::PopulationSpec;
 pub use session::{Session, SessionBuilder};
 
@@ -111,6 +113,9 @@ pub struct RunConfig {
     /// million-device populations should run [`SlotPolicy::Lazy`] with
     /// a cache a few times the cohort size.
     pub slots: SlotPolicy,
+    /// Aggregation mode: the default synchronous barrier or the
+    /// buffered-async event engine (DESIGN.md §Async).
+    pub aggregation: AggregationMode,
 }
 
 impl Default for RunConfig {
@@ -132,6 +137,7 @@ impl Default for RunConfig {
             network: NetworkSpec::default(),
             quant_sections: SectionSpec::Global,
             slots: SlotPolicy::Eager,
+            aggregation: AggregationMode::Sync,
         }
     }
 }

@@ -249,14 +249,26 @@ impl Session {
         self.strategy.name()
     }
 
-    /// Execute one communication round (and notify observers).
+    /// Execute one communication round (and notify observers). Under
+    /// [`super::AggregationMode::Buffered`] a "round" is one committed
+    /// model version of the event engine; the loop shape — indices,
+    /// observers, checkpoint cadence — is identical to the sync path.
     pub fn run_round(&mut self, round: usize) -> RoundRecord {
-        let rec = self.engine.run_round(
-            self.problem.as_ref(),
-            self.algo.as_ref(),
-            self.strategy.as_mut(),
-            round,
-        );
+        let rec = if self.engine.config().aggregation.is_sync() {
+            self.engine.run_round(
+                self.problem.as_ref(),
+                self.algo.as_ref(),
+                self.strategy.as_mut(),
+                round,
+            )
+        } else {
+            self.engine.run_buffered_round(
+                self.problem.as_ref(),
+                self.algo.as_ref(),
+                self.strategy.as_mut(),
+                round,
+            )
+        };
         for obs in &mut self.observers {
             obs.on_round(&rec);
         }

@@ -11,7 +11,8 @@
 //!           [--dadaquant-cap C] [--out FILE.csv] [--jsonl FILE.jsonl]
 //!           [--serve [ADDR] | --connect ADDR] [--chaos SPEC]
 //!           [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
-//!           [--population N] [--slot-cache C]          single configured run
+//!           [--population N] [--slot-cache C]
+//!           [--aggregation SPEC]                       single configured run
 //! repro theory                                        Corollary-1/Theorem-3 numbers
 //! repro list                                          presets + algorithms + strategies
 //! ```
@@ -286,6 +287,21 @@ fn cmd_run(args: &Args) -> ExitCode {
             }
         }
     }
+    // Aggregation mode: the default sync barrier or the buffered-async
+    // event engine (`[aggregation]` TOML table has the same effect;
+    // the CLI wins).
+    if let Some(v) = args.flags.get("aggregation") {
+        match aquila::coordinator::AggregationMode::parse(v) {
+            Some(mode) => spec.aggregation = mode,
+            None => {
+                eprintln!(
+                    "unknown aggregation spec '{v}' (try: {})",
+                    aquila::coordinator::AggregationMode::SYNTAX
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     let algo_name = args
         .flags
         .get("algo")
@@ -297,7 +313,15 @@ fn cmd_run(args: &Args) -> ExitCode {
     };
     // Protocol roles: `--connect ADDR` turns this process into a device
     // client of a remote coordinator; `--serve [ADDR]` serves the run
-    // over TCP instead of executing the device phase in-process.
+    // over TCP instead of executing the device phase in-process. The
+    // buffered-async engine is in-process only: the wire protocol has
+    // no per-upload arrival events yet.
+    if !spec.aggregation.is_sync()
+        && (args.flags.contains_key("serve") || args.flags.contains_key("connect"))
+    {
+        eprintln!("buffered aggregation is not supported with --serve/--connect (in-process only)");
+        return ExitCode::FAILURE;
+    }
     if let Some(addr) = args.flags.get("connect") {
         return cmd_connect(&spec, algo, addr);
     }
@@ -331,7 +355,7 @@ fn cmd_run(args: &Args) -> ExitCode {
         None => None,
     };
     println!(
-        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={}, sections={})",
+        "running {} on {} ({} devices, {} rounds, α={}, β={}, select={}, network={}, sections={}, aggregation={})",
         algo.name(),
         if spec.population.is_some() {
             "virtualized population".to_string()
@@ -345,6 +369,7 @@ fn cmd_run(args: &Args) -> ExitCode {
         spec.selection,
         spec.network,
         spec.quant_sections,
+        spec.aggregation,
     );
     // Streaming sinks: rounds hit the files as they complete.
     let mut builder = repro::session_for(&spec, algo);
@@ -528,24 +553,86 @@ fn cmd_list() {
         "chaos injection ([chaos] TOML table / --chaos): {}",
         ChaosSpec::SYNTAX
     );
+    println!(
+        "aggregation modes (--aggregation / aggregation = \"...\"): {}",
+        aquila::coordinator::AggregationMode::SYNTAX
+    );
     println!("flags per command:");
     println!("  table2 | table3 | fig2 | fig3   --scale S --rounds N --seed K --out DIR");
     println!("  ablation-beta                   --betas B1,B2,.. --dataset D --scale S");
     println!("                                  --rounds N --out DIR");
-    println!("  run                             --config FILE --algo NAME --select SPEC");
-    println!("                                  --network SPEC --quant-sections SPEC");
-    println!("                                  --dadaquant-b0 B --dadaquant-patience P");
-    println!("                                  --dadaquant-cap C --out FILE.csv");
-    println!("                                  --jsonl FILE.jsonl");
-    println!("                                  --serve [ADDR]   coordinator service");
-    println!("                                  --connect ADDR   device client");
-    println!("                                  --chaos SPEC     fault injection (served runs)");
-    println!("                                  --checkpoint FILE [--checkpoint-every N]");
-    println!("                                  --resume FILE    restart from a checkpoint");
-    println!("                                  --population N   virtualized N-device run");
-    println!("                                                   (streamed quadratic, lazy slots)");
-    println!("                                  --slot-cache C   live-slot cache capacity");
-    println!("                                                   (0 = lazy but unbounded)");
+    // The `run` rows come from the canonical flag table so this
+    // listing cannot drift from what the parser accepts.
+    println!("  run");
+    for (flag, toml_key, help) in aquila::config::RUN_FLAG_SURFACE {
+        let toml = match toml_key {
+            Some(k) => format!("  [toml: {k}]"),
+            None => String::new(),
+        };
+        println!("    --{flag:<19} {help}{toml}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    /// Flags consumed by the table/figure/ablation commands — they
+    /// have no TOML counterpart and are listed on their own `repro
+    /// list` rows, not in the `run` table.
+    const COMMON_FLAGS: &[&str] = &["scale", "rounds", "seed", "betas", "dataset", "out"];
+
+    /// Every flag the binary parses out of `args.flags`, scraped from
+    /// this very source file. Escaped quotes inside string literals
+    /// (e.g. in `format!` arguments) do not match the patterns, so the
+    /// scrape sees exactly the `flags.get("…")` call sites.
+    fn parsed_flags() -> BTreeSet<&'static str> {
+        let src = include_str!("main.rs");
+        let mut flags = BTreeSet::new();
+        for pat in ["flags.get(\"", "flags.contains_key(\""] {
+            for part in src.split(pat).skip(1) {
+                if let Some(flag) = part.split('"').next() {
+                    flags.insert(flag);
+                }
+            }
+        }
+        flags
+    }
+
+    #[test]
+    fn every_parsed_flag_is_in_the_canonical_surface() {
+        let surface: BTreeSet<&str> = aquila::config::RUN_FLAG_SURFACE
+            .iter()
+            .map(|(flag, _, _)| *flag)
+            .collect();
+        let parsed = parsed_flags();
+        assert!(parsed.len() > 15, "flag scrape found too few sites — pattern rot?");
+        for flag in &parsed {
+            assert!(
+                surface.contains(flag) || COMMON_FLAGS.contains(flag),
+                "main.rs parses --{flag} but RUN_FLAG_SURFACE has no row for it \
+                 (so `repro list` would not print it)"
+            );
+        }
+        for (flag, _, _) in aquila::config::RUN_FLAG_SURFACE {
+            assert!(
+                parsed.contains(flag),
+                "RUN_FLAG_SURFACE lists --{flag} but main.rs never parses it"
+            );
+        }
+    }
+
+    #[test]
+    fn readme_documents_every_run_flag() {
+        let readme = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md"))
+            .expect("README.md at the repo root");
+        for (flag, _, _) in aquila::config::RUN_FLAG_SURFACE {
+            assert!(
+                readme.contains(&format!("--{flag}")),
+                "README.md does not document --{flag}"
+            );
+        }
+    }
 }
 
 fn main() -> ExitCode {
@@ -569,6 +656,7 @@ fn main() -> ExitCode {
             println!("             --serve [ADDR] (coordinator) | --connect ADDR (client)");
             println!("             --chaos SPEC --checkpoint FILE [--checkpoint-every N]");
             println!("             --resume FILE --population N --slot-cache C");
+            println!("             --aggregation SPEC (sync | buffered async)");
             println!("  `repro list` prints the full flag surface and spec syntaxes");
         }
     }

@@ -46,17 +46,26 @@ pub struct RoundRecord {
     /// the x-axis of time-to-accuracy curves
     /// ([`RunTrace::time_to_loss`]).
     pub sim_time: f64,
+    /// Mean staleness (commits elapsed since dispatch) of the uploads
+    /// folded this round. Always 0 on the synchronous path.
+    pub mean_staleness: f64,
+    /// Maximum staleness among the uploads folded this round.
+    pub max_staleness: usize,
+    /// Uploads still in flight when this round's model committed
+    /// (buffered-async overlap; 0 on the synchronous path).
+    pub inflight: usize,
 }
 
 impl RoundRecord {
     /// Column header matching [`RoundRecord::csv_row`].
     pub const CSV_HEADER: &'static str = "round,bits_up,cum_bits,uploads,skips,mean_level,\
-         train_loss,eval_loss,accuracy,perplexity,stragglers,bits_down,round_time,sim_time";
+         train_loss,eval_loss,accuracy,perplexity,stragglers,bits_down,round_time,sim_time,\
+         mean_staleness,max_staleness,inflight";
 
     /// One CSV line (no trailing newline).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.4},{:.6},{},{},{},{},{},{:.6},{:.6}",
+            "{},{},{},{},{},{:.4},{:.6},{},{},{},{},{},{:.6},{:.6},{:.4},{},{}",
             self.round,
             self.bits_up,
             self.cum_bits,
@@ -71,6 +80,9 @@ impl RoundRecord {
             self.bits_down,
             self.round_time,
             self.sim_time,
+            self.mean_staleness,
+            self.max_staleness,
+            self.inflight,
         )
     }
 
@@ -95,6 +107,9 @@ impl RoundRecord {
             ("bits_down", Json::Num(self.bits_down as f64)),
             ("round_time", num(self.round_time)),
             ("sim_time", num(self.sim_time)),
+            ("mean_staleness", num(self.mean_staleness)),
+            ("max_staleness", Json::Num(self.max_staleness as f64)),
+            ("inflight", Json::Num(self.inflight as f64)),
         ])
     }
 }
@@ -254,6 +269,9 @@ mod tests {
                     bits_down: 400,
                     round_time: 0.5,
                     sim_time: 0.5,
+                    mean_staleness: 0.0,
+                    max_staleness: 0,
+                    inflight: 0,
                 },
                 RoundRecord {
                     round: 1,
@@ -270,6 +288,9 @@ mod tests {
                     bits_down: 200,
                     round_time: 0.25,
                     sim_time: 0.75,
+                    mean_staleness: 0.5,
+                    max_staleness: 1,
+                    inflight: 3,
                 },
             ],
         }
@@ -302,7 +323,9 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("round,"));
+        assert!(lines[0].ends_with("mean_staleness,max_staleness,inflight"));
         assert!(lines[1].contains("2.000000"));
+        assert!(lines[2].ends_with(",0.5000,1,3"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

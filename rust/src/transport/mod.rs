@@ -24,7 +24,7 @@ pub mod wire;
 
 use crate::util::rng::Xoshiro256pp;
 use scenario::{NetworkScenario, StragglerPolicy};
-use wire::UploadRef;
+use wire::{EncodedUpload, UploadRef};
 
 /// Per-round transport statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -136,14 +136,17 @@ impl Channel {
     ///
     /// Dropped uploads still consumed uplink bandwidth (the bytes were
     /// sent; the loss is on the path) — consistent with how the paper
-    /// counts transmitted bits. With a finite deadline, any *staged*
-    /// upload that fails to arrive (fault, unavailability, or a
-    /// dropped straggler) makes the server wait out the full deadline;
-    /// otherwise the round window closes at the last arrival. Devices
-    /// that intentionally skip (lazy-aggregation rules) are assumed to
-    /// announce it with a zero-cost beacon, so a skip round does not
-    /// block the window — only a *lost* upload is indistinguishable
-    /// from a slow one.
+    /// counts transmitted bits. With a finite deadline, a *straggler*
+    /// dropped at the deadline makes the server wait out the full
+    /// deadline (it stopped listening only when the clock ran out);
+    /// every other loss — injected faults and unavailability windows —
+    /// is known to the link layer, so the round window closes at the
+    /// last actual arrival, not the deadline. (Devices that
+    /// intentionally skip — lazy-aggregation rules — likewise announce
+    /// it with a zero-cost beacon and never block the window.) In
+    /// particular a huge-but-finite deadline no longer stretches
+    /// `round_time` when a fault eats an upload that would have
+    /// arrived promptly.
     pub fn transmit<'a>(
         &mut self,
         round: usize,
@@ -160,7 +163,7 @@ impl Channel {
         let mut fault_rng = fault_stream(self.faults.seed, round);
         let mut jitter_rng = self.scenario.round_jitter_stream(round);
         let mut window = 0.0f64;
-        let mut missing = false;
+        let mut straggled_out = false;
         let mut delivered = Vec::with_capacity(uploads.len());
         for up in uploads {
             wire::view(up.bytes).expect("self-encoded payload must be viewable");
@@ -171,7 +174,6 @@ impl Channel {
                 self.faults.drop_prob > 0.0 && fault_rng.bernoulli(self.faults.drop_prob);
             if fault_dropped || !self.scenario.is_up(up.device, round) {
                 stats.dropped += 1;
-                missing = true;
                 continue;
             }
             let arrival = self
@@ -181,7 +183,7 @@ impl Channel {
                 stats.stragglers += 1;
                 if self.scenario.policy() == StragglerPolicy::Drop {
                     stats.dropped += 1;
-                    missing = true;
+                    straggled_out = true;
                     continue;
                 }
             }
@@ -189,9 +191,9 @@ impl Channel {
             stats.messages += 1;
             delivered.push(up);
         }
-        if missing && deadline.is_finite() {
-            // The server cannot tell a lost upload from a slow one: it
-            // waits out the deadline.
+        if straggled_out && deadline.is_finite() {
+            // A deadline-dropped straggler means the server listened
+            // until the clock ran out.
             window = window.max(deadline);
         }
         stats.round_time = t_bcast + window;
@@ -203,6 +205,97 @@ impl Channel {
         self.sim_time += stats.round_time;
         (delivered, stats)
     }
+
+    /// Schedule one cohort dispatch on the buffered-async path
+    /// (DESIGN.md §Async): instead of closing a deadline-capped round
+    /// window, each surviving upload becomes an [`UploadEvent`] whose
+    /// `offset` is its link-derived completion time relative to the
+    /// dispatch instant. The event-loop engine owns the simulated
+    /// clock, so this call advances *no* time: `stats.round_time`
+    /// carries only the dispatch's broadcast-completion offset (the
+    /// floor below which no commit fed by this cohort can land) and
+    /// the channel's cumulative `sim_time` is untouched.
+    ///
+    /// Randomness parity: the fault coin and jitter draws are keyed by
+    /// `dispatch` and consumed in exactly [`Channel::transmit`]'s
+    /// order (one coin per staged upload when `drop_prob > 0`, one
+    /// jitter draw per non-dropped upload) — with dispatch index =
+    /// round index the two paths see identical weather, which is what
+    /// makes the degenerate buffered configuration bit-identical to
+    /// sync. A straggler past a finite deadline is dropped or admitted
+    /// (flagged) per the scenario policy, but never waited for: the
+    /// buffered server has no barrier to hold open.
+    pub fn transmit_async(
+        &mut self,
+        dispatch: usize,
+        participants: &[usize],
+        model_bits: u64,
+        uploads: Vec<EncodedUpload>,
+    ) -> (Vec<UploadEvent>, LinkStats) {
+        let mut stats = LinkStats {
+            downlink_bits: model_bits * participants.len() as u64,
+            ..LinkStats::default()
+        };
+        let t_bcast = self.scenario.broadcast_time(participants, model_bits);
+        let deadline = self.scenario.deadline();
+        let mut fault_rng = fault_stream(self.faults.seed, dispatch);
+        let mut jitter_rng = self.scenario.round_jitter_stream(dispatch);
+        let mut events = Vec::with_capacity(uploads.len());
+        for up in uploads {
+            wire::view(&up.bytes).expect("self-encoded payload must be viewable");
+            stats.uplink_bits += up.bytes.len() as u64 * 8;
+            let fault_dropped =
+                self.faults.drop_prob > 0.0 && fault_rng.bernoulli(self.faults.drop_prob);
+            if fault_dropped || !self.scenario.is_up(up.device, dispatch) {
+                stats.dropped += 1;
+                continue;
+            }
+            let arrival = self
+                .scenario
+                .uplink_time(up.device, up.bytes.len() as u64 * 8, &mut jitter_rng);
+            let straggler = arrival > deadline;
+            if straggler {
+                stats.stragglers += 1;
+                if self.scenario.policy() == StragglerPolicy::Drop {
+                    stats.dropped += 1;
+                    continue;
+                }
+            }
+            stats.messages += 1;
+            events.push(UploadEvent {
+                device: up.device,
+                offset: t_bcast + arrival,
+                straggler,
+                bytes: up.bytes,
+            });
+        }
+        stats.round_time = t_bcast;
+        self.total_bits += stats.uplink_bits;
+        self.total_bits_down += stats.downlink_bits;
+        self.total_messages += stats.messages;
+        self.total_dropped += stats.dropped;
+        self.total_stragglers += stats.stragglers;
+        (events, stats)
+    }
+}
+
+/// One upload's scheduled completion on the buffered-async path,
+/// produced by [`Channel::transmit_async`].
+#[derive(Clone, Debug)]
+pub struct UploadEvent {
+    /// The uploading device.
+    pub device: usize,
+    /// Completion time in seconds relative to the dispatch instant
+    /// (broadcast completion + uplink transfer, jitter included).
+    pub offset: f64,
+    /// Whether the transfer overran the scenario deadline (admitted
+    /// late under [`StragglerPolicy::AdmitLate`]; a dropped straggler
+    /// never becomes an event).
+    pub straggler: bool,
+    /// The validated wire bytes, owned: the upload outlives its device
+    /// slot, which may be re-selected and re-dispatched while this one
+    /// is still in flight.
+    pub bytes: Vec<u8>,
 }
 
 #[cfg(test)]
@@ -355,6 +448,79 @@ mod tests {
             let got: Vec<usize> = del.iter().map(|u| u.device).collect();
             assert_eq!(got, up_now, "round {round}");
             assert_eq!(stats.dropped as usize, 8 - up_now.len());
+        }
+    }
+
+    #[test]
+    fn fault_drop_does_not_wait_out_huge_deadline() {
+        // Satellite fix: a lost upload is known to the link layer, so
+        // with policy=drop and a huge finite deadline the round closes
+        // at the last actual arrival — bitwise what the same run sees
+        // under an infinite deadline — instead of stretching to the
+        // deadline.
+        let faults = FaultSpec {
+            drop_prob: 0.5,
+            seed: 13,
+        };
+        let staged: Vec<EncodedUpload> = (0..8)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.0; 10_000])))
+            .collect();
+        let spec_huge = NetworkSpec::parse("cellular:deadline=1000000").unwrap();
+        let mut ch_huge = Channel::with_scenario(faults.clone(), spec_huge.build(8, 3));
+        let spec_inf = NetworkSpec::parse("cellular").unwrap();
+        let mut ch_inf = Channel::with_scenario(faults, spec_inf.build(8, 3));
+        for round in 0..6 {
+            let (del_h, st_h) = ch_huge.transmit(round, &[0], 1000, upload_refs(&staged));
+            let (del_i, st_i) = ch_inf.transmit(round, &[0], 1000, upload_refs(&staged));
+            assert!(st_h.dropped > 0 || st_h.messages == 8, "round {round}");
+            assert_eq!(del_h.len(), del_i.len(), "round {round}");
+            assert_eq!(
+                st_h.round_time.to_bits(),
+                st_i.round_time.to_bits(),
+                "round {round}: huge-deadline window {} != max(arrival) {}",
+                st_h.round_time,
+                st_i.round_time
+            );
+        }
+        assert_eq!(ch_huge.sim_time.to_bits(), ch_inf.sim_time.to_bits());
+    }
+
+    #[test]
+    fn async_events_mirror_sync_arrivals() {
+        // transmit_async with dispatch = round must replay transmit's
+        // exact weather: same survivors, same per-upload timing (the
+        // sync window is the max event offset), same billing — only
+        // the clock ownership moves to the event loop.
+        let faults = FaultSpec {
+            drop_prob: 0.3,
+            seed: 21,
+        };
+        let spec = NetworkSpec::parse("edge-mix:jitter=0.2").unwrap();
+        let mut sync_ch = Channel::with_scenario(faults.clone(), spec.build(8, 5));
+        let mut async_ch = Channel::with_scenario(faults, spec.build(8, 5));
+        let staged: Vec<EncodedUpload> = (0..8)
+            .map(|d| EncodedUpload::encode(d, &Payload::RawFull(vec![0.5; 5_000])))
+            .collect();
+        for round in 0..5 {
+            let (delivered, st) = sync_ch.transmit(round, &[0, 1], 1000, upload_refs(&staged));
+            let (events, ast) = async_ch.transmit_async(round, &[0, 1], 1000, staged.clone());
+            let got: Vec<usize> = events.iter().map(|e| e.device).collect();
+            let want: Vec<usize> = delivered.iter().map(|u| u.device).collect();
+            assert_eq!(got, want, "round {round}");
+            assert_eq!(ast.uplink_bits, st.uplink_bits);
+            assert_eq!(ast.downlink_bits, st.downlink_bits);
+            assert_eq!((ast.messages, ast.dropped, ast.stragglers), (
+                st.messages,
+                st.dropped,
+                st.stragglers
+            ));
+            // Sync's round window is exactly the slowest event.
+            let max_offset = events.iter().fold(0.0f64, |w, e| w.max(e.offset));
+            if !events.is_empty() {
+                assert_eq!(st.round_time.to_bits(), max_offset.to_bits(), "round {round}");
+            }
+            // The async path advances no simulated time itself.
+            assert_eq!(async_ch.sim_time, 0.0);
         }
     }
 

@@ -1,0 +1,220 @@
+//! Buffered-async engine invariants through the `Session` API: the
+//! degenerate configuration (`m = K`, `staleness = constant:1`,
+//! `inflight = K`) reproduces the synchronous barrier bit-exactly on
+//! all three synthetic datasets, overlapping-cohort runs are
+//! bit-deterministic across engine thread counts, and a checkpoint
+//! taken mid-buffer (uploads still in flight) resumes to the exact
+//! trace of the uninterrupted run.
+
+use aquila::algorithms::{aquila::Aquila, qsgd::QsgdAlgo, Algorithm};
+use aquila::config::{DatasetKind, ExperimentSpec, SplitKind};
+use aquila::coordinator::{AggregationMode, RunConfig, Session, StalenessPolicy};
+use aquila::metrics::RoundRecord;
+use aquila::problems::quadratic::QuadraticProblem;
+use aquila::problems::GradientSource;
+use aquila::transport::scenario::NetworkSpec;
+use aquila::transport::FaultSpec;
+use std::sync::Arc;
+
+/// Assert two round records agree bitwise on every deterministic
+/// column (floats compared via `to_bits`).
+fn assert_rounds_eq(a: &RoundRecord, b: &RoundRecord, tag: &str) {
+    assert_eq!(a.round, b.round, "{tag}: round index");
+    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag} round {}", a.round);
+    assert_eq!(
+        a.eval_loss.map(f64::to_bits),
+        b.eval_loss.map(f64::to_bits),
+        "{tag} round {} eval",
+        a.round
+    );
+    assert_eq!(a.bits_up, b.bits_up, "{tag} round {} bits_up", a.round);
+    assert_eq!(a.bits_down, b.bits_down, "{tag} round {} bits_down", a.round);
+    assert_eq!(a.uploads, b.uploads, "{tag} round {} uploads", a.round);
+    assert_eq!(a.skips, b.skips, "{tag} round {} skips", a.round);
+    assert_eq!(a.stragglers, b.stragglers, "{tag} round {} stragglers", a.round);
+    assert_eq!(
+        a.round_time.to_bits(),
+        b.round_time.to_bits(),
+        "{tag} round {} round_time",
+        a.round
+    );
+    assert_eq!(
+        a.sim_time.to_bits(),
+        b.sim_time.to_bits(),
+        "{tag} round {} sim_time",
+        a.round
+    );
+    assert_eq!(
+        a.mean_staleness.to_bits(),
+        b.mean_staleness.to_bits(),
+        "{tag} round {} mean_staleness",
+        a.round
+    );
+    assert_eq!(a.max_staleness, b.max_staleness, "{tag} round {} max_staleness", a.round);
+    assert_eq!(a.inflight, b.inflight, "{tag} round {} inflight", a.round);
+}
+
+/// The degenerate buffered configuration is the sync barrier: with
+/// `m = K` (the full-participation cohort), weight-1 constant
+/// staleness, and an in-flight bound that forbids overlap, the event
+/// engine folds exactly one whole cohort per commit — every trace
+/// column, including the simulated clock, matches the synchronous
+/// path bit-for-bit on all three synthetic datasets, faults and
+/// jitter included. Only the staleness/in-flight columns are compared
+/// structurally (both all-zero).
+#[test]
+fn prop_degenerate_buffered_matches_sync_bitwise() {
+    for ds in [DatasetKind::Cf10, DatasetKind::Cf100, DatasetKind::Wt2] {
+        let spec = ExperimentSpec::new(ds, SplitKind::Iid, false).scaled(0.02, 8);
+        let k = spec.devices;
+        let run = |aggregation: AggregationMode| {
+            let problem: Arc<dyn GradientSource> = spec.build_problem().into();
+            let mut cfg = spec.run_config();
+            cfg.threads = 2;
+            cfg.network = NetworkSpec::parse("edge-mix:jitter=0.3").unwrap();
+            cfg.faults = FaultSpec {
+                drop_prob: 0.2,
+                seed: 9,
+            };
+            cfg.aggregation = aggregation;
+            let mut s = Session::builder(problem, Arc::new(Aquila::new(spec.beta)))
+                .config(cfg)
+                .build();
+            let trace = s.run();
+            let theta: Vec<u32> = s.theta().iter().map(|x| x.to_bits()).collect();
+            (trace, theta)
+        };
+        let (t_sync, theta_sync) = run(AggregationMode::Sync);
+        let (t_buf, theta_buf) = run(AggregationMode::Buffered {
+            m: k,
+            staleness: StalenessPolicy::Constant(1.0),
+            max_inflight: k,
+        });
+        assert_eq!(t_sync.rounds.len(), t_buf.rounds.len(), "{ds:?}");
+        for (a, b) in t_sync.rounds.iter().zip(&t_buf.rounds) {
+            assert_rounds_eq(a, b, &format!("{ds:?}"));
+            assert_eq!(b.max_staleness, 0, "{ds:?}: degenerate mode cannot be stale");
+            assert_eq!(b.inflight, 0, "{ds:?}: degenerate mode cannot overlap");
+        }
+        assert_eq!(theta_sync, theta_buf, "{ds:?}: θ diverged bitwise");
+    }
+}
+
+fn buffered_cfg(threads: usize) -> RunConfig {
+    RunConfig {
+        alpha: 0.2,
+        beta: 0.25,
+        rounds: 12,
+        eval_every: 3,
+        seed: 85,
+        threads,
+        network: NetworkSpec::parse("edge-mix:jitter=0.25").unwrap(),
+        faults: FaultSpec {
+            drop_prob: 0.15,
+            seed: 3,
+        },
+        aggregation: AggregationMode::Buffered {
+            m: 5,
+            staleness: StalenessPolicy::Poly(0.5),
+            max_inflight: 24,
+        },
+        ..RunConfig::default()
+    }
+}
+
+/// An overlapping buffered run (`m` < cohort, generous in-flight
+/// bound) is bit-deterministic across engine thread counts {1, 2, 7}:
+/// the event queue is ordered by `(arrival, version, device)` with
+/// total-order float comparison and all per-dispatch randomness is
+/// round-keyed, so thread scheduling cannot reorder folds.
+#[test]
+fn prop_buffered_deterministic_across_threads() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 83));
+    let run = |threads: usize| {
+        let mut s = Session::builder(p.clone(), Arc::new(QsgdAlgo::new(6)))
+            .config(buffered_cfg(threads))
+            .build();
+        let trace = s.run();
+        let theta: Vec<u32> = s.theta().iter().map(|x| x.to_bits()).collect();
+        (trace, theta)
+    };
+    let (t1, theta1) = run(1);
+    // The configuration must actually exercise the async machinery:
+    // overlapped commits fold stale uploads.
+    assert!(
+        t1.rounds.iter().any(|r| r.inflight > 0),
+        "no commit ever had uploads in flight — overlap never happened"
+    );
+    assert!(
+        t1.rounds.iter().any(|r| r.max_staleness > 0),
+        "no stale upload was ever folded"
+    );
+    let mut prev = 0.0;
+    for r in &t1.rounds {
+        assert!(r.sim_time >= prev, "round {}: sim_time not monotone", r.round);
+        prev = r.sim_time;
+    }
+    for threads in [2usize, 7] {
+        let (t, theta) = run(threads);
+        assert_eq!(t1.rounds.len(), t.rounds.len(), "t={threads}");
+        for (a, b) in t1.rounds.iter().zip(&t.rounds) {
+            assert_rounds_eq(a, b, &format!("t={threads}"));
+        }
+        assert_eq!(theta1, theta, "t={threads}: θ diverged bitwise");
+    }
+}
+
+/// A checkpoint taken mid-buffer — uploads still in flight across the
+/// commit boundary — restores to the exact uninterrupted trace: the
+/// v7 snapshot carries the event queue (bit-exact arrival times), the
+/// partial buffer, the fold context, and the pending byte counters.
+/// The snapshot is also round-tripped through the on-disk format to
+/// pin the binary v7 layout, not just the in-memory struct.
+#[test]
+fn prop_buffered_checkpoint_resume_is_exact() {
+    let p = Arc::new(QuadraticProblem::new(24, 8, 0.5, 2.0, 0.5, 89));
+    let algo: Arc<dyn Algorithm> = Arc::new(QsgdAlgo::new(6));
+    let session = || {
+        Session::builder(p.clone(), algo.clone())
+            .config(buffered_cfg(2))
+            .build()
+    };
+
+    let mut uninterrupted = session();
+    let mut full_rounds = Vec::new();
+    for k in 0..12 {
+        full_rounds.push(uninterrupted.run_round(k));
+    }
+
+    let mut first_half = session();
+    for k in 0..6 {
+        first_half.run_round(k);
+    }
+    let ckpt = first_half.snapshot(6);
+    let state = ckpt.async_state.as_ref().expect("buffered runs snapshot async state");
+    assert!(
+        !state.events.is_empty() || !state.buffer.is_empty(),
+        "checkpoint boundary was not mid-buffer — nothing in flight"
+    );
+
+    // Round-trip through the on-disk v7 format.
+    let path = std::env::temp_dir().join(format!("aquila_async_ckpt_{}.bin", std::process::id()));
+    ckpt.save(&path).expect("save v7 checkpoint");
+    let loaded = aquila::coordinator::checkpoint::Checkpoint::load(&path).expect("load v7");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.async_state, ckpt.async_state, "v7 async section round-trip");
+
+    let mut resumed = session();
+    let next = resumed.restore(&loaded).unwrap();
+    assert_eq!(next, 6);
+    for k in 6..12 {
+        let r = resumed.run_round(k);
+        assert_rounds_eq(&full_rounds[k], &r, "resumed");
+    }
+    assert_eq!(resumed.theta(), uninterrupted.theta());
+    assert_eq!(resumed.total_bits(), uninterrupted.total_bits());
+    assert_eq!(
+        resumed.total_sim_time().to_bits(),
+        uninterrupted.total_sim_time().to_bits()
+    );
+}

@@ -234,6 +234,48 @@ fn prop_admit_late_preserves_learning_trace() {
     }
 }
 
+/// Deadline accounting: under `policy=drop` with a deadline generous
+/// enough that no upload ever misses it, the round closes at the
+/// slowest *arrival*, not at the deadline — clock and learning trace
+/// are bit-identical to the same scenario with no deadline at all.
+/// (The seed billed the configured deadline whenever one was set,
+/// stretching `sim_time` by orders of magnitude on generous
+/// deadlines.)
+#[test]
+fn prop_generous_deadline_bills_arrival_time() {
+    let p = Arc::new(QuadraticProblem::new(24, 6, 0.5, 2.0, 0.5, 79));
+    let faults = FaultSpec {
+        drop_prob: 0.25,
+        seed: 13,
+    };
+    let mut c_inf = cfg(81, 14);
+    c_inf.faults = faults.clone();
+    c_inf.network = NetworkSpec::parse("cellular:jitter=0.2").unwrap();
+    let t_inf = session(&p, Arc::new(QsgdAlgo::new(6)), c_inf).run();
+
+    let mut c_huge = cfg(81, 14);
+    c_huge.faults = faults;
+    c_huge.network = NetworkSpec::parse("cellular:deadline=1000000,jitter=0.2").unwrap();
+    let t_huge = session(&p, Arc::new(QsgdAlgo::new(6)), c_huge).run();
+
+    assert_eq!(t_huge.total_stragglers(), 0, "nobody misses a 10⁶ s deadline");
+    for (a, b) in t_inf.rounds.iter().zip(&t_huge.rounds) {
+        assert_eq!(
+            a.round_time.to_bits(),
+            b.round_time.to_bits(),
+            "round {}: a generous deadline must bill max(arrival), not the deadline",
+            a.round
+        );
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {}", a.round);
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "round {}",
+            a.round
+        );
+    }
+}
+
 /// A transport-side availability trace (`avail=P/D`) bills every
 /// staged upload but loses the down devices' messages; training still
 /// converges on what arrives.
